@@ -1,0 +1,159 @@
+//! Disaggregated MoE-Attention demo (§5.2, Figs 18–19).
+//!
+//! Part 1 — **real numerics**: one MoE layer split across simulated dies.
+//! "Attention NPUs" run the `attn_block` artifact (MLAProlog + MLA + gating
+//! + o_proj), token hidden-states travel A2E through the fabric with fused
+//! INT8 communication quantization (real bytes, `dispatch_real`), "expert
+//! NPUs" run the `moe_block` artifact, outputs return E2A and the residual
+//! add happens back on the attention side — then the result is checked
+//! against the colocated layer.
+//!
+//! Part 2 — **SuperPod scale**: the calibrated 768-die deployment model
+//! with DP domains, microbatching and persistent kernels (§7.1 numbers).
+//!
+//! Run: `make artifacts && cargo run --release --example moe_attn_disagg`
+
+use xdeepserve::disagg::DisaggDeployment;
+use xdeepserve::fabric::memory::GlobalMemory;
+use xdeepserve::fabric::FabricParams;
+use xdeepserve::runtime::{Engine, Tensor};
+use xdeepserve::util::rng::Rng;
+use xdeepserve::xccl::a2a::{A2aConfig, A2aEngine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("XDS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("== Transformerless stage 2: disaggregated MoE-Attention ==\n");
+    let engine = Engine::load(&dir)?;
+    let m = engine.manifest.model.clone();
+    let t = m.disagg_tokens;
+    let (d, s, c, r, k) = (m.d_model, m.max_seq, m.c_latent, m.r_rope, m.top_k);
+
+    // ---------------- part 1: real numerics over the fabric --------------
+    let mut rng = Rng::new(99);
+    let x: Vec<f32> = (0..t * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    let pos: Vec<i32> = (0..t as i32).map(|i| 3 + (i % 5)).collect();
+    let lat: Vec<f32> = (0..t * s * c).map(|_| rng.normal() as f32 * 0.1).collect();
+    let rope: Vec<f32> = (0..t * s * r).map(|_| rng.normal() as f32 * 0.1).collect();
+
+    // attention NPU: attn_block
+    let attn_out = engine.execute(
+        &format!("attn_block_t{t}"),
+        &[
+            Tensor::from_f32(vec![t, d], &x)?,
+            Tensor::from_i32(vec![t], &pos)?,
+            Tensor::from_f32(vec![t, s, c], &lat)?,
+            Tensor::from_f32(vec![t, s, r], &rope)?,
+        ],
+    )?;
+    let (x1, h2, gate_w, expert_idx) = (&attn_out[0], &attn_out[1], &attn_out[2], &attn_out[3]);
+    println!(
+        "attention NPU ran attn_block: x1{:?} h2{:?} gating top-{k}",
+        x1.shape, h2.shape
+    );
+
+    // A2E: ship h2 rows to expert dies with fused INT8 quantization.
+    // Expert parallelism here: E experts across `t` simulated expert dies.
+    let mut mem = GlobalMemory::new(2 * t);
+    let mut a2a_cfg = A2aConfig::deepseek(t);
+    a2a_cfg.hidden_dim = d;
+    a2a_cfg.top_k = k;
+    let a2a = A2aEngine::new(FabricParams::default(), a2a_cfg);
+    let eidx = expert_idx.as_i32()?;
+    // route token i (from "attention die" i) to expert dies by expert id % t
+    let expert_dies: Vec<usize> = (t..2 * t).collect();
+    let tokens_per_src: Vec<Vec<f32>> = {
+        let h = h2.as_f32()?;
+        (0..t).map(|i| h[i * d..(i + 1) * d].to_vec()).collect()
+    };
+    let routing: Vec<Vec<Vec<usize>>> = (0..t)
+        .map(|i| {
+            let dests: Vec<usize> = (0..k)
+                .map(|j| (eidx[i * k + j] as usize) % t)
+                .collect();
+            vec![dests]
+        })
+        .collect();
+    let received = a2a.dispatch_real(&mut mem, &expert_dies, &tokens_per_src, &routing, 7)?;
+    let total_arrivals: usize = received.iter().map(|v| v.len()).sum();
+    println!("A2E dispatched {total_arrivals} token copies (INT8 on the wire) to {t} expert dies");
+
+    // Expert NPUs: here every expert die holds the full moe_block (the
+    // artifact computes all experts; gating weights zero out non-local
+    // ones in a real deployment). We reconstruct the quantized h2 from the
+    // wire to prove the INT8 path feeds the computation.
+    let mut h2_wire = h2.as_f32()?;
+    for (dst, arrivals) in received.iter().enumerate() {
+        for (src, _tok, row) in arrivals {
+            let _ = dst;
+            h2_wire[src * d..(src + 1) * d].copy_from_slice(row);
+        }
+    }
+    let moe_out_q = engine.execute(
+        &format!("moe_block_t{t}"),
+        &[
+            Tensor::from_f32(vec![t, d], &h2_wire)?,
+            gate_w.clone(),
+            expert_idx.clone(),
+        ],
+    )?;
+    // E2A + residual add on the attention NPU
+    let y_split: Vec<f32> = x1
+        .as_f32()?
+        .iter()
+        .zip(moe_out_q[0].as_f32()?)
+        .map(|(a, b)| a + b)
+        .collect();
+
+    // colocated reference: moe_block on the exact h2 (no wire quant)
+    let moe_out_ref = engine.execute(
+        &format!("moe_block_t{t}"),
+        &[h2.clone(), gate_w.clone(), expert_idx.clone()],
+    )?;
+    let y_ref: Vec<f32> = x1
+        .as_f32()?
+        .iter()
+        .zip(moe_out_ref[0].as_f32()?)
+        .map(|(a, b)| a + b)
+        .collect();
+
+    let scale = y_ref.iter().fold(0f32, |a, b| a.max(b.abs()));
+    let max_err = y_split
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!(
+        "split-layer output vs colocated: max err {:.2e} (scale {:.2}) — {:.3}% relative",
+        max_err,
+        scale,
+        max_err / scale * 100.0
+    );
+    assert!(
+        max_err / scale < 0.02,
+        "disaggregated layer diverged beyond INT8 comm tolerance"
+    );
+    println!("verified: attn_block + A2E(int8) + moe_block + E2A == colocated layer ✓\n");
+
+    // ---------------- part 2: SuperPod-scale pipeline --------------------
+    let dep = DisaggDeployment::paper();
+    let it = dep.iteration(3_000);
+    println!("SuperPod-scale deployment (768 dies = 480 MLA in 3 domains + 288 EP):");
+    println!("  global batch       : {}", dep.global_batch());
+    println!("  iteration          : {:.1} ms (paper ~93)", it.total_ns as f64 / 1e6);
+    println!("  effective TPOT     : {:.1} ms (paper ~49)", it.effective_tpot_ns as f64 / 1e6);
+    println!("  per-chip throughput: {:.0} tok/s (paper 2400)", it.tokens_per_chip_per_s);
+    println!(
+        "  A2E/MoE/E2A per lyr: {:.0}/{:.0}/{:.0} us (paper 170/120/190)",
+        it.a2e_ns as f64 / 1e3 / dep.n_layers as f64,
+        it.moe_ns as f64 / 1e3 / dep.n_layers as f64,
+        it.e2a_ns as f64 / 1e3 / dep.n_layers as f64,
+    );
+    let mut no_pk = DisaggDeployment::paper();
+    no_pk.persistent_kernels = false;
+    println!(
+        "  persistent kernels : {:.1} ms → {:.1} ms without them (§5.2 technique 3)",
+        it.total_ns as f64 / 1e6,
+        no_pk.iteration(3_000).total_ns as f64 / 1e6
+    );
+    Ok(())
+}

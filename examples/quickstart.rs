@@ -1,0 +1,126 @@
+//! Quickstart: load the AOT-compiled MiniDeepSeek artifacts and serve a
+//! small batch of requests through the full FlowServe stack — TE-shell
+//! dispatch, DP groups with continuous batching, MTP speculative decoding,
+//! and output shortcutting — reporting TTFT/TPOT/throughput.
+//!
+//! This is the end-to-end driver required by DESIGN.md: all three layers
+//! compose (L1 Pallas kernels inside the L2 HLO, executed by the L3 Rust
+//! coordinator through PJRT), with Python nowhere on the request path.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::sync::mpsc;
+
+use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::{DpGroup, ServeRequest, TeShell};
+use xdeepserve::metrics::ServingMetrics;
+use xdeepserve::model::{ServedModel, Tokenizer};
+use xdeepserve::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("XDS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("== xDeepServe quickstart ==");
+    println!("loading artifacts from {dir}/ ...");
+    let engine = Engine::load(&dir)?;
+    println!(
+        "PJRT platform: {} | model: {} layers, {} experts top-{}, vocab {}",
+        engine.platform(),
+        engine.manifest.model.n_layers,
+        engine.manifest.model.n_experts,
+        engine.manifest.model.top_k,
+        engine.manifest.model.vocab
+    );
+    engine.warmup(&["prefill_s128", "decode_b4", "mtp_b4"])?;
+    println!("warmup done (pre-warmed pods, §2.1)");
+
+    let model = ServedModel::new(&engine);
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
+    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
+
+    let mut groups: Vec<DpGroup> = (0..2)
+        .map(|i| {
+            let mut g = DpGroup::new(i, 4, 4096);
+            g.out_tx = Some(shortcut.sender());
+            g.use_mtp = true;
+            g
+        })
+        .collect();
+    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+
+    let prompts = [
+        "explain the difference between model serving and training",
+        "write a fast router for a mixture of experts model",
+        "what makes disaggregated prefill decode fast",
+        "hello superpod",
+        "balance the experts please",
+        "one more request for the road",
+    ];
+    let t0 = std::time::Instant::now();
+    for (i, p) in prompts.iter().enumerate() {
+        shell.dispatch(
+            ServeRequest::new(i as u64, tokenizer.encode(p), 16, 0),
+            &mut groups,
+        )?;
+    }
+
+    loop {
+        let mut any = false;
+        for g in groups.iter_mut() {
+            let now = t0.elapsed().as_nanos() as u64;
+            g.admit_from_queue(&model, now)?;
+            let now = t0.elapsed().as_nanos() as u64;
+            any |= g.decode_iteration(&model, now)? > 0;
+        }
+        shell.drain_waiting(&mut groups)?;
+        if !any && groups.iter().all(|g| g.is_idle()) {
+            break;
+        }
+    }
+    let wall = t0.elapsed();
+
+    let mut metrics = ServingMetrics::new();
+    for g in groups.iter_mut() {
+        println!(
+            "DP{}: {} iterations, MTP acceptance {:.0}%",
+            g.id,
+            g.iterations,
+            g.mtp_acceptance() * 100.0
+        );
+        for r in g.finished.drain(..) {
+            metrics.record_request(&r.timing);
+        }
+    }
+    drop(shortcut);
+    println!("\n-- generated text (byte-level tokenizer on an untrained mini model) --");
+    for msg in sink_rx.iter() {
+        if let FrontendMsg::Done { req_id, full_text } = msg {
+            let show: String = full_text.chars().take(40).collect();
+            println!("  req {req_id}: {show:?}");
+        }
+    }
+    println!("\n-- metrics (wall clock) --\n{}", metrics.report());
+    println!(
+        "end-to-end wall time: {:.2}s for {} requests",
+        wall.as_secs_f64(),
+        prompts.len()
+    );
+    let stats = engine.stats();
+    let mut names: Vec<_> = stats.keys().collect();
+    names.sort();
+    println!("\n-- PJRT executable stats --");
+    for n in names {
+        let s = stats[n];
+        if s.calls > 0 {
+            println!(
+                "  {:<16} calls={:<4} avg={:>6} us (compile {} ms)",
+                n,
+                s.calls,
+                s.total_us / s.calls,
+                s.compile_us / 1000
+            );
+        }
+    }
+    Ok(())
+}

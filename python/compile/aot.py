@@ -1,0 +1,304 @@
+"""AOT compile path: lower every entry point to HLO *text* + pack weights.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. Interchange format is HLO text, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Outputs (under ``artifacts/``):
+  * ``<entry>.hlo.txt``   — one per entry point / shape bucket
+  * ``weights.bin``       — custom packed tensor file (header + raw data)
+  * ``manifest.json``     — config + per-artifact arg/output specs; the
+                            contract consumed by rust/src/runtime/artifact.rs
+  * ``quant_stats.json``  — Fig-15 quantization statistics
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT as CFG
+from . import model
+from .params import init_params, flatten
+from . import quantize
+from .kernels.comm_quant import comm_quant as comm_quant_kernel
+from .kernels.mla_attention import vmem_estimate_bytes as mla_vmem
+from .kernels.moe_ffn import vmem_estimate_bytes as moe_vmem
+from .kernels.int8_matmul import vmem_estimate_bytes as qmm_vmem
+
+WEIGHTS_MAGIC = 0x58445357  # "XDSW"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(a):
+    return {np.dtype(np.float32): "f32", np.dtype(np.int8): "i8",
+            np.dtype(np.int32): "i32"}[np.dtype(a.dtype)]
+
+
+def write_weights_bin(path, tensors):
+    """tensors: [(name, np.ndarray)] -> packed binary + index."""
+    index = []
+    blobs = []
+    off = 0
+    for name, a in tensors:
+        a = np.ascontiguousarray(a)
+        nb = a.nbytes
+        index.append({
+            "name": name, "dtype": _dtype_tag(a),
+            "shape": list(a.shape), "offset": off, "nbytes": nb,
+        })
+        blobs.append(a.tobytes())
+        off += (nb + 63) // 64 * 64
+    header = json.dumps({"tensors": index}).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIQ", WEIGHTS_MAGIC, 1, len(header)))
+        f.write(header)
+        pos = 0
+        for meta, blob in zip(index, blobs):
+            f.write(blob)
+            pos += len(blob)
+            pad = (len(blob) + 63) // 64 * 64 - len(blob)
+            f.write(b"\0" * pad)
+            pos += pad
+    return index
+
+
+def _spec(a):
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def _rt(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+class ArtifactBuilder:
+    def __init__(self, cfg, params, qparams, out_dir):
+        self.cfg = cfg
+        self.p = params
+        self.q = qparams
+        self.out_dir = out_dir
+        self.entries = []
+
+    def add(self, name, fn, weight_names, runtime_specs, output_names):
+        """Lower fn(*weights, *runtime) and record the manifest entry."""
+        cfg = self.cfg
+        store = {**self.p, **self.q}
+        w_specs = [_spec(np.asarray(store[n])) for n in weight_names]
+        r_specs = [
+            jax.ShapeDtypeStruct(tuple(s["shape"]),
+                                 {"f32": jnp.float32, "i32": jnp.int32,
+                                  "i8": jnp.int8}[s["dtype"]])
+            for s in runtime_specs
+        ]
+        lowered = jax.jit(fn).lower(*w_specs, *r_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "weight_args": list(weight_names),
+            "runtime_args": runtime_specs,
+            "outputs": output_names,
+        })
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB HLO text")
+
+
+def decode_weight_names(cfg, p):
+    return [k for k in sorted(p) if not k.startswith("mtp.")]
+
+
+def decode_int8_weight_names(cfg, p, q):
+    names = []
+    for k in sorted(p):
+        if k.startswith("mtp."):
+            continue
+        tail = k.split(".", 1)[1] if "." in k else k
+        if tail in ("w13", "w2", "w13s", "w2s"):
+            continue  # replaced by quantized triples
+        names.append(k)
+    names += sorted(q.keys())
+    return names
+
+
+def build_all(out_dir):
+    cfg = CFG
+    os.makedirs(out_dir, exist_ok=True)
+    print("init params...")
+    p = init_params(cfg)
+    print("calibrating + quantizing (SmoothQuant + GPTQ)...")
+    acts = quantize.collect_calibration(cfg, p)
+    q, all_stats = quantize.quantize_model(cfg, p, acts)
+    with open(os.path.join(out_dir, "quant_stats.json"), "w") as f:
+        json.dump(quantize.fig15_stats(all_stats), f)
+
+    b = ArtifactBuilder(cfg, p, q, out_dir)
+    L, S, C, R, D, V = (cfg.n_layers, cfg.max_seq, cfg.c_latent, cfg.r_rope,
+                        cfg.d_model, cfg.vocab)
+
+    # ---- decode (graph mode), fp32, per batch bucket --------------------
+    dec_w = decode_weight_names(cfg, p)
+
+    def make_decode(nw):
+        def f(*args):
+            w = dict(zip(dec_w, args[:nw]))
+            tokens, pos, lat, rope = args[nw:]
+            return model.decode_step(cfg, w, tokens, pos, lat, rope)
+        return f
+
+    for bsz in cfg.decode_buckets:
+        b.add(
+            f"decode_b{bsz}", make_decode(len(dec_w)), dec_w,
+            [_rt("tokens", "i32", (bsz,)), _rt("pos", "i32", (bsz,)),
+             _rt("lat", "f32", (L, bsz, S, C)), _rt("rope", "f32", (L, bsz, S, R))],
+            ["logits", "hidden", "lat", "rope"],
+        )
+
+    # ---- decode INT8 (QMM experts + MLP), selected buckets ---------------
+    dec8_w = decode_int8_weight_names(cfg, p, q)
+
+    def make_decode_int8(nw):
+        def f(*args):
+            store = dict(zip(dec8_w, args[:nw]))
+            tokens, pos, lat, rope = args[nw:]
+            return model.decode_step(cfg, store, tokens, pos, lat, rope,
+                                     qparams=store)
+        return f
+
+    for bsz in (1, 4):
+        b.add(
+            f"decode_int8_b{bsz}", make_decode_int8(len(dec8_w)), dec8_w,
+            [_rt("tokens", "i32", (bsz,)), _rt("pos", "i32", (bsz,)),
+             _rt("lat", "f32", (L, bsz, S, C)), _rt("rope", "f32", (L, bsz, S, R))],
+            ["logits", "hidden", "lat", "rope"],
+        )
+
+    # ---- prefill (eager mode bucket) -------------------------------------
+    pre_w = decode_weight_names(cfg, p)
+
+    def prefill_fn(*args):
+        w = dict(zip(pre_w, args[: len(pre_w)]))
+        tokens, length = args[len(pre_w):]
+        return model.prefill(cfg, w, tokens, length)
+
+    b.add(
+        "prefill_s128", prefill_fn, pre_w,
+        [_rt("tokens", "i32", (1, cfg.prefill_seq)), _rt("length", "i32", ())],
+        ["logits", "hidden", "lat", "rope"],
+    )
+
+    # ---- MTP draft head ---------------------------------------------------
+    mtp_w = ["embed"] + [k for k in sorted(p) if k.startswith("mtp.")]
+
+    def make_mtp(nw):
+        def f(*args):
+            w = dict(zip(mtp_w, args[:nw]))
+            hidden, token = args[nw:]
+            return (model.mtp_draft(cfg, w, hidden, token),)
+        return f
+
+    for bsz in cfg.decode_buckets:
+        b.add(
+            f"mtp_b{bsz}", make_mtp(len(mtp_w)), mtp_w,
+            [_rt("hidden", "f32", (bsz, D)), _rt("token", "i32", (bsz,))],
+            ["draft_logits"],
+        )
+
+    # ---- Transformerless split (§5.2): layer 1 attn/moe blocks -----------
+    T = cfg.disagg_tokens
+    ml = cfg.n_dense_layers  # first MoE layer
+    attn_w = [f"l{ml}.{t}" for t in
+              ("rms1", "rms2", "wq_nope", "wq_rope", "wkv_a", "wk_rope",
+               "wkb", "wvb", "wo", "wg")]
+
+    def attn_block_fn(*args):
+        w = dict(zip(attn_w, args[: len(attn_w)]))
+        x, pos, lat_c, rope_c = args[len(attn_w):]
+        return model.attn_block(cfg, w, ml, x, pos, lat_c, rope_c)
+
+    b.add(
+        f"attn_block_t{T}", attn_block_fn, attn_w,
+        [_rt("x", "f32", (T, D)), _rt("pos", "i32", (T,)),
+         _rt("lat_c", "f32", (T, S, C)), _rt("rope_c", "f32", (T, S, R))],
+        ["x1", "h2", "gate_w", "expert_idx", "lat_c", "rope_c"],
+    )
+
+    moe_w = [f"l{ml}.{t}" for t in ("w13", "w2", "w13s", "w2s")]
+
+    def moe_block_fn(*args):
+        w = dict(zip(moe_w, args[: len(moe_w)]))
+        h2, gw, eidx = args[len(moe_w):]
+        return (model.moe_block(cfg, w, ml, h2, gw, eidx),)
+
+    b.add(
+        f"moe_block_t{T}", moe_block_fn, moe_w,
+        [_rt("h2", "f32", (T, D)), _rt("gate_w", "f32", (T, cfg.top_k)),
+         _rt("expert_idx", "i32", (T, cfg.top_k))],
+        ["moe_out"],
+    )
+
+    # ---- fused communication quantization kernel (§3.2) ------------------
+    def comm_quant_fn(x):
+        return comm_quant_kernel(x)
+
+    b.add(
+        f"comm_quant_t{T}", comm_quant_fn, [],
+        [_rt("x", "f32", (T, D))],
+        ["xq", "scale"],
+    )
+
+    # ---- weights.bin ------------------------------------------------------
+    print("packing weights.bin...")
+    tensors = [(k, np.asarray(v)) for k, v in flatten(p)]
+    tensors += [(k, np.asarray(q[k])) for k in sorted(q)]
+    index = write_weights_bin(os.path.join(out_dir, "weights.bin"), tensors)
+
+    # ---- VMEM / §Perf estimates ------------------------------------------
+    vmem = {
+        "mla_attention": mla_vmem(cfg.n_heads, cfg.c_latent, cfg.r_rope, cfg.max_seq),
+        "moe_ffn": moe_vmem(8, cfg.d_model, cfg.f_expert),
+        "int8_matmul": qmm_vmem(8, cfg.d_model),
+    }
+
+    manifest = {
+        "config": cfg.to_json_dict(),
+        "weights_file": "weights.bin",
+        "params": index,
+        "artifacts": b.entries,
+        "vmem_estimates": vmem,
+        "tokenizer": {"kind": "byte", "vocab": cfg.vocab, "bos": 256, "eos": 257},
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(b.entries)} artifacts + manifest to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir (or path ending in .hlo.txt whose dir is used)")
+    args = ap.parse_args()
+    out = args.out
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out)
+    build_all(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Model configuration for MiniDeepSeek — the DeepSeek-style MLA + MoE
+transformer used throughout the reproduction.
+
+The config is the single source of truth shared with the Rust layer: aot.py
+serializes it into ``artifacts/manifest.json`` and the Rust runtime parses it
+from there (``rust/src/runtime/artifact.rs``). Keep field names stable.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """MiniDeepSeek hyper-parameters.
+
+    Structure mirrors DeepSeek-V3/R1 as served by xDeepServe (§4.7, §5.2):
+    MLA with a low-rank compressed KV latent plus a decoupled RoPE key part
+    (this is exactly the paper's "non-RoPE / RoPE components" split used for
+    KV-cache quantization), early dense MLP layers then MoE layers with
+    routed top-k experts and a shared expert, and an MTP draft head.
+    """
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 4          # layer 0 is dense MLP, layers 1.. are MoE
+    n_dense_layers: int = 1
+    n_heads: int = 4
+    d_nope: int = 32           # per-head non-RoPE query/key dim
+    c_latent: int = 32         # MLA compressed KV latent dim (cache, non-RoPE)
+    r_rope: int = 16           # decoupled RoPE key dim (cache, RoPE part)
+    d_v: int = 32              # per-head value dim (post-absorption)
+    f_dense: int = 512         # dense-MLP hidden dim
+    f_expert: int = 256        # per-expert FFN hidden dim
+    n_experts: int = 8         # routed experts
+    top_k: int = 2
+    max_seq: int = 160         # KV-cache slots per sequence
+    prefill_seq: int = 128     # static prefill bucket (padded)
+    rms_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    seed: int = 20250710
+
+    # Static batch buckets compiled for decode / MTP artifacts. The Rust
+    # batcher pads up to the next bucket (graph-mode static shapes, §2.3).
+    decode_buckets: tuple = (1, 2, 4, 8)
+    # Token-group size for the disaggregated attn/moe block artifacts (§5.2).
+    disagg_tokens: int = 8
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["decode_buckets"] = list(self.decode_buckets)
+        return d
+
+
+DEFAULT = ModelConfig()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracle (ref.py)."""
+
+from . import ref  # noqa: F401
+from .mla_attention import mla_attention  # noqa: F401
+from .moe_ffn import moe_ffn  # noqa: F401
+from .int8_matmul import int8_matmul  # noqa: F401
+from .comm_quant import comm_quant  # noqa: F401

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: fused communication quantization (§3.2 dispatch step 2).
+
+The paper fuses FP16/BF16→INT8 conversion *inside* the dispatch kernel using
+AIV vector instructions, halving all-to-all bytes. This kernel is that fused
+step in isolation: token-wise symmetric INT8 with per-token scales. The Rust
+XCCL layer calls the same math (mirrored in xccl/quant.rs) when moving real
+bytes over the simulated fabric, and this artifact keeps the L1/L3
+implementations honest against each other (tested both in pytest and in the
+Rust integration tests via the exported HLO).
+
+interpret=True (CPU correctness path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_TILE = 8
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]  # [TT, D]
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-6)
+    scale = amax / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("t_tile",))
+def comm_quant(x, t_tile=T_TILE):
+    """x: [T, D] f32 -> (xq int8 [T, D], scale f32 [T]). T % t_tile == 0."""
+    t, d = x.shape
+    if t % t_tile != 0:
+        t_tile = t
+    return pl.pallas_call(
+        _kernel,
+        grid=(t // t_tile,),
+        in_specs=[pl.BlockSpec((t_tile, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((t_tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((t_tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.int8),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=True,
+    )(x)

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: INT8 quant-matmul (the paper's npu_quant_matmul / QMM).
+
+§4.7: activations use token-wise scales, weights channel-wise scales; the
+SmoothQuant smoothing vector redistributes quantization difficulty from
+activations into weights *before* quantization (weights arrive here already
+smoothed+quantized by python/compile/quantize.py, activations are divided by
+the smoothing vector inside the kernel so the product is unchanged).
+
+Hardware adaptation: Ascend's QMM feeds INT8 tiles to the cube core with
+INT32 accumulation; on TPU the analogue is int8 MXU dot with
+preferred_element_type=int32. The grid tiles the output channels so each
+step's weight tile fits VMEM; the activation quantization is recomputed per
+tile (cheap, vector-unit work — mirrors AIV-side quantize before AIC GEMM).
+
+interpret=True (CPU correctness path).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_TILE = 64
+
+
+def _kernel(x_ref, wq_ref, ws_ref, smooth_ref, o_ref):
+    x = x_ref[...]                      # [T, D] f32
+    xs = x / smooth_ref[...][None, :]
+    amax = jnp.maximum(jnp.max(jnp.abs(xs), axis=1), 1e-6)
+    a_scale = amax / 127.0
+    xq = jnp.clip(jnp.round(xs / a_scale[:, None]), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq,
+        wq_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] = acc.astype(jnp.float32) * a_scale[:, None] * ws_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_tile",))
+def int8_matmul(x, wq, w_scale, smooth, n_tile=N_TILE):
+    """Shapes as in ref.int8_matmul_ref. N % n_tile == 0 (or single tile)."""
+    t, d = x.shape
+    n = wq.shape[1]
+    if n % n_tile != 0:
+        n_tile = n
+    grid = (n // n_tile,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, n_tile), lambda i: (0, i)),
+            pl.BlockSpec((n_tile,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, n_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(x, wq, w_scale, smooth)
+
+
+def vmem_estimate_bytes(t, d, n_tile=N_TILE):
+    """Static VMEM footprint per grid step, bytes."""
+    return t * d * 4 + t * d + 2 * d * n_tile + t * n_tile * 4 + (d + n_tile) * 4

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: flash-style absorbed-MLA decode attention.
+
+Hardware adaptation (DESIGN.md §6): the paper's decode attention runs on
+Ascend AIC/AIV cores with MTE2/MTE3 staging KV tiles through the KB-level
+unified buffer. On TPU the same insight maps to: tile the compressed-KV cache
+HBM→VMEM via the grid/BlockSpec schedule, keep one online-softmax state per
+batch row in VMEM, and feed MXU-shaped dot products. The kernel below
+iterates over sequence tiles with a running (max, denom, accum) triple —
+numerically identical to the full softmax (oracle: ref.mla_attention_ref).
+
+Pallas must run interpret=True here: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEQ_TILE = 32
+
+
+def _kernel(q_eff_ref, q_rope_ref, lat_ref, rope_ref, len_ref, o_ref, *, seq_tile):
+    """One grid step = one batch row. Online softmax over seq tiles."""
+    q_eff = q_eff_ref[0]          # [H, C]
+    q_rope = q_rope_ref[0]        # [H, R]
+    length = len_ref[0]           # scalar i32
+    h, c = q_eff.shape
+    r = q_rope.shape[-1]
+    s = lat_ref.shape[1]
+    n_tiles = s // seq_tile
+    scale = 1.0 / jnp.sqrt(jnp.float32(c + r))
+
+    def body(i, carry):
+        m_run, l_run, acc = carry
+        lat = jax.lax.dynamic_slice(lat_ref[0], (i * seq_tile, 0), (seq_tile, c))
+        rope = jax.lax.dynamic_slice(rope_ref[0], (i * seq_tile, 0), (seq_tile, r))
+        # [H, T] scores for this tile
+        scores = (
+            jnp.dot(q_eff, lat.T, preferred_element_type=jnp.float32)
+            + jnp.dot(q_rope, rope.T, preferred_element_type=jnp.float32)
+        ) * scale
+        kpos = i * seq_tile + jnp.arange(seq_tile)
+        scores = jnp.where((kpos < length)[None, :], scores, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l_new = l_run * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, lat, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((h,), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((h,), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, c), dtype=jnp.float32)
+    _, l_fin, acc_fin = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, acc0))
+    o_ref[0] = acc_fin / l_fin[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("seq_tile",))
+def mla_attention(q_eff, q_rope, lat, rope, length, seq_tile=SEQ_TILE):
+    """Decode attention. Shapes as in ref.mla_attention_ref. S % seq_tile == 0."""
+    b, h, c = q_eff.shape
+    s = lat.shape[1]
+    r = q_rope.shape[-1]
+    assert s % seq_tile == 0, f"seq {s} not a multiple of tile {seq_tile}"
+    return pl.pallas_call(
+        functools.partial(_kernel, seq_tile=seq_tile),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, c), jnp.float32),
+        interpret=True,
+    )(q_eff, q_rope, lat, rope, length)
+
+
+def vmem_estimate_bytes(h, c, r, s, seq_tile=SEQ_TILE):
+    """Static VMEM footprint estimate for DESIGN/EXPERIMENTS §Perf (bytes).
+
+    Per grid step: q tiles + one (double-buffered) KV tile + softmax state.
+    """
+    f32 = 4
+    q = h * (c + r) * f32
+    kv_tile = 2 * seq_tile * (c + r) * f32  # double-buffered HBM->VMEM tile
+    state = (h * c + 2 * h) * f32
+    return q + kv_tile + state

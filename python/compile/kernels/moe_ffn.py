@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: grouped expert FFN (routed experts, SwiGLU, fused W13).
+
+Hardware adaptation (DESIGN.md §6): the paper's MoE expert GEMMs run on AIC
+cube cores with per-expert weight tiles staged via MTE2. The Pallas version
+grids over experts — each grid step stages one expert's fused up/gate and
+down weights HBM→VMEM (the BlockSpec index_map is the staging schedule) and
+accumulates the gating-weighted contribution into the shared output block
+(out index_map constant across steps = revisiting accumulation).
+
+The gating-weight mask (`sum_k gate_w * (idx == e)`) realizes the paper's
+token→expert routing table after the EPLB logical→physical mapping has been
+applied on the Rust side; tokens not routed to the expert get weight 0.
+
+interpret=True (CPU correctness path; see mla_attention.py note).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w13_ref, w2_ref, gw_ref, idx_ref, o_ref):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                     # [T, D]
+    w13 = w13_ref[0]                   # [D, 2F]
+    w2 = w2_ref[0]                     # [F, D]
+    f = w2.shape[0]
+    h = jnp.dot(x, w13, preferred_element_type=jnp.float32)   # [T, 2F]
+    u, g = h[:, :f], h[:, f:]
+    act = (g * jax.nn.sigmoid(g)) * u                          # SwiGLU
+    y = jnp.dot(act, w2, preferred_element_type=jnp.float32)   # [T, D]
+    w_tok = jnp.sum(gw_ref[...] * (idx_ref[...] == e), axis=1)  # [T]
+    o_ref[...] += w_tok[:, None] * y
+
+
+@jax.jit
+def moe_ffn(x, w13, w2, gate_w, expert_idx):
+    """Shapes as in ref.moe_ffn_ref. Returns [T, D] f32."""
+    t, d = x.shape
+    e, _, f2 = w13.shape
+    f = f2 // 2
+    k = gate_w.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d, f2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w13, w2, gate_w, expert_idx)
+
+
+def vmem_estimate_bytes(t, d, f):
+    """Static VMEM footprint per grid step (one expert), bytes, f32."""
+    f32 = 4
+    x = t * d * f32
+    w = 2 * (d * 2 * f + f * d) * f32  # double-buffered expert weights
+    act = t * 2 * f * f32
+    out = t * d * f32
+    return x + w + act + out

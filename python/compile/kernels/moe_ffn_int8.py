@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: INT8 grouped expert FFN (QMM inside the expert loop).
+
+§4.7: MoE layers account for ~90% of DeepSeek parameters, so expert weights
+are the main INT8 target. This kernel fuses, per expert grid step:
+token-wise activation quantization (smoothing folded), INT8 GEMM for the
+fused up/gate projection, SwiGLU, a second token-wise quantization for the
+down projection, and the gating-weighted accumulate.
+
+Scales layout (produced by python/compile/quantize.py):
+  wq13:   int8 [E, D, 2F]   smoothed+quantized fused up/gate weights
+  s13:    f32  [E, 2F]      per-output-channel scales
+  sm13:   f32  [D]          SmoothQuant vector for the layer input
+  wq2:    int8 [E, F, D]
+  s2:     f32  [E, D]
+  sm2:    f32  [E, F]       per-expert smoothing for the down-proj input
+
+interpret=True (CPU correctness path).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm(x, smooth, wq, ws):
+    """Token-wise quant -> int8 dot -> dequant. x [T, M], wq [M, N]."""
+    xs = x / smooth[None, :]
+    amax = jnp.maximum(jnp.max(jnp.abs(xs), axis=1), 1e-6)
+    a_scale = amax / 127.0
+    xq = jnp.clip(jnp.round(xs / a_scale[:, None]), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * a_scale[:, None] * ws[None, :]
+
+
+def _kernel(x_ref, wq13_ref, s13_ref, sm13_ref, wq2_ref, s2_ref, sm2_ref,
+            gw_ref, idx_ref, o_ref):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                 # [T, D]
+    f = wq2_ref.shape[1]
+    h = _qmm(x, sm13_ref[...], wq13_ref[0], s13_ref[0])  # [T, 2F]
+    u, g = h[:, :f], h[:, f:]
+    act = (g * jax.nn.sigmoid(g)) * u
+    y = _qmm(act, sm2_ref[0], wq2_ref[0], s2_ref[0])     # [T, D]
+    w_tok = jnp.sum(gw_ref[...] * (idx_ref[...] == e), axis=1)
+    o_ref[...] += w_tok[:, None] * y
+
+
+@jax.jit
+def moe_ffn_int8(x, wq13, s13, sm13, wq2, s2, sm2, gate_w, expert_idx):
+    """INT8 grouped expert FFN. Returns [T, D] f32."""
+    t, d = x.shape
+    e, _, f2 = wq13.shape
+    f = f2 // 2
+    k = gate_w.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d, f2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f2), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (i, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+            pl.BlockSpec((t, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, wq13, s13, sm13, wq2, s2, sm2, gate_w, expert_idx)
+
+
+def moe_ffn_int8_ref(x, wq13, s13, sm13, wq2, s2, sm2, gate_w, expert_idx):
+    """Pure-jnp oracle for moe_ffn_int8."""
+    e = wq13.shape[0]
+    f = wq2.shape[1]
+    t, d = x.shape
+    out = jnp.zeros((t, d), jnp.float32)
+    for ei in range(e):
+        h = _qmm(x, sm13, wq13[ei], s13[ei])
+        u, g = h[:, :f], h[:, f:]
+        y = _qmm((g * jax.nn.sigmoid(g)) * u, sm2[ei], wq2[ei], s2[ei])
+        w_tok = jnp.sum(gate_w * (expert_idx == ei), axis=1)
+        out = out + w_tok[:, None] * y
+    return out

@@ -1,0 +1,174 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1).
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to float tolerance. They are also used directly
+by the prefill path (the paper runs prefill in "single-op mode" with dynamic
+shapes, §2.3 — here: plain jnp dense attention instead of the decode kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_rotate(x, pos, theta: float = 10000.0):
+    """Standard rotary embedding on the last dim (must be even).
+
+    x: [..., R], pos: broadcastable int32 positions for the leading dims.
+    """
+    r = x.shape[-1]
+    assert r % 2 == 0
+    half = r // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def mla_attention_ref(q_eff, q_rope, lat, rope, length):
+    """Absorbed-MLA decode attention over the compressed KV cache.
+
+    q_eff:  [B, H, C]   absorbed non-RoPE query (q_nope @ W_kb)
+    q_rope: [B, H, R]   rotated RoPE query
+    lat:    [B, S, C]   cached compressed latent (non-RoPE part)
+    rope:   [B, S, R]   cached rotated RoPE keys
+    length: [B] int32   valid prefix length per sequence
+    returns [B, H, C]   softmax-weighted latent (value absorption happens
+                        outside via W_vb)
+    """
+    b, h, c = q_eff.shape
+    s = lat.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(c + q_rope.shape[-1]))
+    scores = (
+        jnp.einsum("bhc,bsc->bhs", q_eff, lat)
+        + jnp.einsum("bhr,bsr->bhs", q_rope, rope)
+    ) * scale
+    mask = jnp.arange(s)[None, None, :] < length[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsc->bhc", probs, lat)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def moe_ffn_ref(x, w13, w2, gate_w, expert_idx):
+    """Grouped expert FFN with gating-weighted combine (routed experts only).
+
+    x:          [T, D]
+    w13:        [E, D, 2F]  fused up_proj+gate_proj (§4.7 "fuse the up_proj
+                            and gate_proj operations into a single kernel")
+    w2:         [E, F, D]   down_proj
+    gate_w:     [T, K]      gating weights (already normalized)
+    expert_idx: [T, K] i32  top-k routed expert ids
+    returns     [T, D]
+    """
+    e, d, f2 = w13.shape
+    f = f2 // 2
+    t = x.shape[0]
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    for ei in range(e):
+        h = x @ w13[ei]
+        u, g = h[:, :f], h[:, f:]
+        y = (silu(g) * u) @ w2[ei]
+        w_tok = jnp.sum(gate_w * (expert_idx == ei), axis=1)
+        out = out + w_tok[:, None] * y
+    return out
+
+
+def dense_ffn_ref(x, w13, w2):
+    """SwiGLU dense MLP with fused up/gate projection. x: [T, D]."""
+    f = w13.shape[1] // 2
+    h = x @ w13
+    u, g = h[:, :f], h[:, f:]
+    return (silu(g) * u) @ w2
+
+
+def int8_matmul_ref(x, wq, w_scale, smooth):
+    """Token-wise activation INT8 quant -> INT8 GEMM -> dequant (§4.7 QMM).
+
+    x:       [T, D] f32
+    wq:      [D, N] int8 (channel-wise pre-quantized, smoothing folded in)
+    w_scale: [N]    f32 per-output-channel weight scale
+    smooth:  [D]    f32 SmoothQuant smoothing vector (divides activations)
+    returns  [T, N] f32
+    """
+    xs = x / smooth[None, :]
+    amax = jnp.maximum(jnp.max(jnp.abs(xs), axis=1), 1e-6)
+    a_scale = amax / 127.0
+    xq = jnp.clip(jnp.round(xs / a_scale[:, None]), -127, 127).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        xq,
+        wq,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return acc.astype(jnp.float32) * a_scale[:, None] * w_scale[None, :]
+
+
+def comm_quant_ref(x):
+    """Fused communication quantization (§3.2 dispatch step 2).
+
+    x: [T, D] f32 -> (xq int8 [T, D], scale f32 [T]) token-wise.
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-6)
+    scale = amax / 127.0
+    xq = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return xq, scale
+
+
+def comm_dequant_ref(xq, scale):
+    """Inverse of comm_quant_ref (combine-side dequantization)."""
+    return xq.astype(jnp.float32) * scale[:, None]
+
+
+def topk_gating_ref(logits, k):
+    """Top-k gating: softmax over selected expert scores.
+
+    logits: [T, E] -> (weights f32 [T, K], idx i32 [T, K])
+
+    Implemented as k iterative argmax+mask passes rather than
+    ``jax.lax.top_k``: the TopK HLO op that top_k lowers to is not
+    understood by the xla_extension 0.5.1 text parser the Rust runtime
+    uses (same class of constraint as the HLO-text interchange itself).
+    Ties resolve to the lowest index, matching lax.top_k.
+    """
+    t = logits.shape[0]
+    cur = logits
+    vals, idxs = [], []
+    rows = jnp.arange(t)
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = cur[rows, i]
+        vals.append(v)
+        idxs.append(i)
+        cur = cur.at[rows, i].set(-jnp.inf)
+    vals = jnp.stack(vals, axis=-1)
+    idx = jnp.stack(idxs, axis=-1)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w, idx.astype(jnp.int32)
+
+
+def dense_attention_ref(q_eff, q_rope, lat, rope, length):
+    """Causal dense attention used by prefill (eager / single-op mode).
+
+    q_eff:  [B, S, H, C], q_rope: [B, S, H, R]
+    lat:    [B, S, C],    rope:   [B, S, R]  (already rotated)
+    length: [B] int32 valid length; causal mask within it.
+    returns [B, S, H, C]
+    """
+    b, s, h, c = q_eff.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(c + q_rope.shape[-1]))
+    scores = (
+        jnp.einsum("bqhc,bkc->bhqk", q_eff, lat)
+        + jnp.einsum("bqhr,bkr->bhqk", q_rope, rope)
+    ) * scale
+    kpos = jnp.arange(s)
+    causal = kpos[None, :] <= kpos[:, None]  # [q, k]
+    valid = kpos[None, None, :] < length[:, None, None]  # [b, 1, k]
+    mask = causal[None, None, :, :] & valid[:, None, :, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkc->bqhc", probs, lat)

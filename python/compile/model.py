@@ -1,0 +1,254 @@
+"""L2: MiniDeepSeek forward paths in JAX, calling the L1 Pallas kernels.
+
+Entry points mirror how xDeepServe runs the model (§2.3, §4.6, §5):
+
+* ``prefill``      — "single-op / eager mode": dense causal attention via the
+                     jnp oracle, dynamic length masked into a static bucket.
+* ``decode_step``  — "graph mode": one fused HLO per batch bucket; Pallas
+                     flash-MLA attention + Pallas grouped MoE FFN.
+* ``decode_step_int8`` — same, with INT8 QMM experts/MLP (§4.7).
+* ``mtp_draft``    — MTP draft head (§4.6) for speculative decoding.
+* ``attn_block`` / ``moe_block`` — the Transformerless split (§5.2): the
+                     attention NPU runs attn_block (MLAProlog, MLA, gating,
+                     output projection), the MoE NPU runs moe_block; Rust
+                     moves hidden states between them via XCCL A2E/E2A.
+
+Everything is functional: KV caches are threaded as explicit arrays
+``lat[L, B, S, C]`` / ``rope[L, B, S, R]`` (the paper's non-RoPE / RoPE cache
+split), updated with scatter writes at per-sequence positions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.mla_attention import mla_attention
+from .kernels.moe_ffn import moe_ffn
+from .kernels.moe_ffn_int8 import moe_ffn_int8
+from .kernels.int8_matmul import int8_matmul
+
+
+def rms_norm(x, w, eps=1e-6):
+    return x * w / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+# ---------------------------------------------------------------------------
+# Attention (decode: Pallas flash-MLA; prefill: dense oracle)
+# ---------------------------------------------------------------------------
+
+def _mla_project_q(cfg, p, l, h):
+    """h: [..., D] -> q_eff [..., H, C] (absorbed), q_rope [..., H, R] (unrotated)."""
+    pre = f"l{l}."
+    q_nope = jnp.einsum("...d,dhn->...hn", h, p[pre + "wq_nope"])
+    q_rope = jnp.einsum("...d,dhr->...hr", h, p[pre + "wq_rope"])
+    # Weight absorption: q_eff = q_nope @ W_kb   (DeepSeek MLA absorbed form)
+    q_eff = jnp.einsum("...hn,hnc->...hc", q_nope, p[pre + "wkb"])
+    return q_eff, q_rope
+
+
+def _mla_kv_rows(cfg, p, l, h, pos):
+    """New cache rows for tokens at positions `pos`. h: [..., D]."""
+    pre = f"l{l}."
+    lat_new = jnp.einsum("...d,dc->...c", h, p[pre + "wkv_a"])
+    k_rope = jnp.einsum("...d,dr->...r", h, p[pre + "wk_rope"])
+    k_rope = ref.rope_rotate(k_rope, pos, cfg.rope_theta)
+    return lat_new, k_rope
+
+
+def _mla_output(cfg, p, l, attn_lat):
+    """attn_lat [..., H, C] -> [..., D] via value absorption + W_o."""
+    pre = f"l{l}."
+    v = jnp.einsum("...hc,hcv->...hv", attn_lat, p[pre + "wvb"])
+    v = v.reshape(v.shape[:-2] + (cfg.n_heads * cfg.d_v,))
+    return v @ p[pre + "wo"]
+
+
+def attn_decode(cfg, p, l, x, pos, lat_c, rope_c):
+    """One decode attention for layer l.
+
+    x: [B, D], pos: [B] i32, lat_c: [B, S, C], rope_c: [B, S, R]
+    Returns (attn_out [B, D], lat_c, rope_c) with row `pos` updated.
+    """
+    pre = f"l{l}."
+    h = rms_norm(x, p[pre + "rms1"], cfg.rms_eps)
+    q_eff, q_rope = _mla_project_q(cfg, p, l, h)
+    q_rope = ref.rope_rotate(q_rope, pos[:, None], cfg.rope_theta)
+    lat_new, rope_new = _mla_kv_rows(cfg, p, l, h, pos)
+    b = x.shape[0]
+    rows = jnp.arange(b)
+    lat_c = lat_c.at[rows, pos].set(lat_new)
+    rope_c = rope_c.at[rows, pos].set(rope_new)
+    attn_lat = mla_attention(q_eff, q_rope, lat_c, rope_c, pos + 1)
+    return _mla_output(cfg, p, l, attn_lat), lat_c, rope_c
+
+
+def _gating(cfg, p, l, h2):
+    logits = h2 @ p[f"l{l}.wg"]
+    return ref.topk_gating_ref(logits, cfg.top_k)
+
+
+def _ffn_fp32(cfg, p, l, h2, gw=None, eidx=None):
+    pre = f"l{l}."
+    if l < cfg.n_dense_layers:
+        return ref.dense_ffn_ref(h2, p[pre + "w13"], p[pre + "w2"])
+    shared = ref.dense_ffn_ref(h2, p[pre + "w13s"], p[pre + "w2s"])
+    routed = moe_ffn(h2, p[pre + "w13"], p[pre + "w2"], gw, eidx)
+    return shared + routed
+
+
+def _ffn_int8(cfg, q, l, h2, gw=None, eidx=None):
+    """INT8 FFN path; q is the quantized-param dict from quantize.py."""
+    pre = f"l{l}."
+    if l < cfg.n_dense_layers:
+        h = int8_matmul(h2, q[pre + "w13.wq"], q[pre + "w13.scale"], q[pre + "w13.smooth"])
+        f = h.shape[-1] // 2
+        act = ref.silu(h[:, f:]) * h[:, :f]
+        return int8_matmul(act, q[pre + "w2.wq"], q[pre + "w2.scale"], q[pre + "w2.smooth"])
+    hs = int8_matmul(h2, q[pre + "w13s.wq"], q[pre + "w13s.scale"], q[pre + "w13s.smooth"])
+    f = hs.shape[-1] // 2
+    acts = ref.silu(hs[:, f:]) * hs[:, :f]
+    shared = int8_matmul(acts, q[pre + "w2s.wq"], q[pre + "w2s.scale"], q[pre + "w2s.smooth"])
+    routed = moe_ffn_int8(
+        h2,
+        q[pre + "w13.wq"], q[pre + "w13.scale"], q[pre + "w13.smooth"],
+        q[pre + "w2.wq"], q[pre + "w2.scale"], q[pre + "w2.smooth"],
+        gw, eidx,
+    )
+    return shared + routed
+
+
+# ---------------------------------------------------------------------------
+# Decode step (graph mode, one fused HLO per batch bucket)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, p, tokens, pos, lat, rope, *, qparams=None):
+    """One autoregressive step for a batch.
+
+    tokens: [B] i32, pos: [B] i32 (slot being written, i.e. current length),
+    lat: [L, B, S, C], rope: [L, B, S, R].
+    Returns (logits [B, V], hidden [B, D], lat, rope).
+    """
+    x = p["embed"][tokens]
+    for l in range(cfg.n_layers):
+        attn_out, lat_l, rope_l = attn_decode(cfg, p, l, x, pos, lat[l], rope[l])
+        lat = lat.at[l].set(lat_l)
+        rope = rope.at[l].set(rope_l)
+        x = x + attn_out
+        h2 = rms_norm(x, p[f"l{l}.rms2"], cfg.rms_eps)
+        if l < cfg.n_dense_layers:
+            y = _ffn_fp32(cfg, p, l, h2) if qparams is None else _ffn_int8(cfg, qparams, l, h2)
+        else:
+            gw, eidx = _gating(cfg, p, l, h2)
+            y = (
+                _ffn_fp32(cfg, p, l, h2, gw, eidx)
+                if qparams is None
+                else _ffn_int8(cfg, qparams, l, h2, gw, eidx)
+            )
+        x = x + y
+    hidden = rms_norm(x, p["rmsf"], cfg.rms_eps)
+    logits = hidden @ p["embed"].T
+    return logits, hidden, lat, rope
+
+
+# ---------------------------------------------------------------------------
+# Prefill (eager mode: dense attention over the full prompt, static bucket)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, p, tokens, length):
+    """Process a (padded) prompt of bucket size S_p for one sequence.
+
+    tokens: [1, S_p] i32, length: scalar i32 (true prompt length).
+    Returns (logits [1, V] at position length-1, hidden [1, D] same,
+             lat [L, 1, S_max, C], rope [L, 1, S_max, R]).
+    """
+    sp = tokens.shape[1]
+    s_max = cfg.max_seq
+    pos = jnp.arange(sp, dtype=jnp.int32)[None, :]  # [1, S_p]
+    x = p["embed"][tokens]  # [1, S_p, D]
+    lat_all = jnp.zeros((cfg.n_layers, 1, s_max, cfg.c_latent), jnp.float32)
+    rope_all = jnp.zeros((cfg.n_layers, 1, s_max, cfg.r_rope), jnp.float32)
+    lvec = jnp.full((1,), length, jnp.int32)
+    for l in range(cfg.n_layers):
+        pre = f"l{l}."
+        h = rms_norm(x, p[pre + "rms1"], cfg.rms_eps)
+        q_eff, q_rope = _mla_project_q(cfg, p, l, h)          # [1,S,H,*]
+        q_rope = ref.rope_rotate(q_rope, pos[:, :, None], cfg.rope_theta)
+        lat_new, rope_new = _mla_kv_rows(cfg, p, l, h, pos)   # [1,S,C]/[1,S,R]
+        attn_lat = ref.dense_attention_ref(q_eff, q_rope, lat_new, rope_new, lvec)
+        x = x + _mla_output(cfg, p, l, attn_lat)
+        h2 = rms_norm(x, p[pre + "rms2"], cfg.rms_eps)
+        if l < cfg.n_dense_layers:
+            y = ref.dense_ffn_ref(h2[0], p[pre + "w13"], p[pre + "w2"])[None]
+        else:
+            gw, eidx = _gating(cfg, p, l, h2[0])
+            routed = ref.moe_ffn_ref(h2[0], p[pre + "w13"], p[pre + "w2"], gw, eidx)
+            shared = ref.dense_ffn_ref(h2[0], p[pre + "w13s"], p[pre + "w2s"])
+            y = (routed + shared)[None]
+        x = x + y
+        lat_all = lat_all.at[l, :, :sp].set(lat_new)
+        rope_all = rope_all.at[l, :, :sp].set(rope_new)
+    hidden_all = rms_norm(x, p["rmsf"], cfg.rms_eps)  # [1, S_p, D]
+    last = jnp.clip(length - 1, 0, sp - 1)
+    hidden = jax.lax.dynamic_slice(hidden_all, (0, last, 0), (1, 1, cfg.d_model))[:, 0]
+    logits = hidden @ p["embed"].T
+    return logits, hidden, lat_all, rope_all
+
+
+# ---------------------------------------------------------------------------
+# MTP draft head (§4.6)
+# ---------------------------------------------------------------------------
+
+def mtp_draft(cfg: ModelConfig, p, hidden, token):
+    """Draft logits for position t+2 given main-model hidden at t+1's input.
+
+    hidden: [B, D] (main model's final hidden), token: [B] i32 (the token
+    sampled from those logits). Mirrors DeepSeek MTP: project the
+    concatenation of normalized hidden and next-token embedding, then one
+    SwiGLU block with residual, sharing the tied unembedding.
+    """
+    h = rms_norm(hidden, p["mtp.rms_h"], cfg.rms_eps)
+    e = rms_norm(p["embed"][token], p["mtp.rms_t"], cfg.rms_eps)
+    x = jnp.concatenate([h, e], axis=-1) @ p["mtp.proj"]
+    x = x + ref.dense_ffn_ref(x, p["mtp.w13"], p["mtp.w2"])
+    out = rms_norm(x, p["mtp.rmsf"], cfg.rms_eps)
+    return out @ p["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# Transformerless split (§5.2): attention block / MoE block
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg: ModelConfig, p, l: int, x, pos, lat_c, rope_c):
+    """Attention-NPU half of MoE layer l (MLAProlog + MLA + gating + o_proj).
+
+    x: [T, D] (each token is an independent sequence), pos: [T] i32,
+    lat_c: [T, S, C], rope_c: [T, S, R].
+    Returns (x1 [T, D] residual stream after attention,
+             h2 [T, D] normed MoE input — this is what A2E ships,
+             gate_w [T, K], expert_idx [T, K] i32,
+             lat_c, rope_c updated).
+    """
+    attn_out, lat_c, rope_c = attn_decode(cfg, p, l, x, pos, lat_c, rope_c)
+    x1 = x + attn_out
+    h2 = rms_norm(x1, p[f"l{l}.rms2"], cfg.rms_eps)
+    gw, eidx = _gating(cfg, p, l, h2)
+    return x1, h2, gw, eidx, lat_c, rope_c
+
+
+def moe_block(cfg: ModelConfig, p, l: int, h2, gw, eidx):
+    """MoE-NPU half of layer l: routed experts + shared expert only.
+
+    The residual add (x1 + y) happens back on the attention NPU after E2A —
+    exactly the paper's split where MoE NPUs run only A2E/MoE/E2A (§5.2).
+    """
+    shared = ref.dense_ffn_ref(h2, p[f"l{l}.w13s"], p[f"l{l}.w2s"])
+    routed = moe_ffn(h2, p[f"l{l}.w13"], p[f"l{l}.w2"], gw, eidx)
+    return shared + routed
+
+
+def layer_colocated(cfg: ModelConfig, p, l: int, x, pos, lat_c, rope_c):
+    """Reference colocated MoE layer == attn_block + moe_block + residual."""
+    x1, h2, gw, eidx, lat_c, rope_c = attn_block(cfg, p, l, x, pos, lat_c, rope_c)
+    y = moe_block(cfg, p, l, h2, gw, eidx)
+    return x1 + y, lat_c, rope_c

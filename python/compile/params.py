@@ -1,0 +1,66 @@
+"""Deterministic parameter initialization + canonical flattening order.
+
+The flattening order defined here is a **contract with the Rust runtime**:
+aot.py lowers every entry point as ``fn(*flat_params, *runtime_inputs)`` and
+records the parameter names in manifest.json in this exact order; Rust
+(runtime/artifact.rs) feeds weight literals from weights.bin by name.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def _normal(rng, shape, scale=0.02):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def init_params(cfg: ModelConfig):
+    """Seeded params for MiniDeepSeek. Returns {name: f32 array}."""
+    rng = np.random.default_rng(cfg.seed)
+    p = {}
+    d, h = cfg.d_model, cfg.n_heads
+    dn, c, r, dv = cfg.d_nope, cfg.c_latent, cfg.r_rope, cfg.d_v
+    p["embed"] = _normal(rng, (cfg.vocab, d), 0.05)
+    p["rmsf"] = jnp.ones((d,), jnp.float32)
+    for l in range(cfg.n_layers):
+        pre = f"l{l}."
+        p[pre + "rms1"] = jnp.ones((d,), jnp.float32)
+        p[pre + "rms2"] = jnp.ones((d,), jnp.float32)
+        p[pre + "wq_nope"] = _normal(rng, (d, h, dn))
+        p[pre + "wq_rope"] = _normal(rng, (d, h, r))
+        p[pre + "wkv_a"] = _normal(rng, (d, c))
+        p[pre + "wk_rope"] = _normal(rng, (d, r))
+        p[pre + "wkb"] = _normal(rng, (h, dn, c), 0.05)
+        p[pre + "wvb"] = _normal(rng, (h, c, dv), 0.05)
+        p[pre + "wo"] = _normal(rng, (h * dv, d))
+        if l < cfg.n_dense_layers:
+            p[pre + "w13"] = _normal(rng, (d, 2 * cfg.f_dense))
+            p[pre + "w2"] = _normal(rng, (cfg.f_dense, d))
+        else:
+            p[pre + "wg"] = _normal(rng, (d, cfg.n_experts), 0.5)
+            p[pre + "w13"] = _normal(rng, (cfg.n_experts, d, 2 * cfg.f_expert))
+            p[pre + "w2"] = _normal(rng, (cfg.n_experts, cfg.f_expert, d))
+            p[pre + "w13s"] = _normal(rng, (d, 2 * cfg.f_expert))
+            p[pre + "w2s"] = _normal(rng, (cfg.f_expert, d))
+    # MTP draft head (§4.6): projection of [hidden ; next-token embedding]
+    # followed by a SwiGLU block, sharing the tied unembedding.
+    p["mtp.rms_h"] = jnp.ones((d,), jnp.float32)
+    p["mtp.rms_t"] = jnp.ones((d,), jnp.float32)
+    p["mtp.proj"] = _normal(rng, (2 * d, d))
+    p["mtp.w13"] = _normal(rng, (d, 2 * cfg.f_dense))
+    p["mtp.w2"] = _normal(rng, (cfg.f_dense, d))
+    p["mtp.rmsf"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def param_order(params) -> list:
+    """Canonical (sorted) parameter name order — the manifest contract."""
+    return sorted(params.keys())
+
+
+def flatten(params) -> list:
+    """[(name, array)] in canonical order."""
+    return [(k, params[k]) for k in param_order(params)]

@@ -1,0 +1,240 @@
+"""INT8 Post-Training Quantization for MiniDeepSeek (§4.7).
+
+Integrates the paper's two techniques:
+
+* **SmoothQuant** — activations have a much wider dynamic range than weights
+  (paper: 10–100x); a per-input-channel smoothing vector ``s`` redistributes
+  quantization difficulty: ``x' = x / s``, ``w' = w * s`` (product unchanged).
+* **GPTQ** — channel-wise weight quantization with Hessian-guided iterative
+  error compensation: columns are quantized sequentially and the remaining
+  FP weights are updated to absorb the rounding error (H from calibration
+  activations).
+
+Calibration follows §4.7: synthetic prompts are run through the FP32 model,
+collecting the input activations of every quantized matmul; expert inputs are
+collected per-expert and the prompt count is scaled so each expert sees at
+least ``min_expert_samples`` tokens.
+
+Outputs per matrix ``name``: ``name.wq`` int8 [in, out] (smoothing folded),
+``name.scale`` f32 [out], ``name.smooth`` f32 [in]. Expert stacks keep a
+leading E axis. Also emits Fig-15 statistics (activation/weight magnitudes
+before/after smoothing) for ``artifacts/quant_stats.json``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from . import model
+
+
+# ---------------------------------------------------------------------------
+# Calibration: run FP32 prefill-style forwards, record matmul inputs
+# ---------------------------------------------------------------------------
+
+def collect_calibration(cfg: ModelConfig, p, n_seqs=6, seq_len=64, seed=7,
+                        min_expert_samples=4):
+    """Returns {matrix_name: X [N, in_dim] f32} calibration activations."""
+    rng = np.random.default_rng(seed)
+    acts = {}
+
+    def record(name, x):
+        acts.setdefault(name, []).append(np.asarray(x, np.float32))
+
+    seqs = 0
+    expert_counts = np.zeros(cfg.n_experts, np.int64)
+    # Keep adding sequences until every expert has enough samples (§4.7:
+    # "scale the calibration dataset to ensure each expert sees at least n
+    # samples").
+    while seqs < n_seqs or expert_counts.min() < min_expert_samples:
+        tokens = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(1, seq_len)), jnp.int32
+        )
+        pos = jnp.arange(seq_len, dtype=jnp.int32)[None, :]
+        x = p["embed"][tokens]
+        lvec = jnp.full((1,), seq_len, jnp.int32)
+        for l in range(cfg.n_layers):
+            pre = f"l{l}."
+            h = model.rms_norm(x, p[pre + "rms1"], cfg.rms_eps)
+            q_eff, q_rope = model._mla_project_q(cfg, p, l, h)
+            q_rope = ref.rope_rotate(q_rope, pos[:, :, None], cfg.rope_theta)
+            lat_new, rope_new = model._mla_kv_rows(cfg, p, l, h, pos)
+            attn_lat = ref.dense_attention_ref(q_eff, q_rope, lat_new, rope_new, lvec)
+            x = x + model._mla_output(cfg, p, l, attn_lat)
+            h2 = model.rms_norm(x, p[pre + "rms2"], cfg.rms_eps)[0]  # [S, D]
+            if l < cfg.n_dense_layers:
+                record(pre + "w13", h2)
+                hh = h2 @ p[pre + "w13"]
+                f = hh.shape[-1] // 2
+                act = np.asarray(ref.silu(hh[:, f:]) * hh[:, :f])
+                record(pre + "w2", act)
+                y = (act @ p[pre + "w2"])[None]
+            else:
+                gw, eidx = model._gating(cfg, p, l, h2)
+                record(pre + "w13", h2)    # shared input for all experts
+                record(pre + "w13s", h2)
+                hs = h2 @ p[pre + "w13s"]
+                f = hs.shape[-1] // 2
+                act_s = np.asarray(ref.silu(hs[:, f:]) * hs[:, :f])
+                record(pre + "w2s", act_s)
+                eidx_np = np.asarray(eidx)
+                for e in range(cfg.n_experts):
+                    sel = (eidx_np == e).any(axis=1)
+                    if sel.any():
+                        he = h2[sel] @ p[pre + "w13"][e]
+                        fe = he.shape[-1] // 2
+                        act_e = np.asarray(ref.silu(he[:, fe:]) * he[:, :fe])
+                        record(f"{pre}w2.e{e}", act_e)
+                        if l == cfg.n_dense_layers:
+                            expert_counts[e] += int(sel.sum())
+                y = (
+                    ref.moe_ffn_ref(h2, p[pre + "w13"], p[pre + "w2"], gw, eidx)
+                    + act_s @ p[pre + "w2s"]
+                )[None]
+            x = x + y
+        seqs += 1
+        if seqs > 64:  # safety bound
+            break
+    return {k: np.concatenate(v, axis=0) for k, v in acts.items()}
+
+
+# ---------------------------------------------------------------------------
+# SmoothQuant + GPTQ
+# ---------------------------------------------------------------------------
+
+def smooth_vector(x_absmax, w_absmax, alpha=0.5):
+    """Per-input-channel smoothing: s = amax_x^a / amax_w^(1-a), clipped."""
+    s = (np.maximum(x_absmax, 1e-5) ** alpha) / (
+        np.maximum(w_absmax, 1e-5) ** (1.0 - alpha)
+    )
+    return np.clip(s, 1e-2, 1e4).astype(np.float32)
+
+
+def gptq_quantize(w, hessian, damp_ratio=0.01):
+    """GPTQ: quantize W [in, out] column-by-column over the *input* dim,
+    compensating rounding error on not-yet-quantized rows via H^-1.
+
+    Returns (wq int8 [in, out], scale f32 [out]).
+    """
+    w = np.array(w, np.float64)  # working copy, mutated
+    n_in, n_out = w.shape
+    # Per-output-channel scale from the full matrix (channel-wise, §4.7).
+    scale = np.maximum(np.abs(w).max(axis=0), 1e-8) / 127.0
+    h = np.array(hessian, np.float64)
+    damp = damp_ratio * np.mean(np.diag(h)) + 1e-8
+    h[np.diag_indices_from(h)] += damp
+    # Upper-triangular Cholesky of H^-1 (standard GPTQ trick).
+    hinv = np.linalg.inv(h)
+    u = np.linalg.cholesky(hinv[::-1, ::-1])[::-1, ::-1].T  # upper
+    wq = np.zeros_like(w, dtype=np.int8)
+    for i in range(n_in):
+        q = np.clip(np.round(w[i] / scale), -127, 127)
+        wq[i] = q.astype(np.int8)
+        err = (w[i] - q * scale) / u[i, i]
+        if i + 1 < n_in:
+            w[i + 1 :] -= np.outer(u[i, i + 1 :], err)
+    return wq, scale.astype(np.float32)
+
+
+def quantize_matrix(w, x_calib, alpha=0.5):
+    """SmoothQuant + GPTQ for one matrix. w [in, out], x_calib [N, in].
+
+    Returns dict with wq/scale/smooth plus Fig-15 stats.
+    """
+    w = np.asarray(w, np.float32)
+    x = np.asarray(x_calib, np.float32)
+    x_amax = np.abs(x).max(axis=0)
+    w_amax = np.abs(w).max(axis=1)
+    s = smooth_vector(x_amax, w_amax, alpha)
+    xs = x / s[None, :]
+    ws = w * s[:, None]
+    hess = (xs.T @ xs) / max(1, xs.shape[0])
+    wq, scale = gptq_quantize(ws, hess)
+    stats = {
+        "act_absmax_before": x_amax.tolist(),
+        "act_absmax_after": np.abs(xs).max(axis=0).tolist(),
+        "weight_absmax_before": w_amax.tolist(),
+        "weight_absmax_after": np.abs(ws).max(axis=1).tolist(),
+    }
+    return {"wq": wq, "scale": scale, "smooth": s, "stats": stats}
+
+
+def quantize_model(cfg: ModelConfig, p, acts):
+    """Quantize all FFN matrices. Returns (qparams, stats_for_fig15)."""
+    q = {}
+    all_stats = {}
+
+    def put(name, res):
+        q[name + ".wq"] = jnp.asarray(res["wq"])
+        q[name + ".scale"] = jnp.asarray(res["scale"])
+        q[name + ".smooth"] = jnp.asarray(res["smooth"])
+        all_stats[name] = res["stats"]
+
+    for l in range(cfg.n_layers):
+        pre = f"l{l}."
+        if l < cfg.n_dense_layers:
+            put(pre + "w13", quantize_matrix(p[pre + "w13"], acts[pre + "w13"]))
+            put(pre + "w2", quantize_matrix(p[pre + "w2"], acts[pre + "w2"]))
+        else:
+            put(pre + "w13s", quantize_matrix(p[pre + "w13s"], acts[pre + "w13s"]))
+            put(pre + "w2s", quantize_matrix(p[pre + "w2s"], acts[pre + "w2s"]))
+            # Routed experts: stack per-expert results. w13 experts share the
+            # layer input (and therefore one smoothing vector computed from
+            # the union); w2 experts get per-expert smoothing.
+            w13_res = [
+                quantize_matrix(p[pre + "w13"][e], acts[pre + "w13"])
+                for e in range(cfg.n_experts)
+            ]
+            # Use one common smoothing vector for w13 so the kernel applies a
+            # single [D] vector (matches moe_ffn_int8's sm13 layout): re-run
+            # with the averaged smoothing.
+            s_common = np.mean([r["smooth"] for r in w13_res], axis=0).astype(np.float32)
+            wq13, s13 = [], []
+            x = np.asarray(acts[pre + "w13"], np.float32) / s_common[None, :]
+            hess = (x.T @ x) / max(1, x.shape[0])
+            for e in range(cfg.n_experts):
+                ws = np.asarray(p[pre + "w13"][e]) * s_common[:, None]
+                wq_e, sc_e = gptq_quantize(ws, hess)
+                wq13.append(wq_e)
+                s13.append(sc_e)
+            q[pre + "w13.wq"] = jnp.asarray(np.stack(wq13))
+            q[pre + "w13.scale"] = jnp.asarray(np.stack(s13))
+            q[pre + "w13.smooth"] = jnp.asarray(s_common)
+            all_stats[pre + "w13"] = w13_res[0]["stats"]
+            wq2, s2, sm2 = [], [], []
+            for e in range(cfg.n_experts):
+                xe = acts.get(f"{pre}w2.e{e}")
+                if xe is None or len(xe) < 2:
+                    xe = np.ones((4, cfg.f_expert), np.float32)
+                res = quantize_matrix(p[pre + "w2"][e], xe)
+                wq2.append(res["wq"])
+                s2.append(res["scale"])
+                sm2.append(res["smooth"])
+            q[pre + "w2.wq"] = jnp.asarray(np.stack(wq2))
+            q[pre + "w2.scale"] = jnp.asarray(np.stack(s2))
+            q[pre + "w2.smooth"] = jnp.asarray(np.stack(sm2))
+    return q, all_stats
+
+
+def fig15_stats(all_stats, layer_name="l1.w13s"):
+    """Condensed Fig-15 payload: the four magnitude series for one layer."""
+    st = all_stats[layer_name]
+    def summ(v):
+        a = np.asarray(v)
+        return {
+            "max": float(a.max()),
+            "p99": float(np.percentile(a, 99)),
+            "median": float(np.median(a)),
+        }
+    return {
+        "layer": layer_name,
+        "series": st,
+        "summary": {k: summ(v) for k, v in st.items()},
+        "dynamic_range_ratio_before": float(
+            np.max(st["act_absmax_before"]) / max(1e-9, np.median(st["weight_absmax_before"]))
+        ),
+        "dynamic_range_ratio_after": float(
+            np.max(st["act_absmax_after"]) / max(1e-9, np.median(st["weight_absmax_after"]))
+        ),
+    }

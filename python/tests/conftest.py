@@ -1,0 +1,24 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    from compile.config import DEFAULT
+    return DEFAULT
+
+
+@pytest.fixture(scope="session")
+def params(cfg):
+    from compile.params import init_params
+    return init_params(cfg)
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir():
+    d = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    return os.path.abspath(d)

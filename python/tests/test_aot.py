@@ -1,0 +1,90 @@
+"""AOT contract tests: manifest + weights.bin must match what the Rust
+runtime (runtime/artifact.rs) expects. Requires `make artifacts` to have run
+(skips otherwise)."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+
+def _load(artifacts_dir):
+    mpath = os.path.join(artifacts_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(mpath) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_hlo_files(artifacts_dir):
+    m = _load(artifacts_dir)
+    assert len(m["artifacts"]) >= 14
+    for a in m["artifacts"]:
+        path = os.path.join(artifacts_dir, a["file"])
+        assert os.path.exists(path), a["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{a['file']} is not HLO text"
+
+
+def test_manifest_covers_expected_entries(artifacts_dir):
+    m = _load(artifacts_dir)
+    names = {a["name"] for a in m["artifacts"]}
+    cfg = m["config"]
+    for b in cfg["decode_buckets"]:
+        assert f"decode_b{b}" in names
+        assert f"mtp_b{b}" in names
+    for need in ("prefill_s128", "decode_int8_b1", "decode_int8_b4",
+                 "attn_block_t8", "moe_block_t8", "comm_quant_t8"):
+        assert need in names
+
+
+def test_weight_args_exist_in_weights_index(artifacts_dir):
+    m = _load(artifacts_dir)
+    index = {t["name"] for t in m["params"]}
+    for a in m["artifacts"]:
+        for w in a["weight_args"]:
+            assert w in index, f"{a['name']} references missing weight {w}"
+
+
+def test_weights_bin_parses_and_matches_index(artifacts_dir):
+    m = _load(artifacts_dir)
+    path = os.path.join(artifacts_dir, m["weights_file"])
+    with open(path, "rb") as f:
+        magic, version, hlen = struct.unpack("<IIQ", f.read(16))
+        assert magic == 0x58445357 and version == 1
+        header = json.loads(f.read(hlen))
+        data_start = f.tell()
+        data = f.read()
+    assert header["tensors"] == m["params"]
+    for t in m["params"]:
+        nb = t["nbytes"]
+        el = {"f32": 4, "i8": 1, "i32": 4}[t["dtype"]]
+        assert nb == int(np.prod(t["shape"])) * el
+        blob = data[t["offset"]: t["offset"] + nb]
+        assert len(blob) == nb
+        if t["dtype"] == "f32":
+            arr = np.frombuffer(blob, np.float32)
+            assert np.isfinite(arr).all(), t["name"]
+
+
+def test_decode_artifact_runtime_args_shapes(artifacts_dir):
+    m = _load(artifacts_dir)
+    cfg = m["config"]
+    art = {a["name"]: a for a in m["artifacts"]}
+    a = art["decode_b4"]
+    rt = {r["name"]: r for r in a["runtime_args"]}
+    assert rt["tokens"]["shape"] == [4]
+    assert rt["lat"]["shape"] == [cfg["n_layers"], 4, cfg["max_seq"], cfg["c_latent"]]
+    assert rt["rope"]["shape"] == [cfg["n_layers"], 4, cfg["max_seq"], cfg["r_rope"]]
+    assert a["outputs"] == ["logits", "hidden", "lat", "rope"]
+
+
+def test_quant_stats_json(artifacts_dir):
+    m = _load(artifacts_dir)
+    path = os.path.join(artifacts_dir, "quant_stats.json")
+    assert os.path.exists(path)
+    st = json.load(open(path))
+    assert st["dynamic_range_ratio_after"] <= st["dynamic_range_ratio_before"]
+    assert len(st["series"]["act_absmax_before"]) > 0

@@ -1,0 +1,256 @@
+"""L1 correctness: every Pallas kernel (interpret=True) vs its pure-jnp
+oracle, swept over shapes/dtypes with hypothesis (the CORE correctness
+signal for the AOT path — these same kernels are baked into the HLO the Rust
+runtime executes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mla_attention import mla_attention
+from compile.kernels.moe_ffn import moe_ffn
+from compile.kernels.moe_ffn_int8 import moe_ffn_int8, moe_ffn_int8_ref
+from compile.kernels.int8_matmul import int8_matmul
+from compile.kernels.comm_quant import comm_quant
+
+SET = dict(max_examples=8, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# MLA flash attention
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([8, 32]),
+    r=st.sampled_from([4, 16]),
+    s_tiles=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mla_attention_matches_ref(b, h, c, r, s_tiles, seed):
+    rng = _rng(seed)
+    s = 32 * s_tiles
+    q_eff = jnp.asarray(rng.normal(size=(b, h, c)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(b, h, r)), jnp.float32)
+    lat = jnp.asarray(rng.normal(size=(b, s, c)), jnp.float32)
+    rope = jnp.asarray(rng.normal(size=(b, s, r)), jnp.float32)
+    length = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    got = mla_attention(q_eff, q_rope, lat, rope, length)
+    want = ref.mla_attention_ref(q_eff, q_rope, lat, rope, length)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_mla_attention_length_one():
+    """Attention over a single valid position == that position's latent."""
+    rng = _rng(0)
+    b, h, c, r, s = 2, 4, 32, 16, 64
+    q_eff = jnp.asarray(rng.normal(size=(b, h, c)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(b, h, r)), jnp.float32)
+    lat = jnp.asarray(rng.normal(size=(b, s, c)), jnp.float32)
+    rope = jnp.asarray(rng.normal(size=(b, s, r)), jnp.float32)
+    length = jnp.ones((b,), jnp.int32)
+    got = np.asarray(mla_attention(q_eff, q_rope, lat, rope, length))
+    for bi in range(b):
+        for hi in range(h):
+            np.testing.assert_allclose(got[bi, hi], np.asarray(lat)[bi, 0], atol=1e-5)
+
+
+def test_mla_attention_mask_is_hard():
+    """Entries beyond `length` must not affect the result at all."""
+    rng = _rng(1)
+    b, h, c, r, s = 1, 2, 16, 8, 64
+    q_eff = jnp.asarray(rng.normal(size=(b, h, c)), jnp.float32)
+    q_rope = jnp.asarray(rng.normal(size=(b, h, r)), jnp.float32)
+    lat = jnp.asarray(rng.normal(size=(b, s, c)), jnp.float32)
+    rope = jnp.asarray(rng.normal(size=(b, s, r)), jnp.float32)
+    length = jnp.asarray([10], jnp.int32)
+    a = mla_attention(q_eff, q_rope, lat, rope, length)
+    lat2 = lat.at[:, 10:].set(1e6)
+    rope2 = rope.at[:, 10:].set(-1e6)
+    b2 = mla_attention(q_eff, q_rope, lat2, rope2, length)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Grouped MoE FFN
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    t=st.sampled_from([1, 4, 8]),
+    e=st.sampled_from([2, 4, 8]),
+    f=st.sampled_from([16, 64]),
+    k=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_matches_ref(t, e, f, k, seed):
+    rng = _rng(seed)
+    d = 32
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    w13 = jnp.asarray(rng.normal(size=(e, d, 2 * f)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(e, f, d)) * 0.1, jnp.float32)
+    gl = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+    gw, idx = ref.topk_gating_ref(gl, k)
+    got = moe_ffn(x, w13, w2, gw, idx)
+    want = ref.moe_ffn_ref(x, w13, w2, gw, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_moe_ffn_unrouted_token_gets_zero():
+    """A token whose gate weights are all zero contributes nothing."""
+    rng = _rng(3)
+    t, d, e, f, k = 4, 16, 4, 8, 2
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    w13 = jnp.asarray(rng.normal(size=(e, d, 2 * f)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32)
+    gw = jnp.zeros((t, k), jnp.float32).at[1:].set(0.5)
+    idx = jnp.zeros((t, k), jnp.int32)
+    got = np.asarray(moe_ffn(x, w13, w2, gw, idx))
+    np.testing.assert_allclose(got[0], np.zeros(d), atol=1e-6)
+
+
+def test_gating_weights_sum_to_one():
+    rng = _rng(4)
+    gl = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    gw, idx = ref.topk_gating_ref(gl, 2)
+    np.testing.assert_allclose(np.asarray(gw).sum(axis=1), np.ones(16), atol=1e-6)
+    assert int(np.asarray(idx).max()) < 8
+
+
+# ---------------------------------------------------------------------------
+# INT8 QMM
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    t=st.sampled_from([1, 5, 8]),
+    d=st.sampled_from([16, 128]),
+    n=st.sampled_from([32, 64, 192]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_matmul_matches_ref(t, d, n, seed):
+    rng = _rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-127, 128, size=(d, n)), jnp.int8)
+    ws = jnp.asarray(np.abs(rng.normal(size=(n,))) * 0.01 + 1e-4, jnp.float32)
+    sm = jnp.asarray(np.abs(rng.normal(size=(d,))) + 0.5, jnp.float32)
+    got = int8_matmul(x, wq, ws, sm)
+    want = ref.int8_matmul_ref(x, wq, ws, sm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_matmul_approximates_fp32():
+    """QMM of a quantized weight approximates the fp32 matmul."""
+    rng = _rng(7)
+    t, d, n = 8, 64, 32
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    w = rng.normal(size=(d, n)).astype(np.float32) * 0.1
+    scale = np.abs(w).max(axis=0) / 127.0
+    wq = jnp.asarray(np.clip(np.round(w / scale), -127, 127), jnp.int8)
+    sm = jnp.ones((d,), jnp.float32)
+    got = np.asarray(int8_matmul(x, wq, jnp.asarray(scale), sm))
+    want = np.asarray(x) @ w
+    rel = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
+    assert rel < 0.05, f"quantized matmul too far off: {rel}"
+
+
+# ---------------------------------------------------------------------------
+# Communication quantization
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    t=st.sampled_from([1, 3, 8, 16]),
+    d=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_comm_quant_matches_ref(t, d, seed):
+    rng = _rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, d)) * 3.0, jnp.float32)
+    q1, s1 = comm_quant(x)
+    q2, s2 = ref.comm_quant_ref(x)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_comm_quant_roundtrip_error_bounded():
+    """Dequantized tensor within half-LSB of original per token."""
+    rng = _rng(9)
+    x = jnp.asarray(rng.normal(size=(8, 128)) * 5.0, jnp.float32)
+    q, s = comm_quant(x)
+    back = np.asarray(ref.comm_dequant_ref(q, s))
+    err = np.abs(back - np.asarray(x))
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+# ---------------------------------------------------------------------------
+# INT8 grouped MoE FFN
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    t=st.sampled_from([2, 8]),
+    e=st.sampled_from([2, 4]),
+    f=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_ffn_int8_matches_ref(t, e, f, seed):
+    rng = _rng(seed)
+    d, k = 32, 2
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    wq13 = jnp.asarray(rng.integers(-127, 128, size=(e, d, 2 * f)), jnp.int8)
+    s13 = jnp.asarray(np.abs(rng.normal(size=(e, 2 * f))) * 0.01 + 1e-4, jnp.float32)
+    sm13 = jnp.asarray(np.abs(rng.normal(size=(d,))) + 0.5, jnp.float32)
+    wq2 = jnp.asarray(rng.integers(-127, 128, size=(e, f, d)), jnp.int8)
+    s2 = jnp.asarray(np.abs(rng.normal(size=(e, d))) * 0.01 + 1e-4, jnp.float32)
+    sm2 = jnp.asarray(np.abs(rng.normal(size=(e, f))) + 0.5, jnp.float32)
+    gl = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+    gw, idx = ref.topk_gating_ref(gl, k)
+    got = moe_ffn_int8(x, wq13, s13, sm13, wq2, s2, sm2, gw, idx)
+    want = moe_ffn_int8_ref(x, wq13, s13, sm13, wq2, s2, sm2, gw, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    rng = _rng(11)
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    pos = jnp.asarray([0, 1, 7, 100], jnp.int32)
+    y = ref.rope_rotate(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    rng = _rng(12)
+    x = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    y = ref.rope_rotate(x, jnp.zeros((3,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+def test_rope_relative_dot_product():
+    """RoPE inner products depend only on relative position."""
+    rng = _rng(13)
+    q = jnp.asarray(rng.normal(size=(8,)), jnp.float32)[None]
+    k = jnp.asarray(rng.normal(size=(8,)), jnp.float32)[None]
+    def dot_at(pq, pk):
+        qr = ref.rope_rotate(q, jnp.asarray([pq], jnp.int32))
+        kr = ref.rope_rotate(k, jnp.asarray([pk], jnp.int32))
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4

@@ -1,0 +1,151 @@
+"""L2 correctness: MiniDeepSeek forward-path invariants.
+
+The key serving-relevant invariants: decode (graph-mode Pallas path) must
+agree with prefill (eager dense path) token-by-token, and the
+Transformerless attn/moe split (§5.2) must be numerically identical to the
+colocated layer — this is what makes disaggregation *safe* in xDeepServe.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _decode_cache(cfg, b):
+    lat = jnp.zeros((cfg.n_layers, b, cfg.max_seq, cfg.c_latent), jnp.float32)
+    rope = jnp.zeros((cfg.n_layers, b, cfg.max_seq, cfg.r_rope), jnp.float32)
+    return lat, rope
+
+
+def test_prefill_then_decode_matches_pure_prefill(cfg, params):
+    """Greedy continuation via decode == recomputing prefill on prompt+token."""
+    rng = np.random.default_rng(42)
+    L = 9
+    toks = jnp.asarray(rng.integers(0, 256, size=(1, cfg.prefill_seq)), jnp.int32)
+    logits, hidden, lat, rope = model.prefill(cfg, params, toks, jnp.int32(L))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    lg2, _, _, _ = model.decode_step(
+        cfg, params, nxt, jnp.asarray([L], jnp.int32), lat, rope
+    )
+    toks2 = toks.at[0, L].set(nxt[0])
+    lg3, _, _, _ = model.prefill(cfg, params, toks2, jnp.int32(L + 1))
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(lg3), atol=5e-5)
+
+
+def test_multi_step_decode_is_consistent(cfg, params):
+    """Three greedy decode steps == prefill over the extended prompt."""
+    rng = np.random.default_rng(1)
+    L = 5
+    toks = jnp.asarray(rng.integers(0, 256, size=(1, cfg.prefill_seq)), jnp.int32)
+    logits, hidden, lat, rope = model.prefill(cfg, params, toks, jnp.int32(L))
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    seq = list(np.asarray(toks[0, :L]))
+    for step in range(3):
+        seq.append(int(cur[0]))
+        logits, hidden, lat, rope = model.decode_step(
+            cfg, params, cur, jnp.asarray([L + step], jnp.int32), lat, rope
+        )
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks2 = jnp.zeros((1, cfg.prefill_seq), jnp.int32)
+    toks2 = toks2.at[0, : len(seq)].set(jnp.asarray(seq, jnp.int32))
+    lg_ref, _, _, _ = model.prefill(cfg, params, toks2, jnp.int32(len(seq)))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(lg_ref), atol=1e-4)
+
+
+def test_batch_decode_matches_single(cfg, params):
+    """Batched decode must equal per-sequence decode (DP isolation)."""
+    rng = np.random.default_rng(2)
+    b = 4
+    lat, rope = _decode_cache(cfg, b)
+    lat = lat + jnp.asarray(rng.normal(size=lat.shape) * 0.1, jnp.float32)
+    rope = rope + jnp.asarray(rng.normal(size=rope.shape) * 0.1, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 256, size=(b,)), jnp.int32)
+    pos = jnp.asarray([3, 7, 1, 12], jnp.int32)
+    lg_b, hid_b, _, _ = model.decode_step(cfg, params, toks, pos, lat, rope)
+    for i in range(b):
+        lg_i, _, _, _ = model.decode_step(
+            cfg, params, toks[i : i + 1], pos[i : i + 1],
+            lat[:, i : i + 1], rope[:, i : i + 1],
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_b[i]), np.asarray(lg_i[0]), atol=5e-5
+        )
+
+
+def test_disagg_split_equals_colocated(cfg, params):
+    """Transformerless §5.2: attn_block + moe_block + residual == colocated."""
+    rng = np.random.default_rng(3)
+    t, l = 8, cfg.n_dense_layers
+    x = jnp.asarray(rng.normal(size=(t, cfg.d_model)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 20, size=(t,)), jnp.int32)
+    lat_c = jnp.asarray(rng.normal(size=(t, cfg.max_seq, cfg.c_latent)) * 0.1, jnp.float32)
+    rope_c = jnp.asarray(rng.normal(size=(t, cfg.max_seq, cfg.r_rope)) * 0.1, jnp.float32)
+    y_co, lat1, rope1 = model.layer_colocated(cfg, params, l, x, pos, lat_c, rope_c)
+    x1, h2, gw, eidx, lat2, rope2 = model.attn_block(cfg, params, l, x, pos, lat_c, rope_c)
+    y_split = x1 + model.moe_block(cfg, params, l, h2, gw, eidx)
+    np.testing.assert_allclose(np.asarray(y_co), np.asarray(y_split), atol=0)
+    np.testing.assert_allclose(np.asarray(lat1), np.asarray(lat2), atol=0)
+
+
+def test_disagg_split_survives_comm_quant(cfg, params):
+    """§4.7 communication quantization: shipping h2 over A2E as INT8 changes
+    the MoE output only within quantization tolerance."""
+    rng = np.random.default_rng(4)
+    t, l = 8, cfg.n_dense_layers
+    x = jnp.asarray(rng.normal(size=(t, cfg.d_model)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 20, size=(t,)), jnp.int32)
+    lat_c = jnp.asarray(rng.normal(size=(t, cfg.max_seq, cfg.c_latent)) * 0.1, jnp.float32)
+    rope_c = jnp.asarray(rng.normal(size=(t, cfg.max_seq, cfg.r_rope)) * 0.1, jnp.float32)
+    x1, h2, gw, eidx, _, _ = model.attn_block(cfg, params, l, x, pos, lat_c, rope_c)
+    hq, hs = ref.comm_quant_ref(h2)
+    h2_q = ref.comm_dequant_ref(hq, hs)
+    y = np.asarray(model.moe_block(cfg, params, l, h2, gw, eidx))
+    yq = np.asarray(model.moe_block(cfg, params, l, h2_q, gw, eidx))
+    rel = np.abs(y - yq).max() / (np.abs(y).max() + 1e-9)
+    assert rel < 0.05, f"comm-quant error too large: {rel}"
+
+
+def test_mtp_draft_shapes_and_determinism(cfg, params):
+    rng = np.random.default_rng(5)
+    b = 4
+    hidden = jnp.asarray(rng.normal(size=(b, cfg.d_model)), jnp.float32)
+    token = jnp.asarray(rng.integers(0, 256, size=(b,)), jnp.int32)
+    d1 = model.mtp_draft(cfg, params, hidden, token)
+    d2 = model.mtp_draft(cfg, params, hidden, token)
+    assert d1.shape == (b, cfg.vocab)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_prefill_cache_rows_beyond_prompt_are_zero(cfg, params):
+    rng = np.random.default_rng(6)
+    L = 11
+    toks = jnp.asarray(rng.integers(0, 256, size=(1, cfg.prefill_seq)), jnp.int32)
+    _, _, lat, rope = model.prefill(cfg, params, toks, jnp.int32(L))
+    # cache rows at/after prefill bucket are untouched (zeros)
+    assert float(jnp.abs(lat[:, :, cfg.prefill_seq :]).max()) == 0.0
+    assert float(jnp.abs(rope[:, :, cfg.prefill_seq :]).max()) == 0.0
+
+
+def test_decode_writes_exactly_one_cache_row(cfg, params):
+    rng = np.random.default_rng(7)
+    b = 2
+    lat, rope = _decode_cache(cfg, b)
+    toks = jnp.asarray(rng.integers(0, 256, size=(b,)), jnp.int32)
+    pos = jnp.asarray([4, 9], jnp.int32)
+    _, _, lat2, rope2 = model.decode_step(cfg, params, toks, pos, lat, rope)
+    changed = np.asarray(jnp.any(lat2 != lat, axis=(0, 3)))  # [B, S]
+    for i, p in enumerate([4, 9]):
+        rows = np.nonzero(changed[i])[0]
+        assert list(rows) == [p]
+
+
+def test_rms_norm_scale_invariance(cfg):
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(4, cfg.d_model)), jnp.float32)
+    w = jnp.ones((cfg.d_model,), jnp.float32)
+    y1 = model.rms_norm(x, w)
+    y2 = model.rms_norm(x * 1000.0, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

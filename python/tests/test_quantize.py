@@ -1,0 +1,112 @@
+"""INT8 PTQ (§4.7): SmoothQuant + GPTQ behaviour and end-to-end accuracy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model, quantize
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def calib(cfg, params):
+    return quantize.collect_calibration(cfg, params, n_seqs=3, seq_len=48)
+
+
+@pytest.fixture(scope="module")
+def qmodel(cfg, params, calib):
+    return quantize.quantize_model(cfg, params, calib)
+
+
+def test_calibration_covers_every_expert(cfg, params, calib):
+    """§4.7: each expert must see at least n samples during calibration."""
+    l = cfg.n_dense_layers
+    for e in range(cfg.n_experts):
+        x = calib.get(f"l{l}.w2.e{e}")
+        assert x is not None and x.shape[0] >= 4, f"expert {e} undersampled"
+
+
+def test_smoothing_reduces_activation_range(cfg, params, calib):
+    """Fig 15: smoothing must cut the activation dynamic range."""
+    name = f"l{cfg.n_dense_layers}.w13s"
+    w = np.asarray(params[name])
+    x = calib[name]
+    res = quantize.quantize_matrix(w, x)
+    before = np.max(res["stats"]["act_absmax_before"])
+    after = np.max(res["stats"]["act_absmax_after"])
+    assert after <= before * 1.001
+
+
+def test_gptq_beats_naive_rounding(cfg, params, calib):
+    """GPTQ error compensation: output MSE on calibration data must be no
+    worse than naive round-to-nearest with the same scales."""
+    name = f"l{cfg.n_dense_layers}.w13s"
+    w = np.asarray(params[name], np.float32)
+    x = calib[name].astype(np.float32)
+    res = quantize.quantize_matrix(w, x)
+    s = res["smooth"]
+    xs = x / s[None, :]
+    ws = w * s[:, None]
+    scale = np.maximum(np.abs(ws).max(axis=0), 1e-8) / 127.0
+    wq_naive = np.clip(np.round(ws / scale), -127, 127)
+    y_ref = x @ w
+    y_gptq = xs @ (res["wq"].astype(np.float32) * res["scale"][None, :] * (scale / scale)[None, :] * 0 + res["wq"].astype(np.float32) * res["scale"][None, :])
+    y_naive = xs @ (wq_naive * scale[None, :])
+    mse_gptq = float(np.mean((y_gptq - y_ref) ** 2))
+    mse_naive = float(np.mean((y_naive - y_ref) ** 2))
+    assert mse_gptq <= mse_naive * 1.05, (mse_gptq, mse_naive)
+
+
+def test_quantized_weights_shapes(cfg, params, qmodel):
+    q, _ = qmodel
+    l = cfg.n_dense_layers
+    assert q[f"l{l}.w13.wq"].shape == (cfg.n_experts, cfg.d_model, 2 * cfg.f_expert)
+    assert q[f"l{l}.w13.wq"].dtype == jnp.int8
+    assert q[f"l{l}.w13.scale"].shape == (cfg.n_experts, 2 * cfg.f_expert)
+    assert q[f"l{l}.w2.smooth"].shape == (cfg.n_experts, cfg.f_expert)
+    assert q["l0.w13.wq"].shape == (cfg.d_model, 2 * cfg.f_dense)
+
+
+def test_int8_decode_tracks_fp32(cfg, params, qmodel):
+    """End-to-end: INT8 decode logits stay close to fp32; top-1 agrees on a
+    strong-margin input (the paper's accuracy-preservation claim, scaled)."""
+    q, _ = qmodel
+    rng = np.random.default_rng(11)
+    b = 4
+    lat = jnp.asarray(rng.normal(size=(cfg.n_layers, b, cfg.max_seq, cfg.c_latent)) * 0.05, jnp.float32)
+    rope = jnp.asarray(rng.normal(size=(cfg.n_layers, b, cfg.max_seq, cfg.r_rope)) * 0.05, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, 256, size=(b,)), jnp.int32)
+    pos = jnp.asarray([3, 5, 2, 9], jnp.int32)
+    lg_f, _, _, _ = model.decode_step(cfg, params, toks, pos, lat, rope)
+    store = {**params, **q}
+    lg_q, _, _, _ = model.decode_step(cfg, store, toks, pos, lat, rope, qparams=store)
+    f = np.asarray(lg_f)
+    qq = np.asarray(lg_q)
+    rel = np.abs(f - qq).max() / (np.abs(f).max() + 1e-9)
+    assert rel < 0.15, f"int8 drift too large: {rel}"
+    # cosine similarity per row
+    cos = np.sum(f * qq, axis=1) / (
+        np.linalg.norm(f, axis=1) * np.linalg.norm(qq, axis=1) + 1e-9
+    )
+    assert cos.min() > 0.99, cos
+
+
+def test_fig15_stats_payload(cfg, params, qmodel):
+    _, stats = qmodel
+    payload = quantize.fig15_stats(stats)
+    assert payload["layer"] in stats or payload["layer"] == "l1.w13s"
+    for key in ("act_absmax_before", "act_absmax_after",
+                "weight_absmax_before", "weight_absmax_after"):
+        assert key in payload["series"]
+    # Smoothing narrows the act/weight dynamic-range gap (Fig 15's point).
+    assert payload["dynamic_range_ratio_after"] <= payload["dynamic_range_ratio_before"]
+
+
+def test_gptq_identity_hessian_equals_rtn():
+    """With identity Hessian and diagonal U, GPTQ reduces to round-to-nearest."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    h = np.eye(16)
+    wq, scale = quantize.gptq_quantize(w, h)
+    naive = np.clip(np.round(w / (np.maximum(np.abs(w).max(axis=0), 1e-8) / 127.0)), -127, 127)
+    assert np.abs(wq.astype(np.int32) - naive.astype(np.int32)).max() <= 1

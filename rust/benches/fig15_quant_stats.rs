@@ -1,0 +1,88 @@
+//! Fig 15 reproduction: activation/weight magnitudes in a MiniDeepSeek
+//! linear layer before and after SmoothQuant smoothing.
+//!
+//! The statistics are computed at `make artifacts` time by
+//! python/compile/quantize.py from *real tensors* (the same SmoothQuant +
+//! GPTQ pipeline that quantizes the served INT8 artifacts) and exported to
+//! artifacts/quant_stats.json; this bench renders and checks them.
+//!
+//! Paper shape: activations have a 10–100× wider dynamic range than weights
+//! before smoothing; smoothing limits the extreme activation values by
+//! shifting difficulty into the weights.
+
+use xdeepserve::bench_support::PaperBench;
+use xdeepserve::util::json::Json;
+
+fn series_stats(v: &[Json]) -> (f64, f64) {
+    let vals: Vec<f64> = v.iter().filter_map(Json::as_f64).collect();
+    let max = vals.iter().cloned().fold(0.0, f64::max);
+    let mut s = vals.clone();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = s[s.len() / 2];
+    (max, med)
+}
+
+fn main() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/quant_stats.json");
+    let Ok(text) = std::fs::read_to_string(path) else {
+        println!("Fig15: artifacts/quant_stats.json missing — run `make artifacts`");
+        std::process::exit(0);
+    };
+    let j = Json::parse(&text).expect("quant_stats.json parse");
+    let series = j.get("series").expect("series");
+    let get = |k: &str| series.get(k).and_then(Json::as_arr).expect(k);
+
+    let (act_b_max, act_b_med) = series_stats(get("act_absmax_before"));
+    let (act_a_max, act_a_med) = series_stats(get("act_absmax_after"));
+    let (w_b_max, w_b_med) = series_stats(get("weight_absmax_before"));
+    let (w_a_max, w_a_med) = series_stats(get("weight_absmax_after"));
+
+    let mut bench = PaperBench::new(
+        "Fig15",
+        &format!(
+            "quantization stats, layer {} (real tensors via SmoothQuant+GPTQ)",
+            j.get("layer").and_then(Json::as_str).unwrap_or("?")
+        ),
+        &["series", "max |x|", "median |x|"],
+    );
+    for (name, max, med) in [
+        ("activation, before smoothing", act_b_max, act_b_med),
+        ("activation, after smoothing", act_a_max, act_a_med),
+        ("weight, before smoothing", w_b_max, w_b_med),
+        ("weight, after smoothing", w_a_max, w_a_med),
+    ] {
+        bench.row(&[name.into(), format!("{max:.3}"), format!("{med:.4}")]);
+    }
+
+    let ratio_before = j
+        .get("dynamic_range_ratio_before")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let ratio_after = j
+        .get("dynamic_range_ratio_after")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    bench.row(&[
+        "act-max / weight-median ratio".into(),
+        format!("{ratio_before:.1} -> {ratio_after:.1}"),
+        "paper: 10-100x -> small".into(),
+    ]);
+
+    bench.check(
+        "activations dominate weights before smoothing (paper: 10-100x)",
+        ratio_before > 5.0,
+    );
+    bench.check(
+        "smoothing reduces the act/weight dynamic-range gap",
+        ratio_after < ratio_before,
+    );
+    bench.check(
+        "smoothing caps extreme activation values",
+        act_a_max <= act_b_max * 1.001,
+    );
+    bench.check(
+        "difficulty moves into weights (weight range grows)",
+        w_a_max >= w_b_max * 0.999,
+    );
+    std::process::exit(i32::from(!bench.finish()));
+}

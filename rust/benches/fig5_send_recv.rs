@@ -1,0 +1,91 @@
+//! Fig 5 reproduction: XCCL send/receive latency vs payload size and AIV
+//! core count, on a random cross-server die pair (uniform UB fabric).
+//!
+//! Paper anchors: payloads < 1 MB stay under 20 µs even with 2 AIV cores;
+//! 9 MB with all 48 cores is "more than 2.5×" faster than with 2.
+
+use xdeepserve::bench_support::{us, PaperBench};
+use xdeepserve::fabric::memory::GlobalMemory;
+use xdeepserve::fabric::{FabricParams, Topology};
+use xdeepserve::util::rng::Rng;
+use xdeepserve::xccl::p2p::{P2pEngine, SendOptions};
+
+fn main() {
+    let topo = Topology::full_superpod();
+    let mut rng = Rng::new(5);
+    // random die pair on different servers (paper methodology)
+    let src = rng.index(topo.total_dies());
+    let dst = loop {
+        let d = rng.index(topo.total_dies());
+        if !topo.same_server(src, d) {
+            break d;
+        }
+    };
+    let mut mem = GlobalMemory::new(topo.total_dies());
+    let params = FabricParams::default();
+
+    let sizes: &[(usize, &str)] = &[
+        (4 << 10, "4KB"),
+        (64 << 10, "64KB"),
+        (256 << 10, "256KB"),
+        (1 << 20, "1MB"),
+        (4 << 20, "4MB"),
+        (9 << 20, "9MB"),
+    ];
+    let cores = [2usize, 8, 16, 32, 48];
+
+    let mut bench = PaperBench::new(
+        "Fig5",
+        "XCCL send/receive latency (us) — payload x AIV cores",
+        &["payload", "2 AIV", "8 AIV", "16 AIV", "32 AIV", "48 AIV"],
+    );
+
+    let mut grid = vec![vec![0u64; cores.len()]; sizes.len()];
+    for (si, (bytes, label)) in sizes.iter().enumerate() {
+        let payload: Vec<u8> = (0..*bytes).map(|i| (i % 251) as u8).collect();
+        let mut row = vec![label.to_string()];
+        for (ci, &n_aiv) in cores.iter().enumerate() {
+            let mut eng = P2pEngine::new(&mut mem, &params);
+            let (got, rep) = eng
+                .send_recv(
+                    src,
+                    dst,
+                    &payload,
+                    (si * 10 + ci) as u64 + 1,
+                    SendOptions { n_aiv, ..Default::default() },
+                )
+                .expect("send_recv");
+            assert_eq!(got.len(), payload.len(), "payload integrity");
+            grid[si][ci] = rep.total_ns;
+            row.push(us(rep.total_ns));
+        }
+        bench.row(&row);
+    }
+
+    // paper shape checks
+    let idx_1mb = 3;
+    bench.check(
+        "<= 1MB @ 2 AIV cores stays under 20 us (paper)",
+        (0..=idx_1mb).all(|si| grid[si][0] < 20_000),
+    );
+    let speedup = grid[5][0] as f64 / grid[5][4] as f64;
+    bench.check(
+        &format!("9MB: 48 cores {speedup:.2}x faster than 2 (paper: >2.5x)"),
+        speedup > 2.5,
+    );
+    bench.check(
+        "latency monotone non-increasing in AIV cores",
+        grid.iter().all(|row| row.windows(2).all(|w| w[1] <= w[0])),
+    );
+    bench.check(
+        "latency monotone increasing in payload beyond 256KB",
+        (2..sizes.len() - 1).all(|si| (0..cores.len()).all(|ci| grid[si + 1][ci] >= grid[si][ci])),
+    );
+    // small payloads barely benefit from more cores (startup dominated)
+    let small_gain = grid[0][0] as f64 / grid[0][4] as f64;
+    bench.check(
+        &format!("4KB gains little from 48 cores ({small_gain:.2}x, paper shape)"),
+        small_gain < 1.5,
+    );
+    std::process::exit(i32::from(!bench.finish()));
+}

@@ -1,0 +1,61 @@
+//! Fig 6 reproduction: dispatch/combine latency vs batch size per die at
+//! EP128 (DeepSeek-R1 dimensions), dispatch with fused INT8 quantization.
+//!
+//! Paper shape: dispatch is slightly *slower* than combine at small batch
+//! (quantization overhead), then *faster* once the halved bytes win —
+//! crossover at batch-per-die ≈ 32. At batch 96, global batch = 12,288.
+
+use xdeepserve::bench_support::{us, PaperBench};
+use xdeepserve::fabric::FabricParams;
+use xdeepserve::xccl::a2a::{A2aConfig, A2aEngine};
+
+fn main() {
+    let eng = A2aEngine::new(FabricParams::default(), A2aConfig::deepseek(128));
+
+    let mut bench = PaperBench::new(
+        "Fig6",
+        "dispatch/combine latency (us) vs batch per die, EP128",
+        &["batch/die", "dispatch", "combine", "winner"],
+    );
+
+    let batches = [8usize, 16, 24, 32, 48, 64, 80, 96];
+    let mut crossover = None;
+    let mut last_winner_combine = true;
+    for &b in &batches {
+        let d = eng.dispatch_isolated_ns(b);
+        let c = eng.combine_isolated_ns(b);
+        let winner = if d < c { "dispatch" } else { "combine" };
+        if d < c && crossover.is_none() {
+            crossover = Some(b);
+        }
+        bench.row(&[b.to_string(), us(d), us(c), winner.into()]);
+        last_winner_combine = d >= c;
+    }
+
+    let d8 = eng.dispatch_isolated_ns(8);
+    let c8 = eng.combine_isolated_ns(8);
+    bench.check(
+        "small batch: dispatch slower (quantization overhead, paper)",
+        d8 > c8,
+    );
+    bench.check(
+        &format!(
+            "crossover at batch {:?} (paper: ~32)",
+            crossover
+        ),
+        matches!(crossover, Some(b) if (16..=48).contains(&b)),
+    );
+    bench.check("dispatch wins at batch 96 (paper)", !last_winner_combine);
+    bench.check(
+        &format!(
+            "global batch at 96/die = {} (paper: 12,288)",
+            96 * 128
+        ),
+        96 * 128 == 12_288,
+    );
+    // INT8 saving grows with batch: dispatch advantage at 96 > at 48
+    let adv96 = eng.combine_isolated_ns(96) as i64 - eng.dispatch_isolated_ns(96) as i64;
+    let adv48 = eng.combine_isolated_ns(48) as i64 - eng.dispatch_isolated_ns(48) as i64;
+    bench.check("INT8 advantage grows with batch (paper shape)", adv96 > adv48);
+    std::process::exit(i32::from(!bench.finish()));
+}

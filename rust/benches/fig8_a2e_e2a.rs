@@ -1,0 +1,86 @@
+//! §3.3 / Fig 8 reproduction: A2E / E2A latency at SuperPod scale, plus the
+//! design ablations the section argues from:
+//!   * trampoline forward vs naive full-fan-out pull
+//!   * NPU-Direct URMA (DMA) vs MTE for the bulk stages
+//!   * INT8 communication quantization on vs off
+//!
+//! Paper anchors: 3 DP domains × 160 DP groups (TP=1), 288 expert NPUs,
+//! batch 96/die ⇒ global batch 46,080; A2E 172 µs, E2A 193 µs.
+
+use xdeepserve::bench_support::{us, PaperBench};
+use xdeepserve::fabric::{EngineKind, FabricParams};
+use xdeepserve::xccl::a2e::{A2eConfig, A2eEngine};
+
+fn main() {
+    let params = FabricParams::default();
+    let cfg = A2eConfig::paper_deployment();
+    let global_batch = cfg.batch_per_attention * 3 * cfg.attention_npus;
+
+    let mut bench = PaperBench::new(
+        "Fig8/S3.3",
+        "A2E/E2A at 160 attention + 288 expert NPUs, batch 96",
+        &["variant", "A2E (us)", "E2A (us)", "meta fan-out"],
+    );
+
+    let eng = A2eEngine::new(params.clone(), cfg.clone());
+    let a2e = eng.a2e();
+    let e2a = eng.e2a();
+    bench.row(&[
+        "trampoline + URMA + INT8 (paper)".into(),
+        us(a2e.total_ns),
+        us(e2a.total_ns),
+        format!("{}", e2a.meta_fanout),
+    ]);
+
+    let naive = eng.a2e_naive();
+    bench.row(&[
+        "naive pull (no trampoline)".into(),
+        us(naive.total_ns),
+        "-".into(),
+        format!("{}", naive.meta_fanout),
+    ]);
+
+    let mut mte_cfg = cfg.clone();
+    mte_cfg.engine = EngineKind::Mte;
+    mte_cfg.n_aiv = 4; // AIV cores shared with the compute streams (§5.2)
+    let mte_eng = A2eEngine::new(params.clone(), mte_cfg);
+    let mte = mte_eng.a2e();
+    bench.row(&[
+        "MTE bulk stages (4 free AIV)".into(),
+        us(mte.total_ns),
+        us(mte_eng.e2a().total_ns),
+        format!("{}", mte.meta_fanout),
+    ]);
+
+    let mut fp_cfg = cfg.clone();
+    fp_cfg.quant_int8 = false;
+    let fp_eng = A2eEngine::new(params, fp_cfg);
+    let fp = fp_eng.a2e();
+    bench.row(&[
+        "no comm quantization (bf16)".into(),
+        us(fp.total_ns),
+        us(fp_eng.e2a().total_ns),
+        format!("{}", fp.meta_fanout),
+    ]);
+
+    bench.check(
+        &format!("A2E = {} us (paper: 172 us +-40%)", us(a2e.total_ns)),
+        (100_000..260_000).contains(&a2e.total_ns),
+    );
+    bench.check(
+        &format!("E2A = {} us (paper: 193 us +-40%)", us(e2a.total_ns)),
+        (120_000..290_000).contains(&e2a.total_ns),
+    );
+    bench.check("E2A > A2E (paper ordering)", e2a.total_ns > a2e.total_ns);
+    bench.check(
+        "trampoline beats naive pull (the design's purpose)",
+        a2e.total_ns < naive.total_ns && a2e.meta_fanout * 50 < naive.meta_fanout,
+    );
+    bench.check("URMA beats contended MTE (the §3.3 trade-off)", a2e.total_ns < mte.total_ns);
+    bench.check("INT8 comm quantization helps", a2e.total_ns < fp.total_ns);
+    bench.check(
+        &format!("global batch = {global_batch} (paper: 46,080)"),
+        global_batch == 46_080,
+    );
+    std::process::exit(i32::from(!bench.finish()));
+}

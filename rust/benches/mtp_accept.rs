@@ -1,0 +1,121 @@
+//! §4.6 reproduction: Multi-Token Prediction study.
+//!
+//! Paper numbers: one MTP layer reaches 70–90% acceptance and cuts latency
+//! up to 40% at fixed batch; a naively *reused* second MTP layer yields
+//! 2.26 tokens/step; a *trained* second layer 2.35 (+9% over reused, in
+//! speculative gain). Effective TPOT = (iteration + bubble) / tokens-per-
+//! step — §7.1's (93+2)/1.9 ≈ 50 ms arithmetic.
+//!
+//! Two measurements:
+//!  1. paper-scale: Monte-Carlo speculative decoding with the calibrated
+//!     per-layer acceptance rates;
+//!  2. real-execution: the actual 5-step loop on MiniDeepSeek via PJRT
+//!     (when artifacts exist), reporting the measured acceptance rate.
+
+use xdeepserve::bench_support::PaperBench;
+use xdeepserve::model::ServedModel;
+use xdeepserve::mtp::{
+    expected_tokens_per_step, simulate_tokens_per_step, MTP1_ACCEPT, MTP2_REUSED_ACCEPT,
+    MTP2_TRAINED_ACCEPT,
+};
+use xdeepserve::runtime::Engine;
+use xdeepserve::util::rng::Rng;
+
+const ITER_MS: f64 = 93.0;
+const BUBBLE_MS: f64 = 2.0;
+
+fn main() {
+    let mut rng = Rng::new(12);
+    let mut bench = PaperBench::new(
+        "S4.6",
+        "MTP speculative decoding (tokens/step, effective TPOT)",
+        &["config", "tokens/step", "TPOT (ms)", "latency cut", "paper"],
+    );
+
+    let configs: &[(&str, Vec<f64>, &str)] = &[
+        ("no MTP", vec![], "baseline"),
+        ("MTP-1 (released layer)", vec![MTP1_ACCEPT], "accept 70-90%, -40% lat"),
+        ("MTP-2 reused weights", vec![MTP1_ACCEPT, MTP2_REUSED_ACCEPT], "2.26 tok/step"),
+        ("MTP-2 trained", vec![MTP1_ACCEPT, MTP2_TRAINED_ACCEPT], "2.35 tok/step (+9%)"),
+    ];
+    let mut tps = Vec::new();
+    for (name, accepts, paper) in configs {
+        let expect = expected_tokens_per_step(accepts);
+        let mc = simulate_tokens_per_step(accepts, 100_000, &mut rng);
+        let tpot = (ITER_MS + BUBBLE_MS) / expect;
+        let cut = (1.0 - tpot / (ITER_MS + BUBBLE_MS)) * 100.0;
+        bench.row(&[
+            name.to_string(),
+            format!("{mc:.2}"),
+            format!("{tpot:.1}"),
+            format!("-{cut:.0}%"),
+            paper.to_string(),
+        ]);
+        tps.push(expect);
+    }
+
+    bench.check(
+        &format!("MTP-1 TPOT = {:.1} ms (paper: (93+2)/1.9 = 50)", (ITER_MS + BUBBLE_MS) / tps[1]),
+        ((ITER_MS + BUBBLE_MS) / tps[1] - 50.0).abs() < 1.0,
+    );
+    bench.check("MTP-1 cuts latency by >= 40% ceiling claim", tps[1] >= 1.7);
+    bench.check("reused MTP-2 = 2.26 tokens/step", (tps[2] - 2.26).abs() < 0.01);
+    bench.check("trained MTP-2 = 2.35 tokens/step", (tps[3] - 2.35).abs() < 0.01);
+    bench.check(
+        "training the 2nd layer beats reusing (+9% of spec gain)",
+        tps[3] > tps[2],
+    );
+
+    // ---- real-execution acceptance on MiniDeepSeek --------------------
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let engine = Engine::load(dir).expect("engine");
+        let model = ServedModel::new(&engine);
+        let mut drafts = 0u64;
+        let mut accepted = 0u64;
+        let mut produced = 0u64;
+        let mut iters = 0u64;
+        for seed in 0..4 {
+            let prompt: Vec<i32> = std::iter::once(256)
+                .chain((0..12).map(|i| ((seed * 37 + i * 11) % 256) as i32))
+                .collect();
+            let pf = model.prefill(&prompt).expect("prefill");
+            let first = pf.logits.argmax_rows().unwrap()[0] as i32;
+            let mut kv = pf.kv;
+            let mut seqs = vec![xdeepserve::mtp::SpecSeq {
+                kv: &mut kv,
+                feed: first,
+                hidden: pf.hidden.clone(),
+            }];
+            for _ in 0..10 {
+                let out = xdeepserve::mtp::spec_iteration(&model, &mut seqs, false)
+                    .expect("spec iteration");
+                drafts += 1;
+                iters += 1;
+                produced += out[0].tokens.len() as u64;
+                if out[0].draft_accepted {
+                    accepted += 1;
+                }
+                seqs[0].feed = out[0].next_feed;
+                seqs[0].hidden = out[0].hidden.clone();
+            }
+        }
+        let acc = accepted as f64 / drafts as f64;
+        let real_tps = produced as f64 / iters as f64;
+        println!(
+            "\n  real execution (MiniDeepSeek, PJRT): acceptance {:.0}%, {:.2} tokens/step \
+             over {iters} iterations",
+            acc * 100.0,
+            real_tps
+        );
+        println!(
+            "  (acceptance on the untrained mini model is workload-dependent; the paper's \
+             70-90% reflects DeepSeek's trained MTP head — see EXPERIMENTS.md)"
+        );
+        bench.check(
+            "real spec loop produces 1..=2 tokens per step and is consistent",
+            real_tps >= 1.0 && real_tps <= 2.0 && (real_tps - (1.0 + acc)).abs() < 1e-9,
+        );
+    }
+    std::process::exit(i32::from(!bench.finish()));
+}

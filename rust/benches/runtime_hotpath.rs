@@ -1,0 +1,141 @@
+//! §Perf L3 hot-path micro-benchmarks (wall-clock, this machine).
+//!
+//! The L3 target from DESIGN.md §9: the coordinator must never be the
+//! bottleneck — ≥ 100K routing decisions/s on one core, EPLB re-planning
+//! well under the collection cadence, KV admission O(1)-ish, and the
+//! XCCL INT8 codec fast enough to keep transfers bandwidth-bound.
+
+use xdeepserve::bench_support::{time_ns, PaperBench};
+use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::coordinator::decode_sched::{choose_group, GroupStatus};
+use xdeepserve::coordinator::prefill_sched::{assign_collaborative, PrefillDpStatus, PrefillItem};
+use xdeepserve::eplb::algorithm::{place, select_redundant};
+use xdeepserve::eplb::mapping::ReplicaMap;
+use xdeepserve::kvcache::BlockPool;
+use xdeepserve::util::rng::Rng;
+use xdeepserve::workload::expert_skew::skewed_expert_counts;
+use xdeepserve::xccl::quant;
+
+fn main() {
+    let mut bench = PaperBench::new(
+        "Perf-L3",
+        "coordinator hot-path microbenchmarks (wall clock, 1 core)",
+        &["path", "per-op", "ops/s", "target"],
+    );
+    let mut rng = Rng::new(3);
+
+    // ---- decode router over 288 DP groups ----
+    let groups: Vec<GroupStatus> = (0..288)
+        .map(|g| GroupStatus {
+            group: g,
+            running: g % 48,
+            batch_limit: 60,
+            kv_usage: (g % 97) as f64 / 97.0,
+            healthy: true,
+        })
+        .collect();
+    let mut rr = 0usize;
+    let h = time_ns(100, 2000, || {
+        std::hint::black_box(choose_group(&groups, DecodeLbPolicy::LeastKv, &mut rr));
+    });
+    let router_ops = 1e9 / h.mean();
+    bench.row(&[
+        "decode route (288 groups)".into(),
+        format!("{:.0} ns", h.mean()),
+        format!("{router_ops:.0}"),
+        ">=100K/s".into(),
+    ]);
+    bench.check("router >= 100K decisions/s", router_ops >= 100_000.0);
+
+    // ---- prefill collaborative assignment (24 reqs / 32 DPs) ----
+    let h = time_ns(20, 300, || {
+        let mut items: Vec<PrefillItem> = (0..24)
+            .map(|i| PrefillItem {
+                req_id: i,
+                tokens: 1000 + (i as usize * 911) % 30_000,
+                prefix_cache_hit: 0.1,
+            })
+            .collect();
+        let mut dps: Vec<PrefillDpStatus> = (0..32)
+            .map(|dp| PrefillDpStatus { dp, busy_until_cost: 0.0, healthy: true })
+            .collect();
+        std::hint::black_box(assign_collaborative(&mut items, &mut dps, 8));
+    });
+    bench.row(&[
+        "prefill LPT assign (24x32)".into(),
+        format!("{:.1} us", h.mean() / 1e3),
+        format!("{:.0}", 1e9 / h.mean()),
+        "per-step budget 1ms".into(),
+    ]);
+    bench.check("prefill assignment under 1 ms", h.mean() < 1e6);
+
+    // ---- EPLB replan at 256 experts / 288 NPUs ----
+    let calib: Vec<Vec<u64>> = (0..8)
+        .map(|_| skewed_expert_counts(&mut rng, 256, 12_288, 0.9))
+        .collect();
+    let totals: Vec<u64> = (0..256)
+        .map(|e| calib.iter().map(|s| s[e]).sum())
+        .collect();
+    let base: Vec<u64> = (0..288).map(|n| if n < 256 { totals[n] } else { 0 }).collect();
+    let h = time_ns(2, 20, || {
+        let (chosen, _) = select_redundant(&calib, 256, 64);
+        std::hint::black_box(place(&chosen, &totals, &base, 1));
+    });
+    bench.row(&[
+        "EPLB replan (256E, R=64)".into(),
+        format!("{:.1} ms", h.mean() / 1e6),
+        format!("{:.1}", 1e9 / h.mean()),
+        "<< collection cadence (60s)".into(),
+    ]);
+    bench.check("EPLB replan under 1 s", h.mean() < 1e9);
+
+    // ---- replica-map routing ----
+    let mut map = ReplicaMap::identity(256, 288);
+    for e in 0..32 {
+        map.add_replica(e, 256 + e);
+    }
+    let assignments: Vec<(usize, usize)> =
+        (0..480).map(|t| (t, (t * 13) % 256)).collect();
+    let h = time_ns(50, 1000, || {
+        std::hint::black_box(map.route_counts(&assignments));
+    });
+    bench.row(&[
+        "replica routing (480 tok)".into(),
+        format!("{:.1} us", h.mean() / 1e3),
+        format!("{:.0}", 1e9 / h.mean()),
+        "per decode step".into(),
+    ]);
+    bench.check("token routing under 100 us / step", h.mean() < 100_000.0);
+
+    // ---- KV pool admit/release cycle ----
+    let mut pool = BlockPool::new(100_000);
+    let mut next = 0u64;
+    let h = time_ns(100, 5000, || {
+        pool.admit(next, 2048, 256).unwrap();
+        pool.release(next).unwrap();
+        next += 1;
+    });
+    bench.row(&[
+        "KV admit+release (2K tok)".into(),
+        format!("{:.1} us", h.mean() / 1e3),
+        format!("{:.0}", 1e9 / h.mean()),
+        ">=10K/s".into(),
+    ]);
+    bench.check("KV admission >= 10K cycles/s", 1e9 / h.mean() >= 10_000.0);
+
+    // ---- XCCL INT8 codec throughput ----
+    let row: Vec<f32> = (0..96 * 7168).map(|i| (i % 97) as f32 * 0.01 - 0.5).collect();
+    let h = time_ns(3, 30, || {
+        std::hint::black_box(quant::quantize_rows(&row, 7168));
+    });
+    let gbps = (row.len() * 4) as f64 / h.mean();
+    bench.row(&[
+        "INT8 comm quant (96x7168)".into(),
+        format!("{:.2} ms", h.mean() / 1e6),
+        format!("{gbps:.2} GB/s"),
+        "codec not the bottleneck".into(),
+    ]);
+    bench.check("quant codec >= 0.5 GB/s", gbps >= 0.5);
+
+    std::process::exit(i32::from(!bench.finish()));
+}

@@ -1,0 +1,105 @@
+//! §7.1 headline reproduction: peak decode throughput on CloudMatrix384.
+//!
+//! Colocated (18 servers / 288 dies / DP288 / EP288 / batch 60): 2400
+//! tokens/s/chip at ~50 ms TPOT; 17,280 global batch; 345K tokens/s total.
+//! Disaggregated MoE-Attention (48 servers / 768 dies / 3×160 DP + EP288 /
+//! batch 96): 2400 tokens/s/chip at ~49 ms TPOT; 46,080 global batch.
+//! Plus the §5.2 ablations: DP domains, microbatching, persistent kernels.
+
+use xdeepserve::bench_support::PaperBench;
+use xdeepserve::disagg::colocated::{simulate, ColocatedDeployment};
+use xdeepserve::disagg::DisaggDeployment;
+
+fn main() {
+    let mut bench = PaperBench::new(
+        "Tab7.1",
+        "peak decode throughput (measured vs paper)",
+        &["deployment", "global batch", "TPOT (ms)", "tok/s/chip", "total tok/s"],
+    );
+
+    // ---- colocated ----
+    let co = ColocatedDeployment::paper();
+    let r = simulate(&co, 3_000, 16, 9);
+    let global = co.dp_groups * co.batch_per_die;
+    bench.row(&[
+        "colocated DP288/EP288 b60".into(),
+        global.to_string(),
+        format!("{:.1}", r.effective_tpot_ms),
+        format!("{:.0}", r.tokens_per_chip_per_s),
+        format!("{:.0}", r.total_tokens_per_s),
+    ]);
+    bench.row(&[
+        "  paper".into(),
+        "17280".into(),
+        "50".into(),
+        "2400".into(),
+        "345600".into(),
+    ]);
+
+    // ---- disaggregated ----
+    let dd = DisaggDeployment::paper();
+    let it = dd.iteration(3_000);
+    bench.row(&[
+        "disagg 3x160DP + EP288 b96".into(),
+        dd.global_batch().to_string(),
+        format!("{:.1}", it.effective_tpot_ns as f64 / 1e6),
+        format!("{:.0}", it.tokens_per_chip_per_s),
+        format!(
+            "{:.0}",
+            dd.global_batch() as f64 / (it.effective_tpot_ns as f64 / 1e9)
+        ),
+    ]);
+    bench.row(&[
+        "  paper".into(),
+        "46080".into(),
+        "49".into(),
+        "2400".into(),
+        "-".into(),
+    ]);
+
+    bench.check("colocated global batch = 17,280", global == 17_280);
+    bench.check(
+        &format!("colocated {:.0} tok/s/chip (paper 2400 +-25%)", r.tokens_per_chip_per_s),
+        (1800.0..3000.0).contains(&r.tokens_per_chip_per_s),
+    );
+    bench.check(
+        &format!("colocated TPOT {:.1} ms (paper ~50)", r.effective_tpot_ms),
+        (40.0..62.0).contains(&r.effective_tpot_ms),
+    );
+    bench.check(
+        &format!("colocated total {:.0} tok/s (paper 345K +-25%)", r.total_tokens_per_s),
+        (260_000.0..440_000.0).contains(&r.total_tokens_per_s),
+    );
+    bench.check("disagg global batch = 46,080", dd.global_batch() == 46_080);
+    bench.check(
+        &format!("disagg {:.0} tok/s/chip (paper 2400 +-25%)", it.tokens_per_chip_per_s),
+        (1800.0..3000.0).contains(&it.tokens_per_chip_per_s),
+    );
+    bench.check(
+        &format!("disagg TPOT {:.1} ms (paper ~49)", it.effective_tpot_ns as f64 / 1e6),
+        (37.0..62.0).contains(&(it.effective_tpot_ns as f64 / 1e6)),
+    );
+
+    // ---- §5.2 ablations ----
+    println!("\n  §5.2 ablations (disaggregated iteration, ms):");
+    let base = it.total_ns as f64 / 1e6;
+    println!("    3 domains, 2 ubatch, persistent kernels : {base:.1}");
+    let mut d1 = DisaggDeployment::paper();
+    d1.dp_domains = 1;
+    d1.dp_groups_per_domain = 480;
+    d1.microbatches = 6; // microbatching alone must hide 3x the comm
+    let v1 = d1.iteration(3_000).total_ns as f64 / 1e6;
+    println!("    1 domain, 6 ubatch (no inter-DP overlap): {v1:.1}");
+    let mut dm = DisaggDeployment::paper();
+    dm.microbatches = 1;
+    let vm = dm.iteration(3_000).total_ns as f64 / 1e6;
+    println!("    1 microbatch (no intra-DP overlap)      : {vm:.1}");
+    let mut dp = DisaggDeployment::paper();
+    dp.persistent_kernels = false;
+    let vp = dp.iteration(3_000).total_ns as f64 / 1e6;
+    println!("    CPU-scheduled kernels (not persistent)  : {vp:.1}");
+    bench.check("DP domains help (1 domain slower)", v1 > base);
+    bench.check("microbatching helps (1 ubatch slower)", vm > base);
+    bench.check("persistent kernels help (>=15%)", vp > base * 1.15);
+    std::process::exit(i32::from(!bench.finish()));
+}

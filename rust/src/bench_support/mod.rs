@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! Every `rust/benches/*.rs` binary uses this to time closures (warmup +
+//! measured iterations), print paper-style tables, and emit a consistent
+//! `paper vs measured` footer so `cargo bench | tee bench_output.txt`
+//! documents the reproduction directly.
+
+use std::time::Instant;
+
+use crate::util::stats::{Histogram, Table};
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured ones.
+/// Returns wall-clock nanoseconds per iteration.
+pub fn time_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Histogram {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed().as_nanos() as f64);
+    }
+    h
+}
+
+/// A paper-artifact bench section: prints a header, rows, and a
+/// paper-vs-measured verdict line.
+pub struct PaperBench {
+    pub id: String,
+    pub table: Table,
+    checks: Vec<(String, bool)>,
+}
+
+impl PaperBench {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        println!("\n=== {id}: {title} ===");
+        Self { id: id.into(), table: Table::new(headers), checks: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.table.row(cells);
+    }
+
+    /// Record a shape check (who-wins / crossover / ratio band).
+    pub fn check(&mut self, name: &str, ok: bool) {
+        self.checks.push((name.into(), ok));
+    }
+
+    /// Print everything; returns true when all checks held.
+    pub fn finish(self) -> bool {
+        print!("{}", self.table.render());
+        let mut all_ok = true;
+        for (name, ok) in &self.checks {
+            println!("  [{}] {}", if *ok { "OK" } else { "MISS" }, name);
+            all_ok &= ok;
+        }
+        println!(
+            "{}: {}",
+            self.id,
+            if all_ok { "shape reproduced" } else { "SHAPE MISMATCH" }
+        );
+        all_ok
+    }
+}
+
+/// Format helper: virtual ns → µs string.
+pub fn us(ns: u64) -> String {
+    format!("{:.0}", ns as f64 / 1e3)
+}
+
+/// Format helper: virtual ns → ms string.
+pub fn ms(ns: u64) -> String {
+    format!("{:.1}", ns as f64 / 1e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let h = time_ns(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(h.len(), 5);
+        assert!(h.mean() > 0.0);
+    }
+
+    #[test]
+    fn paper_bench_verdict() {
+        let mut b = PaperBench::new("t", "test", &["a"]);
+        b.row(&["1".into()]);
+        b.check("passes", true);
+        assert!(b.finish());
+        let mut b2 = PaperBench::new("t2", "test2", &["a"]);
+        b2.check("fails", false);
+        assert!(!b2.finish());
+    }
+}

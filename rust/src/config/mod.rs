@@ -1,0 +1,342 @@
+//! Configuration system: deployment presets + TOML-lite config files.
+//!
+//! Every experiment in the paper is described by a [`Config`]: the SuperPod
+//! topology slice it runs on, the parallelism layout (DP/EP/TP, DP domains),
+//! serving policies (load balancing, GC mitigation, MTP depth, quantization)
+//! and SLA targets. Presets reproduce the paper's three reference
+//! deployments (§7.1 colocated, §7.1 disaggregated MoE-Attention, §7.2
+//! production).
+
+mod toml_lite;
+
+pub use toml_lite::TomlValue;
+
+use crate::util::json::Json;
+
+/// Which NPU generation a pool of dies belongs to (§5.1 heterogeneous PD).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NpuKind {
+    /// Scale-up CloudMatrix 910C die (UB fabric member).
+    Ascend910C,
+    /// Scale-out 910B server die (RoCE/VPC only; prefill-eligible).
+    Ascend910B,
+}
+
+/// Decode DP load-balancing policy (§4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeLbPolicy {
+    /// Round-robin over DP groups (baseline/ablation).
+    RoundRobin,
+    /// Paper policy: exclude full groups, pick lowest KV usage with
+    /// reservation for long outputs.
+    LeastKv,
+}
+
+/// Expert-balancing mode for Fig 11b.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EplbMode {
+    /// Original token-to-expert assignment (MoE-Native).
+    Native,
+    /// Force-uniform routing (MoE-Avg-Routing upper bound).
+    AvgRouting,
+    /// Redundancy-based EPLB (MoE-Balanced, the paper's system).
+    Balanced,
+}
+
+#[derive(Clone, Debug)]
+pub struct SlaConfig {
+    /// Time-to-first-token SLA (§7.2: < 2 s).
+    pub ttft_ms: f64,
+    /// Time-per-output-token SLA (§7.2: 35 ms in most cases).
+    pub tpot_ms: f64,
+}
+
+impl Default for SlaConfig {
+    fn default() -> Self {
+        Self { ttft_ms: 2000.0, tpot_ms: 35.0 }
+    }
+}
+
+/// Parallelism + placement layout for one deployment.
+#[derive(Clone, Debug)]
+pub struct DeploymentConfig {
+    /// Servers used (each has `chips_per_server` chips, 2 dies per chip).
+    pub n_servers: usize,
+    pub chips_per_server: usize,
+    /// Expert-parallel world size (dies running experts).
+    pub ep_size: usize,
+    /// Routed + shared experts (DeepSeek: 256 + 32 → EP288).
+    pub n_routed_experts: usize,
+    pub n_shared_experts: usize,
+    /// Redundancy slots per expert NPU for EPLB replicas (§4.5).
+    pub redundancy_slots: usize,
+    /// Attention data-parallel groups.
+    pub dp_groups: usize,
+    /// DP domains for disaggregated MoE-Attention (§5.2); 1 = colocated.
+    pub dp_domains: usize,
+    /// Per-die decode batch size.
+    pub batch_per_die: usize,
+    /// Microbatches per domain (intra-DP parallelism, §5.2).
+    pub microbatches: usize,
+    /// Attention TP (prefill uses 4, decode 1 — §5.1).
+    pub tp_attention: usize,
+    /// True = MoE and attention on separate dies (§5.2).
+    pub disaggregated_moe_attention: bool,
+    /// Dies running attention when disaggregated.
+    pub attention_dies: usize,
+}
+
+impl DeploymentConfig {
+    pub fn total_dies(&self) -> usize {
+        self.n_servers * self.chips_per_server * 2
+    }
+
+    /// §7.1 colocated: 18 servers, 288 dies, DP288/EP288, batch 60.
+    pub fn colocated_dp288() -> Self {
+        Self {
+            n_servers: 18,
+            chips_per_server: 8,
+            ep_size: 288,
+            n_routed_experts: 256,
+            n_shared_experts: 32,
+            redundancy_slots: 1,
+            dp_groups: 288,
+            dp_domains: 1,
+            batch_per_die: 60,
+            microbatches: 1,
+            tp_attention: 1,
+            disaggregated_moe_attention: false,
+            attention_dies: 288,
+        }
+    }
+
+    /// §7.1 disaggregated MoE-Attention: full SuperPod, 768 dies:
+    /// 288 EP + 480 attention in 3 DP domains × 160 DP groups, batch 96.
+    pub fn disagg_768() -> Self {
+        Self {
+            n_servers: 48,
+            chips_per_server: 8,
+            ep_size: 288,
+            n_routed_experts: 256,
+            n_shared_experts: 32,
+            redundancy_slots: 1,
+            dp_groups: 480,
+            dp_domains: 3,
+            batch_per_die: 96,
+            microbatches: 2,
+            tp_attention: 1,
+            disaggregated_moe_attention: true,
+            attention_dies: 480,
+        }
+    }
+
+    /// §7.2 production: 16 servers — 4 prefill TEs (DP8/EP32 each, 2 servers
+    /// each) + 1 decode TE (8 servers, DP128/EP128).
+    pub fn production_decode_te() -> Self {
+        Self {
+            n_servers: 8,
+            chips_per_server: 8,
+            ep_size: 128,
+            n_routed_experts: 112,
+            n_shared_experts: 16,
+            redundancy_slots: 1,
+            dp_groups: 128,
+            dp_domains: 1,
+            batch_per_die: 48,
+            microbatches: 1,
+            tp_attention: 1,
+            disaggregated_moe_attention: false,
+            attention_dies: 128,
+        }
+    }
+
+    pub fn production_prefill_te() -> Self {
+        Self {
+            n_servers: 2,
+            chips_per_server: 8,
+            ep_size: 32,
+            n_routed_experts: 28,
+            n_shared_experts: 4,
+            redundancy_slots: 1,
+            dp_groups: 8,
+            dp_domains: 1,
+            batch_per_die: 1,
+            microbatches: 1,
+            tp_attention: 4,
+            disaggregated_moe_attention: false,
+            attention_dies: 32,
+        }
+    }
+}
+
+/// Serving-engine knobs (FlowServe, §4).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    pub decode_lb: DecodeLbPolicy,
+    pub eplb_mode: EplbMode,
+    /// §4.4 jitter mitigations.
+    pub core_pinning: bool,
+    pub pta_caching: bool,
+    pub manual_gc: bool,
+    /// MTP draft depth (0 = off; paper ships 1, studies 2).
+    pub mtp_layers: usize,
+    /// MTP acceptance-rate model per layer (§7.1: ~0.9 for MTP-1).
+    pub mtp_accept: Vec<f64>,
+    pub int8: bool,
+    /// Max queued requests per DP before backpressure.
+    pub dp_queue_limit: usize,
+    /// KV reservation headroom for long outputs (§4.3 decode LB).
+    pub kv_reserve_frac: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            decode_lb: DecodeLbPolicy::LeastKv,
+            eplb_mode: EplbMode::Balanced,
+            core_pinning: true,
+            pta_caching: true,
+            manual_gc: true,
+            mtp_layers: 1,
+            mtp_accept: vec![0.90, 0.60],
+            int8: true,
+            dp_queue_limit: 256,
+            kv_reserve_frac: 0.1,
+        }
+    }
+}
+
+/// Top-level config.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub deployment: DeploymentConfig,
+    pub serving: ServingConfig,
+    pub sla: SlaConfig,
+    pub seed: u64,
+    /// Directory holding manifest.json/weights.bin/*.hlo.txt.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            deployment: DeploymentConfig::colocated_dp288(),
+            serving: ServingConfig::default(),
+            sla: SlaConfig::default(),
+            seed: 0x2025_0710,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load overrides from a TOML-lite file onto a preset base.
+    pub fn from_file(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let toml = toml_lite::parse(&text)?;
+        let mut cfg = match toml.get_str("preset").unwrap_or("colocated_dp288") {
+            "disagg_768" => Config {
+                deployment: DeploymentConfig::disagg_768(),
+                ..Default::default()
+            },
+            "production" => Config {
+                deployment: DeploymentConfig::production_decode_te(),
+                ..Default::default()
+            },
+            _ => Config::default(),
+        };
+        if let Some(v) = toml.get_u64("seed") {
+            cfg.seed = v;
+        }
+        if let Some(v) = toml.get_str("artifacts_dir") {
+            cfg.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = toml.get_u64("deployment.batch_per_die") {
+            cfg.deployment.batch_per_die = v as usize;
+        }
+        if let Some(v) = toml.get_u64("deployment.dp_groups") {
+            cfg.deployment.dp_groups = v as usize;
+        }
+        if let Some(v) = toml.get_u64("deployment.dp_domains") {
+            cfg.deployment.dp_domains = v as usize;
+        }
+        if let Some(v) = toml.get_u64("deployment.ep_size") {
+            cfg.deployment.ep_size = v as usize;
+        }
+        if let Some(v) = toml.get_u64("serving.mtp_layers") {
+            cfg.serving.mtp_layers = v as usize;
+        }
+        if let Some(v) = toml.get_bool("serving.int8") {
+            cfg.serving.int8 = v;
+        }
+        if let Some(v) = toml.get_bool("serving.manual_gc") {
+            cfg.serving.manual_gc = v;
+        }
+        if let Some(v) = toml.get_str("serving.decode_lb") {
+            cfg.serving.decode_lb = match v {
+                "round_robin" => DecodeLbPolicy::RoundRobin,
+                _ => DecodeLbPolicy::LeastKv,
+            };
+        }
+        if let Some(v) = toml.get_f64("sla.ttft_ms") {
+            cfg.sla.ttft_ms = v;
+        }
+        if let Some(v) = toml.get_f64("sla.tpot_ms") {
+            cfg.sla.tpot_ms = v;
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        crate::util::json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("dp_groups", Json::Num(self.deployment.dp_groups as f64)),
+            ("ep_size", Json::Num(self.deployment.ep_size as f64)),
+            ("dp_domains", Json::Num(self.deployment.dp_domains as f64)),
+            ("batch_per_die", Json::Num(self.deployment.batch_per_die as f64)),
+            ("mtp_layers", Json::Num(self.serving.mtp_layers as f64)),
+            ("int8", Json::Bool(self.serving.int8)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_numbers() {
+        let c = DeploymentConfig::colocated_dp288();
+        assert_eq!(c.total_dies(), 288);
+        assert_eq!(c.batch_per_die * c.dp_groups, 17_280); // §7.1 global batch
+
+        let d = DeploymentConfig::disagg_768();
+        assert_eq!(d.total_dies(), 768);
+        assert_eq!(d.attention_dies + d.ep_size, 768);
+        assert_eq!(d.dp_groups / d.dp_domains, 160);
+        assert_eq!(d.batch_per_die * d.dp_groups, 46_080); // §7.1 global batch
+
+        let p = DeploymentConfig::production_decode_te();
+        assert_eq!(p.dp_groups, 128);
+        assert_eq!(p.ep_size, 128);
+    }
+
+    #[test]
+    fn config_file_overrides() {
+        let dir = std::env::temp_dir().join("xds_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.toml");
+        std::fs::write(
+            &path,
+            "preset = \"disagg_768\"\nseed = 7\n\n[deployment]\nbatch_per_die = 32\n\n[serving]\nmtp_layers = 2\nint8 = false\n\n[sla]\ntpot_ms = 50.0\n",
+        )
+        .unwrap();
+        let cfg = Config::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.deployment.disaggregated_moe_attention);
+        assert_eq!(cfg.deployment.batch_per_die, 32);
+        assert_eq!(cfg.serving.mtp_layers, 2);
+        assert!(!cfg.serving.int8);
+        assert_eq!(cfg.sla.tpot_ms, 50.0);
+    }
+}

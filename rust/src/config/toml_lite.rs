@@ -1,0 +1,146 @@
+//! TOML-lite parser (offline stand-in for the `toml` crate).
+//!
+//! Supports the subset used by xdeepserve config files:
+//! `[section]` / `[section.sub]` headers, `key = value` with string, integer,
+//! float, and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    /// Flattened `section.key` → value map.
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        match self.get(key) {
+            Some(TomlValue::Int(i)) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        doc.entries.insert(key, parse_value(v.trim(), lineno + 1)?);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' outside quotes ends the line
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> anyhow::Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    anyhow::bail!("line {lineno}: cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "# top\ntitle = \"xds\"\nseed = 42\n[serving]\nint8 = true\nfrac = 0.5 # inline\n[a.b]\nx = -3\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("title"), Some("xds"));
+        assert_eq!(doc.get_u64("seed"), Some(42));
+        assert_eq!(doc.get_bool("serving.int8"), Some(true));
+        assert_eq!(doc.get_f64("serving.frac"), Some(0.5));
+        assert_eq!(doc.get("a.b.x"), Some(&TomlValue::Int(-3)));
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(parse("key").is_err());
+        assert!(parse("[sec\nk = 1").is_err());
+        assert!(parse("k = what").is_err());
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+}

@@ -1,0 +1,78 @@
+//! Continuous batching + dynamic microbatching.
+//!
+//! Decode runs static-shape graph-mode buckets (§2.3), so the batcher packs
+//! running sequences into the smallest bucket ≥ batch each iteration
+//! (continuous batching: new sequences join between iterations, finished
+//! ones leave). Dynamic microbatching (§4.1/§5.2) splits an iteration's
+//! batch into `m` microbatches to overlap compute with A2E/E2A
+//! communication in disaggregated deployments.
+
+/// Pick the bucket for `n` running sequences from the compiled bucket list.
+pub fn bucket_for(buckets: &[usize], n: usize) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= n)
+}
+
+/// Split `n` items into `m` microbatches with sizes as equal as possible
+/// (paper: "two microbatches per domain, each of size 96").
+pub fn microbatch_sizes(n: usize, m: usize) -> Vec<usize> {
+    if n == 0 || m == 0 {
+        return vec![];
+    }
+    let m = m.min(n);
+    let base = n / m;
+    let extra = n % m;
+    (0..m).map(|i| base + usize::from(i < extra)).collect()
+}
+
+/// Padding waste of bucketed execution — the quantity the bucket set trades
+/// against compile count (§Perf L2 consideration).
+pub fn padding_waste(buckets: &[usize], n: usize) -> usize {
+    bucket_for(buckets, n).map(|b| b - n).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    const BUCKETS: &[usize] = &[1, 2, 4, 8];
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(BUCKETS, 1), Some(1));
+        assert_eq!(bucket_for(BUCKETS, 3), Some(4));
+        assert_eq!(bucket_for(BUCKETS, 8), Some(8));
+        assert_eq!(bucket_for(BUCKETS, 9), None);
+    }
+
+    #[test]
+    fn microbatches_cover_everything() {
+        assert_eq!(microbatch_sizes(96 * 2, 2), vec![96, 96]);
+        assert_eq!(microbatch_sizes(7, 2), vec![4, 3]);
+        assert_eq!(microbatch_sizes(3, 8), vec![1, 1, 1]);
+        assert!(microbatch_sizes(0, 2).is_empty());
+    }
+
+    #[test]
+    fn prop_microbatch_invariants() {
+        check("microbatch", PropConfig::default(), |rng, size| {
+            let n = rng.index(size * 8 + 2);
+            let m = rng.index(8) + 1;
+            let sizes = microbatch_sizes(n, m);
+            prop_assert!(sizes.iter().sum::<usize>() == n, "must cover all");
+            if !sizes.is_empty() {
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                prop_assert!(max - min <= 1, "must be balanced: {sizes:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_waste_accounting() {
+        assert_eq!(padding_waste(BUCKETS, 3), 1);
+        assert_eq!(padding_waste(BUCKETS, 8), 0);
+    }
+}

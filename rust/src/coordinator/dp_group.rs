@@ -1,0 +1,296 @@
+//! A self-contained DP group (§4.2): queue → prefill → continuous-batched
+//! decode → output shortcut, with its own KV pool and no cross-DP calls.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::coordinator::decode_sched::GroupStatus;
+use crate::coordinator::output::OutputEvent;
+use crate::coordinator::request::{RequestState, ServeRequest};
+use crate::kvcache::BlockPool;
+use crate::model::{SeqKv, ServedModel};
+use crate::mtp;
+
+/// A sequence resident in the decode batch.
+pub struct SeqState {
+    pub req: ServeRequest,
+    pub kv: SeqKv,
+    /// Next token to feed (last sampled).
+    pub feed: i32,
+    pub hidden: Vec<f32>,
+}
+
+/// Snapshot the TE-shell reads (§4.3).
+#[derive(Clone, Copy, Debug)]
+pub struct DpGroupStatus {
+    pub id: usize,
+    pub queued: usize,
+    pub running: usize,
+    pub batch_limit: usize,
+    pub kv_usage: f64,
+    pub healthy: bool,
+}
+
+pub struct DpGroup {
+    pub id: usize,
+    pub batch_limit: usize,
+    pub queue: VecDeque<ServeRequest>,
+    pub running: Vec<SeqState>,
+    pub pool: BlockPool,
+    pub finished: Vec<ServeRequest>,
+    pub out_tx: Option<mpsc::Sender<OutputEvent>>,
+    pub int8: bool,
+    pub use_mtp: bool,
+    pub healthy: bool,
+    /// MTP acceptance bookkeeping.
+    pub mtp_drafts: u64,
+    pub mtp_accepted: u64,
+    pub iterations: u64,
+}
+
+impl DpGroup {
+    pub fn new(id: usize, batch_limit: usize, kv_blocks: usize) -> Self {
+        Self {
+            id,
+            batch_limit,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            pool: BlockPool::new(kv_blocks),
+            finished: Vec::new(),
+            out_tx: None,
+            int8: false,
+            use_mtp: false,
+            healthy: true,
+            mtp_drafts: 0,
+            mtp_accepted: 0,
+            iterations: 0,
+        }
+    }
+
+    pub fn status(&self) -> DpGroupStatus {
+        DpGroupStatus {
+            id: self.id,
+            queued: self.queue.len(),
+            running: self.running.len(),
+            batch_limit: self.batch_limit,
+            kv_usage: self.pool.usage().fraction(),
+            healthy: self.healthy,
+        }
+    }
+
+    pub fn as_group_status(&self) -> GroupStatus {
+        GroupStatus {
+            group: self.id,
+            // §4.3: the TE-shell tracks the *pending* count — updated on
+            // dispatch and completion — so queued-but-not-yet-admitted
+            // requests count against the slot limit and break KV ties.
+            running: self.running.len() + self.queue.len(),
+            batch_limit: self.batch_limit,
+            kv_usage: self.pool.usage().fraction(),
+            healthy: self.healthy,
+        }
+    }
+
+    pub fn enqueue(&mut self, req: ServeRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Inject a sequence whose prefill (and KV) was produced elsewhere —
+    /// the PD-disaggregated entry path (§5.1 step 8).
+    pub fn inject_prefilled(
+        &mut self,
+        mut req: ServeRequest,
+        kv: SeqKv,
+        first_token: i32,
+        hidden: Vec<f32>,
+        now_ns: u64,
+    ) -> Result<()> {
+        self.pool
+            .admit(req.id, kv.len, req.max_new_tokens)?;
+        req.state = RequestState::Decoding;
+        req.generated.push(first_token);
+        req.timing.first_token_ns = now_ns;
+        req.timing.prefill_done_ns = now_ns;
+        req.timing.tokens_out = 1;
+        self.emit(OutputEvent::Token { req_id: req.id, token: first_token });
+        self.running.push(SeqState { req, kv, feed: first_token, hidden });
+        Ok(())
+    }
+
+    fn emit(&self, ev: OutputEvent) {
+        if let Some(tx) = &self.out_tx {
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Admit queued requests (colocated mode: run prefill locally).
+    pub fn admit_from_queue(&mut self, model: &ServedModel, now_ns: u64) -> Result<usize> {
+        let mut admitted = 0;
+        while self.running.len() < self.batch_limit {
+            let Some(req) = self.queue.front() else { break };
+            if !self.pool.can_admit(req.prompt_tokens.len(), req.max_new_tokens) {
+                break; // backpressure
+            }
+            let mut req = self.queue.pop_front().unwrap();
+            req.state = RequestState::Prefilling;
+            let pf = model.prefill(&req.prompt_tokens)?;
+            self.pool.admit(req.id, req.prompt_tokens.len(), req.max_new_tokens)?;
+            let first = pf.logits.argmax_rows()?[0] as i32;
+            req.state = RequestState::Decoding;
+            req.generated.push(first);
+            req.timing.prefill_done_ns = now_ns;
+            req.timing.first_token_ns = now_ns;
+            req.timing.tokens_out = 1;
+            self.emit(OutputEvent::Token { req_id: req.id, token: first });
+            self.running.push(SeqState { req, kv: pf.kv, feed: first, hidden: pf.hidden });
+            admitted += 1;
+        }
+        Ok(admitted)
+    }
+
+    /// One decode iteration over the whole running set (continuous
+    /// batching; chunks of the largest compiled bucket). Returns tokens
+    /// generated. `now_ns` stamps finish times.
+    pub fn decode_iteration(&mut self, model: &ServedModel, now_ns: u64) -> Result<usize> {
+        if self.running.is_empty() {
+            return Ok(0);
+        }
+        self.iterations += 1;
+        let max_bucket = *model
+            .engine
+            .manifest
+            .model
+            .decode_buckets
+            .last()
+            .unwrap_or(&8);
+        let mut produced = 0usize;
+
+        let mut chunk_start = 0usize;
+        while chunk_start < self.running.len() {
+            let chunk_end = (chunk_start + max_bucket).min(self.running.len());
+            let chunk = &mut self.running[chunk_start..chunk_end];
+            if self.use_mtp {
+                let mut specs: Vec<mtp::SpecSeq> = chunk
+                    .iter_mut()
+                    .map(|s| mtp::SpecSeq {
+                        feed: s.feed,
+                        hidden: s.hidden.clone(),
+                        kv: &mut s.kv,
+                    })
+                    .collect();
+                let outs = mtp::spec_iteration(model, &mut specs, self.int8)?;
+                drop(specs);
+                for (s, o) in chunk.iter_mut().zip(outs) {
+                    self.mtp_drafts += 1;
+                    if o.draft_accepted {
+                        self.mtp_accepted += 1;
+                    }
+                    for t in &o.tokens {
+                        s.req.generated.push(*t);
+                        produced += 1;
+                    }
+                    s.feed = o.next_feed;
+                    s.hidden = o.hidden;
+                }
+            } else {
+                let mut entries: Vec<(i32, &mut SeqKv)> =
+                    chunk.iter_mut().map(|s| (s.feed, &mut s.kv)).collect();
+                let outs = model.decode_batch(&mut entries, self.int8)?;
+                drop(entries);
+                for (s, o) in chunk.iter_mut().zip(outs) {
+                    let t = o
+                        .logits_row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap_or(0);
+                    s.req.generated.push(t);
+                    s.feed = t;
+                    s.hidden = o.hidden_row;
+                    produced += 1;
+                }
+            }
+            chunk_start = chunk_end;
+        }
+
+        // token accounting + emission + retirement
+        let drained: Vec<SeqState> = self.running.drain(..).collect();
+        let mut still_running = Vec::with_capacity(drained.len());
+        for mut s in drained {
+            let new_tokens = s.req.generated.len().saturating_sub(
+                s.req.timing.tokens_out as usize,
+            );
+            for t in s.req.generated[s.req.generated.len() - new_tokens..].to_vec() {
+                self.emit(OutputEvent::Token { req_id: s.req.id, token: t });
+                let _ = self.pool.append_token(s.req.id);
+            }
+            s.req.timing.tokens_out = s.req.generated.len() as u64;
+            let out_done = s.req.generated.len() >= s.req.max_new_tokens;
+            let kv_full = s.kv.len + 1 >= model.max_seq();
+            if out_done || kv_full {
+                s.req.state = RequestState::Done;
+                s.req.timing.done_ns = now_ns;
+                self.pool.release(s.req.id)?;
+                self.emit(OutputEvent::Finished { req_id: s.req.id });
+                self.finished.push(s.req);
+            } else {
+                still_running.push(s);
+            }
+        }
+        self.running = still_running;
+        Ok(produced)
+    }
+
+    pub fn mtp_acceptance(&self) -> f64 {
+        if self.mtp_drafts == 0 {
+            0.0
+        } else {
+            self.mtp_accepted as f64 / self.mtp_drafts as f64
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Real-execution DpGroup tests live in rust/tests/integration_serving.rs
+    // (they need compiled artifacts). Here: pure state-machine checks.
+    use super::*;
+
+    #[test]
+    fn status_reflects_queue_and_pool() {
+        let mut g = DpGroup::new(3, 8, 64);
+        assert!(g.is_idle());
+        g.enqueue(ServeRequest::new(1, vec![256, 1], 4, 0));
+        let st = g.status();
+        assert_eq!(st.queued, 1);
+        assert_eq!(st.running, 0);
+        assert_eq!(st.id, 3);
+        assert!(st.healthy);
+        assert!(!g.is_idle());
+    }
+
+    #[test]
+    fn inject_prefilled_tracks_pool_and_emits() {
+        let (tx, rx) = mpsc::channel();
+        let mut g = DpGroup::new(0, 8, 64);
+        g.out_tx = Some(tx);
+        let mut kv = SeqKv::empty(4, 160, 32, 16);
+        kv.len = 10;
+        let req = ServeRequest::new(9, vec![0; 10], 4, 100);
+        g.inject_prefilled(req, kv, 42, vec![0.0; 128], 555).unwrap();
+        assert_eq!(g.running.len(), 1);
+        assert!(g.pool.usage().used_blocks > 0);
+        assert_eq!(
+            rx.try_recv().unwrap(),
+            OutputEvent::Token { req_id: 9, token: 42 }
+        );
+        assert_eq!(g.running[0].req.timing.first_token_ns, 555);
+    }
+}

@@ -1,0 +1,20 @@
+//! FlowServe at SuperPod scale (DESIGN.md S5–S7, paper §4).
+//!
+//! Decentralized architecture: each **DP group** is a self-contained stack
+//! (scheduler, executor, KV pool, output handling) with no cross-DP
+//! communication; the **TE-shell** is limited to the three §4.2 duties —
+//! dispatching requests across DPs, triggering expert load balancing, and
+//! coordinating health checks.
+
+pub mod request;
+pub mod dp_group;
+pub mod te_shell;
+pub mod prefill_sched;
+pub mod decode_sched;
+pub mod batching;
+pub mod gc;
+pub mod output;
+
+pub use dp_group::{DpGroup, DpGroupStatus};
+pub use request::{RequestState, ServeRequest};
+pub use te_shell::TeShell;

@@ -1,0 +1,129 @@
+//! Output shortcutting (§4.2): each DP master spawns a dedicated child
+//! handler for output processing — detokenization and stream parsing — and
+//! relays results directly to the frontend, bypassing the TE-shell so
+//! response handling is fully decentralized.
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::model::Tokenizer;
+
+/// One streamed output event from a DP group.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutputEvent {
+    Token { req_id: u64, token: i32 },
+    Finished { req_id: u64 },
+    /// Terminates the handler thread (sent by OutputShortcut::drop; DP
+    /// groups may still hold senders — their sends error out harmlessly).
+    Shutdown,
+}
+
+/// Parsed, frontend-ready message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FrontendMsg {
+    Chunk { req_id: u64, text: String },
+    Done { req_id: u64, full_text: String },
+}
+
+/// The child output handler: owns the detokenizer state per request and
+/// runs on its own thread (the "separate child process" of §4.2).
+pub struct OutputShortcut {
+    tx: mpsc::Sender<OutputEvent>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl OutputShortcut {
+    /// `sink` receives frontend messages (in order, per request).
+    pub fn spawn(tokenizer: Tokenizer, sink: mpsc::Sender<FrontendMsg>) -> Self {
+        let (tx, rx) = mpsc::channel::<OutputEvent>();
+        let handle = thread::spawn(move || {
+            use std::collections::HashMap;
+            let mut bufs: HashMap<u64, Vec<i32>> = HashMap::new();
+            while let Ok(ev) = rx.recv() {
+                match ev {
+                    OutputEvent::Shutdown => break,
+                    OutputEvent::Token { req_id, token } => {
+                        bufs.entry(req_id).or_default().push(token);
+                        let text = tokenizer.decode(&[token]);
+                        if !text.is_empty() {
+                            let _ = sink.send(FrontendMsg::Chunk { req_id, text });
+                        }
+                    }
+                    OutputEvent::Finished { req_id } => {
+                        let toks = bufs.remove(&req_id).unwrap_or_default();
+                        let _ = sink.send(FrontendMsg::Done {
+                            req_id,
+                            full_text: tokenizer.decode(&toks),
+                        });
+                    }
+                }
+            }
+        });
+        Self { tx, handle: Some(handle) }
+    }
+
+    pub fn sender(&self) -> mpsc::Sender<OutputEvent> {
+        self.tx.clone()
+    }
+}
+
+impl Drop for OutputShortcut {
+    fn drop(&mut self) {
+        // Explicit shutdown: DP groups may still hold cloned senders, so
+        // waiting for all senders to drop would deadlock. The handler
+        // drains everything queued before the Shutdown marker.
+        let _ = self.tx.send(OutputEvent::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_chunks_then_done_in_order() {
+        let tk = Tokenizer::new(256, 257, 512);
+        let (sink_tx, sink_rx) = mpsc::channel();
+        let oc = OutputShortcut::spawn(tk, sink_tx);
+        let tx = oc.sender();
+        for t in [104i32, 105] {
+            tx.send(OutputEvent::Token { req_id: 7, token: t }).unwrap();
+        }
+        tx.send(OutputEvent::Finished { req_id: 7 }).unwrap();
+        let msgs: Vec<FrontendMsg> = (0..3).map(|_| sink_rx.recv().unwrap()).collect();
+        assert_eq!(msgs[0], FrontendMsg::Chunk { req_id: 7, text: "h".into() });
+        assert_eq!(msgs[1], FrontendMsg::Chunk { req_id: 7, text: "i".into() });
+        assert_eq!(msgs[2], FrontendMsg::Done { req_id: 7, full_text: "hi".into() });
+    }
+
+    #[test]
+    fn interleaved_requests_keep_per_request_order() {
+        let tk = Tokenizer::new(256, 257, 512);
+        let (sink_tx, sink_rx) = mpsc::channel();
+        let oc = OutputShortcut::spawn(tk, sink_tx);
+        let tx = oc.sender();
+        tx.send(OutputEvent::Token { req_id: 1, token: 97 }).unwrap();
+        tx.send(OutputEvent::Token { req_id: 2, token: 120 }).unwrap();
+        tx.send(OutputEvent::Token { req_id: 1, token: 98 }).unwrap();
+        tx.send(OutputEvent::Finished { req_id: 1 }).unwrap();
+        tx.send(OutputEvent::Finished { req_id: 2 }).unwrap();
+        let mut per_req: std::collections::HashMap<u64, String> = Default::default();
+        let mut done = 0;
+        while done < 2 {
+            match sink_rx.recv().unwrap() {
+                FrontendMsg::Chunk { req_id, text } => {
+                    per_req.entry(req_id).or_default().push_str(&text)
+                }
+                FrontendMsg::Done { req_id, full_text } => {
+                    assert_eq!(per_req.get(&req_id).cloned().unwrap_or_default(), full_text);
+                    done += 1;
+                }
+            }
+        }
+        assert_eq!(per_req[&1], "ab");
+        assert_eq!(per_req[&2], "x");
+    }
+}

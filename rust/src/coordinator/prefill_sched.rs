@@ -1,0 +1,186 @@
+//! Prefill DP load balancing: the single-level collaborative scheduler
+//! (§4.3 "Prefill DP Load Balancing").
+//!
+//! The paper's journey: a two-level design (route to a DP queue, local
+//! scheduling per DP) produced stragglers — one DP picks a short batch while
+//! another picks a long one, and every MoE dispatch barrier then waits for
+//! the longest. FlowServe instead keeps **all tokenized requests shared**, a
+//! leader (DP-0) gathers per-DP status each step, and assigns batches with a
+//! cost model (prefix-cache hit rate, sequence length) so concurrently
+//! scheduled batches have *similar total cost* — length-aware anti-straggler
+//! grouping. Both designs are implemented; the bench compares them.
+
+use crate::util::rng::Rng;
+
+/// A pending prefill item (already tokenized).
+#[derive(Clone, Debug)]
+pub struct PrefillItem {
+    pub req_id: u64,
+    pub tokens: usize,
+    /// Fraction of the prompt already in the prefix cache (RTC hit rate) —
+    /// cached tokens cost ~0.
+    pub prefix_cache_hit: f64,
+}
+
+impl PrefillItem {
+    /// Cost-model: effective tokens to compute.
+    pub fn cost(&self) -> f64 {
+        self.tokens as f64 * (1.0 - self.prefix_cache_hit).max(0.0)
+    }
+}
+
+/// Per-DP status gathered by the leader each step (all-gather in the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillDpStatus {
+    pub dp: usize,
+    pub busy_until_cost: f64,
+    pub healthy: bool,
+}
+
+/// Single-level collaborative assignment: sort pending by cost (longest
+/// first), assign each to the least-loaded healthy DP — classic LPT, which
+/// minimizes makespan spread and thus the dispatch-barrier wait.
+pub fn assign_collaborative(
+    pending: &mut Vec<PrefillItem>,
+    dps: &mut [PrefillDpStatus],
+    max_per_dp: usize,
+) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    pending.sort_by(|a, b| b.cost().partial_cmp(&a.cost()).unwrap());
+    let mut assigned_count = vec![0usize; dps.len()];
+    let mut rest = Vec::new();
+    for item in pending.drain(..) {
+        let slot = dps
+            .iter_mut()
+            .filter(|d| d.healthy)
+            .filter(|d| assigned_count[d.dp] < max_per_dp)
+            .min_by(|a, b| a.busy_until_cost.partial_cmp(&b.busy_until_cost).unwrap());
+        match slot {
+            Some(d) => {
+                d.busy_until_cost += item.cost();
+                assigned_count[d.dp] += 1;
+                out.push((item.req_id, d.dp));
+            }
+            None => rest.push(item),
+        }
+    }
+    *pending = rest;
+    out
+}
+
+/// Ablation: legacy two-level scheduling — route each request to a random DP
+/// queue at arrival; no global view.
+pub fn assign_two_level(
+    pending: &mut Vec<PrefillItem>,
+    dps: &mut [PrefillDpStatus],
+    max_per_dp: usize,
+    rng: &mut Rng,
+) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    let mut assigned_count = vec![0usize; dps.len()];
+    let mut rest = Vec::new();
+    for item in pending.drain(..) {
+        let pick = rng.index(dps.len());
+        if dps[pick].healthy && assigned_count[pick] < max_per_dp {
+            dps[pick].busy_until_cost += item.cost();
+            assigned_count[pick] += 1;
+            out.push((item.req_id, pick));
+        } else {
+            rest.push(item);
+        }
+    }
+    *pending = rest;
+    out
+}
+
+/// Straggler metric: max/mean of per-DP assigned cost — the quantity the
+/// MoE dispatch barrier turns into idle time.
+pub fn makespan_spread(dps: &[PrefillDpStatus]) -> f64 {
+    let costs: Vec<f64> = dps.iter().map(|d| d.busy_until_cost).collect();
+    let mean = costs.iter().sum::<f64>() / costs.len().max(1) as f64;
+    let max = costs.iter().fold(0.0f64, |a, b| a.max(*b));
+    if mean <= 1e-12 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(lens: &[usize]) -> Vec<PrefillItem> {
+        lens.iter()
+            .enumerate()
+            .map(|(i, &t)| PrefillItem { req_id: i as u64, tokens: t, prefix_cache_hit: 0.0 })
+            .collect()
+    }
+
+    fn dps(n: usize) -> Vec<PrefillDpStatus> {
+        (0..n)
+            .map(|dp| PrefillDpStatus { dp, busy_until_cost: 0.0, healthy: true })
+            .collect()
+    }
+
+    #[test]
+    fn collaborative_avoids_short_long_split() {
+        // two DPs; one 32K request and four 8K requests. Two-level can put
+        // 32K alone vs 4×8K queue imbalance; LPT yields 32K | 32K.
+        let mut pend = items(&[32_000, 8_000, 8_000, 8_000, 8_000]);
+        let mut d = dps(2);
+        let a = assign_collaborative(&mut pend, &mut d, 8);
+        assert_eq!(a.len(), 5);
+        let spread = makespan_spread(&d);
+        assert!(spread < 1.05, "spread {spread}");
+    }
+
+    #[test]
+    fn prefix_cache_hits_reduce_cost() {
+        let hot = PrefillItem { req_id: 0, tokens: 10_000, prefix_cache_hit: 0.9 };
+        let cold = PrefillItem { req_id: 1, tokens: 2_000, prefix_cache_hit: 0.0 };
+        assert!(hot.cost() < cold.cost());
+    }
+
+    #[test]
+    fn respects_per_dp_capacity() {
+        let mut pend = items(&[100; 10]);
+        let mut d = dps(2);
+        let a = assign_collaborative(&mut pend, &mut d, 3);
+        assert_eq!(a.len(), 6, "2 DPs x 3 slots");
+        assert_eq!(pend.len(), 4, "rest stays queued");
+    }
+
+    #[test]
+    fn unhealthy_dp_gets_nothing() {
+        let mut pend = items(&[10, 20, 30]);
+        let mut d = dps(2);
+        d[0].healthy = false;
+        let a = assign_collaborative(&mut pend, &mut d, 8);
+        assert!(a.iter().all(|(_, dp)| *dp == 1));
+    }
+
+    #[test]
+    fn collaborative_beats_two_level_on_spread() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut spread_collab = 0.0;
+        let mut spread_two = 0.0;
+        for trial in 0..20 {
+            let lens: Vec<usize> =
+                (0..24).map(|_| rng.lognormal(8.0, 1.2) as usize + 100).collect();
+            let mut p1 = items(&lens);
+            let mut d1 = dps(8);
+            assign_collaborative(&mut p1, &mut d1, 8);
+            spread_collab += makespan_spread(&d1);
+            let mut p2 = items(&lens);
+            let mut d2 = dps(8);
+            let mut r2 = crate::util::rng::Rng::new(trial);
+            assign_two_level(&mut p2, &mut d2, 8, &mut r2);
+            spread_two += makespan_spread(&d2);
+        }
+        assert!(
+            spread_collab < spread_two,
+            "collab {spread_collab} vs two-level {spread_two}"
+        );
+    }
+}

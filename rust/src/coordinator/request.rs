@@ -1,0 +1,71 @@
+//! The request/job/task model (§2.1): xDeepServe's serverless abstraction.
+//! A user *request* becomes a prefill *task* on a prefill TE and a decode
+//! *task* on a decode TE, linked by a KV-transfer job (§5.1).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    /// KV registered, waiting for the decode side to pull (§5.1 steps 3–7).
+    AwaitingTransfer,
+    Decoding,
+    Done,
+    Failed,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt_tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival_ns: u64,
+    pub state: RequestState,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    /// Chosen prefill/decode placements (TE index, DP index).
+    pub prefill_placement: Option<(usize, usize)>,
+    pub decode_placement: Option<(usize, usize)>,
+    pub timing: crate::metrics::RequestTiming,
+}
+
+impl ServeRequest {
+    pub fn new(id: u64, prompt_tokens: Vec<i32>, max_new_tokens: usize, arrival_ns: u64) -> Self {
+        Self {
+            id,
+            prompt_tokens,
+            max_new_tokens,
+            arrival_ns,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            prefill_placement: None,
+            decode_placement: None,
+            timing: crate::metrics::RequestTiming {
+                arrival_ns,
+                ..Default::default()
+            },
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, RequestState::Done | RequestState::Failed)
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt_tokens.len() + self.generated.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_flags() {
+        let mut r = ServeRequest::new(1, vec![256, 1, 2], 10, 0);
+        assert_eq!(r.state, RequestState::Queued);
+        assert!(!r.is_finished());
+        r.state = RequestState::Done;
+        assert!(r.is_finished());
+        assert_eq!(r.total_len(), 3);
+    }
+}

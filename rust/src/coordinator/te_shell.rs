@@ -1,0 +1,149 @@
+//! TE-shell: the *limited* centralized orchestrator (§4.2).
+//!
+//! Exactly three responsibilities — dispatching requests across DPs (§4.3),
+//! triggering expert load balancing (§4.5), and coordinating health checks
+//! (§6.1). Everything else (scheduling, output handling, caching) lives
+//! inside the DP groups; request dispatch happens **once per request**,
+//! which is what keeps the shell off the scaling-critical path.
+
+use anyhow::Result;
+
+use crate::config::DecodeLbPolicy;
+use crate::coordinator::decode_sched::{choose_group, GroupStatus};
+use crate::coordinator::dp_group::DpGroup;
+use crate::coordinator::request::ServeRequest;
+
+pub struct TeShell {
+    pub policy: DecodeLbPolicy,
+    rr_counter: usize,
+    /// Requests waiting because every DP was full (backpressure).
+    pub waiting: Vec<ServeRequest>,
+    pub dispatched: u64,
+    /// EPLB trigger cadence (iterations between re-balances, §4.5 "e.g.
+    /// every minute" → iteration-count proxy here).
+    pub eplb_interval: u64,
+    iterations_since_eplb: u64,
+}
+
+impl TeShell {
+    pub fn new(policy: DecodeLbPolicy) -> Self {
+        Self {
+            policy,
+            rr_counter: 0,
+            waiting: Vec::new(),
+            dispatched: 0,
+            eplb_interval: 512,
+            iterations_since_eplb: 0,
+        }
+    }
+
+    /// Dispatch one request to a DP group (or park it under backpressure).
+    pub fn dispatch(&mut self, req: ServeRequest, groups: &mut [DpGroup]) -> Result<()> {
+        let statuses: Vec<GroupStatus> = groups.iter().map(|g| g.as_group_status()).collect();
+        match choose_group(&statuses, self.policy, &mut self.rr_counter) {
+            Some(gid) => {
+                let g = groups.iter_mut().find(|g| g.id == gid).unwrap();
+                g.enqueue(req);
+                self.dispatched += 1;
+            }
+            None => self.waiting.push(req),
+        }
+        Ok(())
+    }
+
+    /// Retry parked requests (called each scheduling tick).
+    pub fn drain_waiting(&mut self, groups: &mut [DpGroup]) -> Result<usize> {
+        let parked = std::mem::take(&mut self.waiting);
+        let n = parked.len();
+        for req in parked {
+            self.dispatch(req, groups)?;
+        }
+        Ok(n.saturating_sub(self.waiting.len()))
+    }
+
+    /// Health-check sweep (§6.1 responsibility 3): returns ids of groups
+    /// that failed their heartbeat predicate.
+    pub fn health_sweep<F: Fn(&DpGroup) -> bool>(
+        &self,
+        groups: &mut [DpGroup],
+        responsive: F,
+    ) -> Vec<usize> {
+        let mut failed = Vec::new();
+        for g in groups.iter_mut() {
+            let ok = responsive(g);
+            if !ok {
+                g.healthy = false;
+                failed.push(g.id);
+            }
+        }
+        failed
+    }
+
+    /// EPLB trigger (§4.2 responsibility 2): true when a re-balance is due.
+    pub fn tick_eplb(&mut self) -> bool {
+        self.iterations_since_eplb += 1;
+        if self.iterations_since_eplb >= self.eplb_interval {
+            self.iterations_since_eplb = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups(n: usize, limit: usize) -> Vec<DpGroup> {
+        (0..n).map(|i| DpGroup::new(i, limit, 1024)).collect()
+    }
+
+    fn req(id: u64) -> ServeRequest {
+        ServeRequest::new(id, vec![256, 1, 2], 4, 0)
+    }
+
+    #[test]
+    fn dispatch_lands_on_least_loaded() {
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        let mut gs = groups(3, 4);
+        // occupy group 0's pool a bit
+        gs[0].pool.admit(99, 64, 0).unwrap();
+        shell.dispatch(req(1), &mut gs).unwrap();
+        assert_eq!(gs[0].queue.len() + gs[1].queue.len() + gs[2].queue.len(), 1);
+        assert_eq!(gs[0].queue.len(), 0, "loaded group skipped");
+    }
+
+    #[test]
+    fn backpressure_parks_requests_and_drains_later() {
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        let mut gs = groups(1, 0); // zero slots → always full
+        shell.dispatch(req(1), &mut gs).unwrap();
+        assert_eq!(shell.waiting.len(), 1);
+        // capacity appears
+        gs[0].batch_limit = 2;
+        shell.drain_waiting(&mut gs).unwrap();
+        assert_eq!(shell.waiting.len(), 0);
+        assert_eq!(gs[0].queue.len(), 1);
+    }
+
+    #[test]
+    fn health_sweep_marks_unresponsive() {
+        let shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        let mut gs = groups(3, 4);
+        let failed = shell.health_sweep(&mut gs, |g| g.id != 1);
+        assert_eq!(failed, vec![1]);
+        assert!(!gs[1].healthy);
+        assert!(gs[0].healthy && gs[2].healthy);
+    }
+
+    #[test]
+    fn eplb_trigger_cadence() {
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        shell.eplb_interval = 3;
+        assert!(!shell.tick_eplb());
+        assert!(!shell.tick_eplb());
+        assert!(shell.tick_eplb());
+        assert!(!shell.tick_eplb());
+    }
+}

@@ -1,0 +1,259 @@
+//! Colocated MoE-Attention decode model (the §7.1 DP288/EP288 evaluation
+//! deployment — Fig 16's second evolution stage, before MoE-Attention
+//! disaggregation).
+//!
+//! One decode iteration per DP die: per layer MLA → dispatch (all-to-all
+//! barrier, absorbs MLA variance) → expert GEMMs → combine (absorbs expert
+//! imbalance) → misc. 61 layers + MTP forward + two sampling passes + the
+//! ~2 ms scheduling bubble. Calibrated to Fig 20: 93 ms iteration, 50 ms
+//! effective TPOT at 90% MTP acceptance, dispatch avg 234 µs (min 185 /
+//! max 1231), combine avg 312 µs (min 165 / max 2939) — max ≈ 10× min.
+
+use crate::config::EplbMode;
+use crate::coordinator::gc::{sample_barrier_jitter, GcMitigation};
+use crate::fabric::engines::ComputeModel;
+use crate::fabric::FabricParams;
+use crate::util::rng::Rng;
+use crate::util::stats::Histogram;
+use crate::workload::expert_skew::skewed_expert_counts;
+use crate::xccl::a2a::{A2aConfig, A2aEngine};
+
+#[derive(Clone, Debug)]
+pub struct ColocatedDeployment {
+    pub dp_groups: usize,
+    pub ep_size: usize,
+    pub batch_per_die: usize,
+    pub n_layers: usize,
+    pub n_dense_layers: usize,
+    pub compute: ComputeModel,
+    pub a2a: A2aConfig,
+    pub gc: GcMitigation,
+    pub eplb: EplbMode,
+    pub mtp_accept: f64,
+    /// Per-DP MLA jitter (lognormal sigma) + rare straggler mixture.
+    pub mla_sigma: f64,
+    pub straggler_p: f64,
+    pub straggler_scale: (f64, f64),
+}
+
+impl ColocatedDeployment {
+    /// §7.1 colocated evaluation setup (18 servers, 288 dies).
+    pub fn paper() -> Self {
+        Self {
+            dp_groups: 288,
+            ep_size: 288,
+            batch_per_die: 60,
+            n_layers: 61,
+            n_dense_layers: 3,
+            compute: ComputeModel::default(),
+            a2a: A2aConfig::deepseek(288),
+            gc: GcMitigation::all_on(),
+            eplb: EplbMode::Balanced,
+            mtp_accept: 0.90,
+            mla_sigma: 0.08,
+            straggler_p: 1.5e-5,
+            straggler_scale: (2.0, 4.0),
+        }
+    }
+
+    /// §7.2 production decode TE (8 servers, DP128/EP128, batch 48).
+    pub fn production() -> Self {
+        Self {
+            dp_groups: 128,
+            ep_size: 128,
+            batch_per_die: 48,
+            a2a: A2aConfig::deepseek(128),
+            ..Self::paper()
+        }
+    }
+
+    fn mla_jitter(&self, rng: &mut Rng) -> f64 {
+        if rng.chance(self.straggler_p) {
+            let (lo, hi) = self.straggler_scale;
+            lo + rng.f64() * (hi - lo)
+        } else {
+            rng.lognormal(0.0, self.mla_sigma)
+        }
+    }
+
+    /// Residual per-expert-NPU imbalance ratios after routing policy.
+    fn imbalance_ratios(&self, rng: &mut Rng) -> Vec<f64> {
+        let tokens = 100_000u64;
+        let counts = skewed_expert_counts(rng, self.ep_size, tokens, crate::workload::expert_skew::FIG11A_ALPHA);
+        let mean = tokens as f64 / self.ep_size as f64;
+        match self.eplb {
+            EplbMode::AvgRouting => vec![1.0; self.ep_size],
+            EplbMode::Native => counts.iter().map(|&c| c as f64 / mean).collect(),
+            EplbMode::Balanced => {
+                // EPLB replicates hot experts and rotates tokens across
+                // replicas (§4.5): the residual imbalance is the skew after
+                // replica splitting, bounded by the redundancy budget.
+                counts
+                    .iter()
+                    .map(|&c| {
+                        let r = c as f64 / mean;
+                        let replicas = (r / 1.3).ceil().max(1.0);
+                        (r / replicas).clamp(0.85, 1.35)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Full result of a colocated decode simulation.
+#[derive(Debug)]
+pub struct ColocatedResult {
+    pub iterations: usize,
+    pub iteration_ms: f64,
+    pub attention_share: f64,
+    pub dispatch_combine_share: f64,
+    pub dispatch_us: Histogram,
+    pub combine_us: Histogram,
+    pub effective_tpot_ms: f64,
+    pub tokens_per_chip_per_s: f64,
+    pub total_tokens_per_s: f64,
+}
+
+/// Simulate `iters` decode iterations at mean sequence length `seq`.
+pub fn simulate(dep: &ColocatedDeployment, seq: usize, iters: usize, seed: u64) -> ColocatedResult {
+    let mut rng = Rng::new(seed);
+    let eng = A2aEngine::new(FabricParams::default(), dep.a2a.clone());
+    let mut dispatch_us = Histogram::new();
+    let mut combine_us = Histogram::new();
+    let mut total_iter_ns = 0f64;
+    let mut attn_ns_total = 0f64;
+    let mut dc_ns_total = 0f64;
+
+    let n_moe_layers = dep.n_layers - dep.n_dense_layers;
+    let imb = dep.imbalance_ratios(&mut rng);
+    let mla_base = dep.compute.mla_ns(dep.batch_per_die, seq) as f64;
+    let tokens_per_rank = dep.batch_per_die * dep.a2a.top_k;
+
+    for _ in 0..iters {
+        let mut iter_ns = 0f64;
+        // dense layers: MLA + misc only
+        for _ in 0..dep.n_dense_layers {
+            iter_ns += mla_base + dep.compute.misc_ns_per_layer as f64;
+        }
+        // first dispatch op sees the launch-jitter barrier (§4.4)
+        let gc_jitter = sample_barrier_jitter(&mut rng, dep.dp_groups, dep.gc) as f64;
+        iter_ns += gc_jitter;
+        for _ in 0..n_moe_layers {
+            // per-DP MLA readiness
+            let ready: Vec<u64> = (0..dep.ep_size)
+                .map(|_| (mla_base * dep.mla_jitter(&mut rng)) as u64)
+                .collect();
+            let d = eng.dispatch(&ready, dep.batch_per_die);
+            // expert compute per rank with residual imbalance + per-layer
+            // routing noise (each layer routes differently)
+            let moe_done: Vec<u64> = (0..dep.ep_size)
+                .map(|r| {
+                    let noise = rng.lognormal(0.0, 0.10);
+                    dep.compute
+                        .moe_ns((tokens_per_rank as f64 * imb[r] * noise) as usize)
+                })
+                .collect();
+            let c = eng.combine(&moe_done, tokens_per_rank);
+            dispatch_us.record(d.avg_ns as f64 / 1e3);
+            dispatch_us.record(d.min_ns as f64 / 1e3);
+            dispatch_us.record(d.max_ns as f64 / 1e3);
+            combine_us.record(c.avg_ns as f64 / 1e3);
+            combine_us.record(c.min_ns as f64 / 1e3);
+            combine_us.record(c.max_ns as f64 / 1e3);
+            // the timeline: MLA (mean) → dispatch (avg view) → MoE (mean)
+            // → combine (avg view) → misc
+            let moe_mean =
+                moe_done.iter().sum::<u64>() as f64 / dep.ep_size as f64;
+            iter_ns += mla_base
+                + d.avg_ns as f64
+                + moe_mean
+                + c.avg_ns as f64
+                + dep.compute.misc_ns_per_layer as f64;
+            attn_ns_total += mla_base;
+            dc_ns_total += d.avg_ns as f64 + c.avg_ns as f64;
+        }
+        iter_ns += dep.compute.mtp_ns as f64 + 2.0 * dep.compute.sample_ns as f64;
+        total_iter_ns += iter_ns;
+        attn_ns_total += mla_base * dep.n_dense_layers as f64;
+    }
+
+    let iteration_ns = total_iter_ns / iters as f64;
+    let per_iter_attn = attn_ns_total / iters as f64;
+    let per_iter_dc = dc_ns_total / iters as f64;
+    let iter_plus_bubble = iteration_ns + dep.compute.sched_bubble_ns as f64;
+    let tokens_per_iter = 1.0 + dep.mtp_accept;
+    let tpot_ns = iter_plus_bubble / tokens_per_iter;
+    let tps_per_die = dep.batch_per_die as f64 / (tpot_ns / 1e9);
+    ColocatedResult {
+        iterations: iters,
+        iteration_ms: iteration_ns / 1e6,
+        attention_share: per_iter_attn / iteration_ns,
+        dispatch_combine_share: per_iter_dc / iteration_ns,
+        dispatch_us,
+        combine_us,
+        effective_tpot_ms: tpot_ns / 1e6,
+        tokens_per_chip_per_s: 2.0 * tps_per_die,
+        total_tokens_per_s: tps_per_die * dep.dp_groups as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §7.1/Fig 20 calibration — the core colocated anchors.
+    #[test]
+    fn paper_anchors() {
+        let dep = ColocatedDeployment::paper();
+        let r = simulate(&dep, 3_000, 6, 7);
+        assert!(
+            (75.0..115.0).contains(&r.iteration_ms),
+            "iteration {:.1} ms (paper ~93)",
+            r.iteration_ms
+        );
+        assert!(
+            (40.0..62.0).contains(&r.effective_tpot_ms),
+            "TPOT {:.1} ms (paper ~50)",
+            r.effective_tpot_ms
+        );
+        assert!(
+            (1900.0..3000.0).contains(&r.tokens_per_chip_per_s),
+            "{:.0} tok/s/chip (paper 2400)",
+            r.tokens_per_chip_per_s
+        );
+        assert!(
+            (0.12..0.32).contains(&r.attention_share),
+            "attention share {:.2} (paper 0.218)",
+            r.attention_share
+        );
+        assert!(
+            (0.22..0.48).contains(&r.dispatch_combine_share),
+            "dispatch+combine share {:.2} (paper ~0.36)",
+            r.dispatch_combine_share
+        );
+    }
+
+    #[test]
+    fn dispatch_combine_variance_is_heavy_tailed() {
+        let dep = ColocatedDeployment::paper();
+        let mut r = simulate(&dep, 3_000, 8, 11);
+        let d_ratio = r.dispatch_us.max() / r.dispatch_us.min();
+        let c_ratio = r.combine_us.max() / r.combine_us.min();
+        assert!(d_ratio > 3.0, "dispatch max/min {d_ratio:.1} (paper ~6.6x)");
+        assert!(c_ratio > 4.0, "combine max/min {c_ratio:.1} (paper ~17.8x)");
+        assert!(
+            r.combine_us.mean() > r.dispatch_us.mean() * 0.95,
+            "combine should be >= dispatch on average"
+        );
+    }
+
+    #[test]
+    fn gc_mitigation_off_hurts() {
+        let mut dep = ColocatedDeployment::paper();
+        let on = simulate(&dep, 3_000, 6, 3).iteration_ms;
+        dep.gc = GcMitigation::all_off();
+        let off = simulate(&dep, 3_000, 6, 3).iteration_ms;
+        assert!(off > on, "unmitigated jitter must show: {on:.1} vs {off:.1}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Dataflow serving prototype (§5.3 vision / future work — implemented).
+//!
+//! The paper's diagnosis: A2E/E2A are *global barriers*; one straggler
+//! stalls every DP group. The vision: tensors flow asynchronously between
+//! components with no global synchronization. This module prototypes both
+//! execution disciplines over the same per-component latency draws so the
+//! benefit is directly measurable:
+//!
+//! * **Barrier mode** — every stage waits for all participants (today's
+//!   disaggregated MoE-Attention).
+//! * **Dataflow mode** — each consumer starts as soon as *its own* inputs
+//!   are ready (event-driven, per-token-group granularity); a straggler
+//!   delays only its dependents.
+
+use crate::util::rng::Rng;
+
+/// Per-iteration latency draws for `n` parallel producers feeding `stages`
+/// sequential stages (ns).
+pub fn draw_stage_latencies(
+    rng: &mut Rng,
+    n: usize,
+    stages: usize,
+    base_ns: u64,
+    jitter_sigma: f64,
+) -> Vec<Vec<u64>> {
+    (0..stages)
+        .map(|_| {
+            (0..n)
+                .map(|_| (base_ns as f64 * rng.lognormal(0.0, jitter_sigma)) as u64)
+                .collect()
+        })
+        .collect()
+}
+
+/// Barrier execution: each stage starts when the slowest participant of the
+/// previous stage finished. Returns makespan (ns).
+pub fn run_barrier(lat: &[Vec<u64>]) -> u64 {
+    let mut t = 0u64;
+    for stage in lat {
+        t += *stage.iter().max().unwrap_or(&0);
+    }
+    t
+}
+
+/// Dataflow execution: lane i's stage s starts when lane i's stage s-1
+/// finished (no cross-lane waits). Makespan = max over lanes of the lane's
+/// own chain. (Real systems add routing dependencies; this captures the
+/// straggler-isolation upper bound the paper aims at.)
+pub fn run_dataflow(lat: &[Vec<u64>]) -> u64 {
+    if lat.is_empty() {
+        return 0;
+    }
+    let n = lat[0].len();
+    (0..n)
+        .map(|i| lat.iter().map(|stage| stage[i]).sum::<u64>())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Tail-latency experiment: repeated iterations, returns (barrier_p99,
+/// dataflow_p99) in ns.
+pub fn tail_comparison(
+    rng: &mut Rng,
+    n: usize,
+    stages: usize,
+    base_ns: u64,
+    jitter_sigma: f64,
+    iters: usize,
+) -> (u64, u64) {
+    let mut b = crate::util::stats::Histogram::new();
+    let mut d = crate::util::stats::Histogram::new();
+    for _ in 0..iters {
+        let lat = draw_stage_latencies(rng, n, stages, base_ns, jitter_sigma);
+        b.record(run_barrier(&lat) as f64);
+        d.record(run_dataflow(&lat) as f64);
+    }
+    (b.percentile(99.0) as u64, d.percentile(99.0) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataflow_never_slower_than_barrier() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let lat = draw_stage_latencies(&mut rng, 16, 4, 100_000, 0.4);
+            assert!(run_dataflow(&lat) <= run_barrier(&lat));
+        }
+    }
+
+    #[test]
+    fn straggler_stalls_barrier_not_dataflow() {
+        // 4 lanes, 3 stages, uniform 100µs except one 10ms straggler in
+        // stage 0 lane 2.
+        let mut lat = vec![vec![100_000u64; 4]; 3];
+        lat[0][2] = 10_000_000;
+        let barrier = run_barrier(&lat);
+        let dataflow = run_dataflow(&lat);
+        assert!(barrier >= 10_200_000, "barrier absorbs the straggler fully");
+        // dataflow: only lane 2's chain is slow; makespan = straggler chain
+        assert_eq!(dataflow, 10_000_000 + 2 * 100_000);
+    }
+
+    #[test]
+    fn tail_gap_grows_with_scale() {
+        let mut rng = Rng::new(9);
+        let (b16, d16) = tail_comparison(&mut rng, 16, 4, 100_000, 0.3, 300);
+        let (b288, d288) = tail_comparison(&mut rng, 288, 4, 100_000, 0.3, 300);
+        let gap16 = b16 as f64 / d16 as f64;
+        let gap288 = b288 as f64 / d288 as f64;
+        assert!(
+            gap288 > gap16,
+            "barrier penalty must grow with participants: {gap16:.2} vs {gap288:.2}"
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Transformerless: fully disaggregated LLM serving (paper §5).
+//!
+//! The evolution (Fig 16): PD-colocated → disaggregated Prefill-Decode
+//! ([`pd`]) → disaggregated MoE-Attention ([`moe_attn`]) → asynchronous
+//! dataflow serving ([`dataflow`], the §5.3 vision, prototyped here).
+
+pub mod pd;
+pub mod moe_attn;
+pub mod dataflow;
+
+pub use moe_attn::{DisaggDeployment, IterationBreakdown};
+pub use pd::PdPipeline;
+
+pub mod colocated;
+pub use colocated::{ColocatedDeployment, ColocatedResult};

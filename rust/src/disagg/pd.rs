@@ -1,0 +1,316 @@
+//! Disaggregated Prefill-Decode (§5.1, Fig 17): the 8-step workflow from
+//! Job Executor to decode enqueue, over M prefill TEs and N decode TEs with
+//! full-mesh connectivity.
+//!
+//! Step 1: JE assigns the request to a prefill TE by cache status, load and
+//!         **length** (length-awareness prevents long/short co-location
+//!         stragglers).
+//! Step 2: prefill TE schedules onto a DP group.
+//! Step 3: on completion, the DP master registers a PD-transfer with
+//!         DistFlow (metadata only).
+//! Step 4: JE dispatches to a decode TE by real-time load.
+//! Step 5: decode TE picks a DP group via load-aware routing (§4.3).
+//! Step 6: decode DP checks KV slots; defers the RECV (backpressure) if
+//!         short, else submits an async RECV.
+//! Step 7: DistFlow moves the KV bytes (XCCL p2p; RoCE/VPC for 910B
+//!         prefill, §5.1 heterogeneous deployment).
+//! Step 8: both sides poll completions; prefill frees blocks, decode
+//!         enqueues the request for computation.
+
+use anyhow::Result;
+
+use crate::config::{DecodeLbPolicy, NpuKind};
+use crate::coordinator::decode_sched::{choose_group, GroupStatus};
+use crate::distflow::{DistFlow, TransferTask};
+use crate::fabric::memory::GlobalMemory;
+use crate::fabric::topology::{DieId, Topology};
+use crate::fabric::{EngineKind, FabricParams};
+
+/// A prefill TE's registration view.
+#[derive(Clone, Debug)]
+pub struct PrefillTe {
+    pub id: usize,
+    pub kind: NpuKind,
+    pub die: DieId,
+    /// Outstanding prefill cost (token count proxy).
+    pub load_tokens: u64,
+    /// Long-sequence specialist (§7.2 isolation of extreme cases).
+    pub long_seq_specialist: bool,
+}
+
+/// A decode TE's registration view: its DP groups' statuses.
+#[derive(Clone, Debug)]
+pub struct DecodeTe {
+    pub id: usize,
+    pub die: DieId,
+    pub groups: Vec<GroupStatus>,
+}
+
+impl DecodeTe {
+    pub fn free_slots(&self) -> usize {
+        self.groups
+            .iter()
+            .filter(|g| g.healthy)
+            .map(|g| g.batch_limit.saturating_sub(g.running))
+            .sum()
+    }
+}
+
+/// The Job Executor + full-mesh PD pipeline.
+pub struct PdPipeline {
+    pub prefill_tes: Vec<PrefillTe>,
+    pub decode_tes: Vec<DecodeTe>,
+    pub distflow: Vec<Vec<DistFlow>>, // [prefill][decode] isolated instances
+    pub long_seq_threshold: usize,
+    pub policy: DecodeLbPolicy,
+    rr: usize,
+}
+
+/// Placement decision for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PdPlacement {
+    pub prefill_te: usize,
+    pub decode_te: usize,
+    pub decode_group: usize,
+}
+
+impl PdPipeline {
+    pub fn new(prefill_tes: Vec<PrefillTe>, decode_tes: Vec<DecodeTe>) -> Self {
+        let m = prefill_tes.len();
+        let n = decode_tes.len();
+        Self {
+            prefill_tes,
+            decode_tes,
+            distflow: (0..m)
+                .map(|_| (0..n).map(|_| DistFlow::new()).collect())
+                .collect(),
+            long_seq_threshold: 32_000,
+            policy: DecodeLbPolicy::LeastKv,
+            rr: 0,
+        }
+    }
+
+    /// Steps 1+4+5: choose placements. Length-aware prefill selection:
+    /// long requests go only to long-sequence specialists when any exist.
+    pub fn place(&mut self, input_tokens: usize, cache_affinity: Option<usize>) -> Result<PdPlacement> {
+        let want_long = input_tokens >= self.long_seq_threshold;
+        let has_specialist = self.prefill_tes.iter().any(|t| t.long_seq_specialist);
+        let eligible: Vec<&PrefillTe> = self
+            .prefill_tes
+            .iter()
+            .filter(|t| {
+                if has_specialist {
+                    t.long_seq_specialist == want_long
+                } else {
+                    true
+                }
+            })
+            .collect();
+        anyhow::ensure!(!eligible.is_empty(), "no eligible prefill TE");
+        // cache affinity wins if it is eligible; otherwise least-loaded
+        let prefill_te = cache_affinity
+            .filter(|id| eligible.iter().any(|t| t.id == *id))
+            .unwrap_or_else(|| {
+                eligible
+                    .iter()
+                    .min_by_key(|t| t.load_tokens)
+                    .map(|t| t.id)
+                    .unwrap()
+            });
+        self.prefill_tes
+            .iter_mut()
+            .find(|t| t.id == prefill_te)
+            .unwrap()
+            .load_tokens += input_tokens as u64;
+
+        // step 4: decode TE by real-time load (most free slots)
+        let decode_te = self
+            .decode_tes
+            .iter()
+            .max_by_key(|t| t.free_slots())
+            .map(|t| t.id)
+            .ok_or_else(|| anyhow::anyhow!("no decode TE"))?;
+        // step 5: DP group via §4.3 policy
+        let te = self.decode_tes.iter().find(|t| t.id == decode_te).unwrap();
+        let group = choose_group(&te.groups, self.policy, &mut self.rr)
+            .ok_or_else(|| anyhow::anyhow!("decode backpressure: all DP groups full"))?;
+        Ok(PdPlacement { prefill_te, decode_te, decode_group: group })
+    }
+
+    /// Steps 3+6+7+8 for one request with a real KV blob: register, admit
+    /// (or defer), transfer, complete. Returns (blob, virtual ns, engine).
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer_kv(
+        &mut self,
+        placement: PdPlacement,
+        req_id: u64,
+        kv_blob: Vec<u8>,
+        has_capacity: bool,
+        mem: &mut GlobalMemory,
+        params: &FabricParams,
+        topo: &Topology,
+    ) -> Result<Option<(Vec<u8>, u64)>> {
+        let pt = self
+            .prefill_tes
+            .iter()
+            .find(|t| t.id == placement.prefill_te)
+            .unwrap()
+            .clone();
+        let dt_die = self
+            .decode_tes
+            .iter()
+            .find(|t| t.id == placement.decode_te)
+            .unwrap()
+            .die;
+        let df = &mut self.distflow[placement.prefill_te][placement.decode_te];
+        let key = format!("kv-{req_id}");
+        let nbytes = kv_blob.len();
+        mem.put_app(pt.die, &key, kv_blob);
+        // step 3: metadata-only registration
+        df.register(TransferTask {
+            req_id,
+            src_die: pt.die,
+            src_key: key,
+            nbytes,
+            // §5.1: 910B prefill → RoCE (or VPC); 910C stays on UB.
+            nic: match pt.kind {
+                NpuKind::Ascend910B => Some(EngineKind::Roce),
+                NpuKind::Ascend910C if !topo.same_server(pt.die, dt_die) => None,
+                _ => None,
+            },
+        })?;
+        // step 6: capacity check / deferral
+        if !df.submit_recv(req_id, has_capacity)? {
+            return Ok(None); // deferred: caller retries when capacity frees
+        }
+        // step 7: the pull
+        let (data, comp) = df.execute_transfer(req_id, dt_die, mem, params)?;
+        // step 8: completion polled
+        let polled = df.poll_completion().expect("completion must be queued");
+        debug_assert_eq!(polled.req_id, req_id);
+        // prefill load retires
+        self.prefill_tes
+            .iter_mut()
+            .find(|t| t.id == placement.prefill_te)
+            .unwrap()
+            .load_tokens = pt.load_tokens.saturating_sub(nbytes as u64 / 64);
+        Ok(Some((data, comp.latency_ns)))
+    }
+
+    /// Retry a deferred transfer once capacity appeared (§5.1 backpressure).
+    pub fn retry_deferred(
+        &mut self,
+        placement: PdPlacement,
+        mem: &mut GlobalMemory,
+        params: &FabricParams,
+    ) -> Result<Option<(u64, Vec<u8>, u64)>> {
+        let dt_die = self
+            .decode_tes
+            .iter()
+            .find(|t| t.id == placement.decode_te)
+            .unwrap()
+            .die;
+        let df = &mut self.distflow[placement.prefill_te][placement.decode_te];
+        let Some(req_id) = df.next_deferred() else {
+            return Ok(None);
+        };
+        let (data, comp) = df.execute_transfer(req_id, dt_die, mem, params)?;
+        Ok(Some((req_id, data, comp.latency_ns)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pipeline() -> PdPipeline {
+        let prefill = vec![
+            PrefillTe { id: 0, kind: NpuKind::Ascend910B, die: 16, load_tokens: 0, long_seq_specialist: false },
+            PrefillTe { id: 1, kind: NpuKind::Ascend910C, die: 0, load_tokens: 0, long_seq_specialist: false },
+            PrefillTe { id: 2, kind: NpuKind::Ascend910C, die: 1, load_tokens: 0, long_seq_specialist: true },
+        ];
+        let groups = |n: usize| {
+            (0..n)
+                .map(|g| GroupStatus { group: g, running: 0, batch_limit: 8, kv_usage: 0.1 * g as f64, healthy: true })
+                .collect()
+        };
+        let decode = vec![
+            DecodeTe { id: 0, die: 2, groups: groups(4) },
+            DecodeTe { id: 1, die: 3, groups: groups(4) },
+        ];
+        PdPipeline::new(prefill, decode)
+    }
+
+    #[test]
+    fn long_requests_go_to_specialists() {
+        let mut p = pipeline();
+        let long = p.place(50_000, None).unwrap();
+        assert_eq!(long.prefill_te, 2, "long request must hit the specialist");
+        let short = p.place(1_000, None).unwrap();
+        assert_ne!(short.prefill_te, 2, "short request avoids the specialist");
+    }
+
+    #[test]
+    fn cache_affinity_wins_when_eligible() {
+        let mut p = pipeline();
+        let placed = p.place(1_000, Some(1)).unwrap();
+        assert_eq!(placed.prefill_te, 1);
+        // affinity to the specialist is ignored for a short request
+        let placed2 = p.place(1_000, Some(2)).unwrap();
+        assert_ne!(placed2.prefill_te, 2);
+    }
+
+    #[test]
+    fn prefill_load_balances_across_tes() {
+        let mut p = pipeline();
+        let a = p.place(4_000, None).unwrap();
+        let b = p.place(1_000, None).unwrap();
+        assert_ne!(a.prefill_te, b.prefill_te, "second goes to the other TE");
+    }
+
+    #[test]
+    fn kv_transfer_end_to_end_with_backpressure() {
+        let mut p = pipeline();
+        let topo = Topology::heterogeneous(1, 1, 8);
+        let mut mem = GlobalMemory::new(topo.total_dies());
+        let params = FabricParams::default();
+        let placement = p.place(1_000, Some(1)).unwrap();
+        let blob: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        // no capacity → deferred
+        let r = p
+            .transfer_kv(placement, 42, blob.clone(), false, &mut mem, &params, &topo)
+            .unwrap();
+        assert!(r.is_none());
+        // capacity appears → retry path completes with intact bytes
+        let (req, data, ns) = p
+            .retry_deferred(placement, &mut mem, &params)
+            .unwrap()
+            .expect("deferred transfer must resume");
+        assert_eq!(req, 42);
+        assert_eq!(data, blob);
+        assert!(ns > 0);
+    }
+
+    #[test]
+    fn roce_used_for_910b_prefill() {
+        let mut p = pipeline();
+        let topo = Topology::heterogeneous(1, 1, 8);
+        let mut mem = GlobalMemory::new(topo.total_dies());
+        let params = FabricParams::default();
+        // force prefill onto the 910B TE (id 0) via affinity
+        let placement = p.place(1_000, Some(0)).unwrap();
+        assert_eq!(placement.prefill_te, 0);
+        let blob = vec![7u8; 1 << 20];
+        let (_, ns_roce) = p
+            .transfer_kv(placement, 1, blob.clone(), true, &mut mem, &params, &topo)
+            .unwrap()
+            .unwrap();
+        // and a UB transfer of the same size from the 910C TE
+        let placement2 = p.place(1_000, Some(1)).unwrap();
+        let (_, ns_ub) = p
+            .transfer_kv(placement2, 2, blob, true, &mut mem, &params, &topo)
+            .unwrap()
+            .unwrap();
+        assert!(ns_roce > ns_ub, "RoCE {ns_roce} must be slower than UB {ns_ub}");
+    }
+}

@@ -1,0 +1,219 @@
+//! DistFlow: the KV-transfer orchestration layer (§5.1 steps 3–8).
+//!
+//! Prefill DPs *register* transfer tasks (metadata + block addresses only —
+//! no data moves yet); the decode side *triggers* the actual pull once it
+//! has KV capacity, applying backpressure upstream otherwise. DistFlow owns
+//! the SEND/RECV handshakes, ordering, semantic pairing of non-self-
+//! describing KV blocks, and completion queues polled by both sides. Each
+//! prefill↔decode TE pair gets an isolated instance (failure-domain
+//! isolation) while sharing XCCL buffers underneath.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::fabric::memory::GlobalMemory;
+use crate::fabric::topology::DieId;
+use crate::fabric::{EngineKind, FabricParams};
+use crate::xccl::p2p::{P2pEngine, SendOptions};
+
+/// Registered-but-not-yet-transferred KV metadata (§5.1 step 3).
+#[derive(Clone, Debug)]
+pub struct TransferTask {
+    pub req_id: u64,
+    pub src_die: DieId,
+    /// Name of the KV blob in the source die's app area.
+    pub src_key: String,
+    pub nbytes: usize,
+    /// NIC fallback for heterogeneous prefill (§5.1): None ⇒ UB fabric.
+    pub nic: Option<EngineKind>,
+}
+
+/// Completion record (§5.1 step 8).
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub req_id: u64,
+    pub latency_ns: u64,
+    pub bytes: usize,
+}
+
+/// One isolated DistFlow instance for a (prefill TE, decode TE) pair.
+#[derive(Default)]
+pub struct DistFlow {
+    registered: HashMap<u64, TransferTask>,
+    /// Decode-side deferred pulls (insufficient KV slots → backpressure).
+    deferred: VecDeque<u64>,
+    completions: VecDeque<Completion>,
+    event_counter: u64,
+}
+
+impl DistFlow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// §5.1 step 3: prefill side registers metadata; data stays put.
+    pub fn register(&mut self, task: TransferTask) -> Result<()> {
+        if self.registered.contains_key(&task.req_id) {
+            bail!("transfer for req {} already registered", task.req_id);
+        }
+        self.registered.insert(task.req_id, task);
+        Ok(())
+    }
+
+    /// §5.1 step 6: decode side submits an async RECV if it has capacity,
+    /// else defers (backpressure to upstream).
+    pub fn submit_recv(&mut self, req_id: u64, has_capacity: bool) -> Result<bool> {
+        if !self.registered.contains_key(&req_id) {
+            bail!("no registered transfer for req {req_id}");
+        }
+        if !has_capacity {
+            if !self.deferred.contains(&req_id) {
+                self.deferred.push_back(req_id);
+            }
+            return Ok(false);
+        }
+        self.deferred.retain(|&r| r != req_id);
+        Ok(true)
+    }
+
+    /// §5.1 step 7: perform the actual KV pull over XCCL p2p (real bytes
+    /// move from the source die's app area to `dst_die`'s). Returns the blob.
+    pub fn execute_transfer(
+        &mut self,
+        req_id: u64,
+        dst_die: DieId,
+        mem: &mut GlobalMemory,
+        params: &FabricParams,
+    ) -> Result<(Vec<u8>, Completion)> {
+        let task = self
+            .registered
+            .remove(&req_id)
+            .ok_or_else(|| anyhow::anyhow!("no registered transfer for req {req_id}"))?;
+        let payload = mem
+            .take_app(task.src_die, &task.src_key)
+            .ok_or_else(|| anyhow::anyhow!("KV blob {} missing on die {}", task.src_key, task.src_die))?;
+        anyhow::ensure!(payload.len() == task.nbytes, "registered size mismatch");
+        self.event_counter += 1;
+        let opts = SendOptions {
+            engine: task.nic.unwrap_or(EngineKind::Mte),
+            n_aiv: 16,
+            zero_copy: false,
+            asynchronous: true, // decode polls the completion queue instead
+        };
+        let mut p2p = P2pEngine::new(mem, params);
+        let (data, report) = p2p.send_recv(
+            task.src_die,
+            dst_die,
+            &payload,
+            self.event_counter,
+            opts,
+        )?;
+        let comp = Completion { req_id, latency_ns: report.total_ns, bytes: data.len() };
+        self.completions.push_back(comp.clone());
+        Ok((data, comp))
+    }
+
+    /// §5.1 step 8: poll the completion queue.
+    pub fn poll_completion(&mut self) -> Option<Completion> {
+        self.completions.pop_front()
+    }
+
+    pub fn deferred_count(&self) -> usize {
+        self.deferred.len()
+    }
+
+    pub fn next_deferred(&mut self) -> Option<u64> {
+        self.deferred.pop_front()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.registered.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (GlobalMemory, FabricParams, DistFlow) {
+        (GlobalMemory::new(4), FabricParams::default(), DistFlow::new())
+    }
+
+    fn register_blob(
+        df: &mut DistFlow,
+        mem: &mut GlobalMemory,
+        req: u64,
+        die: DieId,
+        n: usize,
+    ) {
+        let blob: Vec<u8> = (0..n).map(|i| (i * 31 + req as usize) as u8).collect();
+        mem.put_app(die, &format!("kv-{req}"), blob);
+        df.register(TransferTask {
+            req_id: req,
+            src_die: die,
+            src_key: format!("kv-{req}"),
+            nbytes: n,
+            nic: None,
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn full_transfer_path_moves_real_bytes() {
+        let (mut mem, params, mut df) = setup();
+        register_blob(&mut df, &mut mem, 7, 0, 100_000);
+        assert!(df.submit_recv(7, true).unwrap());
+        let (data, comp) = df.execute_transfer(7, 2, &mut mem, &params).unwrap();
+        assert_eq!(data.len(), 100_000);
+        assert_eq!(data[5], (5 * 31 + 7) as u8);
+        assert!(comp.latency_ns > 0);
+        // prefill side released the blob (step 8: "prefill DP releases")
+        assert!(mem.get_app(0, "kv-7").is_none());
+        // completion visible
+        assert_eq!(df.poll_completion().unwrap().req_id, 7);
+        assert!(df.poll_completion().is_none());
+    }
+
+    #[test]
+    fn backpressure_defers_until_capacity() {
+        let (mut mem, _params, mut df) = setup();
+        register_blob(&mut df, &mut mem, 1, 0, 1024);
+        assert!(!df.submit_recv(1, false).unwrap());
+        assert_eq!(df.deferred_count(), 1);
+        // capacity shows up
+        assert!(df.submit_recv(1, true).unwrap());
+        assert_eq!(df.deferred_count(), 0);
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let (mut mem, _p, mut df) = setup();
+        register_blob(&mut df, &mut mem, 3, 1, 64);
+        let dup = TransferTask {
+            req_id: 3,
+            src_die: 1,
+            src_key: "kv-3".into(),
+            nbytes: 64,
+            nic: None,
+        };
+        assert!(df.register(dup).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_roce_path_is_slower_but_works() {
+        let (mut mem, params, mut df) = setup();
+        register_blob(&mut df, &mut mem, 9, 0, 4 << 20);
+        df.registered.get_mut(&9).unwrap().nic = Some(EngineKind::Roce);
+        let (_, roce) = df.execute_transfer(9, 3, &mut mem, &params).unwrap();
+        register_blob(&mut df, &mut mem, 10, 0, 4 << 20);
+        let (_, ub) = df.execute_transfer(10, 3, &mut mem, &params).unwrap();
+        assert!(roce.latency_ns > ub.latency_ns, "RoCE must cost more than UB");
+    }
+
+    #[test]
+    fn transfer_of_unregistered_request_fails() {
+        let (mut mem, params, mut df) = setup();
+        assert!(df.execute_transfer(42, 1, &mut mem, &params).is_err());
+    }
+}

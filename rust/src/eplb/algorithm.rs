@@ -1,0 +1,182 @@
+//! The EPLB algorithm (§4.5 step 2): redundant-expert selection + placement.
+//!
+//! Selection (greedy, exactly the paper's four numbered steps):
+//!   1. compute the current total load L_l = Σ_t max_e count[l][e][t]
+//!   2. for each candidate hot expert, simulate splitting its tokens evenly
+//!      across its replicas and compute the resulting L_l(c)
+//!   3. pick the candidate minimizing the simulated load; add to the list
+//!   4. update counts for even distribution; repeat until budget R is spent
+//!
+//! Placement: sort selected replicas by their total load (highest first),
+//! assign each to the least-loaded NPU with a free redundancy slot.
+
+/// Per-layer hottest-expert load: L_l = Σ_t max_e token_count[e][t].
+/// `counts[slice][expert]`, with replica counts dividing each expert's load.
+fn layer_load(counts: &[Vec<u64>], replicas: &[u32]) -> f64 {
+    counts
+        .iter()
+        .map(|slice| {
+            slice
+                .iter()
+                .enumerate()
+                .map(|(e, &c)| c as f64 / replicas[e].max(1) as f64)
+                .fold(0.0, f64::max)
+        })
+        .sum()
+}
+
+/// Select up to `budget` redundant experts for one layer. Returns the chosen
+/// expert ids (possibly repeating — an expert can earn multiple replicas)
+/// and the per-expert replica counts after selection.
+pub fn select_redundant(counts: &[Vec<u64>], n_experts: usize, budget: usize) -> (Vec<usize>, Vec<u32>) {
+    let mut replicas = vec![1u32; n_experts];
+    let mut chosen = Vec::new();
+    for _ in 0..budget {
+        let base = layer_load(counts, &replicas);
+        // candidates: experts that are hottest in at least one slice
+        let mut cands: Vec<usize> = counts
+            .iter()
+            .filter_map(|slice| {
+                slice
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, c)| **c)
+                    .map(|(e, _)| e)
+            })
+            .collect();
+        cands.sort_unstable();
+        cands.dedup();
+        let mut best: Option<(usize, f64)> = None;
+        for &c in &cands {
+            replicas[c] += 1;
+            let l = layer_load(counts, &replicas);
+            replicas[c] -= 1;
+            if best.map_or(true, |(_, bl)| l < bl) {
+                best = Some((c, l));
+            }
+        }
+        match best {
+            Some((c, l)) if l < base => {
+                replicas[c] += 1;
+                chosen.push(c);
+            }
+            _ => break, // no candidate improves the load
+        }
+    }
+    (chosen, replicas)
+}
+
+/// One expert replica's NPU assignment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub expert: usize,
+    pub npu: usize,
+}
+
+/// Assign redundant replicas to NPUs (§4.5 step 2, placement half):
+/// replicas sorted by total expert load descending, each to the
+/// least-loaded NPU with free redundancy slots. `base_npu_load` is each
+/// NPU's load from its primary experts.
+pub fn place(
+    chosen: &[usize],
+    expert_totals: &[u64],
+    base_npu_load: &[u64],
+    slots_per_npu: usize,
+) -> Vec<Placement> {
+    let n_npus = base_npu_load.len();
+    let mut load: Vec<u64> = base_npu_load.to_vec();
+    let mut free_slots = vec![slots_per_npu; n_npus];
+    let mut order: Vec<usize> = chosen.to_vec();
+    order.sort_by_key(|&e| std::cmp::Reverse(expert_totals[e]));
+    let mut out = Vec::with_capacity(order.len());
+    for e in order {
+        let Some(npu) = (0..n_npus)
+            .filter(|&n| free_slots[n] > 0)
+            .min_by_key(|&n| load[n])
+        else {
+            break; // out of slots everywhere
+        };
+        free_slots[npu] -= 1;
+        // the replica absorbs half the expert's load estimate
+        load[npu] += expert_totals[e] / 2;
+        out.push(Placement { expert: e, npu });
+    }
+    out
+}
+
+/// Forward-latency model for Fig 11b: an MoE layer's step time is set by the
+/// most-loaded NPU (straggler). `per_npu_tokens` after routing/balancing.
+pub fn moe_step_cost(per_npu_tokens: &[u64], ns_per_token: f64, fixed_ns: f64) -> f64 {
+    let max = per_npu_tokens.iter().copied().max().unwrap_or(0) as f64;
+    fixed_ns + max * ns_per_token
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_counts(n_experts: usize, slices: usize) -> Vec<Vec<u64>> {
+        // expert 0 is 30x hot in every slice; expert 1 mildly hot
+        (0..slices)
+            .map(|s| {
+                (0..n_experts)
+                    .map(|e| match e {
+                        0 => 3000,
+                        1 => 400 + (s as u64) * 10,
+                        _ => 100,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn selects_the_hot_expert_first() {
+        let counts = skewed_counts(8, 4);
+        let (chosen, replicas) = select_redundant(&counts, 8, 3);
+        assert_eq!(chosen[0], 0, "hottest expert must be replicated first");
+        assert!(replicas[0] >= 2);
+    }
+
+    #[test]
+    fn replication_reduces_layer_load() {
+        let counts = skewed_counts(8, 4);
+        let before = layer_load(&counts, &vec![1; 8]);
+        let (_, replicas) = select_redundant(&counts, 8, 4);
+        let after = layer_load(&counts, &replicas);
+        assert!(
+            after < before * 0.55,
+            "4 replicas of a 30x-hot expert should halve+ the load: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn stops_when_no_improvement() {
+        // perfectly uniform: no replica helps... (splitting the max still
+        // reduces it, so allow either 0 or small usage; key: bounded)
+        let counts = vec![vec![100u64; 4]; 2];
+        let (chosen, _) = select_redundant(&counts, 4, 64);
+        assert!(chosen.len() <= 8, "must not burn the whole budget on noise");
+    }
+
+    #[test]
+    fn placement_prefers_cold_npus_and_respects_slots() {
+        let chosen = vec![0, 0, 1];
+        let totals = vec![6000u64, 450, 100, 100];
+        let base = vec![6000u64, 450, 100, 100]; // npu i hosts expert i
+        let p = place(&chosen, &totals, &base, 1);
+        assert_eq!(p.len(), 3);
+        // the first (hottest) replica lands on the coldest NPU (2 or 3)
+        assert!(p[0].npu >= 2, "{p:?}");
+        // one slot per NPU: all placements distinct NPUs
+        let mut npus: Vec<usize> = p.iter().map(|x| x.npu).collect();
+        npus.sort_unstable();
+        npus.dedup();
+        assert_eq!(npus.len(), p.len());
+    }
+
+    #[test]
+    fn moe_step_cost_tracks_straggler() {
+        assert!(moe_step_cost(&[10, 10, 100], 1.0, 0.0) > moe_step_cost(&[40, 40, 40], 1.0, 0.0));
+    }
+}

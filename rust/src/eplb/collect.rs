@@ -1,0 +1,119 @@
+//! Expert-load collection (§4.5 step 1).
+//!
+//! A Collect kernel after gating counts tokens per expert per NPU; each DP's
+//! executor aggregates within its group and ships to the TE-shell on a slow
+//! cadence ("e.g., every minute" — frequent collection costs too much).
+//! Loads are kept per (layer, expert, time-slice): the algorithm's h_{l,t}
+//! needs the slice structure.
+
+/// Rolling per-layer, per-expert, per-slice token counts.
+#[derive(Clone, Debug)]
+pub struct LoadCollector {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub n_slices: usize,
+    /// counts[layer][slice][expert]
+    counts: Vec<Vec<Vec<u64>>>,
+    cur_slice: usize,
+}
+
+impl LoadCollector {
+    pub fn new(n_layers: usize, n_experts: usize, n_slices: usize) -> Self {
+        Self {
+            n_layers,
+            n_experts,
+            n_slices,
+            counts: vec![vec![vec![0; n_experts]; n_slices]; n_layers],
+            cur_slice: 0,
+        }
+    }
+
+    /// Record one iteration's routing for a layer: `expert_ids` are the
+    /// flattened top-k assignments of all tokens this step.
+    pub fn record(&mut self, layer: usize, expert_ids: &[usize]) {
+        for &e in expert_ids {
+            self.counts[layer][self.cur_slice][e] += 1;
+        }
+    }
+
+    /// Record pre-aggregated counts (from the simulated Collect kernel).
+    pub fn record_counts(&mut self, layer: usize, counts: &[u64]) {
+        for (e, c) in counts.iter().enumerate() {
+            self.counts[layer][self.cur_slice][e] += c;
+        }
+    }
+
+    /// Advance the time slice (collection cadence boundary).
+    pub fn rotate_slice(&mut self) {
+        self.cur_slice = (self.cur_slice + 1) % self.n_slices;
+        for l in 0..self.n_layers {
+            for e in 0..self.n_experts {
+                self.counts[l][self.cur_slice][e] = 0;
+            }
+        }
+    }
+
+    /// token_count[layer][slice][expert] view for the EPLB algorithm.
+    pub fn snapshot(&self, layer: usize) -> &[Vec<u64>] {
+        &self.counts[layer]
+    }
+
+    /// Total per-expert load for a layer across slices.
+    pub fn totals(&self, layer: usize) -> Vec<u64> {
+        let mut t = vec![0u64; self.n_experts];
+        for slice in &self.counts[layer] {
+            for (e, c) in slice.iter().enumerate() {
+                t[e] += c;
+            }
+        }
+        t
+    }
+
+    /// Merge another collector (aggregation across DP groups at the shell).
+    pub fn merge(&mut self, other: &LoadCollector) {
+        assert_eq!(self.n_layers, other.n_layers);
+        assert_eq!(self.n_experts, other.n_experts);
+        for l in 0..self.n_layers {
+            for s in 0..self.n_slices.min(other.n_slices) {
+                for e in 0..self.n_experts {
+                    self.counts[l][s][e] += other.counts[l][s][e];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_totals() {
+        let mut c = LoadCollector::new(2, 4, 3);
+        c.record(0, &[1, 1, 2]);
+        c.rotate_slice();
+        c.record(0, &[1, 3]);
+        assert_eq!(c.totals(0), vec![0, 3, 1, 1]);
+        assert_eq!(c.totals(1), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn slice_rotation_evicts_oldest() {
+        let mut c = LoadCollector::new(1, 2, 2);
+        c.record(0, &[0]);
+        c.rotate_slice(); // slice 1 current
+        c.record(0, &[1]);
+        c.rotate_slice(); // wraps to slice 0, clearing it
+        assert_eq!(c.totals(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn merge_aggregates_across_dps() {
+        let mut a = LoadCollector::new(1, 3, 1);
+        let mut b = LoadCollector::new(1, 3, 1);
+        a.record(0, &[0, 1]);
+        b.record(0, &[1, 2]);
+        a.merge(&b);
+        assert_eq!(a.totals(0), vec![1, 2, 1]);
+    }
+}

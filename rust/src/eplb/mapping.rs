@@ -1,0 +1,133 @@
+//! Logical→physical expert mapping with communication-free replica
+//! balancing (§4.5 step 4, Fig 12).
+//!
+//! The gather-style mapping table has shape [tokens_per_step, n_logical]:
+//! row t maps every logical expert to a physical slot, and a logical expert
+//! with k replicas **rotates** its replicas across rows — token position
+//! selects the replica, so the split needs no inter-NPU communication and
+//! each replica receives an equal share in expectation.
+
+/// Physical expert slots: primaries `0..n_logical`, replicas appended.
+#[derive(Clone, Debug)]
+pub struct ReplicaMap {
+    pub n_logical: usize,
+    /// physical slots per logical expert (slot ids).
+    pub slots: Vec<Vec<usize>>,
+    /// owner NPU per physical slot.
+    pub slot_npu: Vec<usize>,
+}
+
+impl ReplicaMap {
+    /// Identity mapping: logical e ↔ physical e on NPU `e % n_npus`.
+    pub fn identity(n_logical: usize, n_npus: usize) -> Self {
+        Self {
+            n_logical,
+            slots: (0..n_logical).map(|e| vec![e]).collect(),
+            slot_npu: (0..n_logical).map(|e| e % n_npus).collect(),
+        }
+    }
+
+    /// Register a replica of `expert` hosted on `npu`; returns the new
+    /// physical slot id.
+    pub fn add_replica(&mut self, expert: usize, npu: usize) -> usize {
+        let slot = self.slot_npu.len();
+        self.slot_npu.push(npu);
+        self.slots[expert].push(slot);
+        slot
+    }
+
+    /// Rotation rule: physical slot for (token position, logical expert).
+    #[inline]
+    pub fn physical_for(&self, token_pos: usize, logical: usize) -> usize {
+        let s = &self.slots[logical];
+        s[token_pos % s.len()]
+    }
+
+    /// Build the [tokens, n_logical] gather table of Fig 12.
+    pub fn gather_table(&self, tokens: usize) -> Vec<Vec<usize>> {
+        (0..tokens)
+            .map(|t| (0..self.n_logical).map(|e| self.physical_for(t, e)).collect())
+            .collect()
+    }
+
+    /// Route a step's token assignments through the map: returns tokens per
+    /// physical slot.
+    pub fn route_counts(&self, assignments: &[(usize, usize)]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.slot_npu.len()];
+        for &(token_pos, logical) in assignments {
+            counts[self.physical_for(token_pos, logical)] += 1;
+        }
+        counts
+    }
+
+    /// Tokens per NPU given per-slot counts.
+    pub fn npu_counts(&self, slot_counts: &[u64], n_npus: usize) -> Vec<u64> {
+        let mut per_npu = vec![0u64; n_npus];
+        for (slot, &c) in slot_counts.iter().enumerate() {
+            per_npu[self.slot_npu[slot]] += c;
+        }
+        per_npu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn fig12_example_rotation() {
+        // 4 tokens/step, logical expert 1 with primary slot + one replica:
+        // the mapping column must alternate between the two slots.
+        let mut m = ReplicaMap::identity(4, 4);
+        let rep = m.add_replica(1, 0);
+        let table = m.gather_table(4);
+        let col: Vec<usize> = table.iter().map(|row| row[1]).collect();
+        assert_eq!(col, vec![1, rep, 1, rep]);
+        // non-replicated experts map to themselves everywhere
+        assert!(table.iter().all(|row| row[2] == 2));
+    }
+
+    #[test]
+    fn rotation_splits_tokens_evenly() {
+        let mut m = ReplicaMap::identity(2, 2);
+        m.add_replica(0, 1);
+        // 1000 tokens all routed to logical 0
+        let assignments: Vec<(usize, usize)> = (0..1000).map(|t| (t, 0)).collect();
+        let counts = m.route_counts(&assignments);
+        assert_eq!(counts[0], 500);
+        assert_eq!(counts[2], 500);
+    }
+
+    #[test]
+    fn prop_every_token_lands_on_a_replica_of_its_expert() {
+        check("replica-map", PropConfig::default(), |rng, size| {
+            let n_logical = 4 + rng.index(size.max(1) * 2 + 1);
+            let n_npus = 2 + rng.index(6);
+            let mut m = ReplicaMap::identity(n_logical, n_npus);
+            for _ in 0..rng.index(8) {
+                let e = rng.index(n_logical);
+                m.add_replica(e, rng.index(n_npus));
+            }
+            for _ in 0..200 {
+                let t = rng.index(1024);
+                let e = rng.index(n_logical);
+                let p = m.physical_for(t, e);
+                prop_assert!(
+                    m.slots[e].contains(&p),
+                    "token routed to slot {p} not a replica of {e}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn npu_counts_aggregate_slots() {
+        let mut m = ReplicaMap::identity(2, 2); // slot0→npu0, slot1→npu1
+        m.add_replica(0, 1); // slot2→npu1
+        let per_npu = m.npu_counts(&[10, 5, 7], 2);
+        assert_eq!(per_npu, vec![10, 12]);
+    }
+}

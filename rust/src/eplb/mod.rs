@@ -1,0 +1,23 @@
+//! Expert Placement Load Balancing (§4.5, Figs 11–12, DESIGN.md S8).
+//!
+//! Five-component pipeline:
+//! 1. [`collect`]   — per-NPU token counts per expert (the Collect kernel),
+//!    aggregated per DP group and shipped to the TE-shell periodically.
+//! 2. [`algorithm`] — the EPLB greedy: pick redundant experts that minimize
+//!    the simulated per-layer hottest load, given a redundancy budget R.
+//! 3. placement     — sort replicas by load, assign each to the
+//!    least-loaded NPU with free redundancy slots ([`algorithm::place`]).
+//! 4. [`reconfig`]  — four-phase asynchronous weight swap (prefetch →
+//!    disable slots → load → re-enable) without pausing inference.
+//! 5. [`mapping`]   — communication-free token balancing across replicas by
+//!    rotating on batch position (gather-style logical→physical mapping).
+
+pub mod collect;
+pub mod algorithm;
+pub mod mapping;
+pub mod reconfig;
+
+pub use algorithm::{place, select_redundant, Placement};
+pub use collect::LoadCollector;
+pub use mapping::ReplicaMap;
+pub use reconfig::{ReconfigPhase, Reconfigurator};

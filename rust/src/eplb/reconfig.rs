@@ -1,0 +1,165 @@
+//! Four-phase asynchronous redundant-expert reconfiguration (§4.5 step 3).
+//!
+//! 1. **Prefetch** new expert weights from storage into host memory.
+//! 2. **Disable** the redundant slots (logical→physical map stops routing
+//!    to them; inference continues on primaries).
+//! 3. **Load** prefetched weights into the target slots asynchronously.
+//! 4. **Re-enable** the slots with the updated mapping.
+//!
+//! Inference never stops: between phases 2 and 4 the map simply routes all
+//! tokens to primary replicas. The state machine is driven by `tick()` calls
+//! from the serving loop (each tick = some async work completed).
+
+use crate::eplb::mapping::ReplicaMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigPhase {
+    Idle,
+    Prefetching,
+    SlotsDisabled,
+    Loading,
+    Done,
+}
+
+/// A pending swap: expert → target slot on an NPU.
+#[derive(Clone, Debug)]
+pub struct SwapPlan {
+    pub expert: usize,
+    pub npu: usize,
+}
+
+pub struct Reconfigurator {
+    pub phase: ReconfigPhase,
+    plan: Vec<SwapPlan>,
+    /// Slots disabled during the swap (restored at re-enable).
+    disabled: Vec<(usize, usize)>, // (expert, slot)
+    ticks_per_phase: u32,
+    ticks_left: u32,
+    /// Total forward passes that happened while a reconfig was in flight —
+    /// proof that inference was never interrupted.
+    pub overlapped_steps: u64,
+}
+
+impl Reconfigurator {
+    pub fn new(ticks_per_phase: u32) -> Self {
+        Self {
+            phase: ReconfigPhase::Idle,
+            plan: Vec::new(),
+            disabled: Vec::new(),
+            ticks_per_phase,
+            ticks_left: 0,
+            overlapped_steps: 0,
+        }
+    }
+
+    pub fn start(&mut self, plan: Vec<SwapPlan>) {
+        assert_eq!(self.phase, ReconfigPhase::Idle, "reconfig already running");
+        self.plan = plan;
+        self.phase = ReconfigPhase::Prefetching;
+        self.ticks_left = self.ticks_per_phase;
+    }
+
+    /// Advance the async machinery by one serving iteration. Mutates `map`
+    /// at the phase boundaries exactly as §4.5 describes.
+    pub fn tick(&mut self, map: &mut ReplicaMap) {
+        if self.phase == ReconfigPhase::Idle || self.phase == ReconfigPhase::Done {
+            return;
+        }
+        self.overlapped_steps += 1;
+        if self.ticks_left > 0 {
+            self.ticks_left -= 1;
+            return;
+        }
+        self.ticks_left = self.ticks_per_phase;
+        match self.phase {
+            ReconfigPhase::Prefetching => {
+                // phase 2: disable redundant slots by trimming the mapping
+                // down to primaries for affected experts.
+                for sp in &self.plan {
+                    let slots = &mut map.slots[sp.expert];
+                    while slots.len() > 1 {
+                        let slot = slots.pop().unwrap();
+                        self.disabled.push((sp.expert, slot));
+                    }
+                }
+                self.phase = ReconfigPhase::SlotsDisabled;
+            }
+            ReconfigPhase::SlotsDisabled => {
+                self.phase = ReconfigPhase::Loading;
+            }
+            ReconfigPhase::Loading => {
+                // phase 4: re-enable with the new placement.
+                for sp in &self.plan {
+                    map.add_replica(sp.expert, sp.npu);
+                }
+                self.disabled.clear();
+                self.plan.clear();
+                self.phase = ReconfigPhase::Done;
+            }
+            _ => {}
+        }
+    }
+
+    pub fn finish(&mut self) {
+        if self.phase == ReconfigPhase::Done {
+            self.phase = ReconfigPhase::Idle;
+        }
+    }
+
+    pub fn in_flight(&self) -> bool {
+        !matches!(self.phase, ReconfigPhase::Idle | ReconfigPhase::Done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_cycle_updates_mapping_without_stopping() {
+        let mut map = ReplicaMap::identity(4, 4);
+        map.add_replica(2, 0); // old replica that will be replaced
+        let mut rc = Reconfigurator::new(2);
+        rc.start(vec![SwapPlan { expert: 1, npu: 3 }, SwapPlan { expert: 2, npu: 1 }]);
+
+        let mut steps = 0;
+        while rc.in_flight() {
+            rc.tick(&mut map);
+            steps += 1;
+            // inference continues: every logical expert always has ≥1 slot
+            for e in 0..map.n_logical {
+                assert!(!map.slots[e].is_empty(), "expert {e} lost all replicas");
+            }
+            assert!(steps < 100, "reconfig must terminate");
+        }
+        assert_eq!(rc.phase, ReconfigPhase::Done);
+        rc.finish();
+        assert_eq!(rc.phase, ReconfigPhase::Idle);
+        // new replicas live
+        assert_eq!(map.slots[1].len(), 2);
+        assert_eq!(map.slots[2].len(), 2);
+        assert!(rc.overlapped_steps > 0, "work overlapped with serving");
+    }
+
+    #[test]
+    fn disable_phase_routes_to_primary_only() {
+        let mut map = ReplicaMap::identity(2, 2);
+        map.add_replica(0, 1);
+        let mut rc = Reconfigurator::new(0);
+        rc.start(vec![SwapPlan { expert: 0, npu: 1 }]);
+        rc.tick(&mut map); // -> SlotsDisabled
+        assert_eq!(rc.phase, ReconfigPhase::SlotsDisabled);
+        // during the window, all tokens for expert 0 go to the primary
+        for t in 0..8 {
+            assert_eq!(map.physical_for(t, 0), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already running")]
+    fn cannot_start_twice() {
+        let mut rc = Reconfigurator::new(1);
+        rc.start(vec![]);
+        rc.start(vec![]);
+    }
+}

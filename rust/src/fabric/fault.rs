@@ -1,0 +1,165 @@
+//! Fault injection for the reliability plane (§6).
+//!
+//! Deterministic, seeded fault schedules drive the detection/recovery tests
+//! and the `failure_recovery` example: link flaps (transient network
+//! glitches → token recomputation), on-chip memory faults (→ CANN remap +
+//! partial KV loss), NPU crashes (→ P/D failover), and hung processes
+//! (→ heartbeat-detected stalls).
+
+use std::collections::HashMap;
+
+use super::topology::DieId;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient link failure between two servers (switch flap / BGP
+    /// convergence, §6.2 stage 3).
+    LinkFlap,
+    /// On-chip memory fault on a die (§6.2 stage 3).
+    MemoryFault,
+    /// Hard NPU/die crash (§6.2 stages 1–2).
+    DieCrash,
+    /// Process hangs (stuck on group communication, §6.1) — alive but
+    /// unresponsive to heartbeats.
+    ProcessHang,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub die: DieId,
+    /// Virtual time the fault starts.
+    pub at_ns: u64,
+    /// Duration (0 = permanent until recovery action).
+    pub duration_ns: u64,
+}
+
+/// Holds a schedule of faults and answers "is X faulty at time T".
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    faults: Vec<Fault>,
+    /// Dies cleared by a recovery action (fault masked from then on).
+    recovered: HashMap<usize, u64>, // fault idx -> recovery time
+}
+
+impl FaultInjector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn schedule(&mut self, fault: Fault) -> usize {
+        self.faults.push(fault);
+        self.faults.len() - 1
+    }
+
+    /// Random schedule: `n` faults over `horizon_ns`, mixed kinds.
+    pub fn random_schedule(rng: &mut Rng, n_dies: usize, n: usize, horizon_ns: u64) -> Self {
+        let mut inj = Self::new();
+        for _ in 0..n {
+            let kind = match rng.index(4) {
+                0 => FaultKind::LinkFlap,
+                1 => FaultKind::MemoryFault,
+                2 => FaultKind::DieCrash,
+                _ => FaultKind::ProcessHang,
+            };
+            let duration = match kind {
+                FaultKind::LinkFlap => rng.range(1_000_000, 50_000_000), // 1-50 ms
+                FaultKind::MemoryFault => 0,
+                FaultKind::DieCrash => 0,
+                FaultKind::ProcessHang => rng.range(100_000_000, 2_000_000_000),
+            };
+            inj.schedule(Fault {
+                kind,
+                die: rng.index(n_dies),
+                at_ns: rng.range(0, horizon_ns),
+                duration_ns: duration,
+            });
+        }
+        inj
+    }
+
+    /// Active faults of any kind on `die` at virtual time `t`.
+    pub fn active_on(&self, die: DieId, t: u64) -> Vec<&Fault> {
+        self.faults
+            .iter()
+            .enumerate()
+            .filter(|(i, f)| {
+                f.die == die
+                    && t >= f.at_ns
+                    && (f.duration_ns == 0 || t < f.at_ns + f.duration_ns)
+                    && self.recovered.get(i).map_or(true, |&rt| t < rt)
+            })
+            .map(|(_, f)| f)
+            .collect()
+    }
+
+    pub fn is_faulty(&self, die: DieId, t: u64) -> bool {
+        !self.active_on(die, t).is_empty()
+    }
+
+    pub fn fault_kind(&self, die: DieId, t: u64) -> Option<FaultKind> {
+        self.active_on(die, t).first().map(|f| f.kind)
+    }
+
+    /// Mark every fault active on `die` at `t` as recovered (recovery action
+    /// completed — e.g. memory remapped, process restarted).
+    pub fn recover(&mut self, die: DieId, t: u64) {
+        let idxs: Vec<usize> = self
+            .faults
+            .iter()
+            .enumerate()
+            .filter(|(i, f)| {
+                f.die == die
+                    && t >= f.at_ns
+                    && self.recovered.get(i).map_or(true, |&rt| t < rt)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for i in idxs {
+            self.recovered.insert(i, t);
+        }
+    }
+
+    pub fn all(&self) -> &[Fault] {
+        &self.faults
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_window_semantics() {
+        let mut inj = FaultInjector::new();
+        inj.schedule(Fault { kind: FaultKind::LinkFlap, die: 3, at_ns: 100, duration_ns: 50 });
+        assert!(!inj.is_faulty(3, 99));
+        assert!(inj.is_faulty(3, 100));
+        assert!(inj.is_faulty(3, 149));
+        assert!(!inj.is_faulty(3, 150)); // transient expired
+        assert!(!inj.is_faulty(2, 120)); // other die unaffected
+    }
+
+    #[test]
+    fn permanent_fault_until_recovered() {
+        let mut inj = FaultInjector::new();
+        inj.schedule(Fault { kind: FaultKind::DieCrash, die: 1, at_ns: 10, duration_ns: 0 });
+        assert!(inj.is_faulty(1, 1_000_000));
+        inj.recover(1, 2_000_000);
+        assert!(!inj.is_faulty(1, 2_000_001));
+    }
+
+    #[test]
+    fn random_schedule_is_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = FaultInjector::random_schedule(&mut r1, 16, 8, 1_000_000_000);
+        let b = FaultInjector::random_schedule(&mut r2, 16, 8, 1_000_000_000);
+        for (x, y) in a.all().iter().zip(b.all()) {
+            assert_eq!(x.die, y.die);
+            assert_eq!(x.at_ns, y.at_ns);
+            assert_eq!(x.kind, y.kind);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Global shared memory: per-die app / metadata / managed areas (§3.1).
+//!
+//! The UB fabric gives every NPU load/store access to every other NPU's
+//! on-chip memory. We model that literally: [`GlobalMemory`] owns one
+//! [`DieMemory`] per die and XCCL kernels (xccl/*) read and write *real
+//! bytes* in remote dies' areas — only the elapsed time is simulated.
+//!
+//! Layout per die (paper §3.1 "Data structure"):
+//! * **app data area** — application tensors (KV cache blocks, hidden
+//!   states); owned by the serving engine.
+//! * **metadata area** — 32-byte fields, one per (peer, AIV-core-pair,
+//!   direction); ~74K fields / 4 MB for a full SuperPod. Holds eventID
+//!   (sanity check), chunkID (chunked-transfer tracking), tailPtr (ring
+//!   position) and an ack word.
+//! * **managed data area** — per-peer ring buffers with fixed slot
+//!   count/size (p2p), plus per-rank blocks for all-to-all dispatch.
+
+use std::collections::HashMap;
+
+use super::topology::DieId;
+
+pub const META_FIELD_BYTES: usize = 32;
+/// Paper: total metadata size is set to 4 MB per die.
+pub const META_AREA_BYTES: usize = 4 << 20;
+/// Ring-buffer slots per peer pair (fixed number of fixed-size slots).
+pub const RING_SLOTS: usize = 8;
+/// Ring slot size; transfers are chunked to this.
+pub const RING_SLOT_BYTES: usize = 256 << 10;
+
+/// One 32-byte metadata field (§3.1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MetaField {
+    /// User-supplied event id, checked on both sides (sanity).
+    pub event_id: u64,
+    /// Kernel-generated chunk counter for chunked transfers.
+    pub chunk_id: u64,
+    /// Ring tail pointer: cumulative bytes made visible to the receiver.
+    pub tail_ptr: u64,
+    /// Ack word: cumulative bytes consumed by the receiver.
+    pub ack: u64,
+}
+
+/// Key: (peer die, lane). Lanes separate AIV-core pairs so cores can run the
+/// protocol in parallel without false sharing (§3.1).
+pub type MetaKey = (DieId, u16);
+
+/// Ring buffer for one (src → dst) pair, resident in dst's managed area.
+/// One chunk occupies one slot regardless of its byte size (chunks are
+/// bounded by the slot size); `written`/`consumed` mirror the tailPtr/ack
+/// metadata words in bytes.
+#[derive(Clone, Debug, Default)]
+pub struct RingBuffer {
+    slots: std::collections::VecDeque<Vec<u8>>,
+    /// Bytes written (monotonic, mirrors tail_ptr).
+    pub written: u64,
+    /// Bytes consumed (monotonic, mirrors ack).
+    pub consumed: u64,
+}
+
+impl RingBuffer {
+    pub fn free_slots(&self) -> usize {
+        RING_SLOTS.saturating_sub(self.slots.len())
+    }
+
+    /// Write a chunk (≤ slot size) at the current tail. Returns false if the
+    /// ring is full (backpressure — sender must wait for acks).
+    pub fn push_chunk(&mut self, data: &[u8]) -> bool {
+        assert!(data.len() <= RING_SLOT_BYTES);
+        if self.free_slots() == 0 {
+            return false;
+        }
+        self.written += data.len() as u64;
+        self.slots.push_back(data.to_vec());
+        true
+    }
+
+    /// Pop the oldest unconsumed chunk.
+    pub fn pop_chunk(&mut self) -> Option<Vec<u8>> {
+        let data = self.slots.pop_front()?;
+        self.consumed += data.len() as u64;
+        Some(data)
+    }
+}
+
+/// Per-rank block in the managed area used by all-to-all dispatch/combine
+/// (§3.2: "managed data area is partitioned by rank ID").
+#[derive(Clone, Debug, Default)]
+pub struct RankBlock {
+    pub data: Vec<u8>,
+    pub token_count: u32,
+    pub event_id: u64,
+}
+
+/// One die's memory.
+#[derive(Debug, Default)]
+pub struct DieMemory {
+    /// App data area: named tensors owned by the serving engine.
+    pub app: HashMap<String, Vec<u8>>,
+    /// Metadata area: lazily materialized 32-byte fields.
+    pub meta: HashMap<MetaKey, MetaField>,
+    /// Managed area, p2p: ring buffer per source die.
+    pub rings: HashMap<DieId, RingBuffer>,
+    /// Managed area, all-to-all: block per source rank.
+    pub rank_blocks: HashMap<DieId, RankBlock>,
+}
+
+impl DieMemory {
+    pub fn meta_mut(&mut self, key: MetaKey) -> &mut MetaField {
+        self.meta.entry(key).or_default()
+    }
+
+    pub fn ring_mut(&mut self, src: DieId) -> &mut RingBuffer {
+        self.rings.entry(src).or_default()
+    }
+
+    /// Bytes currently accounted to the metadata area (must fit 4 MB).
+    pub fn meta_bytes(&self) -> usize {
+        self.meta.len() * META_FIELD_BYTES
+    }
+}
+
+/// The SuperPod's global shared memory: all dies, addressable by any die.
+#[derive(Debug)]
+pub struct GlobalMemory {
+    dies: Vec<DieMemory>,
+}
+
+impl GlobalMemory {
+    pub fn new(n_dies: usize) -> Self {
+        Self { dies: (0..n_dies).map(|_| DieMemory::default()).collect() }
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.dies.len()
+    }
+
+    pub fn die(&self, id: DieId) -> &DieMemory {
+        &self.dies[id]
+    }
+
+    pub fn die_mut(&mut self, id: DieId) -> &mut DieMemory {
+        &mut self.dies[id]
+    }
+
+    /// Two-die mutable access (sender writing receiver's memory). Panics if
+    /// a == b, mirroring the hardware (no self-send over the fabric).
+    pub fn pair_mut(&mut self, a: DieId, b: DieId) -> (&mut DieMemory, &mut DieMemory) {
+        assert_ne!(a, b, "fabric send requires distinct dies");
+        if a < b {
+            let (lo, hi) = self.dies.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.dies.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+
+    /// Store an app tensor on a die.
+    pub fn put_app(&mut self, die: DieId, name: &str, data: Vec<u8>) {
+        self.dies[die].app.insert(name.to_string(), data);
+    }
+
+    pub fn get_app(&self, die: DieId, name: &str) -> Option<&Vec<u8>> {
+        self.dies[die].app.get(name)
+    }
+
+    pub fn take_app(&mut self, die: DieId, name: &str) -> Option<Vec<u8>> {
+        self.dies[die].app.remove(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pushes_and_pops_in_order() {
+        let mut r = RingBuffer::default();
+        assert!(r.push_chunk(&[1, 2, 3]));
+        assert!(r.push_chunk(&[4, 5]));
+        assert_eq!(r.pop_chunk().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.pop_chunk().unwrap(), vec![4, 5]);
+        assert!(r.pop_chunk().is_none());
+    }
+
+    #[test]
+    fn ring_backpressure_when_full() {
+        let mut r = RingBuffer::default();
+        let chunk = vec![0u8; RING_SLOT_BYTES];
+        for _ in 0..RING_SLOTS {
+            assert!(r.push_chunk(&chunk));
+        }
+        assert!(!r.push_chunk(&chunk), "ring must refuse when full");
+        r.pop_chunk().unwrap();
+        assert!(r.push_chunk(&chunk), "space reclaimed after consume");
+    }
+
+    #[test]
+    fn pair_mut_gives_distinct_dies() {
+        let mut g = GlobalMemory::new(4);
+        let (a, b) = g.pair_mut(3, 1);
+        a.app.insert("x".into(), vec![1]);
+        b.app.insert("y".into(), vec![2]);
+        assert!(g.die(3).app.contains_key("x"));
+        assert!(g.die(1).app.contains_key("y"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn pair_mut_rejects_self_send() {
+        let mut g = GlobalMemory::new(2);
+        let _ = g.pair_mut(1, 1);
+    }
+
+    #[test]
+    fn meta_area_fits_4mb_for_full_pod() {
+        // 768 peers × 48 lanes × 2 directions × 32 B = 2.25 MB < 4 MB budget
+        let fields = 768 * 48 * 2;
+        assert!(fields * META_FIELD_BYTES <= META_AREA_BYTES);
+    }
+
+    #[test]
+    fn app_tensor_roundtrip() {
+        let mut g = GlobalMemory::new(2);
+        g.put_app(0, "kv", vec![7; 128]);
+        assert_eq!(g.get_app(0, "kv").unwrap().len(), 128);
+        assert_eq!(g.take_app(0, "kv").unwrap()[0], 7);
+        assert!(g.get_app(0, "kv").is_none());
+    }
+}

@@ -1,0 +1,34 @@
+//! CloudMatrix384 SuperPod substrate simulator (DESIGN.md S1, paper §2.2).
+//!
+//! The paper's hardware — 48 servers × 8 Ascend 910C chips × 2 dies, a
+//! scale-up UB fabric with global shared memory, per-die AIV cores with
+//! MTE2/MTE3 memory-transfer engines and DMA engines — does not exist here,
+//! so this module provides a **calibrated discrete-event model** of it:
+//!
+//! * [`topology`] — servers/chips/dies/AIV-core identifiers and NPU pools.
+//! * [`memory`]   — per-die byte-addressable memory (real `Vec<u8>`): app
+//!   data area, metadata area (32-byte fields), managed data area (ring
+//!   buffers). XCCL protocols move real bytes through these.
+//! * [`engines`]  — MTE2/MTE3 + DMA/URMA cost models (startup, bandwidth,
+//!   unified-buffer chunking, AIV-core parallelism, link saturation).
+//! * [`clock`]    — virtual nanosecond clock; all latencies are simulated
+//!   time, deterministic given a seed.
+//! * [`fault`]    — fault injection (link flaps, on-chip memory faults,
+//!   hung processes) for the reliability plane (§6).
+//!
+//! Calibration targets (asserted in tests): Fig 5 (≤1 MB / 2 AIV < 20 µs;
+//! 9 MB @ 48 AIV ≈ 2.5–3× faster than @ 2), Fig 6 (dispatch/combine INT8
+//! crossover at batch ≈ 32), §3.3 (A2E 172 µs / E2A 193 µs), Fig 20
+//! (dispatch avg 234 µs, combine avg 312 µs, max ≈ 10× min).
+
+pub mod clock;
+pub mod topology;
+pub mod memory;
+pub mod engines;
+pub mod fault;
+
+pub use clock::SimClock;
+pub use engines::{EngineKind, FabricParams};
+pub use memory::{DieMemory, GlobalMemory, MetaField, META_FIELD_BYTES};
+pub use topology::{DieId, Topology};
+pub use fault::{FaultInjector, FaultKind};

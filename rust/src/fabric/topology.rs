@@ -1,0 +1,133 @@
+//! SuperPod topology: servers → chips → dies → AIV cores (paper §2.2).
+//!
+//! A CloudMatrix384 SuperPod is 48 servers × 8 chips × 2 dies = 768 dies;
+//! each die has up to 48 AIV cores. The UB fabric connects every die to
+//! every other with uniform bandwidth/latency (the paper's key property:
+//! no intra-pod NUMA), which is why [`Topology::same_server`] only matters
+//! for the RoCE/VPC fallback paths (§5.1 heterogeneous prefill).
+
+use crate::config::NpuKind;
+
+/// Globally unique die index within the deployment.
+pub type DieId = usize;
+
+pub const AIV_CORES_PER_DIE: usize = 48;
+pub const DIES_PER_CHIP: usize = 2;
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_servers: usize,
+    pub chips_per_server: usize,
+    /// NPU generation per server (heterogeneous PD, §5.1).
+    pub server_kind: Vec<NpuKind>,
+}
+
+impl Topology {
+    pub fn cloudmatrix(n_servers: usize, chips_per_server: usize) -> Self {
+        Self {
+            n_servers,
+            chips_per_server,
+            server_kind: vec![NpuKind::Ascend910C; n_servers],
+        }
+    }
+
+    /// Full 48-server SuperPod.
+    pub fn full_superpod() -> Self {
+        Self::cloudmatrix(48, 8)
+    }
+
+    /// Heterogeneous pool: `n_910c` CloudMatrix servers + `n_910b` scale-out
+    /// prefill servers (§5.1).
+    pub fn heterogeneous(n_910c: usize, n_910b: usize, chips_per_server: usize) -> Self {
+        let mut kind = vec![NpuKind::Ascend910C; n_910c];
+        kind.extend(std::iter::repeat(NpuKind::Ascend910B).take(n_910b));
+        Self { n_servers: n_910c + n_910b, chips_per_server, server_kind: kind }
+    }
+
+    pub fn dies_per_server(&self) -> usize {
+        self.chips_per_server * DIES_PER_CHIP
+    }
+
+    pub fn total_dies(&self) -> usize {
+        self.n_servers * self.dies_per_server()
+    }
+
+    pub fn total_chips(&self) -> usize {
+        self.n_servers * self.chips_per_server
+    }
+
+    pub fn server_of(&self, die: DieId) -> usize {
+        die / self.dies_per_server()
+    }
+
+    pub fn chip_of(&self, die: DieId) -> usize {
+        die / DIES_PER_CHIP
+    }
+
+    pub fn same_server(&self, a: DieId, b: DieId) -> bool {
+        self.server_of(a) == self.server_of(b)
+    }
+
+    pub fn same_chip(&self, a: DieId, b: DieId) -> bool {
+        self.chip_of(a) == self.chip_of(b)
+    }
+
+    pub fn kind_of(&self, die: DieId) -> NpuKind {
+        self.server_kind[self.server_of(die)]
+    }
+
+    /// Dies eligible for the UB fabric (910C only).
+    pub fn ub_dies(&self) -> Vec<DieId> {
+        (0..self.total_dies())
+            .filter(|&d| self.kind_of(d) == NpuKind::Ascend910C)
+            .collect()
+    }
+
+    /// Number of potential p2p NPU pairs (paper: "roughly 300K pairs" for a
+    /// full SuperPod of 768 dies).
+    pub fn p2p_pairs(&self) -> usize {
+        let n = self.total_dies();
+        n * (n - 1) / 2
+    }
+
+    /// Metadata fields needed per die for p2p (§3.1: one per AIV-core pair
+    /// per peer die ≈ 74K fields for the full pod).
+    pub fn p2p_meta_fields(&self) -> usize {
+        self.total_dies() * AIV_CORES_PER_DIE * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_superpod_has_768_dies_and_300k_pairs() {
+        let t = Topology::full_superpod();
+        assert_eq!(t.total_dies(), 768);
+        assert_eq!(t.total_chips(), 384);
+        // paper §3.1: "roughly 300K potential pairs"
+        assert!(t.p2p_pairs() > 290_000 && t.p2p_pairs() < 310_000);
+        // paper §3.1: 384 × 2 × 48 × 2 ≈ 74K metadata fields
+        assert_eq!(t.p2p_meta_fields(), 768 * 48 * 2);
+    }
+
+    #[test]
+    fn die_to_server_mapping() {
+        let t = Topology::cloudmatrix(2, 8);
+        assert_eq!(t.total_dies(), 32);
+        assert_eq!(t.server_of(0), 0);
+        assert_eq!(t.server_of(15), 0);
+        assert_eq!(t.server_of(16), 1);
+        assert!(t.same_chip(0, 1));
+        assert!(!t.same_chip(1, 2));
+    }
+
+    #[test]
+    fn heterogeneous_pool_kinds() {
+        let t = Topology::heterogeneous(1, 1, 8);
+        assert_eq!(t.kind_of(0), NpuKind::Ascend910C);
+        assert_eq!(t.kind_of(16), NpuKind::Ascend910B);
+        assert_eq!(t.ub_dies().len(), 16);
+    }
+}

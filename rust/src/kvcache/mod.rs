@@ -1,0 +1,12 @@
+//! KV-cache management (DESIGN.md S15): paged block accounting per DP group
+//! plus the INT8 transfer codec for the cache's non-RoPE component (§4.7).
+//!
+//! The real cache payloads live in [`crate::model::SeqKv`]; this module owns
+//! *capacity*: block allocation, usage statistics (the decode load
+//! balancer's signal, §4.3), reservation headroom for long outputs, and
+//! swap-pressure detection.
+
+pub mod pool;
+pub mod quant;
+
+pub use pool::{BlockPool, KvUsage, SeqAlloc};

@@ -1,0 +1,228 @@
+//! Paged KV block pool (vLLM-style paging, per DP group).
+//!
+//! Decode load balancing (§4.3) reads [`BlockPool::usage`]: the TE-shell
+//! "collects periodic KV cache stats" and routes to the group with the
+//! lowest usage after excluding groups at their batch limit, "accounting
+//! for reserved space needed for long outputs".
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Tokens per KV block.
+pub const BLOCK_TOKENS: usize = 16;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvUsage {
+    pub total_blocks: usize,
+    pub used_blocks: usize,
+    pub reserved_blocks: usize,
+}
+
+impl KvUsage {
+    /// Usage fraction including reservations (the §4.3 routing signal).
+    pub fn fraction(&self) -> f64 {
+        (self.used_blocks + self.reserved_blocks) as f64 / self.total_blocks.max(1) as f64
+    }
+}
+
+/// Per-sequence allocation handle.
+#[derive(Clone, Debug)]
+pub struct SeqAlloc {
+    pub seq_id: u64,
+    pub blocks: Vec<usize>,
+    pub tokens: usize,
+    /// Blocks reserved ahead for expected output length.
+    pub reserved: usize,
+}
+
+/// Block pool for one DP group.
+#[derive(Debug)]
+pub struct BlockPool {
+    free: Vec<usize>,
+    total: usize,
+    seqs: HashMap<u64, SeqAlloc>,
+    reserved_total: usize,
+}
+
+impl BlockPool {
+    pub fn new(total_blocks: usize) -> Self {
+        Self {
+            free: (0..total_blocks).rev().collect(),
+            total: total_blocks,
+            seqs: HashMap::new(),
+            reserved_total: 0,
+        }
+    }
+
+    pub fn blocks_for_tokens(tokens: usize) -> usize {
+        tokens.div_ceil(BLOCK_TOKENS)
+    }
+
+    /// Admit a sequence: allocate blocks for `prompt_tokens` and reserve
+    /// headroom for `expected_output` more (§4.3). Fails (backpressure) if
+    /// capacity is insufficient — the caller defers the RECV (§5.1 step 6).
+    pub fn admit(&mut self, seq_id: u64, prompt_tokens: usize, expected_output: usize) -> Result<()> {
+        if self.seqs.contains_key(&seq_id) {
+            bail!("seq {seq_id} already admitted");
+        }
+        let need = Self::blocks_for_tokens(prompt_tokens);
+        let reserve = Self::blocks_for_tokens(expected_output);
+        let available = self.free.len().saturating_sub(self.reserved_total);
+        if available < need + reserve {
+            bail!(
+                "kv capacity: need {need}+{reserve} blocks, have {available} unreserved"
+            );
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        // Reserved blocks stay in the free list but are accounted, so other
+        // admissions can't take them.
+        self.reserved_total += reserve;
+        self.seqs.insert(
+            seq_id,
+            SeqAlloc { seq_id, blocks, tokens: prompt_tokens, reserved: reserve },
+        );
+        Ok(())
+    }
+
+    /// Extend a sequence by one decoded token, drawing from its reservation
+    /// first.
+    pub fn append_token(&mut self, seq_id: u64) -> Result<()> {
+        let alloc = self
+            .seqs
+            .get_mut(&seq_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown seq {seq_id}"))?;
+        alloc.tokens += 1;
+        let need = Self::blocks_for_tokens(alloc.tokens);
+        if need > alloc.blocks.len() {
+            if self.free.is_empty() {
+                bail!("kv pool exhausted for seq {seq_id} (swap pressure)");
+            }
+            alloc.blocks.push(self.free.pop().unwrap());
+            if alloc.reserved > 0 {
+                alloc.reserved -= 1;
+                self.reserved_total -= 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a finished sequence's blocks + remaining reservation.
+    pub fn release(&mut self, seq_id: u64) -> Result<()> {
+        let alloc = self
+            .seqs
+            .remove(&seq_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown seq {seq_id}"))?;
+        self.reserved_total -= alloc.reserved;
+        self.free.extend(alloc.blocks);
+        Ok(())
+    }
+
+    pub fn usage(&self) -> KvUsage {
+        KvUsage {
+            total_blocks: self.total,
+            used_blocks: self.total - self.free.len(),
+            reserved_blocks: self.reserved_total,
+        }
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Free capacity check used by admission control before a KV RECV.
+    pub fn can_admit(&self, prompt_tokens: usize, expected_output: usize) -> bool {
+        let need =
+            Self::blocks_for_tokens(prompt_tokens) + Self::blocks_for_tokens(expected_output);
+        self.free.len().saturating_sub(self.reserved_total) >= need
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn admit_extend_release_cycle() {
+        let mut p = BlockPool::new(10);
+        p.admit(1, 30, 16).unwrap(); // 2 blocks + 1 reserved
+        let u = p.usage();
+        assert_eq!(u.used_blocks, 2);
+        assert_eq!(u.reserved_blocks, 1);
+        // extend within the same block
+        p.append_token(1).unwrap();
+        assert_eq!(p.usage().used_blocks, 2);
+        // cross a block boundary: 32 -> 33 tokens needs 3rd block
+        p.append_token(1).unwrap();
+        p.append_token(1).unwrap();
+        assert_eq!(p.usage().used_blocks, 3);
+        assert_eq!(p.usage().reserved_blocks, 0, "reservation consumed");
+        p.release(1).unwrap();
+        assert_eq!(p.usage().used_blocks, 0);
+    }
+
+    #[test]
+    fn admission_respects_reservations() {
+        let mut p = BlockPool::new(4);
+        p.admit(1, 16, 32).unwrap(); // 1 used + 2 reserved
+        assert!(!p.can_admit(32, 0), "only 1 unreserved block left");
+        assert!(p.can_admit(16, 0));
+        assert!(p.admit(2, 48, 0).is_err(), "must fail, not over-allocate");
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut p = BlockPool::new(8);
+        p.admit(5, 4, 0).unwrap();
+        assert!(p.admit(5, 4, 0).is_err());
+    }
+
+    #[test]
+    fn prop_no_leaks_under_random_workload() {
+        check("kv-pool-no-leaks", PropConfig { cases: 40, ..Default::default() }, |rng, size| {
+            let total = 16 + size * 4;
+            let mut p = BlockPool::new(total);
+            let mut live: Vec<u64> = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                match rng.index(3) {
+                    0 => {
+                        let toks = rng.range(1, 64) as usize;
+                        let res = rng.range(0, 32) as usize;
+                        if p.can_admit(toks, res) {
+                            p.admit(next_id, toks, res).map_err(|e| e.to_string())?;
+                            live.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let id = live[rng.index(live.len())];
+                            let _ = p.append_token(id);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let id = live.swap_remove(rng.index(live.len()));
+                            p.release(id).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                let u = p.usage();
+                prop_assert!(
+                    u.used_blocks + u.reserved_blocks <= total + u.reserved_blocks,
+                    "accounting broke"
+                );
+            }
+            for id in live {
+                p.release(id).map_err(|e| e.to_string())?;
+            }
+            let u = p.usage();
+            prop_assert!(u.used_blocks == 0, "leaked {} blocks", u.used_blocks);
+            prop_assert!(u.reserved_blocks == 0, "leaked reservations");
+            Ok(())
+        });
+    }
+}

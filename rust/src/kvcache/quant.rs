@@ -1,0 +1,154 @@
+//! KV-cache INT8 transfer codec (§4.7 "KV Cache Quantization").
+//!
+//! The MLA cache has a non-RoPE component (compressed latent, numerically
+//! stable → quantized to INT8) and a RoPE component (kept f32). This codec
+//! packs a [`crate::model::SeqKv`] for PD KV transfer: the latent rows are
+//! quantized per (layer, position) row, RoPE rows ship raw — cutting the
+//! dominant share of transfer bytes roughly 4×.
+
+use anyhow::Result;
+
+use crate::model::SeqKv;
+use crate::xccl::quant;
+
+/// Encode only the first `len` positions of each layer (the live prefix).
+pub fn encode_kv(kv: &SeqKv, l: usize, s: usize, c: usize, r: usize) -> Vec<u8> {
+    let len = kv.len;
+    let mut out = Vec::new();
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    for li in 0..l {
+        // latent rows [len, C] as f32 → int8 block
+        let mut rows = Vec::with_capacity(len * c);
+        for p in 0..len {
+            let off = ((li * s + p) * c) * 4;
+            for ci in 0..c {
+                let b = &kv.lat[off + ci * 4..off + ci * 4 + 4];
+                rows.push(f32::from_le_bytes(b.try_into().unwrap()));
+            }
+        }
+        let block = quant::encode_block(&rows, c.max(1));
+        out.extend_from_slice(&(block.len() as u32).to_le_bytes());
+        out.extend_from_slice(&block);
+        // rope rows raw f32
+        for p in 0..len {
+            let off = ((li * s + p) * r) * 4;
+            out.extend_from_slice(&kv.rope[off..off + r * 4]);
+        }
+    }
+    out
+}
+
+/// Decode into a fresh SeqKv (padded to [L, S, ·]).
+pub fn decode_kv(bytes: &[u8], l: usize, s: usize, c: usize, r: usize) -> Result<SeqKv> {
+    anyhow::ensure!(bytes.len() >= 4, "short kv blob");
+    let len = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    anyhow::ensure!(len <= s, "kv len {len} > max_seq {s}");
+    let mut kv = SeqKv::empty(l, s, c, r);
+    kv.len = len;
+    let mut off = 4usize;
+    for li in 0..l {
+        let blen = u32::from_le_bytes(bytes[off..off + 4].try_into()?) as usize;
+        off += 4;
+        let (rows, d) = quant::decode_block(&bytes[off..off + blen])?;
+        anyhow::ensure!(d == c && rows.len() == len * c, "latent block shape");
+        off += blen;
+        for p in 0..len {
+            let dst = ((li * s + p) * c) * 4;
+            for ci in 0..c {
+                kv.lat[dst + ci * 4..dst + ci * 4 + 4]
+                    .copy_from_slice(&rows[p * c + ci].to_le_bytes());
+            }
+        }
+        let rbytes = len * r * 4;
+        for p in 0..len {
+            let dst = ((li * s + p) * r) * 4;
+            let src = off + p * r * 4;
+            kv.rope[dst..dst + r * 4].copy_from_slice(&bytes[src..src + r * 4]);
+        }
+        off += rbytes;
+    }
+    Ok(kv)
+}
+
+/// Wire size savings vs shipping the raw live prefix.
+pub fn compression_ratio(len: usize, l: usize, c: usize, r: usize) -> f64 {
+    let raw = (l * len * (c + r) * 4) as f64;
+    let packed = (4 + l * (4 + 8 + 4 * len + len * c + len * r * 4)) as f64;
+    raw / packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_kv(l: usize, s: usize, c: usize, r: usize, len: usize, seed: u64) -> SeqKv {
+        let mut kv = SeqKv::empty(l, s, c, r);
+        kv.len = len;
+        let mut rng = Rng::new(seed);
+        for li in 0..l {
+            for p in 0..len {
+                for ci in 0..c {
+                    let off = ((li * s + p) * c + ci) * 4;
+                    let v = rng.normal() as f32;
+                    kv.lat[off..off + 4].copy_from_slice(&v.to_le_bytes());
+                }
+                for ri in 0..r {
+                    let off = ((li * s + p) * r + ri) * 4;
+                    let v = rng.normal() as f32;
+                    kv.rope[off..off + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn roundtrip_preserves_rope_exactly_and_latent_closely() {
+        let (l, s, c, r, len) = (4, 160, 32, 16, 37);
+        let kv = random_kv(l, s, c, r, len, 3);
+        let blob = encode_kv(&kv, l, s, c, r);
+        let back = decode_kv(&blob, l, s, c, r).unwrap();
+        assert_eq!(back.len, len);
+        // RoPE part must be bit-exact (not quantized, §4.7)
+        for li in 0..l {
+            for p in 0..len {
+                let off = ((li * s + p) * r) * 4;
+                assert_eq!(&back.rope[off..off + r * 4], &kv.rope[off..off + r * 4]);
+            }
+        }
+        // latent within INT8 tolerance per row
+        for li in 0..l {
+            for p in 0..len {
+                let mut amax = 0f32;
+                for ci in 0..c {
+                    let off = ((li * s + p) * c + ci) * 4;
+                    let v = f32::from_le_bytes(kv.lat[off..off + 4].try_into().unwrap());
+                    amax = amax.max(v.abs());
+                }
+                for ci in 0..c {
+                    let off = ((li * s + p) * c + ci) * 4;
+                    let a = f32::from_le_bytes(kv.lat[off..off + 4].try_into().unwrap());
+                    let b = f32::from_le_bytes(back.lat[off..off + 4].try_into().unwrap());
+                    assert!((a - b).abs() <= amax / 127.0 * 0.51 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compresses_latent_dominated_caches() {
+        // c >> r: compression approaches 4x
+        let ratio = compression_ratio(128, 4, 512, 16);
+        assert!(ratio > 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_oversized_len() {
+        let (l, s, c, r) = (2, 16, 8, 4);
+        let kv = random_kv(l, s, c, r, 10, 1);
+        let mut blob = encode_kv(&kv, l, s, c, r);
+        blob[0..4].copy_from_slice(&(100u32).to_le_bytes());
+        assert!(decode_kv(&blob, l, s, c, r).is_err());
+    }
+}

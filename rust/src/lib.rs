@@ -1,0 +1,38 @@
+//! # xdeepserve — reproduction of *Huawei Cloud Model-as-a-Service on the
+//! CloudMatrix384 SuperPod* (xDeepServe, CS.DC 2025)
+//!
+//! Three-layer architecture (DESIGN.md):
+//!
+//! * **L3 (this crate)** — the FlowServe serving engine: decentralized DP
+//!   groups + TE-shell ([`coordinator`]), XCCL memory-semantic communication
+//!   ([`xccl`]) over a simulated CloudMatrix384 SuperPod ([`fabric`]),
+//!   expert load balancing ([`eplb`]), MTP speculative decoding ([`mtp`]),
+//!   Transformerless disaggregation ([`disagg`]), DistFlow KV transfer
+//!   ([`distflow`]), and the reliability plane ([`reliability`]).
+//! * **L2/L1 (python, build-time only)** — the MiniDeepSeek MLA+MoE model
+//!   and its Pallas kernels, AOT-lowered to HLO text under `artifacts/`.
+//! * **Runtime bridge** — [`runtime`] loads the HLO artifacts through the
+//!   PJRT C API (`xla` crate) and executes them on the request path with no
+//!   Python anywhere.
+
+pub mod util;
+pub mod config;
+pub mod fabric;
+pub mod xccl;
+pub mod runtime;
+pub mod model;
+pub mod kvcache;
+pub mod workload;
+pub mod metrics;
+pub mod coordinator;
+pub mod eplb;
+pub mod mtp;
+pub mod distflow;
+pub mod disagg;
+pub mod reliability;
+pub mod bench_support;
+
+pub use config::Config;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

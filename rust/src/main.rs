@@ -1,0 +1,192 @@
+//! xdeepserve CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve        — run the real-execution FlowServe engine on a workload
+//!                  (requires `make artifacts`)
+//!   simulate     — SuperPod-scale decode simulation (colocated or
+//!                  disaggregated preset), printing the §7.1 metrics
+//!   inspect      — print the artifact manifest / deployment presets
+//!
+//! Examples:
+//!   xdeepserve serve --requests 8 --max-new 24 --mtp 1
+//!   xdeepserve simulate --preset disagg_768 --seq 3000
+//!   xdeepserve inspect --artifacts artifacts
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use xdeepserve::config::{Config, DecodeLbPolicy, DeploymentConfig};
+use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::{DpGroup, ServeRequest, TeShell};
+use xdeepserve::disagg::DisaggDeployment;
+use xdeepserve::model::{ServedModel, Tokenizer};
+use xdeepserve::metrics::ServingMetrics;
+use xdeepserve::runtime::Engine;
+use xdeepserve::util::args::Args;
+use xdeepserve::workload::{TraceKind, WorkloadGen};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(&args),
+        Some("simulate") => simulate(&args),
+        Some("inspect") => inspect(&args),
+        _ => {
+            eprintln!(
+                "usage: xdeepserve <serve|simulate|inspect> [--opt value]...\n\
+                 see rust/src/main.rs header for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let n_requests = args.get_usize("requests", 6);
+    let max_new = args.get_usize("max-new", 16);
+    let n_groups = args.get_usize("dp-groups", 2);
+    let mtp = args.get_usize("mtp", 1) > 0;
+    let int8 = args.has_flag("int8");
+
+    println!("loading artifacts from {artifacts}/ ...");
+    let engine = Engine::load(&artifacts)?;
+    println!("PJRT platform: {}", engine.platform());
+    let model = ServedModel::new(&engine);
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+
+    // frontend sink via output shortcutting
+    let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
+    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
+
+    let mut groups: Vec<DpGroup> = (0..n_groups)
+        .map(|i| {
+            let mut g = DpGroup::new(i, 4, 4096);
+            g.out_tx = Some(shortcut.sender());
+            g.use_mtp = mtp;
+            g.int8 = int8;
+            g
+        })
+        .collect();
+    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+
+    let mut gen = WorkloadGen::new(7);
+    let reqs = gen.generate(TraceKind::ShareGpt, n_requests, 0.0);
+    let t0 = std::time::Instant::now();
+    for r in &reqs {
+        let toks = tokenizer.encode(&r.prompt);
+        let toks = toks[..toks.len().min(engine.manifest.model.prefill_seq)].to_vec();
+        shell.dispatch(ServeRequest::new(r.id, toks, max_new, 0), &mut groups)?;
+    }
+
+    let mut metrics = ServingMetrics::new();
+    loop {
+        let mut any = false;
+        for g in groups.iter_mut() {
+            let now = t0.elapsed().as_nanos() as u64;
+            g.admit_from_queue(&model, now)?;
+            let now = t0.elapsed().as_nanos() as u64;
+            if g.decode_iteration(&model, now)? > 0 {
+                any = true;
+            }
+        }
+        shell.drain_waiting(&mut groups)?;
+        if !any && groups.iter().all(|g| g.is_idle()) {
+            break;
+        }
+    }
+
+    let mut finished = 0;
+    for g in groups.iter_mut() {
+        for r in g.finished.drain(..) {
+            metrics.record_request(&r.timing);
+            finished += 1;
+        }
+    }
+    drop(shortcut);
+    let mut texts = 0;
+    while let Ok(msg) = sink_rx.try_recv() {
+        if let FrontendMsg::Done { req_id, full_text } = msg {
+            texts += 1;
+            if texts <= 3 {
+                let end = full_text.len().min(48);
+                println!("req {req_id} -> {:?}", &full_text[..end]);
+            }
+        }
+    }
+    println!(
+        "served {finished} requests in {:.2}s\n{}",
+        t0.elapsed().as_secs_f64(),
+        metrics.report()
+    );
+    for g in &groups {
+        if g.mtp_drafts > 0 {
+            println!("DP{} MTP acceptance: {:.1}%", g.id, g.mtp_acceptance() * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "disagg_768");
+    let seq = args.get_usize("seq", 3000);
+    match preset.as_str() {
+        "disagg_768" => {
+            let d = DisaggDeployment::paper();
+            let it = d.iteration(seq);
+            println!(
+                "disaggregated MoE-Attention (768 dies, 3x160 DP + EP288, batch 96):\n\
+                 global batch {}  iteration {:.1} ms  effective TPOT {:.1} ms\n\
+                 throughput {:.0} tokens/s/chip  (paper: ~93 ms, ~49 ms, 2400 tok/s/chip)",
+                d.global_batch(),
+                it.total_ns as f64 / 1e6,
+                it.effective_tpot_ns as f64 / 1e6,
+                it.tokens_per_chip_per_s
+            );
+        }
+        _ => {
+            let dep = DeploymentConfig::colocated_dp288();
+            println!(
+                "colocated preset: {} dies, DP{} EP{} batch {} (global {})",
+                dep.total_dies(),
+                dep.dp_groups,
+                dep.ep_size,
+                dep.batch_per_die,
+                dep.dp_groups * dep.batch_per_die
+            );
+            println!("run `cargo bench --bench tab71_decode_throughput` for the full table");
+        }
+    }
+    Ok(())
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match Engine::load(&artifacts) {
+        Ok(engine) => {
+            let m = &engine.manifest;
+            println!(
+                "model: {} layers, d={}, {} experts top-{}, vocab {}",
+                m.model.n_layers, m.model.d_model, m.model.n_experts, m.model.top_k,
+                m.model.vocab
+            );
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            for n in names {
+                let a = &m.artifacts[n];
+                println!(
+                    "  {:<18} weights={:<3} runtime_args={} outputs={:?}",
+                    a.name,
+                    a.weight_args.len(),
+                    a.runtime_args.len(),
+                    a.outputs
+                );
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); run `make artifacts`"),
+    }
+    let cfg = Config::default();
+    println!("default deployment: {:?}", cfg.deployment);
+    Ok(())
+}

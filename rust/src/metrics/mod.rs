@@ -1,0 +1,161 @@
+//! Serving metrics: TTFT / TPOT / throughput recorders and SLA reports
+//! (§7.2: TTFT SLA < 2 s, TPOT SLA 35 ms).
+//!
+//! Dual-clock aware: simulated experiments record virtual ns, real-execution
+//! examples record wall-clock ns — the report maths is identical.
+
+use std::collections::HashMap;
+
+use crate::util::stats::Histogram;
+
+/// Lifecycle timestamps for one request (ns on whichever clock is in use).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestTiming {
+    pub arrival_ns: u64,
+    pub prefill_done_ns: u64,
+    pub first_token_ns: u64,
+    pub done_ns: u64,
+    pub tokens_out: u64,
+}
+
+impl RequestTiming {
+    pub fn ttft_ms(&self) -> f64 {
+        (self.first_token_ns.saturating_sub(self.arrival_ns)) as f64 / 1e6
+    }
+
+    /// Time-per-output-token after the first token.
+    pub fn tpot_ms(&self) -> f64 {
+        if self.tokens_out <= 1 {
+            return 0.0;
+        }
+        (self.done_ns.saturating_sub(self.first_token_ns)) as f64
+            / 1e6
+            / (self.tokens_out - 1) as f64
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub ttft_ms: Histogram,
+    pub tpot_ms: Histogram,
+    pub e2e_ms: Histogram,
+    pub tokens_out: u64,
+    pub requests_done: u64,
+    pub span_ns: u64,
+    /// Named latency components (decode breakdown, XCCL phases, ...).
+    pub components: HashMap<String, Histogram>,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, t: &RequestTiming) {
+        self.ttft_ms.record(t.ttft_ms());
+        if t.tokens_out > 1 {
+            self.tpot_ms.record(t.tpot_ms());
+        }
+        self.e2e_ms
+            .record((t.done_ns.saturating_sub(t.arrival_ns)) as f64 / 1e6);
+        self.tokens_out += t.tokens_out;
+        self.requests_done += 1;
+        self.span_ns = self.span_ns.max(t.done_ns);
+    }
+
+    pub fn record_component(&mut self, name: &str, value: f64) {
+        self.components
+            .entry(name.to_string())
+            .or_default()
+            .record(value);
+    }
+
+    /// Output tokens per second over the measured span.
+    pub fn throughput_tps(&self) -> f64 {
+        if self.span_ns == 0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / (self.span_ns as f64 / 1e9)
+    }
+
+    /// SLA attainment fractions.
+    pub fn sla_attainment(&mut self, ttft_ms: f64, tpot_ms: f64) -> (f64, f64) {
+        let frac = |h: &Histogram, lim: f64| {
+            if h.is_empty() {
+                return 1.0;
+            }
+            // count via copy (Histogram keeps raw samples)
+            let mut ok = 0usize;
+            let mut n = 0usize;
+            let mut probe = h.clone();
+            for p in 1..=100 {
+                let v = probe.percentile(p as f64);
+                n += 1;
+                if v <= lim {
+                    ok += 1;
+                }
+            }
+            ok as f64 / n as f64
+        };
+        (frac(&self.ttft_ms, ttft_ms), frac(&self.tpot_ms, tpot_ms))
+    }
+
+    pub fn report(&mut self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s\n  TTFT {}\n  TPOT {}\n  E2E  {}",
+            self.requests_done,
+            self.tokens_out,
+            self.throughput_tps(),
+            self.ttft_ms.summary("ms"),
+            self.tpot_ms.summary("ms"),
+            self.e2e_ms.summary("ms"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(arr: u64, first: u64, done: u64, toks: u64) -> RequestTiming {
+        RequestTiming {
+            arrival_ns: arr,
+            prefill_done_ns: first,
+            first_token_ns: first,
+            done_ns: done,
+            tokens_out: toks,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_math() {
+        let t = timing(0, 900_000_000, 900_000_000 + 99 * 35_000_000, 100);
+        assert!((t.ttft_ms() - 900.0).abs() < 1e-9);
+        assert!((t.tpot_ms() - 35.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_over_span() {
+        let mut m = ServingMetrics::new();
+        m.record_request(&timing(0, 1_000_000, 1_000_000_000, 100));
+        m.record_request(&timing(0, 2_000_000, 2_000_000_000, 100));
+        // 200 tokens over 2 s
+        assert!((m.throughput_tps() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn sla_attainment_counts() {
+        let mut m = ServingMetrics::new();
+        // 1 fast + 1 slow TTFT
+        m.record_request(&timing(0, 500_000_000, 600_000_000, 10)); // ttft 500ms
+        m.record_request(&timing(0, 3_000_000_000, 3_100_000_000, 10)); // 3000ms
+        let (ttft_ok, _) = m.sla_attainment(2000.0, 35.0);
+        assert!(ttft_ok > 0.4 && ttft_ok < 0.6, "half within SLA: {ttft_ok}");
+    }
+
+    #[test]
+    fn single_token_request_has_no_tpot() {
+        let t = timing(0, 10, 10, 1);
+        assert_eq!(t.tpot_ms(), 0.0);
+    }
+}

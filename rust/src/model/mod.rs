@@ -1,0 +1,10 @@
+//! Model-serving glue: tokenizer, sampler, and the typed wrapper around the
+//! AOT artifacts ([`ServedModel`]) used by DP-group executors.
+
+pub mod tokenizer;
+pub mod sampler;
+pub mod served;
+
+pub use sampler::Sampler;
+pub use served::{DecodeOut, PrefillOut, SeqKv, ServedModel};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,85 @@
+//! Token sampling. The paper's evaluation uses greedy sampling for both the
+//! MTP module and the main model (§7.1); temperature sampling is provided
+//! for production-style runs.
+
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub enum Sampler {
+    Greedy,
+    Temperature { temp: f64 },
+}
+
+impl Sampler {
+    /// Sample one token per row from a [B, V] logits tensor.
+    pub fn sample(&self, logits: &Tensor, rng: &mut Rng) -> anyhow::Result<Vec<i32>> {
+        match self {
+            Sampler::Greedy => Ok(logits
+                .argmax_rows()?
+                .into_iter()
+                .map(|i| i as i32)
+                .collect()),
+            Sampler::Temperature { temp } => {
+                let (rows, cols) = (logits.shape[0], logits.shape[1]);
+                let v = logits.as_f32()?;
+                let mut out = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let row = &v[r * cols..(r + 1) * cols];
+                    let m = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+                    let probs: Vec<f64> = row
+                        .iter()
+                        .map(|x| (((x - m) as f64) / temp.max(1e-6)).exp())
+                        .collect();
+                    let z: f64 = probs.iter().sum();
+                    let mut u = rng.f64() * z;
+                    let mut pick = cols - 1;
+                    for (i, p) in probs.iter().enumerate() {
+                        u -= p;
+                        if u <= 0.0 {
+                            pick = i;
+                            break;
+                        }
+                    }
+                    out.push(pick as i32);
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let t = Tensor::from_f32(vec![2, 4], &[0., 3., 1., 2., 9., 0., 0., 0.]).unwrap();
+        let s = Sampler::Greedy;
+        let mut rng = Rng::new(1);
+        assert_eq!(s.sample(&t, &mut rng).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let t = Tensor::from_f32(vec![1, 3], &[0.0, 5.0, 1.0]).unwrap();
+        let s = Sampler::Temperature { temp: 0.01 };
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            assert_eq!(s.sample(&t, &mut rng).unwrap(), vec![1]);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let t = Tensor::from_f32(vec![1, 3], &[0.0, 0.1, 0.05]).unwrap();
+        let s = Sampler::Temperature { temp: 100.0 };
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(s.sample(&t, &mut rng).unwrap()[0]);
+        }
+        assert!(seen.len() >= 2, "high temp should explore");
+    }
+}

@@ -1,0 +1,354 @@
+//! [`ServedModel`]: typed, bucket-aware wrapper around the AOT artifacts.
+//!
+//! Owns the shape plumbing between the serving engine's per-sequence state
+//! and the static-shape "graph mode" executables: per-sequence KV caches are
+//! gathered into `[L, B, S, C]` batch tensors for the decode bucket, and
+//! scattered back after the step. Prefill runs the `prefill_s128` bucket
+//! with length masking (the paper's eager mode with dynamic lengths).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::tensor::{DType, Tensor};
+use crate::runtime::Engine;
+
+/// Per-sequence KV cache: the MLA compressed latent (non-RoPE) and RoPE
+/// parts, stored as raw f32 LE bytes `[L, S, C]` / `[L, S, R]`.
+#[derive(Clone, Debug)]
+pub struct SeqKv {
+    pub lat: Vec<u8>,
+    pub rope: Vec<u8>,
+    /// Tokens currently materialized in the cache (= next write position).
+    pub len: usize,
+}
+
+impl SeqKv {
+    pub fn empty(l: usize, s: usize, c: usize, r: usize) -> Self {
+        Self { lat: vec![0u8; l * s * c * 4], rope: vec![0u8; l * s * r * 4], len: 0 }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.lat.len() + self.rope.len()
+    }
+}
+
+/// Prefill output for one sequence.
+pub struct PrefillOut {
+    pub logits: Tensor, // [1, V]
+    pub hidden: Vec<f32>,
+    pub kv: SeqKv,
+}
+
+/// Decode output for one batch entry.
+pub struct DecodeOut {
+    pub logits_row: Vec<f32>,
+    pub hidden_row: Vec<f32>,
+}
+
+pub struct ServedModel<'e> {
+    pub engine: &'e Engine,
+    l: usize,
+    s: usize,
+    c: usize,
+    r: usize,
+    d: usize,
+    v: usize,
+}
+
+impl<'e> ServedModel<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        let m = &engine.manifest.model;
+        Self {
+            l: m.n_layers,
+            s: m.max_seq,
+            c: m.c_latent,
+            r: m.r_rope,
+            d: m.d_model,
+            v: m.vocab,
+            engine,
+        }
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.s
+    }
+
+    pub fn empty_kv(&self) -> SeqKv {
+        SeqKv::empty(self.l, self.s, self.c, self.r)
+    }
+
+    /// Prefill one prompt (≤ prefill bucket tokens). Eager-mode path.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        let bucket = self.engine.manifest.model.prefill_seq;
+        if prompt.is_empty() || prompt.len() > bucket {
+            bail!("prompt length {} outside (0, {bucket}]", prompt.len());
+        }
+        let mut padded = prompt.to_vec();
+        padded.resize(bucket, 0);
+        let out = self.engine.execute(
+            "prefill_s128",
+            &[
+                Tensor::from_i32(vec![1, bucket], &padded)?,
+                Tensor::scalar_i32(prompt.len() as i32),
+            ],
+        )?;
+        // outputs: logits [1,V], hidden [1,D], lat [L,1,S,C], rope [L,1,S,R]
+        let hidden = out[1].as_f32()?;
+        let kv = SeqKv {
+            lat: out[2].data.clone(),
+            rope: out[3].data.clone(),
+            len: prompt.len(),
+        };
+        Ok(PrefillOut { logits: out[0].clone(), hidden, kv })
+    }
+
+    fn gather_batch(&self, kvs: &[&SeqKv], bucket: usize) -> (Tensor, Tensor) {
+        let (l, s, c, r) = (self.l, self.s, self.c, self.r);
+        let mut lat = vec![0u8; l * bucket * s * c * 4];
+        let mut rope = vec![0u8; l * bucket * s * r * 4];
+        for (b, kv) in kvs.iter().enumerate() {
+            for li in 0..l {
+                let row_c = s * c * 4;
+                let dst = ((li * bucket + b) * s * c) * 4;
+                lat[dst..dst + row_c].copy_from_slice(&kv.lat[li * row_c..(li + 1) * row_c]);
+                let row_r = s * r * 4;
+                let dst = ((li * bucket + b) * s * r) * 4;
+                rope[dst..dst + row_r]
+                    .copy_from_slice(&kv.rope[li * row_r..(li + 1) * row_r]);
+            }
+        }
+        (
+            Tensor { dtype: DType::F32, shape: vec![l, bucket, s, c], data: lat },
+            Tensor { dtype: DType::F32, shape: vec![l, bucket, s, r], data: rope },
+        )
+    }
+
+    fn scatter_batch(&self, kvs: &mut [&mut SeqKv], lat: &Tensor, rope: &Tensor, bucket: usize) {
+        let (l, s, c, r) = (self.l, self.s, self.c, self.r);
+        for (b, kv) in kvs.iter_mut().enumerate() {
+            for li in 0..l {
+                let row_c = s * c * 4;
+                let src = ((li * bucket + b) * s * c) * 4;
+                kv.lat[li * row_c..(li + 1) * row_c]
+                    .copy_from_slice(&lat.data[src..src + row_c]);
+                let row_r = s * r * 4;
+                let src = ((li * bucket + b) * s * r) * 4;
+                kv.rope[li * row_r..(li + 1) * row_r]
+                    .copy_from_slice(&rope.data[src..src + row_r]);
+            }
+        }
+    }
+
+    /// One decode step for up to `bucket` sequences (graph-mode path).
+    /// `entries`: (token to feed, mutable per-seq KV). Positions come from
+    /// each sequence's `len`; caches are updated in place and lengths
+    /// advanced. Uses the INT8 artifacts when `int8` and the bucket has one.
+    pub fn decode_batch(
+        &self,
+        entries: &mut [(i32, &mut SeqKv)],
+        int8: bool,
+    ) -> Result<Vec<DecodeOut>> {
+        if entries.is_empty() {
+            return Ok(vec![]);
+        }
+        let n = entries.len();
+        let bucket = self.engine.manifest.decode_bucket_for(n);
+        if n > bucket {
+            bail!("batch {n} exceeds max bucket {bucket}");
+        }
+        let name_i8 = format!("decode_int8_b{bucket}");
+        let name = if int8 && self.engine.manifest.artifacts.contains_key(&name_i8) {
+            name_i8
+        } else {
+            format!("decode_b{bucket}")
+        };
+
+        let mut tokens = vec![0i32; bucket];
+        let mut pos = vec![0i32; bucket];
+        for (i, (t, kv)) in entries.iter().enumerate() {
+            if kv.len >= self.s {
+                bail!("sequence full: len {} == max_seq {}", kv.len, self.s);
+            }
+            tokens[i] = *t;
+            pos[i] = kv.len as i32;
+        }
+        // padding rows reuse slot 0's position (cache rows discarded after)
+        let kv_refs: Vec<&SeqKv> = entries.iter().map(|(_, kv)| &**kv).collect();
+        let mut padded_refs = kv_refs.clone();
+        while padded_refs.len() < bucket {
+            padded_refs.push(kv_refs[0]);
+        }
+        let (lat, rope) = self.gather_batch(&padded_refs, bucket);
+        let out = self.engine.execute(
+            &name,
+            &[
+                Tensor::from_i32(vec![bucket], &tokens)?,
+                Tensor::from_i32(vec![bucket], &pos)?,
+                lat,
+                rope,
+            ],
+        )?;
+        // outputs: logits [B,V], hidden [B,D], lat, rope
+        let logits = out[0].as_f32()?;
+        let hidden = out[1].as_f32()?;
+        let mut kv_muts: Vec<&mut SeqKv> = entries.iter_mut().map(|(_, kv)| &mut **kv).collect();
+        self.scatter_batch(&mut kv_muts[..], &out[2], &out[3], bucket);
+        let mut res = Vec::with_capacity(n);
+        for (i, kv) in kv_muts.into_iter().enumerate() {
+            kv.len += 1;
+            res.push(DecodeOut {
+                logits_row: logits[i * self.v..(i + 1) * self.v].to_vec(),
+                hidden_row: hidden[i * self.d..(i + 1) * self.d].to_vec(),
+            });
+        }
+        Ok(res)
+    }
+
+    /// MTP draft logits for a batch of (hidden, token) pairs (§4.6 step 1).
+    pub fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        if hidden_rows.is_empty() {
+            return Ok(vec![]);
+        }
+        let n = hidden_rows.len();
+        let bucket = self.engine.manifest.decode_bucket_for(n);
+        let mut hidden = vec![0f32; bucket * self.d];
+        let mut toks = vec![0i32; bucket];
+        for i in 0..n {
+            hidden[i * self.d..(i + 1) * self.d].copy_from_slice(&hidden_rows[i]);
+            toks[i] = tokens[i];
+        }
+        let out = self.engine.execute(
+            &format!("mtp_b{bucket}"),
+            &[
+                Tensor::from_f32(vec![bucket, self.d], &hidden)?,
+                Tensor::from_i32(vec![bucket], &toks)?,
+            ],
+        )?;
+        let logits = out[0].as_f32()?;
+        Ok((0..n)
+            .map(|i| logits[i * self.v..(i + 1) * self.v].to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("manifest.json")
+            .exists()
+            .then(|| Engine::load(dir).unwrap())
+    }
+
+    #[test]
+    fn prefill_then_decode_consistency() {
+        // The Rust twin of python/tests/test_model.py::
+        // test_prefill_then_decode_matches_pure_prefill — proves the AOT
+        // path preserves the L2 semantics end-to-end through PJRT.
+        let Some(e) = engine() else { return };
+        let m = ServedModel::new(&e);
+        let prompt: Vec<i32> = vec![256, 104, 101, 108, 108, 111]; // BOS "hello"
+        let pf = m.prefill(&prompt).unwrap();
+        let next = pf.logits.argmax_rows().unwrap()[0] as i32;
+        let mut kv = pf.kv;
+        let mut entries = vec![(next, &mut kv)];
+        let dec = m.decode_batch(&mut entries, false).unwrap();
+        // recompute via prefill on prompt+next
+        let mut p2 = prompt.clone();
+        p2.push(next);
+        let pf2 = m.prefill(&p2).unwrap();
+        let a = &dec[0].logits_row;
+        let b = pf2.logits.as_f32().unwrap();
+        let maxdiff = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(maxdiff < 1e-3, "decode vs prefill logits diff {maxdiff}");
+        assert_eq!(kv.len, prompt.len() + 1);
+    }
+
+    #[test]
+    fn batch_decode_matches_single_sequence() {
+        let Some(e) = engine() else { return };
+        let m = ServedModel::new(&e);
+        let pa = m.prefill(&[256, 97, 98, 99]).unwrap();
+        let pb = m.prefill(&[256, 120, 121]).unwrap();
+        // batched step
+        let (mut kva, mut kvb) = (pa.kv.clone(), pb.kv.clone());
+        let mut entries = vec![(10, &mut kva), (20, &mut kvb)];
+        let both = m.decode_batch(&mut entries, false).unwrap();
+        // individual steps
+        let (mut kva2, mut kvb2) = (pa.kv.clone(), pb.kv.clone());
+        let mut e1 = vec![(10, &mut kva2)];
+        let solo_a = m.decode_batch(&mut e1, false).unwrap();
+        let mut e2 = vec![(20, &mut kvb2)];
+        let solo_b = m.decode_batch(&mut e2, false).unwrap();
+        for (batched, solo) in [(&both[0], &solo_a[0]), (&both[1], &solo_b[0])] {
+            let md = batched
+                .logits_row
+                .iter()
+                .zip(&solo.logits_row)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(md < 1e-3, "batched vs solo diff {md}");
+        }
+        // Caches agree to float tolerance (bucket-2 vs bucket-1 executables
+        // may fuse differently, so bit-exactness is not guaranteed).
+        let max_cache_diff = kva
+            .lat
+            .chunks_exact(4)
+            .zip(kva2.lat.chunks_exact(4))
+            .map(|(a, b)| {
+                (f32::from_le_bytes(a.try_into().unwrap())
+                    - f32::from_le_bytes(b.try_into().unwrap()))
+                .abs()
+            })
+            .fold(0f32, f32::max);
+        assert!(max_cache_diff < 1e-4, "cache diff {max_cache_diff}");
+    }
+
+    #[test]
+    fn int8_decode_tracks_fp32() {
+        let Some(e) = engine() else { return };
+        let m = ServedModel::new(&e);
+        let pf = m.prefill(&[256, 1, 2, 3, 4, 5]).unwrap();
+        let (mut k1, mut k2) = (pf.kv.clone(), pf.kv.clone());
+        let mut e1 = vec![(7, &mut k1)];
+        let f = m.decode_batch(&mut e1, false).unwrap();
+        let mut e2 = vec![(7, &mut k2)];
+        let q = m.decode_batch(&mut e2, true).unwrap();
+        let fmax = f[0].logits_row.iter().fold(0f32, |a, b| a.max(b.abs()));
+        let drift = f[0]
+            .logits_row
+            .iter()
+            .zip(&q[0].logits_row)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(drift / fmax < 0.15, "int8 drift {drift} vs scale {fmax}");
+    }
+
+    #[test]
+    fn mtp_draft_shapes() {
+        let Some(e) = engine() else { return };
+        let m = ServedModel::new(&e);
+        let pf = m.prefill(&[256, 50, 60]).unwrap();
+        let logits = m.mtp_draft(&[pf.hidden.clone()], &[42]).unwrap();
+        assert_eq!(logits.len(), 1);
+        assert_eq!(logits[0].len(), e.manifest.model.vocab);
+    }
+
+    #[test]
+    fn rejects_oversized_prompt_and_full_sequence() {
+        let Some(e) = engine() else { return };
+        let m = ServedModel::new(&e);
+        let too_long = vec![1i32; e.manifest.model.prefill_seq + 1];
+        assert!(m.prefill(&too_long).is_err());
+        let mut kv = m.empty_kv();
+        kv.len = e.manifest.model.max_seq; // full
+        let mut entries = vec![(1, &mut kv)];
+        assert!(m.decode_batch(&mut entries, false).is_err());
+    }
+}

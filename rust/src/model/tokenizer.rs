@@ -1,0 +1,71 @@
+//! Byte-level tokenizer for MiniDeepSeek (vocab 512: bytes 0–255 + special
+//! ids). Tokenization happens inside each DP group (§4.2: each group
+//! encapsulates its full pipeline including tokenization) — there is no
+//! central tokenizer service.
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub bos: i32,
+    pub eos: i32,
+    pub vocab: usize,
+}
+
+impl Tokenizer {
+    pub fn new(bos: i32, eos: i32, vocab: usize) -> Self {
+        Self { bos, eos, vocab }
+    }
+
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        Self::new(m.bos, m.eos, m.model.vocab)
+    }
+
+    /// Encode UTF-8 text to token ids (BOS + bytes).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(self.bos);
+        out.extend(text.bytes().map(|b| b as i32));
+        out
+    }
+
+    /// Decode token ids back to text (specials dropped, lossy UTF-8).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_eos(&self, t: i32) -> bool {
+        t == self.eos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new(256, 257, 512);
+        let ids = tk.encode("hello xds");
+        assert_eq!(ids[0], 256);
+        assert_eq!(tk.decode(&ids), "hello xds");
+    }
+
+    #[test]
+    fn specials_are_dropped_on_decode() {
+        let tk = Tokenizer::new(256, 257, 512);
+        assert_eq!(tk.decode(&[256, 104, 105, 257]), "hi");
+        assert!(tk.is_eos(257));
+        assert!(!tk.is_eos(10));
+    }
+
+    #[test]
+    fn utf8_multibyte_roundtrip() {
+        let tk = Tokenizer::new(256, 257, 512);
+        let s = "héllo→";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+}

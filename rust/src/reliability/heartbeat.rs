@@ -1,0 +1,141 @@
+//! Multi-tier heartbeat monitoring (§6.1).
+//!
+//! Control plane → TE-shell (interval A) and TE-shell → DP masters
+//! (interval B), decoupled. A DP master replies only when its
+//! single-threaded event loop is live — a hung executor stalls the loop and
+//! the missing reply *is* the detection signal (crash and stuck processes
+//! look identical to the monitor, by design).
+
+use std::collections::HashMap;
+
+use crate::fabric::fault::{FaultInjector, FaultKind};
+use crate::fabric::topology::DieId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeartbeatTier {
+    ControlToShell,
+    ShellToDpMaster,
+}
+
+/// One monitored endpoint.
+#[derive(Clone, Debug)]
+struct Endpoint {
+    die: DieId,
+    last_reply_ns: u64,
+}
+
+pub struct HeartbeatMonitor {
+    pub tier: HeartbeatTier,
+    pub interval_ns: u64,
+    /// Declare failure after this many missed intervals.
+    pub miss_threshold: u32,
+    endpoints: HashMap<usize, Endpoint>,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(tier: HeartbeatTier, interval_ns: u64, miss_threshold: u32) -> Self {
+        Self { tier, interval_ns, miss_threshold, endpoints: HashMap::new() }
+    }
+
+    pub fn register(&mut self, id: usize, die: DieId) {
+        self.endpoints
+            .insert(id, Endpoint { die, last_reply_ns: 0 });
+    }
+
+    /// Run one heartbeat round at virtual time `now`. An endpoint replies
+    /// iff its event loop is responsive (no crash/hang fault active).
+    /// Returns ids newly declared failed this round.
+    pub fn sweep(&mut self, now: u64, faults: &FaultInjector) -> Vec<usize> {
+        let mut failed = Vec::new();
+        for (id, ep) in self.endpoints.iter_mut() {
+            let responsive = match faults.fault_kind(ep.die, now) {
+                Some(FaultKind::DieCrash) | Some(FaultKind::ProcessHang) => false,
+                // link flaps / memory faults don't stall the event loop
+                _ => true,
+            };
+            if responsive {
+                ep.last_reply_ns = now;
+            } else if now.saturating_sub(ep.last_reply_ns)
+                >= self.interval_ns * self.miss_threshold as u64
+            {
+                failed.push(*id);
+            }
+        }
+        failed.sort_unstable();
+        failed
+    }
+
+    /// Detection latency bound: worst-case time from fault to detection.
+    pub fn detection_bound_ns(&self) -> u64 {
+        self.interval_ns * (self.miss_threshold as u64 + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::fault::Fault;
+
+    #[test]
+    fn healthy_endpoints_never_flagged() {
+        let mut hb = HeartbeatMonitor::new(HeartbeatTier::ShellToDpMaster, 1_000_000, 3);
+        hb.register(0, 0);
+        hb.register(1, 1);
+        let faults = FaultInjector::new();
+        for step in 1..100u64 {
+            assert!(hb.sweep(step * 1_000_000, &faults).is_empty());
+        }
+    }
+
+    #[test]
+    fn hung_process_detected_within_bound() {
+        let mut hb = HeartbeatMonitor::new(HeartbeatTier::ShellToDpMaster, 1_000_000, 3);
+        hb.register(7, 4);
+        let mut faults = FaultInjector::new();
+        faults.schedule(Fault {
+            kind: FaultKind::ProcessHang,
+            die: 4,
+            at_ns: 5_000_000,
+            duration_ns: 0,
+        });
+        let mut detected_at = None;
+        for step in 1..40u64 {
+            let now = step * 1_000_000;
+            let failed = hb.sweep(now, &faults);
+            if failed.contains(&7) {
+                detected_at = Some(now);
+                break;
+            }
+        }
+        let t = detected_at.expect("hang must be detected");
+        assert!(
+            t - 5_000_000 <= hb.detection_bound_ns(),
+            "detection {t} exceeded bound"
+        );
+    }
+
+    #[test]
+    fn transient_link_flap_does_not_kill_heartbeat() {
+        // §6.1: KV-path failures are invisible to heartbeats — that's why
+        // link probing exists. A LinkFlap must NOT trip the monitor.
+        let mut hb = HeartbeatMonitor::new(HeartbeatTier::ControlToShell, 1_000_000, 3);
+        hb.register(0, 2);
+        let mut faults = FaultInjector::new();
+        faults.schedule(Fault {
+            kind: FaultKind::LinkFlap,
+            die: 2,
+            at_ns: 0,
+            duration_ns: 100_000_000,
+        });
+        for step in 1..50u64 {
+            assert!(hb.sweep(step * 1_000_000, &faults).is_empty());
+        }
+    }
+
+    #[test]
+    fn tiers_have_decoupled_intervals() {
+        let a = HeartbeatMonitor::new(HeartbeatTier::ControlToShell, 5_000_000, 2);
+        let b = HeartbeatMonitor::new(HeartbeatTier::ShellToDpMaster, 1_000_000, 3);
+        assert!(a.detection_bound_ns() != b.detection_bound_ns());
+    }
+}

@@ -1,0 +1,19 @@
+//! Reliability plane (paper §6, DESIGN.md S14).
+//!
+//! * [`heartbeat`] — multi-tier heartbeats: control plane → TE-shell → DP
+//!   masters, with decoupled intervals; catches crashes *and* stuck event
+//!   loops (§6.1).
+//! * [`probe`]     — link probing for the asynchronous KV-transfer path:
+//!   dummy payloads distinguish decode-side saturation from link faults.
+//! * [`recovery`]  — the three-stage evolution (§6.2): restart-the-world →
+//!   P/D separate failover (kill-P-to-preserve-D, vertical decode scaling
+//!   with EP-LB) → fine-grained handling (token recomputation on network
+//!   glitches, memory remap on on-chip faults).
+
+pub mod heartbeat;
+pub mod probe;
+pub mod recovery;
+
+pub use heartbeat::{HeartbeatMonitor, HeartbeatTier};
+pub use probe::{LinkDiagnosis, LinkProber};
+pub use recovery::{RecoveryAction, RecoveryManager, RecoveryStage};

@@ -1,0 +1,264 @@
+//! Failure recovery: the three-stage evolution (§6.2).
+//!
+//! * **Stage 1 — Restart-the-World**: taint the node, restart the whole
+//!   engine (decode first). Simple; loses all in-flight work and takes the
+//!   full engine-start time.
+//! * **Stage 2 — P/D separate failover**: shared clusters; prefill and
+//!   decode fail over independently. Early policy: kill-P-to-preserve-D.
+//!   Later: vertical decode scaling co-designed with EP-LB — shrink DP
+//!   groups/EP ranks, keep ≥ 1 replica of every expert, gracefully drop
+//!   the excess.
+//! * **Stage 3 — fine-grained**: transient network errors → coordinated
+//!   **token recomputation** (all DPs roll back one iteration and re-run);
+//!   on-chip memory faults → CANN remap, masked region, partial KV loss,
+//!   affected requests fail individually, system stays online.
+
+use crate::eplb::mapping::ReplicaMap;
+use crate::fabric::fault::FaultKind;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryStage {
+    RestartTheWorld,
+    PdSeparateFailover,
+    FineGrained,
+}
+
+/// What the manager decided to do for a fault.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryAction {
+    FullEngineRestart {
+        downtime_ns: u64,
+        requests_lost: usize,
+    },
+    KillPrefillPreserveDecode {
+        prefill_tes_killed: usize,
+        downtime_ns: u64,
+    },
+    VerticalDecodeScaling {
+        dp_groups_after: usize,
+        ep_ranks_after: usize,
+        replicas_dropped: usize,
+    },
+    TokenRecomputation {
+        iterations_rolled_back: u32,
+        recompute_ns: u64,
+    },
+    MemoryRemap {
+        kv_blocks_lost: usize,
+        requests_failed: usize,
+    },
+}
+
+pub struct RecoveryManager {
+    pub stage: RecoveryStage,
+    /// Engine cold-start cost (restart-the-world).
+    pub engine_restart_ns: u64,
+    /// One decode iteration (token recomputation unit).
+    pub iteration_ns: u64,
+}
+
+impl RecoveryManager {
+    pub fn new(stage: RecoveryStage) -> Self {
+        Self {
+            stage,
+            engine_restart_ns: 120_000_000_000, // ~2 min cold restart
+            iteration_ns: 93_000_000,           // §7.1 iteration
+        }
+    }
+
+    /// Decide the action for a fault, given current deployment state.
+    pub fn decide(
+        &self,
+        fault: FaultKind,
+        in_flight_requests: usize,
+        dp_groups: usize,
+        ep_ranks: usize,
+        map: &ReplicaMap,
+    ) -> RecoveryAction {
+        match self.stage {
+            RecoveryStage::RestartTheWorld => RecoveryAction::FullEngineRestart {
+                downtime_ns: self.engine_restart_ns,
+                requests_lost: in_flight_requests,
+            },
+            RecoveryStage::PdSeparateFailover => match fault {
+                FaultKind::DieCrash | FaultKind::ProcessHang => {
+                    // decode fragility: shrink decode rather than restart.
+                    let (groups_after, ranks_after, dropped) =
+                        vertical_scale_plan(dp_groups, ep_ranks, map);
+                    if dropped > 0 || ranks_after < ep_ranks {
+                        RecoveryAction::VerticalDecodeScaling {
+                            dp_groups_after: groups_after,
+                            ep_ranks_after: ranks_after,
+                            replicas_dropped: dropped,
+                        }
+                    } else {
+                        RecoveryAction::KillPrefillPreserveDecode {
+                            prefill_tes_killed: 1,
+                            downtime_ns: self.engine_restart_ns / 8,
+                        }
+                    }
+                }
+                // Stage 2 has no fine-grained transient handling: a
+                // network/memory glitch still costs a component failover
+                // (token recomputation arrives in stage 3).
+                _ => RecoveryAction::KillPrefillPreserveDecode {
+                    prefill_tes_killed: 1,
+                    downtime_ns: self.engine_restart_ns / 8,
+                },
+            },
+            RecoveryStage::FineGrained => match fault {
+                FaultKind::LinkFlap => RecoveryAction::TokenRecomputation {
+                    iterations_rolled_back: 1,
+                    recompute_ns: self.iteration_ns,
+                },
+                FaultKind::MemoryFault => RecoveryAction::MemoryRemap {
+                    kv_blocks_lost: 4,
+                    requests_failed: 1,
+                },
+                FaultKind::DieCrash | FaultKind::ProcessHang => {
+                    let (groups_after, ranks_after, dropped) =
+                        vertical_scale_plan(dp_groups, ep_ranks, map);
+                    RecoveryAction::VerticalDecodeScaling {
+                        dp_groups_after: groups_after,
+                        ep_ranks_after: ranks_after,
+                        replicas_dropped: dropped,
+                    }
+                }
+            },
+        }
+    }
+
+    /// Unavailability cost (ns of lost serving) for an action — the metric
+    /// the three-stage evolution improves.
+    pub fn downtime_ns(&self, action: &RecoveryAction) -> u64 {
+        match action {
+            RecoveryAction::FullEngineRestart { downtime_ns, .. } => *downtime_ns,
+            RecoveryAction::KillPrefillPreserveDecode { downtime_ns, .. } => *downtime_ns,
+            RecoveryAction::VerticalDecodeScaling { .. } => 2 * self.iteration_ns,
+            RecoveryAction::TokenRecomputation { recompute_ns, .. } => *recompute_ns,
+            RecoveryAction::MemoryRemap { .. } => self.iteration_ns,
+        }
+    }
+}
+
+/// Vertical decode scaling plan (§6.2 stage 2): drop one DP group and one EP
+/// rank, removing that rank's *excess* expert replicas — every logical
+/// expert must keep at least one replica or scaling is impossible.
+pub fn vertical_scale_plan(
+    dp_groups: usize,
+    ep_ranks: usize,
+    map: &ReplicaMap,
+) -> (usize, usize, usize) {
+    if ep_ranks <= 1 || dp_groups <= 1 {
+        return (dp_groups, ep_ranks, 0);
+    }
+    let victim_npu = ep_ranks - 1;
+    // replicas hosted on the victim
+    let mut dropped = 0usize;
+    let mut feasible = true;
+    for e in 0..map.n_logical {
+        let on_victim = map.slots[e]
+            .iter()
+            .filter(|&&s| map.slot_npu[s] == victim_npu)
+            .count();
+        let elsewhere = map.slots[e].len() - on_victim;
+        if on_victim > 0 {
+            if elsewhere == 0 {
+                feasible = false; // sole replica lives on the victim
+            } else {
+                dropped += on_victim;
+            }
+        }
+    }
+    if !feasible {
+        // cannot drop the rank without losing an expert → no scaling
+        (dp_groups, ep_ranks, 0)
+    } else {
+        (dp_groups - 1, ep_ranks - 1, dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_with_replicas(n_experts: usize, n_npus: usize) -> ReplicaMap {
+        let mut m = ReplicaMap::identity(n_experts, n_npus);
+        // every expert gets a second replica on a different NPU
+        for e in 0..n_experts {
+            m.add_replica(e, (e + 1) % n_npus);
+        }
+        m
+    }
+
+    #[test]
+    fn stage1_loses_everything() {
+        let m = ReplicaMap::identity(4, 4);
+        let mgr = RecoveryManager::new(RecoveryStage::RestartTheWorld);
+        let a = mgr.decide(FaultKind::DieCrash, 37, 8, 4, &m);
+        match a {
+            RecoveryAction::FullEngineRestart { requests_lost, .. } => {
+                assert_eq!(requests_lost, 37)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stage3_transient_glitch_recomputes_tokens() {
+        let m = ReplicaMap::identity(4, 4);
+        let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
+        let a = mgr.decide(FaultKind::LinkFlap, 10, 8, 4, &m);
+        assert_eq!(
+            a,
+            RecoveryAction::TokenRecomputation {
+                iterations_rolled_back: 1,
+                recompute_ns: mgr.iteration_ns
+            }
+        );
+    }
+
+    #[test]
+    fn stage3_memory_fault_stays_online() {
+        let m = ReplicaMap::identity(4, 4);
+        let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
+        let a = mgr.decide(FaultKind::MemoryFault, 10, 8, 4, &m);
+        match a {
+            RecoveryAction::MemoryRemap { requests_failed, .. } => {
+                assert!(requests_failed < 10, "most requests survive")
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vertical_scaling_keeps_every_expert() {
+        let m = map_with_replicas(8, 4);
+        let (g, r, dropped) = vertical_scale_plan(16, 4, &m);
+        assert_eq!((g, r), (15, 3));
+        assert!(dropped > 0);
+    }
+
+    #[test]
+    fn vertical_scaling_refuses_to_lose_sole_replica() {
+        // identity map: expert 3's only replica is on NPU 3 (the victim)
+        let m = ReplicaMap::identity(4, 4);
+        let (g, r, dropped) = vertical_scale_plan(16, 4, &m);
+        assert_eq!((g, r, dropped), (16, 4, 0), "must refuse");
+    }
+
+    #[test]
+    fn downtime_strictly_improves_across_stages() {
+        let m = map_with_replicas(8, 4);
+        let fault = FaultKind::DieCrash;
+        let d1 = {
+            let mgr = RecoveryManager::new(RecoveryStage::RestartTheWorld);
+            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &m))
+        };
+        let d3 = {
+            let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
+            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &m))
+        };
+        assert!(d3 < d1 / 100, "stage 3 ({d3}) ≪ stage 1 ({d1})");
+    }
+}

@@ -1,0 +1,284 @@
+//! Artifact manifest + weight store: the contract with python/compile/aot.py.
+//!
+//! * `manifest.json` — model config, per-artifact argument specs (weight
+//!   names in canonical order, then runtime args), output names.
+//! * `weights.bin`   — `[u32 magic "XDSW"][u32 version][u64 header_len]
+//!   [json header]` followed by 64-byte-aligned raw tensors.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::{DType, Tensor};
+use crate::util::json::Json;
+
+pub const WEIGHTS_MAGIC: u32 = 0x5844_5357; // "XDSW"
+
+/// Shape+dtype of one named tensor.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name").and_then(Json::as_str).context("name")?.to_string(),
+            dtype: DType::from_tag(j.get("dtype").and_then(Json::as_str).context("dtype")?)?,
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub weight_args: Vec<String>,
+    pub runtime_args: Vec<TensorMeta>,
+    pub outputs: Vec<String>,
+}
+
+/// Model hyper-parameters mirrored from python/compile/config.py.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_dense_layers: usize,
+    pub n_heads: usize,
+    pub c_latent: usize,
+    pub r_rope: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub prefill_seq: usize,
+    pub decode_buckets: Vec<usize>,
+    pub disagg_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub weight_index: Vec<(TensorMeta, u64, u64)>, // meta, offset, nbytes
+    pub weights_file: String,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("manifest.json parse")?;
+
+        let c = j.get("config").context("config")?;
+        let u = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
+        };
+        let model = ModelConfig {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_dense_layers: u("n_dense_layers")?,
+            n_heads: u("n_heads")?,
+            c_latent: u("c_latent")?,
+            r_rope: u("r_rope")?,
+            n_experts: u("n_experts")?,
+            top_k: u("top_k")?,
+            max_seq: u("max_seq")?,
+            prefill_seq: u("prefill_seq")?,
+            decode_buckets: c
+                .get("decode_buckets")
+                .and_then(Json::as_arr)
+                .context("decode_buckets")?
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+            disagg_tokens: u("disagg_tokens")?,
+        };
+
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).context("artifacts")? {
+            let spec = ArtifactSpec {
+                name: a.get("name").and_then(Json::as_str).context("name")?.to_string(),
+                file: a.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                weight_args: a
+                    .get("weight_args")
+                    .and_then(Json::as_arr)
+                    .context("weight_args")?
+                    .iter()
+                    .map(|w| w.as_str().unwrap().to_string())
+                    .collect(),
+                runtime_args: a
+                    .get("runtime_args")
+                    .and_then(Json::as_arr)
+                    .context("runtime_args")?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .context("outputs")?
+                    .iter()
+                    .map(|o| o.as_str().unwrap().to_string())
+                    .collect(),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        let mut weight_index = Vec::new();
+        for t in j.get("params").and_then(Json::as_arr).context("params")? {
+            let meta = TensorMeta::from_json(t)?;
+            let offset = t.get("offset").and_then(Json::as_u64).context("offset")?;
+            let nbytes = t.get("nbytes").and_then(Json::as_u64).context("nbytes")?;
+            weight_index.push((meta, offset, nbytes));
+        }
+
+        let bos = j.path(&["tokenizer", "bos"]).and_then(Json::as_f64).unwrap_or(256.0) as i32;
+        let eos = j.path(&["tokenizer", "eos"]).and_then(Json::as_f64).unwrap_or(257.0) as i32;
+
+        Ok(Self {
+            dir,
+            model,
+            artifacts,
+            weight_index,
+            weights_file: j
+                .get("weights_file")
+                .and_then(Json::as_str)
+                .unwrap_or("weights.bin")
+                .to_string(),
+            bos,
+            eos,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Largest decode bucket ≥ `batch`, or the max bucket.
+    pub fn decode_bucket_for(&self, batch: usize) -> usize {
+        self.model
+            .decode_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| *self.model.decode_buckets.last().unwrap())
+    }
+}
+
+/// All weights, loaded from weights.bin into host tensors.
+pub struct WeightStore {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let path = manifest.dir.join(&manifest.weights_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() < 16 {
+            bail!("weights.bin truncated");
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into()?);
+        let version = u32::from_le_bytes(bytes[4..8].try_into()?);
+        if magic != WEIGHTS_MAGIC || version != 1 {
+            bail!("weights.bin bad magic/version: {magic:#x} v{version}");
+        }
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into()?) as usize;
+        let data = &bytes[16 + hlen..];
+        let mut tensors = HashMap::new();
+        for (meta, offset, nbytes) in &manifest.weight_index {
+            let off = *offset as usize;
+            let nb = *nbytes as usize;
+            if off + nb > data.len() {
+                bail!("weight {} out of range", meta.name);
+            }
+            tensors.insert(
+                meta.name.clone(),
+                Tensor::new(meta.dtype, meta.shape.clone(), data[off..off + nb].to_vec())?,
+            );
+        }
+        Ok(Self { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("weight {name:?} missing from weights.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn manifest_loads_and_has_expected_entries() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_layers, 4);
+        assert!(m.artifacts.contains_key("decode_b1"));
+        assert!(m.artifacts.contains_key("prefill_s128"));
+        assert!(m.artifacts.contains_key("attn_block_t8"));
+        let dec = m.artifact("decode_b4").unwrap();
+        assert_eq!(dec.runtime_args.len(), 4);
+        assert_eq!(dec.outputs, vec!["logits", "hidden", "lat", "rope"]);
+        assert!(m.hlo_path("decode_b4").unwrap().exists());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_bucket_for(1), 1);
+        assert_eq!(m.decode_bucket_for(3), 4);
+        assert_eq!(m.decode_bucket_for(8), 8);
+        assert_eq!(m.decode_bucket_for(99), 8);
+    }
+
+    #[test]
+    fn weights_load_and_are_finite() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let emb = w.get("embed").unwrap();
+        assert_eq!(emb.shape, vec![m.model.vocab, m.model.d_model]);
+        assert!(emb.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        // every weight referenced by every artifact exists
+        for a in m.artifacts.values() {
+            for name in &a.weight_args {
+                w.get(name).unwrap();
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime bridge (DESIGN.md S16): load `artifacts/*.hlo.txt` produced
+//! by the Python AOT path and execute them from the Rust request path.
+//!
+//! Flow: [`artifact::Manifest`] (manifest.json) + [`artifact::WeightStore`]
+//! (weights.bin) → [`engine::Engine`] (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`).
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects from serialized protos; the text parser
+//! reassigns ids (see python/compile/aot.py and /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorMeta, WeightStore};
+pub use engine::Engine;
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,218 @@
+//! Host-side tensor: the common currency between the coordinator, the KV
+//! cache manager, XCCL payloads, and PJRT literals.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn from_tag(tag: &str) -> Result<Self> {
+        Ok(match tag {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype tag {other:?}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(dtype: DType, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let expect: usize = shape.iter().product::<usize>() * dtype.bytes();
+        if data.len() != expect {
+            bail!(
+                "tensor data size mismatch: shape {shape:?} x {:?} needs {expect} B, got {} B",
+                dtype,
+                data.len()
+            );
+        }
+        Ok(Self { dtype, shape, data })
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product::<usize>() * dtype.bytes();
+        Self { dtype, shape, data: vec![0u8; n] }
+    }
+
+    pub fn from_f32(shape: Vec<usize>, v: &[f32]) -> Result<Self> {
+        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Self::new(DType::F32, shape, data)
+    }
+
+    pub fn from_i32(shape: Vec<usize>, v: &[i32]) -> Result<Self> {
+        let data = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        Self::new(DType::I32, shape, data)
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { dtype: DType::I32, shape: vec![], data: v.to_le_bytes().to_vec() }
+    }
+
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("not f32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("not i32");
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Build the PJRT literal for this tensor.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(),
+            &self.shape,
+            &self.data,
+        )?)
+    }
+
+    /// Read a PJRT literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.shape()?;
+        let (ty, dims) = match shape {
+            xla::Shape::Array(a) => (a.ty(), a.dims().to_vec()),
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dtype = match ty {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::S8 => DType::I8,
+            other => bail!("unsupported element type {other:?}"),
+        };
+        let n: usize = dims.iter().map(|d| *d as usize).product();
+        let mut data = vec![0u8; n * dtype.bytes()];
+        match dtype {
+            DType::F32 => {
+                let v = lit.to_vec::<f32>()?;
+                for (c, x) in data.chunks_exact_mut(4).zip(&v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                let v = lit.to_vec::<i32>()?;
+                for (c, x) in data.chunks_exact_mut(4).zip(&v) {
+                    c.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            DType::I8 => {
+                let v = lit.to_vec::<i8>()?;
+                for (c, x) in data.iter_mut().zip(&v) {
+                    *c = *x as u8;
+                }
+            }
+        }
+        Tensor::new(dtype, dims.iter().map(|d| *d as usize).collect(), data)
+    }
+
+    /// Row-major index helper for small host-side math.
+    pub fn f32_at(&self, idx: &[usize]) -> Result<f32> {
+        let mut off = 0usize;
+        let mut stride = 1usize;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate().rev() {
+            if ix >= dim {
+                bail!("index {idx:?} out of bounds for {:?} (axis {i})", self.shape);
+            }
+            off += ix * stride;
+            stride *= dim;
+        }
+        let b = &self.data[off * 4..off * 4 + 4];
+        Ok(f32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// Argmax over the last axis for a 2-D f32 tensor; returns one index per
+    /// row (the greedy sampler's core).
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.dtype != DType::F32 || self.shape.len() != 2 {
+            bail!("argmax_rows wants 2-D f32");
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let v = self.as_f32()?;
+        Ok((0..rows)
+            .map(|r| {
+                let row = &v[r * cols..(r + 1) * cols];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::new(DType::F32, vec![2, 3], vec![0u8; 20]).is_err());
+        assert!(Tensor::new(DType::F32, vec![2, 3], vec![0u8; 24]).is_ok());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(vec![2, 2], &[1.0, -2.5, 3.0, 0.0]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.0, 0.0]);
+        assert_eq!(t.f32_at(&[1, 0]).unwrap(), 3.0);
+        assert!(t.f32_at(&[2, 0]).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::from_f32(vec![2, 3], &[0.1, 0.9, 0.5, 7.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn scalar_i32() {
+        let t = Tensor::scalar_i32(42);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.data, 42i32.to_le_bytes().to_vec());
+    }
+}

@@ -1,0 +1,64 @@
+//! Offline-capable infrastructure substrates (DESIGN.md S19).
+//!
+//! The build environment has no crates.io access beyond the vendored set
+//! (`xla`, `anyhow`, `thiserror`, `once_cell`, ...), so the usual ecosystem
+//! crates (rand, serde_json, clap, criterion, proptest) are replaced by the
+//! small, tested implementations in this module tree.
+
+pub mod rng;
+pub mod json;
+pub mod stats;
+pub mod args;
+pub mod prop;
+
+pub use rng::Rng;
+pub use stats::Histogram;
+
+/// Format a byte count human-readably (`4.0 KiB`, `9.0 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", U[i])
+    }
+}
+
+/// Format nanoseconds human-readably (`1.23 ms`, `456 us`).
+pub fn human_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(4096), "4.0 KiB");
+        assert_eq!(human_bytes(9 * 1024 * 1024), "9.0 MiB");
+    }
+
+    #[test]
+    fn human_ns_scales() {
+        assert_eq!(human_ns(999), "999 ns");
+        assert_eq!(human_ns(1_500), "1.5 us");
+        assert_eq!(human_ns(2_340_000), "2.34 ms");
+        assert_eq!(human_ns(1_500_000_000), "1.50 s");
+    }
+}

@@ -1,0 +1,87 @@
+//! Property-testing helper — a minimal stand-in for `proptest` (offline
+//! build). Runs a property over many seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically,
+//! and performs a simple "shrink" by retrying with smaller size hints.
+//!
+//! Used by the coordinator/xccl invariant tests (routing, batching, ring
+//! buffers, EPLB placement).
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xDEE9_5EED }
+    }
+}
+
+/// Run `prop(rng, size)` for `cases` random cases with growing size hints.
+/// Panics with the failing seed + size on the first failure (after trying
+/// to reproduce at smaller sizes for a more minimal report).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let size = 1 + case * 4 / cfg.cases.max(1) * 8 + case % 8;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: retry same seed with smaller sizes to find minimal repr
+            let mut min_size = size;
+            let mut min_msg = msg;
+            for s in (1..size).rev() {
+                let mut r2 = Rng::new(seed);
+                if let Err(m) = prop(&mut r2, s) {
+                    min_size = s;
+                    min_msg = m;
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("add-commutes", PropConfig::default(), |rng, _| {
+            let a = rng.range(0, 1000);
+            let b = rng.range(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, seed: 1 },
+            |_, _| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload generation (DESIGN.md S18): request traces and expert-routing
+//! skew matched to the paper's evaluation workloads.
+//!
+//! * §7.1 — fixed 2K-token prompts + 2K outputs (ignore-eos), built from
+//!   ShareGPT-like text.
+//! * §7.2 — production trace: inputs 0–64K (avg 13K), outputs avg 2.1K.
+//! * Fig 11a — ShareGPT expert-load skew: hottest expert ≈ 30× the mean,
+//!   ~20% of experts above the mean (Zipf-calibrated gating draw).
+//!
+//! Traces carry *paper-scale* token counts; `scale_to_model` maps them onto
+//! MiniDeepSeek's buckets for real-execution runs while preserving the
+//! length *distribution shape*.
+
+pub mod trace;
+pub mod expert_skew;
+
+pub use expert_skew::{skewed_expert_counts, SkewSummary};
+pub use trace::{Request, TraceKind, WorkloadGen};

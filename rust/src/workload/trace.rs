@@ -1,0 +1,171 @@
+//! Request traces: arrival process + length distributions.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (virtual ns from trace start).
+    pub arrival_ns: u64,
+    /// Prompt length in tokens (paper scale).
+    pub input_tokens: usize,
+    /// Output length in tokens (paper scale; ignore-eos workloads fix it).
+    pub output_tokens: usize,
+    /// Prompt bytes for real-execution runs (generated text).
+    pub prompt: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// §7.1: fixed 2K in / 2K out, all requests available at t=0.
+    Fixed2k2k,
+    /// ShareGPT-like conversational lengths (lognormal).
+    ShareGpt,
+    /// §7.2 production: 0–64K inputs (avg 13K), outputs avg 2.1K.
+    Production,
+}
+
+pub struct WorkloadGen {
+    rng: Rng,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), next_id: 0 }
+    }
+
+    fn prompt_text(&mut self, approx_bytes: usize) -> String {
+        // ShareGPT-flavored synthetic text: cheap, deterministic, varied.
+        const WORDS: [&str; 16] = [
+            "explain", "the", "difference", "between", "model", "serving",
+            "and", "training", "please", "write", "code", "for", "a", "fast",
+            "router", "kernel",
+        ];
+        let mut s = String::with_capacity(approx_bytes + 8);
+        while s.len() < approx_bytes {
+            s.push_str(WORDS[self.rng.index(WORDS.len())]);
+            s.push(' ');
+        }
+        s.truncate(approx_bytes.max(1));
+        s
+    }
+
+    fn sample_lengths(&mut self, kind: TraceKind) -> (usize, usize) {
+        match kind {
+            TraceKind::Fixed2k2k => (2048, 2048),
+            TraceKind::ShareGpt => {
+                // lognormal fitted loosely to ShareGPT turns: median ~220 in,
+                // ~180 out, heavy right tail.
+                let i = self.rng.lognormal(5.4, 1.1).min(16_000.0) as usize + 8;
+                let o = self.rng.lognormal(5.2, 0.9).min(8_000.0) as usize + 8;
+                (i, o)
+            }
+            TraceKind::Production => {
+                // §7.2: inputs 0..64K with mean ≈ 13K → lognormal(8.9, 1.0)
+                // clipped; outputs mean ≈ 2.1K.
+                let i = self.rng.lognormal(8.9, 1.0).min(64_000.0) as usize + 16;
+                let o = self.rng.lognormal(7.2, 0.8).min(32_000.0) as usize + 16;
+                (i, o)
+            }
+        }
+    }
+
+    /// Generate `n` requests with Poisson arrivals at `rate_per_s` (0 ⇒ all
+    /// arrive at t=0, the paper's §7.1 batch-start methodology).
+    pub fn generate(&mut self, kind: TraceKind, n: usize, rate_per_s: f64) -> Vec<Request> {
+        let mut t_ns = 0u64;
+        (0..n)
+            .map(|_| {
+                if rate_per_s > 0.0 {
+                    t_ns += (self.rng.exponential(rate_per_s) * 1e9) as u64;
+                }
+                let (i, o) = self.sample_lengths(kind);
+                let id = self.next_id;
+                self.next_id += 1;
+                Request {
+                    id,
+                    arrival_ns: if rate_per_s > 0.0 { t_ns } else { 0 },
+                    input_tokens: i,
+                    output_tokens: o,
+                    prompt: self.prompt_text((i / 24).clamp(8, 110)),
+                }
+            })
+            .collect()
+    }
+
+    /// Map a paper-scale request onto MiniDeepSeek's buckets for real
+    /// execution, preserving relative length ordering.
+    pub fn scale_to_model(req: &Request, max_in: usize, max_out: usize) -> (usize, usize) {
+        let i = (req.input_tokens as f64).log2() / (64_000f64).log2();
+        let o = (req.output_tokens as f64).log2() / (32_000f64).log2();
+        (
+            ((i * max_in as f64) as usize).clamp(2, max_in),
+            ((o * max_out as f64) as usize).clamp(1, max_out),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_trace_is_fixed() {
+        let mut g = WorkloadGen::new(1);
+        let reqs = g.generate(TraceKind::Fixed2k2k, 10, 0.0);
+        assert!(reqs.iter().all(|r| r.input_tokens == 2048 && r.output_tokens == 2048));
+        assert!(reqs.iter().all(|r| r.arrival_ns == 0));
+        // unique ids
+        let ids: std::collections::HashSet<u64> = reqs.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), 10);
+    }
+
+    #[test]
+    fn production_trace_matches_paper_moments() {
+        let mut g = WorkloadGen::new(7);
+        let reqs = g.generate(TraceKind::Production, 4000, 0.0);
+        let mean_in: f64 =
+            reqs.iter().map(|r| r.input_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        let mean_out: f64 =
+            reqs.iter().map(|r| r.output_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        // §7.2: average input ≈ 13K, average output ≈ 2.1K
+        assert!((8_000.0..18_000.0).contains(&mean_in), "mean in {mean_in}");
+        assert!((1_400.0..3_000.0).contains(&mean_out), "mean out {mean_out}");
+        assert!(reqs.iter().all(|r| r.input_tokens <= 64_016));
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_and_rate_matched() {
+        let mut g = WorkloadGen::new(3);
+        let reqs = g.generate(TraceKind::ShareGpt, 2000, 100.0);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ns >= w[0].arrival_ns);
+        }
+        let span_s = reqs.last().unwrap().arrival_ns as f64 / 1e9;
+        let rate = reqs.len() as f64 / span_s;
+        assert!((70.0..140.0).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn scaling_preserves_order_and_bounds() {
+        let a = Request { id: 0, arrival_ns: 0, input_tokens: 500, output_tokens: 100, prompt: String::new() };
+        let b = Request { id: 1, arrival_ns: 0, input_tokens: 50_000, output_tokens: 8_000, prompt: String::new() };
+        let (ia, oa) = WorkloadGen::scale_to_model(&a, 120, 30);
+        let (ib, ob) = WorkloadGen::scale_to_model(&b, 120, 30);
+        assert!(ia < ib && oa < ob);
+        assert!(ib <= 120 && ob <= 30);
+        assert!(ia >= 2 && oa >= 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let r1 = WorkloadGen::new(9).generate(TraceKind::Production, 50, 10.0);
+        let r2 = WorkloadGen::new(9).generate(TraceKind::Production, 50, 10.0);
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.input_tokens, b.input_tokens);
+            assert_eq!(a.arrival_ns, b.arrival_ns);
+        }
+    }
+}

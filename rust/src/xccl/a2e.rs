@@ -1,0 +1,291 @@
+//! A2E / E2A all-to-all for disaggregated MoE-Attention (§3.3, §5.2).
+//!
+//! Attention and expert modules live on separate dies with asymmetric
+//! counts (e.g. 288 expert NPUs vs 160 attention NPUs per domain). A naive
+//! pull design would make every attention NPU push metadata to all expert
+//! NPUs — O(A×E) scalar work on cores with limited scalar throughput.
+//!
+//! **Trampoline forward**: a subset of expert NPUs equal in number to the
+//! attention NPUs acts as trampolines. A2E stage 1 sends each attention
+//! NPU's tokens to its paired trampoline (1:1 metadata); stage 2 (A2E') has
+//! trampolines forward slices to the remaining expert NPUs (each trampoline
+//! handles ≈ (E−A)/A peers). E2A runs the same two stages in reverse.
+//!
+//! Engine choice per stage is the §3.3 MTE-vs-URMA trade-off: URMA (DMA)
+//! frees AIV cores and avoids MTE2 contention with the compute streams that
+//! share the expert dies (§5.2 persistent kernels), at the price of startup
+//! latency. When MTE is forced, a contention factor models the shared MTE2
+//! path (MTE2 also feeds compute, §3.3 advantage 3).
+
+use crate::fabric::{EngineKind, FabricParams};
+
+#[derive(Clone, Debug)]
+pub struct A2eConfig {
+    /// Attention NPUs in the active DP domain (paper: 160).
+    pub attention_npus: usize,
+    /// Expert NPUs (paper: 288).
+    pub expert_npus: usize,
+    /// Hidden size in elements (DeepSeek: 7168).
+    pub hidden_dim: usize,
+    pub top_k: usize,
+    /// Tokens per attention NPU in this transfer (microbatch slice).
+    pub batch_per_attention: usize,
+    /// INT8 on the wire (§4.7 communication quantization).
+    pub quant_int8: bool,
+    /// Engine for the bulk stages (paper uses NPU-Direct URMA).
+    pub engine: EngineKind,
+    /// AIV cores if MTE is chosen.
+    pub n_aiv: usize,
+    /// MTE2 bandwidth share left when compute streams contend (§3.3).
+    pub mte_contention: f64,
+    /// Scalar metadata cost per peer handled.
+    pub meta_ns: u64,
+    /// Per-token scalar handling (routing table walk, offsets, scales).
+    pub per_token_ns: u64,
+}
+
+impl A2eConfig {
+    /// §3.3 evaluation setup: 3 domains × 160 DP (one domain active at a
+    /// time against 288 experts), full per-die batch 96.
+    pub fn paper_deployment() -> Self {
+        Self {
+            attention_npus: 160,
+            expert_npus: 288,
+            hidden_dim: 7168,
+            top_k: 8,
+            batch_per_attention: 96,
+            quant_int8: true,
+            engine: EngineKind::Dma,
+            n_aiv: 4,
+            mte_contention: 0.35,
+            meta_ns: 600,
+            per_token_ns: 100,
+        }
+    }
+
+    /// The same deployment at a microbatch slice of `b` tokens per die.
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch_per_attention = b;
+        self
+    }
+}
+
+/// Latency report for one A2E or E2A collective (virtual ns).
+#[derive(Clone, Copy, Debug)]
+pub struct A2eReport {
+    pub total_ns: u64,
+    pub stage1_ns: u64,
+    pub stage2_ns: u64,
+    pub meta_ns: u64,
+    /// Peers each attention NPU had to handle metadata for (the quantity
+    /// the trampoline exists to minimize).
+    pub meta_fanout: usize,
+}
+
+pub struct A2eEngine {
+    pub params: FabricParams,
+    pub cfg: A2eConfig,
+}
+
+impl A2eEngine {
+    pub fn new(params: FabricParams, cfg: A2eConfig) -> Self {
+        Self { params, cfg }
+    }
+
+    fn token_bytes(&self) -> usize {
+        if self.cfg.quant_int8 {
+            self.cfg.hidden_dim + 4
+        } else {
+            self.cfg.hidden_dim * 2
+        }
+    }
+
+    fn bulk_ns(&self, bytes: usize) -> u64 {
+        match self.cfg.engine {
+            EngineKind::Mte => {
+                // MTE2 shared with the compute streams on these dies: only
+                // a fraction of the per-core bandwidth is available.
+                let eff_cores =
+                    ((self.cfg.n_aiv as f64) * self.cfg.mte_contention).max(0.5);
+                let bw = (eff_cores * self.params.mte_bw_per_core)
+                    .min(self.params.ub_link_bw);
+                self.params.kernel_launch_ns + (bytes as f64 / bw * 1e9) as u64
+            }
+            EngineKind::Dma => self.params.dma_transfer_ns(bytes),
+            nic => self.params.nic_transfer_ns(bytes, nic),
+        }
+    }
+
+    fn tramp_geometry(&self) -> (usize, usize, usize) {
+        let c = &self.cfg;
+        let remaining = c.expert_npus.saturating_sub(c.attention_npus);
+        let peers_per_tramp = if remaining == 0 {
+            0
+        } else {
+            remaining.div_ceil(c.attention_npus.max(1))
+        };
+        let total_tokens = c.batch_per_attention * c.top_k * c.attention_npus;
+        let tokens_per_expert = total_tokens / c.expert_npus.max(1);
+        (remaining, peers_per_tramp, tokens_per_expert)
+    }
+
+    /// A2E with trampoline forward.
+    pub fn a2e(&self) -> A2eReport {
+        let c = &self.cfg;
+        let (remaining, peers, tokens_per_expert) = self.tramp_geometry();
+        let tokens_routed = c.batch_per_attention * c.top_k;
+        // Stage 1: 1:1 attention → trampoline (parallel across pairs); the
+        // sender walks its routing table once per routed token.
+        let stage1 = self.bulk_ns(tokens_routed * self.token_bytes())
+            + c.meta_ns
+            + tokens_routed as u64 * c.per_token_ns;
+        // Stage 2: trampolines forward per-expert slices downstream.
+        let fwd_tokens = tokens_per_expert * peers;
+        let stage2 = if remaining == 0 {
+            0
+        } else {
+            self.bulk_ns(fwd_tokens * self.token_bytes())
+                + peers as u64 * c.meta_ns
+                + fwd_tokens as u64 * c.per_token_ns
+        };
+        A2eReport {
+            total_ns: stage1 + stage2,
+            stage1_ns: stage1,
+            stage2_ns: stage2,
+            meta_ns: (1 + peers) as u64 * c.meta_ns,
+            meta_fanout: 1,
+        }
+    }
+
+    /// E2A: expert outputs route back through the trampolines. Slightly
+    /// more expensive than A2E: the gather side re-assembles per-token
+    /// results from k expert contributions (weighted combine bookkeeping),
+    /// which the paper measures as 193 µs vs 172 µs.
+    pub fn e2a(&self) -> A2eReport {
+        let c = &self.cfg;
+        let (remaining, peers, tokens_per_expert) = self.tramp_geometry();
+        // Stage 1: remaining experts push outputs to their trampoline.
+        let back_tokens = tokens_per_expert * peers;
+        let stage1 = if remaining == 0 {
+            0
+        } else {
+            self.bulk_ns(back_tokens * self.token_bytes())
+                + peers as u64 * c.meta_ns
+                + back_tokens as u64 * c.per_token_ns
+        };
+        // Stage 2: trampolines deliver the gathered set to the attention
+        // NPU; combine bookkeeping costs a little more per token (weighted
+        // accumulate + sanity) than dispatch-side routing.
+        let tokens_routed = c.batch_per_attention * c.top_k;
+        let stage2 = self.bulk_ns(tokens_routed * self.token_bytes())
+            + (1 + peers) as u64 * c.meta_ns
+            + (tokens_routed as f64 * c.per_token_ns as f64 * 1.15) as u64;
+        A2eReport {
+            total_ns: stage1 + stage2,
+            stage1_ns: stage1,
+            stage2_ns: stage2,
+            meta_ns: (1 + peers) as u64 * c.meta_ns,
+            meta_fanout: 1 + peers,
+        }
+    }
+
+    /// Ablation: naive single-stage pull (no trampoline) — every attention
+    /// NPU handles metadata for every expert NPU, serialized on the AIV
+    /// scalar pipeline ("high fan-out and limited scalar throughput").
+    pub fn a2e_naive(&self) -> A2eReport {
+        let c = &self.cfg;
+        let tokens_routed = c.batch_per_attention * c.top_k;
+        // full fan-out metadata + per-expert pull handshakes
+        let meta = c.expert_npus as u64 * (c.meta_ns + 400);
+        let bulk = self.bulk_ns(tokens_routed * self.token_bytes())
+            + tokens_routed as u64 * c.per_token_ns;
+        A2eReport {
+            total_ns: meta + bulk,
+            stage1_ns: bulk,
+            stage2_ns: 0,
+            meta_ns: meta,
+            meta_fanout: c.expert_npus,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_engine() -> A2eEngine {
+        A2eEngine::new(FabricParams::default(), A2eConfig::paper_deployment())
+    }
+
+    /// §3.3 calibration: A2E ≈ 172 µs, E2A ≈ 193 µs (±40%), E2A > A2E.
+    #[test]
+    fn paper_latency_anchors() {
+        let e = paper_engine();
+        let a2e = e.a2e().total_ns;
+        let e2a = e.e2a().total_ns;
+        assert!(
+            (100_000..260_000).contains(&a2e),
+            "A2E {} us, paper 172 us",
+            a2e / 1000
+        );
+        assert!(
+            (120_000..290_000).contains(&e2a),
+            "E2A {} us, paper 193 us",
+            e2a / 1000
+        );
+        assert!(e2a > a2e, "E2A ({e2a}) must exceed A2E ({a2e})");
+    }
+
+    /// The trampoline's whole point: metadata fan-out collapses from E to
+    /// O(1 + (E−A)/A), and total latency beats the naive design.
+    #[test]
+    fn trampoline_beats_naive() {
+        let e = paper_engine();
+        let tramp = e.a2e();
+        let naive = e.a2e_naive();
+        assert!(tramp.meta_fanout < naive.meta_fanout / 50);
+        assert!(tramp.total_ns < naive.total_ns);
+    }
+
+    #[test]
+    fn symmetric_allocation_needs_no_stage2() {
+        let mut cfg = A2eConfig::paper_deployment();
+        cfg.expert_npus = 160; // same as attention
+        let e = A2eEngine::new(FabricParams::default(), cfg);
+        assert_eq!(e.a2e().stage2_ns, 0);
+    }
+
+    #[test]
+    fn quantization_halves_bulk() {
+        let mut cfg = A2eConfig::paper_deployment();
+        cfg.quant_int8 = false;
+        let fp = A2eEngine::new(FabricParams::default(), cfg.clone()).a2e().total_ns;
+        cfg.quant_int8 = true;
+        let q = A2eEngine::new(FabricParams::default(), cfg).a2e().total_ns;
+        assert!(q < fp);
+    }
+
+    /// §3.3: MTE shares bandwidth with compute on these dies; URMA wins at
+    /// this deployment's payload size.
+    #[test]
+    fn urma_vs_mte_tradeoff() {
+        let mut cfg = A2eConfig::paper_deployment();
+        cfg.engine = EngineKind::Mte;
+        let mte = A2eEngine::new(FabricParams::default(), cfg.clone()).a2e().total_ns;
+        cfg.engine = EngineKind::Dma;
+        let urma = A2eEngine::new(FabricParams::default(), cfg).a2e().total_ns;
+        assert!(urma < mte, "urma {urma} vs mte {mte}");
+    }
+
+    #[test]
+    fn scales_with_microbatch_slice() {
+        let e_full = paper_engine();
+        let e_half = A2eEngine::new(
+            FabricParams::default(),
+            A2eConfig::paper_deployment().with_batch(48),
+        );
+        let full = e_full.a2e().total_ns;
+        let half = e_half.a2e().total_ns;
+        assert!(half < full && half > full / 4, "half-batch A2E {half} vs {full}");
+    }
+}

@@ -1,0 +1,27 @@
+//! XCCL: memory-semantic communication library over CloudMatrix384's
+//! distributed shared memory (paper §3, DESIGN.md S2–S4).
+//!
+//! The protocols are implemented **literally** — metadata fields, ring
+//! buffers, chunking, acknowledgments, pull-based all-to-all, trampoline
+//! forwarding — moving real bytes through [`crate::fabric::GlobalMemory`];
+//! elapsed time comes from the calibrated engine models
+//! ([`crate::fabric::FabricParams`]).
+//!
+//! * [`p2p`]   — send/receive (§3.1, 8-step distributed memory protocol);
+//!   used for KV-cache transfer in disaggregated Prefill-Decode.
+//! * [`a2a`]   — dispatch/combine for colocated MoE-attention expert
+//!   parallelism (§3.2, pull-based, fused INT8 quantization).
+//! * [`a2e`]   — A2E/E2A for disaggregated MoE-Attention (§3.3), with
+//!   trampoline forward for asymmetric NPU allocations and the MTE-vs-URMA
+//!   engine trade-off.
+//! * [`quant`] — token-wise INT8 communication quantization (the Rust
+//!   mirror of the L1 `comm_quant` Pallas kernel; fused into dispatch).
+
+pub mod p2p;
+pub mod a2a;
+pub mod a2e;
+pub mod quant;
+
+pub use a2a::{A2aConfig, A2aEngine, CollectiveStats};
+pub use a2e::{A2eConfig, A2eEngine};
+pub use p2p::{P2pEngine, SendOptions, TransferReport};
