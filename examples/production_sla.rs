@@ -1,22 +1,30 @@
 //! Production-SLA scenario (§7.2): the 16-server deployment — 4 prefill TEs
 //! + 1 decode TE — under the production length distribution (inputs 0–64K,
 //! avg 13K; outputs avg 2.1K), with Poisson arrivals, long-sequence
-//! isolation, and both §4.3 load-balancing policies compared.
+//! isolation, and the §4.3/§4.4 load-balancing policies compared — including
+//! the straggler-aware router fed by per-group decode-tick EWMAs, under a
+//! deterministic injected straggler cohort.
 //!
 //! Run: `cargo run --release --example production_sla [-- --rate 25]`
 
 use xdeepserve::config::DecodeLbPolicy;
-use xdeepserve::coordinator::decode_sched::{choose_group, kv_imbalance, GroupStatus};
+use xdeepserve::coordinator::decode_sched::{
+    choose_group_straggler_aware, kv_imbalance, GroupLoadView, GroupStatus,
+};
 use xdeepserve::disagg::colocated::{simulate, ColocatedDeployment};
 use xdeepserve::metrics::{RequestTiming, ServingMetrics};
 use xdeepserve::util::args::Args;
 use xdeepserve::util::rng::Rng;
+use xdeepserve::workload::straggler::StragglerProfile;
 use xdeepserve::workload::{TraceKind, WorkloadGen};
 
 const PREFILL_TOKS_PER_S: f64 = 22_000.0;
 const PREFILL_DPS: usize = 32;
 const DECODE_GROUPS: usize = 128;
 const BATCH_LIMIT: usize = 48;
+/// Every 16th decode DP group is a straggler (§4.4 jitter study).
+const STRAGGLER_STRIDE: usize = 16;
+const STRAGGLER_FACTOR: f64 = 5.0;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -29,11 +37,26 @@ fn main() {
     let dec = ColocatedDeployment::production();
     let dr = simulate(&dec, eff_seq, 6, 5);
     println!(
-        "decode TE model: iteration {:.1} ms → effective TPOT {:.1} ms at 90% MTP accept\n",
+        "decode TE model: iteration {:.1} ms → effective TPOT {:.1} ms at 90% MTP accept",
         dr.iteration_ms, dr.effective_tpot_ms
     );
+    println!(
+        "injected stragglers: every {STRAGGLER_STRIDE}th DP group runs {STRAGGLER_FACTOR}x slow\n"
+    );
 
-    for policy in [DecodeLbPolicy::LeastKv, DecodeLbPolicy::RoundRobin] {
+    // Deterministic straggler cohort + per-group tick EWMAs the router sees.
+    let mut slow = StragglerProfile::uniform(DECODE_GROUPS, (dr.iteration_ms * 1e6) as u64);
+    for g in (0..DECODE_GROUPS).step_by(STRAGGLER_STRIDE) {
+        slow.slow_factor[g] = STRAGGLER_FACTOR;
+    }
+    let ewma_ns: Vec<u64> = (0..DECODE_GROUPS).map(|g| slow.tick_delay_ns(g, 0)).collect();
+
+    let scenarios: [(&str, DecodeLbPolicy, f64); 3] = [
+        ("RoundRobin (no mitigation)", DecodeLbPolicy::RoundRobin, 0.0),
+        ("LeastKv (KV signal only)", DecodeLbPolicy::LeastKv, 0.0),
+        ("LeastKv + straggler EWMA penalty", DecodeLbPolicy::LeastKv, 0.8),
+    ];
+    for (label, policy, penalty) in scenarios {
         let mut gen = WorkloadGen::new(42);
         let reqs = gen.generate(TraceKind::Production, n, rate);
         let mut rng = Rng::new(7);
@@ -44,6 +67,7 @@ fn main() {
         let mut rr = 0usize;
         let mut metrics = ServingMetrics::new();
         let mut rejected = 0usize;
+        let mut straggler_hits = 0usize;
 
         for r in &reqs {
             // prefill: least-busy DP (collaborative scheduler)
@@ -53,25 +77,34 @@ fn main() {
             busy[dp] = start + prefill_ns;
             let transfer_ns = 30_000 + (r.input_tokens as u64 * 36_864) * 1_000_000_000
                 / 200_000_000_000u64;
-            // decode group via policy
-            let statuses: Vec<GroupStatus> = (0..DECODE_GROUPS)
-                .map(|g| GroupStatus {
-                    group: g,
-                    running: running[g],
-                    batch_limit: BATCH_LIMIT,
-                    kv_usage: kv[g],
-                    healthy: true,
+            // decode group via the straggler-aware router (penalty 0 ==
+            // the plain §4.3 policy)
+            let views: Vec<GroupLoadView> = (0..DECODE_GROUPS)
+                .map(|g| GroupLoadView {
+                    status: GroupStatus {
+                        group: g,
+                        running: running[g],
+                        batch_limit: BATCH_LIMIT,
+                        kv_usage: kv[g],
+                        healthy: true,
+                    },
+                    tick_ewma_ns: ewma_ns[g],
+                    epoch: 0,
                 })
                 .collect();
-            let Some(g) = choose_group(&statuses, policy, &mut rr) else {
+            let Some(g) = choose_group_straggler_aware(&views, policy, &mut rr, penalty) else {
                 rejected += 1;
                 continue;
             };
+            let factor = slow.slow_factor[g];
+            if factor > 1.0 {
+                straggler_hits += 1;
+            }
             running[g] += 1;
             kv[g] += r.input_tokens as f64 / 1_000_000.0;
             let first_token = busy[dp] + transfer_ns;
             let tpot_ns =
-                (dr.effective_tpot_ms * 1e6 * rng.lognormal(0.0, 0.04)) as u64;
+                (dr.effective_tpot_ms * factor * 1e6 * rng.lognormal(0.0, 0.04)) as u64;
             let done = first_token + tpot_ns * r.output_tokens.max(2) as u64;
             metrics.record_request(&RequestTiming {
                 arrival_ns: r.arrival_ns,
@@ -100,13 +133,15 @@ fn main() {
             })
             .collect();
         let (sla_ttft, sla_tpot) = metrics.sla_attainment(2_000.0, 45.0);
-        println!("policy {policy:?}:");
+        let p99_tpot = metrics.tpot_ms.percentile(99.0);
+        println!("policy {label}:");
         println!("  {}", metrics.report().replace('\n', "\n  "));
         println!(
-            "  TTFT SLA (<2s): {:.0}%  TPOT SLA: {:.0}%  rejected: {rejected}  \
-             final KV imbalance (max/mean): {:.2}\n",
+            "  TTFT SLA (<2s): {:.0}%  TPOT SLA: {:.0}%  p99 TPOT: {:.1} ms  rejected: {rejected}\n  \
+             requests on stragglers: {straggler_hits}  final KV imbalance (max/mean): {:.2}\n",
             sla_ttft * 100.0,
             sla_tpot * 100.0,
+            p99_tpot,
             kv_imbalance(&statuses)
         );
     }

@@ -1,0 +1,194 @@
+//! Decentralized scale-out bench (§4, §7.1 shape): aggregate decode
+//! throughput vs. DP-group/thread count, and p99 TPOT with vs. without
+//! straggler mitigation under deterministic injected jitter.
+//!
+//! Uses the SimModel backend with a fixed injected per-tick cost, so the
+//! workload is sleep-bound: aggregate throughput must scale close to
+//! linearly with the number of decentralized group threads, and a slow
+//! group must only hurt tail TPOT when the router ignores tick EWMAs.
+//!
+//! Run: `cargo bench --bench decentralized_scaleout`
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use xdeepserve::bench_support::PaperBench;
+use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{ServeRequest, TeShell};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::util::stats::Histogram;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+const TICK_NS: u64 = 1_000_000; // 1 ms injected decode-tick cost
+const MAX_NEW: usize = 16;
+const REQS_PER_GROUP: usize = 6;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn specs(n: usize) -> Vec<GroupSpec> {
+    (0..n).map(|i| GroupSpec::new(i, 8, 512)).collect()
+}
+
+/// Serve a fixed per-group workload on `n` group threads; returns
+/// (tokens/s aggregate, wall ms).
+fn throughput_run(n: usize) -> (f64, f64) {
+    let rt = DecentralizedRuntime::spawn(
+        &specs(n),
+        StragglerProfile::uniform(n, TICK_NS),
+        None,
+        sim_factory(),
+    )
+    .unwrap();
+    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let t0 = Instant::now();
+    for i in 0..(n * REQS_PER_GROUP) as u64 {
+        shell
+            .dispatch_decentralized(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0), &rt)
+            .unwrap();
+    }
+    while !shell.waiting.is_empty() {
+        thread::sleep(Duration::from_micros(300));
+        shell.drain_waiting_decentralized(&rt).unwrap();
+    }
+    let groups = rt.shutdown().unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tokens: usize = groups
+        .iter()
+        .flat_map(|g| g.finished.iter())
+        .map(|r| r.generated.len())
+        .sum();
+    assert_eq!(
+        tokens,
+        n * REQS_PER_GROUP * MAX_NEW,
+        "bench workload must fully complete"
+    );
+    (tokens as f64 / wall_s, wall_s * 1e3)
+}
+
+/// Straggler scenario: group `victim` runs `slow_factor`× slower with
+/// seeded jitter. Returns the p99/mean TPOT (ms) over measured requests.
+fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
+    const N: usize = 4;
+    const VICTIM: usize = 3;
+    let rt = DecentralizedRuntime::spawn(
+        &specs(N),
+        StragglerProfile::with_slow_group(N, TICK_NS / 2, VICTIM, 12.0).with_jitter(0.25, 42),
+        None,
+        sim_factory(),
+    )
+    .unwrap();
+    let mut shell = TeShell::new(policy).with_straggler_penalty(penalty);
+
+    // Warm every group's EWMA so routing has a signal to act on.
+    for g in 0..N {
+        for k in 0..2u64 {
+            rt.submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 7], 4, 0))
+                .unwrap();
+        }
+    }
+    let warm_deadline = Instant::now() + Duration::from_secs(20);
+    while !(rt.all_idle() && rt.load_views().iter().all(|v| v.tick_ewma_ns > 0)) {
+        assert!(Instant::now() < warm_deadline, "warmup stalled");
+        thread::sleep(Duration::from_millis(1));
+    }
+
+    // Measured traffic, lightly paced so routing reacts to fresh status.
+    const MEASURED: u64 = 60;
+    for i in 0..MEASURED {
+        shell
+            .dispatch_decentralized(
+                ServeRequest::new(1000 + i, vec![256, 2, 4], 12, 0),
+                &rt,
+            )
+            .unwrap();
+        if i % 4 == 3 {
+            thread::sleep(Duration::from_millis(2));
+            shell.drain_waiting_decentralized(&rt).unwrap();
+        }
+    }
+    while !shell.waiting.is_empty() {
+        thread::sleep(Duration::from_millis(1));
+        shell.drain_waiting_decentralized(&rt).unwrap();
+    }
+    let groups = rt.shutdown().unwrap();
+    let mut tpot = Histogram::new();
+    let mut victim_share = 0usize;
+    for g in &groups {
+        for r in g.finished.iter().filter(|r| r.id >= 1000) {
+            tpot.record(r.timing.tpot_ms());
+            if g.id == VICTIM {
+                victim_share += 1;
+            }
+        }
+    }
+    assert_eq!(tpot.len(), MEASURED as usize, "measured workload must complete");
+    (tpot.percentile(99.0), tpot.mean(), victim_share)
+}
+
+fn main() {
+    let mut bench = PaperBench::new(
+        "Decentralized-scaleout",
+        "per-group worker threads: throughput scaling + straggler mitigation (wall clock)",
+        &["scenario", "value", "detail", "target"],
+    );
+
+    // ---- aggregate decode throughput vs. group/thread count ----
+    let mut tput1 = 0.0;
+    let mut tput4 = 0.0;
+    for n in [1usize, 2, 4, 8] {
+        let (tps, wall_ms) = throughput_run(n);
+        if n == 1 {
+            tput1 = tps;
+        }
+        if n == 4 {
+            tput4 = tps;
+        }
+        bench.row(&[
+            format!("{n} DP group thread(s)"),
+            format!("{tps:.0} tok/s"),
+            format!("{wall_ms:.1} ms wall"),
+            "scales with threads".into(),
+        ]);
+    }
+    bench.check(
+        "aggregate throughput scales >= 2.2x from 1 -> 4 group threads",
+        tput4 >= 2.2 * tput1,
+    );
+
+    // ---- straggler mitigation: p99 TPOT with vs. without ----
+    let (p99_rr, mean_rr, share_rr) = straggler_run(DecodeLbPolicy::RoundRobin, 0.0);
+    let (p99_lk, mean_lk, share_lk) = straggler_run(DecodeLbPolicy::LeastKv, 0.0);
+    let (p99_mit, mean_mit, share_mit) = straggler_run(DecodeLbPolicy::LeastKv, 1.0);
+    bench.row(&[
+        "no mitigation (RoundRobin)".into(),
+        format!("p99 TPOT {p99_rr:.2} ms"),
+        format!("mean {mean_rr:.2} ms, victim got {share_rr}/60"),
+        "baseline".into(),
+    ]);
+    bench.row(&[
+        "KV-only (LeastKv, penalty 0)".into(),
+        format!("p99 TPOT {p99_lk:.2} ms"),
+        format!("mean {mean_lk:.2} ms, victim got {share_lk}/60"),
+        "ablation".into(),
+    ]);
+    bench.row(&[
+        "straggler-aware (LeastKv + EWMA penalty)".into(),
+        format!("p99 TPOT {p99_mit:.2} ms"),
+        format!("mean {mean_mit:.2} ms, victim got {share_mit}/60"),
+        "lowest tail".into(),
+    ]);
+    bench.check(
+        "mitigation cuts p99 TPOT vs. no-mitigation round-robin",
+        p99_mit < p99_rr,
+    );
+    bench.check(
+        "mitigation routes less to the straggler than round-robin",
+        share_mit < share_rr,
+    );
+
+    std::process::exit(i32::from(!bench.finish()));
+}

@@ -187,6 +187,11 @@ pub struct ServingConfig {
     pub dp_queue_limit: usize,
     /// KV reservation headroom for long outputs (§4.3 decode LB).
     pub kv_reserve_frac: f64,
+    /// Straggler-penalty weight for decentralized dispatch (§4.4):
+    /// score += penalty · max(0, tick_ewma/median − 1); 0 disables.
+    pub straggler_penalty: f64,
+    /// EWMA weight for the per-group tick-latency signal.
+    pub tick_ewma_alpha: f64,
 }
 
 impl Default for ServingConfig {
@@ -202,6 +207,8 @@ impl Default for ServingConfig {
             int8: true,
             dp_queue_limit: 256,
             kv_reserve_frac: 0.1,
+            straggler_penalty: 0.5,
+            tick_ewma_alpha: 0.25,
         }
     }
 }
@@ -230,11 +237,20 @@ impl Default for Config {
 }
 
 impl Config {
-    /// Load overrides from a TOML-lite file onto a preset base.
+    /// Load overrides from a TOML-lite file onto a preset base. Malformed
+    /// configs — unreadable file, syntax errors, unknown preset/policy
+    /// names, wrong-typed values — fail with the offending path/key in the
+    /// error instead of panicking or silently falling back to defaults.
     pub fn from_file(path: &str) -> crate::Result<Self> {
+        use anyhow::Context;
+        Self::from_file_inner(path).with_context(|| format!("loading config {path:?}"))
+    }
+
+    fn from_file_inner(path: &str) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let toml = toml_lite::parse(&text)?;
-        let mut cfg = match toml.get_str("preset").unwrap_or("colocated_dp288") {
+        let mut cfg = match toml.try_str("preset")?.unwrap_or("colocated_dp288") {
+            "colocated_dp288" => Config::default(),
             "disagg_768" => Config {
                 deployment: DeploymentConfig::disagg_768(),
                 ..Default::default()
@@ -243,45 +259,64 @@ impl Config {
                 deployment: DeploymentConfig::production_decode_te(),
                 ..Default::default()
             },
-            _ => Config::default(),
+            other => anyhow::bail!(
+                "unknown preset {other:?} (expected colocated_dp288, disagg_768, or production)"
+            ),
         };
-        if let Some(v) = toml.get_u64("seed") {
+        if let Some(v) = toml.try_u64("seed")? {
             cfg.seed = v;
         }
-        if let Some(v) = toml.get_str("artifacts_dir") {
+        if let Some(v) = toml.try_str("artifacts_dir")? {
             cfg.artifacts_dir = v.to_string();
         }
-        if let Some(v) = toml.get_u64("deployment.batch_per_die") {
+        if let Some(v) = toml.try_u64("deployment.batch_per_die")? {
             cfg.deployment.batch_per_die = v as usize;
         }
-        if let Some(v) = toml.get_u64("deployment.dp_groups") {
+        if let Some(v) = toml.try_u64("deployment.dp_groups")? {
             cfg.deployment.dp_groups = v as usize;
         }
-        if let Some(v) = toml.get_u64("deployment.dp_domains") {
+        if let Some(v) = toml.try_u64("deployment.dp_domains")? {
             cfg.deployment.dp_domains = v as usize;
         }
-        if let Some(v) = toml.get_u64("deployment.ep_size") {
+        if let Some(v) = toml.try_u64("deployment.ep_size")? {
             cfg.deployment.ep_size = v as usize;
         }
-        if let Some(v) = toml.get_u64("serving.mtp_layers") {
+        if let Some(v) = toml.try_u64("serving.mtp_layers")? {
             cfg.serving.mtp_layers = v as usize;
         }
-        if let Some(v) = toml.get_bool("serving.int8") {
+        if let Some(v) = toml.try_bool("serving.int8")? {
             cfg.serving.int8 = v;
         }
-        if let Some(v) = toml.get_bool("serving.manual_gc") {
+        if let Some(v) = toml.try_bool("serving.manual_gc")? {
             cfg.serving.manual_gc = v;
         }
-        if let Some(v) = toml.get_str("serving.decode_lb") {
+        if let Some(v) = toml.try_str("serving.decode_lb")? {
             cfg.serving.decode_lb = match v {
                 "round_robin" => DecodeLbPolicy::RoundRobin,
-                _ => DecodeLbPolicy::LeastKv,
+                "least_kv" => DecodeLbPolicy::LeastKv,
+                other => anyhow::bail!(
+                    "unknown serving.decode_lb {other:?} (expected round_robin or least_kv)"
+                ),
             };
         }
-        if let Some(v) = toml.get_f64("sla.ttft_ms") {
+        if let Some(v) = toml.try_f64("serving.straggler_penalty")? {
+            anyhow::ensure!(
+                v >= 0.0,
+                "serving.straggler_penalty must be >= 0, got {v}"
+            );
+            cfg.serving.straggler_penalty = v;
+        }
+        if let Some(v) = toml.try_f64("serving.tick_ewma_alpha")? {
+            anyhow::ensure!(
+                v > 0.0 && v <= 1.0,
+                "serving.tick_ewma_alpha must be in (0, 1], got {v}"
+            );
+            cfg.serving.tick_ewma_alpha = v;
+        }
+        if let Some(v) = toml.try_f64("sla.ttft_ms")? {
             cfg.sla.ttft_ms = v;
         }
-        if let Some(v) = toml.get_f64("sla.tpot_ms") {
+        if let Some(v) = toml.try_f64("sla.tpot_ms")? {
             cfg.sla.tpot_ms = v;
         }
         Ok(cfg)
@@ -338,5 +373,56 @@ mod tests {
         assert_eq!(cfg.serving.mtp_layers, 2);
         assert!(!cfg.serving.int8);
         assert_eq!(cfg.sla.tpot_ms, 50.0);
+        // defaults for the straggler knobs
+        assert_eq!(cfg.serving.straggler_penalty, 0.5);
+        assert_eq!(cfg.serving.tick_ewma_alpha, 0.25);
+    }
+
+    fn write_cfg(name: &str, body: &str) -> String {
+        let dir = std::env::temp_dir().join("xds_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        path.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn malformed_configs_fail_with_context() {
+        // missing file: error names the path
+        let e = Config::from_file("/nonexistent/xds.toml").unwrap_err().to_string();
+        assert!(e.contains("/nonexistent/xds.toml"), "{e}");
+
+        // unknown preset is an error, not a silent default
+        let p = write_cfg("bad_preset.toml", "preset = \"mega_pod\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("mega_pod"), "{e}");
+
+        // wrong-typed value is an error naming the key
+        let p = write_cfg("bad_type.toml", "seed = \"not-a-number\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("seed"), "{e}");
+
+        // unknown policy name is an error
+        let p = write_cfg("bad_lb.toml", "[serving]\ndecode_lb = \"fastest\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("fastest"), "{e}");
+
+        // out-of-range straggler knobs are errors
+        let p = write_cfg("bad_alpha.toml", "[serving]\ntick_ewma_alpha = 1.5\n");
+        assert!(Config::from_file(&p).is_err());
+        let p = write_cfg("bad_pen.toml", "[serving]\nstraggler_penalty = -1.0\n");
+        assert!(Config::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn straggler_knobs_parse() {
+        let p = write_cfg(
+            "strag.toml",
+            "[serving]\nstraggler_penalty = 1.25\ntick_ewma_alpha = 0.5\ndecode_lb = \"round_robin\"\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.serving.straggler_penalty, 1.25);
+        assert_eq!(cfg.serving.tick_ewma_alpha, 0.5);
+        assert_eq!(cfg.serving.decode_lb, DecodeLbPolicy::RoundRobin);
     }
 }

@@ -25,32 +25,62 @@ impl TomlDoc {
         self.entries.get(key)
     }
 
+    // Permissive getters (absent OR wrong-typed → `None`), defined on top
+    // of the checked `try_*` variants below so the type rules live in one
+    // place. Config::from_file uses `try_*` so malformed values error.
+
     pub fn get_str(&self, key: &str) -> Option<&str> {
-        match self.get(key) {
-            Some(TomlValue::Str(s)) => Some(s),
-            _ => None,
-        }
+        self.try_str(key).ok().flatten()
     }
 
     pub fn get_u64(&self, key: &str) -> Option<u64> {
-        match self.get(key) {
-            Some(TomlValue::Int(i)) if *i >= 0 => Some(*i as u64),
-            _ => None,
-        }
+        self.try_u64(key).ok().flatten()
     }
 
     pub fn get_f64(&self, key: &str) -> Option<f64> {
-        match self.get(key) {
-            Some(TomlValue::Float(f)) => Some(*f),
-            Some(TomlValue::Int(i)) => Some(*i as f64),
-            _ => None,
-        }
+        self.try_f64(key).ok().flatten()
     }
 
     pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.try_bool(key).ok().flatten()
+    }
+
+    // Checked getters: `Ok(None)` when the key is absent, `Err` when it is
+    // present with the wrong type — so a typo'd config fails loudly with
+    // context instead of silently falling back to the default.
+
+    pub fn try_str(&self, key: &str) -> anyhow::Result<Option<&str>> {
         match self.get(key) {
-            Some(TomlValue::Bool(b)) => Some(*b),
-            _ => None,
+            None => Ok(None),
+            Some(TomlValue::Str(s)) => Ok(Some(s)),
+            Some(v) => anyhow::bail!("config key {key:?}: expected a string, got {v:?}"),
+        }
+    }
+
+    pub fn try_u64(&self, key: &str) -> anyhow::Result<Option<u64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(v) => {
+                anyhow::bail!("config key {key:?}: expected a non-negative integer, got {v:?}")
+            }
+        }
+    }
+
+    pub fn try_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Float(f)) => Ok(Some(*f)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => anyhow::bail!("config key {key:?}: expected a number, got {v:?}"),
+        }
+    }
+
+    pub fn try_bool(&self, key: &str) -> anyhow::Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => anyhow::bail!("config key {key:?}: expected a boolean, got {v:?}"),
         }
     }
 }
@@ -142,5 +172,23 @@ mod tests {
     fn int_promotes_to_f64() {
         let doc = parse("x = 3").unwrap();
         assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn checked_getters_reject_wrong_types() {
+        let doc = parse("s = \"txt\"\nn = 4\nneg = -2\nb = true\nf = 1.5\n").unwrap();
+        assert_eq!(doc.try_str("s").unwrap(), Some("txt"));
+        assert_eq!(doc.try_u64("n").unwrap(), Some(4));
+        assert_eq!(doc.try_f64("f").unwrap(), Some(1.5));
+        assert_eq!(doc.try_f64("n").unwrap(), Some(4.0));
+        assert_eq!(doc.try_bool("b").unwrap(), Some(true));
+        assert_eq!(doc.try_u64("missing").unwrap(), None);
+        // wrong types fail with the key in the message
+        let e = doc.try_u64("s").unwrap_err().to_string();
+        assert!(e.contains("\"s\""), "message names the key: {e}");
+        assert!(doc.try_u64("neg").is_err(), "negative rejected for u64");
+        assert!(doc.try_bool("n").is_err());
+        assert!(doc.try_str("b").is_err());
+        assert!(doc.try_f64("s").is_err());
     }
 }

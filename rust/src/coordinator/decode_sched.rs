@@ -25,6 +25,21 @@ impl GroupStatus {
     }
 }
 
+/// Round-robin by *group id*, not by index into the eligible list: the
+/// cursor stores the next id to start scanning from, so groups joining,
+/// leaving, filling up, or being demoted mid-stream never skew the cycle
+/// (an index-modulo cursor re-aims whenever the eligible set changes size).
+fn round_robin_pick(eligible_ids: &[usize], cursor: &mut usize) -> Option<usize> {
+    let pick = eligible_ids
+        .iter()
+        .copied()
+        .filter(|&g| g >= *cursor)
+        .min()
+        .or_else(|| eligible_ids.iter().copied().min())?;
+    *cursor = pick + 1;
+    Some(pick)
+}
+
 /// Pick a decode DP group for a new request. Returns `None` when every
 /// group is full (backpressure — request waits, increasing TTST, which is
 /// exactly why the paper balances by KV usage).
@@ -39,9 +54,8 @@ pub fn choose_group(
     }
     match policy {
         DecodeLbPolicy::RoundRobin => {
-            let pick = eligible[*rr_counter % eligible.len()].group;
-            *rr_counter += 1;
-            Some(pick)
+            let ids: Vec<usize> = eligible.iter().map(|g| g.group).collect();
+            round_robin_pick(&ids, rr_counter)
         }
         DecodeLbPolicy::LeastKv => eligible
             .into_iter()
@@ -52,6 +66,95 @@ pub fn choose_group(
                     .then(a.running.cmp(&b.running))
             })
             .map(|g| g.group),
+    }
+}
+
+/// What the TE-shell reads off the status board for one group: the plain
+/// §4.3 status plus the worker-published decode-tick latency EWMA and the
+/// publish epoch (stale-tolerance bookkeeping).
+#[derive(Clone, Copy, Debug)]
+pub struct GroupLoadView {
+    pub status: GroupStatus,
+    /// Tick-latency EWMA published by the group's worker thread (ns).
+    pub tick_ewma_ns: u64,
+    /// Status-board publish epoch this view was read at.
+    pub epoch: u64,
+}
+
+/// Hard-demotion ratio: a group whose tick EWMA exceeds this multiple of
+/// the eligible median is dropped from routing entirely — unless that
+/// would leave no candidate, in which case availability wins over latency.
+pub const STRAGGLER_DEMOTE_RATIO: f64 = 3.0;
+
+fn median_ewma_ns(views: &[&GroupLoadView]) -> u64 {
+    let mut v: Vec<u64> = views
+        .iter()
+        .map(|g| g.tick_ewma_ns)
+        .filter(|&x| x > 0)
+        .collect();
+    if v.is_empty() {
+        return 0;
+    }
+    v.sort_unstable();
+    v[v.len() / 2]
+}
+
+/// Straggler-aware variant of [`choose_group`] (§4 "techniques to mitigate
+/// stragglers and synchronization variance"): groups with a rising
+/// tick-latency EWMA are soft-penalized under `LeastKv` (score =
+/// `kv_usage + penalty · max(0, ewma/median − 1)`) and hard-demoted past
+/// [`STRAGGLER_DEMOTE_RATIO`] × median under either policy. `penalty <= 0`
+/// reduces exactly to [`choose_group`] on the inner statuses.
+pub fn choose_group_straggler_aware(
+    views: &[GroupLoadView],
+    policy: DecodeLbPolicy,
+    rr_counter: &mut usize,
+    penalty: f64,
+) -> Option<usize> {
+    let eligible: Vec<&GroupLoadView> =
+        views.iter().filter(|v| v.status.has_slot()).collect();
+    if eligible.is_empty() {
+        return None;
+    }
+    let med = if penalty > 0.0 { median_ewma_ns(&eligible) } else { 0 };
+    let pool: Vec<&GroupLoadView> = if med > 0 {
+        let fast: Vec<&GroupLoadView> = eligible
+            .iter()
+            .copied()
+            .filter(|v| (v.tick_ewma_ns as f64) <= STRAGGLER_DEMOTE_RATIO * med as f64)
+            .collect();
+        if fast.is_empty() {
+            eligible
+        } else {
+            fast
+        }
+    } else {
+        eligible
+    };
+    match policy {
+        DecodeLbPolicy::RoundRobin => {
+            let ids: Vec<usize> = pool.iter().map(|v| v.status.group).collect();
+            round_robin_pick(&ids, rr_counter)
+        }
+        DecodeLbPolicy::LeastKv => {
+            let score = |v: &GroupLoadView| {
+                let mut s = v.status.kv_usage;
+                if med > 0 {
+                    let ratio = v.tick_ewma_ns as f64 / med as f64;
+                    s += penalty * (ratio - 1.0).max(0.0);
+                }
+                s
+            };
+            pool.into_iter()
+                .min_by(|a, b| {
+                    score(a)
+                        .partial_cmp(&score(b))
+                        .unwrap()
+                        .then(a.status.running.cmp(&b.status.running))
+                        .then(a.status.group.cmp(&b.status.group))
+                })
+                .map(|v| v.status.group)
+        }
     }
 }
 
@@ -115,6 +218,87 @@ mod tests {
             .map(|_| choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_survives_groups_joining_and_leaving() {
+        // Regression: the cursor is keyed by group id, so membership
+        // changes mid-stream must neither panic nor skew the cycle.
+        let mut rr = 0;
+        let full = |id| g(id, 8, 8, 0.0);
+        // start with {0,1,2,3}
+        let mut groups = vec![g(0, 0, 8, 0.0), g(1, 0, 8, 0.0), g(2, 0, 8, 0.0), g(3, 0, 8, 0.0)];
+        assert_eq!(choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr), Some(0));
+        assert_eq!(choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr), Some(1));
+        // group 2 leaves (full); the cycle continues at 3, not back at 0
+        groups[2] = full(2);
+        assert_eq!(choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr), Some(3));
+        // group 2 returns and new group 4 joins; wrap visits each once
+        groups[2] = g(2, 0, 8, 0.0);
+        groups.push(g(4, 0, 8, 0.0));
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            seen.push(choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr).unwrap());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4], "one full cycle covers every live group");
+    }
+
+    #[test]
+    fn round_robin_handles_non_contiguous_ids() {
+        let groups = vec![g(3, 0, 8, 0.0), g(7, 0, 8, 0.0), g(9, 0, 8, 0.0)];
+        let mut rr = 0;
+        let picks: Vec<_> = (0..6)
+            .map(|_| choose_group(&groups, DecodeLbPolicy::RoundRobin, &mut rr).unwrap())
+            .collect();
+        assert_eq!(picks, vec![3, 7, 9, 3, 7, 9]);
+    }
+
+    fn view(group: usize, kv: f64, ewma_ns: u64) -> GroupLoadView {
+        GroupLoadView { status: g(group, 2, 8, kv), tick_ewma_ns: ewma_ns, epoch: 0 }
+    }
+
+    #[test]
+    fn straggler_penalty_shifts_least_kv_choice() {
+        // Group 0 has the lowest KV but a 2.5x tick EWMA; with the penalty
+        // on, routing prefers the nominal group.
+        let views = vec![view(0, 0.10, 2_500_000), view(1, 0.20, 1_000_000), view(2, 0.30, 1_000_000)];
+        let mut rr = 0;
+        assert_eq!(
+            choose_group_straggler_aware(&views, DecodeLbPolicy::LeastKv, &mut rr, 0.0),
+            Some(0),
+            "penalty off == plain LeastKv"
+        );
+        assert_eq!(
+            choose_group_straggler_aware(&views, DecodeLbPolicy::LeastKv, &mut rr, 0.5),
+            Some(1),
+            "penalty on shifts off the straggler"
+        );
+    }
+
+    #[test]
+    fn extreme_straggler_is_hard_demoted_even_for_round_robin() {
+        let views = vec![view(0, 0.0, 10_000_000), view(1, 0.0, 1_000_000), view(2, 0.0, 1_000_000)];
+        let mut rr = 0;
+        for _ in 0..6 {
+            let pick =
+                choose_group_straggler_aware(&views, DecodeLbPolicy::RoundRobin, &mut rr, 1.0)
+                    .unwrap();
+            assert_ne!(pick, 0, "10x straggler must be demoted from routing");
+        }
+    }
+
+    #[test]
+    fn demotion_never_leaves_zero_candidates() {
+        // Only one group has a slot and it is a straggler: availability
+        // wins — route to it anyway rather than parking forever.
+        let mut views = vec![view(0, 0.1, 9_000_000), view(1, 0.1, 1_000_000)];
+        views[1].status.running = 8; // full
+        let mut rr = 0;
+        assert_eq!(
+            choose_group_straggler_aware(&views, DecodeLbPolicy::LeastKv, &mut rr, 1.0),
+            Some(0)
+        );
     }
 
     /// Property: LeastKv keeps long-run KV imbalance below RoundRobin under

@@ -10,7 +10,7 @@ use crate::coordinator::decode_sched::GroupStatus;
 use crate::coordinator::output::OutputEvent;
 use crate::coordinator::request::{RequestState, ServeRequest};
 use crate::kvcache::BlockPool;
-use crate::model::{SeqKv, ServedModel};
+use crate::model::{DecodeModel, SeqKv};
 use crate::mtp;
 
 /// A sequence resident in the decode batch.
@@ -125,8 +125,26 @@ impl DpGroup {
         }
     }
 
-    /// Admit queued requests (colocated mode: run prefill locally).
-    pub fn admit_from_queue(&mut self, model: &ServedModel, now_ns: u64) -> Result<usize> {
+    /// Terminally fail one request (rejected prompt, duplicate id, worker
+    /// drain, ...): record it as Failed and notify the output path — the
+    /// `Finished` event is what lets stream consumers release per-request
+    /// state — without touching the group's health or the rest of the
+    /// queue.
+    pub fn fail_request(&mut self, mut req: ServeRequest, now_ns: u64) {
+        req.state = RequestState::Failed;
+        req.timing.done_ns = now_ns;
+        self.emit(OutputEvent::Finished { req_id: req.id });
+        self.finished.push(req);
+    }
+
+    /// Admit queued requests (colocated mode: run prefill locally). A
+    /// request whose prefill or KV admission is rejected fails *alone* —
+    /// it must not poison the group or stall the queue behind it.
+    pub fn admit_from_queue<M: DecodeModel + ?Sized>(
+        &mut self,
+        model: &M,
+        now_ns: u64,
+    ) -> Result<usize> {
         let mut admitted = 0;
         while self.running.len() < self.batch_limit {
             let Some(req) = self.queue.front() else { break };
@@ -135,9 +153,30 @@ impl DpGroup {
             }
             let mut req = self.queue.pop_front().unwrap();
             req.state = RequestState::Prefilling;
-            let pf = model.prefill(&req.prompt_tokens)?;
-            self.pool.admit(req.id, req.prompt_tokens.len(), req.max_new_tokens)?;
-            let first = pf.logits.argmax_rows()?[0] as i32;
+            let pf = match model.prefill(&req.prompt_tokens) {
+                Ok(pf) => pf,
+                Err(_) => {
+                    self.fail_request(req, now_ns);
+                    continue;
+                }
+            };
+            if self
+                .pool
+                .admit(req.id, req.prompt_tokens.len(), req.max_new_tokens)
+                .is_err()
+            {
+                self.fail_request(req, now_ns);
+                continue;
+            }
+            // Malformed logits (wrong shape / empty rows) also fail only
+            // this request — and must release the admission taken above.
+            let Some(first) = pf.logits.argmax_rows().ok().and_then(|r| r.first().copied())
+            else {
+                let _ = self.pool.release(req.id);
+                self.fail_request(req, now_ns);
+                continue;
+            };
+            let first = first as i32;
             req.state = RequestState::Decoding;
             req.generated.push(first);
             req.timing.prefill_done_ns = now_ns;
@@ -153,18 +192,16 @@ impl DpGroup {
     /// One decode iteration over the whole running set (continuous
     /// batching; chunks of the largest compiled bucket). Returns tokens
     /// generated. `now_ns` stamps finish times.
-    pub fn decode_iteration(&mut self, model: &ServedModel, now_ns: u64) -> Result<usize> {
+    pub fn decode_iteration<M: DecodeModel + ?Sized>(
+        &mut self,
+        model: &M,
+        now_ns: u64,
+    ) -> Result<usize> {
         if self.running.is_empty() {
             return Ok(0);
         }
         self.iterations += 1;
-        let max_bucket = *model
-            .engine
-            .manifest
-            .model
-            .decode_buckets
-            .last()
-            .unwrap_or(&8);
+        let max_bucket = model.max_decode_bucket().max(1);
         let mut produced = 0usize;
 
         let mut chunk_start = 0usize;
@@ -274,6 +311,25 @@ mod tests {
         assert_eq!(st.id, 3);
         assert!(st.healthy);
         assert!(!g.is_idle());
+    }
+
+    #[test]
+    fn bad_prompt_fails_request_without_poisoning_group() {
+        use crate::model::SimModel;
+        let m = SimModel::small();
+        let mut g = DpGroup::new(0, 8, 64);
+        // prompt longer than SimModel's prefill limit → rejected
+        g.enqueue(ServeRequest::new(1, vec![0; 300], 4, 0));
+        g.enqueue(ServeRequest::new(2, vec![256, 1, 2], 4, 0));
+        let admitted = g.admit_from_queue(&m, 5).unwrap();
+        assert_eq!(admitted, 1, "good request behind the bad one still admits");
+        assert!(g.healthy, "a bad request must not poison the group");
+        assert_eq!(g.finished.len(), 1);
+        assert_eq!(g.finished[0].id, 1);
+        assert_eq!(g.finished[0].state, RequestState::Failed);
+        assert_eq!(g.finished[0].timing.done_ns, 5);
+        assert_eq!(g.running.len(), 1);
+        assert_eq!(g.running[0].req.id, 2);
     }
 
     #[test]

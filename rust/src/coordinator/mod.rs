@@ -5,16 +5,33 @@
 //! communication; the **TE-shell** is limited to the three §4.2 duties —
 //! dispatching requests across DPs, triggering expert load balancing, and
 //! coordinating health checks.
+//!
+//! Two execution modes share the same [`DpGroup`] state machine:
+//!
+//! * **Sequential/colocated** — the caller owns the groups and ticks them
+//!   on one thread (`TeShell::dispatch` + `DpGroup::admit_from_queue` /
+//!   `DpGroup::decode_iteration`); used by the artifact-backed examples.
+//! * **Decentralized** ([`worker`]) — one OS thread per group running its
+//!   own tick loop, publishing snapshots to the lock-light
+//!   [`status_board::StatusBoard`] that the shell reads *stale-tolerantly*
+//!   for routing (`TeShell::dispatch_decentralized`), with straggler
+//!   mitigation: EWMA-penalized + hard-demoting routing
+//!   ([`decode_sched::choose_group_straggler_aware`]) and publish-epoch
+//!   heartbeats (`reliability::heartbeat::GroupPulseMonitor`).
 
 pub mod request;
 pub mod dp_group;
+pub mod status_board;
 pub mod te_shell;
 pub mod prefill_sched;
 pub mod decode_sched;
 pub mod batching;
 pub mod gc;
 pub mod output;
+pub mod worker;
 
 pub use dp_group::{DpGroup, DpGroupStatus};
 pub use request::{RequestState, ServeRequest};
+pub use status_board::{BoardEntry, StatusBoard};
 pub use te_shell::TeShell;
+pub use worker::{DecentralizedRuntime, GroupSpec, ModelFactory};

@@ -1,0 +1,176 @@
+//! Shared DP-group status board (§4.2–4.3).
+//!
+//! Each DP-group worker thread *publishes* its [`DpGroupStatus`] snapshot
+//! (plus its decode-tick latency EWMA) after every tick; the TE-shell
+//! *reads* the board when dispatching. The board is the only state shared
+//! between the serving threads and the shell, and it is lock-light: one
+//! `RwLock` per slot (writers never contend with each other) plus an
+//! atomic publish-epoch counter per slot that doubles as the group's
+//! heartbeat pulse.
+//!
+//! **Staleness contract:** readers get the *last published* snapshot, not
+//! the live state — a group may have admitted or finished work since. The
+//! shell therefore (a) tracks its own sent-since-epoch credits on top of
+//! the snapshot (`TeShell::dispatch_decentralized`), (b) treats a stalled
+//! epoch as a failed heartbeat (`reliability::heartbeat::GroupPulseMonitor`),
+//! and (c) never blocks on a group: there are no cross-DP synchronous
+//! calls anywhere on the dispatch path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::coordinator::dp_group::DpGroupStatus;
+
+/// One published snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct BoardEntry {
+    pub status: DpGroupStatus,
+    /// Decode-tick latency EWMA of the publishing worker (ns; 0 = no
+    /// sample yet).
+    pub tick_ewma_ns: u64,
+    /// Runtime-clock timestamp of the publish (ns since runtime start).
+    pub published_ns: u64,
+    /// Publish sequence number (1 = first publish by the worker).
+    pub epoch: u64,
+}
+
+impl BoardEntry {
+    /// Pre-spawn placeholder: healthy and empty, so dispatch can begin
+    /// before the first worker tick.
+    pub fn initial(status: DpGroupStatus) -> Self {
+        Self { status, tick_ewma_ns: 0, published_ns: 0, epoch: 0 }
+    }
+}
+
+/// Fixed-size board, one slot per DP-group worker.
+pub struct StatusBoard {
+    slots: Vec<RwLock<BoardEntry>>,
+    epochs: Vec<AtomicU64>,
+}
+
+impl StatusBoard {
+    pub fn new(initial: Vec<BoardEntry>) -> Self {
+        let epochs = initial.iter().map(|_| AtomicU64::new(0)).collect();
+        Self { slots: initial.into_iter().map(RwLock::new).collect(), epochs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Publish a fresh snapshot for `slot` and advance its epoch. Called
+    /// only by that slot's worker thread.
+    pub fn publish(&self, slot: usize, status: DpGroupStatus, tick_ewma_ns: u64, now_ns: u64) {
+        let epoch = self.epochs[slot].fetch_add(1, Ordering::AcqRel) + 1;
+        let mut w = self.slots[slot].write().unwrap_or_else(|e| e.into_inner());
+        *w = BoardEntry { status, tick_ewma_ns, published_ns: now_ns, epoch };
+    }
+
+    /// Stale-tolerant read of one slot (never blocks behind other readers;
+    /// at worst waits out a single in-flight publish of that slot).
+    pub fn read(&self, slot: usize) -> BoardEntry {
+        *self.slots[slot].read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish-epoch counter for `slot` — the group's heartbeat pulse.
+    pub fn epoch(&self, slot: usize) -> u64 {
+        self.epochs[slot].load(Ordering::Acquire)
+    }
+
+    /// Stale-tolerant copy of every slot.
+    pub fn snapshot(&self) -> Vec<BoardEntry> {
+        (0..self.slots.len()).map(|i| self.read(i)).collect()
+    }
+
+    /// Router-side demotion (heartbeat miss / operator action). Transient
+    /// by design: the worker's next publish overwrites it, so a group that
+    /// was merely slow re-promotes itself the moment it proves liveness.
+    pub fn mark_unhealthy(&self, slot: usize) {
+        let mut w = self.slots[slot].write().unwrap_or_else(|e| e.into_inner());
+        w.status.healthy = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn status(id: usize, queued: usize) -> DpGroupStatus {
+        DpGroupStatus {
+            id,
+            queued,
+            running: 0,
+            batch_limit: 8,
+            kv_usage: 0.0,
+            healthy: true,
+        }
+    }
+
+    fn board(n: usize) -> StatusBoard {
+        StatusBoard::new((0..n).map(|i| BoardEntry::initial(status(i, 0))).collect())
+    }
+
+    #[test]
+    fn publish_read_roundtrip_and_epoch_advances() {
+        let b = board(3);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.epoch(1), 0);
+        b.publish(1, status(1, 5), 42_000, 777);
+        let e = b.read(1);
+        assert_eq!(e.status.queued, 5);
+        assert_eq!(e.tick_ewma_ns, 42_000);
+        assert_eq!(e.published_ns, 777);
+        assert_eq!(e.epoch, 1);
+        assert_eq!(b.epoch(1), 1);
+        b.publish(1, status(1, 6), 43_000, 888);
+        assert_eq!(b.epoch(1), 2);
+        // untouched slots keep their initial entries
+        assert_eq!(b.read(0).epoch, 0);
+        assert!(b.read(0).status.healthy);
+    }
+
+    #[test]
+    fn mark_unhealthy_is_overwritten_by_next_publish() {
+        let b = board(2);
+        b.mark_unhealthy(0);
+        assert!(!b.read(0).status.healthy);
+        // worker proves liveness → re-promoted
+        b.publish(0, status(0, 0), 10, 1);
+        assert!(b.read(0).status.healthy);
+    }
+
+    #[test]
+    fn concurrent_publish_and_snapshot() {
+        use std::sync::Arc;
+        let b = Arc::new(board(4));
+        let writers: Vec<_> = (0..4)
+            .map(|slot| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        b.publish(slot, status(slot, i as usize), i, i);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            for e in b.snapshot() {
+                // entries are copied whole under the slot lock, so the
+                // published pair stays consistent: queued == epoch - 1
+                if e.epoch > 0 {
+                    assert_eq!(e.status.queued as u64, e.epoch - 1, "torn board read");
+                }
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let last = b.snapshot();
+        assert!(last.iter().all(|e| e.epoch == 500));
+        assert!(last.iter().all(|e| e.status.queued == 499));
+    }
+}

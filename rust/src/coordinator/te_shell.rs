@@ -6,12 +6,26 @@
 //! inside the DP groups; request dispatch happens **once per request**,
 //! which is what keeps the shell off the scaling-critical path.
 
-use anyhow::Result;
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
 
 use crate::config::DecodeLbPolicy;
-use crate::coordinator::decode_sched::{choose_group, GroupStatus};
+use crate::coordinator::decode_sched::{choose_group, choose_group_straggler_aware, GroupStatus};
 use crate::coordinator::dp_group::DpGroup;
 use crate::coordinator::request::ServeRequest;
+use crate::coordinator::worker::DecentralizedRuntime;
+
+/// Requests dispatched to a group since a given status-board epoch — the
+/// shell's §4.3 "pending count" on top of stale snapshots: a snapshot only
+/// reflects work the group had seen when it last published, so the shell
+/// adds what it has sent since, and resets the credit once the group
+/// publishes again (the new snapshot already includes those requests).
+#[derive(Clone, Copy, Debug, Default)]
+struct StaleCredit {
+    epoch: u64,
+    sent: usize,
+}
 
 pub struct TeShell {
     pub policy: DecodeLbPolicy,
@@ -23,6 +37,10 @@ pub struct TeShell {
     /// every minute" → iteration-count proxy here).
     pub eplb_interval: u64,
     iterations_since_eplb: u64,
+    /// Straggler-penalty weight for decentralized dispatch (§4.4); 0
+    /// disables both the soft penalty and hard demotion.
+    pub straggler_penalty: f64,
+    credits: HashMap<usize, StaleCredit>,
 }
 
 impl TeShell {
@@ -34,15 +52,32 @@ impl TeShell {
             dispatched: 0,
             eplb_interval: 512,
             iterations_since_eplb: 0,
+            straggler_penalty: 0.5,
+            credits: HashMap::new(),
         }
     }
 
+    pub fn with_straggler_penalty(mut self, penalty: f64) -> Self {
+        self.straggler_penalty = penalty.max(0.0);
+        self
+    }
+
+    /// Build a shell from the §4 serving config (LB policy + straggler
+    /// penalty weight).
+    pub fn from_serving(cfg: &crate::config::ServingConfig) -> Self {
+        TeShell::new(cfg.decode_lb).with_straggler_penalty(cfg.straggler_penalty)
+    }
+
     /// Dispatch one request to a DP group (or park it under backpressure).
+    /// Colocated/sequential mode: the shell holds the groups directly.
     pub fn dispatch(&mut self, req: ServeRequest, groups: &mut [DpGroup]) -> Result<()> {
         let statuses: Vec<GroupStatus> = groups.iter().map(|g| g.as_group_status()).collect();
         match choose_group(&statuses, self.policy, &mut self.rr_counter) {
             Some(gid) => {
-                let g = groups.iter_mut().find(|g| g.id == gid).unwrap();
+                let g = groups
+                    .iter_mut()
+                    .find(|g| g.id == gid)
+                    .ok_or_else(|| anyhow!("router chose unknown DP group {gid}"))?;
                 g.enqueue(req);
                 self.dispatched += 1;
             }
@@ -57,6 +92,72 @@ impl TeShell {
         let n = parked.len();
         for req in parked {
             self.dispatch(req, groups)?;
+        }
+        Ok(n.saturating_sub(self.waiting.len()))
+    }
+
+    /// Dispatch against the decentralized runtime (§4.2–4.4): route off a
+    /// stale-tolerant status-board snapshot — corrected by the shell's own
+    /// sent-since-epoch credits — with straggler-aware penalties, then hand
+    /// the request to the chosen group's inbox. No cross-DP synchronous
+    /// calls: this never waits on a worker.
+    pub fn dispatch_decentralized(
+        &mut self,
+        req: ServeRequest,
+        rt: &DecentralizedRuntime,
+    ) -> Result<()> {
+        let mut views = rt.load_views();
+        for v in views.iter_mut() {
+            let c = self
+                .credits
+                .entry(v.status.group)
+                .or_insert(StaleCredit { epoch: v.epoch, sent: 0 });
+            if c.epoch != v.epoch {
+                // Known imprecision, accepted by the staleness contract: a
+                // request submitted between the worker's pre-publish inbox
+                // drain and this epoch advance is in neither the snapshot
+                // nor the reset credit, so one epoch can undercount by the
+                // requests in that (sub-tick) window; the next publish
+                // includes them. Routing only needs pending counts to be
+                // approximately right — exactness would require synchronous
+                // acknowledgements, which §4.2 forbids on this path.
+                *c = StaleCredit { epoch: v.epoch, sent: 0 };
+            }
+            v.status.running += c.sent;
+        }
+        match choose_group_straggler_aware(
+            &views,
+            self.policy,
+            &mut self.rr_counter,
+            self.straggler_penalty,
+        ) {
+            Some(gid) => match rt.try_submit(gid, req) {
+                Ok(()) => {
+                    if let Some(c) = self.credits.get_mut(&gid) {
+                        c.sent += 1;
+                    }
+                    self.dispatched += 1;
+                }
+                // Worker died since the board's last publish (the pulse
+                // monitor takes a few intervals to notice): demote it so
+                // routing stops picking it and re-park the request instead
+                // of losing it.
+                Err(req) => {
+                    rt.demote(gid);
+                    self.waiting.push(req);
+                }
+            },
+            None => self.waiting.push(req),
+        }
+        Ok(())
+    }
+
+    /// Retry parked requests against the decentralized runtime.
+    pub fn drain_waiting_decentralized(&mut self, rt: &DecentralizedRuntime) -> Result<usize> {
+        let parked = std::mem::take(&mut self.waiting);
+        let n = parked.len();
+        for req in parked {
+            self.dispatch_decentralized(req, rt)?;
         }
         Ok(n.saturating_sub(self.waiting.len()))
     }
@@ -145,5 +246,119 @@ mod tests {
         assert!(!shell.tick_eplb());
         assert!(shell.tick_eplb());
         assert!(!shell.tick_eplb());
+    }
+
+    #[test]
+    fn stale_credits_balance_burst_dispatch() {
+        // Fire a burst faster than workers can republish: without the
+        // sent-since-epoch credits every request would land on the same
+        // "empty" group; with them the burst splits evenly.
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+        use std::sync::Arc;
+
+        let factory: ModelFactory =
+            Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
+        let specs: Vec<GroupSpec> = (0..2).map(|i| GroupSpec::new(i, 8, 256)).collect();
+        // 20 ms per tick: the whole burst lands inside each worker's first
+        // tick, so the board stays frozen at its initial snapshot and the
+        // split is decided purely by the shell's credits — deterministic.
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::uniform(2, 20_000_000),
+            None,
+            factory,
+        )
+        .unwrap();
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        for i in 0..4u64 {
+            shell
+                .dispatch_decentralized(ServeRequest::new(i, vec![256, 1, 2], 8, 0), &rt)
+                .unwrap();
+        }
+        assert_eq!(shell.dispatched, 4);
+        assert!(shell.waiting.is_empty());
+        let groups = rt.shutdown().unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            (groups[0].finished.len(), groups[1].finished.len()),
+            (2, 2),
+            "credits must spread the burst"
+        );
+    }
+
+    #[test]
+    fn serving_config_knobs_reach_shell_and_group_specs() {
+        use crate::config::ServingConfig;
+        use crate::coordinator::worker::GroupSpec;
+
+        let mut cfg = ServingConfig::default();
+        cfg.straggler_penalty = 1.25;
+        cfg.tick_ewma_alpha = 0.5;
+        cfg.int8 = false;
+        cfg.mtp_layers = 0;
+        cfg.decode_lb = DecodeLbPolicy::RoundRobin;
+
+        let shell = TeShell::from_serving(&cfg);
+        assert_eq!(shell.straggler_penalty, 1.25);
+        assert_eq!(shell.policy, DecodeLbPolicy::RoundRobin);
+
+        let spec = GroupSpec::new(3, 8, 64).with_serving(&cfg);
+        assert_eq!(spec.tick_ewma_alpha, 0.5);
+        assert!(!spec.int8);
+        assert!(!spec.use_mtp);
+        assert_eq!(spec.id, 3);
+
+        cfg.mtp_layers = 1;
+        assert!(GroupSpec::new(0, 8, 64).with_serving(&cfg).use_mtp);
+    }
+
+    #[test]
+    fn dead_backend_group_fails_requests_and_is_demoted() {
+        // Group 0's backend factory fails: its worker becomes a dead-group
+        // drain that demotes itself on the board, routing flows to the
+        // live group, and anything forced onto the dead group comes back
+        // as a Failed record instead of vanishing.
+        use crate::coordinator::request::RequestState;
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+        use std::sync::Arc;
+        use std::time::{Duration, Instant};
+
+        let factory: ModelFactory = Arc::new(|gid| {
+            if gid == 0 {
+                Err(anyhow!("backend boot failure"))
+            } else {
+                Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>)
+            }
+        });
+        let specs: Vec<GroupSpec> = (0..2).map(|i| GroupSpec::new(i, 4, 256)).collect();
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(2),
+            None,
+            factory,
+        )
+        .unwrap();
+        // the dead group demotes itself on the board almost immediately
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while rt.load_views()[0].status.healthy {
+            assert!(Instant::now() < deadline, "dead group never demoted");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // routed dispatch avoids the demoted group
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        shell.dispatch_decentralized(req(1), &rt).unwrap();
+        assert_eq!(shell.dispatched, 1);
+        assert!(shell.waiting.is_empty());
+        // force one request onto the dead group: accepted, then Failed
+        rt.submit_to(0, req(2)).unwrap();
+        let groups = rt.shutdown().unwrap();
+        assert_eq!(groups[0].finished.len(), 1);
+        assert_eq!(groups[0].finished[0].state, RequestState::Failed);
+        assert_eq!(groups[1].finished.len(), 1);
+        assert_eq!(groups[1].finished[0].state, RequestState::Done);
     }
 }

@@ -1,0 +1,572 @@
+//! Decentralized multi-threaded DP-group runtime (§4.2–4.4).
+//!
+//! Each [`DpGroup`] runs on its own OS thread as a self-contained tick
+//! loop — command inbox → prefill admission → continuous-batched decode →
+//! output shortcut — and publishes its status to the shared
+//! [`StatusBoard`] after every tick. Nothing on the serving path makes a
+//! cross-DP call: the TE-shell routes off stale-tolerant board snapshots
+//! (`TeShell::dispatch_decentralized`), and the only signal back is the
+//! board publish itself, whose epoch doubles as the group's heartbeat
+//! pulse (`reliability::heartbeat::GroupPulseMonitor`).
+//!
+//! Straggler pressure is injected deterministically through a
+//! [`StragglerProfile`] (per-`(group, tick)` delay), which is how the
+//! mitigation policies — EWMA soft penalties, hard demotion, pulse
+//! demotion — are exercised under seeded jitter in tests and benches.
+
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::dp_group::{DpGroup, DpGroupStatus, SeqState};
+use crate::coordinator::output::OutputEvent;
+use crate::coordinator::request::ServeRequest;
+use crate::coordinator::status_board::{BoardEntry, StatusBoard};
+use crate::metrics::Ewma;
+use crate::model::DecodeModel;
+use crate::reliability::heartbeat::GroupPulseMonitor;
+use crate::workload::straggler::StragglerProfile;
+
+/// EWMA weight for the published tick-latency signal.
+pub const TICK_EWMA_ALPHA: f64 = 0.25;
+
+/// Initial idle park on the inbox; doubles per idle wakeup up to
+/// [`IDLE_PARK_MAX`] so long-idle groups keep their heartbeat pulse
+/// without hammering the board.
+pub const IDLE_PARK_MIN: Duration = Duration::from_micros(500);
+pub const IDLE_PARK_MAX: Duration = Duration::from_millis(4);
+
+/// Per-idle-wakeup multiplicative EWMA decay: a demoted straggler that
+/// receives no traffic (and therefore no new tick samples) relaxes back
+/// under the demotion threshold within a few hundred ms instead of being
+/// penalized forever on one bad tick.
+pub const IDLE_EWMA_DECAY: f64 = 0.98;
+
+/// Commands a worker accepts from the shell. Workers drain and exit when
+/// the runtime drops the sending side (shutdown).
+pub enum GroupCommand {
+    Submit(ServeRequest),
+    SetHealthy(bool),
+}
+
+/// Per-group spawn parameters.
+#[derive(Clone, Debug)]
+pub struct GroupSpec {
+    pub id: usize,
+    pub batch_limit: usize,
+    pub kv_blocks: usize,
+    pub int8: bool,
+    pub use_mtp: bool,
+    /// EWMA weight for this group's published tick-latency signal.
+    pub tick_ewma_alpha: f64,
+}
+
+impl GroupSpec {
+    pub fn new(id: usize, batch_limit: usize, kv_blocks: usize) -> Self {
+        Self {
+            id,
+            batch_limit,
+            kv_blocks,
+            int8: false,
+            use_mtp: false,
+            tick_ewma_alpha: TICK_EWMA_ALPHA,
+        }
+    }
+
+    /// Apply the §4 serving-config knobs (INT8, MTP depth, EWMA alpha).
+    pub fn with_serving(mut self, cfg: &crate::config::ServingConfig) -> Self {
+        self.int8 = cfg.int8;
+        self.use_mtp = cfg.mtp_layers > 0;
+        self.tick_ewma_alpha = cfg.tick_ewma_alpha;
+        self
+    }
+}
+
+/// Creates the model backend *inside* each worker thread (backends may be
+/// `!Sync`, e.g. a PJRT engine with lazily-compiled executables).
+pub type ModelFactory = Arc<dyn Fn(usize) -> Result<Box<dyn DecodeModel>> + Send + Sync>;
+
+struct GroupHandle {
+    id: usize,
+    tx: mpsc::Sender<GroupCommand>,
+    join: thread::JoinHandle<DpGroup>,
+}
+
+/// Handle over the spawned group threads + the shared status board.
+pub struct DecentralizedRuntime {
+    pub board: Arc<StatusBoard>,
+    handles: Vec<GroupHandle>,
+    start: Instant,
+}
+
+impl DecentralizedRuntime {
+    /// Spawn one worker thread per spec. `out_tx` (if any) is cloned into
+    /// every group for output shortcutting; `factory` builds each thread's
+    /// model backend in-thread.
+    pub fn spawn(
+        specs: &[GroupSpec],
+        straggler: StragglerProfile,
+        out_tx: Option<mpsc::Sender<OutputEvent>>,
+        factory: ModelFactory,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("decentralized runtime needs at least one DP group");
+        }
+        for (i, a) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|b| b.id == a.id) {
+                bail!("duplicate DP group id {}", a.id);
+            }
+        }
+        let start = Instant::now();
+        let straggler = Arc::new(straggler);
+        let initial: Vec<BoardEntry> = specs
+            .iter()
+            .map(|s| {
+                BoardEntry::initial(DpGroupStatus {
+                    id: s.id,
+                    queued: 0,
+                    running: 0,
+                    batch_limit: s.batch_limit,
+                    kv_usage: 0.0,
+                    healthy: true,
+                })
+            })
+            .collect();
+        let board = Arc::new(StatusBoard::new(initial));
+        let mut handles = Vec::with_capacity(specs.len());
+        for (slot, spec) in specs.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            let board_w = Arc::clone(&board);
+            let straggler_w = Arc::clone(&straggler);
+            let factory_w = Arc::clone(&factory);
+            let out_w = out_tx.clone();
+            let spec_w = spec.clone();
+            let join = thread::Builder::new()
+                .name(format!("dp-group-{}", spec.id))
+                .spawn(move || -> DpGroup {
+                    let mut group = DpGroup::new(spec_w.id, spec_w.batch_limit, spec_w.kv_blocks);
+                    group.int8 = spec_w.int8;
+                    group.use_mtp = spec_w.use_mtp;
+                    group.out_tx = out_w;
+                    match factory_w(spec_w.id) {
+                        Ok(model) => run_group(
+                            group,
+                            rx,
+                            board_w,
+                            slot,
+                            model.as_ref(),
+                            straggler_w,
+                            spec_w.tick_ewma_alpha,
+                            start,
+                        ),
+                        // Backend never came up: the group still owns its
+                        // inbox, so fail (with Finished events) everything
+                        // routed here instead of dropping it on the floor.
+                        Err(e) => {
+                            eprintln!("dp-group-{} backend init failed: {e}", spec_w.id);
+                            run_dead_group(group, rx, board_w, slot, start)
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawning dp-group-{} thread: {e}", spec.id))?;
+            handles.push(GroupHandle { id: spec.id, tx, join });
+        }
+        Ok(Self { board, handles, start })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn group_ids(&self) -> Vec<usize> {
+        self.handles.iter().map(|h| h.id).collect()
+    }
+
+    /// Nanoseconds since the runtime started (the clock every worker
+    /// stamps request timings with).
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// Send a request straight to a specific group.
+    pub fn submit_to(&self, group_id: usize, req: ServeRequest) -> Result<()> {
+        self.try_submit(group_id, req)
+            .map_err(|r| anyhow!("cannot submit request {} to DP group {group_id}: unknown group or exited worker", r.id))
+    }
+
+    /// Like [`Self::submit_to`], but hands the request back on failure so
+    /// the caller can re-park it instead of losing it (the shell's routed
+    /// dispatch goes through here).
+    pub fn try_submit(
+        &self,
+        group_id: usize,
+        req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        let Some(h) = self.handles.iter().find(|h| h.id == group_id) else {
+            return Err(req);
+        };
+        h.tx.send(GroupCommand::Submit(req)).map_err(|e| match e.0 {
+            GroupCommand::Submit(r) => r,
+            GroupCommand::SetHealthy(_) => unreachable!("only Submit is sent here"),
+        })
+    }
+
+    /// Router-level demotion of one group (e.g. its worker died mid-epoch,
+    /// before the pulse monitor would notice). Transient like every board
+    /// demotion: a live worker's next publish overrides it.
+    pub fn demote(&self, group_id: usize) {
+        if let Some(slot) = self.handles.iter().position(|h| h.id == group_id) {
+            self.board.mark_unhealthy(slot);
+        }
+    }
+
+    /// Flip a group's health flag (operator/recovery action).
+    pub fn set_healthy(&self, group_id: usize, healthy: bool) -> Result<()> {
+        self.send(group_id, GroupCommand::SetHealthy(healthy))
+    }
+
+    fn send(&self, group_id: usize, cmd: GroupCommand) -> Result<()> {
+        let h = self
+            .handles
+            .iter()
+            .find(|h| h.id == group_id)
+            .ok_or_else(|| anyhow!("no DP group {group_id}"))?;
+        h.tx.send(cmd)
+            .map_err(|_| anyhow!("DP group {group_id} worker has exited"))
+    }
+
+    /// Stale-tolerant routing views for the shell: pending count folds
+    /// queued-but-unadmitted requests into `running` (§4.3), and each view
+    /// carries the worker's tick EWMA + publish epoch.
+    pub fn load_views(&self) -> Vec<crate::coordinator::decode_sched::GroupLoadView> {
+        use crate::coordinator::decode_sched::{GroupLoadView, GroupStatus};
+        self.board
+            .snapshot()
+            .into_iter()
+            .map(|e| GroupLoadView {
+                status: GroupStatus {
+                    group: e.status.id,
+                    running: e.status.running + e.status.queued,
+                    batch_limit: e.status.batch_limit,
+                    kv_usage: e.status.kv_usage,
+                    healthy: e.status.healthy,
+                },
+                tick_ewma_ns: e.tick_ewma_ns,
+                epoch: e.epoch,
+            })
+            .collect()
+    }
+
+    /// True when every group's last published snapshot shows no queued or
+    /// running work (stale-tolerant: pair with a settle delay or re-check).
+    pub fn all_idle(&self) -> bool {
+        self.board
+            .snapshot()
+            .iter()
+            .all(|e| e.status.queued == 0 && e.status.running == 0)
+    }
+
+    /// Heartbeat sweep (§6.1 via the publish epoch): demote groups whose
+    /// epoch has not advanced within the monitor's bound. Demotion is
+    /// router-level and transient — a group re-promotes itself on its next
+    /// publish. Returns the ids demoted this sweep.
+    pub fn demote_stalled(&self, monitor: &mut GroupPulseMonitor) -> Vec<usize> {
+        let now = self.now_ns();
+        let mut demoted = Vec::new();
+        for (slot, h) in self.handles.iter().enumerate() {
+            let epoch = self.board.epoch(slot);
+            let alive = monitor.observe(h.id, epoch, now);
+            if !alive && self.board.read(slot).status.healthy {
+                self.board.mark_unhealthy(slot);
+                demoted.push(h.id);
+            }
+        }
+        demoted
+    }
+
+    /// Shut down: drop every inbox so workers drain their remaining work
+    /// and exit, then join them. Returns the groups (with their `finished`
+    /// requests — including Failed records from dead/poisoned groups)
+    /// sorted by id. Errs only if a worker thread panicked, and even then
+    /// only after joining every other worker, so served work is never
+    /// silently discarded because of one bad thread.
+    pub fn shutdown(self) -> Result<Vec<DpGroup>> {
+        let mut joins = Vec::with_capacity(self.handles.len());
+        for h in self.handles {
+            drop(h.tx);
+            joins.push((h.id, h.join));
+        }
+        let mut groups = Vec::with_capacity(joins.len());
+        let mut panicked = Vec::new();
+        for (id, join) in joins {
+            match join.join() {
+                Ok(group) => groups.push(group),
+                Err(_) => panicked.push(id),
+            }
+        }
+        if !panicked.is_empty() {
+            bail!("dp-group worker(s) panicked: {panicked:?}");
+        }
+        groups.sort_by_key(|g| g.id);
+        Ok(groups)
+    }
+}
+
+fn now_ns(start: &Instant) -> u64 {
+    start.elapsed().as_nanos() as u64
+}
+
+/// Terminal loop for a group whose backend never initialized: stays
+/// demoted on the board and fails every submitted request (emitting its
+/// `Finished` event) until the runtime shuts down, so nothing routed here
+/// during the board's stale-healthy window is silently lost.
+fn run_dead_group(
+    mut group: DpGroup,
+    rx: mpsc::Receiver<GroupCommand>,
+    board: Arc<StatusBoard>,
+    slot: usize,
+    start: Instant,
+) -> DpGroup {
+    group.healthy = false;
+    board.mark_unhealthy(slot);
+    loop {
+        match rx.recv() {
+            Ok(GroupCommand::Submit(req)) => {
+                let now = now_ns(&start);
+                group.fail_request(req, now);
+            }
+            // the backend is gone; health cannot be restored in-place
+            Ok(GroupCommand::SetHealthy(_)) => {}
+            Err(_) => break,
+        }
+    }
+    group
+}
+
+/// Non-blocking inbox drain; flips `draining` when the runtime has
+/// dropped the sender.
+fn drain_inbox(rx: &mpsc::Receiver<GroupCommand>, group: &mut DpGroup, draining: &mut bool) {
+    loop {
+        match rx.try_recv() {
+            Ok(GroupCommand::Submit(req)) => group.enqueue(req),
+            Ok(GroupCommand::SetHealthy(h)) => group.healthy = h,
+            Err(mpsc::TryRecvError::Empty) => break,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                *draining = true;
+                break;
+            }
+        }
+    }
+}
+
+/// The per-group tick loop. Runs until the inbox disconnects *and* the
+/// group has drained (or can provably make no further progress).
+#[allow(clippy::too_many_arguments)]
+fn run_group(
+    mut group: DpGroup,
+    rx: mpsc::Receiver<GroupCommand>,
+    board: Arc<StatusBoard>,
+    slot: usize,
+    model: &dyn DecodeModel,
+    straggler: Arc<StragglerProfile>,
+    tick_ewma_alpha: f64,
+    start: Instant,
+) -> DpGroup {
+    let mut ewma = Ewma::new(tick_ewma_alpha);
+    let mut tick: u64 = 0;
+    let mut draining = false;
+    let mut idle_park = IDLE_PARK_MIN;
+    board.publish(slot, group.status(), 0, now_ns(&start));
+    loop {
+        // 1. Drain the command inbox without blocking.
+        drain_inbox(&rx, &mut group, &mut draining);
+
+        // 2. One serving tick: admission + continuous-batched decode.
+        let queue_seen_by_tick = group.queue.len();
+        let t0 = Instant::now();
+        let mut worked = false;
+        // Backend-level errors poison the whole group; fail its pending
+        // work immediately so stream consumers are unblocked instead of
+        // hanging until shutdown. (An operator SetHealthy(false) pause, by
+        // contrast, keeps requests parked.)
+        if group.healthy {
+            match group.admit_from_queue(model, now_ns(&start)) {
+                Ok(n) => worked |= n > 0,
+                Err(e) => {
+                    eprintln!("dp-group-{} admission error: {e}", group.id);
+                    group.healthy = false;
+                    fail_pending(&mut group, now_ns(&start));
+                }
+            }
+        }
+        if group.healthy && !group.running.is_empty() {
+            match group.decode_iteration(model, now_ns(&start)) {
+                Ok(n) => worked |= n > 0,
+                Err(e) => {
+                    eprintln!("dp-group-{} decode error: {e}", group.id);
+                    group.healthy = false;
+                    fail_pending(&mut group, now_ns(&start));
+                }
+            }
+        }
+
+        // 3. Deterministic straggler injection + tick-latency EWMA.
+        if worked {
+            let delay = straggler.tick_delay_ns(group.id, tick);
+            if delay > 0 {
+                thread::sleep(Duration::from_nanos(delay));
+            }
+            tick = tick.wrapping_add(1);
+            ewma.observe(t0.elapsed().as_nanos() as f64);
+            idle_park = IDLE_PARK_MIN;
+        }
+
+        // 4. Publish the post-tick snapshot (liveness pulse included).
+        // Re-drain first so requests that arrived during the tick (or its
+        // injected delay) are reflected in the published queue depth —
+        // otherwise the shell would see a fresh epoch whose counts predate
+        // its own sends and mistakenly clear its stale credits.
+        drain_inbox(&rx, &mut group, &mut draining);
+        board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
+
+        // 5. Exit / park.
+        if draining {
+            if group.is_idle() {
+                break;
+            }
+            // Unhealthy, or queued work the tick *saw* but could not admit
+            // with nothing running to free capacity: fail what remains
+            // rather than hanging shutdown. (Requests that arrived only in
+            // the post-tick drain get their admission attempt next loop.)
+            let stuck = !worked && group.running.is_empty() && queue_seen_by_tick > 0;
+            if !group.healthy || stuck {
+                fail_pending(&mut group, now_ns(&start));
+                board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
+                break;
+            }
+            continue;
+        }
+        if !worked {
+            match rx.recv_timeout(idle_park) {
+                Ok(GroupCommand::Submit(req)) => group.enqueue(req),
+                Ok(GroupCommand::SetHealthy(h)) => group.healthy = h,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    idle_park = (idle_park * 2).min(IDLE_PARK_MAX);
+                    ewma.decay(IDLE_EWMA_DECAY);
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => draining = true,
+            }
+        }
+    }
+    group
+}
+
+/// Mark everything still queued/running as Failed and release its KV (the
+/// drain path for a group that cannot make progress). Goes through
+/// `DpGroup::fail_request` so output-shortcut consumers get their
+/// `Finished` events and can release per-request stream state.
+fn fail_pending(group: &mut DpGroup, now: u64) {
+    let queued: Vec<ServeRequest> = group.queue.drain(..).collect();
+    for req in queued {
+        group.fail_request(req, now);
+    }
+    let running: Vec<SeqState> = group.running.drain(..).collect();
+    for s in running {
+        let _ = group.pool.release(s.req.id);
+        group.fail_request(s.req, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestState;
+    use crate::model::SimModel;
+
+    fn sim_factory() -> ModelFactory {
+        Arc::new(|_gid| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+    }
+
+    fn req(id: u64, max_new: usize) -> ServeRequest {
+        ServeRequest::new(id, vec![256, (id % 26) as i32 + 97], max_new, 0)
+    }
+
+    #[test]
+    fn spawn_serve_shutdown_roundtrip() {
+        let specs: Vec<GroupSpec> = (0..2).map(|i| GroupSpec::new(i, 4, 256)).collect();
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(2),
+            None,
+            sim_factory(),
+        )
+        .unwrap();
+        assert_eq!(rt.n_groups(), 2);
+        for i in 0..6u64 {
+            rt.submit_to((i % 2) as usize, req(i, 4)).unwrap();
+        }
+        let groups = rt.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 6, "drain-on-shutdown serves everything");
+        for g in &groups {
+            for r in &g.finished {
+                assert_eq!(r.state, RequestState::Done);
+                assert_eq!(r.generated.len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let specs = vec![GroupSpec::new(3, 4, 64), GroupSpec::new(3, 4, 64)];
+        assert!(DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(2),
+            None,
+            sim_factory(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn submit_to_unknown_group_errors() {
+        let specs = vec![GroupSpec::new(0, 4, 64)];
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(1),
+            None,
+            sim_factory(),
+        )
+        .unwrap();
+        assert!(rt.submit_to(9, req(1, 2)).is_err());
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn board_reflects_served_work() {
+        let specs = vec![GroupSpec::new(0, 4, 256)];
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(1),
+            None,
+            sim_factory(),
+        )
+        .unwrap();
+        let epoch0 = rt.board.epoch(0);
+        rt.submit_to(0, req(1, 3)).unwrap();
+        // wait (bounded) for the worker to publish completion
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !(rt.all_idle() && rt.board.epoch(0) > epoch0) {
+            assert!(Instant::now() < deadline, "worker never served the request");
+            thread::sleep(Duration::from_millis(1));
+        }
+        let views = rt.load_views();
+        assert_eq!(views.len(), 1);
+        assert!(views[0].status.healthy);
+        assert_eq!(views[0].status.running, 0);
+        let groups = rt.shutdown().unwrap();
+        assert_eq!(groups[0].finished.len(), 1);
+    }
+}

@@ -14,6 +14,33 @@
 //! * **Runtime bridge** — [`runtime`] loads the HLO artifacts through the
 //!   PJRT C API (`xla` crate) and executes them on the request path with no
 //!   Python anywhere.
+//!
+//! # Decentralized serving runtime (§4.2–4.4)
+//!
+//! [`coordinator::worker`] turns the crate into a genuinely concurrent
+//! engine: one OS thread per DP group, each running a self-contained tick
+//! loop (inbox → prefill admission → continuous-batched decode → output
+//! shortcut) against a [`model::DecodeModel`] backend — PJRT-backed
+//! ([`model::OwnedEngineModel`]) or the deterministic pure-Rust
+//! [`model::SimModel`].
+//!
+//! **Status-board staleness contract.** Workers publish
+//! [`coordinator::DpGroupStatus`] snapshots plus a decode-tick latency
+//! EWMA into the lock-light [`coordinator::StatusBoard`]. The TE-shell
+//! routes off these snapshots *stale-tolerantly*: a snapshot only reflects
+//! what the group had seen at its last publish, so the shell layers its
+//! own sent-since-epoch credits on top, and no dispatch ever waits on a
+//! worker (no cross-DP synchronous calls anywhere).
+//!
+//! **Straggler / synchronization-variance mitigation.** Three layered
+//! policies, all testable under seeded jitter from
+//! [`workload::StragglerProfile`]: (1) soft EWMA penalties and (2) hard
+//! demotion past 3× the median tick latency in
+//! [`coordinator::decode_sched::choose_group_straggler_aware`], and (3)
+//! publish-epoch heartbeats
+//! ([`reliability::heartbeat::GroupPulseMonitor`]) that demote a group
+//! whose tick loop stops pulsing — before it fails outright. Demotion is
+//! router-level and transient: the worker's next publish re-promotes it.
 
 pub mod util;
 pub mod config;

@@ -113,6 +113,54 @@ impl ServingMetrics {
     }
 }
 
+/// Exponentially-weighted moving average — the per-group decode-tick
+/// latency signal published on the status board and penalized by the
+/// straggler-aware router (§4.3/§4.4 synchronization-variance mitigation).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    /// `alpha` ∈ (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha: alpha.clamp(1e-6, 1.0), value: 0.0, primed: false }
+    }
+
+    /// Fold in one observation; returns the updated average.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        if self.primed {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        } else {
+            self.value = x;
+            self.primed = true;
+        }
+        self.value
+    }
+
+    /// Current average (0.0 before any observation).
+    pub fn value(&self) -> f64 {
+        if self.primed {
+            self.value
+        } else {
+            0.0
+        }
+    }
+
+    /// Multiplicative decay for sample-starved periods: an idle worker gets
+    /// no tick observations, so without decay one slow tick would penalize
+    /// it forever. Applied once per idle wakeup, the signal relaxes toward
+    /// zero and the group re-enters routing; real observations then take
+    /// over again.
+    pub fn decay(&mut self, factor: f64) {
+        if self.primed {
+            self.value *= factor.clamp(0.0, 1.0);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +205,43 @@ mod tests {
     fn single_token_request_has_no_tpot() {
         let t = timing(0, 10, 10, 1);
         assert_eq!(t.tpot_ms(), 0.0);
+    }
+
+    #[test]
+    fn ewma_primes_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), 0.0);
+        assert_eq!(e.observe(100.0), 100.0);
+        assert_eq!(e.observe(200.0), 150.0);
+        assert_eq!(e.observe(150.0), 150.0);
+        assert_eq!(e.value(), 150.0);
+    }
+
+    #[test]
+    fn ewma_decay_relaxes_toward_zero() {
+        let mut e = Ewma::new(0.25);
+        e.observe(1000.0);
+        for _ in 0..50 {
+            e.decay(0.9);
+        }
+        assert!(e.value() < 10.0, "decayed value {}", e.value());
+        // decay before any observation is a no-op
+        let mut fresh = Ewma::new(0.25);
+        fresh.decay(0.5);
+        assert_eq!(fresh.value(), 0.0);
+        assert_eq!(fresh.observe(8.0), 8.0, "first observation still primes");
+    }
+
+    #[test]
+    fn ewma_tracks_level_shift() {
+        let mut e = Ewma::new(0.25);
+        for _ in 0..64 {
+            e.observe(10.0);
+        }
+        assert!((e.value() - 10.0).abs() < 1e-6);
+        for _ in 0..64 {
+            e.observe(50.0);
+        }
+        assert!((e.value() - 50.0).abs() < 0.1, "ewma {}", e.value());
     }
 }

@@ -1,0 +1,113 @@
+//! [`DecodeModel`]: the execution-backend abstraction DP groups run on.
+//!
+//! The decentralized runtime (`coordinator::worker`) spawns one OS thread
+//! per DP group; each thread owns a `Box<dyn DecodeModel>` so the same
+//! tick loop drives either the PJRT-backed [`ServedModel`] (when AOT
+//! artifacts are present) or the pure-Rust [`SimModel`](super::SimModel)
+//! (deterministic, artifact-free — what CI exercises).
+
+use anyhow::Result;
+
+use crate::model::served::{DecodeOut, PrefillOut, SeqKv, ServedModel};
+use crate::runtime::Engine;
+
+/// The operations a DP group's tick loop needs from its model backend.
+/// Object-safe: workers hold `Box<dyn DecodeModel>`.
+pub trait DecodeModel {
+    /// Prefill one prompt, producing first-token logits, hidden state, and
+    /// the sequence KV cache.
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut>;
+
+    /// One decode step for a batch of `(feed token, KV cache)` entries;
+    /// caches are advanced in place.
+    fn decode_batch(&self, entries: &mut [(i32, &mut SeqKv)], int8: bool)
+        -> Result<Vec<DecodeOut>>;
+
+    /// MTP draft logits for `(hidden, token)` pairs (§4.6 step 1).
+    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>>;
+
+    /// Maximum sequence length a KV cache can hold.
+    fn max_seq(&self) -> usize;
+
+    /// Largest compiled decode bucket (continuous-batching chunk size).
+    fn max_decode_bucket(&self) -> usize;
+}
+
+/// Largest compiled decode bucket in an engine's manifest (shared by both
+/// engine-backed `DecodeModel` impls).
+fn manifest_max_bucket(engine: &Engine) -> usize {
+    engine
+        .manifest
+        .model
+        .decode_buckets
+        .last()
+        .copied()
+        .unwrap_or(8)
+}
+
+impl<'e> DecodeModel for ServedModel<'e> {
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        ServedModel::prefill(self, prompt)
+    }
+
+    fn decode_batch(
+        &self,
+        entries: &mut [(i32, &mut SeqKv)],
+        int8: bool,
+    ) -> Result<Vec<DecodeOut>> {
+        ServedModel::decode_batch(self, entries, int8)
+    }
+
+    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        ServedModel::mtp_draft(self, hidden_rows, tokens)
+    }
+
+    fn max_seq(&self) -> usize {
+        ServedModel::max_seq(self)
+    }
+
+    fn max_decode_bucket(&self) -> usize {
+        manifest_max_bucket(self.engine)
+    }
+}
+
+/// Owned engine + model pair for worker threads: `ServedModel` borrows its
+/// engine, so per-thread backends wrap an owned [`Engine`] and rebuild the
+/// (trivially cheap) typed view per call.
+pub struct OwnedEngineModel {
+    pub engine: Engine,
+}
+
+impl OwnedEngineModel {
+    /// Load artifacts from `dir` (one engine per worker thread — the
+    /// "per-thread instance" arrangement noted in `runtime::engine`).
+    pub fn load(dir: &str) -> Result<Self> {
+        Ok(Self { engine: Engine::load(dir)? })
+    }
+}
+
+impl DecodeModel for OwnedEngineModel {
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        ServedModel::new(&self.engine).prefill(prompt)
+    }
+
+    fn decode_batch(
+        &self,
+        entries: &mut [(i32, &mut SeqKv)],
+        int8: bool,
+    ) -> Result<Vec<DecodeOut>> {
+        ServedModel::new(&self.engine).decode_batch(entries, int8)
+    }
+
+    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        ServedModel::new(&self.engine).mtp_draft(hidden_rows, tokens)
+    }
+
+    fn max_seq(&self) -> usize {
+        ServedModel::new(&self.engine).max_seq()
+    }
+
+    fn max_decode_bucket(&self) -> usize {
+        manifest_max_bucket(&self.engine)
+    }
+}

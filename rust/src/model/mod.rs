@@ -1,10 +1,16 @@
-//! Model-serving glue: tokenizer, sampler, and the typed wrapper around the
-//! AOT artifacts ([`ServedModel`]) used by DP-group executors.
+//! Model-serving glue: tokenizer, sampler, the typed wrapper around the
+//! AOT artifacts ([`ServedModel`]), and the execution-backend abstraction
+//! ([`DecodeModel`]) DP-group executors run on — with the deterministic
+//! pure-Rust [`SimModel`] backend for artifact-free (CI) serving.
 
 pub mod tokenizer;
 pub mod sampler;
 pub mod served;
+pub mod backend;
+pub mod sim;
 
+pub use backend::{DecodeModel, OwnedEngineModel};
 pub use sampler::Sampler;
 pub use served::{DecodeOut, PrefillOut, SeqKv, ServedModel};
+pub use sim::SimModel;
 pub use tokenizer::Tokenizer;

@@ -1,0 +1,198 @@
+//! [`SimModel`]: deterministic pure-Rust model backend.
+//!
+//! Artifact-free stand-in for the PJRT path with the same contract as
+//! [`ServedModel`](super::ServedModel): prefill produces a KV cache and
+//! first-token logits, decode advances caches one position per step, MTP
+//! drafts agree with the main model (acceptance 1.0 — the draft head *is*
+//! the model). Token streams depend only on the request's own history, so
+//! concurrent serving must reproduce the single-threaded stream exactly —
+//! the property the decentralized-runtime tests pin down. All tokens land
+//! in `b'a'..=b'z'`, so the byte-level tokenizer renders every one.
+
+use anyhow::{bail, Result};
+
+use crate::model::backend::DecodeModel;
+use crate::model::served::{DecodeOut, PrefillOut, SeqKv};
+use crate::runtime::tensor::Tensor;
+
+/// First emitted token id (`'a'`).
+const TOK_LO: u64 = 97;
+/// Number of distinct emitted tokens (`'a'..='z'`).
+const TOK_SPAN: u64 = 26;
+
+#[derive(Clone, Debug)]
+pub struct SimModel {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub max_seq: usize,
+    pub max_bucket: usize,
+    pub prefill_limit: usize,
+}
+
+impl SimModel {
+    /// Small default: vocab 128 (covers the letter band), short sequences.
+    pub fn small() -> Self {
+        Self { vocab: 128, d_model: 8, max_seq: 256, max_bucket: 8, prefill_limit: 192 }
+    }
+
+    fn mix(a: u64, b: u64) -> u64 {
+        // splitmix64 finalizer over the pair
+        let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next token for a sequence feeding `feed` at cache position `pos`.
+    fn token_at(feed: i32, pos: usize) -> i32 {
+        (TOK_LO + Self::mix(feed as u64, pos as u64) % TOK_SPAN) as i32
+    }
+
+    fn one_hot(&self, tok: i32) -> Vec<f32> {
+        let mut logits = vec![0f32; self.vocab];
+        logits[(tok as usize).min(self.vocab - 1)] = 1.0;
+        logits
+    }
+
+    /// Hidden row encoding the cache position (so `mtp_draft` can draft the
+    /// exact token the main model will produce).
+    fn hidden_at(&self, pos: usize) -> Vec<f32> {
+        let mut h = vec![0f32; self.d_model];
+        h[0] = pos as f32;
+        h
+    }
+}
+
+impl DecodeModel for SimModel {
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        if prompt.is_empty() || prompt.len() > self.prefill_limit {
+            bail!("prompt length {} outside (0, {}]", prompt.len(), self.prefill_limit);
+        }
+        if prompt.len() >= self.max_seq {
+            bail!("prompt length {} >= max_seq {}", prompt.len(), self.max_seq);
+        }
+        let mut kv = SeqKv::empty(1, self.max_seq, 1, 1);
+        kv.len = prompt.len();
+        let seed = prompt.iter().fold(0u64, |acc, &t| Self::mix(acc, t as u64));
+        let first = (TOK_LO + seed % TOK_SPAN) as i32;
+        Ok(PrefillOut {
+            logits: Tensor::from_f32(vec![1, self.vocab], &self.one_hot(first))?,
+            hidden: self.hidden_at(kv.len),
+            kv,
+        })
+    }
+
+    fn decode_batch(
+        &self,
+        entries: &mut [(i32, &mut SeqKv)],
+        _int8: bool,
+    ) -> Result<Vec<DecodeOut>> {
+        if entries.len() > self.max_bucket {
+            bail!("batch {} exceeds max bucket {}", entries.len(), self.max_bucket);
+        }
+        let mut out = Vec::with_capacity(entries.len());
+        for (feed, kv) in entries.iter_mut() {
+            if kv.len >= self.max_seq {
+                bail!("sequence full: len {} == max_seq {}", kv.len, self.max_seq);
+            }
+            let tok = Self::token_at(*feed, kv.len);
+            kv.len += 1;
+            out.push(DecodeOut {
+                logits_row: self.one_hot(tok),
+                hidden_row: self.hidden_at(kv.len),
+            });
+        }
+        Ok(out)
+    }
+
+    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(hidden_rows.len());
+        for (h, &t) in hidden_rows.iter().zip(tokens) {
+            let pos = h.first().copied().unwrap_or(0.0).max(0.0) as usize;
+            out.push(self.one_hot(Self::token_at(t, pos)));
+        }
+        Ok(out)
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn max_decode_bucket(&self) -> usize {
+        self.max_bucket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argmax(row: &[f32]) -> i32 {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn prefill_then_decode_is_deterministic() {
+        let m = SimModel::small();
+        let run = || {
+            let pf = m.prefill(&[256, 1, 2, 3]).unwrap();
+            let mut kv = pf.kv;
+            let mut feed = argmax(&pf.logits.as_f32().unwrap());
+            let mut toks = vec![feed];
+            for _ in 0..8 {
+                let mut entries = vec![(feed, &mut kv)];
+                let o = m.decode_batch(&mut entries, false).unwrap();
+                feed = argmax(&o[0].logits_row);
+                toks.push(feed);
+            }
+            toks
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.iter().all(|&t| (97..123).contains(&t)), "letter band: {a:?}");
+    }
+
+    #[test]
+    fn decode_advances_cache_and_respects_limits() {
+        let m = SimModel::small();
+        let pf = m.prefill(&[10, 20]).unwrap();
+        let mut kv = pf.kv;
+        assert_eq!(kv.len, 2);
+        let mut entries = vec![(97, &mut kv)];
+        m.decode_batch(&mut entries, false).unwrap();
+        assert_eq!(kv.len, 3);
+        // overfull batch rejected
+        let mut kvs: Vec<SeqKv> = (0..m.max_bucket + 1)
+            .map(|_| {
+                let mut k = SeqKv::empty(1, m.max_seq, 1, 1);
+                k.len = 1;
+                k
+            })
+            .collect();
+        let mut entries: Vec<(i32, &mut SeqKv)> = kvs.iter_mut().map(|k| (97, k)).collect();
+        assert!(m.decode_batch(&mut entries, false).is_err());
+        // full sequence rejected
+        let mut full = SeqKv::empty(1, m.max_seq, 1, 1);
+        full.len = m.max_seq;
+        let mut entries = vec![(97, &mut full)];
+        assert!(m.decode_batch(&mut entries, false).is_err());
+    }
+
+    #[test]
+    fn mtp_draft_matches_main_model() {
+        // Draft at the position encoded in the hidden row == what
+        // decode_batch will produce there → acceptance is exact.
+        let m = SimModel::small();
+        let pf = m.prefill(&[5, 6, 7]).unwrap();
+        let feed = argmax(&pf.logits.as_f32().unwrap());
+        let draft = m.mtp_draft(&[pf.hidden.clone()], &[feed]).unwrap();
+        let mut kv = pf.kv;
+        let mut entries = vec![(feed, &mut kv)];
+        let main = m.decode_batch(&mut entries, false).unwrap();
+        assert_eq!(argmax(&draft[0]), argmax(&main[0].logits_row));
+    }
+}

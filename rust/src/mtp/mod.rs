@@ -15,7 +15,7 @@
 
 use anyhow::Result;
 
-use crate::model::{SeqKv, ServedModel};
+use crate::model::{DecodeModel, SeqKv};
 use crate::util::rng::Rng;
 
 /// Per-sequence speculative decode state.
@@ -40,7 +40,11 @@ pub struct SpecOut {
 }
 
 /// One iteration of the five-step loop over a batch (greedy sampling).
-pub fn spec_iteration(model: &ServedModel, seqs: &mut [SpecSeq], int8: bool) -> Result<Vec<SpecOut>> {
+pub fn spec_iteration<M: DecodeModel + ?Sized>(
+    model: &M,
+    seqs: &mut [SpecSeq],
+    int8: bool,
+) -> Result<Vec<SpecOut>> {
     if seqs.is_empty() {
         return Ok(vec![]);
     }

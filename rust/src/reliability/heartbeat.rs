@@ -71,6 +71,55 @@ impl HeartbeatMonitor {
     }
 }
 
+/// Pulse tracked per DP-group worker.
+#[derive(Clone, Copy, Debug)]
+struct Pulse {
+    epoch: u64,
+    last_advance_ns: u64,
+}
+
+/// Heartbeat over the decentralized runtime's status-board publish epochs
+/// (§6.1 applied to §4.2's DP masters): a worker's tick loop publishes
+/// after every iteration, so an epoch that stops advancing is exactly the
+/// "missing reply" signal — a hung executor, a crashed thread, and a
+/// straggler stuck in one enormous tick all look identical, by design.
+/// The TE-shell demotes such groups from routing *before* they fail hard
+/// (`DecentralizedRuntime::demote_stalled`).
+pub struct GroupPulseMonitor {
+    pub interval_ns: u64,
+    /// Declare a group stalled after this many missed intervals.
+    pub miss_threshold: u32,
+    seen: HashMap<usize, Pulse>,
+}
+
+impl GroupPulseMonitor {
+    pub fn new(interval_ns: u64, miss_threshold: u32) -> Self {
+        Self { interval_ns, miss_threshold, seen: HashMap::new() }
+    }
+
+    /// Record one observation of `(group, publish epoch)` at time `now_ns`.
+    /// Returns `true` while the group is considered alive; `false` once its
+    /// epoch has been frozen past the detection bound. A later epoch
+    /// advance immediately revives the group.
+    pub fn observe(&mut self, id: usize, epoch: u64, now_ns: u64) -> bool {
+        let p = self
+            .seen
+            .entry(id)
+            .or_insert(Pulse { epoch, last_advance_ns: now_ns });
+        if epoch != p.epoch {
+            p.epoch = epoch;
+            p.last_advance_ns = now_ns;
+        }
+        now_ns.saturating_sub(p.last_advance_ns)
+            < self.interval_ns * self.miss_threshold as u64
+    }
+
+    /// Worst-case time from stall to demotion.
+    pub fn detection_bound_ns(&self) -> u64 {
+        self.interval_ns * (self.miss_threshold as u64 + 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +186,33 @@ mod tests {
         let a = HeartbeatMonitor::new(HeartbeatTier::ControlToShell, 5_000_000, 2);
         let b = HeartbeatMonitor::new(HeartbeatTier::ShellToDpMaster, 1_000_000, 3);
         assert!(a.detection_bound_ns() != b.detection_bound_ns());
+    }
+
+    #[test]
+    fn pulse_monitor_detects_frozen_epoch_and_revives() {
+        let mut m = GroupPulseMonitor::new(1_000_000, 3);
+        // advancing epoch → alive
+        for step in 0..5u64 {
+            assert!(m.observe(7, step, step * 1_000_000));
+        }
+        // epoch freezes at 4: alive until the 3-interval bound passes
+        let freeze_at = 4 * 1_000_000;
+        assert!(m.observe(7, 4, freeze_at + 2_000_000));
+        assert!(!m.observe(7, 4, freeze_at + 3_000_000), "stall past bound");
+        assert!(!m.observe(7, 4, freeze_at + 10_000_000));
+        // one advance revives instantly
+        assert!(m.observe(7, 5, freeze_at + 11_000_000));
+    }
+
+    #[test]
+    fn pulse_monitor_tracks_groups_independently() {
+        let mut m = GroupPulseMonitor::new(1_000_000, 2);
+        assert!(m.observe(0, 1, 0));
+        assert!(m.observe(1, 1, 0));
+        // group 0 keeps publishing, group 1 freezes
+        for step in 1..6u64 {
+            assert!(m.observe(0, 1 + step, step * 1_000_000));
+        }
+        assert!(!m.observe(1, 1, 5_000_000));
     }
 }

@@ -1,9 +1,10 @@
 //! Offline-capable infrastructure substrates (DESIGN.md S19).
 //!
 //! The build environment has no crates.io access beyond the vendored set
-//! (`xla`, `anyhow`, `thiserror`, `once_cell`, ...), so the usual ecosystem
-//! crates (rand, serde_json, clap, criterion, proptest) are replaced by the
-//! small, tested implementations in this module tree.
+//! under `rust/vendor/` (`anyhow`, the offline `xla` stub), so the usual
+//! ecosystem crates (rand, serde_json, clap, thiserror, criterion,
+//! proptest) are replaced by the small, tested implementations in this
+//! module tree.
 
 pub mod rng;
 pub mod json;

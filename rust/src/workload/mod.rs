@@ -13,6 +13,8 @@
 
 pub mod trace;
 pub mod expert_skew;
+pub mod straggler;
 
 pub use expert_skew::{skewed_expert_counts, SkewSummary};
+pub use straggler::StragglerProfile;
 pub use trace::{Request, TraceKind, WorkloadGen};

@@ -1,0 +1,121 @@
+//! Deterministic straggler / synchronization-variance injection (§4, §4.4).
+//!
+//! The decentralized runtime asks the profile for an extra per-tick delay
+//! for `(group, tick)`; the answer is a pure function of the seed, so any
+//! run — including the multi-threaded integration tests and the
+//! `decentralized_scaleout` bench — reproduces the exact same jitter
+//! schedule regardless of thread interleaving.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct StragglerProfile {
+    /// Baseline injected cost per decode tick (ns), before multipliers.
+    pub base_tick_ns: u64,
+    /// Symmetric jitter amplitude as a fraction of the (scaled) base:
+    /// delay ∈ base·factor·[1−j, 1+j].
+    pub jitter_frac: f64,
+    /// Per-group slowdown multipliers (1.0 = nominal). Groups beyond the
+    /// vector's length are nominal.
+    pub slow_factor: Vec<f64>,
+    /// Seed for the per-(group, tick) jitter draw.
+    pub seed: u64,
+}
+
+impl StragglerProfile {
+    /// No injected delay at all.
+    pub fn none(n_groups: usize) -> Self {
+        Self::uniform(n_groups, 0)
+    }
+
+    /// Every group pays the same fixed cost per tick (models the real
+    /// decode-iteration latency in simulation-backed runs).
+    pub fn uniform(n_groups: usize, base_tick_ns: u64) -> Self {
+        Self {
+            base_tick_ns,
+            jitter_frac: 0.0,
+            slow_factor: vec![1.0; n_groups],
+            seed: 0,
+        }
+    }
+
+    /// Uniform base cost with one straggler group running `factor`× slower.
+    pub fn with_slow_group(
+        n_groups: usize,
+        base_tick_ns: u64,
+        victim: usize,
+        factor: f64,
+    ) -> Self {
+        let mut p = Self::uniform(n_groups, base_tick_ns);
+        if victim < p.slow_factor.len() {
+            p.slow_factor[victim] = factor.max(0.0);
+        }
+        p
+    }
+
+    /// Add seeded per-tick jitter on top of the base/slow schedule.
+    pub fn with_jitter(mut self, frac: f64, seed: u64) -> Self {
+        self.jitter_frac = frac.clamp(0.0, 1.0);
+        self.seed = seed;
+        self
+    }
+
+    /// Injected delay for one `(group, tick)` — deterministic in the seed.
+    pub fn tick_delay_ns(&self, group: usize, tick: u64) -> u64 {
+        let factor = self.slow_factor.get(group).copied().unwrap_or(1.0);
+        let mut d = self.base_tick_ns as f64 * factor;
+        if d > 0.0 && self.jitter_frac > 0.0 {
+            let mut rng = Rng::new(
+                self.seed
+                    ^ (group as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ tick.wrapping_mul(0xD1B5_4A32_D192_ED03),
+            );
+            let u = rng.f64() * 2.0 - 1.0; // [-1, 1)
+            d *= 1.0 + self.jitter_frac * u;
+        }
+        d.max(0.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_injects_nothing() {
+        let p = StragglerProfile::none(4);
+        for g in 0..6 {
+            for t in 0..10 {
+                assert_eq!(p.tick_delay_ns(g, t), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn slow_group_pays_multiplied_cost() {
+        let p = StragglerProfile::with_slow_group(4, 1_000_000, 2, 8.0);
+        assert_eq!(p.tick_delay_ns(0, 0), 1_000_000);
+        assert_eq!(p.tick_delay_ns(2, 0), 8_000_000);
+        // out-of-range groups are nominal
+        assert_eq!(p.tick_delay_ns(9, 0), 1_000_000);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let p = StragglerProfile::uniform(2, 1_000_000).with_jitter(0.3, 42);
+        let q = StragglerProfile::uniform(2, 1_000_000).with_jitter(0.3, 42);
+        let mut distinct = false;
+        for t in 0..50 {
+            let a = p.tick_delay_ns(1, t);
+            assert_eq!(a, q.tick_delay_ns(1, t), "same seed → same schedule");
+            assert!((700_000..=1_300_000).contains(&a), "delay {a} out of band");
+            if a != 1_000_000 {
+                distinct = true;
+            }
+        }
+        assert!(distinct, "jitter must actually vary");
+        // different seeds diverge
+        let r = StragglerProfile::uniform(2, 1_000_000).with_jitter(0.3, 43);
+        assert!((0..50).any(|t| r.tick_delay_ns(1, t) != p.tick_delay_ns(1, t)));
+    }
+}

@@ -1,0 +1,268 @@
+//! Decentralized-runtime integration (§4.2–4.4): TE-shell → per-group
+//! worker threads → status board → output shortcut, on the deterministic
+//! SimModel backend — no artifacts required, so these run everywhere.
+//!
+//! Pinned properties:
+//! (a) every submitted request finishes, across groups and threads;
+//! (b) no output interleaving corruption: per-request streamed chunks
+//!     reassemble exactly into the finished token stream;
+//! (c) straggler-aware routing shifts load off an injected slow group;
+//! (d) a stalled group's publish-epoch heartbeat demotes it from routing.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{RequestState, ServeRequest, TeShell};
+use xdeepserve::model::{DecodeModel, SimModel, Tokenizer};
+use xdeepserve::reliability::heartbeat::GroupPulseMonitor;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_gid| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn specs(n: usize, batch_limit: usize) -> Vec<GroupSpec> {
+    (0..n).map(|i| GroupSpec::new(i, batch_limit, 512)).collect()
+}
+
+/// Dispatch + drain until nothing is parked (bounded).
+fn drain_all(shell: &mut TeShell, rt: &DecentralizedRuntime, deadline: Duration) {
+    let t0 = Instant::now();
+    while !shell.waiting.is_empty() {
+        assert!(t0.elapsed() < deadline, "requests stuck parked past deadline");
+        thread::sleep(Duration::from_millis(1));
+        shell.drain_waiting_decentralized(rt).unwrap();
+    }
+}
+
+/// One full serve of `n` requests over `n_groups` workers; returns
+/// (per-request generated streams, per-request streamed chunks+done text).
+fn serve_once(
+    n: usize,
+    n_groups: usize,
+    max_new: usize,
+) -> (HashMap<u64, Vec<i32>>, HashMap<u64, (String, String)>) {
+    let tokenizer = Tokenizer::new(256, 257, 512);
+    let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
+    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
+    let rt = DecentralizedRuntime::spawn(
+        &specs(n_groups, 8),
+        StragglerProfile::uniform(n_groups, 100_000).with_jitter(0.2, 7),
+        Some(shortcut.sender()),
+        sim_factory(),
+    )
+    .unwrap();
+    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    for i in 0..n as u64 {
+        let prompt = tokenizer.encode(&format!("request {i}"));
+        shell
+            .dispatch_decentralized(ServeRequest::new(i, prompt, max_new, 0), &rt)
+            .unwrap();
+        shell.drain_waiting_decentralized(&rt).unwrap();
+    }
+    drain_all(&mut shell, &rt, Duration::from_secs(20));
+    let groups = rt.shutdown().unwrap();
+
+    let mut generated = HashMap::new();
+    let mut served_groups = 0usize;
+    for g in &groups {
+        if !g.finished.is_empty() {
+            served_groups += 1;
+        }
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done, "req {} must finish cleanly", r.id);
+            assert_eq!(r.generated.len(), max_new, "req {} token count", r.id);
+            assert!(r.timing.done_ns >= r.timing.first_token_ns);
+            assert!(generated.insert(r.id, r.generated.clone()).is_none(), "dup req");
+        }
+    }
+    assert_eq!(generated.len(), n, "every submitted request finishes");
+    assert!(served_groups > 1, "work must actually spread across groups");
+
+    drop(shortcut);
+    let mut chunks: HashMap<u64, String> = HashMap::new();
+    let mut done: HashMap<u64, String> = HashMap::new();
+    while let Ok(msg) = sink_rx.recv() {
+        match msg {
+            FrontendMsg::Chunk { req_id, text } => {
+                chunks.entry(req_id).or_default().push_str(&text)
+            }
+            FrontendMsg::Done { req_id, full_text } => {
+                assert!(done.insert(req_id, full_text).is_none(), "dup done");
+            }
+        }
+    }
+    let streams = generated
+        .keys()
+        .map(|id| {
+            (
+                *id,
+                (
+                    chunks.get(id).cloned().unwrap_or_default(),
+                    done.get(id).cloned().unwrap_or_default(),
+                ),
+            )
+        })
+        .collect();
+    (generated, streams)
+}
+
+#[test]
+fn all_requests_finish_without_output_corruption() {
+    let tokenizer = Tokenizer::new(256, 257, 512);
+    let (generated, streams) = serve_once(48, 4, 6);
+    for (id, toks) in &generated {
+        let (chunked, full) = &streams[id];
+        let expect = tokenizer.decode(toks);
+        assert_eq!(full, &expect, "req {id}: Done text != finished tokens");
+        assert_eq!(
+            chunked, full,
+            "req {id}: streamed chunks reassemble into the full text"
+        );
+        assert_eq!(full.len(), 6, "SimModel emits one letter per token");
+    }
+}
+
+#[test]
+fn concurrent_serving_is_deterministic_per_request() {
+    // Token streams depend only on each request's own history, so two
+    // fully concurrent runs must agree stream-for-stream — any cross-group
+    // or cross-thread state bleed shows up here.
+    let (a, _) = serve_once(32, 4, 5);
+    let (b, _) = serve_once(32, 4, 5);
+    assert_eq!(a.len(), b.len());
+    for (id, toks) in &a {
+        assert_eq!(&b[id], toks, "req {id} diverged across runs");
+    }
+}
+
+#[test]
+fn straggler_aware_routing_shifts_load_off_slow_group() {
+    const VICTIM: usize = 3;
+    let rt = DecentralizedRuntime::spawn(
+        &specs(4, 4),
+        StragglerProfile::with_slow_group(4, 300_000, VICTIM, 20.0).with_jitter(0.25, 2025),
+        None,
+        sim_factory(),
+    )
+    .unwrap();
+    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_straggler_penalty(1.0);
+
+    // Phase 1 — warm every group's tick EWMA (2 requests each, routed
+    // directly so the victim provably builds a slow profile).
+    for g in 0..4usize {
+        for k in 0..2u64 {
+            rt.submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 1, 2], 4, 0))
+                .unwrap();
+        }
+    }
+    let t0 = Instant::now();
+    loop {
+        let views = rt.load_views();
+        let victim_warm = views[VICTIM].tick_ewma_ns > 0
+            && views.iter().enumerate().all(|(i, v)| {
+                i == VICTIM || (v.tick_ewma_ns > 0 && v.tick_ewma_ns * 4 < views[VICTIM].tick_ewma_ns)
+            });
+        if victim_warm && rt.all_idle() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(20), "warmup never settled");
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    // Phase 2 — measured traffic through the straggler-aware shell.
+    const MEASURED: u64 = 40;
+    for i in 0..MEASURED {
+        shell
+            .dispatch_decentralized(
+                ServeRequest::new(1000 + i, vec![256, 5, 6, 7], 6, 0),
+                &rt,
+            )
+            .unwrap();
+        if i % 4 == 3 {
+            thread::sleep(Duration::from_millis(3));
+            shell.drain_waiting_decentralized(&rt).unwrap();
+        }
+    }
+    let t1 = Instant::now();
+    while !shell.waiting.is_empty() {
+        assert!(t1.elapsed() < Duration::from_secs(20), "measured load stuck");
+        thread::sleep(Duration::from_millis(2));
+        shell.drain_waiting_decentralized(&rt).unwrap();
+    }
+    let groups = rt.shutdown().unwrap();
+
+    let measured_per_group: Vec<usize> = groups
+        .iter()
+        .map(|g| g.finished.iter().filter(|r| r.id >= 1000).count())
+        .collect();
+    let total: usize = measured_per_group.iter().sum();
+    assert_eq!(total, MEASURED as usize, "all measured requests finish");
+    let victim_share = measured_per_group[VICTIM];
+    assert!(
+        victim_share < MEASURED as usize / 4,
+        "victim got fair share despite mitigation: {measured_per_group:?}"
+    );
+    for (i, &n) in measured_per_group.iter().enumerate() {
+        if i != VICTIM {
+            assert!(
+                n > victim_share,
+                "healthy group {i} served less than the straggler: {measured_per_group:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pulse_heartbeat_demotes_stalled_group() {
+    const VICTIM: usize = 1;
+    let rt = DecentralizedRuntime::spawn(
+        &specs(2, 4),
+        // victim: 100 ms per tick → its publish epoch freezes mid-tick
+        StragglerProfile::with_slow_group(2, 200_000, VICTIM, 500.0),
+        None,
+        sim_factory(),
+    )
+    .unwrap();
+    // 10 ms interval, 3 misses → 30 ms bound: far above a healthy worker's
+    // publish cadence (<= 4 ms idle backoff), far below the victim's
+    // 100 ms stalls.
+    let mut monitor = GroupPulseMonitor::new(10_000_000, 3);
+    rt.submit_to(0, ServeRequest::new(1, vec![256, 9], 8, 0)).unwrap();
+    rt.submit_to(VICTIM, ServeRequest::new(2, vec![256, 9], 8, 0)).unwrap();
+
+    let mut victim_demotions = 0usize;
+    let mut healthy_demotions = 0usize;
+    let mut saw_unhealthy_view = false;
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(600) {
+        for id in rt.demote_stalled(&mut monitor) {
+            if id == VICTIM {
+                victim_demotions += 1;
+            } else {
+                healthy_demotions += 1;
+            }
+        }
+        if !rt.load_views()[VICTIM].status.healthy {
+            saw_unhealthy_view = true;
+        }
+        thread::sleep(Duration::from_millis(2));
+    }
+    assert!(victim_demotions > 0, "stalled group must be demoted");
+    assert_eq!(healthy_demotions, 0, "live group must never be demoted");
+    assert!(saw_unhealthy_view, "router view must reflect the demotion");
+
+    // demotion is router-level and transient: the drain still completes
+    let groups = rt.shutdown().unwrap();
+    let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+    assert_eq!(finished, 2);
+    assert!(groups
+        .iter()
+        .flat_map(|g| g.finished.iter())
+        .all(|r| r.state == RequestState::Done));
+}

@@ -1,0 +1,259 @@
+//! Offline stub of the `xla` crate (xla-rs 0.5.x PJRT bindings).
+//!
+//! Mirrors exactly the API surface `xdeepserve::runtime` uses. Host-side
+//! [`Literal`] construction and readback are fully functional; everything
+//! that would require a real PJRT plugin (client creation, HLO parsing,
+//! compilation, execution) returns [`XlaError`]. See README.md for how to
+//! swap in the real bindings.
+
+use std::fmt;
+
+/// Error type matching the shape of xla-rs errors (implements
+/// `std::error::Error`, so it flattens into `anyhow::Error` via `?`).
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl XlaError {
+    fn stub(what: &str) -> Self {
+        XlaError(format!(
+            "{what}: PJRT unavailable in the offline xla stub (see rust/vendor/xla/README.md)"
+        ))
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// XLA primitive element types (subset + padding variants so downstream
+/// `match` arms keep their wildcard branches meaningful).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Dense array shape: element type + dimensions.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Clone, Debug)]
+#[non_exhaustive]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Conversion trait for typed literal readback (`Literal::to_vec::<T>()`).
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_le_chunk(chunk: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        f32::from_le_bytes(chunk.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        i32::from_le_bytes(chunk.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        chunk[0] as i8
+    }
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        i64::from_le_bytes(chunk.try_into().expect("8-byte chunk"))
+    }
+}
+
+/// Host-side literal: element type + dims + raw little-endian bytes.
+/// Fully functional in the stub (no device involvement).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if untyped_data.len() != n * ty.byte_size() {
+            return Err(XlaError(format!(
+                "literal data size mismatch: {:?}{dims:?} wants {} bytes, got {}",
+                ty,
+                n * ty.byte_size(),
+                untyped_data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: untyped_data.to_vec(),
+        })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { ty: self.ty, dims: self.dims.clone() }))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(XlaError(format!(
+                "literal readback type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.byte_size())
+            .map(T::from_le_chunk)
+            .collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::stub("Literal::to_tuple"))
+    }
+}
+
+/// PJRT client handle. Construction fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::stub("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+}
+
+/// Parsed HLO module. Text parsing requires the real bindings.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(XlaError(format!(
+            "HloModuleProto::from_text_file({path:?}): PJRT unavailable in the offline xla \
+             stub (see rust/vendor/xla/README.md)"
+        )))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs.to_vec());
+        match lit.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.ty(), ElementType::F32);
+                assert_eq!(a.dims(), &[3]);
+            }
+            other => panic!("expected array shape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_rejects_size_mismatch() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline xla stub"));
+    }
+}
