@@ -1,17 +1,27 @@
 //! Disaggregated Prefill-Decode demo (§5.1, Fig 17).
 //!
-//! Two task executors in one process: a prefill TE runs the eager-mode
-//! prefill artifact, registers the KV with DistFlow, and the decode TE
-//! pulls it over XCCL (real bytes through the simulated UB fabric, INT8
-//! latent codec) before decoding — the 8-step workflow, with the
-//! heterogeneous 910B→RoCE path measured alongside.
+//! Part 1 — the 8-step workflow with real KV bytes: a prefill TE runs the
+//! eager-mode prefill artifact, registers the KV with DistFlow, and the
+//! decode TE pulls it over XCCL (real bytes through the simulated UB
+//! fabric, INT8 latent codec) before decoding, with the heterogeneous
+//! 910B→RoCE path measured alongside.
+//!
+//! Part 2 — the same disaggregation *live* on the decentralized runtime:
+//! a `ServingEngine` in `PdDisaggregated` mode, where prefill worker
+//! threads inject KV cross-thread into decode DP-group inboxes, and the
+//! prefill→decode handoff latency is measured per request.
 //!
 //! Run: `make artifacts && cargo run --release --example pd_disagg`
 
-use xdeepserve::config::NpuKind;
+use std::time::Duration;
+
+use xdeepserve::config::{DeploymentMode, NpuKind};
 use xdeepserve::coordinator::decode_sched::GroupStatus;
-use xdeepserve::coordinator::{DpGroup, ServeRequest};
-use xdeepserve::disagg::pd::{DecodeTe, PdPipeline, PrefillTe};
+use xdeepserve::coordinator::{
+    engine_model_factory, DpGroup, GroupSpec, PrefilledSeq, RequestState, ServeRequest,
+    ServingEngine,
+};
+use xdeepserve::disagg::pd::{DecodeTe, PdPipeline, PrefillTe, PrefillWorkerSpec};
 use xdeepserve::fabric::memory::GlobalMemory;
 use xdeepserve::fabric::{FabricParams, Topology};
 use xdeepserve::kvcache::quant as kvquant;
@@ -76,10 +86,12 @@ fn main() -> anyhow::Result<()> {
         );
         let kv = kvquant::decode_kv(&wire, m.n_layers, m.max_seq, m.c_latent, m.r_rope)?;
         decode_group.inject_prefilled(
-            ServeRequest::new(req_id, toks, 12, 0),
-            kv,
-            first,
-            pf.hidden,
+            PrefilledSeq {
+                req: ServeRequest::new(req_id, toks, 12, 0),
+                kv,
+                first_token: first,
+                hidden: pf.hidden,
+            },
             ns,
         )?;
     }
@@ -122,5 +134,36 @@ fn main() -> anyhow::Result<()> {
     let disagg = &decode_group.finished.iter().find(|r| r.id == 0).unwrap().generated;
     assert_eq!(&colo, disagg, "PD disaggregation changed the output!");
     println!("\nverified: disaggregated decode stream == colocated stream ✓");
+
+    // ---- Part 2: PD live on the decentralized runtime ----
+    println!("\n== PD over the decentralized runtime (ServingEngine) ==");
+    let factory = engine_model_factory(dir.clone());
+    let mut serving = ServingEngine::builder(DeploymentMode::PdDisaggregated, factory)
+        .groups((0..2).map(|i| GroupSpec::new(i, 4, 4096)).collect())
+        .prefill_workers(vec![PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)])
+        .spawn()?;
+    for (i, p) in prompts.iter().enumerate() {
+        serving.submit(ServeRequest::new(100 + i as u64, tokenizer.encode(p), 12, 0))?;
+        serving.drain();
+    }
+    serving.settle(Duration::from_secs(120))?;
+    let groups = serving.shutdown()?;
+    println!("-- prefill→decode handoff (cross-thread, incl. deferral) --");
+    for g in &groups {
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done);
+            let handoff = r.timing.first_token_ns.saturating_sub(r.timing.prefill_done_ns);
+            println!(
+                "  req {} → decode DP{}: {} generated, handoff {}",
+                r.id,
+                g.id,
+                r.generated.len(),
+                human_ns(handoff),
+            );
+        }
+    }
+    let served: usize = groups.iter().map(|g| g.finished.len()).sum();
+    assert_eq!(served, prompts.len(), "every request decodes end-to-end");
+    println!("verified: prefill threads → cross-thread inject → decode ✓");
     Ok(())
 }

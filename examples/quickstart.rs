@@ -1,21 +1,24 @@
 //! Quickstart: load the AOT-compiled MiniDeepSeek artifacts and serve a
-//! small batch of requests through the full FlowServe stack — TE-shell
-//! dispatch, DP groups with continuous batching, MTP speculative decoding,
-//! and output shortcutting — reporting TTFT/TPOT/throughput.
+//! small batch of requests through the full FlowServe stack — the unified
+//! `ServingEngine` front-end over decentralized DP-group worker threads,
+//! with continuous batching, MTP speculative decoding, and output
+//! shortcutting — reporting TTFT/TPOT/throughput.
 //!
 //! This is the end-to-end driver required by DESIGN.md: all three layers
 //! compose (L1 Pallas kernels inside the L2 HLO, executed by the L3 Rust
 //! coordinator through PJRT), with Python nowhere on the request path.
+//! Each DP-group worker thread owns its own PJRT engine instance.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::config::DeploymentMode;
 use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
-use xdeepserve::coordinator::{DpGroup, ServeRequest, TeShell};
+use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
 use xdeepserve::metrics::ServingMetrics;
-use xdeepserve::model::{ServedModel, Tokenizer};
+use xdeepserve::model::Tokenizer;
 use xdeepserve::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
@@ -31,23 +34,26 @@ fn main() -> anyhow::Result<()> {
         engine.manifest.model.top_k,
         engine.manifest.model.vocab
     );
-    engine.warmup(&["prefill_s128", "decode_b4", "mtp_b4"])?;
-    println!("warmup done (pre-warmed pods, §2.1)");
-
-    let model = ServedModel::new(&engine);
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    // Each worker thread loads (and lazily warms) its own engine below —
+    // warming this front-end engine would be work thrown away with it.
+    drop(engine);
+
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
     let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
-    let mut groups: Vec<DpGroup> = (0..2)
+    let factory = engine_model_factory(dir.clone());
+    let specs: Vec<GroupSpec> = (0..2)
         .map(|i| {
-            let mut g = DpGroup::new(i, 4, 4096);
-            g.out_tx = Some(shortcut.sender());
-            g.use_mtp = true;
-            g
+            let mut s = GroupSpec::new(i, 4, 4096);
+            s.use_mtp = true;
+            s
         })
         .collect();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let mut serving = ServingEngine::builder(DeploymentMode::Colocated, factory)
+        .groups(specs)
+        .output(shortcut.sender())
+        .spawn()?;
 
     let prompts = [
         "explain the difference between model serving and training",
@@ -57,38 +63,24 @@ fn main() -> anyhow::Result<()> {
         "balance the experts please",
         "one more request for the road",
     ];
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     for (i, p) in prompts.iter().enumerate() {
-        shell.dispatch(
-            ServeRequest::new(i as u64, tokenizer.encode(p), 16, 0),
-            &mut groups,
-        )?;
+        serving.submit(ServeRequest::new(i as u64, tokenizer.encode(p), 16, 0))?;
+        serving.drain();
     }
-
-    loop {
-        let mut any = false;
-        for g in groups.iter_mut() {
-            let now = t0.elapsed().as_nanos() as u64;
-            g.admit_from_queue(&model, now)?;
-            let now = t0.elapsed().as_nanos() as u64;
-            any |= g.decode_iteration(&model, now)? > 0;
-        }
-        shell.drain_waiting(&mut groups)?;
-        if !any && groups.iter().all(|g| g.is_idle()) {
-            break;
-        }
-    }
+    serving.settle(Duration::from_secs(120))?;
+    let groups = serving.shutdown()?;
     let wall = t0.elapsed();
 
     let mut metrics = ServingMetrics::new();
-    for g in groups.iter_mut() {
+    for g in &groups {
         println!(
             "DP{}: {} iterations, MTP acceptance {:.0}%",
             g.id,
             g.iterations,
             g.mtp_acceptance() * 100.0
         );
-        for r in g.finished.drain(..) {
+        for r in &g.finished {
             metrics.record_request(&r.timing);
         }
     }
@@ -106,21 +98,5 @@ fn main() -> anyhow::Result<()> {
         wall.as_secs_f64(),
         prompts.len()
     );
-    let stats = engine.stats();
-    let mut names: Vec<_> = stats.keys().collect();
-    names.sort();
-    println!("\n-- PJRT executable stats --");
-    for n in names {
-        let s = stats[n];
-        if s.calls > 0 {
-            println!(
-                "  {:<16} calls={:<4} avg={:>6} us (compile {} ms)",
-                n,
-                s.calls,
-                s.total_us / s.calls,
-                s.compile_us / 1000
-            );
-        }
-    }
     Ok(())
 }

@@ -1,6 +1,8 @@
-//! Decentralized scale-out bench (§4, §7.1 shape): aggregate decode
-//! throughput vs. DP-group/thread count, and p99 TPOT with vs. without
-//! straggler mitigation under deterministic injected jitter.
+//! Decentralized scale-out bench (§4, §5.1, §7.1 shape): aggregate decode
+//! throughput vs. DP-group/thread count, p99 TPOT with vs. without
+//! straggler mitigation under deterministic injected jitter, and a
+//! PD-disaggregated mode at 64 decode groups recording the cross-thread
+//! prefill-handoff latency alongside p99 TPOT.
 //!
 //! Uses the SimModel backend with a fixed injected per-tick cost, so the
 //! workload is sleep-bound: aggregate throughput must scale close to
@@ -14,9 +16,10 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use xdeepserve::bench_support::PaperBench;
-use xdeepserve::config::DecodeLbPolicy;
-use xdeepserve::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
-use xdeepserve::coordinator::{ServeRequest, TeShell};
+use xdeepserve::config::{DecodeLbPolicy, DeploymentMode, ServingConfig};
+use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{ServeRequest, ServingEngine};
+use xdeepserve::disagg::PrefillWorkerSpec;
 use xdeepserve::model::{DecodeModel, SimModel};
 use xdeepserve::util::stats::Histogram;
 use xdeepserve::workload::straggler::StragglerProfile;
@@ -36,25 +39,19 @@ fn specs(n: usize) -> Vec<GroupSpec> {
 /// Serve a fixed per-group workload on `n` group threads; returns
 /// (tokens/s aggregate, wall ms).
 fn throughput_run(n: usize) -> (f64, f64) {
-    let rt = DecentralizedRuntime::spawn(
-        &specs(n),
-        StragglerProfile::uniform(n, TICK_NS),
-        None,
-        sim_factory(),
-    )
-    .unwrap();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(n))
+        .straggler(StragglerProfile::uniform(n, TICK_NS))
+        .spawn()
+        .unwrap();
     let t0 = Instant::now();
     for i in 0..(n * REQS_PER_GROUP) as u64 {
-        shell
-            .dispatch_decentralized(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0), &rt)
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0))
             .unwrap();
     }
-    while !shell.waiting.is_empty() {
-        thread::sleep(Duration::from_micros(300));
-        shell.drain_waiting_decentralized(&rt).unwrap();
-    }
-    let groups = rt.shutdown().unwrap();
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let groups = engine.shutdown().unwrap();
     let wall_s = t0.elapsed().as_secs_f64();
     let tokens: usize = groups
         .iter()
@@ -74,24 +71,29 @@ fn throughput_run(n: usize) -> (f64, f64) {
 fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
     const N: usize = 4;
     const VICTIM: usize = 3;
-    let rt = DecentralizedRuntime::spawn(
-        &specs(N),
-        StragglerProfile::with_slow_group(N, TICK_NS / 2, VICTIM, 12.0).with_jitter(0.25, 42),
-        None,
-        sim_factory(),
-    )
-    .unwrap();
-    let mut shell = TeShell::new(policy).with_straggler_penalty(penalty);
+    let mut serving_cfg = ServingConfig::default();
+    serving_cfg.decode_lb = policy;
+    serving_cfg.straggler_penalty = penalty;
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(N))
+        .serving(serving_cfg)
+        .straggler(
+            StragglerProfile::with_slow_group(N, TICK_NS / 2, VICTIM, 12.0).with_jitter(0.25, 42),
+        )
+        .spawn()
+        .unwrap();
 
     // Warm every group's EWMA so routing has a signal to act on.
     for g in 0..N {
         for k in 0..2u64 {
-            rt.submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 7], 4, 0))
+            engine
+                .runtime()
+                .submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 7], 4, 0))
                 .unwrap();
         }
     }
     let warm_deadline = Instant::now() + Duration::from_secs(20);
-    while !(rt.all_idle() && rt.load_views().iter().all(|v| v.tick_ewma_ns > 0)) {
+    while !(engine.all_idle() && engine.load_views().iter().all(|v| v.tick_ewma_ns > 0)) {
         assert!(Instant::now() < warm_deadline, "warmup stalled");
         thread::sleep(Duration::from_millis(1));
     }
@@ -99,22 +101,16 @@ fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
     // Measured traffic, lightly paced so routing reacts to fresh status.
     const MEASURED: u64 = 60;
     for i in 0..MEASURED {
-        shell
-            .dispatch_decentralized(
-                ServeRequest::new(1000 + i, vec![256, 2, 4], 12, 0),
-                &rt,
-            )
+        engine
+            .submit(ServeRequest::new(1000 + i, vec![256, 2, 4], 12, 0))
             .unwrap();
         if i % 4 == 3 {
             thread::sleep(Duration::from_millis(2));
-            shell.drain_waiting_decentralized(&rt).unwrap();
+            engine.drain();
         }
     }
-    while !shell.waiting.is_empty() {
-        thread::sleep(Duration::from_millis(1));
-        shell.drain_waiting_decentralized(&rt).unwrap();
-    }
-    let groups = rt.shutdown().unwrap();
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let groups = engine.shutdown().unwrap();
     let mut tpot = Histogram::new();
     let mut victim_share = 0usize;
     for g in &groups {
@@ -129,10 +125,54 @@ fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
     (tpot.percentile(99.0), tpot.mean(), victim_share)
 }
 
+/// PD-disaggregated mode at scale: `n` decode-group threads fed by a
+/// prefill plane. Returns (p99 handoff ms, p99 TPOT ms, tokens/s).
+fn pd_run(n: usize, prefill_workers: usize) -> (f64, f64, f64) {
+    const PD_MAX_NEW: usize = 8;
+    const PD_REQS_PER_GROUP: usize = 3;
+    let mut engine = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
+        .groups(specs(n))
+        .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect())
+        .straggler(StragglerProfile::uniform(n, TICK_NS / 4))
+        .spawn()
+        .unwrap();
+    let t0 = Instant::now();
+    let total = (n * PD_REQS_PER_GROUP) as u64;
+    for i in 0..total {
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], PD_MAX_NEW, 0))
+            .unwrap();
+        if i % 32 == 31 {
+            engine.drain();
+        }
+    }
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let groups = engine.shutdown().unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut handoff = Histogram::new();
+    let mut tpot = Histogram::new();
+    let mut tokens = 0usize;
+    for g in &groups {
+        for r in &g.finished {
+            tokens += r.generated.len();
+            handoff.record(
+                r.timing.first_token_ns.saturating_sub(r.timing.prefill_done_ns) as f64 / 1e6,
+            );
+            tpot.record(r.timing.tpot_ms());
+        }
+    }
+    assert_eq!(
+        tokens,
+        n * PD_REQS_PER_GROUP * PD_MAX_NEW,
+        "pd workload must fully complete"
+    );
+    (handoff.percentile(99.0), tpot.percentile(99.0), tokens as f64 / wall_s)
+}
+
 fn main() {
     let mut bench = PaperBench::new(
         "Decentralized-scaleout",
-        "per-group worker threads: throughput scaling + straggler mitigation (wall clock)",
+        "per-group worker threads: throughput scaling, straggler mitigation, PD handoff (wall clock)",
         &["scenario", "value", "detail", "target"],
     );
 
@@ -189,6 +229,24 @@ fn main() {
         "mitigation routes less to the straggler than round-robin",
         share_mit < share_rr,
     );
+
+    // ---- PD-disaggregated mode, driven to 64 decode-group threads ----
+    for (n, pw) in [(16usize, 2usize), (64, 4)] {
+        let (handoff_p99, tpot_p99, tps) = pd_run(n, pw);
+        bench.row(&[
+            format!("PD: {n} decode groups, {pw} prefill workers"),
+            format!("handoff p99 {handoff_p99:.2} ms"),
+            format!("p99 TPOT {tpot_p99:.2} ms, {tps:.0} tok/s"),
+            "cross-thread inject".into(),
+        ]);
+        if n == 64 {
+            bench.check(
+                "64-group PD handoff p99 under 250 ms",
+                handoff_p99 < 250.0,
+            );
+            bench.check("64-group PD workload completes", tps > 0.0);
+        }
+    }
 
     std::process::exit(i32::from(!bench.finish()));
 }

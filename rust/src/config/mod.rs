@@ -22,6 +22,23 @@ pub enum NpuKind {
     Ascend910B,
 }
 
+/// How the serving engine is deployed (§5, Fig 16): which roles run where
+/// and how a request reaches its decode DP group. Consumed by
+/// `coordinator::ServingEngine` — one front-end serves every mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeploymentMode {
+    /// Prefill and decode colocated: each DP-group worker runs its own
+    /// prompt prefill before continuous-batched decode (§4.2).
+    #[default]
+    Colocated,
+    /// Disaggregated Prefill-Decode (§5.1): dedicated prefill workers run
+    /// prompt prefill and hand the KV to a decode DP group cross-thread.
+    PdDisaggregated,
+    /// Disaggregated MoE-Attention (§5.2): attention DP groups are
+    /// partitioned into DP domains; routing balances across domains first.
+    MoeAttn,
+}
+
 /// Decode DP load-balancing policy (§4.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecodeLbPolicy {
@@ -60,6 +77,8 @@ impl Default for SlaConfig {
 /// Parallelism + placement layout for one deployment.
 #[derive(Clone, Debug)]
 pub struct DeploymentConfig {
+    /// How this deployment serves requests (see [`DeploymentMode`]).
+    pub mode: DeploymentMode,
     /// Servers used (each has `chips_per_server` chips, 2 dies per chip).
     pub n_servers: usize,
     pub chips_per_server: usize,
@@ -94,6 +113,7 @@ impl DeploymentConfig {
     /// §7.1 colocated: 18 servers, 288 dies, DP288/EP288, batch 60.
     pub fn colocated_dp288() -> Self {
         Self {
+            mode: DeploymentMode::Colocated,
             n_servers: 18,
             chips_per_server: 8,
             ep_size: 288,
@@ -114,6 +134,7 @@ impl DeploymentConfig {
     /// 288 EP + 480 attention in 3 DP domains × 160 DP groups, batch 96.
     pub fn disagg_768() -> Self {
         Self {
+            mode: DeploymentMode::MoeAttn,
             n_servers: 48,
             chips_per_server: 8,
             ep_size: 288,
@@ -134,6 +155,7 @@ impl DeploymentConfig {
     /// each) + 1 decode TE (8 servers, DP128/EP128).
     pub fn production_decode_te() -> Self {
         Self {
+            mode: DeploymentMode::PdDisaggregated,
             n_servers: 8,
             chips_per_server: 8,
             ep_size: 128,
@@ -152,6 +174,7 @@ impl DeploymentConfig {
 
     pub fn production_prefill_te() -> Self {
         Self {
+            mode: DeploymentMode::PdDisaggregated,
             n_servers: 2,
             chips_per_server: 8,
             ep_size: 32,
@@ -281,6 +304,16 @@ impl Config {
         if let Some(v) = toml.try_u64("deployment.ep_size")? {
             cfg.deployment.ep_size = v as usize;
         }
+        if let Some(v) = toml.try_str("deployment.mode")? {
+            cfg.deployment.mode = match v {
+                "colocated" => DeploymentMode::Colocated,
+                "pd_disaggregated" => DeploymentMode::PdDisaggregated,
+                "moe_attn" => DeploymentMode::MoeAttn,
+                other => anyhow::bail!(
+                    "unknown deployment.mode {other:?} (expected colocated, pd_disaggregated, or moe_attn)"
+                ),
+            };
+        }
         if let Some(v) = toml.try_u64("serving.mtp_layers")? {
             cfg.serving.mtp_layers = v as usize;
         }
@@ -305,6 +338,11 @@ impl Config {
                 "serving.straggler_penalty must be >= 0, got {v}"
             );
             cfg.serving.straggler_penalty = v;
+        }
+        if let Some(v) = toml.try_u64("serving.dp_queue_limit")? {
+            // 0 is meaningful: it disables shell-side admission entirely
+            // (TeShell treats 0 as "no queue limit").
+            cfg.serving.dp_queue_limit = v as usize;
         }
         if let Some(v) = toml.try_f64("serving.tick_ewma_alpha")? {
             anyhow::ensure!(
@@ -412,6 +450,42 @@ mod tests {
         assert!(Config::from_file(&p).is_err());
         let p = write_cfg("bad_pen.toml", "[serving]\nstraggler_penalty = -1.0\n");
         assert!(Config::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn deployment_mode_presets_and_overrides() {
+        // presets carry their paper-mode defaults
+        assert_eq!(DeploymentConfig::colocated_dp288().mode, DeploymentMode::Colocated);
+        assert_eq!(DeploymentConfig::disagg_768().mode, DeploymentMode::MoeAttn);
+        assert_eq!(
+            DeploymentConfig::production_decode_te().mode,
+            DeploymentMode::PdDisaggregated
+        );
+
+        // explicit override beats the preset default
+        let p = write_cfg(
+            "mode.toml",
+            "preset = \"colocated_dp288\"\n[deployment]\nmode = \"pd_disaggregated\"\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.deployment.mode, DeploymentMode::PdDisaggregated);
+
+        // unknown mode is an error naming the value
+        let p = write_cfg("bad_mode.toml", "[deployment]\nmode = \"quantum\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("quantum"), "{e}");
+    }
+
+    #[test]
+    fn dp_queue_limit_parses_including_disable() {
+        let p = write_cfg("qlim.toml", "[serving]\ndp_queue_limit = 32\n");
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.serving.dp_queue_limit, 32);
+
+        // 0 = admission disabled (the TeShell contract), not an error
+        let p = write_cfg("qlim0.toml", "[serving]\ndp_queue_limit = 0\n");
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.serving.dp_queue_limit, 0);
     }
 
     #[test]

@@ -158,6 +158,56 @@ pub fn choose_group_straggler_aware(
     }
 }
 
+/// Restrict routing to the least-loaded DP *domain* (§5.2 disaggregated
+/// MoE-Attention: attention DP groups are partitioned into `domains`
+/// domains; balancing across domains first keeps each domain's microbatch
+/// pipeline evenly fed). Group → domain mapping is `group_id % domains`.
+///
+/// Domains with no slot-free healthy group are skipped; ties on pending
+/// load break cyclically starting at `*rr_domain` so equal-load domains
+/// share traffic instead of the lowest id absorbing it. When no domain has
+/// a free slot the views pass through unchanged (the policy layer then
+/// parks the request).
+pub fn filter_least_loaded_domain(
+    views: Vec<GroupLoadView>,
+    domains: usize,
+    rr_domain: &mut usize,
+) -> Vec<GroupLoadView> {
+    if domains <= 1 {
+        return views;
+    }
+    let mut best: Option<(usize, usize)> = None; // (domain, pending)
+    for k in 0..domains {
+        let dom = (*rr_domain + k) % domains;
+        let mut has_slot = false;
+        let mut pending = 0usize;
+        for v in views.iter().filter(|v| v.status.group % domains == dom) {
+            has_slot |= v.status.has_slot();
+            if v.status.healthy {
+                pending += v.status.running;
+            }
+        }
+        if !has_slot {
+            continue;
+        }
+        // strict < keeps the cyclic tie-break: the first domain scanned at
+        // a given pending level wins
+        if best.map_or(true, |(_, p)| pending < p) {
+            best = Some((dom, pending));
+        }
+    }
+    match best {
+        Some((dom, _)) => {
+            *rr_domain = (dom + 1) % domains;
+            views
+                .into_iter()
+                .filter(|v| v.status.group % domains == dom)
+                .collect()
+        }
+        None => views,
+    }
+}
+
 /// Imbalance metric used by the ablation bench (max/mean KV usage).
 pub fn kv_imbalance(groups: &[GroupStatus]) -> f64 {
     let mean: f64 =
@@ -299,6 +349,40 @@ mod tests {
             choose_group_straggler_aware(&views, DecodeLbPolicy::LeastKv, &mut rr, 1.0),
             Some(0)
         );
+    }
+
+    #[test]
+    fn domain_filter_balances_and_cycles_ties() {
+        // 4 groups over 2 domains: d0 = {0, 2}, d1 = {1, 3}.
+        let views = |loads: [usize; 4]| -> Vec<GroupLoadView> {
+            loads
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| GroupLoadView {
+                    status: g(i, r, 8, 0.0),
+                    tick_ewma_ns: 0,
+                    epoch: 0,
+                })
+                .collect()
+        };
+        let mut rr = 0;
+        // equal load: tie breaks at the cursor (d0), cursor advances
+        let f = filter_least_loaded_domain(views([0, 0, 0, 0]), 2, &mut rr);
+        assert!(f.iter().all(|v| v.status.group % 2 == 0));
+        assert_eq!(rr, 1);
+        // next tie goes to d1
+        let f = filter_least_loaded_domain(views([0, 0, 0, 0]), 2, &mut rr);
+        assert!(f.iter().all(|v| v.status.group % 2 == 1));
+        // unequal load: the lighter domain wins regardless of the cursor
+        let f = filter_least_loaded_domain(views([5, 0, 5, 1]), 2, &mut rr);
+        assert!(f.iter().all(|v| v.status.group % 2 == 1), "d1 pending 1 < d0 10");
+        // a domain with no free slot is skipped entirely
+        let full = views([8, 0, 8, 0]);
+        let f = filter_least_loaded_domain(full, 2, &mut rr);
+        assert!(f.iter().all(|v| v.status.group % 2 == 1), "full d0 skipped");
+        // domains == 1 is a no-op
+        let f = filter_least_loaded_domain(views([1, 2, 3, 4]), 1, &mut rr);
+        assert_eq!(f.len(), 4);
     }
 
     /// Property: LeastKv keeps long-run KV imbalance below RoundRobin under

@@ -1,0 +1,187 @@
+//! The [`Dispatcher`] abstraction: how a routed request actually reaches a
+//! DP group.
+//!
+//! The TE-shell (§4.2) owns *routing policy* — stale credits, straggler
+//! penalties, queue-limit admission — but deliberately knows nothing about
+//! *delivery*: whether the chosen group is a struct the caller ticks on one
+//! thread, a worker thread's inbox, or (PD-disaggregated, §5.1) a prefill
+//! worker that will hand the KV off cross-thread later. Each deployment
+//! mode supplies a `Dispatcher`; `TeShell::submit` is the single routing
+//! path over all of them — this is what replaced the old forked
+//! `dispatch`/`dispatch_decentralized` API.
+
+use std::fmt;
+
+use crate::coordinator::decode_sched::GroupLoadView;
+use crate::coordinator::dp_group::DpGroup;
+use crate::coordinator::request::ServeRequest;
+use crate::coordinator::worker::DecentralizedRuntime;
+
+/// What happened to a submitted request (both are success: a parked
+/// request is retried by `TeShell::drain`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchOutcome {
+    /// Delivered toward this decode DP group.
+    Dispatched(usize),
+    /// Every eligible group was full (or delivery failed); the request is
+    /// parked in the shell's waiting list for a later `drain`.
+    Parked,
+}
+
+/// Typed shell-side admission rejection (`serving.dp_queue_limit`): the
+/// aggregate pending load — parked requests plus every healthy group's
+/// in-flight count — has reached `dp_queue_limit × healthy groups`, so the
+/// request is shed *before* it can silently queue and blow KV pools.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    QueueFull {
+        /// Pending load observed at rejection (waiting + per-group counts).
+        pending: usize,
+        /// `dp_queue_limit × healthy groups` at rejection time.
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::QueueFull { pending, capacity } => write!(
+                f,
+                "admission rejected: {pending} pending requests >= dp queue capacity {capacity}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Delivery backend for one deployment mode. `load_views` feeds the
+/// routing decision; `deliver` moves the request toward the chosen group.
+pub trait Dispatcher {
+    /// Per-group routing views. Decentralized backends return stale board
+    /// snapshots (the shell folds its credits on top); synchronous ones
+    /// return live state with a fresh epoch so credits reset to zero.
+    fn load_views(&mut self) -> Vec<GroupLoadView>;
+
+    /// Hand `req` toward decode group `group_id`. On failure the request
+    /// comes back so the shell can re-park it instead of losing it.
+    fn deliver(
+        &mut self,
+        group_id: usize,
+        req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest>;
+
+    /// Delivery to `group_id` failed mid-epoch (e.g. its worker died before
+    /// the pulse monitor noticed): stop routing there until it re-proves
+    /// liveness. Default: nothing to demote.
+    fn demote(&mut self, _group_id: usize) {}
+
+    /// True when `deliver` makes the delivered request immediately visible
+    /// in this backend's own `load_views` (e.g. the PD plane's synchronous
+    /// in-flight counters). The shell then skips its sent-since-epoch
+    /// credit for deliveries — otherwise the same request would count
+    /// twice against routing and queue-limit admission until the next
+    /// board publish.
+    fn tracks_inflight(&self) -> bool {
+        false
+    }
+}
+
+/// Synchronous colocated backend: the caller owns the groups and ticks
+/// them on its own thread (artifact-backed single-thread runs, unit
+/// tests). Views are live, so every `load_views` stamps a fresh epoch
+/// from a process-global counter — the shell's stale credits then reset
+/// on every read and contribute nothing, which is exactly right when
+/// counts are already exact. (The counter is global, not per-wrapper, so
+/// re-wrapping the same groups between calls cannot resurrect an old
+/// epoch and double-count.)
+pub struct SyncGroups<'a> {
+    groups: &'a mut [DpGroup],
+}
+
+impl<'a> SyncGroups<'a> {
+    pub fn new(groups: &'a mut [DpGroup]) -> Self {
+        Self { groups }
+    }
+}
+
+impl Dispatcher for SyncGroups<'_> {
+    fn load_views(&mut self) -> Vec<GroupLoadView> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SYNC_EPOCH: AtomicU64 = AtomicU64::new(0);
+        let epoch = SYNC_EPOCH.fetch_add(1, Ordering::Relaxed) + 1;
+        self.groups
+            .iter()
+            .map(|g| GroupLoadView {
+                status: g.as_group_status(),
+                tick_ewma_ns: 0,
+                epoch,
+            })
+            .collect()
+    }
+
+    fn deliver(
+        &mut self,
+        group_id: usize,
+        req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        match self.groups.iter_mut().find(|g| g.id == group_id) {
+            Some(g) => {
+                g.enqueue(req);
+                Ok(())
+            }
+            None => Err(req),
+        }
+    }
+}
+
+/// Decentralized backend (§4.2–4.4): deliver into the chosen group's
+/// worker inbox, never waiting on the worker.
+pub struct RuntimeDispatch<'a>(pub &'a DecentralizedRuntime);
+
+impl Dispatcher for RuntimeDispatch<'_> {
+    fn load_views(&mut self) -> Vec<GroupLoadView> {
+        self.0.load_views()
+    }
+
+    fn deliver(
+        &mut self,
+        group_id: usize,
+        req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        self.0.try_submit(group_id, req)
+    }
+
+    fn demote(&mut self, group_id: usize) {
+        self.0.demote(group_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_views_advance_epoch_and_reflect_live_state() {
+        let mut groups = vec![DpGroup::new(0, 4, 64), DpGroup::new(1, 4, 64)];
+        let mut d = SyncGroups::new(&mut groups);
+        let v1 = d.load_views();
+        let v2 = d.load_views();
+        assert_eq!(v1.len(), 2);
+        assert!(v2[0].epoch > v1[0].epoch, "fresh epoch per read");
+
+        d.deliver(1, ServeRequest::new(7, vec![256, 1], 2, 0)).unwrap();
+        let v3 = d.load_views();
+        assert_eq!(v3[1].status.running, 1, "delivery visible immediately");
+
+        let back = d.deliver(9, ServeRequest::new(8, vec![256], 2, 0));
+        assert_eq!(back.unwrap_err().id, 8, "unknown group hands request back");
+    }
+
+    #[test]
+    fn admission_error_formats_counts() {
+        let e = AdmissionError::QueueFull { pending: 12, capacity: 8 };
+        let s = e.to_string();
+        assert!(s.contains("12") && s.contains('8'), "{s}");
+    }
+}

@@ -22,6 +22,26 @@ pub struct SeqState {
     pub hidden: Vec<f32>,
 }
 
+/// A sequence whose prefill ran elsewhere (§5.1): the prompt KV, the first
+/// sampled token, and the hidden state, packaged for cross-thread handoff
+/// into a decode DP group.
+///
+/// **KV ownership contract:** the prefill side owns the [`SeqKv`] until it
+/// moves this struct into the decode group's inbox
+/// (`worker::InboxMsg::InjectPrefilled`); from then on the decode worker
+/// owns it exclusively — parked in [`DpGroup::prefilled`] while the group
+/// is full (deferral, §5.1 step 6), moved into the running batch on
+/// admission, and dropped (with its pool admission released) on completion
+/// or failure. The KV is never shared between threads; the transfer is a
+/// move through the channel.
+pub struct PrefilledSeq {
+    pub req: ServeRequest,
+    pub kv: SeqKv,
+    /// First token sampled from the prefill logits.
+    pub first_token: i32,
+    pub hidden: Vec<f32>,
+}
+
 /// Snapshot the TE-shell reads (§4.3).
 #[derive(Clone, Copy, Debug)]
 pub struct DpGroupStatus {
@@ -37,6 +57,9 @@ pub struct DpGroup {
     pub id: usize,
     pub batch_limit: usize,
     pub queue: VecDeque<ServeRequest>,
+    /// Prefilled sequences injected cross-thread but not yet admitted —
+    /// the §5.1 step-6 deferral queue (decode side was full on arrival).
+    pub prefilled: VecDeque<PrefilledSeq>,
     pub running: Vec<SeqState>,
     pub pool: BlockPool,
     pub finished: Vec<ServeRequest>,
@@ -56,6 +79,7 @@ impl DpGroup {
             id,
             batch_limit,
             queue: VecDeque::new(),
+            prefilled: VecDeque::new(),
             running: Vec::new(),
             pool: BlockPool::new(kv_blocks),
             finished: Vec::new(),
@@ -72,7 +96,9 @@ impl DpGroup {
     pub fn status(&self) -> DpGroupStatus {
         DpGroupStatus {
             id: self.id,
-            queued: self.queue.len(),
+            // deferred injections count as queued: they hold future KV
+            // demand exactly like unadmitted prompts do.
+            queued: self.queue.len() + self.prefilled.len(),
             running: self.running.len(),
             batch_limit: self.batch_limit,
             kv_usage: self.pool.usage().fraction(),
@@ -85,8 +111,9 @@ impl DpGroup {
             group: self.id,
             // §4.3: the TE-shell tracks the *pending* count — updated on
             // dispatch and completion — so queued-but-not-yet-admitted
-            // requests count against the slot limit and break KV ties.
-            running: self.running.len() + self.queue.len(),
+            // requests (and deferred injections) count against the slot
+            // limit and break KV ties.
+            running: self.running.len() + self.queue.len() + self.prefilled.len(),
             batch_limit: self.batch_limit,
             kv_usage: self.pool.usage().fraction(),
             healthy: self.healthy,
@@ -97,26 +124,66 @@ impl DpGroup {
         self.queue.push_back(req);
     }
 
+    /// Park a cross-thread injection until [`Self::admit_prefilled`] can
+    /// place it (the decode worker's inbox drain lands here).
+    pub fn enqueue_prefilled(&mut self, seq: PrefilledSeq) {
+        self.prefilled.push_back(seq);
+    }
+
     /// Inject a sequence whose prefill (and KV) was produced elsewhere —
-    /// the PD-disaggregated entry path (§5.1 step 8).
-    pub fn inject_prefilled(
-        &mut self,
-        mut req: ServeRequest,
-        kv: SeqKv,
-        first_token: i32,
-        hidden: Vec<f32>,
-        now_ns: u64,
-    ) -> Result<()> {
-        self.pool
-            .admit(req.id, kv.len, req.max_new_tokens)?;
+    /// the PD-disaggregated entry path (§5.1 step 8). On KV-admission
+    /// failure the request is recorded as `Failed` (with its `Finished`
+    /// event) and the error returned; the KV blob is dropped either way
+    /// once the sequence leaves the running set.
+    pub fn inject_prefilled(&mut self, seq: PrefilledSeq, now_ns: u64) -> Result<()> {
+        let PrefilledSeq { mut req, kv, first_token, hidden } = seq;
+        if let Err(e) = self.pool.admit(req.id, kv.len, req.max_new_tokens) {
+            self.fail_request(req, now_ns);
+            return Err(e);
+        }
         req.state = RequestState::Decoding;
         req.generated.push(first_token);
         req.timing.first_token_ns = now_ns;
-        req.timing.prefill_done_ns = now_ns;
+        // The prefill worker stamps completion time before the handoff;
+        // only fill it in for callers that injected directly.
+        if req.timing.prefill_done_ns == 0 {
+            req.timing.prefill_done_ns = now_ns;
+        }
         req.timing.tokens_out = 1;
         self.emit(OutputEvent::Token { req_id: req.id, token: first_token });
         self.running.push(SeqState { req, kv, feed: first_token, hidden });
         Ok(())
+    }
+
+    /// Admit deferred injections while the batch and KV pool have room —
+    /// the §5.1 step-6 retry. Returns how many sequences left the deferral
+    /// queue this call (admitted or terminally failed); a sequence that
+    /// still lacks capacity stays parked for the next tick.
+    pub fn admit_prefilled(&mut self, now_ns: u64) -> usize {
+        let mut progressed = 0;
+        while self.running.len() < self.batch_limit {
+            let Some(front) = self.prefilled.front() else { break };
+            if !self.pool.can_admit(front.kv.len, front.req.max_new_tokens) {
+                // With nothing running there is no admission left to free:
+                // this KV can never fit the group's pool, so deferring
+                // again would hang the stream forever — fail it terminally
+                // (pre-deferral inject_prefilled rejected it immediately).
+                if self.running.is_empty() {
+                    let seq = self.prefilled.pop_front().unwrap();
+                    self.fail_request(seq.req, now_ns);
+                    progressed += 1;
+                    continue;
+                }
+                break; // deferral: retry next tick once running work frees capacity
+            }
+            let seq = self.prefilled.pop_front().unwrap();
+            // can_admit passed, so an admit error here is terminal for the
+            // request (e.g. duplicate id) — inject_prefilled already failed
+            // it; either way the sequence made progress off the queue.
+            let _ = self.inject_prefilled(seq, now_ns);
+            progressed += 1;
+        }
+        progressed
     }
 
     fn emit(&self, ev: OutputEvent) {
@@ -290,7 +357,7 @@ impl DpGroup {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.running.is_empty()
+        self.queue.is_empty() && self.prefilled.is_empty() && self.running.is_empty()
     }
 }
 
@@ -332,15 +399,23 @@ mod tests {
         assert_eq!(g.running[0].req.id, 2);
     }
 
+    fn prefilled(id: u64, kv_len: usize, max_new: usize) -> PrefilledSeq {
+        let mut kv = SeqKv::empty(4, 160, 32, 16);
+        kv.len = kv_len;
+        PrefilledSeq {
+            req: ServeRequest::new(id, vec![0; kv_len], max_new, 100),
+            kv,
+            first_token: 42,
+            hidden: vec![0.0; 128],
+        }
+    }
+
     #[test]
     fn inject_prefilled_tracks_pool_and_emits() {
         let (tx, rx) = mpsc::channel();
         let mut g = DpGroup::new(0, 8, 64);
         g.out_tx = Some(tx);
-        let mut kv = SeqKv::empty(4, 160, 32, 16);
-        kv.len = 10;
-        let req = ServeRequest::new(9, vec![0; 10], 4, 100);
-        g.inject_prefilled(req, kv, 42, vec![0.0; 128], 555).unwrap();
+        g.inject_prefilled(prefilled(9, 10, 4), 555).unwrap();
         assert_eq!(g.running.len(), 1);
         assert!(g.pool.usage().used_blocks > 0);
         assert_eq!(
@@ -348,5 +423,81 @@ mod tests {
             OutputEvent::Token { req_id: 9, token: 42 }
         );
         assert_eq!(g.running[0].req.timing.first_token_ns, 555);
+        // caller injected directly (no prefill stamp) → stamped at inject
+        assert_eq!(g.running[0].req.timing.prefill_done_ns, 555);
+    }
+
+    #[test]
+    fn inject_preserves_prefill_completion_stamp() {
+        let mut g = DpGroup::new(0, 8, 64);
+        let mut seq = prefilled(1, 4, 2);
+        seq.req.timing.prefill_done_ns = 300; // stamped by the prefill worker
+        g.inject_prefilled(seq, 900).unwrap();
+        let t = &g.running[0].req.timing;
+        assert_eq!(t.prefill_done_ns, 300);
+        assert_eq!(t.first_token_ns, 900, "handoff latency = 600 ns here");
+    }
+
+    #[test]
+    fn full_group_defers_then_retries_injections() {
+        // pool of 2 blocks holds exactly one short sequence (1 prompt block
+        // + 1 reservation block), so the second injection must defer.
+        let mut g = DpGroup::new(0, 8, 2);
+        g.enqueue_prefilled(prefilled(1, 4, 4));
+        g.enqueue_prefilled(prefilled(2, 4, 4));
+        assert_eq!(g.admit_prefilled(10), 1, "only one fits");
+        assert_eq!(g.running.len(), 1);
+        assert_eq!(g.prefilled.len(), 1, "second injection deferred, not lost");
+        assert_eq!(g.status().queued, 1);
+        assert!(!g.is_idle());
+
+        // no capacity yet → still deferred
+        assert_eq!(g.admit_prefilled(20), 0);
+
+        // first sequence finishes → retry succeeds
+        let s = g.running.pop().unwrap();
+        g.pool.release(s.req.id).unwrap();
+        assert_eq!(g.admit_prefilled(30), 1);
+        assert_eq!(g.running[0].req.id, 2);
+        assert_eq!(g.running[0].req.timing.first_token_ns, 30);
+        assert!(g.prefilled.is_empty());
+    }
+
+    #[test]
+    fn never_fitting_injection_fails_instead_of_deferring_forever() {
+        // pool of 2 blocks; a 100-token KV (+4 reserve) can never fit, and
+        // with nothing running no capacity will ever free — the sequence
+        // must fail terminally (stream terminates), not park forever.
+        let mut g = DpGroup::new(0, 8, 2);
+        g.enqueue_prefilled(prefilled(1, 100, 4));
+        g.enqueue_prefilled(prefilled(2, 4, 4)); // fits fine behind it
+        assert_eq!(g.admit_prefilled(7), 2, "both leave the queue");
+        assert!(g.prefilled.is_empty());
+        assert_eq!(g.finished.len(), 1);
+        assert_eq!(g.finished[0].id, 1);
+        assert_eq!(g.finished[0].state, RequestState::Failed);
+        assert_eq!(g.running.len(), 1);
+        assert_eq!(g.running[0].req.id, 2);
+
+        // but while work is running, a too-big-for-now seq defers (the
+        // running seq's release may free enough)
+        let mut g = DpGroup::new(0, 8, 4);
+        g.enqueue_prefilled(prefilled(3, 4, 4)); // takes 2 of 4 blocks
+        assert_eq!(g.admit_prefilled(8), 1);
+        g.enqueue_prefilled(prefilled(4, 20, 4)); // needs 3 blocks, 2 free
+        assert_eq!(g.admit_prefilled(9), 0, "deferred while seq 3 runs");
+        assert_eq!(g.prefilled.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_injection_fails_terminally_without_stalling_queue() {
+        let mut g = DpGroup::new(0, 8, 64);
+        g.enqueue_prefilled(prefilled(7, 4, 2));
+        g.enqueue_prefilled(prefilled(7, 4, 2)); // duplicate id
+        g.enqueue_prefilled(prefilled(8, 4, 2));
+        assert_eq!(g.admit_prefilled(5), 3, "all three leave the queue");
+        assert_eq!(g.running.len(), 2);
+        assert_eq!(g.finished.len(), 1);
+        assert_eq!(g.finished[0].state, RequestState::Failed);
     }
 }

@@ -1,4 +1,4 @@
-//! FlowServe at SuperPod scale (DESIGN.md S5–S7, paper §4).
+//! FlowServe at SuperPod scale (DESIGN.md S5–S7, paper §4–§5).
 //!
 //! Decentralized architecture: each **DP group** is a self-contained stack
 //! (scheduler, executor, KV pool, output handling) with no cross-DP
@@ -6,23 +6,33 @@
 //! dispatching requests across DPs, triggering expert load balancing, and
 //! coordinating health checks.
 //!
-//! Two execution modes share the same [`DpGroup`] state machine:
+//! The public front-end is [`serving::ServingEngine`]: one
+//! `submit`/`drain`/`health_sweep` surface over every
+//! [`config::DeploymentMode`](crate::config::DeploymentMode) —
+//! colocated, PD-disaggregated (prefill workers injecting KV cross-thread
+//! via [`worker::InboxMsg::InjectPrefilled`]), and MoE-Attention
+//! (domain-aware routing). Underneath, the [`TeShell`] is pure routing
+//! policy over a [`dispatch::Dispatcher`] delivery backend:
 //!
-//! * **Sequential/colocated** — the caller owns the groups and ticks them
-//!   on one thread (`TeShell::dispatch` + `DpGroup::admit_from_queue` /
-//!   `DpGroup::decode_iteration`); used by the artifact-backed examples.
-//! * **Decentralized** ([`worker`]) — one OS thread per group running its
-//!   own tick loop, publishing snapshots to the lock-light
-//!   [`status_board::StatusBoard`] that the shell reads *stale-tolerantly*
-//!   for routing (`TeShell::dispatch_decentralized`), with straggler
-//!   mitigation: EWMA-penalized + hard-demoting routing
+//! * [`dispatch::SyncGroups`] — the caller owns the groups and ticks them
+//!   on one thread (`DpGroup::admit_from_queue` /
+//!   `DpGroup::decode_iteration`); used by router unit tests.
+//! * [`dispatch::RuntimeDispatch`] — one OS thread per group ([`worker`])
+//!   running its own tick loop, publishing snapshots to the lock-light
+//!   [`status_board::StatusBoard`] that the shell reads *stale-tolerantly*,
+//!   with straggler mitigation
 //!   ([`decode_sched::choose_group_straggler_aware`]) and publish-epoch
 //!   heartbeats (`reliability::heartbeat::GroupPulseMonitor`).
+//! * the PD dispatcher (inside [`serving`]) — routes the decode group,
+//!   then delivers to a `disagg::pd::PrefillPlane` worker that injects
+//!   the prefilled KV into that group's inbox (§5.1 step 8).
 
 pub mod request;
 pub mod dp_group;
 pub mod status_board;
+pub mod dispatch;
 pub mod te_shell;
+pub mod serving;
 pub mod prefill_sched;
 pub mod decode_sched;
 pub mod batching;
@@ -30,8 +40,12 @@ pub mod gc;
 pub mod output;
 pub mod worker;
 
-pub use dp_group::{DpGroup, DpGroupStatus};
+pub use dispatch::{AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch, SyncGroups};
+pub use dp_group::{DpGroup, DpGroupStatus, PrefilledSeq};
 pub use request::{RequestState, ServeRequest};
+pub use serving::{ServingEngine, ServingEngineBuilder};
 pub use status_board::{BoardEntry, StatusBoard};
 pub use te_shell::TeShell;
-pub use worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+pub use worker::{
+    engine_model_factory, DecentralizedRuntime, GroupSpec, InboxMsg, Injector, ModelFactory,
+};

@@ -1,0 +1,575 @@
+//! [`ServingEngine`]: the unified deployment-mode front-end.
+//!
+//! One `submit(req)` / `drain()` / `health_sweep()` surface serves every
+//! Transformerless deployment (§5, Fig 16), selected by
+//! [`DeploymentMode`]:
+//!
+//! * **Colocated** — requests go straight to decode DP-group worker
+//!   threads, which run their own prompt prefill (§4.2).
+//! * **PdDisaggregated** — requests go to a [`PrefillPlane`] worker
+//!   (length-aware, load-balanced §5.1 step 1); the prefilled KV is handed
+//!   off cross-thread into the routed decode group's inbox
+//!   (`InboxMsg::InjectPrefilled`, step 8), deferring inside the group
+//!   when it is full (step 6).
+//! * **MoeAttn** — colocated-style serving with §5.2 domain-aware routing:
+//!   traffic balances across DP domains first, then §4.3 picks within.
+//!
+//! Behind every mode sits the same decentralized runtime
+//! ([`DecentralizedRuntime`]), the same routing shell ([`TeShell`] over a
+//! [`Dispatcher`]), the same `serving.dp_queue_limit` admission, and the
+//! same publish-epoch health plane.
+
+use std::sync::mpsc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{DeploymentMode, ServingConfig};
+use crate::coordinator::decode_sched::GroupLoadView;
+use crate::coordinator::dispatch::{
+    AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch,
+};
+use crate::coordinator::dp_group::DpGroup;
+use crate::coordinator::output::OutputEvent;
+use crate::coordinator::request::ServeRequest;
+use crate::coordinator::te_shell::TeShell;
+use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+use crate::disagg::pd::{choose_prefill_te, PrefillJob, PrefillPlane, PrefillWorkerSpec};
+use crate::reliability::heartbeat::GroupPulseMonitor;
+use crate::workload::straggler::StragglerProfile;
+
+/// Default long-sequence threshold for prefill placement (§7.2).
+pub const DEFAULT_LONG_SEQ_THRESHOLD: usize = 32_000;
+
+/// Default pulse-monitor parameters for [`ServingEngine::health_sweep`]:
+/// a healthy worker publishes at least every 4 ms (idle backoff cap), so
+/// 50 ms × 3 misses is far outside normal jitter.
+pub const DEFAULT_PULSE_INTERVAL_NS: u64 = 50_000_000;
+pub const DEFAULT_PULSE_MISSES: u32 = 3;
+
+/// PD-disaggregated delivery: the shell routes the *decode* group as
+/// usual; delivery hands the request to a prefill worker that will inject
+/// into that group later. Views are corrected by the plane's in-flight
+/// counters so KV still being prefetched counts against its target group.
+struct PdDispatch<'a> {
+    runtime: &'a DecentralizedRuntime,
+    plane: &'a PrefillPlane,
+    long_seq_threshold: usize,
+}
+
+impl Dispatcher for PdDispatch<'_> {
+    fn load_views(&mut self) -> Vec<GroupLoadView> {
+        let mut views = self.runtime.load_views();
+        for (slot, v) in views.iter_mut().enumerate() {
+            v.status.running += self.plane.inflight_for_slot(slot);
+        }
+        views
+    }
+
+    fn deliver(
+        &mut self,
+        group_id: usize,
+        mut req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        // Failover loop: a submit failure retires that prefill worker from
+        // `tes()`, so each retry re-places over the remaining live workers
+        // and the loop terminates (worst case: no live worker → Err).
+        loop {
+            let tes = self.plane.tes();
+            let Ok(te) = choose_prefill_te(
+                &tes,
+                req.prompt_tokens.len(),
+                None,
+                self.long_seq_threshold,
+            ) else {
+                return Err(req);
+            };
+            match self.plane.submit(te, PrefillJob { req, decode_group: group_id }) {
+                Ok(()) => return Ok(()),
+                Err(job) => req = job.req,
+            }
+        }
+    }
+
+    fn demote(&mut self, _group_id: usize) {
+        // deliver() fails only when the *prefill* side is exhausted; the
+        // routed decode group is healthy, so demoting it on the board
+        // would be wrong (the plane already retired its dead workers).
+    }
+
+    fn tracks_inflight(&self) -> bool {
+        // the plane's in-flight counters count a delivery synchronously,
+        // so the shell must not also credit it (double count)
+        true
+    }
+}
+
+/// Builder for [`ServingEngine`]; start from [`ServingEngine::builder`].
+pub struct ServingEngineBuilder {
+    mode: DeploymentMode,
+    factory: ModelFactory,
+    serving: ServingConfig,
+    groups: Vec<GroupSpec>,
+    straggler: Option<StragglerProfile>,
+    out_tx: Option<mpsc::Sender<OutputEvent>>,
+    prefill_workers: Vec<PrefillWorkerSpec>,
+    prefill_factory: Option<ModelFactory>,
+    long_seq_threshold: usize,
+    dp_domains: usize,
+    pulse_interval_ns: u64,
+    pulse_misses: u32,
+}
+
+impl ServingEngineBuilder {
+    /// Serving-policy knobs (LB policy, straggler penalty, queue limit).
+    /// Note: per-group knobs (INT8, MTP, EWMA alpha) live on [`GroupSpec`]
+    /// — apply `GroupSpec::with_serving` yourself if you want them from
+    /// the same config.
+    pub fn serving(mut self, cfg: ServingConfig) -> Self {
+        self.serving = cfg;
+        self
+    }
+
+    /// Decode DP-group specs (one worker thread each).
+    pub fn groups(mut self, specs: Vec<GroupSpec>) -> Self {
+        self.groups = specs;
+        self
+    }
+
+    /// Convenience: `n` uniform decode groups.
+    pub fn groups_uniform(self, n: usize, batch_limit: usize, kv_blocks: usize) -> Self {
+        self.groups((0..n).map(|i| GroupSpec::new(i, batch_limit, kv_blocks)).collect())
+    }
+
+    /// Deterministic straggler/jitter injection profile.
+    pub fn straggler(mut self, profile: StragglerProfile) -> Self {
+        self.straggler = Some(profile);
+        self
+    }
+
+    /// Output-shortcut sink cloned into every decode group.
+    pub fn output(mut self, tx: mpsc::Sender<OutputEvent>) -> Self {
+        self.out_tx = Some(tx);
+        self
+    }
+
+    /// Prefill worker specs (PdDisaggregated only; defaults to one).
+    pub fn prefill_workers(mut self, specs: Vec<PrefillWorkerSpec>) -> Self {
+        self.prefill_workers = specs;
+        self
+    }
+
+    /// Separate backend factory for prefill workers (defaults to the
+    /// decode factory).
+    pub fn prefill_factory(mut self, factory: ModelFactory) -> Self {
+        self.prefill_factory = Some(factory);
+        self
+    }
+
+    /// Long-sequence threshold for §7.2 specialist placement.
+    pub fn long_seq_threshold(mut self, tokens: usize) -> Self {
+        self.long_seq_threshold = tokens;
+        self
+    }
+
+    /// DP domains for MoeAttn routing (§5.2); ignored by other modes.
+    pub fn dp_domains(mut self, domains: usize) -> Self {
+        self.dp_domains = domains.max(1);
+        self
+    }
+
+    /// Publish-epoch heartbeat bound for [`ServingEngine::health_sweep`].
+    pub fn pulse(mut self, interval_ns: u64, misses: u32) -> Self {
+        self.pulse_interval_ns = interval_ns;
+        self.pulse_misses = misses;
+        self
+    }
+
+    /// Spawn the worker threads (and, in PD mode, the prefill plane) and
+    /// assemble the engine.
+    pub fn spawn(self) -> Result<ServingEngine> {
+        if self.groups.is_empty() {
+            bail!("serving engine needs at least one decode DP group");
+        }
+        if self.mode != DeploymentMode::PdDisaggregated && !self.prefill_workers.is_empty() {
+            bail!("prefill workers are only valid in DeploymentMode::PdDisaggregated");
+        }
+        let n = self.groups.len();
+        let straggler = self.straggler.unwrap_or_else(|| StragglerProfile::none(n));
+        let runtime = DecentralizedRuntime::spawn(
+            &self.groups,
+            straggler,
+            self.out_tx,
+            self.factory.clone(),
+        )?;
+        let prefill = match self.mode {
+            DeploymentMode::PdDisaggregated => {
+                let specs = if self.prefill_workers.is_empty() {
+                    vec![PrefillWorkerSpec::new(0)]
+                } else {
+                    self.prefill_workers
+                };
+                let factory = self.prefill_factory.unwrap_or(self.factory);
+                Some(PrefillPlane::spawn(&specs, factory, runtime.injector())?)
+            }
+            _ => None,
+        };
+        let shell = TeShell::from_serving(&self.serving).with_domains(match self.mode {
+            DeploymentMode::MoeAttn => self.dp_domains,
+            _ => 1,
+        });
+        Ok(ServingEngine {
+            mode: self.mode,
+            shell,
+            runtime,
+            prefill,
+            long_seq_threshold: self.long_seq_threshold,
+            monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
+        })
+    }
+}
+
+/// The unified serving front-end: one entry point over every deployment
+/// mode, wired onto the decentralized runtime. See the module docs for the
+/// mode semantics and `disagg::pd` for the PD handoff contract.
+pub struct ServingEngine {
+    mode: DeploymentMode,
+    shell: TeShell,
+    runtime: DecentralizedRuntime,
+    prefill: Option<PrefillPlane>,
+    long_seq_threshold: usize,
+    monitor: GroupPulseMonitor,
+}
+
+impl ServingEngine {
+    pub fn builder(mode: DeploymentMode, factory: ModelFactory) -> ServingEngineBuilder {
+        ServingEngineBuilder {
+            mode,
+            factory,
+            serving: ServingConfig::default(),
+            groups: Vec::new(),
+            straggler: None,
+            out_tx: None,
+            prefill_workers: Vec::new(),
+            prefill_factory: None,
+            long_seq_threshold: DEFAULT_LONG_SEQ_THRESHOLD,
+            dp_domains: 1,
+            pulse_interval_ns: DEFAULT_PULSE_INTERVAL_NS,
+            pulse_misses: DEFAULT_PULSE_MISSES,
+        }
+    }
+
+    pub fn mode(&self) -> DeploymentMode {
+        self.mode
+    }
+
+    /// Run `f` with the shell and this mode's delivery backend — the one
+    /// place that decides which [`Dispatcher`] a deployment mode uses, so
+    /// `submit` and `drain` can never diverge.
+    fn with_dispatcher<R>(&mut self, f: impl FnOnce(&mut TeShell, &mut dyn Dispatcher) -> R) -> R {
+        match self.mode {
+            DeploymentMode::PdDisaggregated => {
+                let mut d = PdDispatch {
+                    runtime: &self.runtime,
+                    plane: self.prefill.as_ref().expect("PD engine always has a plane"),
+                    long_seq_threshold: self.long_seq_threshold,
+                };
+                f(&mut self.shell, &mut d)
+            }
+            _ => f(&mut self.shell, &mut RuntimeDispatch(&self.runtime)),
+        }
+    }
+
+    /// Submit one request: queue-limit admission, then mode-appropriate
+    /// routing and delivery. `Ok(Dispatched)`/`Ok(Parked)` on success
+    /// (parked requests are retried by [`Self::drain`]);
+    /// `Err(AdmissionError)` when the engine sheds the request — the
+    /// caller decides whether to retry later or propagate the rejection.
+    pub fn submit(
+        &mut self,
+        mut req: ServeRequest,
+    ) -> std::result::Result<DispatchOutcome, AdmissionError> {
+        if req.timing.arrival_ns == 0 {
+            let now = self.runtime.now_ns();
+            req.arrival_ns = now;
+            req.timing.arrival_ns = now;
+        }
+        self.with_dispatcher(|shell, d| shell.submit(req, d))
+    }
+
+    /// Retry parked requests; returns how many left the waiting list.
+    pub fn drain(&mut self) -> usize {
+        self.with_dispatcher(|shell, d| shell.drain(d))
+    }
+
+    /// §6.1 health sweep over the publish-epoch heartbeats: demotes groups
+    /// whose pulse stalled past the configured bound and returns their
+    /// ids. Demotion is router-level and transient.
+    pub fn health_sweep(&mut self) -> Vec<usize> {
+        self.runtime.demote_stalled(&mut self.monitor)
+    }
+
+    /// EPLB trigger (§4.2 responsibility 2).
+    pub fn tick_eplb(&mut self) -> bool {
+        self.shell.tick_eplb()
+    }
+
+    /// Requests parked under backpressure, awaiting [`Self::drain`].
+    pub fn waiting(&self) -> usize {
+        self.shell.waiting.len()
+    }
+
+    /// Requests delivered so far (excludes parked and rejected).
+    pub fn dispatched(&self) -> u64 {
+        self.shell.dispatched
+    }
+
+    /// Stale-tolerant: true when every group's last published snapshot
+    /// shows no pending work, nothing is parked, and (PD mode) no request
+    /// is still inside a prefill worker. The residual blind spot is a
+    /// message sitting in a decode inbox between its send and that
+    /// group's next publish — the same sub-tick staleness window every
+    /// colocated submission has — so pair with a settle delay or
+    /// re-check; [`Self::shutdown`] always drains that window.
+    pub fn all_idle(&self) -> bool {
+        self.runtime.all_idle()
+            && self.waiting() == 0
+            && self.prefill.as_ref().map_or(true, |p| p.inflight_total() == 0)
+    }
+
+    /// Routing views as the shell would see them (without credit folding).
+    pub fn load_views(&self) -> Vec<GroupLoadView> {
+        self.runtime.load_views()
+    }
+
+    /// The underlying decentralized runtime, for targeted operations
+    /// (direct `submit_to`, board reads, operator health flips).
+    pub fn runtime(&self) -> &DecentralizedRuntime {
+        &self.runtime
+    }
+
+    /// Nanoseconds on the runtime clock.
+    pub fn now_ns(&self) -> u64 {
+        self.runtime.now_ns()
+    }
+
+    /// Drain parked requests and wait until the engine settles (bounded):
+    /// the one retry loop every driver needs instead of hand-rolled
+    /// `waiting()`/`all_idle()` polling. Errs if the deadline passes with
+    /// work still *visibly* pending. Like every board read this is
+    /// stale-tolerant: an `Ok` can precede a group's next publish by one
+    /// sub-tick window, so [`Self::shutdown`] (which joins the workers)
+    /// remains the authoritative drain.
+    pub fn settle(&mut self, timeout: std::time::Duration) -> Result<()> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            self.drain();
+            if self.all_idle() {
+                return Ok(());
+            }
+            if std::time::Instant::now() >= deadline {
+                bail!(
+                    "serving did not settle within {timeout:?}: {} parked, views {:?}",
+                    self.waiting(),
+                    self.load_views()
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Shut down prefill first (outstanding prefills still inject: the
+    /// decode inboxes outlive the plane), then drain and join the decode
+    /// workers. Returns the groups with their finished records, sorted by
+    /// id.
+    ///
+    /// Requests still parked in the shell are handed to the runtime before
+    /// anything closes, so the drain either serves them or fails them with
+    /// their `Finished` events — a shutdown never silently drops a request
+    /// the engine accepted.
+    pub fn shutdown(mut self) -> Result<Vec<DpGroup>> {
+        let parked = std::mem::take(&mut self.shell.waiting);
+        let ids = self.runtime.group_ids();
+        for (k, req) in parked.into_iter().enumerate() {
+            let mut req = Some(req);
+            for j in 0..ids.len() {
+                let gid = ids[(k + j) % ids.len()];
+                match self.runtime.try_submit(gid, req.take().unwrap()) {
+                    Ok(()) => break,
+                    Err(r) => req = Some(r),
+                }
+            }
+            if let Some(r) = req {
+                // every worker already exited (panic): the join below
+                // reports it; nothing can accept the request anymore
+                eprintln!("serving-engine: parked request {} lost all workers", r.id);
+            }
+        }
+        let Self { runtime, prefill, .. } = self;
+        // join the prefill plane first, but never skip the decode join on
+        // a prefill error — served work must not be discarded
+        let prefill_result = match prefill {
+            Some(plane) => plane.shutdown().map(Some),
+            None => Ok(None),
+        };
+        let groups = runtime.shutdown()?;
+        match prefill_result {
+            Ok(Some(orphans)) if !orphans.is_empty() => {
+                // only reachable when a decode worker died mid-run; if it
+                // panicked the runtime join above already errored
+                eprintln!(
+                    "serving-engine: {} prefilled request(s) had no live decode group",
+                    orphans.len()
+                );
+            }
+            Ok(_) => {}
+            Err(e) => return Err(e),
+        }
+        Ok(groups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DecodeLbPolicy;
+    use crate::coordinator::request::RequestState;
+    use crate::model::{DecodeModel, SimModel};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn sim_factory() -> ModelFactory {
+        Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+    }
+
+    fn req(id: u64, max_new: usize) -> ServeRequest {
+        ServeRequest::new(id, vec![256, (id % 26) as i32 + 97], max_new, 0)
+    }
+
+    #[test]
+    fn colocated_mode_serves_end_to_end() {
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(2, 4, 256)
+            .spawn()
+            .unwrap();
+        for i in 0..6u64 {
+            engine.submit(req(i, 4)).unwrap();
+            engine.drain();
+        }
+        engine.settle(Duration::from_secs(20)).unwrap();
+        assert_eq!(engine.dispatched(), 6);
+        let groups = engine.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 6);
+        assert!(groups
+            .iter()
+            .flat_map(|g| g.finished.iter())
+            .all(|r| r.state == RequestState::Done && r.generated.len() == 4));
+    }
+
+    #[test]
+    fn pd_mode_prefills_on_plane_and_decodes_on_groups() {
+        let mut engine =
+            ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
+                .groups_uniform(2, 4, 256)
+                .prefill_workers(vec![
+                    PrefillWorkerSpec::new(0),
+                    PrefillWorkerSpec::new(1),
+                ])
+                .spawn()
+                .unwrap();
+        for i in 0..8u64 {
+            engine.submit(req(i, 5)).unwrap();
+            engine.drain();
+        }
+        engine.settle(Duration::from_secs(20)).unwrap();
+        let groups = engine.shutdown().unwrap();
+        let finished: Vec<&ServeRequest> =
+            groups.iter().flat_map(|g| g.finished.iter()).collect();
+        assert_eq!(finished.len(), 8);
+        for r in finished {
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(r.generated.len(), 5);
+            // cross-thread handoff leaves its fingerprint: prefill stamped
+            // strictly before first decode-side token
+            assert!(r.timing.prefill_done_ns > 0);
+            assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+        }
+    }
+
+    #[test]
+    fn prefill_workers_rejected_outside_pd_mode() {
+        let err = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .prefill_workers(vec![PrefillWorkerSpec::new(0)])
+            .spawn();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn queue_limit_sheds_load_at_the_engine() {
+        use crate::workload::straggler::StragglerProfile;
+        let mut cfg = ServingConfig::default();
+        cfg.dp_queue_limit = 1;
+        cfg.decode_lb = DecodeLbPolicy::LeastKv;
+        // one group, 50 ms ticks and a long output: the first request
+        // stays running for the whole test window
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(1, 4, 256)
+            .serving(cfg)
+            .straggler(StragglerProfile::uniform(1, 50_000_000))
+            .spawn()
+            .unwrap();
+        engine.submit(req(1, 64)).unwrap();
+        // capacity = 1 × 1 healthy group → the second submission sheds
+        let e = engine.submit(req(2, 4)).unwrap_err();
+        let AdmissionError::QueueFull { pending, capacity } = e;
+        assert_eq!(capacity, 1);
+        assert!(pending >= 1);
+        let groups = engine.shutdown().unwrap();
+        assert_eq!(groups[0].finished.len(), 1, "rejected request never entered");
+    }
+
+    #[test]
+    fn shutdown_fails_parked_requests_instead_of_dropping() {
+        // zero batch slots: every submission parks, and nothing can ever
+        // admit. Shutdown must surface them as Failed records (with their
+        // Finished events), not silently drop the shell's waiting list.
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups(vec![GroupSpec::new(0, 0, 64)])
+            .spawn()
+            .unwrap();
+        assert_eq!(engine.submit(req(1, 4)).unwrap(), DispatchOutcome::Parked);
+        assert_eq!(engine.submit(req(2, 4)).unwrap(), DispatchOutcome::Parked);
+        assert_eq!(engine.waiting(), 2);
+        let groups = engine.shutdown().unwrap();
+        assert_eq!(groups[0].finished.len(), 2, "parked requests surfaced");
+        assert!(groups[0]
+            .finished
+            .iter()
+            .all(|r| r.state == RequestState::Failed));
+    }
+
+    #[test]
+    fn moe_attn_mode_balances_across_domains() {
+        use crate::workload::straggler::StragglerProfile;
+        // 4 groups over 2 domains; 20 ms ticks freeze the board so the
+        // shell's credits decide the spread deterministically.
+        let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+            .groups_uniform(4, 8, 256)
+            .dp_domains(2)
+            .straggler(StragglerProfile::uniform(4, 20_000_000))
+            .spawn()
+            .unwrap();
+        let mut doms = Vec::new();
+        for i in 0..4u64 {
+            match engine.submit(req(i, 4)).unwrap() {
+                DispatchOutcome::Dispatched(g) => doms.push(g % 2),
+                DispatchOutcome::Parked => panic!("idle groups must accept"),
+            }
+        }
+        assert_eq!(doms, vec![0, 1, 0, 1], "§5.2 domain alternation");
+        let groups = engine.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 4);
+    }
+}

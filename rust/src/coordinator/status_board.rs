@@ -11,10 +11,13 @@
 //! **Staleness contract:** readers get the *last published* snapshot, not
 //! the live state — a group may have admitted or finished work since. The
 //! shell therefore (a) tracks its own sent-since-epoch credits on top of
-//! the snapshot (`TeShell::dispatch_decentralized`), (b) treats a stalled
-//! epoch as a failed heartbeat (`reliability::heartbeat::GroupPulseMonitor`),
-//! and (c) never blocks on a group: there are no cross-DP synchronous
-//! calls anywhere on the dispatch path.
+//! the snapshot (`TeShell::submit`), (b) treats a stalled epoch as a
+//! failed heartbeat (`reliability::heartbeat::GroupPulseMonitor`), and
+//! (c) never blocks on a group: there are no cross-DP synchronous calls
+//! anywhere on the dispatch path. A published `queued` count includes
+//! deferred cross-thread injections (`DpGroup::prefilled`) — KV already
+//! handed off but not yet admitted still claims pool headroom, so it must
+//! count against routing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;

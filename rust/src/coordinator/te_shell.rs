@@ -5,16 +5,22 @@
 //! (§6.1). Everything else (scheduling, output handling, caching) lives
 //! inside the DP groups; request dispatch happens **once per request**,
 //! which is what keeps the shell off the scaling-critical path.
+//!
+//! The shell is pure *routing policy*: one [`TeShell::submit`] path routes
+//! over any [`Dispatcher`] backend — synchronous colocated groups, the
+//! decentralized worker runtime, or the PD prefill plane — folding its
+//! stale-tolerant sent-since-epoch credits over whatever views the backend
+//! provides, enforcing `serving.dp_queue_limit` admission, and applying
+//! straggler-aware (§4.4) and domain-aware (§5.2) selection.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
-
 use crate::config::DecodeLbPolicy;
-use crate::coordinator::decode_sched::{choose_group, choose_group_straggler_aware, GroupStatus};
-use crate::coordinator::dp_group::DpGroup;
+use crate::coordinator::decode_sched::{
+    choose_group_straggler_aware, filter_least_loaded_domain, GroupLoadView,
+};
+use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::request::ServeRequest;
-use crate::coordinator::worker::DecentralizedRuntime;
 
 /// Requests dispatched to a group since a given status-board epoch — the
 /// shell's §4.3 "pending count" on top of stale snapshots: a snapshot only
@@ -40,6 +46,15 @@ pub struct TeShell {
     /// Straggler-penalty weight for decentralized dispatch (§4.4); 0
     /// disables both the soft penalty and hard demotion.
     pub straggler_penalty: f64,
+    /// Shell-side admission bound (`serving.dp_queue_limit`): aggregate
+    /// pending load is capped at this many requests per healthy group;
+    /// beyond it `submit` rejects with [`AdmissionError::QueueFull`].
+    /// 0 disables admission control.
+    pub dp_queue_limit: usize,
+    /// DP domains for §5.2 domain-aware routing (1 = off): traffic goes to
+    /// the least-loaded domain first, then the §4.3 policy picks within.
+    pub dp_domains: usize,
+    rr_domain: usize,
     credits: HashMap<usize, StaleCredit>,
 }
 
@@ -53,6 +68,9 @@ impl TeShell {
             eplb_interval: 512,
             iterations_since_eplb: 0,
             straggler_penalty: 0.5,
+            dp_queue_limit: 0,
+            dp_domains: 1,
+            rr_domain: 0,
             credits: HashMap::new(),
         }
     }
@@ -62,51 +80,30 @@ impl TeShell {
         self
     }
 
-    /// Build a shell from the §4 serving config (LB policy + straggler
-    /// penalty weight).
+    /// Enable queue-limit admission (0 disables).
+    pub fn with_queue_limit(mut self, limit: usize) -> Self {
+        self.dp_queue_limit = limit;
+        self
+    }
+
+    /// Enable §5.2 domain-aware routing over `domains` DP domains.
+    pub fn with_domains(mut self, domains: usize) -> Self {
+        self.dp_domains = domains.max(1);
+        self
+    }
+
+    /// Build a shell from the §4 serving config (LB policy, straggler
+    /// penalty weight, queue-limit admission).
     pub fn from_serving(cfg: &crate::config::ServingConfig) -> Self {
-        TeShell::new(cfg.decode_lb).with_straggler_penalty(cfg.straggler_penalty)
+        TeShell::new(cfg.decode_lb)
+            .with_straggler_penalty(cfg.straggler_penalty)
+            .with_queue_limit(cfg.dp_queue_limit)
     }
 
-    /// Dispatch one request to a DP group (or park it under backpressure).
-    /// Colocated/sequential mode: the shell holds the groups directly.
-    pub fn dispatch(&mut self, req: ServeRequest, groups: &mut [DpGroup]) -> Result<()> {
-        let statuses: Vec<GroupStatus> = groups.iter().map(|g| g.as_group_status()).collect();
-        match choose_group(&statuses, self.policy, &mut self.rr_counter) {
-            Some(gid) => {
-                let g = groups
-                    .iter_mut()
-                    .find(|g| g.id == gid)
-                    .ok_or_else(|| anyhow!("router chose unknown DP group {gid}"))?;
-                g.enqueue(req);
-                self.dispatched += 1;
-            }
-            None => self.waiting.push(req),
-        }
-        Ok(())
-    }
-
-    /// Retry parked requests (called each scheduling tick).
-    pub fn drain_waiting(&mut self, groups: &mut [DpGroup]) -> Result<usize> {
-        let parked = std::mem::take(&mut self.waiting);
-        let n = parked.len();
-        for req in parked {
-            self.dispatch(req, groups)?;
-        }
-        Ok(n.saturating_sub(self.waiting.len()))
-    }
-
-    /// Dispatch against the decentralized runtime (§4.2–4.4): route off a
-    /// stale-tolerant status-board snapshot — corrected by the shell's own
-    /// sent-since-epoch credits — with straggler-aware penalties, then hand
-    /// the request to the chosen group's inbox. No cross-DP synchronous
-    /// calls: this never waits on a worker.
-    pub fn dispatch_decentralized(
-        &mut self,
-        req: ServeRequest,
-        rt: &DecentralizedRuntime,
-    ) -> Result<()> {
-        let mut views = rt.load_views();
+    /// Backend views with the shell's stale credits folded in: what routing
+    /// and admission decisions are made against.
+    fn folded_views(&mut self, d: &mut dyn Dispatcher) -> Vec<GroupLoadView> {
+        let mut views = d.load_views();
         for v in views.iter_mut() {
             let c = self
                 .credits
@@ -125,59 +122,96 @@ impl TeShell {
             }
             v.status.running += c.sent;
         }
+        views
+    }
+
+    /// Submit one request through admission + routing + delivery. `Ok` both
+    /// when delivered and when parked under transient backpressure;
+    /// `Err(AdmissionError)` when `dp_queue_limit` admission sheds the
+    /// request — the caller owns rejection handling (the request is *not*
+    /// parked).
+    pub fn submit(
+        &mut self,
+        req: ServeRequest,
+        d: &mut dyn Dispatcher,
+    ) -> Result<DispatchOutcome, AdmissionError> {
+        let views = self.folded_views(d);
+        if self.dp_queue_limit > 0 {
+            let healthy = views.iter().filter(|v| v.status.healthy).count();
+            let pending = self.waiting.len()
+                + views
+                    .iter()
+                    .filter(|v| v.status.healthy)
+                    .map(|v| v.status.running)
+                    .sum::<usize>();
+            // healthy == 0 ⇒ capacity 0 ⇒ reject: a total outage must
+            // shed load, not park an unbounded backlog that floods the
+            // groups the moment they recover.
+            let capacity = self.dp_queue_limit * healthy;
+            if pending >= capacity {
+                return Err(AdmissionError::QueueFull { pending, capacity });
+            }
+        }
+        Ok(self.route(req, views, d))
+    }
+
+    /// Routing + delivery for an already-admitted request (parked requests
+    /// re-enter here so a drain can never be admission-rejected).
+    fn route(
+        &mut self,
+        req: ServeRequest,
+        mut views: Vec<GroupLoadView>,
+        d: &mut dyn Dispatcher,
+    ) -> DispatchOutcome {
+        if self.dp_domains > 1 {
+            views = filter_least_loaded_domain(views, self.dp_domains, &mut self.rr_domain);
+        }
         match choose_group_straggler_aware(
             &views,
             self.policy,
             &mut self.rr_counter,
             self.straggler_penalty,
         ) {
-            Some(gid) => match rt.try_submit(gid, req) {
+            Some(gid) => match d.deliver(gid, req) {
                 Ok(()) => {
-                    if let Some(c) = self.credits.get_mut(&gid) {
-                        c.sent += 1;
+                    // Backends whose views already count the delivery (PD
+                    // in-flight counters) must not get a credit on top.
+                    if !d.tracks_inflight() {
+                        if let Some(c) = self.credits.get_mut(&gid) {
+                            c.sent += 1;
+                        }
                     }
                     self.dispatched += 1;
+                    DispatchOutcome::Dispatched(gid)
                 }
                 // Worker died since the board's last publish (the pulse
                 // monitor takes a few intervals to notice): demote it so
                 // routing stops picking it and re-park the request instead
                 // of losing it.
                 Err(req) => {
-                    rt.demote(gid);
+                    d.demote(gid);
                     self.waiting.push(req);
+                    DispatchOutcome::Parked
                 }
             },
-            None => self.waiting.push(req),
+            None => {
+                self.waiting.push(req);
+                DispatchOutcome::Parked
+            }
         }
-        Ok(())
     }
 
-    /// Retry parked requests against the decentralized runtime.
-    pub fn drain_waiting_decentralized(&mut self, rt: &DecentralizedRuntime) -> Result<usize> {
+    /// Retry parked requests (called each scheduling tick). Bypasses
+    /// queue-limit admission: parked requests were admitted when first
+    /// submitted. Returns how many left the waiting list.
+    pub fn drain(&mut self, d: &mut dyn Dispatcher) -> usize {
         let parked = std::mem::take(&mut self.waiting);
         let n = parked.len();
         for req in parked {
-            self.dispatch_decentralized(req, rt)?;
+            let views = self.folded_views(d);
+            self.route(req, views, d);
         }
-        Ok(n.saturating_sub(self.waiting.len()))
-    }
-
-    /// Health-check sweep (§6.1 responsibility 3): returns ids of groups
-    /// that failed their heartbeat predicate.
-    pub fn health_sweep<F: Fn(&DpGroup) -> bool>(
-        &self,
-        groups: &mut [DpGroup],
-        responsive: F,
-    ) -> Vec<usize> {
-        let mut failed = Vec::new();
-        for g in groups.iter_mut() {
-            let ok = responsive(g);
-            if !ok {
-                g.healthy = false;
-                failed.push(g.id);
-            }
-        }
-        failed
+        n.saturating_sub(self.waiting.len())
     }
 
     /// EPLB trigger (§4.2 responsibility 2): true when a re-balance is due.
@@ -195,6 +229,8 @@ impl TeShell {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::dispatch::SyncGroups;
+    use crate::coordinator::dp_group::DpGroup;
 
     fn groups(n: usize, limit: usize) -> Vec<DpGroup> {
         (0..n).map(|i| DpGroup::new(i, limit, 1024)).collect()
@@ -205,12 +241,13 @@ mod tests {
     }
 
     #[test]
-    fn dispatch_lands_on_least_loaded() {
+    fn submit_lands_on_least_loaded() {
         let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
         let mut gs = groups(3, 4);
         // occupy group 0's pool a bit
         gs[0].pool.admit(99, 64, 0).unwrap();
-        shell.dispatch(req(1), &mut gs).unwrap();
+        let out = shell.submit(req(1), &mut SyncGroups::new(&mut gs)).unwrap();
+        assert!(matches!(out, DispatchOutcome::Dispatched(g) if g != 0));
         assert_eq!(gs[0].queue.len() + gs[1].queue.len() + gs[2].queue.len(), 1);
         assert_eq!(gs[0].queue.len(), 0, "loaded group skipped");
     }
@@ -219,23 +256,145 @@ mod tests {
     fn backpressure_parks_requests_and_drains_later() {
         let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
         let mut gs = groups(1, 0); // zero slots → always full
-        shell.dispatch(req(1), &mut gs).unwrap();
+        let out = shell.submit(req(1), &mut SyncGroups::new(&mut gs)).unwrap();
+        assert_eq!(out, DispatchOutcome::Parked);
         assert_eq!(shell.waiting.len(), 1);
         // capacity appears
         gs[0].batch_limit = 2;
-        shell.drain_waiting(&mut gs).unwrap();
+        shell.drain(&mut SyncGroups::new(&mut gs));
         assert_eq!(shell.waiting.len(), 0);
         assert_eq!(gs[0].queue.len(), 1);
     }
 
     #[test]
-    fn health_sweep_marks_unresponsive() {
-        let shell = TeShell::new(DecodeLbPolicy::LeastKv);
-        let mut gs = groups(3, 4);
-        let failed = shell.health_sweep(&mut gs, |g| g.id != 1);
-        assert_eq!(failed, vec![1]);
-        assert!(!gs[1].healthy);
-        assert!(gs[0].healthy && gs[2].healthy);
+    fn queue_limit_rejects_with_typed_error() {
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_queue_limit(2);
+        let mut gs = groups(2, 1);
+        // capacity = 2 per group × 2 groups = 4; fill it
+        for i in 0..4u64 {
+            shell.submit(req(i), &mut SyncGroups::new(&mut gs)).unwrap();
+        }
+        // 2 delivered into batch slots, 2 parked — all 4 count as pending
+        assert_eq!(shell.waiting.len() + gs[0].queue.len() + gs[1].queue.len(), 4);
+        let e = shell
+            .submit(req(9), &mut SyncGroups::new(&mut gs))
+            .unwrap_err();
+        let AdmissionError::QueueFull { pending, capacity } = e;
+        assert_eq!(pending, 4);
+        assert_eq!(capacity, 4);
+        // rejected request is nowhere: not parked, not queued
+        assert_eq!(shell.waiting.len() + gs[0].queue.len() + gs[1].queue.len(), 4);
+
+        // an unhealthy group stops contributing capacity
+        gs[1].healthy = false;
+        let e = shell
+            .submit(req(10), &mut SyncGroups::new(&mut gs))
+            .unwrap_err();
+        let AdmissionError::QueueFull { capacity, .. } = e;
+        assert_eq!(capacity, 2, "only the healthy group's share remains");
+    }
+
+    #[test]
+    fn total_outage_sheds_instead_of_parking_unbounded() {
+        // Every group unhealthy: capacity is 0, so admission must reject
+        // (shed) rather than park an unbounded backlog that would flood
+        // the groups on recovery.
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_queue_limit(4);
+        let mut gs = groups(2, 4);
+        gs[0].healthy = false;
+        gs[1].healthy = false;
+        let e = shell
+            .submit(req(1), &mut SyncGroups::new(&mut gs))
+            .unwrap_err();
+        let AdmissionError::QueueFull { pending, capacity } = e;
+        assert_eq!((pending, capacity), (0, 0));
+        assert!(shell.waiting.is_empty(), "rejected, not parked");
+        // with admission disabled, the old park-under-outage behavior
+        // remains available
+        let mut open_shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        open_shell.submit(req(2), &mut SyncGroups::new(&mut gs)).unwrap();
+        assert_eq!(open_shell.waiting.len(), 1);
+    }
+
+    #[test]
+    fn drain_bypasses_admission() {
+        // Parked requests were already admitted: a full system must not
+        // admission-reject them on retry, only keep them parked.
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_queue_limit(1);
+        let mut gs = groups(1, 0);
+        shell.submit(req(1), &mut SyncGroups::new(&mut gs)).unwrap();
+        assert_eq!(shell.waiting.len(), 1);
+        assert_eq!(shell.drain(&mut SyncGroups::new(&mut gs)), 0);
+        assert_eq!(shell.waiting.len(), 1, "still parked, not dropped");
+        gs[0].batch_limit = 1;
+        assert_eq!(shell.drain(&mut SyncGroups::new(&mut gs)), 1);
+    }
+
+    #[test]
+    fn domain_aware_routing_alternates_domains() {
+        // 4 groups, 2 domains (d0 = {0,2}, d1 = {1,3}): consecutive
+        // submissions into an idle system must alternate domains.
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_domains(2);
+        let mut gs = groups(4, 8);
+        let mut doms = Vec::new();
+        for i in 0..4u64 {
+            match shell.submit(req(i), &mut SyncGroups::new(&mut gs)).unwrap() {
+                DispatchOutcome::Dispatched(g) => doms.push(g % 2),
+                DispatchOutcome::Parked => panic!("idle groups must accept"),
+            }
+        }
+        assert_eq!(doms, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn inflight_tracking_backends_get_no_double_credit() {
+        // A backend whose views already count deliveries synchronously
+        // (the PD plane) must not ALSO receive shell credits, or every
+        // delivered-but-unpublished request counts twice against both
+        // routing and queue-limit admission.
+        use crate::coordinator::decode_sched::GroupStatus;
+
+        struct StubInflight {
+            delivered: usize,
+        }
+        impl Dispatcher for StubInflight {
+            fn load_views(&mut self) -> Vec<GroupLoadView> {
+                vec![GroupLoadView {
+                    status: GroupStatus {
+                        group: 0,
+                        running: self.delivered, // synchronous in-flight count
+                        batch_limit: 8,
+                        kv_usage: 0.0,
+                        healthy: true,
+                    },
+                    tick_ewma_ns: 0,
+                    epoch: 1, // frozen epoch: credits would never reset
+                }]
+            }
+            fn deliver(
+                &mut self,
+                _g: usize,
+                _req: ServeRequest,
+            ) -> std::result::Result<(), ServeRequest> {
+                self.delivered += 1;
+                Ok(())
+            }
+            fn tracks_inflight(&self) -> bool {
+                true
+            }
+        }
+
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_queue_limit(2);
+        let mut d = StubInflight { delivered: 0 };
+        shell.submit(req(1), &mut d).unwrap();
+        // with a double count this second submit would see pending 2
+        // (1 in-flight + 1 credit) and be shed at half the limit
+        let out = shell.submit(req(2), &mut d).unwrap();
+        assert_eq!(out, DispatchOutcome::Dispatched(0));
+        // the true limit still enforces
+        let e = shell.submit(req(3), &mut d).unwrap_err();
+        let AdmissionError::QueueFull { pending, capacity } = e;
+        assert_eq!((pending, capacity), (2, 2));
     }
 
     #[test]
@@ -253,6 +412,7 @@ mod tests {
         // Fire a burst faster than workers can republish: without the
         // sent-since-epoch credits every request would land on the same
         // "empty" group; with them the burst splits evenly.
+        use crate::coordinator::dispatch::RuntimeDispatch;
         use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
@@ -274,7 +434,10 @@ mod tests {
         let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
         for i in 0..4u64 {
             shell
-                .dispatch_decentralized(ServeRequest::new(i, vec![256, 1, 2], 8, 0), &rt)
+                .submit(
+                    ServeRequest::new(i, vec![256, 1, 2], 8, 0),
+                    &mut RuntimeDispatch(&rt),
+                )
                 .unwrap();
         }
         assert_eq!(shell.dispatched, 4);
@@ -298,10 +461,12 @@ mod tests {
         cfg.tick_ewma_alpha = 0.5;
         cfg.int8 = false;
         cfg.mtp_layers = 0;
+        cfg.dp_queue_limit = 77;
         cfg.decode_lb = DecodeLbPolicy::RoundRobin;
 
         let shell = TeShell::from_serving(&cfg);
         assert_eq!(shell.straggler_penalty, 1.25);
+        assert_eq!(shell.dp_queue_limit, 77);
         assert_eq!(shell.policy, DecodeLbPolicy::RoundRobin);
 
         let spec = GroupSpec::new(3, 8, 64).with_serving(&cfg);
@@ -320,10 +485,12 @@ mod tests {
         // drain that demotes itself on the board, routing flows to the
         // live group, and anything forced onto the dead group comes back
         // as a Failed record instead of vanishing.
+        use crate::coordinator::dispatch::RuntimeDispatch;
         use crate::coordinator::request::RequestState;
         use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
+        use anyhow::anyhow;
         use std::sync::Arc;
         use std::time::{Duration, Instant};
 
@@ -350,7 +517,7 @@ mod tests {
         }
         // routed dispatch avoids the demoted group
         let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
-        shell.dispatch_decentralized(req(1), &rt).unwrap();
+        shell.submit(req(1), &mut RuntimeDispatch(&rt)).unwrap();
         assert_eq!(shell.dispatched, 1);
         assert!(shell.waiting.is_empty());
         // force one request onto the dead group: accepted, then Failed

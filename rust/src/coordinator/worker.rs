@@ -1,13 +1,17 @@
 //! Decentralized multi-threaded DP-group runtime (§4.2–4.4).
 //!
 //! Each [`DpGroup`] runs on its own OS thread as a self-contained tick
-//! loop — command inbox → prefill admission → continuous-batched decode →
-//! output shortcut — and publishes its status to the shared
-//! [`StatusBoard`] after every tick. Nothing on the serving path makes a
-//! cross-DP call: the TE-shell routes off stale-tolerant board snapshots
-//! (`TeShell::dispatch_decentralized`), and the only signal back is the
-//! board publish itself, whose epoch doubles as the group's heartbeat
-//! pulse (`reliability::heartbeat::GroupPulseMonitor`).
+//! loop — inbox → deferred-injection retry → prefill admission →
+//! continuous-batched decode → output shortcut — and publishes its status
+//! to the shared [`StatusBoard`] after every tick. Nothing on the serving
+//! path makes a cross-DP call: the TE-shell routes off stale-tolerant
+//! board snapshots (`TeShell::submit` over a `dispatch::Dispatcher`), and
+//! the only signal back is the board publish itself, whose epoch doubles
+//! as the group's heartbeat pulse
+//! (`reliability::heartbeat::GroupPulseMonitor`). In PD-disaggregated
+//! mode, prefill workers reach the same inboxes through an [`Injector`]
+//! (`InboxMsg::InjectPrefilled` — the §5.1 step-8 cross-thread KV
+//! handoff).
 //!
 //! Straggler pressure is injected deterministically through a
 //! [`StragglerProfile`] (per-`(group, tick)` delay), which is how the
@@ -20,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::dp_group::{DpGroup, DpGroupStatus, SeqState};
+use crate::coordinator::dp_group::{DpGroup, DpGroupStatus, PrefilledSeq, SeqState};
 use crate::coordinator::output::OutputEvent;
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::status_board::{BoardEntry, StatusBoard};
@@ -44,10 +48,21 @@ pub const IDLE_PARK_MAX: Duration = Duration::from_millis(4);
 /// penalized forever on one bad tick.
 pub const IDLE_EWMA_DECAY: f64 = 0.98;
 
-/// Commands a worker accepts from the shell. Workers drain and exit when
-/// the runtime drops the sending side (shutdown).
-pub enum GroupCommand {
+/// Messages a worker accepts on its inbox — from the shell (dispatch,
+/// health) and from prefill workers (§5.1 cross-thread KV handoff).
+/// Workers drain and exit when the runtime drops the sending side
+/// (shutdown).
+pub enum InboxMsg {
+    /// A raw request: the worker runs prefill locally (colocated mode).
     Submit(ServeRequest),
+    /// A prefilled sequence handed off by a prefill worker: ownership of
+    /// the KV moves with the message (see [`PrefilledSeq`]); the decode
+    /// group admits it — or defers it in `DpGroup::prefilled` until
+    /// capacity frees (§5.1 step 6).
+    InjectPrefilled(PrefilledSeq),
+    /// The prefill side failed this request before any KV existed; the
+    /// decode group records it Failed so stream consumers get `Finished`.
+    FailPrefilled(ServeRequest),
     SetHealthy(bool),
 }
 
@@ -88,10 +103,83 @@ impl GroupSpec {
 /// `!Sync`, e.g. a PJRT engine with lazily-compiled executables).
 pub type ModelFactory = Arc<dyn Fn(usize) -> Result<Box<dyn DecodeModel>> + Send + Sync>;
 
+/// [`ModelFactory`] that loads one artifact-backed PJRT engine per worker
+/// thread from `dir` — the standard factory for every artifact-driven
+/// surface (CLI, examples, artifact-gated tests).
+pub fn engine_model_factory(dir: impl Into<String>) -> ModelFactory {
+    let dir = dir.into();
+    Arc::new(move |_| {
+        Ok(Box::new(crate::model::OwnedEngineModel::load(&dir)?) as Box<dyn DecodeModel>)
+    })
+}
+
 struct GroupHandle {
     id: usize,
-    tx: mpsc::Sender<GroupCommand>,
+    tx: mpsc::Sender<InboxMsg>,
     join: thread::JoinHandle<DpGroup>,
+}
+
+/// Cloneable cross-thread handle into the decode groups' inboxes: what a
+/// prefill worker uses to hand off KV (§5.1 step 8) without holding the
+/// runtime itself. Sends never block; a send only fails once the target
+/// worker has exited, in which case the payload is handed back.
+#[derive(Clone)]
+pub struct Injector {
+    txs: Arc<Vec<(usize, mpsc::Sender<InboxMsg>)>>,
+    start: Instant,
+}
+
+impl Injector {
+    /// Nanoseconds on the runtime clock (what workers stamp timings with).
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// Board-slot index of a decode group id (slot order == view order).
+    pub fn slot_of(&self, group_id: usize) -> Option<usize> {
+        self.txs.iter().position(|(id, _)| *id == group_id)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Decode group ids reachable through this injector (slot order).
+    pub fn group_ids(&self) -> Vec<usize> {
+        self.txs.iter().map(|(id, _)| *id).collect()
+    }
+
+    /// Move a prefilled sequence into `group_id`'s inbox. On failure the
+    /// caller gets the sequence back (KV ownership returns to it).
+    pub fn inject_prefilled(
+        &self,
+        group_id: usize,
+        seq: PrefilledSeq,
+    ) -> std::result::Result<(), PrefilledSeq> {
+        let Some((_, tx)) = self.txs.iter().find(|(id, _)| *id == group_id) else {
+            return Err(seq);
+        };
+        tx.send(InboxMsg::InjectPrefilled(seq)).map_err(|e| match e.0 {
+            InboxMsg::InjectPrefilled(s) => s,
+            _ => unreachable!("only InjectPrefilled is sent here"),
+        })
+    }
+
+    /// Report a prefill-side failure so the decode group fails the request
+    /// (and emits its `Finished` event) instead of it vanishing.
+    pub fn fail_prefilled(
+        &self,
+        group_id: usize,
+        req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        let Some((_, tx)) = self.txs.iter().find(|(id, _)| *id == group_id) else {
+            return Err(req);
+        };
+        tx.send(InboxMsg::FailPrefilled(req)).map_err(|e| match e.0 {
+            InboxMsg::FailPrefilled(r) => r,
+            _ => unreachable!("only FailPrefilled is sent here"),
+        })
+    }
 }
 
 /// Handle over the spawned group threads + the shared status board.
@@ -184,6 +272,22 @@ impl DecentralizedRuntime {
         self.handles.iter().map(|h| h.id).collect()
     }
 
+    /// Cross-thread injection handle over every decode group's inbox (what
+    /// the PD prefill plane holds; senders stay valid for the runtime's
+    /// lifetime). **Drop every clone before [`Self::shutdown`]**: workers
+    /// exit only when all senders disconnect, so a live `Injector` makes
+    /// the shutdown join wait forever (the prefill plane consumes its
+    /// clones in `PrefillPlane::shutdown`, which is why the engine joins
+    /// prefill first).
+    pub fn injector(&self) -> Injector {
+        Injector {
+            txs: Arc::new(
+                self.handles.iter().map(|h| (h.id, h.tx.clone())).collect(),
+            ),
+            start: self.start,
+        }
+    }
+
     /// Nanoseconds since the runtime started (the clock every worker
     /// stamps request timings with).
     pub fn now_ns(&self) -> u64 {
@@ -207,9 +311,9 @@ impl DecentralizedRuntime {
         let Some(h) = self.handles.iter().find(|h| h.id == group_id) else {
             return Err(req);
         };
-        h.tx.send(GroupCommand::Submit(req)).map_err(|e| match e.0 {
-            GroupCommand::Submit(r) => r,
-            GroupCommand::SetHealthy(_) => unreachable!("only Submit is sent here"),
+        h.tx.send(InboxMsg::Submit(req)).map_err(|e| match e.0 {
+            InboxMsg::Submit(r) => r,
+            _ => unreachable!("only Submit is sent here"),
         })
     }
 
@@ -224,10 +328,10 @@ impl DecentralizedRuntime {
 
     /// Flip a group's health flag (operator/recovery action).
     pub fn set_healthy(&self, group_id: usize, healthy: bool) -> Result<()> {
-        self.send(group_id, GroupCommand::SetHealthy(healthy))
+        self.send(group_id, InboxMsg::SetHealthy(healthy))
     }
 
-    fn send(&self, group_id: usize, cmd: GroupCommand) -> Result<()> {
+    fn send(&self, group_id: usize, cmd: InboxMsg) -> Result<()> {
         let h = self
             .handles
             .iter()
@@ -324,7 +428,7 @@ fn now_ns(start: &Instant) -> u64 {
 /// during the board's stale-healthy window is silently lost.
 fn run_dead_group(
     mut group: DpGroup,
-    rx: mpsc::Receiver<GroupCommand>,
+    rx: mpsc::Receiver<InboxMsg>,
     board: Arc<StatusBoard>,
     slot: usize,
     start: Instant,
@@ -333,12 +437,22 @@ fn run_dead_group(
     board.mark_unhealthy(slot);
     loop {
         match rx.recv() {
-            Ok(GroupCommand::Submit(req)) => {
+            Ok(InboxMsg::Submit(req)) => {
+                let now = now_ns(&start);
+                group.fail_request(req, now);
+            }
+            // a cross-thread injection has nowhere to decode: fail it (the
+            // KV drops here) so the prefill side's stream still terminates
+            Ok(InboxMsg::InjectPrefilled(seq)) => {
+                let now = now_ns(&start);
+                group.fail_request(seq.req, now);
+            }
+            Ok(InboxMsg::FailPrefilled(req)) => {
                 let now = now_ns(&start);
                 group.fail_request(req, now);
             }
             // the backend is gone; health cannot be restored in-place
-            Ok(GroupCommand::SetHealthy(_)) => {}
+            Ok(InboxMsg::SetHealthy(_)) => {}
             Err(_) => break,
         }
     }
@@ -347,11 +461,15 @@ fn run_dead_group(
 
 /// Non-blocking inbox drain; flips `draining` when the runtime has
 /// dropped the sender.
-fn drain_inbox(rx: &mpsc::Receiver<GroupCommand>, group: &mut DpGroup, draining: &mut bool) {
+fn drain_inbox(
+    rx: &mpsc::Receiver<InboxMsg>,
+    group: &mut DpGroup,
+    draining: &mut bool,
+    start: &Instant,
+) {
     loop {
         match rx.try_recv() {
-            Ok(GroupCommand::Submit(req)) => group.enqueue(req),
-            Ok(GroupCommand::SetHealthy(h)) => group.healthy = h,
+            Ok(msg) => handle_msg(msg, group, start),
             Err(mpsc::TryRecvError::Empty) => break,
             Err(mpsc::TryRecvError::Disconnected) => {
                 *draining = true;
@@ -361,12 +479,26 @@ fn drain_inbox(rx: &mpsc::Receiver<GroupCommand>, group: &mut DpGroup, draining:
     }
 }
 
+/// One inbox message, outside the drain loop so the idle `recv_timeout`
+/// path handles exactly the same set.
+fn handle_msg(msg: InboxMsg, group: &mut DpGroup, start: &Instant) {
+    match msg {
+        InboxMsg::Submit(req) => group.enqueue(req),
+        InboxMsg::InjectPrefilled(seq) => group.enqueue_prefilled(seq),
+        InboxMsg::FailPrefilled(req) => {
+            let now = now_ns(start);
+            group.fail_request(req, now);
+        }
+        InboxMsg::SetHealthy(h) => group.healthy = h,
+    }
+}
+
 /// The per-group tick loop. Runs until the inbox disconnects *and* the
 /// group has drained (or can provably make no further progress).
 #[allow(clippy::too_many_arguments)]
 fn run_group(
     mut group: DpGroup,
-    rx: mpsc::Receiver<GroupCommand>,
+    rx: mpsc::Receiver<InboxMsg>,
     board: Arc<StatusBoard>,
     slot: usize,
     model: &dyn DecodeModel,
@@ -381,10 +513,13 @@ fn run_group(
     board.publish(slot, group.status(), 0, now_ns(&start));
     loop {
         // 1. Drain the command inbox without blocking.
-        drain_inbox(&rx, &mut group, &mut draining);
+        drain_inbox(&rx, &mut group, &mut draining, &start);
 
         // 2. One serving tick: admission + continuous-batched decode.
-        let queue_seen_by_tick = group.queue.len();
+        // Deferred cross-thread injections retry first (§5.1 step 6): their
+        // prefill cost is already sunk, so they take decode slots before
+        // raw queued prompts do.
+        let pending_seen_by_tick = group.queue.len() + group.prefilled.len();
         let t0 = Instant::now();
         let mut worked = false;
         // Backend-level errors poison the whole group; fail its pending
@@ -392,6 +527,7 @@ fn run_group(
         // hanging until shutdown. (An operator SetHealthy(false) pause, by
         // contrast, keeps requests parked.)
         if group.healthy {
+            worked |= group.admit_prefilled(now_ns(&start)) > 0;
             match group.admit_from_queue(model, now_ns(&start)) {
                 Ok(n) => worked |= n > 0,
                 Err(e) => {
@@ -428,7 +564,7 @@ fn run_group(
         // injected delay) are reflected in the published queue depth —
         // otherwise the shell would see a fresh epoch whose counts predate
         // its own sends and mistakenly clear its stale credits.
-        drain_inbox(&rx, &mut group, &mut draining);
+        drain_inbox(&rx, &mut group, &mut draining, &start);
         board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
 
         // 5. Exit / park.
@@ -436,11 +572,11 @@ fn run_group(
             if group.is_idle() {
                 break;
             }
-            // Unhealthy, or queued work the tick *saw* but could not admit
+            // Unhealthy, or pending work the tick *saw* but could not admit
             // with nothing running to free capacity: fail what remains
             // rather than hanging shutdown. (Requests that arrived only in
             // the post-tick drain get their admission attempt next loop.)
-            let stuck = !worked && group.running.is_empty() && queue_seen_by_tick > 0;
+            let stuck = !worked && group.running.is_empty() && pending_seen_by_tick > 0;
             if !group.healthy || stuck {
                 fail_pending(&mut group, now_ns(&start));
                 board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
@@ -450,8 +586,7 @@ fn run_group(
         }
         if !worked {
             match rx.recv_timeout(idle_park) {
-                Ok(GroupCommand::Submit(req)) => group.enqueue(req),
-                Ok(GroupCommand::SetHealthy(h)) => group.healthy = h,
+                Ok(msg) => handle_msg(msg, &mut group, &start),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     idle_park = (idle_park * 2).min(IDLE_PARK_MAX);
                     ewma.decay(IDLE_EWMA_DECAY);
@@ -471,6 +606,12 @@ fn fail_pending(group: &mut DpGroup, now: u64) {
     let queued: Vec<ServeRequest> = group.queue.drain(..).collect();
     for req in queued {
         group.fail_request(req, now);
+    }
+    // deferred injections: the KV blobs drop here, admissions were never
+    // taken for them
+    let deferred: Vec<PrefilledSeq> = group.prefilled.drain(..).collect();
+    for seq in deferred {
+        group.fail_request(seq.req, now);
     }
     let running: Vec<SeqState> = group.running.drain(..).collect();
     for s in running {
@@ -542,6 +683,58 @@ mod tests {
         .unwrap();
         assert!(rt.submit_to(9, req(1, 2)).is_err());
         rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn injector_delivers_prefilled_sequences_cross_thread() {
+        use crate::model::SeqKv;
+
+        let specs: Vec<GroupSpec> = (0..2).map(|i| GroupSpec::new(i, 4, 256)).collect();
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(2),
+            None,
+            sim_factory(),
+        )
+        .unwrap();
+        let injector = rt.injector();
+        assert_eq!(injector.n_groups(), 2);
+        assert_eq!(injector.slot_of(1), Some(1));
+        assert_eq!(injector.slot_of(9), None);
+
+        for i in 0..4u64 {
+            let mut kv = SeqKv::empty(1, 256, 1, 1);
+            kv.len = 3;
+            let mut req = ServeRequest::new(100 + i, vec![256, 1, 2], 5, 0);
+            req.timing.prefill_done_ns = 1; // "prefilled elsewhere" stamp
+            let seq = PrefilledSeq { req, kv, first_token: 97, hidden: vec![0.0; 8] };
+            injector.inject_prefilled((i % 2) as usize, seq).unwrap();
+        }
+        // unknown group hands the sequence back instead of dropping it
+        let mut kv = SeqKv::empty(1, 256, 1, 1);
+        kv.len = 1;
+        let orphan = PrefilledSeq {
+            req: ServeRequest::new(999, vec![256], 2, 0),
+            kv,
+            first_token: 97,
+            hidden: vec![],
+        };
+        assert!(injector.inject_prefilled(7, orphan).is_err());
+
+        // the injector holds cloned inbox senders: it must drop before
+        // shutdown or the workers never see Disconnected and the join
+        // hangs (the plane/engine paths consume theirs the same way)
+        drop(injector);
+        let groups = rt.shutdown().unwrap();
+        let finished: Vec<&ServeRequest> =
+            groups.iter().flat_map(|g| g.finished.iter()).collect();
+        assert_eq!(finished.len(), 4);
+        for r in finished {
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(r.generated.len(), 5, "first token + 4 decoded");
+            assert_eq!(r.timing.prefill_done_ns, 1, "prefill stamp preserved");
+            assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+        }
     }
 
     #[test]

@@ -3,13 +3,21 @@
 //! The evolution (Fig 16): PD-colocated → disaggregated Prefill-Decode
 //! ([`pd`]) → disaggregated MoE-Attention ([`moe_attn`]) → asynchronous
 //! dataflow serving ([`dataflow`], the §5.3 vision, prototyped here).
+//!
+//! Two PD implementations share the placement logic
+//! ([`pd::choose_prefill_te`]): the static [`PdPipeline`] simulates the
+//! 8-step workflow with real KV bytes over the fabric model, while the
+//! threaded [`PrefillPlane`] runs live prefill workers that inject into
+//! the decentralized decode runtime — the path
+//! `coordinator::ServingEngine` uses for
+//! `DeploymentMode::PdDisaggregated`.
 
 pub mod pd;
 pub mod moe_attn;
 pub mod dataflow;
 
 pub use moe_attn::{DisaggDeployment, IterationBreakdown};
-pub use pd::PdPipeline;
+pub use pd::{PdPipeline, PrefillJob, PrefillPlane, PrefillWorkerSpec};
 
 pub mod colocated;
 pub use colocated::{ColocatedDeployment, ColocatedResult};

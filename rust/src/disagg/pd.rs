@@ -17,10 +17,17 @@
 //! Step 8: both sides poll completions; prefill frees blocks, decode
 //!         enqueues the request for computation.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{DecodeLbPolicy, NpuKind};
 use crate::coordinator::decode_sched::{choose_group, GroupStatus};
+use crate::coordinator::dp_group::PrefilledSeq;
+use crate::coordinator::request::{RequestState, ServeRequest};
+use crate::coordinator::worker::{Injector, ModelFactory};
 use crate::distflow::{DistFlow, TransferTask};
 use crate::fabric::memory::GlobalMemory;
 use crate::fabric::topology::{DieId, Topology};
@@ -93,30 +100,8 @@ impl PdPipeline {
     /// Steps 1+4+5: choose placements. Length-aware prefill selection:
     /// long requests go only to long-sequence specialists when any exist.
     pub fn place(&mut self, input_tokens: usize, cache_affinity: Option<usize>) -> Result<PdPlacement> {
-        let want_long = input_tokens >= self.long_seq_threshold;
-        let has_specialist = self.prefill_tes.iter().any(|t| t.long_seq_specialist);
-        let eligible: Vec<&PrefillTe> = self
-            .prefill_tes
-            .iter()
-            .filter(|t| {
-                if has_specialist {
-                    t.long_seq_specialist == want_long
-                } else {
-                    true
-                }
-            })
-            .collect();
-        anyhow::ensure!(!eligible.is_empty(), "no eligible prefill TE");
-        // cache affinity wins if it is eligible; otherwise least-loaded
-        let prefill_te = cache_affinity
-            .filter(|id| eligible.iter().any(|t| t.id == *id))
-            .unwrap_or_else(|| {
-                eligible
-                    .iter()
-                    .min_by_key(|t| t.load_tokens)
-                    .map(|t| t.id)
-                    .unwrap()
-            });
+        let prefill_te =
+            choose_prefill_te(&self.prefill_tes, input_tokens, cache_affinity, self.long_seq_threshold)?;
         self.prefill_tes
             .iter_mut()
             .find(|t| t.id == prefill_te)
@@ -219,6 +204,354 @@ impl PdPipeline {
     }
 }
 
+/// Length-aware prefill-TE selection (§5.1 step 1), shared by the static
+/// [`PdPipeline`] simulator and the threaded [`PrefillPlane`]: long
+/// requests go only to long-sequence specialists when any exist (§7.2
+/// isolation of extreme cases); cache affinity wins when eligible;
+/// otherwise least outstanding-token load.
+pub fn choose_prefill_te(
+    tes: &[PrefillTe],
+    input_tokens: usize,
+    cache_affinity: Option<usize>,
+    long_seq_threshold: usize,
+) -> Result<usize> {
+    let want_long = input_tokens >= long_seq_threshold;
+    let has_specialist = tes.iter().any(|t| t.long_seq_specialist);
+    let eligible: Vec<&PrefillTe> = tes
+        .iter()
+        .filter(|t| {
+            if has_specialist {
+                t.long_seq_specialist == want_long
+            } else {
+                true
+            }
+        })
+        .collect();
+    anyhow::ensure!(!eligible.is_empty(), "no eligible prefill TE");
+    Ok(cache_affinity
+        .filter(|id| eligible.iter().any(|t| t.id == *id))
+        .unwrap_or_else(|| {
+            eligible
+                .iter()
+                .min_by_key(|t| t.load_tokens)
+                .map(|t| t.id)
+                .unwrap()
+        }))
+}
+
+// ---------------------------------------------------------------------------
+// Threaded prefill plane: PD-disaggregation over the decentralized runtime
+// ---------------------------------------------------------------------------
+
+/// Spawn parameters for one prefill worker thread.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillWorkerSpec {
+    pub id: usize,
+    /// Long-sequence specialist (§7.2): with any specialist present, long
+    /// prompts go only to specialists and short prompts avoid them.
+    pub long_seq_specialist: bool,
+}
+
+impl PrefillWorkerSpec {
+    pub fn new(id: usize) -> Self {
+        Self { id, long_seq_specialist: false }
+    }
+
+    pub fn specialist(id: usize) -> Self {
+        Self { id, long_seq_specialist: true }
+    }
+}
+
+/// One unit of prefill work: the raw request plus the decode DP group the
+/// resulting KV must be injected into (chosen by the TE-shell at dispatch
+/// time, §5.1 steps 4–5).
+pub struct PrefillJob {
+    pub req: ServeRequest,
+    pub decode_group: usize,
+}
+
+struct PrefillHandle {
+    id: usize,
+    tx: mpsc::Sender<PrefillJob>,
+    /// Joins to the requests this worker could not hand to any decode
+    /// group (its target worker had already exited).
+    join: thread::JoinHandle<Vec<ServeRequest>>,
+}
+
+/// The §5.1 prefill side, live on the decentralized runtime: one OS thread
+/// per prefill TE, each owning its own model backend, running prompt
+/// prefill and handing the KV off cross-thread through the decode groups'
+/// inboxes ([`Injector`], step 8). Prefill completion is stamped into
+/// `timing.prefill_done_ns` before the handoff, so
+/// `first_token_ns − prefill_done_ns` measures the cross-thread handoff
+/// latency (including any step-6 deferral on the decode side).
+pub struct PrefillPlane {
+    handles: Vec<PrefillHandle>,
+    specs: Vec<PrefillWorkerSpec>,
+    /// Outstanding prompt tokens per prefill worker (spec order) — the
+    /// load signal `choose_prefill_te` balances on.
+    load_tokens: Arc<Vec<AtomicU64>>,
+    /// Accepted-but-not-yet-injected requests per decode *board slot*:
+    /// added on `submit`, removed after the inject/fail send lands in the
+    /// decode inbox. Folded into routing views so decode groups shed load
+    /// for KV that is still in flight toward them.
+    inflight: Arc<Vec<AtomicUsize>>,
+    /// Per-worker liveness (spec order): flipped false the first time a
+    /// `submit` finds the worker's inbox closed (thread exited, e.g. a
+    /// panicking backend). Dead workers are retired from [`Self::tes`] so
+    /// placement stops selecting them — without this, the least-loaded
+    /// pick would re-select a dead worker forever and livelock routing.
+    alive: Arc<Vec<AtomicBool>>,
+    /// Kept for slot mapping symmetry with the workers (and it keeps the
+    /// decode inboxes alive for the plane's whole lifetime).
+    injector: Injector,
+}
+
+impl PrefillPlane {
+    /// Spawn one prefill worker per spec. `factory` builds each worker's
+    /// model backend in-thread (same contract as the decode workers);
+    /// `injector` is the cross-thread path into the decode groups.
+    pub fn spawn(
+        specs: &[PrefillWorkerSpec],
+        factory: ModelFactory,
+        injector: Injector,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("prefill plane needs at least one worker");
+        }
+        for (i, a) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|b| b.id == a.id) {
+                bail!("duplicate prefill worker id {}", a.id);
+            }
+        }
+        let load_tokens: Arc<Vec<AtomicU64>> =
+            Arc::new(specs.iter().map(|_| AtomicU64::new(0)).collect());
+        let inflight: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..injector.n_groups()).map(|_| AtomicUsize::new(0)).collect());
+        let alive: Arc<Vec<AtomicBool>> =
+            Arc::new(specs.iter().map(|_| AtomicBool::new(true)).collect());
+        let mut handles = Vec::with_capacity(specs.len());
+        for (slot, spec) in specs.iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<PrefillJob>();
+            let factory_w = Arc::clone(&factory);
+            let injector_w = injector.clone();
+            let load_w = Arc::clone(&load_tokens);
+            let inflight_w = Arc::clone(&inflight);
+            let alive_w = Arc::clone(&alive);
+            let id = spec.id;
+            let join = thread::Builder::new()
+                .name(format!("pd-prefill-{id}"))
+                .spawn(move || -> Vec<ServeRequest> {
+                    let model = match factory_w(id) {
+                        Ok(m) => Some(m),
+                        Err(e) => {
+                            eprintln!("pd-prefill-{id} backend init failed: {e}");
+                            // Retire this worker from placement immediately:
+                            // with model=None it would fail every job, and —
+                            // its load staying ~0 — least-loaded placement
+                            // would funnel *all* traffic here while healthy
+                            // workers idle. It keeps draining its inbox so
+                            // anything already routed fails cleanly.
+                            alive_w[slot].store(false, Ordering::Relaxed);
+                            None
+                        }
+                    };
+                    let mut orphans = Vec::new();
+                    while let Ok(job) = rx.recv() {
+                        run_prefill_job(
+                            job,
+                            model.as_deref(),
+                            &injector_w,
+                            slot,
+                            &load_w,
+                            &inflight_w,
+                            &mut orphans,
+                        );
+                    }
+                    orphans
+                })
+                .map_err(|e| anyhow!("spawning pd-prefill-{id} thread: {e}"))?;
+            handles.push(PrefillHandle { id, tx, join });
+        }
+        Ok(Self { handles, specs: specs.to_vec(), load_tokens, inflight, alive, injector })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Routing views over the *live* prefill workers, in [`PrefillTe`]
+    /// form so [`choose_prefill_te`] serves both the static pipeline and
+    /// this plane; workers whose thread has exited are retired. (The
+    /// in-process plane is homogeneous: every worker reports as a 910C on
+    /// die 0; kind/die only matter to the fabric simulator.)
+    pub fn tes(&self) -> Vec<PrefillTe> {
+        self.specs
+            .iter()
+            .enumerate()
+            .filter(|(slot, _)| self.alive[*slot].load(Ordering::Relaxed))
+            .map(|(slot, s)| PrefillTe {
+                id: s.id,
+                kind: NpuKind::Ascend910C,
+                die: 0,
+                load_tokens: self.load_tokens[slot].load(Ordering::Relaxed),
+                long_seq_specialist: s.long_seq_specialist,
+            })
+            .collect()
+    }
+
+    /// Accepted-but-not-yet-injected requests headed for decode board slot
+    /// `slot` (the §4.3 pending-count correction for KV in flight).
+    pub fn inflight_for_slot(&self, slot: usize) -> usize {
+        self.inflight.get(slot).map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Accepted-but-not-yet-injected requests across every decode slot —
+    /// the plane's contribution to engine-level idleness checks.
+    pub fn inflight_total(&self) -> usize {
+        self.inflight.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Hand a job to prefill worker `te_id`. On failure (worker exited)
+    /// the job comes back so the caller can retry another worker — and the
+    /// dead worker is retired from [`Self::tes`] so placement never
+    /// selects it again.
+    pub fn submit(&self, te_id: usize, job: PrefillJob) -> std::result::Result<(), PrefillJob> {
+        let Some(slot) = self.handles.iter().position(|h| h.id == te_id) else {
+            return Err(job);
+        };
+        let tokens = job.req.prompt_tokens.len() as u64;
+        let dslot = self.injector.slot_of(job.decode_group);
+        self.load_tokens[slot].fetch_add(tokens, Ordering::Relaxed);
+        if let Some(c) = dslot.and_then(|s| self.inflight.get(s)) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        self.handles[slot].tx.send(job).map_err(|e| {
+            // the worker's inbox is closed: retire it and undo the
+            // counters — the job never reached it
+            self.alive[slot].store(false, Ordering::Relaxed);
+            self.load_tokens[slot].fetch_sub(tokens, Ordering::Relaxed);
+            if let Some(c) = dslot.and_then(|s| self.inflight.get(s)) {
+                c.fetch_sub(1, Ordering::Relaxed);
+            }
+            e.0
+        })
+    }
+
+    /// Drop every job inbox so workers finish their outstanding prefills
+    /// (their injections still land: the decode inboxes outlive the
+    /// plane), then join them. Returns requests that could not reach any
+    /// decode group — non-empty only if a decode worker died.
+    pub fn shutdown(self) -> Result<Vec<ServeRequest>> {
+        let mut joins = Vec::with_capacity(self.handles.len());
+        for h in self.handles {
+            drop(h.tx);
+            joins.push((h.id, h.join));
+        }
+        let mut orphans = Vec::new();
+        let mut panicked = Vec::new();
+        for (id, join) in joins {
+            match join.join() {
+                Ok(mut o) => orphans.append(&mut o),
+                Err(_) => panicked.push(id),
+            }
+        }
+        if !panicked.is_empty() {
+            bail!("prefill worker(s) panicked: {panicked:?}");
+        }
+        Ok(orphans)
+    }
+}
+
+/// Deliver a payload to `primary`'s decode group, falling back to every
+/// other live group if that worker has exited (the routed group can die
+/// inside the board's stale-healthy window). One failover policy for both
+/// KV injections and failure reports; the receiving group's deferral /
+/// terminal-fail logic re-checks KV fit either way, so the stream is
+/// guaranteed to terminate on every fallback outcome.
+fn deliver_with_fallback<T>(
+    injector: &Injector,
+    primary: usize,
+    payload: T,
+    send: impl Fn(&Injector, usize, T) -> std::result::Result<(), T>,
+) -> std::result::Result<(), T> {
+    let mut payload = match send(injector, primary, payload) {
+        Ok(()) => return Ok(()),
+        Err(p) => p,
+    };
+    for gid in injector.group_ids() {
+        if gid == primary {
+            continue;
+        }
+        payload = match send(injector, gid, payload) {
+            Ok(()) => return Ok(()),
+            Err(p) => p,
+        };
+    }
+    Err(payload)
+}
+
+/// One prefill job end-to-end on a worker thread: run prefill, stamp
+/// completion, move the KV into the decode group's inbox (or report the
+/// failure there so the stream still terminates). A request only becomes
+/// an orphan when *every* decode worker has exited.
+fn run_prefill_job(
+    job: PrefillJob,
+    model: Option<&dyn crate::model::DecodeModel>,
+    injector: &Injector,
+    my_slot: usize,
+    load: &[AtomicU64],
+    inflight: &[AtomicUsize],
+    orphans: &mut Vec<ServeRequest>,
+) {
+    let PrefillJob { mut req, decode_group } = job;
+    let tokens = req.prompt_tokens.len() as u64;
+    req.state = RequestState::Prefilling;
+    let prefilled = match model {
+        None => Err(anyhow!("backend unavailable")),
+        Some(m) => m.prefill(&req.prompt_tokens).and_then(|pf| {
+            let first = pf
+                .logits
+                .argmax_rows()?
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow!("empty prefill logits"))? as i32;
+            Ok((pf, first))
+        }),
+    };
+    let outcome = match prefilled {
+        Ok((pf, first)) => {
+            req.state = RequestState::AwaitingTransfer;
+            req.timing.prefill_done_ns = injector.now_ns();
+            deliver_with_fallback(
+                injector,
+                decode_group,
+                PrefilledSeq { req, kv: pf.kv, first_token: first, hidden: pf.hidden },
+                |i, g, s| i.inject_prefilled(g, s),
+            )
+            .map_err(|seq| seq.req)
+        }
+        // Prefill failed (bad prompt, dead backend): fail only this
+        // request, on the decode side so its Finished event flows — and
+        // keep the cause visible for operators.
+        Err(e) => {
+            eprintln!("pd-prefill: request {} failed prefill: {e}", req.id);
+            deliver_with_fallback(injector, decode_group, req, |i, g, r| {
+                i.fail_prefilled(g, r)
+            })
+        }
+    };
+    if let Err(req) = outcome {
+        orphans.push(req);
+    }
+    load[my_slot].fetch_sub(tokens, Ordering::Relaxed);
+    if let Some(slot) = injector.slot_of(decode_group) {
+        if let Some(c) = inflight.get(slot) {
+            c.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -289,6 +622,181 @@ mod tests {
         assert_eq!(req, 42);
         assert_eq!(data, blob);
         assert!(ns > 0);
+    }
+
+    #[test]
+    fn choose_prefill_te_is_shared_and_pure() {
+        let tes = vec![
+            PrefillTe { id: 0, kind: NpuKind::Ascend910C, die: 0, load_tokens: 50, long_seq_specialist: false },
+            PrefillTe { id: 1, kind: NpuKind::Ascend910C, die: 1, load_tokens: 10, long_seq_specialist: false },
+            PrefillTe { id: 5, kind: NpuKind::Ascend910C, die: 2, load_tokens: 0, long_seq_specialist: true },
+        ];
+        // short → least-loaded non-specialist
+        assert_eq!(choose_prefill_te(&tes, 100, None, 32_000).unwrap(), 1);
+        // long → specialist, even though it is not the least loaded name
+        assert_eq!(choose_prefill_te(&tes, 40_000, None, 32_000).unwrap(), 5);
+        // affinity wins when eligible, ignored when not
+        assert_eq!(choose_prefill_te(&tes, 100, Some(0), 32_000).unwrap(), 0);
+        assert_eq!(choose_prefill_te(&tes, 100, Some(5), 32_000).unwrap(), 1);
+    }
+
+    #[test]
+    fn prefill_plane_runs_jobs_and_reports_load() {
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+
+        let factory: ModelFactory =
+            Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
+        let specs: Vec<GroupSpec> = (0..2).map(|i| GroupSpec::new(i, 4, 256)).collect();
+        let rt = DecentralizedRuntime::spawn(
+            &specs,
+            StragglerProfile::none(2),
+            None,
+            Arc::clone(&factory),
+        )
+        .unwrap();
+        let plane = PrefillPlane::spawn(
+            &[PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)],
+            factory,
+            rt.injector(),
+        )
+        .unwrap();
+        assert_eq!(plane.n_workers(), 2);
+        assert_eq!(plane.tes().len(), 2);
+
+        for i in 0..6u64 {
+            let req = ServeRequest::new(i, vec![256, 1, 2], 4, 0);
+            plane
+                .submit((i % 2) as usize, PrefillJob { req, decode_group: (i % 2) as usize })
+                .unwrap();
+        }
+        // unknown worker hands the job back
+        let bad = PrefillJob { req: ServeRequest::new(99, vec![256], 2, 0), decode_group: 0 };
+        assert!(plane.submit(7, bad).is_err());
+
+        let orphans = plane.shutdown().unwrap();
+        assert!(orphans.is_empty(), "both decode groups are alive");
+        let groups = rt.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 6);
+        for g in &groups {
+            for r in &g.finished {
+                assert_eq!(r.state, RequestState::Done);
+                assert_eq!(r.generated.len(), 4, "first token + 3 decoded");
+                assert!(r.timing.prefill_done_ns > 0, "prefill stamped by the plane");
+                assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn err_backend_prefill_worker_is_retired_but_drains_jobs() {
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+        use std::time::{Duration, Instant};
+
+        // worker 0's backend factory errs (no panic): the thread survives
+        // to drain its inbox, but must leave the placement views — with
+        // load stuck at ~0 it would otherwise win least-loaded forever
+        // and fail all traffic while worker 1 idles.
+        let prefill_factory: ModelFactory = Arc::new(|id| {
+            if id == 0 {
+                anyhow::bail!("backend unreadable");
+            }
+            Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>)
+        });
+        let decode_factory: ModelFactory =
+            Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
+        let rt = DecentralizedRuntime::spawn(
+            &[GroupSpec::new(0, 4, 256)],
+            StragglerProfile::none(1),
+            None,
+            decode_factory,
+        )
+        .unwrap();
+        let plane = PrefillPlane::spawn(
+            &[PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)],
+            prefill_factory,
+            rt.injector(),
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while plane.tes().len() != 1 {
+            assert!(Instant::now() < deadline, "err-backend worker never retired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(plane.tes()[0].id, 1);
+        // a job explicitly pushed at the retired worker still fails
+        // cleanly through the decode side (its thread drains the inbox)
+        plane
+            .submit(0, PrefillJob { req: ServeRequest::new(5, vec![256, 1], 2, 0), decode_group: 0 })
+            .unwrap();
+        let orphans = plane.shutdown().unwrap();
+        assert!(orphans.is_empty());
+        let groups = rt.shutdown().unwrap();
+        assert_eq!(groups[0].finished.len(), 1);
+        assert_eq!(groups[0].finished[0].id, 5);
+        assert_eq!(groups[0].finished[0].state, RequestState::Failed);
+    }
+
+    #[test]
+    fn dead_prefill_worker_is_retired_from_placement() {
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+        use std::time::{Duration, Instant};
+
+        // worker 0's backend panics at init → its thread dies and its job
+        // inbox closes; worker 1 is healthy
+        let prefill_factory: ModelFactory = Arc::new(|id| {
+            if id == 0 {
+                panic!("prefill backend exploded");
+            }
+            Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>)
+        });
+        let decode_factory: ModelFactory =
+            Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
+        let rt = DecentralizedRuntime::spawn(
+            &[GroupSpec::new(0, 4, 256)],
+            StragglerProfile::none(1),
+            None,
+            decode_factory,
+        )
+        .unwrap();
+        let plane = PrefillPlane::spawn(
+            &[PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)],
+            prefill_factory,
+            rt.injector(),
+        )
+        .unwrap();
+        // submits race the unwinding thread; once its inbox closes the
+        // submit fails and the worker must be retired from tes()
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut k = 0u64;
+        loop {
+            let job = PrefillJob {
+                req: ServeRequest::new(10_000 + k, vec![256], 1, 0),
+                decode_group: 0,
+            };
+            k += 1;
+            if plane.submit(0, job).is_err() {
+                break;
+            }
+            assert!(Instant::now() < deadline, "dead worker never detected");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let live = plane.tes();
+        assert_eq!(live.len(), 1, "dead worker retired from placement views");
+        assert_eq!(live[0].id, 1);
+        // the healthy worker still serves
+        plane
+            .submit(1, PrefillJob { req: ServeRequest::new(1, vec![256, 1], 3, 0), decode_group: 0 })
+            .unwrap();
+        assert!(plane.shutdown().is_err(), "panicked worker is surfaced");
+        let groups = rt.shutdown().unwrap();
+        assert!(groups[0].finished.iter().any(|r| r.id == 1));
     }
 
     #[test]

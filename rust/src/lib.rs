@@ -15,14 +15,40 @@
 //!   PJRT C API (`xla` crate) and executes them on the request path with no
 //!   Python anywhere.
 //!
+//! # Unified serving front-end
+//!
+//! [`coordinator::ServingEngine`] is the single entry point for serving:
+//! `submit(req)` / `drain()` / `health_sweep()` over a
+//! [`config::DeploymentMode`] — **Colocated** (workers prefill locally),
+//! **PdDisaggregated** (§5.1: a `disagg::pd::PrefillPlane` of prefill
+//! worker threads runs prompt prefill and injects the KV cross-thread
+//! into the routed decode group's inbox), and **MoeAttn** (§5.2:
+//! domain-aware routing over attention DP domains). The TE-shell
+//! underneath is pure routing policy over a
+//! [`coordinator::dispatch::Dispatcher`] delivery backend, and enforces
+//! `serving.dp_queue_limit` admission: when aggregate pending load
+//! reaches the per-group limit × healthy groups, `submit` rejects with a
+//! typed [`coordinator::AdmissionError`] instead of queueing silently.
+//!
+//! **PD handoff contract (§5.1 step 8).** The prefill worker owns the
+//! prompt KV until it moves a `coordinator::PrefilledSeq` into the decode
+//! group's inbox (`coordinator::InboxMsg::InjectPrefilled`); from then on
+//! the decode worker owns it exclusively — deferred in
+//! `DpGroup::prefilled` while the group is full (step 6; retried every
+//! tick), admitted into the running batch when capacity frees, and
+//! released on completion or failure. Prefill completion is stamped in
+//! `timing.prefill_done_ns` before the handoff and first decode-side
+//! emission in `timing.first_token_ns` at admission, so their difference
+//! is the cross-thread handoff latency (including deferral).
+//!
 //! # Decentralized serving runtime (§4.2–4.4)
 //!
 //! [`coordinator::worker`] turns the crate into a genuinely concurrent
 //! engine: one OS thread per DP group, each running a self-contained tick
-//! loop (inbox → prefill admission → continuous-batched decode → output
-//! shortcut) against a [`model::DecodeModel`] backend — PJRT-backed
-//! ([`model::OwnedEngineModel`]) or the deterministic pure-Rust
-//! [`model::SimModel`].
+//! loop (inbox → injection retry → prefill admission → continuous-batched
+//! decode → output shortcut) against a [`model::DecodeModel`] backend —
+//! PJRT-backed ([`model::OwnedEngineModel`]) or the deterministic
+//! pure-Rust [`model::SimModel`].
 //!
 //! **Status-board staleness contract.** Workers publish
 //! [`coordinator::DpGroupStatus`] snapshots plus a decode-tick latency

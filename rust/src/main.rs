@@ -9,18 +9,21 @@
 //!
 //! Examples:
 //!   xdeepserve serve --requests 8 --max-new 24 --mtp 1
+//!   xdeepserve serve --pd --prefill-workers 2      (PD-disaggregated)
+//!   xdeepserve serve --config deploy.toml          (deployment.mode from file)
 //!   xdeepserve simulate --preset disagg_768 --seq 3000
 //!   xdeepserve inspect --artifacts artifacts
 
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use xdeepserve::config::{Config, DecodeLbPolicy, DeploymentConfig};
+use xdeepserve::config::{Config, DeploymentConfig, DeploymentMode};
 use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
-use xdeepserve::coordinator::{DpGroup, ServeRequest, TeShell};
-use xdeepserve::disagg::DisaggDeployment;
-use xdeepserve::model::{ServedModel, Tokenizer};
+use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
+use xdeepserve::disagg::{DisaggDeployment, PrefillWorkerSpec};
+use xdeepserve::model::Tokenizer;
 use xdeepserve::metrics::ServingMetrics;
 use xdeepserve::runtime::Engine;
 use xdeepserve::util::args::Args;
@@ -49,57 +52,70 @@ fn serve(args: &Args) -> Result<()> {
     let n_groups = args.get_usize("dp-groups", 2);
     let mtp = args.get_usize("mtp", 1) > 0;
     let int8 = args.has_flag("int8");
+    let prefill_workers = args.get_usize("prefill-workers", 2);
+
+    // deployment mode: config file first (`deployment.mode`), `--pd`
+    // overrides for quick experiments
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    let mode = if args.has_flag("pd") {
+        DeploymentMode::PdDisaggregated
+    } else {
+        cfg.deployment.mode
+    };
 
     println!("loading artifacts from {artifacts}/ ...");
     let engine = Engine::load(&artifacts)?;
     println!("PJRT platform: {}", engine.platform());
-    let model = ServedModel::new(&engine);
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    let prefill_seq = engine.manifest.model.prefill_seq;
+    drop(engine); // worker threads each load their own engine
 
     // frontend sink via output shortcutting
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
     let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
-    let mut groups: Vec<DpGroup> = (0..n_groups)
+    // one engine per worker thread (the §4.2 per-thread backend model)
+    let factory = engine_model_factory(artifacts.clone());
+    let specs: Vec<GroupSpec> = (0..n_groups)
         .map(|i| {
-            let mut g = DpGroup::new(i, 4, 4096);
-            g.out_tx = Some(shortcut.sender());
-            g.use_mtp = mtp;
-            g.int8 = int8;
-            g
+            let mut s = GroupSpec::new(i, 4, 4096);
+            s.use_mtp = mtp;
+            s.int8 = int8;
+            s
         })
         .collect();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let mut builder = ServingEngine::builder(mode, factory)
+        .serving(cfg.serving.clone())
+        .groups(specs)
+        .dp_domains(cfg.deployment.dp_domains)
+        .output(shortcut.sender());
+    if mode == DeploymentMode::PdDisaggregated {
+        builder = builder
+            .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect());
+    }
+    let mut serving = builder.spawn()?;
 
     let mut gen = WorkloadGen::new(7);
     let reqs = gen.generate(TraceKind::ShareGpt, n_requests, 0.0);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     for r in &reqs {
         let toks = tokenizer.encode(&r.prompt);
-        let toks = toks[..toks.len().min(engine.manifest.model.prefill_seq)].to_vec();
-        shell.dispatch(ServeRequest::new(r.id, toks, max_new, 0), &mut groups)?;
+        let toks = toks[..toks.len().min(prefill_seq)].to_vec();
+        if let Err(e) = serving.submit(ServeRequest::new(r.id, toks, max_new, 0)) {
+            eprintln!("req {} shed by admission: {e}", r.id);
+        }
+        serving.drain();
     }
+    serving.settle(Duration::from_secs(120))?;
+    let groups = serving.shutdown()?;
 
     let mut metrics = ServingMetrics::new();
-    loop {
-        let mut any = false;
-        for g in groups.iter_mut() {
-            let now = t0.elapsed().as_nanos() as u64;
-            g.admit_from_queue(&model, now)?;
-            let now = t0.elapsed().as_nanos() as u64;
-            if g.decode_iteration(&model, now)? > 0 {
-                any = true;
-            }
-        }
-        shell.drain_waiting(&mut groups)?;
-        if !any && groups.iter().all(|g| g.is_idle()) {
-            break;
-        }
-    }
-
     let mut finished = 0;
-    for g in groups.iter_mut() {
-        for r in g.finished.drain(..) {
+    for g in &groups {
+        for r in &g.finished {
             metrics.record_request(&r.timing);
             finished += 1;
         }

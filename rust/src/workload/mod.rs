@@ -11,10 +11,12 @@
 //! MiniDeepSeek's buckets for real-execution runs while preserving the
 //! length *distribution shape*.
 
+pub mod arrival;
 pub mod trace;
 pub mod expert_skew;
 pub mod straggler;
 
+pub use arrival::PoissonProcess;
 pub use expert_skew::{skewed_expert_counts, SkewSummary};
 pub use straggler::StragglerProfile;
 pub use trace::{Request, TraceKind, WorkloadGen};

@@ -73,20 +73,21 @@ impl WorkloadGen {
     }
 
     /// Generate `n` requests with Poisson arrivals at `rate_per_s` (0 ⇒ all
-    /// arrive at t=0, the paper's §7.1 batch-start methodology).
+    /// arrive at t=0, the paper's §7.1 batch-start methodology). Arrivals
+    /// come from a [`crate::workload::PoissonProcess`] forked off this
+    /// generator's stream, so length draws and arrival gaps stay
+    /// independently reproducible.
     pub fn generate(&mut self, kind: TraceKind, n: usize, rate_per_s: f64) -> Vec<Request> {
-        let mut t_ns = 0u64;
+        let mut arrivals =
+            crate::workload::PoissonProcess::new(self.rng.fork(0xA881).next_u64(), rate_per_s);
         (0..n)
             .map(|_| {
-                if rate_per_s > 0.0 {
-                    t_ns += (self.rng.exponential(rate_per_s) * 1e9) as u64;
-                }
                 let (i, o) = self.sample_lengths(kind);
                 let id = self.next_id;
                 self.next_id += 1;
                 Request {
                     id,
-                    arrival_ns: if rate_per_s > 0.0 { t_ns } else { 0 },
+                    arrival_ns: arrivals.next_ns(),
                     input_tokens: i,
                     output_tokens: o,
                     prompt: self.prompt_text((i / 24).clamp(8, 110)),

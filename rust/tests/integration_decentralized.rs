@@ -1,9 +1,11 @@
-//! Decentralized-runtime integration (§4.2–4.4): TE-shell → per-group
-//! worker threads → status board → output shortcut, on the deterministic
-//! SimModel backend — no artifacts required, so these run everywhere.
+//! Decentralized-runtime integration (§4.2–4.4): `ServingEngine` →
+//! per-group worker threads → status board → output shortcut, on the
+//! deterministic SimModel backend — no artifacts required, so these run
+//! everywhere.
 //!
 //! Pinned properties:
-//! (a) every submitted request finishes, across groups and threads;
+//! (a) every submitted request finishes, across groups and threads, under
+//!     a Poisson (open-loop) arrival process;
 //! (b) no output interleaving corruption: per-request streamed chunks
 //!     reassemble exactly into the finished token stream;
 //! (c) straggler-aware routing shifts load off an injected slow group;
@@ -14,13 +16,13 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::config::{DecodeLbPolicy, DeploymentMode, ServingConfig};
 use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
-use xdeepserve::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
-use xdeepserve::coordinator::{RequestState, ServeRequest, TeShell};
+use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
 use xdeepserve::model::{DecodeModel, SimModel, Tokenizer};
-use xdeepserve::reliability::heartbeat::GroupPulseMonitor;
 use xdeepserve::workload::straggler::StragglerProfile;
+use xdeepserve::workload::PoissonProcess;
 
 fn sim_factory() -> ModelFactory {
     Arc::new(|_gid| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
@@ -30,18 +32,9 @@ fn specs(n: usize, batch_limit: usize) -> Vec<GroupSpec> {
     (0..n).map(|i| GroupSpec::new(i, batch_limit, 512)).collect()
 }
 
-/// Dispatch + drain until nothing is parked (bounded).
-fn drain_all(shell: &mut TeShell, rt: &DecentralizedRuntime, deadline: Duration) {
-    let t0 = Instant::now();
-    while !shell.waiting.is_empty() {
-        assert!(t0.elapsed() < deadline, "requests stuck parked past deadline");
-        thread::sleep(Duration::from_millis(1));
-        shell.drain_waiting_decentralized(rt).unwrap();
-    }
-}
-
-/// One full serve of `n` requests over `n_groups` workers; returns
-/// (per-request generated streams, per-request streamed chunks+done text).
+/// One full serve of `n` requests over `n_groups` workers, submitted on a
+/// seeded Poisson arrival schedule (§7.2 open-loop); returns (per-request
+/// generated streams, per-request streamed chunks+done text).
 fn serve_once(
     n: usize,
     n_groups: usize,
@@ -50,23 +43,29 @@ fn serve_once(
     let tokenizer = Tokenizer::new(256, 257, 512);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
     let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
-    let rt = DecentralizedRuntime::spawn(
-        &specs(n_groups, 8),
-        StragglerProfile::uniform(n_groups, 100_000).with_jitter(0.2, 7),
-        Some(shortcut.sender()),
-        sim_factory(),
-    )
-    .unwrap();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(n_groups, 8))
+        .straggler(StragglerProfile::uniform(n_groups, 100_000).with_jitter(0.2, 7))
+        .output(shortcut.sender())
+        .spawn()
+        .unwrap();
+    // Poisson pacing: ~5k req/s keeps the whole schedule around 10 ms
+    // while still interleaving submissions with live decode ticks.
+    let mut arrivals = PoissonProcess::new(13, 5_000.0);
+    let t0 = Instant::now();
     for i in 0..n as u64 {
+        let due = Duration::from_nanos(arrivals.next_ns());
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            thread::sleep(wait);
+        }
         let prompt = tokenizer.encode(&format!("request {i}"));
-        shell
-            .dispatch_decentralized(ServeRequest::new(i, prompt, max_new, 0), &rt)
+        engine
+            .submit(ServeRequest::new(i, prompt, max_new, 0))
             .unwrap();
-        shell.drain_waiting_decentralized(&rt).unwrap();
+        engine.drain();
     }
-    drain_all(&mut shell, &rt, Duration::from_secs(20));
-    let groups = rt.shutdown().unwrap();
+    engine.settle(Duration::from_secs(20)).unwrap();
+    let groups = engine.shutdown().unwrap();
 
     let mut generated = HashMap::new();
     let mut served_groups = 0usize;
@@ -144,58 +143,55 @@ fn concurrent_serving_is_deterministic_per_request() {
 #[test]
 fn straggler_aware_routing_shifts_load_off_slow_group() {
     const VICTIM: usize = 3;
-    let rt = DecentralizedRuntime::spawn(
-        &specs(4, 4),
-        StragglerProfile::with_slow_group(4, 300_000, VICTIM, 20.0).with_jitter(0.25, 2025),
-        None,
-        sim_factory(),
-    )
-    .unwrap();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_straggler_penalty(1.0);
+    let mut cfg = ServingConfig::default();
+    cfg.decode_lb = DecodeLbPolicy::LeastKv;
+    cfg.straggler_penalty = 1.0;
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(4, 4))
+        .serving(cfg)
+        .straggler(
+            StragglerProfile::with_slow_group(4, 300_000, VICTIM, 20.0).with_jitter(0.25, 2025),
+        )
+        .spawn()
+        .unwrap();
 
     // Phase 1 — warm every group's tick EWMA (2 requests each, routed
     // directly so the victim provably builds a slow profile).
     for g in 0..4usize {
         for k in 0..2u64 {
-            rt.submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 1, 2], 4, 0))
+            engine
+                .runtime()
+                .submit_to(g, ServeRequest::new(g as u64 * 10 + k, vec![256, 1, 2], 4, 0))
                 .unwrap();
         }
     }
     let t0 = Instant::now();
     loop {
-        let views = rt.load_views();
+        let views = engine.load_views();
         let victim_warm = views[VICTIM].tick_ewma_ns > 0
             && views.iter().enumerate().all(|(i, v)| {
                 i == VICTIM || (v.tick_ewma_ns > 0 && v.tick_ewma_ns * 4 < views[VICTIM].tick_ewma_ns)
             });
-        if victim_warm && rt.all_idle() {
+        if victim_warm && engine.all_idle() {
             break;
         }
         assert!(t0.elapsed() < Duration::from_secs(20), "warmup never settled");
         thread::sleep(Duration::from_millis(2));
     }
 
-    // Phase 2 — measured traffic through the straggler-aware shell.
+    // Phase 2 — measured traffic through the straggler-aware engine.
     const MEASURED: u64 = 40;
     for i in 0..MEASURED {
-        shell
-            .dispatch_decentralized(
-                ServeRequest::new(1000 + i, vec![256, 5, 6, 7], 6, 0),
-                &rt,
-            )
+        engine
+            .submit(ServeRequest::new(1000 + i, vec![256, 5, 6, 7], 6, 0))
             .unwrap();
         if i % 4 == 3 {
             thread::sleep(Duration::from_millis(3));
-            shell.drain_waiting_decentralized(&rt).unwrap();
+            engine.drain();
         }
     }
-    let t1 = Instant::now();
-    while !shell.waiting.is_empty() {
-        assert!(t1.elapsed() < Duration::from_secs(20), "measured load stuck");
-        thread::sleep(Duration::from_millis(2));
-        shell.drain_waiting_decentralized(&rt).unwrap();
-    }
-    let groups = rt.shutdown().unwrap();
+    engine.settle(Duration::from_secs(20)).unwrap();
+    let groups = engine.shutdown().unwrap();
 
     let measured_per_group: Vec<usize> = groups
         .iter()
@@ -221,34 +217,38 @@ fn straggler_aware_routing_shifts_load_off_slow_group() {
 #[test]
 fn pulse_heartbeat_demotes_stalled_group() {
     const VICTIM: usize = 1;
-    let rt = DecentralizedRuntime::spawn(
-        &specs(2, 4),
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(2, 4))
         // victim: 100 ms per tick → its publish epoch freezes mid-tick
-        StragglerProfile::with_slow_group(2, 200_000, VICTIM, 500.0),
-        None,
-        sim_factory(),
-    )
-    .unwrap();
-    // 10 ms interval, 3 misses → 30 ms bound: far above a healthy worker's
-    // publish cadence (<= 4 ms idle backoff), far below the victim's
-    // 100 ms stalls.
-    let mut monitor = GroupPulseMonitor::new(10_000_000, 3);
-    rt.submit_to(0, ServeRequest::new(1, vec![256, 9], 8, 0)).unwrap();
-    rt.submit_to(VICTIM, ServeRequest::new(2, vec![256, 9], 8, 0)).unwrap();
+        .straggler(StragglerProfile::with_slow_group(2, 200_000, VICTIM, 500.0))
+        // 10 ms interval, 3 misses → 30 ms bound: far above a healthy
+        // worker's publish cadence (<= 4 ms idle backoff), far below the
+        // victim's 100 ms stalls.
+        .pulse(10_000_000, 3)
+        .spawn()
+        .unwrap();
+    engine
+        .runtime()
+        .submit_to(0, ServeRequest::new(1, vec![256, 9], 8, 0))
+        .unwrap();
+    engine
+        .runtime()
+        .submit_to(VICTIM, ServeRequest::new(2, vec![256, 9], 8, 0))
+        .unwrap();
 
     let mut victim_demotions = 0usize;
     let mut healthy_demotions = 0usize;
     let mut saw_unhealthy_view = false;
     let t0 = Instant::now();
     while t0.elapsed() < Duration::from_millis(600) {
-        for id in rt.demote_stalled(&mut monitor) {
+        for id in engine.health_sweep() {
             if id == VICTIM {
                 victim_demotions += 1;
             } else {
                 healthy_demotions += 1;
             }
         }
-        if !rt.load_views()[VICTIM].status.healthy {
+        if !engine.load_views()[VICTIM].status.healthy {
             saw_unhealthy_view = true;
         }
         thread::sleep(Duration::from_millis(2));
@@ -258,7 +258,7 @@ fn pulse_heartbeat_demotes_stalled_group() {
     assert!(saw_unhealthy_view, "router view must reflect the demotion");
 
     // demotion is router-level and transient: the drain still completes
-    let groups = rt.shutdown().unwrap();
+    let groups = engine.shutdown().unwrap();
     let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
     assert_eq!(finished, 2);
     assert!(groups

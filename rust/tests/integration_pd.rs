@@ -5,7 +5,7 @@
 
 use xdeepserve::config::NpuKind;
 use xdeepserve::coordinator::decode_sched::GroupStatus;
-use xdeepserve::coordinator::{DpGroup, ServeRequest};
+use xdeepserve::coordinator::{DpGroup, PrefilledSeq, ServeRequest};
 use xdeepserve::disagg::pd::{DecodeTe, PdPipeline, PrefillTe};
 use xdeepserve::fabric::memory::GlobalMemory;
 use xdeepserve::fabric::{FabricParams, Topology};
@@ -132,8 +132,11 @@ fn decode_group_accepts_injected_prefill() {
 
     let mut g = DpGroup::new(0, 4, 2048);
     let req = ServeRequest::new(5, prompt.clone(), 4, 0);
-    g.inject_prefilled(req, pf.kv, first, pf.hidden, 1_000)
-        .unwrap();
+    g.inject_prefilled(
+        PrefilledSeq { req, kv: pf.kv, first_token: first, hidden: pf.hidden },
+        1_000,
+    )
+    .unwrap();
     let mut now = 1_000u64;
     while !g.is_idle() {
         now += 1_000_000;

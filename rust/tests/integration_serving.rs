@@ -1,14 +1,16 @@
-//! End-to-end serving integration: TE-shell → DP groups → PJRT decode →
-//! output shortcutting, on the real MiniDeepSeek artifacts.
+//! End-to-end serving integration: `ServingEngine` → DP groups → PJRT
+//! decode → output shortcutting, on the real MiniDeepSeek artifacts.
 //!
 //! Requires `make artifacts`; every test no-ops (passes) without them so
 //! `cargo test` stays green on a fresh checkout.
 
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use xdeepserve::config::DecodeLbPolicy;
+use xdeepserve::config::DeploymentMode;
 use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
-use xdeepserve::coordinator::{DpGroup, ServeRequest, TeShell};
+use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{engine_model_factory, DpGroup, ServeRequest, ServingEngine};
 use xdeepserve::model::{ServedModel, Tokenizer};
 use xdeepserve::runtime::Engine;
 
@@ -18,6 +20,11 @@ fn engine() -> Option<Engine> {
         .join("manifest.json")
         .exists()
         .then(|| Engine::load(dir).unwrap())
+}
+
+/// Per-worker-thread engine factory (each thread owns its PJRT engine).
+fn engine_factory() -> ModelFactory {
+    engine_model_factory(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
 }
 
 fn drive(groups: &mut [DpGroup], model: &ServedModel, max_iters: usize) {
@@ -38,30 +45,29 @@ fn drive(groups: &mut [DpGroup], model: &ServedModel, max_iters: usize) {
 }
 
 #[test]
-fn serve_requests_through_shell_and_groups() {
+fn serve_requests_through_engine_and_groups() {
     let Some(engine) = engine() else { return };
-    let model = ServedModel::new(&engine);
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    drop(engine);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
     let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
-    let mut groups: Vec<DpGroup> = (0..2)
-        .map(|i| {
-            let mut g = DpGroup::new(i, 4, 2048);
-            g.out_tx = Some(shortcut.sender());
-            g
-        })
-        .collect();
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    let mut serving = ServingEngine::builder(DeploymentMode::Colocated, engine_factory())
+        .groups((0..2).map(|i| GroupSpec::new(i, 4, 2048)).collect())
+        .output(shortcut.sender())
+        .spawn()
+        .unwrap();
 
     let prompts = ["hello world", "serve this", "and this one", "fourth req"];
     for (i, p) in prompts.iter().enumerate() {
         let toks = tokenizer.encode(p);
-        shell
-            .dispatch(ServeRequest::new(i as u64, toks, 6, 0), &mut groups)
+        serving
+            .submit(ServeRequest::new(i as u64, toks, 6, 0))
             .unwrap();
+        serving.drain();
     }
-    drive(&mut groups, &model, 200);
+    serving.settle(Duration::from_secs(120)).unwrap();
+    let groups = serving.shutdown().unwrap();
 
     let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
     assert_eq!(finished, prompts.len(), "all requests must finish");
@@ -71,17 +77,41 @@ fn serve_requests_through_shell_and_groups() {
             assert!(r.timing.done_ns >= r.timing.first_token_ns);
         }
     }
-    // requests spread across both groups (LeastKv balances counts)
-    assert!(
-        groups.iter().all(|g| !g.finished.is_empty()),
-        "both DP groups must have served"
-    );
     drop(shortcut);
     let done_msgs = sink_rx
         .iter()
         .filter(|m| matches!(m, FrontendMsg::Done { .. }))
         .count();
     assert_eq!(done_msgs, prompts.len(), "output shortcut delivered all");
+}
+
+#[test]
+fn pd_disaggregated_engine_serves_on_artifacts() {
+    // PD over the decentralized runtime with the real PJRT backend:
+    // prefill worker threads → cross-thread inject → decode groups.
+    let Some(engine) = engine() else { return };
+    let tokenizer = Tokenizer::from_manifest(&engine.manifest);
+    drop(engine);
+    let mut serving =
+        ServingEngine::builder(DeploymentMode::PdDisaggregated, engine_factory())
+            .groups(vec![GroupSpec::new(0, 4, 2048)])
+            .prefill_workers(vec![xdeepserve::disagg::PrefillWorkerSpec::new(0)])
+            .spawn()
+            .unwrap();
+    for (i, p) in ["pd one", "pd two", "pd three"].iter().enumerate() {
+        serving
+            .submit(ServeRequest::new(i as u64, tokenizer.encode(p), 5, 0))
+            .unwrap();
+        serving.drain();
+    }
+    serving.settle(Duration::from_secs(120)).unwrap();
+    let groups = serving.shutdown().unwrap();
+    assert_eq!(groups[0].finished.len(), 3);
+    for r in &groups[0].finished {
+        assert_eq!(r.generated.len(), 5);
+        assert!(r.timing.prefill_done_ns > 0);
+        assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+    }
 }
 
 #[test]
@@ -140,28 +170,28 @@ fn int8_serving_produces_reasonable_stream() {
 #[test]
 fn backpressure_and_health_interact_with_dispatch() {
     let Some(engine) = engine() else { return };
-    let model = ServedModel::new(&engine);
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
-    let mut groups = vec![DpGroup::new(0, 1, 2048), DpGroup::new(1, 1, 2048)];
-    groups[1].healthy = false;
-    let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+    drop(engine);
+    let mut serving = ServingEngine::builder(DeploymentMode::Colocated, engine_factory())
+        .groups((0..2).map(|i| GroupSpec::new(i, 1, 2048)).collect())
+        .spawn()
+        .unwrap();
+    // pause group 1 and wait until the router view reflects it
+    serving.runtime().set_healthy(1, false).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while serving.load_views()[1].status.healthy {
+        assert!(Instant::now() < deadline, "health flip never published");
+        std::thread::sleep(Duration::from_millis(1));
+    }
     for i in 0..3u64 {
         let toks = tokenizer.encode("x");
-        shell
-            .dispatch(ServeRequest::new(i, toks, 2, 0), &mut groups)
-            .unwrap();
+        serving.submit(ServeRequest::new(i, toks, 2, 0)).unwrap();
     }
-    // only group 0 is healthy with 1 slot: extra requests queue there or park
-    assert_eq!(groups[1].queue.len(), 0, "unhealthy group gets nothing");
-    for _ in 0..8 {
-        drive(&mut groups, &model, 200);
-        shell.drain_waiting(&mut groups).unwrap();
-        if shell.waiting.is_empty() && groups.iter().all(|g| g.is_idle()) {
-            break;
-        }
-    }
-    drive(&mut groups, &model, 200);
+    serving.settle(Duration::from_secs(120)).unwrap();
+    // restore group 1 so shutdown's drain path stays healthy
+    serving.runtime().set_healthy(1, true).unwrap();
+    let groups = serving.shutdown().unwrap();
     let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
     assert_eq!(finished, 3, "backpressured requests eventually served");
-    assert_eq!(groups[1].finished.len(), 0);
+    assert_eq!(groups[1].finished.len(), 0, "unhealthy group served nothing");
 }
