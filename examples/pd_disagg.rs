@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
         vec![DecodeTe {
             id: 0,
             die: 3,
-            groups: vec![GroupStatus { group: 0, running: 0, batch_limit: 8, kv_usage: 0.0, healthy: true }],
+            groups: vec![GroupStatus { group: 0, running: 0, batch_limit: 8, kv_total_blocks: 0, kv_usage: 0.0, healthy: true }],
         }],
     );
 

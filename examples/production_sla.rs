@@ -85,6 +85,7 @@ fn main() {
                         group: g,
                         running: running[g],
                         batch_limit: BATCH_LIMIT,
+                        kv_total_blocks: 0,
                         kv_usage: kv[g],
                         healthy: true,
                     },
@@ -128,6 +129,7 @@ fn main() {
                 group: g,
                 running: running[g],
                 batch_limit: BATCH_LIMIT,
+                kv_total_blocks: 0,
                 kv_usage: kv[g],
                 healthy: true,
             })

@@ -15,7 +15,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::DeploymentMode;
-use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
 use xdeepserve::metrics::ServingMetrics;
 use xdeepserve::model::Tokenizer;
@@ -40,7 +40,6 @@ fn main() -> anyhow::Result<()> {
     drop(engine);
 
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
     let factory = engine_model_factory(dir.clone());
     let specs: Vec<GroupSpec> = (0..2)
@@ -52,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut serving = ServingEngine::builder(DeploymentMode::Colocated, factory)
         .groups(specs)
-        .output(shortcut.sender())
+        .frontend(tokenizer.clone(), sink_tx)
         .spawn()?;
 
     let prompts = [
@@ -84,7 +83,6 @@ fn main() -> anyhow::Result<()> {
             metrics.record_request(&r.timing);
         }
     }
-    drop(shortcut);
     println!("\n-- generated text (byte-level tokenizer on an untrained mini model) --");
     for msg in sink_rx.iter() {
         if let FrontendMsg::Done { req_id, full_text } = msg {

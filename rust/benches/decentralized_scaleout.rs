@@ -1,26 +1,41 @@
 //! Decentralized scale-out bench (§4, §5.1, §7.1 shape): aggregate decode
-//! throughput vs. DP-group/thread count, p99 TPOT with vs. without
-//! straggler mitigation under deterministic injected jitter, and a
-//! PD-disaggregated mode at 64 decode groups recording the cross-thread
-//! prefill-handoff latency alongside p99 TPOT.
+//! throughput vs. DP-group/thread count — now up to **256 groups** — with
+//! per-request routing cost measured at every scale (the O(d) sampled
+//! router must stay flat while the group count grows 16×), a before/after
+//! of full-scan vs. sampled routing at 64 groups, p99 TPOT with vs.
+//! without straggler mitigation under deterministic injected jitter, and
+//! a PD-disaggregated mode recording the cross-thread prefill-handoff
+//! latency alongside p99 TPOT.
+//!
+//! Every scale run streams through the §4.2 per-group output plane (one
+//! detokenizing handler thread per DP group, no shared fan-in consumer);
+//! a sink reader counts terminated streams so the 256-group run proves
+//! the output path keeps up.
 //!
 //! Uses the SimModel backend with a fixed injected per-tick cost, so the
 //! workload is sleep-bound: aggregate throughput must scale close to
 //! linearly with the number of decentralized group threads, and a slow
 //! group must only hurt tail TPOT when the router ignores tick EWMAs.
 //!
-//! Run: `cargo bench --bench decentralized_scaleout`
+//! Results are also written machine-readably to `BENCH_scaleout.json`
+//! (schema `scaleout-v1`) so the perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench decentralized_scaleout` (add `-- --quick`
+//! for the CI-sized variant).
 
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use xdeepserve::bench_support::PaperBench;
 use xdeepserve::config::{DecodeLbPolicy, DeploymentMode, ServingConfig};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
 use xdeepserve::coordinator::{ServeRequest, ServingEngine};
 use xdeepserve::disagg::PrefillWorkerSpec;
-use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::model::{DecodeModel, SimModel, Tokenizer};
+use xdeepserve::util::args::Args;
+use xdeepserve::util::json::{obj, Json};
 use xdeepserve::util::stats::Histogram;
 use xdeepserve::workload::straggler::StragglerProfile;
 
@@ -36,44 +51,105 @@ fn specs(n: usize) -> Vec<GroupSpec> {
     (0..n).map(|i| GroupSpec::new(i, 8, 512)).collect()
 }
 
-/// Serve a fixed per-group workload on `n` group threads; returns
-/// (tokens/s aggregate, wall ms).
-fn throughput_run(n: usize) -> (f64, f64) {
+struct ScaleResult {
+    groups: usize,
+    route_samples: usize,
+    tokens_per_s: f64,
+    wall_ms: f64,
+    p99_tpot_ms: f64,
+    /// Mean wall-clock cost of one `ServingEngine::submit` (admission +
+    /// routing + inbox delivery) over the whole run.
+    route_ns_per_req: f64,
+    /// Streams terminated through the per-group output plane.
+    streamed_done: usize,
+}
+
+impl ScaleResult {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("groups", Json::Num(self.groups as f64)),
+            ("route_samples", Json::Num(self.route_samples as f64)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("p99_tpot_ms", Json::Num(self.p99_tpot_ms)),
+            ("route_ns_per_req", Json::Num(self.route_ns_per_req)),
+            ("streamed_done", Json::Num(self.streamed_done as f64)),
+        ])
+    }
+}
+
+/// Serve a fixed per-group workload on `n` decentralized group threads,
+/// streaming through the per-group output plane, timing every submit.
+fn scale_run(n: usize, route_samples: usize) -> ScaleResult {
+    let tokenizer = Tokenizer::new(256, 257, 512);
+    let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
+    // Sink reader: drains the frontend stream live (as a real frontend
+    // would) and counts terminated streams.
+    let reader = thread::spawn(move || {
+        let mut done = 0usize;
+        while let Ok(msg) = sink_rx.recv() {
+            if matches!(msg, FrontendMsg::Done { .. }) {
+                done += 1;
+            }
+        }
+        done
+    });
+    let mut cfg = ServingConfig::default();
+    cfg.route_samples = route_samples;
     let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
         .groups(specs(n))
+        .serving(cfg)
         .straggler(StragglerProfile::uniform(n, TICK_NS))
+        .frontend(tokenizer, sink_tx)
         .spawn()
         .unwrap();
+    let total = n * REQS_PER_GROUP;
     let t0 = Instant::now();
-    for i in 0..(n * REQS_PER_GROUP) as u64 {
-        engine
-            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0))
-            .unwrap();
+    let mut route_ns: u128 = 0;
+    for i in 0..total as u64 {
+        let req = ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0);
+        let ts = Instant::now();
+        engine.submit(req).unwrap();
+        route_ns += ts.elapsed().as_nanos();
+        if i % 64 == 63 {
+            engine.drain();
+        }
     }
-    engine.settle(Duration::from_secs(60)).unwrap();
+    engine.settle(Duration::from_secs(120)).unwrap();
     let groups = engine.shutdown().unwrap();
     let wall_s = t0.elapsed().as_secs_f64();
-    let tokens: usize = groups
-        .iter()
-        .flat_map(|g| g.finished.iter())
-        .map(|r| r.generated.len())
-        .sum();
-    assert_eq!(
-        tokens,
-        n * REQS_PER_GROUP * MAX_NEW,
-        "bench workload must fully complete"
-    );
-    (tokens as f64 / wall_s, wall_s * 1e3)
+    let streamed_done = reader.join().unwrap();
+    let mut tpot = Histogram::new();
+    let mut tokens = 0usize;
+    for g in &groups {
+        for r in &g.finished {
+            tokens += r.generated.len();
+            tpot.record(r.timing.tpot_ms());
+        }
+    }
+    assert_eq!(tokens, total * MAX_NEW, "bench workload must fully complete");
+    ScaleResult {
+        groups: n,
+        route_samples,
+        tokens_per_s: tokens as f64 / wall_s,
+        wall_ms: wall_s * 1e3,
+        p99_tpot_ms: tpot.percentile(99.0),
+        route_ns_per_req: route_ns as f64 / total as f64,
+        streamed_done,
+    }
 }
 
 /// Straggler scenario: group `victim` runs `slow_factor`× slower with
 /// seeded jitter. Returns the p99/mean TPOT (ms) over measured requests.
+/// Runs with sampling off — this is explicitly an ablation of the full
+/// straggler-aware scan.
 fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
     const N: usize = 4;
     const VICTIM: usize = 3;
     let mut serving_cfg = ServingConfig::default();
     serving_cfg.decode_lb = policy;
     serving_cfg.straggler_penalty = penalty;
+    serving_cfg.route_samples = 0; // ablate the full scan, not the sampler
     let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
         .groups(specs(N))
         .serving(serving_cfg)
@@ -126,10 +202,12 @@ fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
 }
 
 /// PD-disaggregated mode at scale: `n` decode-group threads fed by a
-/// prefill plane. Returns (p99 handoff ms, p99 TPOT ms, tokens/s).
+/// prefill plane, submitted in `submit_many` bursts (one amortized view
+/// acquisition per burst). Returns (p99 handoff ms, p99 TPOT ms, tok/s).
 fn pd_run(n: usize, prefill_workers: usize) -> (f64, f64, f64) {
     const PD_MAX_NEW: usize = 8;
     const PD_REQS_PER_GROUP: usize = 3;
+    const BURST: usize = 32;
     let mut engine = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
         .groups(specs(n))
         .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect())
@@ -138,13 +216,16 @@ fn pd_run(n: usize, prefill_workers: usize) -> (f64, f64, f64) {
         .unwrap();
     let t0 = Instant::now();
     let total = (n * PD_REQS_PER_GROUP) as u64;
-    for i in 0..total {
-        engine
-            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], PD_MAX_NEW, 0))
-            .unwrap();
-        if i % 32 == 31 {
-            engine.drain();
+    let mut next = 0u64;
+    while next < total {
+        let burst: Vec<ServeRequest> = (next..total.min(next + BURST as u64))
+            .map(|i| ServeRequest::new(i, vec![256, 1, 2, 3], PD_MAX_NEW, 0))
+            .collect();
+        next += burst.len() as u64;
+        for r in engine.submit_many(burst) {
+            r.unwrap();
         }
+        engine.drain();
     }
     engine.settle(Duration::from_secs(60)).unwrap();
     let groups = engine.shutdown().unwrap();
@@ -170,34 +251,108 @@ fn pd_run(n: usize, prefill_workers: usize) -> (f64, f64, f64) {
 }
 
 fn main() {
+    let args = Args::from_env();
+    let quick = args.has_flag("quick");
     let mut bench = PaperBench::new(
         "Decentralized-scaleout",
-        "per-group worker threads: throughput scaling, straggler mitigation, PD handoff (wall clock)",
+        "per-group worker threads: throughput + O(d) route cost vs. group count, straggler mitigation, PD handoff (wall clock)",
         &["scenario", "value", "detail", "target"],
     );
 
     // ---- aggregate decode throughput vs. group/thread count ----
+    // Small scales pin the thread-scaling shape; big scales (16 → 256,
+    // quick mode stops at 64) pin the O(d) routing cost staying flat.
+    let small: &[usize] = &[1, 2, 4, 8];
+    let big: &[usize] = if quick { &[16, 64] } else { &[16, 64, 128, 256] };
     let mut tput1 = 0.0;
     let mut tput4 = 0.0;
-    for n in [1usize, 2, 4, 8] {
-        let (tps, wall_ms) = throughput_run(n);
+    let mut scale_results: Vec<ScaleResult> = Vec::new();
+    for &n in small.iter().chain(big) {
+        let r = scale_run(n, ServingConfig::default().route_samples);
         if n == 1 {
-            tput1 = tps;
+            tput1 = r.tokens_per_s;
         }
         if n == 4 {
-            tput4 = tps;
+            tput4 = r.tokens_per_s;
         }
         bench.row(&[
-            format!("{n} DP group thread(s)"),
-            format!("{tps:.0} tok/s"),
-            format!("{wall_ms:.1} ms wall"),
-            "scales with threads".into(),
+            format!("{n} DP group thread(s), sampled d={}", r.route_samples),
+            format!("{:.0} tok/s", r.tokens_per_s),
+            format!(
+                "{:.1} ms wall, route {:.0} ns/req, p99 TPOT {:.2} ms, {} streams done",
+                r.wall_ms, r.route_ns_per_req, r.p99_tpot_ms, r.streamed_done
+            ),
+            "throughput scales; route cost flat".into(),
         ]);
+        bench.check(
+            &format!("{n}-group run terminates every stream through its per-group output handler"),
+            r.streamed_done == n * REQS_PER_GROUP,
+        );
+        scale_results.push(r);
     }
     bench.check(
         "aggregate throughput scales >= 2.2x from 1 -> 4 group threads",
         tput4 >= 2.2 * tput1,
     );
+    let route_16 = scale_results
+        .iter()
+        .find(|r| r.groups == 16)
+        .map(|r| r.route_ns_per_req)
+        .unwrap();
+    let biggest = scale_results.last().unwrap();
+    // O(d) sampling: 4-16x more groups must not translate into 4-16x
+    // route cost. Generous 4x bound (plus a 1.5 µs floor) absorbs timer
+    // noise. In --quick mode (shared CI runners) single-shot wall-clock
+    // comparisons are too noisy to gate on: report + record them in the
+    // JSON, and let the full run on a quiet machine enforce the bound.
+    let flat_label = format!(
+        "route cost approximately flat 16 -> {} groups ({:.0} ns vs {:.0} ns)",
+        biggest.groups, route_16, biggest.route_ns_per_req
+    );
+    let flat_ok = biggest.route_ns_per_req <= route_16.max(1_500.0) * 4.0;
+    if quick {
+        bench.row(&[
+            "route-cost flatness (informational in --quick)".into(),
+            format!("{}", if flat_ok { "flat" } else { "NOT flat" }),
+            flat_label.clone(),
+            "gated in the full run".into(),
+        ]);
+    } else {
+        bench.check(&flat_label, flat_ok);
+    }
+    // ---- before/after at 64 groups: full O(N) scan vs. O(d) sampling ----
+    let full_64 = scale_run(64, 0);
+    let sampled_64 = scale_results
+        .iter()
+        .find(|r| r.groups == 64)
+        .expect("64-group sampled run always present");
+    bench.row(&[
+        "64 groups, full-scan routing (before)".into(),
+        format!("route {:.0} ns/req", full_64.route_ns_per_req),
+        format!("{:.0} tok/s", full_64.tokens_per_s),
+        "O(N) baseline".into(),
+    ]);
+    bench.row(&[
+        "64 groups, sampled routing (after)".into(),
+        format!("route {:.0} ns/req", sampled_64.route_ns_per_req),
+        format!("{:.0} tok/s", sampled_64.tokens_per_s),
+        "O(d) fast path".into(),
+    ]);
+    let before_after_ok =
+        sampled_64.route_ns_per_req <= full_64.route_ns_per_req.max(1_500.0) * 2.0;
+    if quick {
+        bench.row(&[
+            "64-group before/after (informational in --quick)".into(),
+            format!("{}", if before_after_ok { "sampled <= 2x full" } else { "REGRESSED" }),
+            "recorded in BENCH_scaleout.json".into(),
+            "gated in the full run".into(),
+        ]);
+    } else {
+        bench.check(
+            "sampled routing at 64 groups not slower than 2x the full scan",
+            before_after_ok,
+        );
+    }
 
     // ---- straggler mitigation: p99 TPOT with vs. without ----
     let (p99_rr, mean_rr, share_rr) = straggler_run(DecodeLbPolicy::RoundRobin, 0.0);
@@ -230,14 +385,15 @@ fn main() {
         share_mit < share_rr,
     );
 
-    // ---- PD-disaggregated mode, driven to 64 decode-group threads ----
+    // ---- PD-disaggregated mode, submit_many bursts ----
+    let mut pd_results = Vec::new();
     for (n, pw) in [(16usize, 2usize), (64, 4)] {
         let (handoff_p99, tpot_p99, tps) = pd_run(n, pw);
         bench.row(&[
             format!("PD: {n} decode groups, {pw} prefill workers"),
             format!("handoff p99 {handoff_p99:.2} ms"),
             format!("p99 TPOT {tpot_p99:.2} ms, {tps:.0} tok/s"),
-            "cross-thread inject".into(),
+            "cross-thread inject, burst submit".into(),
         ]);
         if n == 64 {
             bench.check(
@@ -246,7 +402,52 @@ fn main() {
             );
             bench.check("64-group PD workload completes", tps > 0.0);
         }
+        pd_results.push(obj(vec![
+            ("decode_groups", Json::Num(n as f64)),
+            ("prefill_workers", Json::Num(pw as f64)),
+            ("handoff_p99_ms", Json::Num(handoff_p99)),
+            ("p99_tpot_ms", Json::Num(tpot_p99)),
+            ("tokens_per_s", Json::Num(tps)),
+        ]));
     }
+
+    // ---- machine-readable trajectory record ----
+    let json = obj(vec![
+        ("schema", Json::Str("scaleout-v1".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "scales",
+            Json::Arr(scale_results.iter().map(|r| r.to_json()).collect()),
+        ),
+        (
+            "route_cost_64",
+            obj(vec![
+                ("full_scan_ns_per_req", Json::Num(full_64.route_ns_per_req)),
+                (
+                    "sampled_ns_per_req",
+                    Json::Num(sampled_64.route_ns_per_req),
+                ),
+                (
+                    "route_samples",
+                    Json::Num(sampled_64.route_samples as f64),
+                ),
+            ]),
+        ),
+        (
+            "straggler",
+            obj(vec![
+                ("p99_tpot_ms_roundrobin", Json::Num(p99_rr)),
+                ("p99_tpot_ms_leastkv", Json::Num(p99_lk)),
+                ("p99_tpot_ms_mitigated", Json::Num(p99_mit)),
+                ("victim_share_roundrobin", Json::Num(share_rr as f64)),
+                ("victim_share_mitigated", Json::Num(share_mit as f64)),
+            ]),
+        ),
+        ("pd", Json::Arr(pd_results)),
+    ]);
+    let path = "BENCH_scaleout.json";
+    std::fs::write(path, format!("{json}\n")).expect("write BENCH_scaleout.json");
+    println!("wrote {path}");
 
     std::process::exit(i32::from(!bench.finish()));
 }

@@ -4,17 +4,74 @@
 //! bottleneck — ≥ 100K routing decisions/s on one core, EPLB re-planning
 //! well under the collection cadence, KV admission O(1)-ish, and the
 //! XCCL INT8 codec fast enough to keep transfers bandwidth-bound.
+//!
+//! The decode-router section measures both the raw O(N) scan and the
+//! full shell hot path — seqlock board reads + O(d) power-of-two-choices
+//! sampling — from 16 to 256 board slots: per-request cost must stay
+//! approximately flat while the slot count grows 16×.
 
 use xdeepserve::bench_support::{time_ns, PaperBench};
 use xdeepserve::config::DecodeLbPolicy;
-use xdeepserve::coordinator::decode_sched::{choose_group, GroupStatus};
+use xdeepserve::coordinator::decode_sched::{choose_group, GroupLoadView, GroupStatus};
+use xdeepserve::coordinator::dp_group::DpGroupStatus;
 use xdeepserve::coordinator::prefill_sched::{assign_collaborative, PrefillDpStatus, PrefillItem};
+use xdeepserve::coordinator::{
+    BoardEntry, Dispatcher, ServeRequest, StatusBoard, TeShell,
+};
 use xdeepserve::eplb::algorithm::{place, select_redundant};
 use xdeepserve::eplb::mapping::ReplicaMap;
 use xdeepserve::kvcache::BlockPool;
 use xdeepserve::util::rng::Rng;
 use xdeepserve::workload::expert_skew::skewed_expert_counts;
 use xdeepserve::xccl::quant;
+
+/// Board with one published snapshot per slot (epoch 1), batch limits far
+/// above anything the bench's credit accumulation can reach.
+fn published_board(n: usize) -> StatusBoard {
+    let status = |id: usize| DpGroupStatus {
+        id,
+        queued: id % 3,
+        running: id % 5,
+        batch_limit: 1_000_000,
+        kv_total_blocks: 4096,
+        kv_usage: (id % 97) as f64 / 97.0,
+        healthy: true,
+    };
+    let board = StatusBoard::new(
+        (0..n).map(|i| BoardEntry::initial(status(i))).collect(),
+    );
+    for i in 0..n {
+        board.publish(i, status(i), 1_000_000 + (i as u64 % 7) * 10_000, 1);
+    }
+    board
+}
+
+/// Dispatcher straight over a status board: deliveries are no-ops, so
+/// the measured cost is purely view reads + routing policy. Uses the same
+/// `BoardEntry::load_view` conversion as the production runtime.
+struct BoardDispatch<'a>(&'a StatusBoard);
+
+impl Dispatcher for BoardDispatch<'_> {
+    fn load_views(&mut self) -> Vec<GroupLoadView> {
+        (0..self.0.len()).map(|i| self.0.read(i).load_view()).collect()
+    }
+
+    fn deliver(
+        &mut self,
+        _g: usize,
+        _req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        Ok(())
+    }
+
+    fn n_slots(&self) -> usize {
+        self.0.len()
+    }
+
+    fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
+        (slot < self.0.len()).then(|| self.0.read(slot).load_view())
+    }
+}
 
 fn main() {
     let mut bench = PaperBench::new(
@@ -30,6 +87,7 @@ fn main() {
             group: g,
             running: g % 48,
             batch_limit: 60,
+            kv_total_blocks: 4096,
             kv_usage: (g % 97) as f64 / 97.0,
             healthy: true,
         })
@@ -46,6 +104,83 @@ fn main() {
         ">=100K/s".into(),
     ]);
     bench.check("router >= 100K decisions/s", router_ops >= 100_000.0);
+
+    // ---- seqlock board: O(1) slot read vs. whole-board snapshot ----
+    let board = published_board(256);
+    let mut slot = 0usize;
+    let h_read = time_ns(200, 20_000, || {
+        std::hint::black_box(board.read(slot % 256));
+        slot += 1;
+    });
+    let h_snap = time_ns(20, 500, || {
+        std::hint::black_box(board.snapshot());
+    });
+    bench.row(&[
+        "seqlock board read (1 of 256 slots)".into(),
+        format!("{:.0} ns", h_read.mean()),
+        format!("{:.0}", 1e9 / h_read.mean()),
+        "O(1), lock-free".into(),
+    ]);
+    bench.row(&[
+        "seqlock board snapshot (256 slots)".into(),
+        format!("{:.2} us", h_snap.mean() / 1e3),
+        format!("{:.0}", 1e9 / h_snap.mean()),
+        "health/EPLB only".into(),
+    ]);
+    bench.check("single-slot board read under 1 us", h_read.mean() < 1_000.0);
+
+    // ---- shell hot path: O(d) sampled submit, 16 -> 256 board slots ----
+    // The full submit (credit fold + sampling + policy + no-op delivery)
+    // must cost about the same at 256 slots as at 16 — that flatness is
+    // the whole point of power-of-two-choices routing.
+    let mut sampled_ns = Vec::new();
+    for &n in &[16usize, 64, 128, 256] {
+        let board = published_board(n);
+        let mut d = BoardDispatch(&board);
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_route_seed(11);
+        let mut id = 0u64;
+        let h = time_ns(500, 20_000, || {
+            id += 1;
+            std::hint::black_box(
+                shell
+                    .submit(ServeRequest::new(id, vec![256, 1, 2], 8, 0), &mut d)
+                    .unwrap(),
+            );
+        });
+        bench.row(&[
+            format!("sampled submit (d=2, {n} slots)"),
+            format!("{:.0} ns", h.mean()),
+            format!("{:.0}", 1e9 / h.mean()),
+            "flat in slot count".into(),
+        ]);
+        sampled_ns.push(h.mean());
+    }
+    let full_board = published_board(256);
+    let mut d_full = BoardDispatch(&full_board);
+    let mut shell_full = TeShell::new(DecodeLbPolicy::LeastKv).with_route_samples(0);
+    let mut id = 0u64;
+    let h_full = time_ns(50, 2_000, || {
+        id += 1;
+        std::hint::black_box(
+            shell_full
+                .submit(ServeRequest::new(id, vec![256, 1, 2], 8, 0), &mut d_full)
+                .unwrap(),
+        );
+    });
+    bench.row(&[
+        "full-scan submit (256 slots)".into(),
+        format!("{:.2} us", h_full.mean() / 1e3),
+        format!("{:.0}", 1e9 / h_full.mean()),
+        "O(N) fallback".into(),
+    ]);
+    bench.check(
+        "sampled submit cost flat 16 -> 256 slots (<= 3x, vs 16x slots)",
+        sampled_ns[3] <= sampled_ns[0].max(300.0) * 3.0,
+    );
+    bench.check(
+        "sampled submit beats the 256-slot full scan",
+        sampled_ns[3] < h_full.mean(),
+    );
 
     // ---- prefill collaborative assignment (24 reqs / 32 DPs) ----
     let h = time_ns(20, 300, || {

@@ -215,6 +215,11 @@ pub struct ServingConfig {
     pub straggler_penalty: f64,
     /// EWMA weight for the per-group tick-latency signal.
     pub tick_ewma_alpha: f64,
+    /// Status-board slots sampled per request by the O(d)
+    /// power-of-d-choices routing fast path (0 = always full scan).
+    /// Applies to `decode_lb = "least_kv"` only: RoundRobin keeps its
+    /// deterministic full-scan cycle regardless of this knob.
+    pub route_samples: usize,
 }
 
 impl Default for ServingConfig {
@@ -232,6 +237,7 @@ impl Default for ServingConfig {
             kv_reserve_frac: 0.1,
             straggler_penalty: 0.5,
             tick_ewma_alpha: 0.25,
+            route_samples: 2,
         }
     }
 }
@@ -344,6 +350,11 @@ impl Config {
             // (TeShell treats 0 as "no queue limit").
             cfg.serving.dp_queue_limit = v as usize;
         }
+        if let Some(v) = toml.try_u64("serving.route_samples")? {
+            // 0 is meaningful: it disables the O(d) sampled routing fast
+            // path (every submit takes the full straggler-aware scan).
+            cfg.serving.route_samples = v as usize;
+        }
         if let Some(v) = toml.try_f64("serving.tick_ewma_alpha")? {
             anyhow::ensure!(
                 v > 0.0 && v <= 1.0,
@@ -411,9 +422,10 @@ mod tests {
         assert_eq!(cfg.serving.mtp_layers, 2);
         assert!(!cfg.serving.int8);
         assert_eq!(cfg.sla.tpot_ms, 50.0);
-        // defaults for the straggler knobs
+        // defaults for the straggler/routing knobs
         assert_eq!(cfg.serving.straggler_penalty, 0.5);
         assert_eq!(cfg.serving.tick_ewma_alpha, 0.25);
+        assert_eq!(cfg.serving.route_samples, 2);
     }
 
     fn write_cfg(name: &str, body: &str) -> String {
@@ -498,5 +510,15 @@ mod tests {
         assert_eq!(cfg.serving.straggler_penalty, 1.25);
         assert_eq!(cfg.serving.tick_ewma_alpha, 0.5);
         assert_eq!(cfg.serving.decode_lb, DecodeLbPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn route_samples_parses_including_disable() {
+        let p = write_cfg("rs.toml", "[serving]\nroute_samples = 4\n");
+        assert_eq!(Config::from_file(&p).unwrap().serving.route_samples, 4);
+
+        // 0 = sampling disabled (full-scan routing), not an error
+        let p = write_cfg("rs0.toml", "[serving]\nroute_samples = 0\n");
+        assert_eq!(Config::from_file(&p).unwrap().serving.route_samples, 0);
     }
 }

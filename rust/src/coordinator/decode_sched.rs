@@ -14,6 +14,9 @@ pub struct GroupStatus {
     pub group: usize,
     pub running: usize,
     pub batch_limit: usize,
+    /// Total KV blocks in the group's pool (0 = unknown — KV-size-aware
+    /// admission then skips this group's headroom check).
+    pub kv_total_blocks: usize,
     /// KV usage fraction including reservations (see kvcache::KvUsage).
     pub kv_usage: f64,
     pub healthy: bool,
@@ -22,6 +25,20 @@ pub struct GroupStatus {
 impl GroupStatus {
     pub fn has_slot(&self) -> bool {
         self.healthy && self.running < self.batch_limit
+    }
+
+    /// Estimated free KV blocks from the published usage fraction (which
+    /// already folds in reservations). Stale by one publish like every
+    /// board-derived signal.
+    pub fn kv_free_blocks(&self) -> usize {
+        ((1.0 - self.kv_usage).max(0.0) * self.kv_total_blocks as f64) as usize
+    }
+
+    /// True when the group can plausibly hold `need_blocks` more KV
+    /// blocks. Groups with an unknown pool size (`kv_total_blocks == 0`)
+    /// pass — there is nothing to check against.
+    pub fn kv_headroom(&self, need_blocks: usize) -> bool {
+        self.kv_total_blocks == 0 || self.kv_free_blocks() >= need_blocks
     }
 }
 
@@ -99,6 +116,48 @@ fn median_ewma_ns(views: &[&GroupLoadView]) -> u64 {
     v[v.len() / 2]
 }
 
+/// Median tick EWMA over the *routable* (slot-free healthy) views — the
+/// same eligible set [`choose_group_straggler_aware`] computes its median
+/// over, so the shell's cached demotion threshold can never diverge from
+/// the full scan's (e.g. an unhealthy straggler's stale 40 ms EWMA must
+/// not drag the median up and mask a live straggler). 0 when no eligible
+/// group has a sample yet. The shell caches this from its periodic full
+/// scans so the O(d) sampled path can hard-demote without touching every
+/// slot.
+pub fn median_tick_ewma_ns(views: &[GroupLoadView]) -> u64 {
+    let refs: Vec<&GroupLoadView> = views.iter().filter(|v| v.status.has_slot()).collect();
+    median_ewma_ns(&refs)
+}
+
+/// §4.4 routing score: KV usage plus the soft straggler penalty relative
+/// to the (possibly cached) median tick EWMA. Shared by the full scan and
+/// the O(d) sampled path so the two can never rank groups differently.
+pub fn straggler_score(v: &GroupLoadView, median_ns: u64, penalty: f64) -> f64 {
+    let mut s = v.status.kv_usage;
+    if median_ns > 0 && penalty > 0.0 {
+        let ratio = v.tick_ewma_ns as f64 / median_ns as f64;
+        s += penalty * (ratio - 1.0).max(0.0);
+    }
+    s
+}
+
+/// The complete LeastKv candidate order — straggler-aware score, then
+/// pending count, then group id. One definition shared by the full scan
+/// and the O(d) sampled path, so a future tie-break change can never make
+/// the two rank groups differently.
+pub fn rank_least_kv(
+    a: &GroupLoadView,
+    b: &GroupLoadView,
+    median_ns: u64,
+    penalty: f64,
+) -> std::cmp::Ordering {
+    straggler_score(a, median_ns, penalty)
+        .partial_cmp(&straggler_score(b, median_ns, penalty))
+        .unwrap()
+        .then(a.status.running.cmp(&b.status.running))
+        .then(a.status.group.cmp(&b.status.group))
+}
+
 /// Straggler-aware variant of [`choose_group`] (§4 "techniques to mitigate
 /// stragglers and synchronization variance"): groups with a rising
 /// tick-latency EWMA are soft-penalized under `LeastKv` (score =
@@ -136,25 +195,10 @@ pub fn choose_group_straggler_aware(
             let ids: Vec<usize> = pool.iter().map(|v| v.status.group).collect();
             round_robin_pick(&ids, rr_counter)
         }
-        DecodeLbPolicy::LeastKv => {
-            let score = |v: &GroupLoadView| {
-                let mut s = v.status.kv_usage;
-                if med > 0 {
-                    let ratio = v.tick_ewma_ns as f64 / med as f64;
-                    s += penalty * (ratio - 1.0).max(0.0);
-                }
-                s
-            };
-            pool.into_iter()
-                .min_by(|a, b| {
-                    score(a)
-                        .partial_cmp(&score(b))
-                        .unwrap()
-                        .then(a.status.running.cmp(&b.status.running))
-                        .then(a.status.group.cmp(&b.status.group))
-                })
-                .map(|v| v.status.group)
-        }
+        DecodeLbPolicy::LeastKv => pool
+            .into_iter()
+            .min_by(|a, b| rank_least_kv(a, b, med, penalty))
+            .map(|v| v.status.group),
     }
 }
 
@@ -168,13 +212,16 @@ pub fn choose_group_straggler_aware(
 /// share traffic instead of the lowest id absorbing it. When no domain has
 /// a free slot the views pass through unchanged (the policy layer then
 /// parks the request).
+///
+/// Takes a slice so burst callers (`TeShell::submit_many`) copy only the
+/// selected domain's views per request, not the whole board.
 pub fn filter_least_loaded_domain(
-    views: Vec<GroupLoadView>,
+    views: &[GroupLoadView],
     domains: usize,
     rr_domain: &mut usize,
 ) -> Vec<GroupLoadView> {
     if domains <= 1 {
-        return views;
+        return views.to_vec();
     }
     let mut best: Option<(usize, usize)> = None; // (domain, pending)
     for k in 0..domains {
@@ -200,11 +247,12 @@ pub fn filter_least_loaded_domain(
         Some((dom, _)) => {
             *rr_domain = (dom + 1) % domains;
             views
-                .into_iter()
+                .iter()
                 .filter(|v| v.status.group % domains == dom)
+                .copied()
                 .collect()
         }
-        None => views,
+        None => views.to_vec(),
     }
 }
 
@@ -228,7 +276,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn g(group: usize, running: usize, limit: usize, kv: f64) -> GroupStatus {
-        GroupStatus { group, running, batch_limit: limit, kv_usage: kv, healthy: true }
+        GroupStatus {
+            group,
+            running,
+            batch_limit: limit,
+            kv_total_blocks: 0,
+            kv_usage: kv,
+            healthy: true,
+        }
     }
 
     #[test]
@@ -367,21 +422,21 @@ mod tests {
         };
         let mut rr = 0;
         // equal load: tie breaks at the cursor (d0), cursor advances
-        let f = filter_least_loaded_domain(views([0, 0, 0, 0]), 2, &mut rr);
+        let f = filter_least_loaded_domain(&views([0, 0, 0, 0]), 2, &mut rr);
         assert!(f.iter().all(|v| v.status.group % 2 == 0));
         assert_eq!(rr, 1);
         // next tie goes to d1
-        let f = filter_least_loaded_domain(views([0, 0, 0, 0]), 2, &mut rr);
+        let f = filter_least_loaded_domain(&views([0, 0, 0, 0]), 2, &mut rr);
         assert!(f.iter().all(|v| v.status.group % 2 == 1));
         // unequal load: the lighter domain wins regardless of the cursor
-        let f = filter_least_loaded_domain(views([5, 0, 5, 1]), 2, &mut rr);
+        let f = filter_least_loaded_domain(&views([5, 0, 5, 1]), 2, &mut rr);
         assert!(f.iter().all(|v| v.status.group % 2 == 1), "d1 pending 1 < d0 10");
         // a domain with no free slot is skipped entirely
         let full = views([8, 0, 8, 0]);
-        let f = filter_least_loaded_domain(full, 2, &mut rr);
+        let f = filter_least_loaded_domain(&full, 2, &mut rr);
         assert!(f.iter().all(|v| v.status.group % 2 == 1), "full d0 skipped");
         // domains == 1 is a no-op
-        let f = filter_least_loaded_domain(views([1, 2, 3, 4]), 1, &mut rr);
+        let f = filter_least_loaded_domain(&views([1, 2, 3, 4]), 1, &mut rr);
         assert_eq!(f.len(), 4);
     }
 

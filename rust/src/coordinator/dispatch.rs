@@ -28,26 +28,59 @@ pub enum DispatchOutcome {
     Parked,
 }
 
-/// Typed shell-side admission rejection (`serving.dp_queue_limit`): the
-/// aggregate pending load — parked requests plus every healthy group's
-/// in-flight count — has reached `dp_queue_limit × healthy groups`, so the
-/// request is shed *before* it can silently queue and blow KV pools.
+/// Typed shell-side admission rejection. Every variant carries a
+/// `retry_after_ms` hint derived from the board's tick-EWMA median —
+/// clients back off proportionally to the *actual* decode pace instead of
+/// guessing (a straggling fleet hands out longer hints than a healthy
+/// one).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmissionError {
+    /// `serving.dp_queue_limit` admission: the aggregate pending load —
+    /// parked requests plus every healthy group's in-flight count — has
+    /// reached `dp_queue_limit × healthy groups`, so the request is shed
+    /// *before* it can silently queue and blow KV pools.
     QueueFull {
         /// Pending load observed at rejection (waiting + per-group counts).
         pending: usize,
         /// `dp_queue_limit × healthy groups` at rejection time.
         capacity: usize,
+        /// Suggested client backoff (see enum docs).
+        retry_after_ms: u64,
     },
+    /// KV-size-aware admission: no candidate group has the estimated
+    /// `BlockPool::blocks_for_tokens(prompt + expected_output)` headroom,
+    /// so admitting would only park the request against a full pool.
+    KvExhausted {
+        /// Estimated blocks the request needs (prompt + expected output).
+        need_blocks: usize,
+        /// Best free-block count observed among the candidate groups.
+        free_blocks: usize,
+        /// Suggested client backoff (see enum docs).
+        retry_after_ms: u64,
+    },
+}
+
+impl AdmissionError {
+    /// Backoff hint: roughly how long until the decode plane has made
+    /// enough progress to be worth retrying.
+    pub fn retry_after_ms(&self) -> u64 {
+        match self {
+            AdmissionError::QueueFull { retry_after_ms, .. }
+            | AdmissionError::KvExhausted { retry_after_ms, .. } => *retry_after_ms,
+        }
+    }
 }
 
 impl fmt::Display for AdmissionError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            AdmissionError::QueueFull { pending, capacity } => write!(
+            AdmissionError::QueueFull { pending, capacity, retry_after_ms } => write!(
                 f,
-                "admission rejected: {pending} pending requests >= dp queue capacity {capacity}"
+                "admission rejected: {pending} pending requests >= dp queue capacity {capacity} (retry after {retry_after_ms} ms)"
+            ),
+            AdmissionError::KvExhausted { need_blocks, free_blocks, retry_after_ms } => write!(
+                f,
+                "admission rejected: request needs ~{need_blocks} KV blocks, best candidate group has {free_blocks} free (retry after {retry_after_ms} ms)"
             ),
         }
     }
@@ -84,6 +117,22 @@ pub trait Dispatcher {
     /// board publish.
     fn tracks_inflight(&self) -> bool {
         false
+    }
+
+    /// Number of routing slots `view_slot` accepts (0 when the backend
+    /// has no O(1) slot reads — the shell then always full-scans).
+    fn n_slots(&self) -> usize {
+        0
+    }
+
+    /// O(1) routing view of one slot, for the power-of-d-choices fast
+    /// path: the shell samples `serving.route_samples` slots per request
+    /// instead of snapshotting all N. `None` (the default) means the
+    /// backend cannot read a single slot cheaply and the caller must use
+    /// `load_views`. Implementations must index slots identically to
+    /// `load_views` order.
+    fn view_slot(&mut self, _slot: usize) -> Option<GroupLoadView> {
+        None
     }
 }
 
@@ -155,6 +204,14 @@ impl Dispatcher for RuntimeDispatch<'_> {
     fn demote(&mut self, group_id: usize) {
         self.0.demote(group_id);
     }
+
+    fn n_slots(&self) -> usize {
+        self.0.n_groups()
+    }
+
+    fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
+        self.0.view_slot(slot)
+    }
 }
 
 #[cfg(test)]
@@ -179,9 +236,14 @@ mod tests {
     }
 
     #[test]
-    fn admission_error_formats_counts() {
-        let e = AdmissionError::QueueFull { pending: 12, capacity: 8 };
+    fn admission_error_formats_counts_and_retry_hint() {
+        let e = AdmissionError::QueueFull { pending: 12, capacity: 8, retry_after_ms: 17 };
         let s = e.to_string();
-        assert!(s.contains("12") && s.contains('8'), "{s}");
+        assert!(s.contains("12") && s.contains('8') && s.contains("17"), "{s}");
+        assert_eq!(e.retry_after_ms(), 17);
+        let e = AdmissionError::KvExhausted { need_blocks: 9, free_blocks: 2, retry_after_ms: 5 };
+        let s = e.to_string();
+        assert!(s.contains('9') && s.contains('2') && s.contains('5'), "{s}");
+        assert_eq!(e.retry_after_ms(), 5);
     }
 }

@@ -49,6 +49,10 @@ pub struct DpGroupStatus {
     pub queued: usize,
     pub running: usize,
     pub batch_limit: usize,
+    /// Total KV blocks in the group's pool (0 = unknown/unbounded). With
+    /// `kv_usage` this lets the shell estimate free blocks for
+    /// KV-size-aware admission without a cross-thread call.
+    pub kv_total_blocks: usize,
     pub kv_usage: f64,
     pub healthy: bool,
 }
@@ -101,6 +105,7 @@ impl DpGroup {
             queued: self.queue.len() + self.prefilled.len(),
             running: self.running.len(),
             batch_limit: self.batch_limit,
+            kv_total_blocks: self.pool.usage().total_blocks,
             kv_usage: self.pool.usage().fraction(),
             healthy: self.healthy,
         }
@@ -115,6 +120,7 @@ impl DpGroup {
             // limit and break KV ties.
             running: self.running.len() + self.queue.len() + self.prefilled.len(),
             batch_limit: self.batch_limit,
+            kv_total_blocks: self.pool.usage().total_blocks,
             kv_usage: self.pool.usage().fraction(),
             healthy: self.healthy,
         }

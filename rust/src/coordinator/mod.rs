@@ -18,11 +18,14 @@
 //!   on one thread (`DpGroup::admit_from_queue` /
 //!   `DpGroup::decode_iteration`); used by router unit tests.
 //! * [`dispatch::RuntimeDispatch`] — one OS thread per group ([`worker`])
-//!   running its own tick loop, publishing snapshots to the lock-light
-//!   [`status_board::StatusBoard`] that the shell reads *stale-tolerantly*,
+//!   running its own tick loop, publishing snapshots to the lock-free
+//!   seqlock [`status_board::StatusBoard`] that the shell reads
+//!   *stale-tolerantly* — O(d) power-of-d-choices sampling on the hot
+//!   path (`TeShell::submit`), whole-board scans only for health/EPLB —
 //!   with straggler mitigation
-//!   ([`decode_sched::choose_group_straggler_aware`]) and publish-epoch
-//!   heartbeats (`reliability::heartbeat::GroupPulseMonitor`).
+//!   ([`decode_sched::choose_group_straggler_aware`]), publish-epoch
+//!   heartbeats (`reliability::heartbeat::GroupPulseMonitor`), and one
+//!   output handler thread per group ([`output::OutputPlane`], §4.2).
 //! * the PD dispatcher (inside [`serving`]) — routes the decode group,
 //!   then delivers to a `disagg::pd::PrefillPlane` worker that injects
 //!   the prefilled KV into that group's inbox (§5.1 step 8).
@@ -42,10 +45,12 @@ pub mod worker;
 
 pub use dispatch::{AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch, SyncGroups};
 pub use dp_group::{DpGroup, DpGroupStatus, PrefilledSeq};
+pub use output::{OutputPlane, OutputShortcut};
 pub use request::{RequestState, ServeRequest};
 pub use serving::{ServingEngine, ServingEngineBuilder};
 pub use status_board::{BoardEntry, StatusBoard};
 pub use te_shell::TeShell;
 pub use worker::{
     engine_model_factory, DecentralizedRuntime, GroupSpec, InboxMsg, Injector, ModelFactory,
+    OutputWiring,
 };

@@ -2,7 +2,15 @@
 //! handler for output processing — detokenization and stream parsing — and
 //! relays results directly to the frontend, bypassing the TE-shell so
 //! response handling is fully decentralized.
+//!
+//! [`OutputShortcut`] is one handler (channel + consumer thread);
+//! [`OutputPlane`] is the production wiring — one handler *per DP group*,
+//! mirroring §4.2's child-process model, so detokenization parallelizes
+//! across groups instead of funneling every group's tokens through a
+//! single shared consumer (which becomes the coordinator-side bottleneck
+//! past a few dozen groups).
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread;
 
@@ -79,6 +87,54 @@ impl Drop for OutputShortcut {
     }
 }
 
+/// Per-group output handlers (§4.2): one [`OutputShortcut`] thread per DP
+/// group, all relaying parsed [`FrontendMsg`]s into one frontend `sink`.
+/// Per-request ordering is preserved (a request's tokens all come from
+/// its own group, hence its own handler); cross-request interleaving in
+/// the sink is unordered, as it already was with the shared consumer.
+///
+/// Dropping the plane sends each handler its shutdown marker and joins
+/// it, so everything the groups emitted before the drop reaches the sink
+/// first. `ServingEngine::shutdown` drops its plane only after joining
+/// the decode workers — by then every event is already queued, so a
+/// post-shutdown sink reader sees the complete stream, then disconnect.
+pub struct OutputPlane {
+    handlers: Vec<(usize, OutputShortcut)>,
+}
+
+impl OutputPlane {
+    /// One handler thread per id in `group_ids`; every handler forwards
+    /// into a clone of `sink`.
+    pub fn spawn(tokenizer: Tokenizer, sink: mpsc::Sender<FrontendMsg>, group_ids: &[usize]) -> Self {
+        let handlers = group_ids
+            .iter()
+            .map(|&gid| (gid, OutputShortcut::spawn(tokenizer.clone(), sink.clone())))
+            .collect();
+        Self { handlers }
+    }
+
+    pub fn n_handlers(&self) -> usize {
+        self.handlers.len()
+    }
+
+    /// The event sender a specific group should emit into.
+    pub fn sender_for(&self, group_id: usize) -> Option<mpsc::Sender<OutputEvent>> {
+        self.handlers
+            .iter()
+            .find(|(id, _)| *id == group_id)
+            .map(|(_, h)| h.sender())
+    }
+
+    /// Group-id → sender map in the shape `worker::OutputWiring::PerGroup`
+    /// consumes.
+    pub fn wiring(&self) -> HashMap<usize, mpsc::Sender<OutputEvent>> {
+        self.handlers
+            .iter()
+            .map(|(id, h)| (*id, h.sender()))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +181,39 @@ mod tests {
         }
         assert_eq!(per_req[&1], "ab");
         assert_eq!(per_req[&2], "x");
+    }
+
+    #[test]
+    fn plane_runs_one_handler_per_group_into_one_sink() {
+        let tk = Tokenizer::new(256, 257, 512);
+        let (sink_tx, sink_rx) = mpsc::channel();
+        let plane = OutputPlane::spawn(tk, sink_tx, &[0, 3, 7]);
+        assert_eq!(plane.n_handlers(), 3);
+        assert!(plane.sender_for(1).is_none(), "unknown group has no handler");
+        let wiring = plane.wiring();
+        assert_eq!(wiring.len(), 3);
+        for (k, gid) in [0usize, 3, 7].iter().enumerate() {
+            let tx = plane.sender_for(*gid).unwrap();
+            tx.send(OutputEvent::Token { req_id: k as u64, token: 97 + k as i32 })
+                .unwrap();
+            tx.send(OutputEvent::Finished { req_id: k as u64 }).unwrap();
+        }
+        // plane drop = per-handler shutdown markers + joins: everything
+        // queued lands in the sink, then the sink disconnects
+        drop(plane);
+        let mut done = std::collections::HashMap::new();
+        let mut chunks = 0;
+        while let Ok(msg) = sink_rx.recv() {
+            match msg {
+                FrontendMsg::Chunk { .. } => chunks += 1,
+                FrontendMsg::Done { req_id, full_text } => {
+                    done.insert(req_id, full_text);
+                }
+            }
+        }
+        assert_eq!(chunks, 3);
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[&0], "a");
+        assert_eq!(done[&2], "c");
     }
 }

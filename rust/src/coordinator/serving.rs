@@ -29,11 +29,12 @@ use crate::coordinator::dispatch::{
     AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch,
 };
 use crate::coordinator::dp_group::DpGroup;
-use crate::coordinator::output::OutputEvent;
+use crate::coordinator::output::{FrontendMsg, OutputEvent, OutputPlane};
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::te_shell::TeShell;
-use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring};
 use crate::disagg::pd::{choose_prefill_te, PrefillJob, PrefillPlane, PrefillWorkerSpec};
+use crate::model::Tokenizer;
 use crate::reliability::heartbeat::GroupPulseMonitor;
 use crate::workload::straggler::StragglerProfile;
 
@@ -101,6 +102,16 @@ impl Dispatcher for PdDispatch<'_> {
         // so the shell must not also credit it (double count)
         true
     }
+
+    fn n_slots(&self) -> usize {
+        self.runtime.n_groups()
+    }
+
+    fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
+        let mut v = self.runtime.view_slot(slot)?;
+        v.status.running += self.plane.inflight_for_slot(slot);
+        Some(v)
+    }
 }
 
 /// Builder for [`ServingEngine`]; start from [`ServingEngine::builder`].
@@ -111,6 +122,7 @@ pub struct ServingEngineBuilder {
     groups: Vec<GroupSpec>,
     straggler: Option<StragglerProfile>,
     out_tx: Option<mpsc::Sender<OutputEvent>>,
+    frontend: Option<(Tokenizer, mpsc::Sender<FrontendMsg>)>,
     prefill_workers: Vec<PrefillWorkerSpec>,
     prefill_factory: Option<ModelFactory>,
     long_seq_threshold: usize,
@@ -146,9 +158,23 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// Output-shortcut sink cloned into every decode group.
+    /// Raw shared event sink cloned into every decode group — a legacy
+    /// single fan-in, kept for tests that tap `OutputEvent`s directly.
+    /// Production streaming should use [`Self::frontend`], which scales:
+    /// one output thread per group instead of one for all of them.
     pub fn output(mut self, tx: mpsc::Sender<OutputEvent>) -> Self {
         self.out_tx = Some(tx);
+        self
+    }
+
+    /// §4.2 per-group output handlers: the engine spawns an
+    /// [`OutputPlane`] — one detokenizing consumer thread per decode
+    /// group — all relaying parsed [`FrontendMsg`]s into `sink`. The
+    /// plane lives inside the engine and is joined at the end of
+    /// [`ServingEngine::shutdown`], after the decode workers, so the sink
+    /// sees every emitted message and then disconnects.
+    pub fn frontend(mut self, tokenizer: Tokenizer, sink: mpsc::Sender<FrontendMsg>) -> Self {
+        self.frontend = Some((tokenizer, sink));
         self
     }
 
@@ -193,12 +219,26 @@ impl ServingEngineBuilder {
         if self.mode != DeploymentMode::PdDisaggregated && !self.prefill_workers.is_empty() {
             bail!("prefill workers are only valid in DeploymentMode::PdDisaggregated");
         }
+        if self.out_tx.is_some() && self.frontend.is_some() {
+            bail!("choose one output wiring: raw shared sink OR per-group frontend plane");
+        }
         let n = self.groups.len();
         let straggler = self.straggler.unwrap_or_else(|| StragglerProfile::none(n));
+        // §4.2 child-handler model: one output thread per decode group,
+        // spawned before the workers so every group gets its sender.
+        let ids: Vec<usize> = self.groups.iter().map(|g| g.id).collect();
+        let plane = self
+            .frontend
+            .map(|(tokenizer, sink)| OutputPlane::spawn(tokenizer, sink, &ids));
+        let wiring = match (&plane, self.out_tx) {
+            (Some(p), _) => OutputWiring::PerGroup(p.wiring()),
+            (None, Some(tx)) => OutputWiring::Shared(tx),
+            (None, None) => OutputWiring::None,
+        };
         let runtime = DecentralizedRuntime::spawn(
             &self.groups,
             straggler,
-            self.out_tx,
+            wiring,
             self.factory.clone(),
         )?;
         let prefill = match self.mode {
@@ -222,6 +262,7 @@ impl ServingEngineBuilder {
             shell,
             runtime,
             prefill,
+            output_plane: plane,
             long_seq_threshold: self.long_seq_threshold,
             monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
         })
@@ -236,6 +277,9 @@ pub struct ServingEngine {
     shell: TeShell,
     runtime: DecentralizedRuntime,
     prefill: Option<PrefillPlane>,
+    /// Per-group output handlers (`builder.frontend(..)`); joined at the
+    /// end of `shutdown`, after the decode workers.
+    output_plane: Option<OutputPlane>,
     long_seq_threshold: usize,
     monitor: GroupPulseMonitor,
 }
@@ -249,6 +293,7 @@ impl ServingEngine {
             groups: Vec::new(),
             straggler: None,
             out_tx: None,
+            frontend: None,
             prefill_workers: Vec::new(),
             prefill_factory: None,
             long_seq_threshold: DEFAULT_LONG_SEQ_THRESHOLD,
@@ -279,6 +324,17 @@ impl ServingEngine {
         }
     }
 
+    /// Stamp an unset arrival time with the runtime clock (shared by
+    /// [`Self::submit`] and [`Self::submit_many`] so the two can never
+    /// diverge on timing semantics).
+    fn stamp_arrival(&self, req: &mut ServeRequest) {
+        if req.timing.arrival_ns == 0 {
+            let now = self.runtime.now_ns();
+            req.arrival_ns = now;
+            req.timing.arrival_ns = now;
+        }
+    }
+
     /// Submit one request: queue-limit admission, then mode-appropriate
     /// routing and delivery. `Ok(Dispatched)`/`Ok(Parked)` on success
     /// (parked requests are retried by [`Self::drain`]);
@@ -288,12 +344,22 @@ impl ServingEngine {
         &mut self,
         mut req: ServeRequest,
     ) -> std::result::Result<DispatchOutcome, AdmissionError> {
-        if req.timing.arrival_ns == 0 {
-            let now = self.runtime.now_ns();
-            req.arrival_ns = now;
-            req.timing.arrival_ns = now;
-        }
+        self.stamp_arrival(&mut req);
         self.with_dispatcher(|shell, d| shell.submit(req, d))
+    }
+
+    /// Submit a burst of requests with one amortized view acquisition
+    /// (`TeShell::submit_many`): the whole-board snapshot is taken once
+    /// for the burst instead of once per request. Outcomes map 1:1 to
+    /// the input order; the same admission rules apply per request.
+    pub fn submit_many(
+        &mut self,
+        mut reqs: Vec<ServeRequest>,
+    ) -> Vec<std::result::Result<DispatchOutcome, AdmissionError>> {
+        for req in reqs.iter_mut() {
+            self.stamp_arrival(req);
+        }
+        self.with_dispatcher(|shell, d| shell.submit_many(reqs, d))
     }
 
     /// Retry parked requests; returns how many left the waiting list.
@@ -404,14 +470,19 @@ impl ServingEngine {
                 eprintln!("serving-engine: parked request {} lost all workers", r.id);
             }
         }
-        let Self { runtime, prefill, .. } = self;
+        let Self { runtime, prefill, output_plane, .. } = self;
         // join the prefill plane first, but never skip the decode join on
         // a prefill error — served work must not be discarded
         let prefill_result = match prefill {
             Some(plane) => plane.shutdown().map(Some),
             None => Ok(None),
         };
-        let groups = runtime.shutdown()?;
+        let groups = runtime.shutdown();
+        // decode workers have exited, so every output event is queued:
+        // dropping the plane now joins each per-group handler after it
+        // drains, then the frontend sink disconnects
+        drop(output_plane);
+        let groups = groups?;
         match prefill_result {
             Ok(Some(orphans)) if !orphans.is_empty() => {
                 // only reachable when a decode worker died mid-run; if it
@@ -522,9 +593,12 @@ mod tests {
         engine.submit(req(1, 64)).unwrap();
         // capacity = 1 × 1 healthy group → the second submission sheds
         let e = engine.submit(req(2, 4)).unwrap_err();
-        let AdmissionError::QueueFull { pending, capacity } = e;
+        let AdmissionError::QueueFull { pending, capacity, retry_after_ms } = e else {
+            panic!("expected QueueFull, got {e:?}");
+        };
         assert_eq!(capacity, 1);
         assert!(pending >= 1);
+        assert!(retry_after_ms >= 1, "shed responses always carry a backoff hint");
         let groups = engine.shutdown().unwrap();
         assert_eq!(groups[0].finished.len(), 1, "rejected request never entered");
     }
@@ -547,6 +621,82 @@ mod tests {
             .finished
             .iter()
             .all(|r| r.state == RequestState::Failed));
+    }
+
+    #[test]
+    fn frontend_plane_streams_per_group_and_closes_after_shutdown() {
+        use std::collections::HashMap;
+        // §4.2 per-group output handlers, end to end: every request's
+        // streamed chunks reassemble into its Done text, and the sink
+        // disconnects once shutdown has joined the plane.
+        let tokenizer = Tokenizer::new(256, 257, 512);
+        let (sink_tx, sink_rx) = mpsc::channel();
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(3, 4, 256)
+            .frontend(tokenizer, sink_tx)
+            .spawn()
+            .unwrap();
+        for i in 0..9u64 {
+            engine.submit(req(i, 4)).unwrap();
+            engine.drain();
+        }
+        engine.settle(Duration::from_secs(20)).unwrap();
+        let groups = engine.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 9);
+        let mut chunks: HashMap<u64, String> = HashMap::new();
+        let mut done: HashMap<u64, String> = HashMap::new();
+        // shutdown already joined the plane: the sink drains then closes
+        while let Ok(msg) = sink_rx.recv() {
+            match msg {
+                crate::coordinator::output::FrontendMsg::Chunk { req_id, text } => {
+                    chunks.entry(req_id).or_default().push_str(&text)
+                }
+                crate::coordinator::output::FrontendMsg::Done { req_id, full_text } => {
+                    assert!(done.insert(req_id, full_text).is_none(), "dup done");
+                }
+            }
+        }
+        assert_eq!(done.len(), 9, "every request's stream terminated");
+        for (id, full) in &done {
+            assert_eq!(&chunks[id], full, "req {id}: chunks reassemble into Done text");
+            assert_eq!(full.len(), 4, "SimModel emits one letter per token");
+        }
+    }
+
+    #[test]
+    fn output_and_frontend_wirings_are_mutually_exclusive() {
+        let (raw_tx, _raw_rx) = mpsc::channel();
+        let (sink_tx, _sink_rx) = mpsc::channel();
+        let err = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .output(raw_tx)
+            .frontend(Tokenizer::new(256, 257, 512), sink_tx)
+            .spawn();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn submit_many_burst_serves_end_to_end() {
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(4, 8, 256)
+            .spawn()
+            .unwrap();
+        let burst: Vec<ServeRequest> = (0..16).map(|i| req(i, 4)).collect();
+        let outcomes = engine.submit_many(burst);
+        assert_eq!(outcomes.len(), 16);
+        assert!(outcomes.iter().all(|o| o.is_ok()), "idle engine admits the burst");
+        engine.settle(Duration::from_secs(20)).unwrap();
+        assert_eq!(engine.dispatched(), 16);
+        let groups = engine.shutdown().unwrap();
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 16);
+        // one view acquisition must still spread the burst (credits +
+        // in-place snapshot correction)
+        assert!(
+            groups.iter().filter(|g| !g.finished.is_empty()).count() > 1,
+            "burst collapsed onto one group"
+        );
     }
 
     #[test]

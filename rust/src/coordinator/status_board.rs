@@ -1,26 +1,52 @@
-//! Shared DP-group status board (§4.2–4.3).
+//! Shared DP-group status board (§4.2–4.3) — seqlock edition.
 //!
 //! Each DP-group worker thread *publishes* its [`DpGroupStatus`] snapshot
 //! (plus its decode-tick latency EWMA) after every tick; the TE-shell
 //! *reads* the board when dispatching. The board is the only state shared
-//! between the serving threads and the shell, and it is lock-light: one
-//! `RwLock` per slot (writers never contend with each other) plus an
-//! atomic publish-epoch counter per slot that doubles as the group's
-//! heartbeat pulse.
+//! between the serving threads and the shell, and it is **lock-free**: a
+//! slot is a set of plain atomics guarded by a per-slot sequence counter
+//! (a seqlock). There are no mutexes anywhere on the read or write path,
+//! so a descheduled reader can never block a publish and a mid-publish
+//! writer can never block other slots' readers.
 //!
-//! **Staleness contract:** readers get the *last published* snapshot, not
-//! the live state — a group may have admitted or finished work since. The
-//! shell therefore (a) tracks its own sent-since-epoch credits on top of
-//! the snapshot (`TeShell::submit`), (b) treats a stalled epoch as a
-//! failed heartbeat (`reliability::heartbeat::GroupPulseMonitor`), and
-//! (c) never blocks on a group: there are no cross-DP synchronous calls
-//! anywhere on the dispatch path. A published `queued` count includes
-//! deferred cross-thread injections (`DpGroup::prefilled`) — KV already
-//! handed off but not yet admitted still claims pool headroom, so it must
-//! count against routing.
+//! **Seqlock protocol (per slot):**
+//!
+//! * The sequence counter is `2 × epoch` when the slot is stable and odd
+//!   while a publish is in flight. [`StatusBoard::epoch`] is `seq >> 1`,
+//!   which is exactly the publish count — the counter still doubles as
+//!   the group's heartbeat pulse for `GroupPulseMonitor`.
+//! * **Write** (only ever the slot's own worker thread, so it is wait-free
+//!   — no CAS loop, no contention): store `seq+1` (odd), `Release` fence,
+//!   relaxed stores of the packed fields, then store `seq+2` with
+//!   `Release`.
+//! * **Read** (any thread, any number of them): load `seq` with `Acquire`;
+//!   if odd, retry (spin briefly — a publish is a handful of stores, tens
+//!   of nanoseconds — then `yield_now` in case the writer was preempted
+//!   mid-publish on an oversubscribed box); relaxed-load the fields;
+//!   `Acquire` fence; re-load `seq` and retry if it moved. A successful
+//!   read is therefore a consistent snapshot of one publish — fields from
+//!   two different publishes can never be mixed (the torn-read stress
+//!   test below pins this).
+//! * **Router demotion** ([`StatusBoard::mark_unhealthy`]) does not take
+//!   the write side at all — it sets a per-slot overlay flag outside the
+//!   seqlock that readers AND into the snapshot's `healthy` bit, and that
+//!   the worker's next publish clears. Demotion therefore stays transient
+//!   (a live worker re-promotes itself the moment it proves liveness) and
+//!   never contends with the single writer.
+//!
+//! **Staleness contract** (unchanged from the locked board): readers get
+//! the *last published* snapshot, not the live state — a group may have
+//! admitted or finished work since. The shell therefore (a) tracks its own
+//! sent-since-epoch credits on top of the snapshot (`TeShell::submit`),
+//! (b) treats a stalled epoch as a failed heartbeat
+//! (`reliability::heartbeat::GroupPulseMonitor`), and (c) never blocks on
+//! a group: there are no cross-DP synchronous calls anywhere on the
+//! dispatch path. A published `queued` count includes deferred
+//! cross-thread injections (`DpGroup::prefilled`) — KV already handed off
+//! but not yet admitted still claims pool headroom, so it must count
+//! against routing.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
 
 use crate::coordinator::dp_group::DpGroupStatus;
 
@@ -43,18 +69,95 @@ impl BoardEntry {
     pub fn initial(status: DpGroupStatus) -> Self {
         Self { status, tick_ewma_ns: 0, published_ns: 0, epoch: 0 }
     }
+
+    /// Routing view of this snapshot — the one place the board-to-router
+    /// mapping lives: the pending count folds `queued` (including deferred
+    /// injections) into `running`, because unadmitted work claims capacity
+    /// exactly like running work does (§4.3).
+    pub fn load_view(&self) -> crate::coordinator::decode_sched::GroupLoadView {
+        use crate::coordinator::decode_sched::{GroupLoadView, GroupStatus};
+        GroupLoadView {
+            status: GroupStatus {
+                group: self.status.id,
+                running: self.status.running + self.status.queued,
+                batch_limit: self.status.batch_limit,
+                kv_total_blocks: self.status.kv_total_blocks,
+                kv_usage: self.status.kv_usage,
+                healthy: self.status.healthy,
+            },
+            tick_ewma_ns: self.tick_ewma_ns,
+            epoch: self.epoch,
+        }
+    }
 }
 
-/// Fixed-size board, one slot per DP-group worker.
+/// One seqlock-guarded slot. Counts are packed two-per-word so a snapshot
+/// is five relaxed loads; `id` never changes after construction and lives
+/// outside the protocol entirely. Cache-line aligned so one worker's
+/// per-tick publish can never invalidate a neighboring slot's line under
+/// concurrent sampled reads (no false sharing between slots).
+#[repr(align(64))]
+struct Slot {
+    /// Sequence counter: `2 × epoch` when stable, odd while the slot's
+    /// worker is mid-publish.
+    seq: AtomicU64,
+    /// `queued << 32 | running`.
+    counts: AtomicU64,
+    /// `batch_limit << 32 | kv_total_blocks`.
+    limits: AtomicU64,
+    /// `f64::to_bits` of the KV usage fraction.
+    kv_bits: AtomicU64,
+    ewma_ns: AtomicU64,
+    published_ns: AtomicU64,
+    healthy: AtomicBool,
+    /// Router-side demotion overlay (heartbeat miss / dead delivery).
+    /// Outside the seqlock: set by router threads, cleared by the worker's
+    /// next publish, AND-ed into `healthy` by readers.
+    demoted: AtomicBool,
+    /// Immutable group id for this slot.
+    id: usize,
+}
+
+#[inline]
+fn pack(hi: usize, lo: usize) -> u64 {
+    // Counts are usize at the API surface but 32 bits on the wire;
+    // saturate rather than silently wrap (a > 4-billion-block pool spec
+    // degrades to "very large", not to a corrupted small capacity).
+    let hi = hi.min(u32::MAX as usize) as u64;
+    let lo = lo.min(u32::MAX as usize) as u64;
+    (hi << 32) | lo
+}
+
+#[inline]
+fn unpack(w: u64) -> (usize, usize) {
+    ((w >> 32) as usize, (w & 0xffff_ffff) as usize)
+}
+
+impl Slot {
+    fn new(e: &BoardEntry) -> Self {
+        Self {
+            seq: AtomicU64::new(e.epoch * 2),
+            counts: AtomicU64::new(pack(e.status.queued, e.status.running)),
+            limits: AtomicU64::new(pack(e.status.batch_limit, e.status.kv_total_blocks)),
+            kv_bits: AtomicU64::new(e.status.kv_usage.to_bits()),
+            ewma_ns: AtomicU64::new(e.tick_ewma_ns),
+            published_ns: AtomicU64::new(e.published_ns),
+            healthy: AtomicBool::new(e.status.healthy),
+            demoted: AtomicBool::new(false),
+            id: e.status.id,
+        }
+    }
+}
+
+/// Fixed-size board, one slot per DP-group worker. Lock-free: see the
+/// module docs for the seqlock protocol and the staleness contract.
 pub struct StatusBoard {
-    slots: Vec<RwLock<BoardEntry>>,
-    epochs: Vec<AtomicU64>,
+    slots: Vec<Slot>,
 }
 
 impl StatusBoard {
     pub fn new(initial: Vec<BoardEntry>) -> Self {
-        let epochs = initial.iter().map(|_| AtomicU64::new(0)).collect();
-        Self { slots: initial.into_iter().map(RwLock::new).collect(), epochs }
+        Self { slots: initial.iter().map(Slot::new).collect() }
     }
 
     pub fn len(&self) -> usize {
@@ -65,36 +168,107 @@ impl StatusBoard {
         self.slots.is_empty()
     }
 
-    /// Publish a fresh snapshot for `slot` and advance its epoch. Called
-    /// only by that slot's worker thread.
-    pub fn publish(&self, slot: usize, status: DpGroupStatus, tick_ewma_ns: u64, now_ns: u64) {
-        let epoch = self.epochs[slot].fetch_add(1, Ordering::AcqRel) + 1;
-        let mut w = self.slots[slot].write().unwrap_or_else(|e| e.into_inner());
-        *w = BoardEntry { status, tick_ewma_ns, published_ns: now_ns, epoch };
+    /// Group id registered at `slot` (immutable after construction).
+    pub fn id_of(&self, slot: usize) -> usize {
+        self.slots[slot].id
     }
 
-    /// Stale-tolerant read of one slot (never blocks behind other readers;
-    /// at worst waits out a single in-flight publish of that slot).
+    /// Publish a fresh snapshot for `slot` and advance its epoch. Called
+    /// only by that slot's worker thread — the single-writer contract is
+    /// what makes this wait-free (plain stores, no CAS, no lock).
+    pub fn publish(&self, slot: usize, status: DpGroupStatus, tick_ewma_ns: u64, now_ns: u64) {
+        let s = &self.slots[slot];
+        debug_assert_eq!(status.id, s.id, "publish must come from the slot's own group");
+        let seq = s.seq.load(Ordering::Relaxed);
+        debug_assert_eq!(seq % 2, 0, "two writers on one slot");
+        s.seq.store(seq + 1, Ordering::Relaxed);
+        fence(Ordering::Release); // odd marker visible before any field store
+        s.counts.store(pack(status.queued, status.running), Ordering::Relaxed);
+        s.limits.store(pack(status.batch_limit, status.kv_total_blocks), Ordering::Relaxed);
+        s.kv_bits.store(status.kv_usage.to_bits(), Ordering::Relaxed);
+        s.ewma_ns.store(tick_ewma_ns, Ordering::Relaxed);
+        s.published_ns.store(now_ns, Ordering::Relaxed);
+        s.healthy.store(status.healthy, Ordering::Relaxed);
+        // a publish proves liveness: clear any router-side demotion
+        s.demoted.store(false, Ordering::Relaxed);
+        s.seq.store(seq + 2, Ordering::Release); // fields visible before the even marker
+    }
+
+    /// Lock-free read of one slot: retries while a publish is in flight
+    /// (odd seq) or raced past the loads (seq moved), so the returned
+    /// entry is always one internally-consistent publish. O(1) — this is
+    /// the primitive the O(d) sampled router is built on.
     pub fn read(&self, slot: usize) -> BoardEntry {
-        *self.slots[slot].read().unwrap_or_else(|e| e.into_inner())
+        let s = &self.slots[slot];
+        // A publish is a handful of stores, so contention windows are tens
+        // of nanoseconds — but the writer can be *preempted* mid-publish,
+        // and with more worker threads than cores a hot-spinning reader
+        // would then burn its whole quantum (and keep the writer off-core).
+        // Spin briefly, then yield so the writer gets scheduled.
+        let mut spins = 0u32;
+        let mut wait = || {
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        };
+        loop {
+            let s1 = s.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                wait();
+                continue;
+            }
+            let counts = s.counts.load(Ordering::Relaxed);
+            let limits = s.limits.load(Ordering::Relaxed);
+            let kv_bits = s.kv_bits.load(Ordering::Relaxed);
+            let ewma_ns = s.ewma_ns.load(Ordering::Relaxed);
+            let published_ns = s.published_ns.load(Ordering::Relaxed);
+            let healthy = s.healthy.load(Ordering::Relaxed);
+            fence(Ordering::Acquire); // field loads complete before the re-check
+            if s.seq.load(Ordering::Relaxed) != s1 {
+                wait();
+                continue;
+            }
+            let (queued, running) = unpack(counts);
+            let (batch_limit, kv_total_blocks) = unpack(limits);
+            return BoardEntry {
+                status: DpGroupStatus {
+                    id: s.id,
+                    queued,
+                    running,
+                    batch_limit,
+                    kv_total_blocks,
+                    kv_usage: f64::from_bits(kv_bits),
+                    healthy: healthy && !s.demoted.load(Ordering::Relaxed),
+                },
+                tick_ewma_ns: ewma_ns,
+                published_ns,
+                epoch: s1 >> 1,
+            };
+        }
     }
 
     /// Publish-epoch counter for `slot` — the group's heartbeat pulse.
+    /// Mid-publish reads round down to the last completed publish.
     pub fn epoch(&self, slot: usize) -> u64 {
-        self.epochs[slot].load(Ordering::Acquire)
+        self.slots[slot].seq.load(Ordering::Acquire) >> 1
     }
 
-    /// Stale-tolerant copy of every slot.
+    /// Stale-tolerant copy of every slot (each slot individually
+    /// consistent; the board as a whole is not a single atomic cut — the
+    /// staleness contract already allows that).
     pub fn snapshot(&self) -> Vec<BoardEntry> {
         (0..self.slots.len()).map(|i| self.read(i)).collect()
     }
 
     /// Router-side demotion (heartbeat miss / operator action). Transient
-    /// by design: the worker's next publish overwrites it, so a group that
+    /// by design: the worker's next publish clears it, so a group that
     /// was merely slow re-promotes itself the moment it proves liveness.
+    /// Never touches the seqlock — it cannot delay the slot's writer.
     pub fn mark_unhealthy(&self, slot: usize) {
-        let mut w = self.slots[slot].write().unwrap_or_else(|e| e.into_inner());
-        w.status.healthy = false;
+        self.slots[slot].demoted.store(true, Ordering::Relaxed);
     }
 }
 
@@ -108,6 +282,7 @@ mod tests {
             queued,
             running: 0,
             batch_limit: 8,
+            kv_total_blocks: 64,
             kv_usage: 0.0,
             healthy: true,
         }
@@ -125,6 +300,7 @@ mod tests {
         b.publish(1, status(1, 5), 42_000, 777);
         let e = b.read(1);
         assert_eq!(e.status.queued, 5);
+        assert_eq!(e.status.kv_total_blocks, 64);
         assert_eq!(e.tick_ewma_ns, 42_000);
         assert_eq!(e.published_ns, 777);
         assert_eq!(e.epoch, 1);
@@ -134,6 +310,7 @@ mod tests {
         // untouched slots keep their initial entries
         assert_eq!(b.read(0).epoch, 0);
         assert!(b.read(0).status.healthy);
+        assert_eq!(b.id_of(2), 2);
     }
 
     #[test]
@@ -162,8 +339,8 @@ mod tests {
             .collect();
         for _ in 0..200 {
             for e in b.snapshot() {
-                // entries are copied whole under the slot lock, so the
-                // published pair stays consistent: queued == epoch - 1
+                // a read is one consistent publish, so the published pair
+                // stays correlated: queued == epoch - 1
                 if e.epoch > 0 {
                     assert_eq!(e.status.queued as u64, e.epoch - 1, "torn board read");
                 }
@@ -175,5 +352,88 @@ mod tests {
         let last = b.snapshot();
         assert!(last.iter().all(|e| e.epoch == 500));
         assert!(last.iter().all(|e| e.status.queued == 499));
+    }
+
+    /// Seqlock torn-read stress: every field of a publish is derived from
+    /// the same counter, spinning readers assert the correlation across
+    /// *all* packed words (counts, kv bits, ewma, timestamp) on every
+    /// read, and a third thread hammers `mark_unhealthy` the whole time.
+    /// Any mix of two publishes — or a read slipping inside the odd
+    /// window — fails the assertions.
+    #[test]
+    fn seqlock_survives_spinning_readers_and_router_demotion() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        const SLOTS: usize = 3;
+        const PUBLISHES: u64 = 4_000;
+        let b = Arc::new(board(SLOTS));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let readers: Vec<_> = (0..3)
+            .map(|r| {
+                let b = Arc::clone(&b);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut reads = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let e = b.read((r + reads as usize) % SLOTS);
+                        if e.epoch > 0 {
+                            let i = e.epoch - 1;
+                            assert_eq!(e.status.queued as u64, i, "counts word torn");
+                            assert_eq!(e.status.running as u64, i % 7, "counts word torn");
+                            assert_eq!(e.tick_ewma_ns, i, "ewma word torn");
+                            assert_eq!(e.published_ns, i * 3, "timestamp word torn");
+                            assert_eq!(e.status.kv_usage.to_bits(), (i as f64).to_bits(), "kv word torn");
+                        }
+                        reads += 1;
+                    }
+                    reads
+                })
+            })
+            .collect();
+        let demoter = {
+            let b = Arc::clone(&b);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut k = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    b.mark_unhealthy(k % SLOTS);
+                    k += 1;
+                }
+            })
+        };
+        let writers: Vec<_> = (0..SLOTS)
+            .map(|slot| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for i in 0..PUBLISHES {
+                        let st = DpGroupStatus {
+                            id: slot,
+                            queued: i as usize,
+                            running: (i % 7) as usize,
+                            batch_limit: 8,
+                            kv_total_blocks: 64,
+                            kv_usage: i as f64,
+                            healthy: true,
+                        };
+                        b.publish(slot, st, i, i * 3);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total_reads: u64 = readers.into_iter().map(|r| r.join().unwrap()).sum();
+        demoter.join().unwrap();
+        assert!(total_reads > 0, "readers must have observed the board");
+        let last = b.snapshot();
+        assert!(last.iter().all(|e| e.epoch == PUBLISHES));
+        // the demoter may have flagged a slot after its final publish;
+        // that is the documented transient overlay, not a torn read
+        b.publish(0, status(0, 0), 0, 0);
+        assert!(b.read(0).status.healthy);
     }
 }

@@ -10,17 +10,56 @@
 //! over any [`Dispatcher`] backend — synchronous colocated groups, the
 //! decentralized worker runtime, or the PD prefill plane — folding its
 //! stale-tolerant sent-since-epoch credits over whatever views the backend
-//! provides, enforcing `serving.dp_queue_limit` admission, and applying
-//! straggler-aware (§4.4) and domain-aware (§5.2) selection.
+//! provides, enforcing `serving.dp_queue_limit` and KV-size-aware
+//! admission, and applying straggler-aware (§4.4) and domain-aware (§5.2)
+//! selection.
+//!
+//! **Routing cost is O(d), not O(N).** When the backend supports O(1)
+//! slot reads (`Dispatcher::view_slot` — seqlock board reads for the
+//! decentralized runtime), `submit` samples `serving.route_samples`
+//! (d, default 2) random live slots per request — the classic
+//! power-of-d-choices result: two random choices already give near-best
+//! load balance — and only falls back to the full straggler-aware scan
+//! on a *sample miss* (every sampled group full, over its queue share, or
+//! demoted), on the periodic median-refresh scan, or for backends without
+//! slot reads. `health_sweep` and EPLB keep their whole-board views —
+//! they legitimately need them. [`TeShell::submit_many`] amortizes one
+//! full view acquisition across a burst instead.
 
 use std::collections::HashMap;
 
 use crate::config::DecodeLbPolicy;
 use crate::coordinator::decode_sched::{
-    choose_group_straggler_aware, filter_least_loaded_domain, GroupLoadView,
+    choose_group_straggler_aware, filter_least_loaded_domain, median_tick_ewma_ns,
+    rank_least_kv, GroupLoadView, STRAGGLER_DEMOTE_RATIO,
 };
 use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::request::ServeRequest;
+use crate::kvcache::BlockPool;
+use crate::util::rng::Rng;
+
+/// Default number of slots the O(d) fast path samples per request
+/// (`serving.route_samples`; 0 disables sampling entirely).
+pub const DEFAULT_ROUTE_SAMPLES: usize = 2;
+
+/// Hard cap on the sampling width the fast path honors — lets the sample
+/// buffers live on the stack (zero allocations per routed request).
+/// Power-of-d gains are already marginal past d=4; a `route_samples`
+/// above this is clamped, not an error.
+pub const MAX_ROUTE_SAMPLES: usize = 8;
+
+/// Sampled submits between forced full scans. A full scan refreshes the
+/// cached tick-EWMA median (the straggler hard-demotion threshold the
+/// sampled path reuses), so routing stays O(d) amortized:
+/// O(N / interval + d) per request.
+pub const MEDIAN_REFRESH_INTERVAL: usize = 64;
+
+/// `retry_after_ms` hint = this many median decode ticks: roughly how
+/// much decode progress should free a batch slot or KV headroom.
+pub const RETRY_AFTER_TICKS: u64 = 8;
+
+/// `retry_after_ms` fallback when no group has published a tick sample.
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 5;
 
 /// Requests dispatched to a group since a given status-board epoch — the
 /// shell's §4.3 "pending count" on top of stale snapshots: a snapshot only
@@ -31,6 +70,13 @@ use crate::coordinator::request::ServeRequest;
 struct StaleCredit {
     epoch: u64,
     sent: usize,
+}
+
+/// Outcome of the O(d) sampled fast path: either it fully handled the
+/// request, or it hands the request back for the full-scan path.
+enum Sampled {
+    Routed(std::result::Result<DispatchOutcome, AdmissionError>),
+    FullScan(ServeRequest),
 }
 
 pub struct TeShell {
@@ -54,8 +100,25 @@ pub struct TeShell {
     /// DP domains for §5.2 domain-aware routing (1 = off): traffic goes to
     /// the least-loaded domain first, then the §4.3 policy picks within.
     pub dp_domains: usize,
+    /// Slots sampled per request by the O(d) fast path
+    /// (`serving.route_samples`; 0 = always full scan).
+    pub route_samples: usize,
     rr_domain: usize,
     credits: HashMap<usize, StaleCredit>,
+    route_rng: Rng,
+    /// Tick-EWMA median cached from the last full scan — the sampled
+    /// path's straggler-demotion threshold and the `retry_after_ms` base.
+    median_ewma_ns: u64,
+    /// Sampled submits since the last full scan (forces a refresh scan
+    /// every [`MEDIAN_REFRESH_INTERVAL`]).
+    sampled_since_scan: usize,
+    /// Aggregate pending load: reset from the folded views at every full
+    /// scan, bumped per dispatch in between. Monotonically over-counts
+    /// until the next scan (completions are only observed by scanning),
+    /// which is the safe direction for the admission guard below.
+    pending_estimate: usize,
+    /// Healthy-group count cached at the last full scan.
+    healthy_at_scan: usize,
 }
 
 impl TeShell {
@@ -70,8 +133,16 @@ impl TeShell {
             straggler_penalty: 0.5,
             dp_queue_limit: 0,
             dp_domains: 1,
+            route_samples: DEFAULT_ROUTE_SAMPLES,
             rr_domain: 0,
             credits: HashMap::new(),
+            route_rng: Rng::new(0x2508_0252),
+            median_ewma_ns: 0,
+            // start at the interval so the very first submit full-scans,
+            // seeding the median cache before any sampling happens
+            sampled_since_scan: MEDIAN_REFRESH_INTERVAL,
+            pending_estimate: 0,
+            healthy_at_scan: 0,
         }
     }
 
@@ -92,50 +163,99 @@ impl TeShell {
         self
     }
 
+    /// Slots sampled per request by the O(d) fast path (0 = full scan).
+    pub fn with_route_samples(mut self, d: usize) -> Self {
+        self.route_samples = d;
+        self
+    }
+
+    /// Re-seed the sampling RNG (tests / reproducible traces).
+    pub fn with_route_seed(mut self, seed: u64) -> Self {
+        self.route_rng = Rng::new(seed);
+        self
+    }
+
     /// Build a shell from the §4 serving config (LB policy, straggler
-    /// penalty weight, queue-limit admission).
+    /// penalty weight, queue-limit admission, route sampling width).
     pub fn from_serving(cfg: &crate::config::ServingConfig) -> Self {
         TeShell::new(cfg.decode_lb)
             .with_straggler_penalty(cfg.straggler_penalty)
             .with_queue_limit(cfg.dp_queue_limit)
+            .with_route_samples(cfg.route_samples)
     }
 
-    /// Backend views with the shell's stale credits folded in: what routing
-    /// and admission decisions are made against.
+    /// Fold the shell's sent-since-epoch credit into one backend view.
+    fn fold_credit(&mut self, v: &mut GroupLoadView) {
+        let c = self
+            .credits
+            .entry(v.status.group)
+            .or_insert(StaleCredit { epoch: v.epoch, sent: 0 });
+        if c.epoch != v.epoch {
+            // Known imprecision, accepted by the staleness contract: a
+            // request submitted between the worker's pre-publish inbox
+            // drain and this epoch advance is in neither the snapshot
+            // nor the reset credit, so one epoch can undercount by the
+            // requests in that (sub-tick) window; the next publish
+            // includes them. Routing only needs pending counts to be
+            // approximately right — exactness would require synchronous
+            // acknowledgements, which §4.2 forbids on this path.
+            *c = StaleCredit { epoch: v.epoch, sent: 0 };
+        }
+        v.status.running += c.sent;
+    }
+
+    /// Backend views with the shell's stale credits folded in: what
+    /// full-scan routing and admission decisions are made against. Also
+    /// refreshes the cached tick-EWMA median the sampled path depends on.
     fn folded_views(&mut self, d: &mut dyn Dispatcher) -> Vec<GroupLoadView> {
         let mut views = d.load_views();
         for v in views.iter_mut() {
-            let c = self
-                .credits
-                .entry(v.status.group)
-                .or_insert(StaleCredit { epoch: v.epoch, sent: 0 });
-            if c.epoch != v.epoch {
-                // Known imprecision, accepted by the staleness contract: a
-                // request submitted between the worker's pre-publish inbox
-                // drain and this epoch advance is in neither the snapshot
-                // nor the reset credit, so one epoch can undercount by the
-                // requests in that (sub-tick) window; the next publish
-                // includes them. Routing only needs pending counts to be
-                // approximately right — exactness would require synchronous
-                // acknowledgements, which §4.2 forbids on this path.
-                *c = StaleCredit { epoch: v.epoch, sent: 0 };
-            }
-            v.status.running += c.sent;
+            self.fold_credit(v);
         }
+        self.median_ewma_ns = median_tick_ewma_ns(&views);
+        self.sampled_since_scan = 0;
+        self.healthy_at_scan = views.iter().filter(|v| v.status.healthy).count();
+        self.pending_estimate = self.waiting.len()
+            + views
+                .iter()
+                .filter(|v| v.status.healthy)
+                .map(|v| v.status.running)
+                .sum::<usize>();
         views
     }
 
-    /// Submit one request through admission + routing + delivery. `Ok` both
-    /// when delivered and when parked under transient backpressure;
-    /// `Err(AdmissionError)` when `dp_queue_limit` admission sheds the
-    /// request — the caller owns rejection handling (the request is *not*
-    /// parked).
-    pub fn submit(
-        &mut self,
-        req: ServeRequest,
-        d: &mut dyn Dispatcher,
-    ) -> Result<DispatchOutcome, AdmissionError> {
-        let views = self.folded_views(d);
+    /// Estimated KV blocks a request needs: prompt plus expected output
+    /// (mirrors `BlockPool::admit`'s reservation accounting).
+    fn kv_need_blocks(req: &ServeRequest) -> usize {
+        BlockPool::blocks_for_tokens(req.prompt_tokens.len())
+            + BlockPool::blocks_for_tokens(req.max_new_tokens)
+    }
+
+    /// Client backoff hint derived from the cached tick-EWMA median (see
+    /// [`RETRY_AFTER_TICKS`]).
+    fn retry_after_ms(&self) -> u64 {
+        if self.median_ewma_ns == 0 {
+            DEFAULT_RETRY_AFTER_MS
+        } else {
+            ((self.median_ewma_ns * RETRY_AFTER_TICKS) / 1_000_000).max(1)
+        }
+    }
+
+    /// Whole-view admission: the count-based `dp_queue_limit` cap, then
+    /// KV-size-aware impossibility — a request whose estimated block need
+    /// exceeds every group's *total* pool can never be admitted anywhere,
+    /// so it is shed up front with [`AdmissionError::KvExhausted`]
+    /// instead of parking (or deferring in-group, §5.1 step 6) forever.
+    /// Deliberately weaker than the sampled path's current-headroom check:
+    /// *transient* pool fullness must keep routing so the decode group's
+    /// deferral/retry path can absorb it — only the sampled fast path
+    /// treats "d random groups all out of headroom right now" as an
+    /// overload signal worth shedding on.
+    fn admission_check(
+        &self,
+        views: &[GroupLoadView],
+        req: &ServeRequest,
+    ) -> std::result::Result<(), AdmissionError> {
         if self.dp_queue_limit > 0 {
             let healthy = views.iter().filter(|v| v.status.healthy).count();
             let pending = self.waiting.len()
@@ -149,51 +269,257 @@ impl TeShell {
             // groups the moment they recover.
             let capacity = self.dp_queue_limit * healthy;
             if pending >= capacity {
-                return Err(AdmissionError::QueueFull { pending, capacity });
+                return Err(AdmissionError::QueueFull {
+                    pending,
+                    capacity,
+                    retry_after_ms: self.retry_after_ms(),
+                });
             }
         }
-        Ok(self.route(req, views, d))
+        let need = Self::kv_need_blocks(req);
+        // "Could ever fit" is about pool *size*, which is static — so scan
+        // every group (slot-full, demoted, whatever: those states are
+        // transient, the pool size is not). A request no pool could ever
+        // hold must be shed NOW: admitting it would park it until a drain
+        // delivers it into some group's FIFO, where the front-of-queue
+        // `can_admit` check would wedge that queue forever. Only an empty
+        // board skips the check (nothing to measure against — the request
+        // parks, as all requests do with zero groups).
+        let could_ever_fit = views.is_empty()
+            || views
+                .iter()
+                .any(|v| v.status.kv_total_blocks == 0 || need <= v.status.kv_total_blocks);
+        if !could_ever_fit {
+            let best_free = views
+                .iter()
+                .filter(|v| v.status.has_slot())
+                .map(|v| v.status.kv_free_blocks())
+                .max()
+                .unwrap_or(0);
+            return Err(AdmissionError::KvExhausted {
+                need_blocks: need,
+                free_blocks: best_free,
+                retry_after_ms: self.retry_after_ms(),
+            });
+        }
+        Ok(())
     }
 
-    /// Routing + delivery for an already-admitted request (parked requests
-    /// re-enter here so a drain can never be admission-rejected).
-    fn route(
+    /// Submit one request through admission + routing + delivery. `Ok` both
+    /// when delivered and when parked under transient backpressure;
+    /// `Err(AdmissionError)` when admission sheds the request — the caller
+    /// owns rejection handling (the request is *not* parked).
+    pub fn submit(
         &mut self,
         req: ServeRequest,
-        mut views: Vec<GroupLoadView>,
+        d: &mut dyn Dispatcher,
+    ) -> std::result::Result<DispatchOutcome, AdmissionError> {
+        match self.try_submit_sampled(req, d) {
+            Sampled::Routed(result) => result,
+            Sampled::FullScan(req) => {
+                let mut views = self.folded_views(d);
+                self.admission_check(&views, &req)?;
+                Ok(self.route_over_snapshot(req, &mut views, d))
+            }
+        }
+    }
+
+    /// The O(d) power-of-d-choices fast path: read `route_samples` random
+    /// slots (distinct, best effort) off the backend's O(1) slot views,
+    /// route to the best of them, and never touch the other N − d slots.
+    /// Falls back to the full scan when the backend has no slot reads,
+    /// domain routing is on (it needs per-domain aggregates), the median
+    /// refresh is due, or every sampled slot is unroutable (full, over
+    /// its queue share, or straggler-demoted) — availability decisions
+    /// stay with the authoritative whole-board path.
+    fn try_submit_sampled(&mut self, req: ServeRequest, d: &mut dyn Dispatcher) -> Sampled {
+        // RoundRobin's whole point is its deterministic cycle; randomized
+        // least-of-d would silently replace it, so that policy always
+        // takes the full scan (set `decode_lb = "least_kv"` to get O(d)
+        // routing). Domain routing needs per-domain aggregates — also a
+        // whole-board concern.
+        if self.route_samples == 0
+            || self.dp_domains > 1
+            || self.policy == DecodeLbPolicy::RoundRobin
+        {
+            return Sampled::FullScan(req);
+        }
+        // Aggregate `dp_queue_limit` admission needs whole-board counts
+        // the sampled path cannot price in. Two distress signals hand the
+        // request to the authoritative full scan: a parked backlog
+        // (`waiting` counts against the fleet's capacity), and the
+        // dispatch-bumped pending estimate reaching the configured cap —
+        // the estimate only over-counts between scans, so the cap can be
+        // overshot by at most the board-staleness window the full path
+        // itself already accepts.
+        if self.dp_queue_limit > 0
+            && (!self.waiting.is_empty()
+                || self.pending_estimate >= self.dp_queue_limit * self.healthy_at_scan)
+        {
+            return Sampled::FullScan(req);
+        }
+        let samples = self.route_samples.min(MAX_ROUTE_SAMPLES);
+        let n = d.n_slots();
+        if n <= samples {
+            return Sampled::FullScan(req);
+        }
+        if self.sampled_since_scan >= MEDIAN_REFRESH_INTERVAL {
+            return Sampled::FullScan(req); // periodic median/credit refresh
+        }
+        self.sampled_since_scan += 1;
+
+        // Stack buffers (see MAX_ROUTE_SAMPLES): the fast path makes no
+        // heap allocation per request.
+        let mut cands = [None::<GroupLoadView>; MAX_ROUTE_SAMPLES];
+        let mut seen = [usize::MAX; MAX_ROUTE_SAMPLES];
+        let mut picked = 0usize;
+        let mut attempts = 0;
+        while picked < samples && attempts < samples * 4 {
+            attempts += 1;
+            let slot = self.route_rng.index(n);
+            if seen[..picked].contains(&slot) {
+                continue;
+            }
+            let Some(mut v) = d.view_slot(slot) else {
+                return Sampled::FullScan(req); // backend has no O(1) reads
+            };
+            self.fold_credit(&mut v);
+            seen[picked] = slot;
+            cands[picked] = Some(v);
+            picked += 1;
+        }
+
+        // One allocation-free pass over the d sampled views: classify
+        // (full / over-share / straggler-demoted / KV-tight) and pick the
+        // best routable candidate by the same straggler-aware score the
+        // full scan uses, so the two paths can never rank groups
+        // differently.
+        let med = self.median_ewma_ns;
+        let need = Self::kv_need_blocks(&req);
+        let mut any_routable = false;
+        let mut best_free = 0usize;
+        let mut best: Option<&GroupLoadView> = None;
+        for v in cands[..picked].iter().flatten() {
+            let demoted = self.straggler_penalty > 0.0
+                && med > 0
+                && (v.tick_ewma_ns as f64) > STRAGGLER_DEMOTE_RATIO * med as f64;
+            let over_share =
+                self.dp_queue_limit > 0 && v.status.running >= self.dp_queue_limit;
+            if !v.status.has_slot() || demoted || over_share {
+                continue;
+            }
+            any_routable = true;
+            if !v.status.kv_headroom(need) {
+                best_free = best_free.max(v.status.kv_free_blocks());
+                continue;
+            }
+            best = Some(match best {
+                None => v,
+                Some(b) => {
+                    if rank_least_kv(v, b, med, self.straggler_penalty).is_lt() {
+                        v
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        if !any_routable {
+            // sample miss: every sampled group full/over-share/demoted —
+            // the full scan decides between route, park, and reject
+            return Sampled::FullScan(req);
+        }
+        // KV-size-aware admission over the sample (the power-of-d analog
+        // of the whole-board check): d random groups all out of headroom
+        // means aggregate KV pressure is high with high probability.
+        let Some(pick) = best else {
+            return Sampled::Routed(Err(AdmissionError::KvExhausted {
+                need_blocks: need,
+                free_blocks: best_free,
+                retry_after_ms: self.retry_after_ms(),
+            }));
+        };
+        let gid = pick.status.group;
+        Sampled::Routed(Ok(self.deliver_routed(gid, req, d)))
+    }
+
+    /// Deliver toward an already-chosen group, with the shared
+    /// success/failure bookkeeping (credits, demotion, re-park).
+    fn deliver_routed(
+        &mut self,
+        gid: usize,
+        req: ServeRequest,
         d: &mut dyn Dispatcher,
     ) -> DispatchOutcome {
-        if self.dp_domains > 1 {
-            views = filter_least_loaded_domain(views, self.dp_domains, &mut self.rr_domain);
+        match d.deliver(gid, req) {
+            Ok(()) => {
+                // Backends whose views already count the delivery (PD
+                // in-flight counters) must not get a credit on top.
+                if !d.tracks_inflight() {
+                    if let Some(c) = self.credits.get_mut(&gid) {
+                        c.sent += 1;
+                    }
+                }
+                self.dispatched += 1;
+                // keep the sampled path's aggregate-admission estimate
+                // current between full scans
+                self.pending_estimate += 1;
+                DispatchOutcome::Dispatched(gid)
+            }
+            // Worker died since the board's last publish (the pulse
+            // monitor takes a few intervals to notice): demote it so
+            // routing stops picking it and re-park the request instead
+            // of losing it.
+            Err(req) => {
+                d.demote(gid);
+                self.waiting.push(req);
+                DispatchOutcome::Parked
+            }
         }
-        match choose_group_straggler_aware(
-            &views,
+    }
+
+    /// Routing + delivery for an already-admitted request against a
+    /// shared, self-correcting snapshot — the one routing body behind the
+    /// full-scan `submit`, `submit_many`, and `drain`: domain filter
+    /// (per-request subset copy), policy pick, delivery. A successful
+    /// delivery bumps the snapshot's local pending count (what the stale
+    /// credits do across calls) so a burst spreads; a *failed* delivery
+    /// re-acquires the snapshot instead of guessing locally — only the
+    /// backend knows whether the failure demoted anything (a dead decode
+    /// worker does; a PD prefill-side failure deliberately does not).
+    fn route_over_snapshot(
+        &mut self,
+        req: ServeRequest,
+        views: &mut Vec<GroupLoadView>,
+        d: &mut dyn Dispatcher,
+    ) -> DispatchOutcome {
+        let filtered;
+        let pool: &[GroupLoadView] = if self.dp_domains > 1 {
+            filtered =
+                filter_least_loaded_domain(views.as_slice(), self.dp_domains, &mut self.rr_domain);
+            &filtered
+        } else {
+            views.as_slice()
+        };
+        let pick = choose_group_straggler_aware(
+            pool,
             self.policy,
             &mut self.rr_counter,
             self.straggler_penalty,
-        ) {
-            Some(gid) => match d.deliver(gid, req) {
-                Ok(()) => {
-                    // Backends whose views already count the delivery (PD
-                    // in-flight counters) must not get a credit on top.
-                    if !d.tracks_inflight() {
-                        if let Some(c) = self.credits.get_mut(&gid) {
-                            c.sent += 1;
+        );
+        match pick {
+            Some(gid) => {
+                let outcome = self.deliver_routed(gid, req, d);
+                match outcome {
+                    DispatchOutcome::Dispatched(_) => {
+                        if let Some(v) = views.iter_mut().find(|v| v.status.group == gid) {
+                            v.status.running += 1;
                         }
                     }
-                    self.dispatched += 1;
-                    DispatchOutcome::Dispatched(gid)
+                    DispatchOutcome::Parked => *views = self.folded_views(d),
                 }
-                // Worker died since the board's last publish (the pulse
-                // monitor takes a few intervals to notice): demote it so
-                // routing stops picking it and re-park the request instead
-                // of losing it.
-                Err(req) => {
-                    d.demote(gid);
-                    self.waiting.push(req);
-                    DispatchOutcome::Parked
-                }
-            },
+                outcome
+            }
             None => {
                 self.waiting.push(req);
                 DispatchOutcome::Parked
@@ -201,15 +527,46 @@ impl TeShell {
         }
     }
 
+    /// Submit a burst with **one** dispatcher view acquisition and credit
+    /// fold: the whole-board snapshot is taken once and kept
+    /// self-correcting in place (each delivery bumps its group's local
+    /// pending count, exactly what the stale credits do across calls).
+    /// Per-request policy work over the local snapshot remains O(N) —
+    /// what the burst amortizes is the board/backend read, the expensive
+    /// part at scale. Per-request admission still applies; outcomes map
+    /// 1:1 to the input order.
+    pub fn submit_many(
+        &mut self,
+        reqs: Vec<ServeRequest>,
+        d: &mut dyn Dispatcher,
+    ) -> Vec<std::result::Result<DispatchOutcome, AdmissionError>> {
+        let mut views = self.folded_views(d);
+        let mut out = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            if let Err(e) = self.admission_check(&views, &req) {
+                out.push(Err(e));
+                continue;
+            }
+            out.push(Ok(self.route_over_snapshot(req, &mut views, d)));
+        }
+        out
+    }
+
     /// Retry parked requests (called each scheduling tick). Bypasses
-    /// queue-limit admission: parked requests were admitted when first
-    /// submitted. Returns how many left the waiting list.
+    /// admission: parked requests were admitted when first submitted.
+    /// Routes the whole backlog over one self-correcting snapshot
+    /// (re-acquired only on a delivery failure), not one whole-board
+    /// acquisition per parked request. Returns how many left the waiting
+    /// list.
     pub fn drain(&mut self, d: &mut dyn Dispatcher) -> usize {
         let parked = std::mem::take(&mut self.waiting);
         let n = parked.len();
+        if n == 0 {
+            return 0;
+        }
+        let mut views = self.folded_views(d);
         for req in parked {
-            let views = self.folded_views(d);
-            self.route(req, views, d);
+            self.route_over_snapshot(req, &mut views, d);
         }
         n.saturating_sub(self.waiting.len())
     }
@@ -229,6 +586,7 @@ impl TeShell {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::decode_sched::GroupStatus;
     use crate::coordinator::dispatch::SyncGroups;
     use crate::coordinator::dp_group::DpGroup;
 
@@ -279,9 +637,12 @@ mod tests {
         let e = shell
             .submit(req(9), &mut SyncGroups::new(&mut gs))
             .unwrap_err();
-        let AdmissionError::QueueFull { pending, capacity } = e;
+        let AdmissionError::QueueFull { pending, capacity, retry_after_ms } = e else {
+            panic!("expected QueueFull, got {e:?}");
+        };
         assert_eq!(pending, 4);
         assert_eq!(capacity, 4);
+        assert!(retry_after_ms >= 1, "rejections always carry a backoff hint");
         // rejected request is nowhere: not parked, not queued
         assert_eq!(shell.waiting.len() + gs[0].queue.len() + gs[1].queue.len(), 4);
 
@@ -290,7 +651,9 @@ mod tests {
         let e = shell
             .submit(req(10), &mut SyncGroups::new(&mut gs))
             .unwrap_err();
-        let AdmissionError::QueueFull { capacity, .. } = e;
+        let AdmissionError::QueueFull { capacity, .. } = e else {
+            panic!("expected QueueFull, got {e:?}");
+        };
         assert_eq!(capacity, 2, "only the healthy group's share remains");
     }
 
@@ -306,7 +669,9 @@ mod tests {
         let e = shell
             .submit(req(1), &mut SyncGroups::new(&mut gs))
             .unwrap_err();
-        let AdmissionError::QueueFull { pending, capacity } = e;
+        let AdmissionError::QueueFull { pending, capacity, .. } = e else {
+            panic!("expected QueueFull, got {e:?}");
+        };
         assert_eq!((pending, capacity), (0, 0));
         assert!(shell.waiting.is_empty(), "rejected, not parked");
         // with admission disabled, the old park-under-outage behavior
@@ -314,6 +679,33 @@ mod tests {
         let mut open_shell = TeShell::new(DecodeLbPolicy::LeastKv);
         open_shell.submit(req(2), &mut SyncGroups::new(&mut gs)).unwrap();
         assert_eq!(open_shell.waiting.len(), 1);
+    }
+
+    #[test]
+    fn kv_aware_admission_sheds_oversized_requests() {
+        // 2-block pool: a 100-token prompt (+1 reserve block) can never be
+        // admitted — the shell sheds it up front (KvExhausted) instead of
+        // letting it park against a pool that will never fit it. A request
+        // that fits routes normally.
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        let mut gs = vec![DpGroup::new(0, 4, 2)];
+        let e = shell
+            .submit(
+                ServeRequest::new(1, vec![0; 100], 16, 0),
+                &mut SyncGroups::new(&mut gs),
+            )
+            .unwrap_err();
+        let AdmissionError::KvExhausted { need_blocks, free_blocks, retry_after_ms } = e else {
+            panic!("expected KvExhausted, got {e:?}");
+        };
+        assert_eq!(need_blocks, 8, "7 prompt blocks + 1 output block");
+        assert_eq!(free_blocks, 2);
+        assert!(retry_after_ms >= 1);
+        assert!(shell.waiting.is_empty(), "shed, not parked");
+        assert_eq!(gs[0].queue.len(), 0);
+
+        let out = shell.submit(req(2), &mut SyncGroups::new(&mut gs)).unwrap();
+        assert_eq!(out, DispatchOutcome::Dispatched(0), "fitting request routes");
     }
 
     #[test]
@@ -346,14 +738,221 @@ mod tests {
         assert_eq!(doms, vec![0, 1, 0, 1]);
     }
 
+    /// Stub backend with O(1) slot views over a fixed set of statuses;
+    /// counts how often the full-scan and slot paths are taken.
+    struct SlotStub {
+        views: Vec<GroupLoadView>,
+        delivered: Vec<usize>,
+        full_scans: usize,
+        slot_reads: usize,
+    }
+
+    impl SlotStub {
+        fn new(views: Vec<GroupLoadView>) -> Self {
+            Self { views, delivered: Vec::new(), full_scans: 0, slot_reads: 0 }
+        }
+    }
+
+    impl Dispatcher for SlotStub {
+        fn load_views(&mut self) -> Vec<GroupLoadView> {
+            self.full_scans += 1;
+            self.views.clone()
+        }
+        fn deliver(
+            &mut self,
+            g: usize,
+            _req: ServeRequest,
+        ) -> std::result::Result<(), ServeRequest> {
+            self.delivered.push(g);
+            Ok(())
+        }
+        fn n_slots(&self) -> usize {
+            self.views.len()
+        }
+        fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
+            self.slot_reads += 1;
+            self.views.get(slot).copied()
+        }
+    }
+
+    fn stub_view(group: usize, ewma_ns: u64, healthy: bool) -> GroupLoadView {
+        GroupLoadView {
+            status: GroupStatus {
+                group,
+                running: 0,
+                batch_limit: 64,
+                kv_total_blocks: 0,
+                kv_usage: 0.01 * group as f64,
+                healthy,
+            },
+            tick_ewma_ns: ewma_ns,
+            epoch: 1,
+        }
+    }
+
+    #[test]
+    fn sampled_path_reads_o_d_slots_not_the_whole_board() {
+        let views: Vec<GroupLoadView> = (0..64).map(|g| stub_view(g, 1_000_000, true)).collect();
+        let mut d = SlotStub::new(views);
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_route_seed(7);
+        const SUBMITS: usize = 40; // < MEDIAN_REFRESH_INTERVAL
+        for i in 0..SUBMITS as u64 {
+            let out = shell.submit(req(i), &mut d).unwrap();
+            assert!(matches!(out, DispatchOutcome::Dispatched(_)));
+        }
+        assert_eq!(d.delivered.len(), SUBMITS);
+        assert_eq!(d.full_scans, 1, "only the seeding scan touches all slots");
+        // ≤ d distinct reads per sampled submit (+ none for the full scan)
+        assert!(
+            d.slot_reads <= (SUBMITS - 1) * shell.route_samples,
+            "O(d) bound violated: {} slot reads",
+            d.slot_reads
+        );
+        // randomized least-of-2 must still spread load
+        let distinct: std::collections::HashSet<_> = d.delivered.iter().collect();
+        assert!(distinct.len() > SUBMITS / 4, "sampling collapsed onto {distinct:?}");
+    }
+
+    #[test]
+    fn sampled_routing_never_picks_demoted_or_unhealthy_groups() {
+        use crate::prop_assert;
+        use crate::util::prop::{check, PropConfig};
+
+        // Property: across seeds, the sampled path never delivers to a
+        // hard-demoted straggler (EWMA > 3× median) or an unhealthy group.
+        check(
+            "sampled-skips-demoted",
+            PropConfig { cases: 20, ..Default::default() },
+            |rng, _| {
+                let n = 12;
+                let straggler = rng.index(n);
+                let mut dead = rng.index(n);
+                if dead == straggler {
+                    dead = (dead + 1) % n;
+                }
+                let views: Vec<GroupLoadView> = (0..n)
+                    .map(|g| {
+                        if g == straggler {
+                            stub_view(g, 30_000_000, true) // 30× the median
+                        } else {
+                            stub_view(g, 1_000_000, g != dead)
+                        }
+                    })
+                    .collect();
+                let mut d = SlotStub::new(views);
+                let mut shell = TeShell::new(DecodeLbPolicy::LeastKv)
+                    .with_route_seed(rng.next_u64())
+                    .with_straggler_penalty(1.0);
+                for i in 0..50u64 {
+                    shell.submit(req(i), &mut d).map_err(|e| e.to_string())?;
+                }
+                prop_assert!(
+                    !d.delivered.iter().any(|&g| g == straggler),
+                    "straggler {straggler} was routed to"
+                );
+                prop_assert!(
+                    !d.delivered.iter().any(|&g| g == dead),
+                    "unhealthy {dead} was routed to"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sampled_kv_admission_rejects_when_no_sampled_headroom() {
+        // Every group has a 4-block pool at 100% usage but free batch
+        // slots: the sampled path must shed with KvExhausted (and a
+        // retry hint scaled by the published tick medians).
+        let views: Vec<GroupLoadView> = (0..16)
+            .map(|g| {
+                let mut v = stub_view(g, 2_000_000, true);
+                v.status.kv_total_blocks = 4;
+                v.status.kv_usage = 1.0;
+                v
+            })
+            .collect();
+        let mut d = SlotStub::new(views);
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv).with_route_seed(3);
+        // The first submit full-scans, and the full path only sheds
+        // requests that could NEVER fit (need > total pool) — transient
+        // fullness must stay routable so in-group deferral (§5.1 step 6)
+        // can absorb it. need 2 <= total 4, so it routes.
+        let out = shell.submit(req(0), &mut d).unwrap();
+        assert!(matches!(out, DispatchOutcome::Dispatched(_)));
+        // Sampled submits treat "every sampled group out of headroom
+        // right now" as the overload signal and shed, off d slot reads.
+        let e = shell.submit(req(1), &mut d).unwrap_err();
+        let AdmissionError::KvExhausted { need_blocks, free_blocks, retry_after_ms } = e else {
+            panic!("expected KvExhausted, got {e:?}");
+        };
+        assert_eq!(need_blocks, 2);
+        assert_eq!(free_blocks, 0);
+        // median EWMA is 2 ms → hint = 8 ticks = 16 ms
+        assert_eq!(retry_after_ms, 16);
+        assert_eq!(d.full_scans, 1);
+        assert_eq!(d.delivered.len(), 1, "only the full-path submit routed");
+    }
+
+    #[test]
+    fn sampled_path_respects_aggregate_queue_cap() {
+        // 6 groups with frozen epochs (credits never reset): queue limit 2
+        // → aggregate capacity 12. The sampled path's dispatch-bumped
+        // pending estimate must hand control back to the full scan at the
+        // cap, so exactly 12 requests dispatch and the rest are shed with
+        // QueueFull — regardless of which slots the RNG samples.
+        let views: Vec<GroupLoadView> = (0..6).map(|g| stub_view(g, 1_000_000, true)).collect();
+        let mut d = SlotStub::new(views);
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv)
+            .with_queue_limit(2)
+            .with_route_seed(5);
+        let mut dispatched = 0usize;
+        let mut shed = 0usize;
+        for i in 0..20u64 {
+            match shell.submit(req(i), &mut d) {
+                Ok(DispatchOutcome::Dispatched(_)) => dispatched += 1,
+                Ok(DispatchOutcome::Parked) => panic!("open groups must not park"),
+                Err(AdmissionError::QueueFull { .. }) => shed += 1,
+                Err(e) => panic!("unexpected rejection {e:?}"),
+            }
+        }
+        assert_eq!(dispatched, 12, "aggregate cap = 2 per group x 6 healthy groups");
+        assert_eq!(shed, 8, "everything past the cap is shed, not parked");
+    }
+
+    #[test]
+    fn submit_many_amortizes_one_view_acquisition() {
+        // equal KV usage: the LeastKv tie-break (pending count) decides,
+        // so the self-correcting snapshot is what spreads the burst
+        let views: Vec<GroupLoadView> = (0..32)
+            .map(|g| {
+                let mut v = stub_view(g, 1_000_000, true);
+                v.status.kv_usage = 0.0;
+                v
+            })
+            .collect();
+        let mut d = SlotStub::new(views);
+        let mut shell = TeShell::new(DecodeLbPolicy::LeastKv);
+        let burst: Vec<ServeRequest> = (0..24).map(req).collect();
+        let outcomes = shell.submit_many(burst, &mut d);
+        assert_eq!(outcomes.len(), 24);
+        assert!(outcomes
+            .iter()
+            .all(|o| matches!(o, Ok(DispatchOutcome::Dispatched(_)))));
+        assert_eq!(d.full_scans, 1, "one view acquisition for the whole burst");
+        assert_eq!(d.slot_reads, 0);
+        // the local snapshot self-corrects: the burst spreads across
+        // groups instead of piling onto the first idle one
+        let distinct: std::collections::HashSet<_> = d.delivered.iter().collect();
+        assert_eq!(distinct.len(), 24, "each request hit a different idle group");
+    }
+
     #[test]
     fn inflight_tracking_backends_get_no_double_credit() {
         // A backend whose views already count deliveries synchronously
         // (the PD plane) must not ALSO receive shell credits, or every
         // delivered-but-unpublished request counts twice against both
         // routing and queue-limit admission.
-        use crate::coordinator::decode_sched::GroupStatus;
-
         struct StubInflight {
             delivered: usize,
         }
@@ -364,6 +963,7 @@ mod tests {
                         group: 0,
                         running: self.delivered, // synchronous in-flight count
                         batch_limit: 8,
+                        kv_total_blocks: 0,
                         kv_usage: 0.0,
                         healthy: true,
                     },
@@ -393,7 +993,9 @@ mod tests {
         assert_eq!(out, DispatchOutcome::Dispatched(0));
         // the true limit still enforces
         let e = shell.submit(req(3), &mut d).unwrap_err();
-        let AdmissionError::QueueFull { pending, capacity } = e;
+        let AdmissionError::QueueFull { pending, capacity, .. } = e else {
+            panic!("expected QueueFull, got {e:?}");
+        };
         assert_eq!((pending, capacity), (2, 2));
     }
 
@@ -411,9 +1013,13 @@ mod tests {
     fn stale_credits_balance_burst_dispatch() {
         // Fire a burst faster than workers can republish: without the
         // sent-since-epoch credits every request would land on the same
-        // "empty" group; with them the burst splits evenly.
+        // "empty" group; with them the burst splits evenly. (2 groups ≤
+        // route_samples, so this provably runs the full-scan path and
+        // stays deterministic.)
         use crate::coordinator::dispatch::RuntimeDispatch;
-        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+        use crate::coordinator::worker::{
+            DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring,
+        };
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
         use std::sync::Arc;
@@ -427,7 +1033,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::uniform(2, 20_000_000),
-            None,
+            OutputWiring::None,
             factory,
         )
         .unwrap();
@@ -462,11 +1068,13 @@ mod tests {
         cfg.int8 = false;
         cfg.mtp_layers = 0;
         cfg.dp_queue_limit = 77;
+        cfg.route_samples = 3;
         cfg.decode_lb = DecodeLbPolicy::RoundRobin;
 
         let shell = TeShell::from_serving(&cfg);
         assert_eq!(shell.straggler_penalty, 1.25);
         assert_eq!(shell.dp_queue_limit, 77);
+        assert_eq!(shell.route_samples, 3);
         assert_eq!(shell.policy, DecodeLbPolicy::RoundRobin);
 
         let spec = GroupSpec::new(3, 8, 64).with_serving(&cfg);
@@ -487,7 +1095,9 @@ mod tests {
         // as a Failed record instead of vanishing.
         use crate::coordinator::dispatch::RuntimeDispatch;
         use crate::coordinator::request::RequestState;
-        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory};
+        use crate::coordinator::worker::{
+            DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring,
+        };
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
         use anyhow::anyhow;
@@ -505,7 +1115,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(2),
-            None,
+            OutputWiring::None,
             factory,
         )
         .unwrap();

@@ -103,6 +103,32 @@ impl GroupSpec {
 /// `!Sync`, e.g. a PJRT engine with lazily-compiled executables).
 pub type ModelFactory = Arc<dyn Fn(usize) -> Result<Box<dyn DecodeModel>> + Send + Sync>;
 
+/// How decode groups reach the output path (§4.2). The production wiring
+/// is [`OutputWiring::PerGroup`] — each DP master feeds its *own* output
+/// handler thread (`coordinator::output::OutputPlane`), so detokenization
+/// never funnels every group through one shared consumer.
+pub enum OutputWiring {
+    /// No output sink (benches and drain-only tests).
+    None,
+    /// One shared sink cloned into every group — the legacy single fan-in,
+    /// kept for raw-event taps in tests; it serializes all groups through
+    /// one consumer and does not scale past a few dozen groups.
+    Shared(mpsc::Sender<OutputEvent>),
+    /// Per-group senders keyed by group id (§4.2 child-handler model).
+    /// Groups without an entry get no sink.
+    PerGroup(std::collections::HashMap<usize, mpsc::Sender<OutputEvent>>),
+}
+
+impl OutputWiring {
+    fn sender_for(&self, group_id: usize) -> Option<mpsc::Sender<OutputEvent>> {
+        match self {
+            OutputWiring::None => None,
+            OutputWiring::Shared(tx) => Some(tx.clone()),
+            OutputWiring::PerGroup(map) => map.get(&group_id).cloned(),
+        }
+    }
+}
+
 /// [`ModelFactory`] that loads one artifact-backed PJRT engine per worker
 /// thread from `dir` — the standard factory for every artifact-driven
 /// surface (CLI, examples, artifact-gated tests).
@@ -190,13 +216,14 @@ pub struct DecentralizedRuntime {
 }
 
 impl DecentralizedRuntime {
-    /// Spawn one worker thread per spec. `out_tx` (if any) is cloned into
-    /// every group for output shortcutting; `factory` builds each thread's
-    /// model backend in-thread.
+    /// Spawn one worker thread per spec. `out` wires each group's output
+    /// shortcut (per-group handler threads in production — see
+    /// [`OutputWiring`]); `factory` builds each thread's model backend
+    /// in-thread.
     pub fn spawn(
         specs: &[GroupSpec],
         straggler: StragglerProfile,
-        out_tx: Option<mpsc::Sender<OutputEvent>>,
+        out: OutputWiring,
         factory: ModelFactory,
     ) -> Result<Self> {
         if specs.is_empty() {
@@ -217,6 +244,7 @@ impl DecentralizedRuntime {
                     queued: 0,
                     running: 0,
                     batch_limit: s.batch_limit,
+                    kv_total_blocks: s.kv_blocks,
                     kv_usage: 0.0,
                     healthy: true,
                 })
@@ -229,7 +257,7 @@ impl DecentralizedRuntime {
             let board_w = Arc::clone(&board);
             let straggler_w = Arc::clone(&straggler);
             let factory_w = Arc::clone(&factory);
-            let out_w = out_tx.clone();
+            let out_w = out.sender_for(spec.id);
             let spec_w = spec.clone();
             let join = thread::Builder::new()
                 .name(format!("dp-group-{}", spec.id))
@@ -345,22 +373,21 @@ impl DecentralizedRuntime {
     /// queued-but-unadmitted requests into `running` (§4.3), and each view
     /// carries the worker's tick EWMA + publish epoch.
     pub fn load_views(&self) -> Vec<crate::coordinator::decode_sched::GroupLoadView> {
-        use crate::coordinator::decode_sched::{GroupLoadView, GroupStatus};
-        self.board
-            .snapshot()
-            .into_iter()
-            .map(|e| GroupLoadView {
-                status: GroupStatus {
-                    group: e.status.id,
-                    running: e.status.running + e.status.queued,
-                    batch_limit: e.status.batch_limit,
-                    kv_usage: e.status.kv_usage,
-                    healthy: e.status.healthy,
-                },
-                tick_ewma_ns: e.tick_ewma_ns,
-                epoch: e.epoch,
-            })
+        (0..self.board.len())
+            .filter_map(|slot| self.view_slot(slot))
             .collect()
+    }
+
+    /// O(1) routing view of one board slot (the seqlock read the sampled
+    /// O(d) router is built on). `None` only for an out-of-range slot.
+    pub fn view_slot(
+        &self,
+        slot: usize,
+    ) -> Option<crate::coordinator::decode_sched::GroupLoadView> {
+        if slot >= self.board.len() {
+            return None;
+        }
+        Some(self.board.read(slot).load_view())
     }
 
     /// True when every group's last published snapshot shows no queued or
@@ -640,7 +667,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(2),
-            None,
+            OutputWiring::None,
             sim_factory(),
         )
         .unwrap();
@@ -665,7 +692,7 @@ mod tests {
         assert!(DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(2),
-            None,
+            OutputWiring::None,
             sim_factory(),
         )
         .is_err());
@@ -677,7 +704,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(1),
-            None,
+            OutputWiring::None,
             sim_factory(),
         )
         .unwrap();
@@ -693,7 +720,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(2),
-            None,
+            OutputWiring::None,
             sim_factory(),
         )
         .unwrap();
@@ -743,7 +770,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(1),
-            None,
+            OutputWiring::None,
             sim_factory(),
         )
         .unwrap();

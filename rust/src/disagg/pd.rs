@@ -564,7 +564,7 @@ mod tests {
         ];
         let groups = |n: usize| {
             (0..n)
-                .map(|g| GroupStatus { group: g, running: 0, batch_limit: 8, kv_usage: 0.1 * g as f64, healthy: true })
+                .map(|g| GroupStatus { group: g, running: 0, batch_limit: 8, kv_total_blocks: 0, kv_usage: 0.1 * g as f64, healthy: true })
                 .collect()
         };
         let decode = vec![
@@ -642,7 +642,7 @@ mod tests {
 
     #[test]
     fn prefill_plane_runs_jobs_and_reports_load() {
-        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, OutputWiring};
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
 
@@ -652,7 +652,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &specs,
             StragglerProfile::none(2),
-            None,
+            OutputWiring::None,
             Arc::clone(&factory),
         )
         .unwrap();
@@ -692,7 +692,7 @@ mod tests {
 
     #[test]
     fn err_backend_prefill_worker_is_retired_but_drains_jobs() {
-        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, OutputWiring};
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
         use std::time::{Duration, Instant};
@@ -712,7 +712,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &[GroupSpec::new(0, 4, 256)],
             StragglerProfile::none(1),
-            None,
+            OutputWiring::None,
             decode_factory,
         )
         .unwrap();
@@ -743,7 +743,7 @@ mod tests {
 
     #[test]
     fn dead_prefill_worker_is_retired_from_placement() {
-        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec};
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, OutputWiring};
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
         use std::time::{Duration, Instant};
@@ -761,7 +761,7 @@ mod tests {
         let rt = DecentralizedRuntime::spawn(
             &[GroupSpec::new(0, 4, 256)],
             StragglerProfile::none(1),
-            None,
+            OutputWiring::None,
             decode_factory,
         )
         .unwrap();

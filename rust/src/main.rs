@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use xdeepserve::config::{Config, DeploymentConfig, DeploymentMode};
-use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
 use xdeepserve::disagg::{DisaggDeployment, PrefillWorkerSpec};
 use xdeepserve::model::Tokenizer;
@@ -73,9 +73,9 @@ fn serve(args: &Args) -> Result<()> {
     let prefill_seq = engine.manifest.model.prefill_seq;
     drop(engine); // worker threads each load their own engine
 
-    // frontend sink via output shortcutting
+    // frontend sink via output shortcutting: the engine runs one
+    // output handler thread per DP group (§4.2), all feeding this sink
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
     // one engine per worker thread (the §4.2 per-thread backend model)
     let factory = engine_model_factory(artifacts.clone());
@@ -91,7 +91,7 @@ fn serve(args: &Args) -> Result<()> {
         .serving(cfg.serving.clone())
         .groups(specs)
         .dp_domains(cfg.deployment.dp_domains)
-        .output(shortcut.sender());
+        .frontend(tokenizer.clone(), sink_tx);
     if mode == DeploymentMode::PdDisaggregated {
         builder = builder
             .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect());
@@ -120,7 +120,7 @@ fn serve(args: &Args) -> Result<()> {
             finished += 1;
         }
     }
-    drop(shortcut);
+    // shutdown joined the per-group output plane: the sink is drained
     let mut texts = 0;
     while let Ok(msg) = sink_rx.try_recv() {
         if let FrontendMsg::Done { req_id, full_text } = msg {

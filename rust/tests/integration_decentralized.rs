@@ -17,7 +17,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::{DecodeLbPolicy, DeploymentMode, ServingConfig};
-use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
 use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
 use xdeepserve::model::{DecodeModel, SimModel, Tokenizer};
@@ -42,11 +42,10 @@ fn serve_once(
 ) -> (HashMap<u64, Vec<i32>>, HashMap<u64, (String, String)>) {
     let tokenizer = Tokenizer::new(256, 257, 512);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
     let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
         .groups(specs(n_groups, 8))
         .straggler(StragglerProfile::uniform(n_groups, 100_000).with_jitter(0.2, 7))
-        .output(shortcut.sender())
+        .frontend(tokenizer.clone(), sink_tx)
         .spawn()
         .unwrap();
     // Poisson pacing: ~5k req/s keeps the whole schedule around 10 ms
@@ -83,7 +82,8 @@ fn serve_once(
     assert_eq!(generated.len(), n, "every submitted request finishes");
     assert!(served_groups > 1, "work must actually spread across groups");
 
-    drop(shortcut);
+    // shutdown joined the per-group output plane: the sink is fully
+    // drained and disconnects once read out
     let mut chunks: HashMap<u64, String> = HashMap::new();
     let mut done: HashMap<u64, String> = HashMap::new();
     while let Ok(msg) = sink_rx.recv() {
@@ -212,6 +212,56 @@ fn straggler_aware_routing_shifts_load_off_slow_group() {
             );
         }
     }
+}
+
+#[test]
+fn sampled_routing_serves_128_groups_via_bursts() {
+    // O(d) routing at width against the live seqlock board: 128
+    // decentralized group threads. The first half of the workload goes
+    // through `submit_many` bursts (one amortized view acquisition
+    // each); the second half goes through per-request `submit`, which at
+    // 128 groups takes the sampled `view_slot` fast path. Every request
+    // finishes and load spreads widely — the shell never needed a
+    // whole-board scan per request to get there.
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(128, 8))
+        .straggler(StragglerProfile::uniform(128, 50_000))
+        .spawn()
+        .unwrap();
+    const REQS: u64 = 256;
+    let mut next = 0u64;
+    while next < REQS / 2 {
+        let burst: Vec<ServeRequest> = (next..(REQS / 2).min(next + 64))
+            .map(|i| ServeRequest::new(i, vec![256, 1, 2], 4, 0))
+            .collect();
+        next += burst.len() as u64;
+        for outcome in engine.submit_many(burst) {
+            outcome.unwrap();
+        }
+        engine.drain();
+    }
+    for i in REQS / 2..REQS {
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2], 4, 0))
+            .unwrap();
+        if i % 16 == 15 {
+            engine.drain();
+        }
+    }
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let groups = engine.shutdown().unwrap();
+    assert_eq!(groups.len(), 128);
+    let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+    assert_eq!(finished, REQS as usize, "every burst request finishes");
+    assert!(groups
+        .iter()
+        .flat_map(|g| g.finished.iter())
+        .all(|r| r.state == RequestState::Done && r.generated.len() == 4));
+    let served = groups.iter().filter(|g| !g.finished.is_empty()).count();
+    assert!(
+        served > 32,
+        "load must spread widely across 128 groups (got {served})"
+    );
 }
 
 #[test]

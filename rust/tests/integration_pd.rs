@@ -74,6 +74,7 @@ fn kv_transfer_preserves_decode_stream() {
                 group: 0,
                 running: 0,
                 batch_limit: 8,
+                kv_total_blocks: 0,
                 kv_usage: 0.0,
                 healthy: true,
             }],

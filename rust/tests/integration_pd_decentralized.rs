@@ -20,7 +20,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::DeploymentMode;
-use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
 use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
 use xdeepserve::disagg::PrefillWorkerSpec;
@@ -40,11 +40,10 @@ fn n_prefill_threads_inject_into_m_decode_groups() {
 
     let tokenizer = Tokenizer::new(256, 257, 512);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
     let mut engine = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
         .groups((0..M_DECODE).map(|i| GroupSpec::new(i, 8, 512)).collect())
         .prefill_workers((0..N_PREFILL).map(PrefillWorkerSpec::new).collect())
-        .output(shortcut.sender())
+        .frontend(tokenizer.clone(), sink_tx)
         .spawn()
         .unwrap();
 
@@ -88,8 +87,8 @@ fn n_prefill_threads_inject_into_m_decode_groups() {
     assert_eq!(seen.len(), REQS, "every request decodes end-to-end");
     assert!(served_groups > 1, "injections must spread across decode groups");
 
-    // (b) every stream terminates through the output shortcut
-    drop(shortcut);
+    // (b) every stream terminates through the per-group output plane
+    // (already joined by shutdown, so the sink drains then closes)
     let mut done = 0usize;
     let mut chunk_lens: HashMap<u64, usize> = HashMap::new();
     while let Ok(msg) = sink_rx.recv() {
@@ -153,11 +152,10 @@ fn full_decode_group_defers_and_retries_injections() {
 fn prefill_failure_fails_single_request_with_stream_termination() {
     let tokenizer = Tokenizer::new(256, 257, 512);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer, sink_tx);
     let mut engine = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
         .groups(vec![GroupSpec::new(0, 4, 512)])
         .prefill_workers(vec![PrefillWorkerSpec::new(0)])
-        .output(shortcut.sender())
+        .frontend(tokenizer, sink_tx)
         .spawn()
         .unwrap();
     // prompt longer than SimModel's prefill limit (192) → prefill fails
@@ -171,7 +169,6 @@ fn prefill_failure_fails_single_request_with_stream_termination() {
     assert_eq!(by_id[&2], RequestState::Done, "good request unaffected");
 
     // both streams terminated (Failed still emits Finished → Done msg)
-    drop(shortcut);
     let mut done_ids = Vec::new();
     while let Ok(msg) = sink_rx.recv() {
         if let FrontendMsg::Done { req_id, .. } = msg {

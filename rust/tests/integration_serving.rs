@@ -8,7 +8,7 @@ use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::DeploymentMode;
-use xdeepserve::coordinator::output::{FrontendMsg, OutputShortcut};
+use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
 use xdeepserve::coordinator::{engine_model_factory, DpGroup, ServeRequest, ServingEngine};
 use xdeepserve::model::{ServedModel, Tokenizer};
@@ -50,11 +50,10 @@ fn serve_requests_through_engine_and_groups() {
     let tokenizer = Tokenizer::from_manifest(&engine.manifest);
     drop(engine);
     let (sink_tx, sink_rx) = mpsc::channel::<FrontendMsg>();
-    let shortcut = OutputShortcut::spawn(tokenizer.clone(), sink_tx);
 
     let mut serving = ServingEngine::builder(DeploymentMode::Colocated, engine_factory())
         .groups((0..2).map(|i| GroupSpec::new(i, 4, 2048)).collect())
-        .output(shortcut.sender())
+        .frontend(tokenizer.clone(), sink_tx)
         .spawn()
         .unwrap();
 
@@ -77,7 +76,6 @@ fn serve_requests_through_engine_and_groups() {
             assert!(r.timing.done_ns >= r.timing.first_token_ns);
         }
     }
-    drop(shortcut);
     let done_msgs = sink_rx
         .iter()
         .filter(|m| matches!(m, FrontendMsg::Done { .. }))
