@@ -113,6 +113,7 @@ fn main() {
                 first_token_ns: first_token,
                 done_ns: done,
                 tokens_out: r.output_tokens as u64,
+                ..Default::default()
             });
             // stochastic completions free slots
             if rng.chance(0.9) {

@@ -59,6 +59,7 @@ fn run(n_requests: usize, rate_per_s: f64, collaborative: bool, tpot_ms: f64, se
             first_token_ns: first_token,
             done_ns,
             tokens_out: r.output_tokens as u64,
+            ..Default::default()
         };
         ttft.record(t.ttft_ms());
         metrics.record_request(&t);

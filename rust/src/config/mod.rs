@@ -242,11 +242,42 @@ impl Default for ServingConfig {
     }
 }
 
+/// Live MoeAttn expert-plane knobs (§5.2), consumed by
+/// `disagg::expert_plane::MoeAttnRuntime::from_config`. Every knob is
+/// validated at parse time (all must be ≥ 1; `domains` must not exceed
+/// `deployment.dp_groups`) so a bad value fails the config load with a
+/// typed error instead of surfacing at routing or exchange time.
+#[derive(Clone, Debug)]
+pub struct MoeAttnConfig {
+    /// Expert-shard worker threads in the plane.
+    pub expert_workers: usize,
+    /// Microbatches per decode iteration (§5.2 intra-DP overlap; 1 =
+    /// communication fully exposed).
+    pub microbatches: usize,
+    /// DP domains taking turns on the expert pool (§5.2 inter-DP overlap).
+    /// Defaults to `deployment.dp_domains` when the `[moe_attn]` section
+    /// leaves it unset; the serving engine passes this to
+    /// `ServingEngineBuilder::dp_domains`, which is the single source of
+    /// truth for both the routing filter and the expert-pool turnstile.
+    pub domains: usize,
+    /// Transformer layers exchanged per iteration.
+    pub layers: usize,
+    /// Wall-clock divisor on the calibrated stage costs (1 = real time).
+    pub time_scale: u64,
+}
+
+impl Default for MoeAttnConfig {
+    fn default() -> Self {
+        Self { expert_workers: 2, microbatches: 2, domains: 1, layers: 4, time_scale: 16 }
+    }
+}
+
 /// Top-level config.
 #[derive(Clone, Debug)]
 pub struct Config {
     pub deployment: DeploymentConfig,
     pub serving: ServingConfig,
+    pub moe_attn: MoeAttnConfig,
     pub sla: SlaConfig,
     pub seed: u64,
     /// Directory holding manifest.json/weights.bin/*.hlo.txt.
@@ -258,6 +289,7 @@ impl Default for Config {
         Self {
             deployment: DeploymentConfig::colocated_dp288(),
             serving: ServingConfig::default(),
+            moe_attn: MoeAttnConfig::default(),
             sla: SlaConfig::default(),
             seed: 0x2025_0710,
             artifacts_dir: "artifacts".into(),
@@ -282,6 +314,8 @@ impl Config {
             "colocated_dp288" => Config::default(),
             "disagg_768" => Config {
                 deployment: DeploymentConfig::disagg_768(),
+                // §7.1 disaggregated deployment: 3 DP domains, 2 microbatches
+                moe_attn: MoeAttnConfig { domains: 3, ..Default::default() },
                 ..Default::default()
             },
             "production" => Config {
@@ -368,6 +402,56 @@ impl Config {
         if let Some(v) = toml.try_f64("sla.tpot_ms")? {
             cfg.sla.tpot_ms = v;
         }
+        // [moe_attn] live expert-plane knobs: each must be >= 1 (a zero
+        // would only surface later as a hung exchange or a divide-by-zero
+        // domain cycle — fail the parse instead).
+        if let Some(v) = toml.try_u64("moe_attn.expert_workers")? {
+            anyhow::ensure!(v >= 1, "moe_attn.expert_workers must be >= 1, got {v}");
+            cfg.moe_attn.expert_workers = v as usize;
+        }
+        if let Some(v) = toml.try_u64("moe_attn.microbatches")? {
+            anyhow::ensure!(v >= 1, "moe_attn.microbatches must be >= 1, got {v}");
+            cfg.moe_attn.microbatches = v as usize;
+        }
+        match toml.try_u64("moe_attn.domains")? {
+            Some(v) => {
+                anyhow::ensure!(v >= 1, "moe_attn.domains must be >= 1, got {v}");
+                cfg.moe_attn.domains = v as usize;
+            }
+            // not set explicitly: follow the deployment's domain partition
+            // so the two knobs cannot silently disagree
+            None => cfg.moe_attn.domains = cfg.deployment.dp_domains,
+        }
+        if let Some(v) = toml.try_u64("moe_attn.layers")? {
+            anyhow::ensure!(v >= 1, "moe_attn.layers must be >= 1, got {v}");
+            cfg.moe_attn.layers = v as usize;
+        }
+        if let Some(v) = toml.try_u64("moe_attn.time_scale")? {
+            anyhow::ensure!(v >= 1, "moe_attn.time_scale must be >= 1, got {v}");
+            cfg.moe_attn.time_scale = v;
+        }
+        // Cross-field validation (previously these only surfaced at
+        // routing time): a domain partition must be non-empty and no
+        // finer than the group count — `group_id % domains` with
+        // domains == 0 would panic, and domains > dp_groups leaves empty
+        // domains that the §5.2 filter would spin over.
+        anyhow::ensure!(
+            cfg.deployment.dp_domains >= 1,
+            "deployment.dp_domains must be >= 1 (use 1 for undomained routing), got {}",
+            cfg.deployment.dp_domains
+        );
+        anyhow::ensure!(
+            cfg.deployment.dp_domains <= cfg.deployment.dp_groups,
+            "deployment.dp_domains ({}) must not exceed deployment.dp_groups ({})",
+            cfg.deployment.dp_domains,
+            cfg.deployment.dp_groups
+        );
+        anyhow::ensure!(
+            cfg.moe_attn.domains <= cfg.deployment.dp_groups,
+            "moe_attn.domains ({}) must not exceed deployment.dp_groups ({})",
+            cfg.moe_attn.domains,
+            cfg.deployment.dp_groups
+        );
         Ok(cfg)
     }
 
@@ -510,6 +594,68 @@ mod tests {
         assert_eq!(cfg.serving.straggler_penalty, 1.25);
         assert_eq!(cfg.serving.tick_ewma_alpha, 0.5);
         assert_eq!(cfg.serving.decode_lb, DecodeLbPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn moe_attn_knobs_parse_and_validate() {
+        let p = write_cfg(
+            "moe.toml",
+            "preset = \"disagg_768\"\n[moe_attn]\nexpert_workers = 8\nmicrobatches = 4\ndomains = 2\nlayers = 12\ntime_scale = 1\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.moe_attn.expert_workers, 8);
+        assert_eq!(cfg.moe_attn.microbatches, 4);
+        assert_eq!(cfg.moe_attn.domains, 2);
+        assert_eq!(cfg.moe_attn.layers, 12);
+        assert_eq!(cfg.moe_attn.time_scale, 1);
+
+        // the disagg_768 preset carries the paper's 3-domain default
+        let p = write_cfg("moe_preset.toml", "preset = \"disagg_768\"\n");
+        assert_eq!(Config::from_file(&p).unwrap().moe_attn.domains, 3);
+
+        // zero values fail at parse time with the key in the error
+        for (name, body) in [
+            ("moe0a.toml", "[moe_attn]\nexpert_workers = 0\n"),
+            ("moe0b.toml", "[moe_attn]\nmicrobatches = 0\n"),
+            ("moe0c.toml", "[moe_attn]\ndomains = 0\n"),
+            ("moe0d.toml", "[moe_attn]\nlayers = 0\n"),
+            ("moe0e.toml", "[moe_attn]\ntime_scale = 0\n"),
+        ] {
+            let p = write_cfg(name, body);
+            let e = Config::from_file(&p).unwrap_err().to_string();
+            assert!(e.contains("moe_attn."), "{body}: {e}");
+        }
+
+        // a domain count exceeding the group count fails at parse time
+        let p = write_cfg(
+            "moe_dom.toml",
+            "[deployment]\ndp_groups = 4\n\n[moe_attn]\ndomains = 8\n",
+        );
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("moe_attn.domains"), "{e}");
+    }
+
+    #[test]
+    fn dp_domains_validated_at_parse_time() {
+        // 0 domains: previously only surfaced at routing time
+        let p = write_cfg("dom0.toml", "[deployment]\ndp_domains = 0\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("dp_domains"), "{e}");
+
+        // more domains than groups: empty domains, also a parse error now
+        let p = write_cfg(
+            "dom_big.toml",
+            "[deployment]\ndp_groups = 4\ndp_domains = 9\n",
+        );
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("dp_domains"), "{e}");
+
+        // a valid partition still parses
+        let p = write_cfg(
+            "dom_ok.toml",
+            "[deployment]\ndp_groups = 8\ndp_domains = 2\n",
+        );
+        assert_eq!(Config::from_file(&p).unwrap().deployment.dp_domains, 2);
     }
 
     #[test]

@@ -75,6 +75,9 @@ pub struct DpGroup {
     pub mtp_drafts: u64,
     pub mtp_accepted: u64,
     pub iterations: u64,
+    /// Live MoeAttn A2E/E2A exchange accounting (§5.2); all-zero outside
+    /// `DeploymentMode::MoeAttn`.
+    pub exchange: crate::disagg::expert_plane::ExchangeStats,
 }
 
 impl DpGroup {
@@ -94,6 +97,7 @@ impl DpGroup {
             mtp_drafts: 0,
             mtp_accepted: 0,
             iterations: 0,
+            exchange: Default::default(),
         }
     }
 

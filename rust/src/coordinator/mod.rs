@@ -28,7 +28,17 @@
 //!   output handler thread per group ([`output::OutputPlane`], §4.2).
 //! * the PD dispatcher (inside [`serving`]) — routes the decode group,
 //!   then delivers to a `disagg::pd::PrefillPlane` worker that injects
-//!   the prefilled KV into that group's inbox (§5.1 step 8).
+//!   the prefilled KV into that group's inbox (§5.1 step 8) through the
+//!   §4.7 codec byte path.
+//!
+//! In `DeploymentMode::MoeAttn` the engine additionally spawns a
+//! `disagg::expert_plane::ExpertPlane`, and every decode worker's tick
+//! runs one A2E/E2A activation exchange per layer per microbatch against
+//! it (§5.2): activations are owned by the decode group until dispatched,
+//! by the expert worker through its recv/compute/send pipeline, and
+//! return with the combine; only one DP domain occupies the expert pool
+//! at a time; shutdown joins the expert plane after the decode workers
+//! and before the output plane.
 
 pub mod request;
 pub mod dp_group;

@@ -11,13 +11,26 @@
 //!   off cross-thread into the routed decode group's inbox
 //!   (`InboxMsg::InjectPrefilled`, step 8), deferring inside the group
 //!   when it is full (step 6).
-//! * **MoeAttn** — colocated-style serving with §5.2 domain-aware routing:
-//!   traffic balances across DP domains first, then §4.3 picks within.
+//! * **MoeAttn** — disaggregated MoE-Attention, live (§5.2): the engine
+//!   spawns an [`ExpertPlane`] of expert-shard worker threads (three
+//!   persistent-kernel pipeline stages each), and every decode tick runs
+//!   one A2E/E2A activation exchange per layer per microbatch against it,
+//!   with the §5.2 microbatch overlap and one-domain-at-a-time
+//!   turn-taking. Routing balances across DP domains first (§5.2), then
+//!   §4.3 picks within; expert workers publish straggler EWMAs into their
+//!   own seqlock board, swept alongside the decode heartbeats.
 //!
 //! Behind every mode sits the same decentralized runtime
 //! ([`DecentralizedRuntime`]), the same routing shell ([`TeShell`] over a
 //! [`Dispatcher`]), the same `serving.dp_queue_limit` admission, and the
 //! same publish-epoch health plane.
+//!
+//! **Shutdown ordering** (who joins whom): prefill plane first
+//! (outstanding KV still injects), then the decode workers, then the
+//! expert plane (decode workers hold its channel senders through their
+//! exchange clients), and the output plane last (every emitted event is
+//! queued by then, so the frontend sink drains completely before it
+//! disconnects).
 
 use std::sync::mpsc;
 
@@ -33,6 +46,7 @@ use crate::coordinator::output::{FrontendMsg, OutputEvent, OutputPlane};
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::te_shell::TeShell;
 use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring};
+use crate::disagg::expert_plane::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime};
 use crate::disagg::pd::{choose_prefill_te, PrefillJob, PrefillPlane, PrefillWorkerSpec};
 use crate::model::Tokenizer;
 use crate::reliability::heartbeat::GroupPulseMonitor;
@@ -125,6 +139,9 @@ pub struct ServingEngineBuilder {
     frontend: Option<(Tokenizer, mpsc::Sender<FrontendMsg>)>,
     prefill_workers: Vec<PrefillWorkerSpec>,
     prefill_factory: Option<ModelFactory>,
+    expert_workers: Vec<ExpertWorkerSpec>,
+    moe_attn_runtime: Option<MoeAttnRuntime>,
+    expert_straggler: Option<StragglerProfile>,
     long_seq_threshold: usize,
     dp_domains: usize,
     pulse_interval_ns: u64,
@@ -197,6 +214,24 @@ impl ServingEngineBuilder {
         self
     }
 
+    /// §5.2 expert plane (MoeAttn only): the expert-shard worker specs and
+    /// the typed runtime knobs (layers, microbatches, calibrated timing).
+    /// MoeAttn mode without this gets a small default plane; the runtime's
+    /// `domains` is always overridden by [`Self::dp_domains`] so the
+    /// turnstile and the routing filter can never disagree.
+    pub fn expert_plane(mut self, workers: Vec<ExpertWorkerSpec>, runtime: MoeAttnRuntime) -> Self {
+        self.expert_workers = workers;
+        self.moe_attn_runtime = Some(runtime);
+        self
+    }
+
+    /// Deterministic jitter injection into the expert workers' compute
+    /// stage (exercises the expert-side straggler sweep).
+    pub fn expert_straggler(mut self, profile: StragglerProfile) -> Self {
+        self.expert_straggler = Some(profile);
+        self
+    }
+
     /// DP domains for MoeAttn routing (§5.2); ignored by other modes.
     pub fn dp_domains(mut self, domains: usize) -> Self {
         self.dp_domains = domains.max(1);
@@ -210,8 +245,8 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// Spawn the worker threads (and, in PD mode, the prefill plane) and
-    /// assemble the engine.
+    /// Spawn the worker threads (and, per mode, the prefill or expert
+    /// plane) and assemble the engine.
     pub fn spawn(self) -> Result<ServingEngine> {
         if self.groups.is_empty() {
             bail!("serving engine needs at least one decode DP group");
@@ -219,14 +254,22 @@ impl ServingEngineBuilder {
         if self.mode != DeploymentMode::PdDisaggregated && !self.prefill_workers.is_empty() {
             bail!("prefill workers are only valid in DeploymentMode::PdDisaggregated");
         }
+        if self.mode != DeploymentMode::MoeAttn
+            && (!self.expert_workers.is_empty()
+                || self.moe_attn_runtime.is_some()
+                || self.expert_straggler.is_some())
+        {
+            bail!("an expert plane (and its straggler profile) is only valid in DeploymentMode::MoeAttn");
+        }
         if self.out_tx.is_some() && self.frontend.is_some() {
             bail!("choose one output wiring: raw shared sink OR per-group frontend plane");
         }
-        let n = self.groups.len();
+        let mut groups = self.groups;
+        let n = groups.len();
         let straggler = self.straggler.unwrap_or_else(|| StragglerProfile::none(n));
         // §4.2 child-handler model: one output thread per decode group,
         // spawned before the workers so every group gets its sender.
-        let ids: Vec<usize> = self.groups.iter().map(|g| g.id).collect();
+        let ids: Vec<usize> = groups.iter().map(|g| g.id).collect();
         let plane = self
             .frontend
             .map(|(tokenizer, sink)| OutputPlane::spawn(tokenizer, sink, &ids));
@@ -235,11 +278,35 @@ impl ServingEngineBuilder {
             (None, Some(tx)) => OutputWiring::Shared(tx),
             (None, None) => OutputWiring::None,
         };
-        let runtime = DecentralizedRuntime::spawn(
-            &self.groups,
+        // §5.2 expert plane (MoeAttn): spawned before the decode workers,
+        // which are born holding exchange clients into it. Domains follow
+        // the routing convention (group_id % dp_domains), and the plane's
+        // turnstile is sized to the same dp_domains.
+        let expert = match self.mode {
+            DeploymentMode::MoeAttn => {
+                let mut rt_cfg = self.moe_attn_runtime.unwrap_or_default();
+                rt_cfg.domains = self.dp_domains.max(1);
+                for g in groups.iter_mut() {
+                    g.domain = g.id % rt_cfg.domains;
+                }
+                let specs = if self.expert_workers.is_empty() {
+                    vec![ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)]
+                } else {
+                    self.expert_workers
+                };
+                let strag = self
+                    .expert_straggler
+                    .unwrap_or_else(|| StragglerProfile::none(specs.len()));
+                Some(ExpertPlane::spawn(&specs, rt_cfg, strag)?)
+            }
+            _ => None,
+        };
+        let runtime = DecentralizedRuntime::spawn_ext(
+            &groups,
             straggler,
             wiring,
             self.factory.clone(),
+            expert.as_ref().map(|p| p.handle()),
         )?;
         let prefill = match self.mode {
             DeploymentMode::PdDisaggregated => {
@@ -262,6 +329,7 @@ impl ServingEngineBuilder {
             shell,
             runtime,
             prefill,
+            expert,
             output_plane: plane,
             long_seq_threshold: self.long_seq_threshold,
             monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
@@ -277,6 +345,10 @@ pub struct ServingEngine {
     shell: TeShell,
     runtime: DecentralizedRuntime,
     prefill: Option<PrefillPlane>,
+    /// §5.2 expert plane (MoeAttn mode); joined in `shutdown` after the
+    /// decode workers (which hold its channel senders) and before the
+    /// output plane.
+    expert: Option<ExpertPlane>,
     /// Per-group output handlers (`builder.frontend(..)`); joined at the
     /// end of `shutdown`, after the decode workers.
     output_plane: Option<OutputPlane>,
@@ -296,6 +368,9 @@ impl ServingEngine {
             frontend: None,
             prefill_workers: Vec::new(),
             prefill_factory: None,
+            expert_workers: Vec::new(),
+            moe_attn_runtime: None,
+            expert_straggler: None,
             long_seq_threshold: DEFAULT_LONG_SEQ_THRESHOLD,
             dp_domains: 1,
             pulse_interval_ns: DEFAULT_PULSE_INTERVAL_NS,
@@ -369,14 +444,35 @@ impl ServingEngine {
 
     /// §6.1 health sweep over the publish-epoch heartbeats: demotes groups
     /// whose pulse stalled past the configured bound and returns their
-    /// ids. Demotion is router-level and transient.
+    /// ids. Demotion is router-level and transient. In MoeAttn mode this
+    /// also runs the expert-side straggler sweep ([`Self::expert_sweep`]);
+    /// only the *decode* demotions are returned here.
     pub fn health_sweep(&mut self) -> Vec<usize> {
+        if self.expert.is_some() {
+            self.expert_sweep();
+        }
         self.runtime.demote_stalled(&mut self.monitor)
     }
 
-    /// EPLB trigger (§4.2 responsibility 2).
+    /// Expert-side straggler sweep (§5.2 straggler visibility): hard-demote
+    /// expert workers whose published compute EWMA exceeds 3× the alive
+    /// median and re-home their shards. Returns the demoted worker ids
+    /// (always empty outside MoeAttn mode).
+    pub fn expert_sweep(&mut self) -> Vec<usize> {
+        self.expert.as_ref().map_or_else(Vec::new, |p| p.straggler_sweep())
+    }
+
+    /// EPLB trigger (§4.2 responsibility 2). When due in MoeAttn mode the
+    /// expert plane also rebalances its shard placement off the collected
+    /// per-shard loads (§4.5).
     pub fn tick_eplb(&mut self) -> bool {
-        self.shell.tick_eplb()
+        let due = self.shell.tick_eplb();
+        if due {
+            if let Some(p) = &self.expert {
+                p.rebalance();
+            }
+        }
+        due
     }
 
     /// Requests parked under backpressure, awaiting [`Self::drain`].
@@ -413,6 +509,12 @@ impl ServingEngine {
         &self.runtime
     }
 
+    /// The §5.2 expert plane (MoeAttn mode only), for expert-board reads,
+    /// shard-placement inspection, and operator demotions.
+    pub fn expert_plane(&self) -> Option<&ExpertPlane> {
+        self.expert.as_ref()
+    }
+
     /// Nanoseconds on the runtime clock.
     pub fn now_ns(&self) -> u64 {
         self.runtime.now_ns()
@@ -445,7 +547,9 @@ impl ServingEngine {
 
     /// Shut down prefill first (outstanding prefills still inject: the
     /// decode inboxes outlive the plane), then drain and join the decode
-    /// workers. Returns the groups with their finished records, sorted by
+    /// workers, then the expert plane (its workers exit once the decode
+    /// workers have dropped their exchange clients), then the output
+    /// plane. Returns the groups with their finished records, sorted by
     /// id.
     ///
     /// Requests still parked in the shell are handed to the runtime before
@@ -470,7 +574,7 @@ impl ServingEngine {
                 eprintln!("serving-engine: parked request {} lost all workers", r.id);
             }
         }
-        let Self { runtime, prefill, output_plane, .. } = self;
+        let Self { runtime, prefill, expert, output_plane, .. } = self;
         // join the prefill plane first, but never skip the decode join on
         // a prefill error — served work must not be discarded
         let prefill_result = match prefill {
@@ -478,11 +582,20 @@ impl ServingEngine {
             None => Ok(None),
         };
         let groups = runtime.shutdown();
+        // decode workers have exited (dropping their exchange clients), so
+        // the expert plane's inboxes disconnect: join it now, after the
+        // decode workers and before the output plane — but never skip the
+        // output drain on an expert-side panic
+        let expert_result = match expert {
+            Some(plane) => plane.shutdown(),
+            None => Ok(()),
+        };
         // decode workers have exited, so every output event is queued:
         // dropping the plane now joins each per-group handler after it
         // drains, then the frontend sink disconnects
         drop(output_plane);
         let groups = groups?;
+        expert_result?;
         match prefill_result {
             Ok(Some(orphans)) if !orphans.is_empty() => {
                 // only reachable when a decode worker died mid-run; if it
@@ -697,6 +810,57 @@ mod tests {
             groups.iter().filter(|g| !g.finished.is_empty()).count() > 1,
             "burst collapsed onto one group"
         );
+    }
+
+    #[test]
+    fn expert_plane_rejected_outside_moe_attn_mode() {
+        let err = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .expert_plane(vec![ExpertWorkerSpec::new(0)], MoeAttnRuntime::default())
+            .spawn();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn moe_attn_mode_runs_the_live_exchange_per_tick() {
+        // 2 groups × 2 expert workers: every decode iteration must run the
+        // per-layer A2E/E2A exchange with intact payloads, and the plane
+        // joins cleanly after the decode workers.
+        let rt_cfg = MoeAttnRuntime {
+            layers: 2,
+            time_scale: 256, // sub-µs injected costs
+            ..Default::default()
+        };
+        let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+            .groups_uniform(2, 4, 256)
+            .dp_domains(2)
+            .expert_plane(
+                vec![ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)],
+                rt_cfg,
+            )
+            .spawn()
+            .unwrap();
+        for i in 0..6u64 {
+            engine.submit(req(i, 4)).unwrap();
+            engine.drain();
+        }
+        engine.settle(Duration::from_secs(20)).unwrap();
+        let plane = engine.expert_plane().expect("MoeAttn engine owns a plane");
+        assert_eq!(plane.domain_violations(), 0, "one domain at a time");
+        assert!(plane.shard_loads().iter().sum::<u64>() > 0, "experts saw load");
+        let groups = engine.shutdown().unwrap();
+        let mut exchanged = 0u64;
+        for g in &groups {
+            assert_eq!(g.exchange.integrity_failures, 0);
+            exchanged += g.exchange.dispatches;
+            for r in &g.finished {
+                assert_eq!(r.state, RequestState::Done);
+                assert_eq!(r.generated.len(), 4);
+            }
+        }
+        assert!(exchanged > 0, "decode ticks must have exchanged activations");
+        let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+        assert_eq!(finished, 6);
     }
 
     #[test]

@@ -76,6 +76,9 @@ pub struct GroupSpec {
     pub use_mtp: bool,
     /// EWMA weight for this group's published tick-latency signal.
     pub tick_ewma_alpha: f64,
+    /// DP domain this group belongs to (§5.2 MoeAttn turn-taking over the
+    /// expert pool); ignored when no exchange wiring is supplied.
+    pub domain: usize,
 }
 
 impl GroupSpec {
@@ -87,6 +90,7 @@ impl GroupSpec {
             int8: false,
             use_mtp: false,
             tick_ewma_alpha: TICK_EWMA_ALPHA,
+            domain: 0,
         }
     }
 
@@ -95,6 +99,16 @@ impl GroupSpec {
         self.int8 = cfg.int8;
         self.use_mtp = cfg.mtp_layers > 0;
         self.tick_ewma_alpha = cfg.tick_ewma_alpha;
+        self
+    }
+
+    /// Assign this group to a §5.2 DP domain — for direct
+    /// [`DecentralizedRuntime::spawn_ext`] callers. `ServingEngine`
+    /// *overrides* this with `id % dp_domains` in MoeAttn mode, because
+    /// the TE-shell's domain routing filter is keyed on exactly that
+    /// mapping and the turnstile must never disagree with routing.
+    pub fn with_domain(mut self, domain: usize) -> Self {
+        self.domain = domain;
         self
     }
 }
@@ -226,6 +240,21 @@ impl DecentralizedRuntime {
         out: OutputWiring,
         factory: ModelFactory,
     ) -> Result<Self> {
+        Self::spawn_ext(specs, straggler, out, factory, None)
+    }
+
+    /// [`Self::spawn`] plus the §5.2 expert-plane wiring: with `exchange`
+    /// set, every worker builds an
+    /// [`ExchangeClient`](crate::disagg::expert_plane::ExchangeClient)
+    /// in-thread (from its group id and [`GroupSpec::domain`]) and runs
+    /// the per-layer A2E/E2A activation exchange inside each decode tick.
+    pub fn spawn_ext(
+        specs: &[GroupSpec],
+        straggler: StragglerProfile,
+        out: OutputWiring,
+        factory: ModelFactory,
+        exchange: Option<crate::disagg::expert_plane::ExchangeHandle>,
+    ) -> Result<Self> {
         if specs.is_empty() {
             bail!("decentralized runtime needs at least one DP group");
         }
@@ -258,6 +287,7 @@ impl DecentralizedRuntime {
             let straggler_w = Arc::clone(&straggler);
             let factory_w = Arc::clone(&factory);
             let out_w = out.sender_for(spec.id);
+            let exchange_w = exchange.clone();
             let spec_w = spec.clone();
             let join = thread::Builder::new()
                 .name(format!("dp-group-{}", spec.id))
@@ -266,6 +296,10 @@ impl DecentralizedRuntime {
                     group.int8 = spec_w.int8;
                     group.use_mtp = spec_w.use_mtp;
                     group.out_tx = out_w;
+                    // the §5.2 exchange client is built in-thread, like the
+                    // model backend: it owns this group's reply channels
+                    let exchange_client =
+                        exchange_w.map(|h| h.client(spec_w.id, spec_w.domain));
                     match factory_w(spec_w.id) {
                         Ok(model) => run_group(
                             group,
@@ -276,6 +310,7 @@ impl DecentralizedRuntime {
                             straggler_w,
                             spec_w.tick_ewma_alpha,
                             start,
+                            exchange_client,
                         ),
                         // Backend never came up: the group still owns its
                         // inbox, so fail (with Finished events) everything
@@ -532,6 +567,7 @@ fn run_group(
     straggler: Arc<StragglerProfile>,
     tick_ewma_alpha: f64,
     start: Instant,
+    exchange: Option<crate::disagg::expert_plane::ExchangeClient>,
 ) -> DpGroup {
     let mut ewma = Ewma::new(tick_ewma_alpha);
     let mut tick: u64 = 0;
@@ -565,6 +601,18 @@ fn run_group(
             }
         }
         if group.healthy && !group.running.is_empty() {
+            // §5.2 live MoeAttn data path: one A2E/E2A exchange per layer
+            // per microbatch against the expert plane, overlapped per the
+            // microbatch schedule, before the token-producing forward. The
+            // activation bytes are the running batch's live hidden rows.
+            if let Some(x) = exchange.as_ref() {
+                let rows: Vec<Vec<u8>> = group
+                    .running
+                    .iter()
+                    .map(|s| crate::disagg::expert_plane::row_bytes(&s.hidden))
+                    .collect();
+                x.run_iteration(&rows, &mut group.exchange);
+            }
             match group.decode_iteration(model, now_ns(&start)) {
                 Ok(n) => worked |= n > 0,
                 Err(e) => {

@@ -1,0 +1,1344 @@
+//! Live disaggregated MoE-Attention: the threaded **expert plane** (§5.2).
+//!
+//! Where `disagg::moe_attn` prices the 768-die deployment with closed-form
+//! arithmetic, this module *runs* it on the decentralized runtime: a pool
+//! of MoE/FFN expert-shard worker threads that decode-group workers call
+//! into once per layer per microbatch through a memory-semantic
+//! activation channel — dispatch is the A2E direction, combine is E2A —
+//! moving **real activation bytes** both ways.
+//!
+//! **Data path & ownership.** A decode group's [`ExchangeClient`] slices
+//! each microbatch's activation rows across the plane's logical expert
+//! shards and moves one [`ActivationMsg`] per touched shard into the
+//! owning worker's inbox (the A2E dispatch). The client owns the
+//! activation bytes until the channel send; from then on the expert
+//! worker owns them exclusively through its pipeline, and ownership
+//! returns to the client with the [`CombineMsg`] reply (E2A). Nothing is
+//! shared: every hop is a move through an `mpsc` channel, mirroring the
+//! §5.1 KV-handoff contract.
+//!
+//! **Persistent-kernel structure.** Each expert worker runs **three
+//! pipeline-stage threads** — A2E-recv, MoE-compute, E2A-send — connected
+//! by channels, mirroring §5.2's three persistent kernel streams that
+//! never return to the CPU: a slice can be in the send stage while the
+//! next is in compute and a third is being received. Stage costs are
+//! injected wall-clock time calibrated from [`A2eEngine`] (A2E/E2A) and
+//! [`ComputeModel::moe_ns`] (MoE), divided by
+//! [`MoeAttnRuntime::time_scale`].
+//!
+//! **One-domain-at-a-time contract.** Attention DP groups are partitioned
+//! into DP domains; a [`DomainTurnstile`] admits only one domain's groups
+//! into the expert pool at a time (per-layer granularity), while the
+//! *other* domains compute attention outside the permit — the §5.2
+//! inter-DP overlap. Within the active domain, the client hides microbatch
+//! A's dispatch→expert→combine round trip behind microbatch B's attention
+//! compute (intra-DP overlap); [`ExchangeStats`] records the exposed
+//! (blocked-waiting) versus hidden share of the round-trip wall time.
+//! The plane cross-checks the contract at the receiving end and counts
+//! violations ([`ExpertPlane::domain_violations`]).
+//!
+//! **Straggler visibility & re-homing.** Expert workers publish per-slice
+//! compute-latency EWMAs into a seqlock [`StatusBoard`] slot set (same
+//! protocol as the decode board). [`ExpertPlane::straggler_sweep`]
+//! hard-demotes a worker whose EWMA exceeds
+//! [`STRAGGLER_DEMOTE_RATIO`] × the alive median and re-homes its expert
+//! shards onto the least-loaded live workers via the §4.5 EPLB placement
+//! ([`crate::eplb::algorithm::place`]); a worker whose thread dies is
+//! retired the same way the moment a client observes the failure, and the
+//! client re-dispatches the lost slices over the updated shard map — so
+//! an expert-worker failure never hangs a decode stream. With no live
+//! worker left, clients fall back to computing the expert transform
+//! locally (counted in [`ExchangeStats::fallback_slices`]).
+//!
+//! **Shutdown ordering.** Decode workers drop their clients when they
+//! exit; [`ExpertPlane::shutdown`] then drops the plane's own senders and
+//! joins the stage threads — which is why `ServingEngine` joins the
+//! expert plane *after* the decode workers and *before* the output plane.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::decode_sched::STRAGGLER_DEMOTE_RATIO;
+use crate::coordinator::dp_group::DpGroupStatus;
+use crate::coordinator::status_board::{BoardEntry, StatusBoard};
+use crate::eplb::algorithm::place;
+use crate::fabric::engines::ComputeModel;
+use crate::fabric::FabricParams;
+use crate::metrics::Ewma;
+use crate::workload::straggler::StragglerProfile;
+use crate::xccl::a2e::{A2eConfig, A2eEngine};
+
+/// Typed runtime configuration for the live MoeAttn data path (the
+/// `moe_attn.*` config knobs plus the calibrated timing sources).
+#[derive(Clone, Debug)]
+pub struct MoeAttnRuntime {
+    /// Transformer layers simulated per decode iteration (one A2E/E2A
+    /// exchange per layer per microbatch).
+    pub layers: usize,
+    /// Microbatches per iteration (§5.2 intra-DP overlap; 1 = exposed).
+    pub microbatches: usize,
+    /// DP domains sharing the expert pool via the turnstile (§5.2
+    /// inter-DP overlap; 1 = undomained).
+    pub domains: usize,
+    /// Logical expert shards per worker (the re-homing granularity).
+    pub shards_per_worker: usize,
+    /// Wall-clock divisor applied to every injected stage cost: 1 runs
+    /// the calibrated µs-scale costs in real time; larger values shrink
+    /// them proportionally for fast tests.
+    pub time_scale: u64,
+    /// A2E/E2A collective calibration (trampoline geometry, §3.3).
+    pub a2e: A2eConfig,
+    /// MoE compute calibration (§7.1 anchors).
+    pub compute: ComputeModel,
+    pub fabric: FabricParams,
+    /// Attention-side per-layer per-microbatch anchor (§7.1: 0.7 ms at
+    /// batch 48 = variable part + fixed kernel-sequence overhead).
+    pub attn_mb_anchor_ns: u64,
+    pub attn_mb_fixed_ns: u64,
+    pub attn_anchor_batch: usize,
+    /// EWMA weight for the expert workers' published compute latency.
+    pub ewma_alpha: f64,
+}
+
+impl Default for MoeAttnRuntime {
+    fn default() -> Self {
+        Self {
+            layers: 4,
+            microbatches: 2,
+            domains: 1,
+            shards_per_worker: 2,
+            time_scale: 16,
+            a2e: A2eConfig::paper_deployment(),
+            compute: ComputeModel::default(),
+            fabric: FabricParams::default(),
+            attn_mb_anchor_ns: 640_000,
+            attn_mb_fixed_ns: 60_000,
+            attn_anchor_batch: 48,
+            ewma_alpha: 0.25,
+        }
+    }
+}
+
+impl MoeAttnRuntime {
+    /// Build from the parsed `[moe_attn]` config section.
+    pub fn from_config(cfg: &crate::config::MoeAttnConfig) -> Self {
+        Self {
+            layers: cfg.layers.max(1),
+            microbatches: cfg.microbatches.max(1),
+            domains: cfg.domains.max(1),
+            time_scale: cfg.time_scale.max(1),
+            ..Default::default()
+        }
+    }
+
+    /// Calibrated A2E latency (virtual ns, unscaled) for a microbatch of
+    /// `rows` activation rows — straight off the §3.3 trampoline model.
+    pub fn model_a2e_ns(&self, rows: usize) -> u64 {
+        A2eEngine::new(self.fabric.clone(), self.a2e.clone().with_batch(rows.max(1)))
+            .a2e()
+            .total_ns
+    }
+
+    /// Calibrated E2A latency (virtual ns, unscaled).
+    pub fn model_e2a_ns(&self, rows: usize) -> u64 {
+        A2eEngine::new(self.fabric.clone(), self.a2e.clone().with_batch(rows.max(1)))
+            .e2a()
+            .total_ns
+    }
+
+    /// Calibrated MoE expert compute (virtual ns, unscaled).
+    pub fn model_moe_ns(&self, rows: usize) -> u64 {
+        self.compute.moe_ns(rows.max(1))
+    }
+
+    /// Injected wall-clock attention cost for one layer of one microbatch.
+    pub fn attn_wall_ns(&self, rows: usize) -> u64 {
+        let var = (self.attn_mb_anchor_ns as f64 * rows as f64
+            / self.attn_anchor_batch.max(1) as f64) as u64;
+        (var + self.attn_mb_fixed_ns) / self.time_scale.max(1)
+    }
+
+    pub fn a2e_wall_ns(&self, rows: usize) -> u64 {
+        self.model_a2e_ns(rows) / self.time_scale.max(1)
+    }
+
+    pub fn e2a_wall_ns(&self, rows: usize) -> u64 {
+        self.model_e2a_ns(rows) / self.time_scale.max(1)
+    }
+
+    pub fn moe_wall_ns(&self, rows: usize) -> u64 {
+        self.model_moe_ns(rows) / self.time_scale.max(1)
+    }
+}
+
+/// Wall-clock cost injection with sub-100 µs fidelity: sleep the bulk,
+/// spin the tail. Plain `thread::sleep` oversleeps by the kernel's timer
+/// slack (~50 µs), which would swamp the exposed-vs-hidden communication
+/// measurement the microbatch-overlap bench gates on.
+pub fn busy_wait_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let t0 = Instant::now();
+    let total = Duration::from_nanos(ns);
+    if ns > 300_000 {
+        thread::sleep(total - Duration::from_nanos(200_000));
+    }
+    while t0.elapsed() < total {
+        std::hint::spin_loop();
+    }
+}
+
+/// Pack one sequence's hidden state as wire bytes (f32 LE). An empty
+/// hidden still ships one zero row so every running sequence takes part
+/// in the exchange.
+pub fn row_bytes(hidden: &[f32]) -> Vec<u8> {
+    if hidden.is_empty() {
+        return 0f32.to_le_bytes().to_vec();
+    }
+    let mut out = Vec::with_capacity(hidden.len() * 4);
+    for v in hidden {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// The expert-side FFN stand-in: a byte-exact, shard-keyed transform the
+/// dispatch side can verify, so payload integrity through the A2E→MoE→E2A
+/// pipeline is checkable bit-for-bit.
+pub fn expert_transform(shard: usize, payload: &mut [u8]) {
+    let k = (shard as u8).wrapping_mul(31).wrapping_add(0x5A);
+    for b in payload.iter_mut() {
+        *b = b.wrapping_add(k) ^ 0xA5;
+    }
+}
+
+/// One A2E dispatch slice: a microbatch's activation rows bound for one
+/// expert shard, with the injected stage costs and the E2A reply path.
+pub struct ActivationMsg {
+    pub group: usize,
+    pub domain: usize,
+    pub layer: usize,
+    pub microbatch: usize,
+    pub shard: usize,
+    /// Activation rows in this slice (the eplb load unit).
+    pub rows: usize,
+    /// Raw activation bytes (moved, never shared).
+    pub payload: Vec<u8>,
+    /// Injected wall-ns stage costs for this slice.
+    pub a2e_ns: u64,
+    pub moe_ns: u64,
+    pub e2a_ns: u64,
+    /// E2A reply channel for this microbatch exchange.
+    pub reply: mpsc::Sender<CombineMsg>,
+}
+
+/// One E2A combine slice: the expert-transformed activation bytes coming
+/// back to the dispatching decode group.
+pub struct CombineMsg {
+    pub shard: usize,
+    pub layer: usize,
+    pub microbatch: usize,
+    pub payload: Vec<u8>,
+    pub expert_worker: usize,
+}
+
+/// Spawn parameters for one expert-shard worker.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpertWorkerSpec {
+    pub id: usize,
+    /// Fault injection: the worker's A2E-recv stage exits after accepting
+    /// this many slices (simulating a crashed expert NPU); queued slices
+    /// drop, which is exactly what clients must recover from.
+    pub fail_after: Option<usize>,
+}
+
+impl ExpertWorkerSpec {
+    pub fn new(id: usize) -> Self {
+        Self { id, fail_after: None }
+    }
+
+    pub fn failing(id: usize, after: usize) -> Self {
+        Self { id, fail_after: Some(after) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain turnstile (§5.2: one DP domain in the expert pool at a time)
+// ---------------------------------------------------------------------------
+
+struct TurnState {
+    /// Domain currently owning the pool.
+    current: usize,
+    /// Permits held by the current domain's groups.
+    active: usize,
+    /// Waiters per domain.
+    waiting: Vec<usize>,
+}
+
+/// Per-domain turn-taking over the expert pool: any number of groups from
+/// the *current* domain hold permits concurrently; other domains wait.
+/// When the pool empties the turn rotates cyclically to the next domain
+/// with waiters, so equal-pressure domains alternate instead of the
+/// lowest id starving the rest. A domain with no traffic is skipped.
+///
+/// Fairness caveat: a turn only ends when the pool is *empty*, so
+/// phase-shifted groups of one domain can extend their turn while other
+/// domains wait — acceptable because every group computes attention
+/// outside its permit (creating rotation windows) and turns are bounded
+/// by the domain's in-flight work; the paper's layer-synchronized
+/// schedule is the idealized limit of this.
+pub struct DomainTurnstile {
+    state: Mutex<TurnState>,
+    cv: Condvar,
+    domains: usize,
+}
+
+impl DomainTurnstile {
+    pub fn new(domains: usize) -> Self {
+        let domains = domains.max(1);
+        Self {
+            state: Mutex::new(TurnState { current: 0, active: 0, waiting: vec![0; domains] }),
+            cv: Condvar::new(),
+            domains,
+        }
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.domains
+    }
+
+    /// Block until `domain` owns the pool; the permit is released on drop.
+    pub fn enter(&self, domain: usize) -> DomainPermit<'_> {
+        let domain = domain % self.domains;
+        let mut s = self.state.lock().unwrap();
+        s.waiting[domain] += 1;
+        loop {
+            // an empty pool whose current domain has no waiters hands the
+            // turn to the next domain with waiters (at least: this one)
+            if s.active == 0 && s.waiting[s.current] == 0 {
+                for k in 1..=self.domains {
+                    let d = (s.current + k) % self.domains;
+                    if s.waiting[d] > 0 {
+                        s.current = d;
+                        break;
+                    }
+                }
+            }
+            if s.current == domain {
+                s.waiting[domain] -= 1;
+                s.active += 1;
+                return DomainPermit { turnstile: self, domain };
+            }
+            // timed wait: a lost wakeup only costs one re-check interval
+            let (ns, _) = self.cv.wait_timeout(s, Duration::from_millis(50)).unwrap();
+            s = ns;
+        }
+    }
+
+    fn exit(&self, _domain: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.active -= 1;
+        if s.active == 0 {
+            // rotate toward the next waiting domain so turns alternate
+            for k in 1..=self.domains {
+                let d = (s.current + k) % self.domains;
+                if s.waiting[d] > 0 {
+                    s.current = d;
+                    break;
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// RAII pool-occupancy permit; dropping it releases the domain's claim.
+pub struct DomainPermit<'a> {
+    turnstile: &'a DomainTurnstile,
+    domain: usize,
+}
+
+impl Drop for DomainPermit<'_> {
+    fn drop(&mut self) {
+        self.turnstile.exit(self.domain);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plane shared state
+// ---------------------------------------------------------------------------
+
+struct PlaneShared {
+    /// Shard → worker-slot assignment. Atomic so re-homing never blocks a
+    /// dispatching client (relaxed loads on the hot path).
+    shard_map: Vec<AtomicUsize>,
+    /// Activation rows processed per shard (the eplb load signal).
+    shard_rows: Vec<AtomicU64>,
+    /// Per-worker-slot liveness; false = retired from placement.
+    alive: Vec<AtomicBool>,
+    /// Expert-side seqlock status board (one slot per worker).
+    board: StatusBoard,
+    /// Slices inside each worker's recv→compute→send pipeline.
+    depth: Vec<AtomicUsize>,
+    /// One-domain-at-a-time cross-check: `(domain, entrants)` of the pool
+    /// occupancy. A mutex, not atomics: the check must observe domain and
+    /// count together, or two same-domain slices racing the first entry
+    /// would record a violation the turnstile never committed.
+    occupancy: Mutex<(usize, usize)>,
+    domain_violations: AtomicUsize,
+    worker_ids: Vec<usize>,
+    start: Instant,
+}
+
+impl PlaneShared {
+    fn n_workers(&self) -> usize {
+        self.worker_ids.len()
+    }
+
+    fn any_alive(&self) -> bool {
+        self.alive.iter().any(|a| a.load(Ordering::Relaxed))
+    }
+
+    fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::Relaxed)).count()
+    }
+
+    /// Record a slice entering the pool and cross-check the §5.2 contract.
+    fn pool_enter(&self, domain: usize) {
+        let mut o = self.occupancy.lock().unwrap();
+        if o.1 == 0 {
+            o.0 = domain;
+        } else if o.0 != domain {
+            self.domain_violations.fetch_add(1, Ordering::SeqCst);
+        }
+        o.1 += 1;
+    }
+
+    fn pool_exit(&self) {
+        let mut o = self.occupancy.lock().unwrap();
+        o.1 = o.1.saturating_sub(1);
+    }
+
+    /// Publish worker `slot`'s status (called only by its compute stage —
+    /// the single-writer seqlock contract).
+    fn publish(&self, slot: usize, tick_ewma_ns: u64) {
+        let total: u64 = self.shard_rows.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        let mut my_rows = 0u64;
+        let mut my_shards = 0usize;
+        for (s, m) in self.shard_map.iter().enumerate() {
+            if m.load(Ordering::Relaxed) == slot {
+                my_rows += self.shard_rows[s].load(Ordering::Relaxed);
+                my_shards += 1;
+            }
+        }
+        let st = DpGroupStatus {
+            id: self.worker_ids[slot],
+            queued: self.depth[slot].load(Ordering::Relaxed),
+            running: my_shards,
+            batch_limit: self.shard_map.len(),
+            kv_total_blocks: 0,
+            // load share stands in for KV usage on the expert side
+            kv_usage: if total > 0 { my_rows as f64 / total as f64 } else { 0.0 },
+            healthy: self.alive[slot].load(Ordering::Relaxed),
+        };
+        self.board.publish(slot, st, tick_ewma_ns, self.start.elapsed().as_nanos() as u64);
+    }
+
+    /// Retire a worker from placement and re-home its shards. Idempotent:
+    /// `rehome` is a no-op once no shard maps to the slot, so concurrent
+    /// observers of the same failure converge on one re-homing.
+    fn retire_and_rehome(&self, slot: usize) -> Vec<usize> {
+        if slot >= self.alive.len() {
+            return Vec::new();
+        }
+        self.alive[slot].store(false, Ordering::Relaxed);
+        self.board.mark_unhealthy(slot);
+        self.rehome(slot)
+    }
+
+    /// §4.5 placement for the shards stranded on `dead_slot`: replicas
+    /// sorted by load, each to the least-loaded live worker
+    /// ([`crate::eplb::algorithm::place`]). With no live worker left the
+    /// map is kept — clients then compute the expert transform locally.
+    fn rehome(&self, dead_slot: usize) -> Vec<usize> {
+        let shards: Vec<usize> = self
+            .shard_map
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.load(Ordering::Relaxed) == dead_slot)
+            .map(|(s, _)| s)
+            .collect();
+        if shards.is_empty() || !self.any_alive() {
+            return shards;
+        }
+        let totals: Vec<u64> =
+            self.shard_rows.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        // live workers' base load from the shards they currently own;
+        // dead workers are priced out so placement never selects them
+        let n = self.n_workers();
+        let mut base = vec![0u64; n];
+        for (s, m) in self.shard_map.iter().enumerate() {
+            let w = m.load(Ordering::Relaxed);
+            if w < n && w != dead_slot {
+                base[w] = base[w].saturating_add(totals[s]);
+            }
+        }
+        for (w, a) in self.alive.iter().enumerate() {
+            if !a.load(Ordering::Relaxed) {
+                base[w] = u64::MAX / 2;
+            }
+        }
+        for p in place(&shards, &totals, &base, shards.len().max(1)) {
+            if self.alive[p.npu].load(Ordering::Relaxed) {
+                self.shard_map[p.expert].store(p.npu, Ordering::Relaxed);
+            }
+        }
+        shards
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exchange statistics
+// ---------------------------------------------------------------------------
+
+/// Per-decode-group accounting of the live A2E/E2A exchange. The headline
+/// pair is `exposed_ns` (wall time the group sat *blocked* on combines)
+/// against [`Self::hidden_ns`] (round-trip time that overlapped attention
+/// compute) — the §5.2 microbatch-overlap claim, measured.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeStats {
+    /// Decode iterations that ran the exchange.
+    pub iterations: u64,
+    /// Layer exchanges executed (iterations × layers).
+    pub layers_run: u64,
+    /// Slices dispatched to expert workers (A2E direction).
+    pub dispatches: u64,
+    /// Wall ns blocked waiting for combines (exposed communication).
+    pub exposed_ns: u64,
+    /// Wall ns from each microbatch's first dispatch to its last combine.
+    pub roundtrip_ns: u64,
+    /// Calibrated virtual-ns totals off the §3.3/§7.1 models (unscaled).
+    pub model_a2e_ns: u64,
+    pub model_moe_ns: u64,
+    pub model_e2a_ns: u64,
+    /// Combine payloads that failed the byte-exact integrity check.
+    pub integrity_failures: u64,
+    /// Slices re-dispatched after an expert-worker failure.
+    pub redispatches: u64,
+    /// Slices computed locally because no live expert worker remained.
+    pub fallback_slices: u64,
+}
+
+impl ExchangeStats {
+    /// Round-trip time hidden behind attention compute.
+    pub fn hidden_ns(&self) -> u64 {
+        self.roundtrip_ns.saturating_sub(self.exposed_ns)
+    }
+
+    /// Mean exposed communication per iteration (ns).
+    pub fn exposed_per_iteration_ns(&self) -> u64 {
+        if self.iterations == 0 {
+            0
+        } else {
+            self.exposed_ns / self.iterations
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client (decode-group side)
+// ---------------------------------------------------------------------------
+
+/// Cloneable factory handle a spawned decode worker turns into its own
+/// [`ExchangeClient`] (one per group, created in-thread).
+#[derive(Clone)]
+pub struct ExchangeHandle {
+    shared: Arc<PlaneShared>,
+    turnstile: Arc<DomainTurnstile>,
+    txs: Vec<mpsc::Sender<ActivationMsg>>,
+    cfg: MoeAttnRuntime,
+}
+
+impl ExchangeHandle {
+    pub fn client(&self, group: usize, domain: usize) -> ExchangeClient {
+        ExchangeClient {
+            group,
+            domain: domain % self.turnstile.n_domains(),
+            shared: Arc::clone(&self.shared),
+            turnstile: Arc::clone(&self.turnstile),
+            txs: self.txs.clone(),
+            cfg: self.cfg.clone(),
+        }
+    }
+}
+
+struct SliceRec {
+    shard: usize,
+    worker: usize,
+    sent: Vec<u8>,
+    rows: usize,
+    done: bool,
+}
+
+struct PendingMb {
+    rx: mpsc::Receiver<CombineMsg>,
+    slices: Vec<SliceRec>,
+    t0: Instant,
+    layer: usize,
+    mb: usize,
+}
+
+/// A decode group's side of the activation channel: slices microbatches
+/// across expert shards, runs the §5.2 overlap schedule, verifies combine
+/// payload integrity, and recovers from expert-worker failures. See the
+/// module docs for the ownership and turn-taking contracts.
+pub struct ExchangeClient {
+    group: usize,
+    domain: usize,
+    shared: Arc<PlaneShared>,
+    turnstile: Arc<DomainTurnstile>,
+    txs: Vec<mpsc::Sender<ActivationMsg>>,
+    cfg: MoeAttnRuntime,
+}
+
+impl ExchangeClient {
+    /// One decode iteration's worth of per-layer A2E/E2A exchanges over
+    /// the running batch's activation rows, with microbatch overlap:
+    /// microbatch A's round trip hides behind microbatch B's attention
+    /// compute, and only this group's domain occupies the expert pool
+    /// while its dispatches are in flight.
+    pub fn run_iteration(&self, rows: &[Vec<u8>], stats: &mut ExchangeStats) {
+        if rows.is_empty() {
+            return;
+        }
+        let mb_count = self.cfg.microbatches.max(1).min(rows.len());
+        let chunk = rows.len().div_ceil(mb_count);
+        let mbs: Vec<&[Vec<u8>]> = rows.chunks(chunk).collect();
+        for layer in 0..self.cfg.layers.max(1) {
+            // microbatch 0's attention runs *outside* the pool permit:
+            // inactive domains compute attention while another domain
+            // owns the expert pool (inter-DP overlap)
+            busy_wait_ns(self.cfg.attn_wall_ns(mbs[0].len()));
+            let permit = self.turnstile.enter(self.domain);
+            let mut pending = Some(self.dispatch_mb(layer, 0, mbs[0], stats));
+            for (i, mb) in mbs.iter().enumerate().skip(1) {
+                // this attention compute is what hides the previous
+                // microbatch's A2E→MoE→E2A round trip (intra-DP overlap)
+                busy_wait_ns(self.cfg.attn_wall_ns(mb.len()));
+                if let Some(p) = pending.take() {
+                    self.wait_combine(p, stats, 0);
+                }
+                pending = Some(self.dispatch_mb(layer, i, mb, stats));
+            }
+            if let Some(p) = pending.take() {
+                // the layer's final microbatch has nothing left to hide
+                // behind — its round trip is the structurally exposed part
+                self.wait_combine(p, stats, 0);
+            }
+            drop(permit);
+            stats.layers_run += 1;
+        }
+        stats.iterations += 1;
+    }
+
+    /// Slice one microbatch across the expert shards and move the slices
+    /// into the owning workers' inboxes (A2E dispatch). The local reply
+    /// sender is dropped before returning, so the combine receiver
+    /// disconnects deterministically once every slice has either replied
+    /// or been dropped by a dead worker.
+    fn dispatch_mb(
+        &self,
+        layer: usize,
+        mb: usize,
+        rows: &[Vec<u8>],
+        stats: &mut ExchangeStats,
+    ) -> PendingMb {
+        let (tx, rx) = mpsc::channel::<CombineMsg>();
+        let n_shards = self.shared.shard_map.len().max(1);
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+        for j in 0..rows.len() {
+            per_shard[j % n_shards].push(j);
+        }
+        let mut slices = Vec::new();
+        for (shard, idxs) in per_shard.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let payload: Vec<u8> =
+                idxs.iter().flat_map(|&j| rows[j].iter().copied()).collect();
+            match self.send_slice(layer, mb, shard, &payload, idxs.len(), &tx, stats) {
+                Some(worker) => slices.push(SliceRec {
+                    shard,
+                    worker,
+                    sent: payload,
+                    rows: idxs.len(),
+                    done: false,
+                }),
+                None => {
+                    // no live expert worker: run the FFN stand-in locally
+                    // so the exchange still completes (the result is
+                    // consumed exactly like a verified combine payload)
+                    let mut local = payload;
+                    expert_transform(shard, &mut local);
+                    stats.fallback_slices += 1;
+                }
+            }
+        }
+        stats.dispatches += slices.len() as u64;
+        stats.model_a2e_ns += self.cfg.model_a2e_ns(rows.len());
+        stats.model_moe_ns += self.cfg.model_moe_ns(rows.len());
+        stats.model_e2a_ns += self.cfg.model_e2a_ns(rows.len());
+        PendingMb { rx, slices, t0: Instant::now(), layer, mb }
+    }
+
+    /// Deliver one slice to its shard's owning worker, retiring and
+    /// re-homing on a dead inbox. Returns the accepting worker slot, or
+    /// `None` when no live worker remains.
+    #[allow(clippy::too_many_arguments)]
+    fn send_slice(
+        &self,
+        layer: usize,
+        mb: usize,
+        shard: usize,
+        payload: &[u8],
+        rows: usize,
+        reply: &mpsc::Sender<CombineMsg>,
+        stats: &mut ExchangeStats,
+    ) -> Option<usize> {
+        // each failed attempt retires a worker, so the loop is bounded
+        for _ in 0..=self.txs.len() {
+            let w = self.shared.shard_map[shard].load(Ordering::Relaxed);
+            let tx = self.txs.get(w)?;
+            let msg = ActivationMsg {
+                group: self.group,
+                domain: self.domain,
+                layer,
+                microbatch: mb,
+                shard,
+                rows,
+                payload: payload.to_vec(),
+                a2e_ns: self.cfg.a2e_wall_ns(rows),
+                moe_ns: self.cfg.moe_wall_ns(rows),
+                e2a_ns: self.cfg.e2a_wall_ns(rows),
+                reply: reply.clone(),
+            };
+            match tx.send(msg) {
+                Ok(()) => return Some(w),
+                Err(_) => {
+                    // worker inbox closed: hard failure, re-home its shards
+                    stats.redispatches += 1;
+                    self.shared.retire_and_rehome(w);
+                    if !self.shared.any_alive() {
+                        return None;
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Wait for one microbatch's combines (the exposed-communication
+    /// window), verify payload integrity, and recover slices lost to a
+    /// dead worker by re-homing and re-dispatching them. `depth` bounds
+    /// the recovery recursion by the worker count.
+    fn wait_combine(&self, p: PendingMb, stats: &mut ExchangeStats, depth: usize) {
+        let PendingMb { rx, mut slices, t0, layer, mb } = p;
+        let t_wait = Instant::now();
+        while !slices.iter().all(|s| s.done) {
+            match rx.recv() {
+                Ok(c) => {
+                    if let Some(s) =
+                        slices.iter_mut().find(|s| s.shard == c.shard && !s.done)
+                    {
+                        let mut expect = s.sent.clone();
+                        expert_transform(s.shard, &mut expect);
+                        if expect != c.payload {
+                            stats.integrity_failures += 1;
+                        }
+                        s.done = true;
+                    }
+                }
+                // every reply sender dropped: the remaining slices died
+                // inside a crashed worker's pipeline
+                Err(_) => break,
+            }
+        }
+        stats.exposed_ns += t_wait.elapsed().as_nanos() as u64;
+        stats.roundtrip_ns += t0.elapsed().as_nanos() as u64;
+        let missing: Vec<SliceRec> = slices.into_iter().filter(|s| !s.done).collect();
+        if missing.is_empty() {
+            return;
+        }
+        for s in &missing {
+            self.shared.retire_and_rehome(s.worker);
+        }
+        if depth > self.txs.len() {
+            // defensive bound: compute the remainder locally
+            for mut s in missing {
+                expert_transform(s.shard, &mut s.sent);
+                stats.fallback_slices += 1;
+            }
+            return;
+        }
+        let (tx, rx) = mpsc::channel::<CombineMsg>();
+        let mut retry = Vec::new();
+        for s in missing {
+            stats.redispatches += 1;
+            match self.send_slice(layer, mb, s.shard, &s.sent, s.rows, &tx, stats) {
+                Some(w) => retry.push(SliceRec { worker: w, done: false, ..s }),
+                None => {
+                    // no live worker: run the FFN stand-in locally (see
+                    // dispatch_mb) so the stream still terminates
+                    let mut local = s.sent;
+                    expert_transform(s.shard, &mut local);
+                    stats.fallback_slices += 1;
+                }
+            }
+        }
+        drop(tx);
+        if !retry.is_empty() {
+            self.wait_combine(
+                PendingMb { rx, slices: retry, t0: Instant::now(), layer, mb },
+                stats,
+                depth + 1,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The plane
+// ---------------------------------------------------------------------------
+
+/// The threaded expert pool: one logical expert-shard worker per spec,
+/// each running the three persistent-kernel pipeline stages (A2E-recv →
+/// MoE-compute → E2A-send) on its own threads. See the module docs for
+/// the full contract.
+pub struct ExpertPlane {
+    shared: Arc<PlaneShared>,
+    turnstile: Arc<DomainTurnstile>,
+    txs: Vec<mpsc::Sender<ActivationMsg>>,
+    cfg: MoeAttnRuntime,
+    joins: Vec<(usize, thread::JoinHandle<()>)>,
+}
+
+impl ExpertPlane {
+    /// Spawn the worker pipelines. `straggler` injects deterministic
+    /// per-(worker, slice) delay into the compute stage — the knob the
+    /// expert-side straggler sweep is exercised with.
+    pub fn spawn(
+        specs: &[ExpertWorkerSpec],
+        cfg: MoeAttnRuntime,
+        straggler: StragglerProfile,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("expert plane needs at least one worker");
+        }
+        for (i, a) in specs.iter().enumerate() {
+            if specs[..i].iter().any(|b| b.id == a.id) {
+                bail!("duplicate expert worker id {}", a.id);
+            }
+        }
+        let n = specs.len();
+        let n_shards = n * cfg.shards_per_worker.max(1);
+        let initial: Vec<BoardEntry> = specs
+            .iter()
+            .map(|s| {
+                BoardEntry::initial(DpGroupStatus {
+                    id: s.id,
+                    queued: 0,
+                    running: cfg.shards_per_worker.max(1),
+                    batch_limit: n_shards,
+                    kv_total_blocks: 0,
+                    kv_usage: 0.0,
+                    healthy: true,
+                })
+            })
+            .collect();
+        let shared = Arc::new(PlaneShared {
+            shard_map: (0..n_shards).map(|s| AtomicUsize::new(s % n)).collect(),
+            shard_rows: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
+            alive: specs.iter().map(|_| AtomicBool::new(true)).collect(),
+            board: StatusBoard::new(initial),
+            depth: specs.iter().map(|_| AtomicUsize::new(0)).collect(),
+            occupancy: Mutex::new((usize::MAX, 0)),
+            domain_violations: AtomicUsize::new(0),
+            worker_ids: specs.iter().map(|s| s.id).collect(),
+            start: Instant::now(),
+        });
+        let turnstile = Arc::new(DomainTurnstile::new(cfg.domains));
+        let straggler = Arc::new(straggler);
+        let mut txs = Vec::with_capacity(n);
+        let mut joins = Vec::new();
+        for (slot, spec) in specs.iter().enumerate() {
+            let (in_tx, in_rx) = mpsc::channel::<ActivationMsg>();
+            let (c_tx, c_rx) = mpsc::channel::<ActivationMsg>();
+            let (s_tx, s_rx) = mpsc::channel::<ActivationMsg>();
+            txs.push(in_tx);
+            let id = spec.id;
+            let fail_after = spec.fail_after;
+
+            // Stage 1: A2E-recv — accepts slices off the activation
+            // channel, pays the dispatch wire cost, feeds compute.
+            let sh = Arc::clone(&shared);
+            let recv = thread::Builder::new()
+                .name(format!("expert-{id}-recv"))
+                .spawn(move || {
+                    let mut accepted = 0usize;
+                    while let Ok(msg) = in_rx.recv() {
+                        sh.depth[slot].fetch_add(1, Ordering::SeqCst);
+                        sh.pool_enter(msg.domain);
+                        busy_wait_ns(msg.a2e_ns);
+                        accepted += 1;
+                        let dying = fail_after.map_or(false, |k| accepted >= k);
+                        if c_tx.send(msg).is_err() {
+                            break;
+                        }
+                        if dying {
+                            // simulated crash: flag the worker dead and
+                            // drop the inbox — queued slices drop with it.
+                            // Deliberately NO re-homing here: the *observer*
+                            // of the failure (a client's failed send or
+                            // missing combine, or the straggler sweep)
+                            // re-homes, exactly like a real crash where the
+                            // dead NPU cannot clean up after itself.
+                            sh.alive[slot].store(false, Ordering::Relaxed);
+                            sh.board.mark_unhealthy(slot);
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawning expert-{id}-recv: {e}"))?;
+
+            // Stage 2: MoE-compute — the FFN stand-in; publishes this
+            // worker's seqlock slot (single writer) after every slice.
+            let sh = Arc::clone(&shared);
+            let strag = Arc::clone(&straggler);
+            let alpha = cfg.ewma_alpha;
+            let compute = thread::Builder::new()
+                .name(format!("expert-{id}-compute"))
+                .spawn(move || {
+                    let mut ewma = Ewma::new(alpha);
+                    let mut tick = 0u64;
+                    while let Ok(mut msg) = c_rx.recv() {
+                        let t0 = Instant::now();
+                        let delay = strag.tick_delay_ns(id, tick);
+                        tick = tick.wrapping_add(1);
+                        busy_wait_ns(msg.moe_ns + delay);
+                        expert_transform(msg.shard, &mut msg.payload);
+                        sh.shard_rows[msg.shard]
+                            .fetch_add(msg.rows as u64, Ordering::Relaxed);
+                        ewma.observe(t0.elapsed().as_nanos() as f64);
+                        sh.publish(slot, ewma.value() as u64);
+                        if s_tx.send(msg).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawning expert-{id}-compute: {e}"))?;
+
+            // Stage 3: E2A-send — pays the combine wire cost and moves the
+            // transformed bytes back to the dispatching group.
+            let sh = Arc::clone(&shared);
+            let send = thread::Builder::new()
+                .name(format!("expert-{id}-send"))
+                .spawn(move || {
+                    while let Ok(msg) = s_rx.recv() {
+                        busy_wait_ns(msg.e2a_ns);
+                        sh.depth[slot].fetch_sub(1, Ordering::SeqCst);
+                        // exit the pool before replying, so a client that
+                        // releases its domain permit on this combine can
+                        // never race a stale entrant count
+                        sh.pool_exit();
+                        let ActivationMsg { shard, layer, microbatch, payload, reply, .. } =
+                            msg;
+                        let _ = reply.send(CombineMsg {
+                            shard,
+                            layer,
+                            microbatch,
+                            payload,
+                            expert_worker: id,
+                        });
+                    }
+                })
+                .map_err(|e| anyhow!("spawning expert-{id}-send: {e}"))?;
+
+            joins.push((id, recv));
+            joins.push((id, compute));
+            joins.push((id, send));
+        }
+        Ok(Self { shared, turnstile, txs, cfg, joins })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shared.n_workers()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shared.shard_map.len()
+    }
+
+    pub fn alive_workers(&self) -> usize {
+        self.shared.alive_count()
+    }
+
+    /// Cloneable client factory for decode workers.
+    pub fn handle(&self) -> ExchangeHandle {
+        ExchangeHandle {
+            shared: Arc::clone(&self.shared),
+            turnstile: Arc::clone(&self.turnstile),
+            txs: self.txs.clone(),
+            cfg: self.cfg.clone(),
+        }
+    }
+
+    /// Seqlock snapshot of every expert worker's published status.
+    pub fn views(&self) -> Vec<BoardEntry> {
+        self.shared.board.snapshot()
+    }
+
+    /// Current shard → worker-slot assignment.
+    pub fn shard_owners(&self) -> Vec<usize> {
+        self.shared
+            .shard_map
+            .iter()
+            .map(|m| m.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Activation rows processed per shard (the eplb load signal).
+    pub fn shard_loads(&self) -> Vec<u64> {
+        self.shared
+            .shard_rows
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// §5.2 contract cross-check: slices observed in the pool from two
+    /// domains at once (0 under a correct turnstile).
+    pub fn domain_violations(&self) -> usize {
+        self.shared.domain_violations.load(Ordering::SeqCst)
+    }
+
+    /// Operator/test demotion of one worker by id: retire it from
+    /// placement and re-home its shards.
+    pub fn demote(&self, worker_id: usize) -> Vec<usize> {
+        match self.shared.worker_ids.iter().position(|&w| w == worker_id) {
+            Some(slot) => self.shared.retire_and_rehome(slot),
+            None => Vec::new(),
+        }
+    }
+
+    /// Expert-side straggler sweep over the published compute EWMAs:
+    /// hard-demote (and re-home) every alive worker whose EWMA exceeds
+    /// [`STRAGGLER_DEMOTE_RATIO`] × the alive median — unless that would
+    /// leave the pool empty (availability wins). Returns demoted ids.
+    pub fn straggler_sweep(&self) -> Vec<usize> {
+        let views = self.views();
+        let mut ewmas: Vec<u64> = views
+            .iter()
+            .enumerate()
+            .filter(|(slot, e)| {
+                self.shared.alive[*slot].load(Ordering::Relaxed) && e.tick_ewma_ns > 0
+            })
+            .map(|(_, e)| e.tick_ewma_ns)
+            .collect();
+        if ewmas.len() < 2 {
+            return Vec::new();
+        }
+        ewmas.sort_unstable();
+        // lower median: with an even worker count (including the default
+        // 2-worker plane) the upper middle would be the straggler's own
+        // EWMA, making `slow > 3 × med` structurally unsatisfiable
+        let med = ewmas[(ewmas.len() - 1) / 2];
+        let mut demoted = Vec::new();
+        for (slot, e) in views.iter().enumerate() {
+            if self.shared.alive_count() <= 1 {
+                break;
+            }
+            if self.shared.alive[slot].load(Ordering::Relaxed)
+                && med > 0
+                && (e.tick_ewma_ns as f64) > STRAGGLER_DEMOTE_RATIO * med as f64
+            {
+                self.shared.retire_and_rehome(slot);
+                demoted.push(self.shared.worker_ids[slot]);
+            }
+        }
+        demoted
+    }
+
+    /// EPLB-style periodic rebalance: if the most-loaded live worker
+    /// carries more than twice the least-loaded live worker's rows, move
+    /// its hottest shard over. Returns how many shards moved.
+    pub fn rebalance(&self) -> usize {
+        let n = self.shared.n_workers();
+        let mut loads = vec![0u64; n];
+        for (s, m) in self.shared.shard_map.iter().enumerate() {
+            let w = m.load(Ordering::Relaxed);
+            if w < n {
+                loads[w] = loads[w]
+                    .saturating_add(self.shared.shard_rows[s].load(Ordering::Relaxed));
+            }
+        }
+        let live: Vec<usize> = (0..n)
+            .filter(|&w| self.shared.alive[w].load(Ordering::Relaxed))
+            .collect();
+        if live.len() < 2 {
+            return 0;
+        }
+        let hot = *live.iter().max_by_key(|&&w| loads[w]).unwrap();
+        let cold = *live.iter().min_by_key(|&&w| loads[w]).unwrap();
+        if loads[hot] < loads[cold].saturating_mul(2).max(1) {
+            return 0;
+        }
+        // move the hot worker's hottest shard (but never its last one)
+        let mut owned: Vec<usize> = self
+            .shared
+            .shard_map
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.load(Ordering::Relaxed) == hot)
+            .map(|(s, _)| s)
+            .collect();
+        if owned.len() < 2 {
+            return 0;
+        }
+        owned.sort_by_key(|&s| {
+            std::cmp::Reverse(self.shared.shard_rows[s].load(Ordering::Relaxed))
+        });
+        self.shared.shard_map[owned[0]].store(cold, Ordering::Relaxed);
+        1
+    }
+
+    /// Drop the plane's own channel senders and join every stage thread.
+    /// Call only after the decode workers have exited (they hold cloned
+    /// senders through their clients) — `ServingEngine::shutdown` joins
+    /// the decode runtime first for exactly this reason.
+    pub fn shutdown(self) -> Result<()> {
+        let Self { txs, joins, .. } = self;
+        drop(txs);
+        let mut panicked = Vec::new();
+        for (id, join) in joins {
+            if join.join().is_err() {
+                panicked.push(id);
+            }
+        }
+        if !panicked.is_empty() {
+            bail!("expert worker thread(s) panicked: {panicked:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mb: usize) -> MoeAttnRuntime {
+        MoeAttnRuntime {
+            layers: 2,
+            microbatches: mb,
+            domains: 1,
+            shards_per_worker: 2,
+            time_scale: 512, // sub-µs injected costs: fast tests
+            ..Default::default()
+        }
+    }
+
+    fn rows(n: usize) -> Vec<Vec<u8>> {
+        (0..n).map(|i| vec![i as u8; 16 + i % 5]).collect()
+    }
+
+    #[test]
+    fn roundtrip_preserves_payload_integrity_and_counts() {
+        let plane = ExpertPlane::spawn(
+            &[ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)],
+            cfg(2),
+            StragglerProfile::none(2),
+        )
+        .unwrap();
+        assert_eq!(plane.n_workers(), 2);
+        assert_eq!(plane.n_shards(), 4);
+        let client = plane.handle().client(0, 0);
+        let mut stats = ExchangeStats::default();
+        client.run_iteration(&rows(6), &mut stats);
+        assert_eq!(stats.iterations, 1);
+        assert_eq!(stats.layers_run, 2);
+        // 6 rows split 3+3 across 2 microbatches; 3 rows touch 3 of the 4
+        // shards → 3 slices per microbatch × 2 mbs × 2 layers
+        assert_eq!(stats.dispatches, 12);
+        assert_eq!(stats.integrity_failures, 0, "combine bytes must verify");
+        assert_eq!(stats.fallback_slices, 0);
+        assert!(stats.exposed_ns > 0);
+        assert!(stats.roundtrip_ns >= stats.exposed_ns);
+        assert!(stats.model_a2e_ns > 0 && stats.model_e2a_ns > 0);
+        // load landed on the shards
+        assert!(plane.shard_loads().iter().sum::<u64>() > 0);
+        assert_eq!(plane.domain_violations(), 0);
+        drop(client);
+        plane.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_is_retired_shards_rehome_and_client_recovers() {
+        // worker 0 crashes after its first accepted slice: later slices
+        // routed to it drop, the client re-homes + re-dispatches, and the
+        // exchange still completes with intact payloads.
+        let plane = ExpertPlane::spawn(
+            &[ExpertWorkerSpec::failing(0, 1), ExpertWorkerSpec::new(1)],
+            cfg(1),
+            StragglerProfile::none(2),
+        )
+        .unwrap();
+        let client = plane.handle().client(0, 0);
+        let mut stats = ExchangeStats::default();
+        for _ in 0..4 {
+            client.run_iteration(&rows(4), &mut stats);
+        }
+        assert_eq!(stats.integrity_failures, 0);
+        assert!(
+            stats.redispatches > 0 || stats.fallback_slices > 0,
+            "the crash must have been observed"
+        );
+        assert_eq!(plane.alive_workers(), 1, "crashed worker retired");
+        assert!(
+            plane.shard_owners().iter().all(|&w| w == 1),
+            "every shard re-homed to the live worker: {:?}",
+            plane.shard_owners()
+        );
+        drop(client);
+        plane.shutdown().unwrap();
+    }
+
+    #[test]
+    fn no_live_worker_falls_back_locally_without_hanging() {
+        let plane = ExpertPlane::spawn(
+            &[ExpertWorkerSpec::failing(0, 1)],
+            cfg(1),
+            StragglerProfile::none(1),
+        )
+        .unwrap();
+        let client = plane.handle().client(0, 0);
+        let mut stats = ExchangeStats::default();
+        for _ in 0..3 {
+            client.run_iteration(&rows(3), &mut stats);
+        }
+        assert_eq!(plane.alive_workers(), 0);
+        assert!(stats.fallback_slices > 0, "exchange degraded to local compute");
+        assert_eq!(stats.integrity_failures, 0);
+        drop(client);
+        plane.shutdown().unwrap();
+    }
+
+    #[test]
+    fn turnstile_admits_one_domain_at_a_time_and_alternates() {
+        use std::sync::atomic::AtomicUsize;
+
+        let t = Arc::new(DomainTurnstile::new(2));
+        let in_pool = Arc::new(AtomicUsize::new(usize::MAX));
+        let violations = Arc::new(AtomicUsize::new(0));
+        let entrants = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for domain in 0..2usize {
+            for _ in 0..2 {
+                let t = Arc::clone(&t);
+                let in_pool = Arc::clone(&in_pool);
+                let violations = Arc::clone(&violations);
+                let entrants = Arc::clone(&entrants);
+                handles.push(thread::spawn(move || {
+                    for _ in 0..50 {
+                        let permit = t.enter(domain);
+                        let prev = entrants.fetch_add(1, Ordering::SeqCst);
+                        if prev == 0 {
+                            in_pool.store(domain, Ordering::SeqCst);
+                        } else if in_pool.load(Ordering::SeqCst) != domain {
+                            violations.fetch_add(1, Ordering::SeqCst);
+                        }
+                        std::thread::yield_now();
+                        entrants.fetch_sub(1, Ordering::SeqCst);
+                        drop(permit);
+                    }
+                }));
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(violations.load(Ordering::SeqCst), 0, "domains overlapped in the pool");
+    }
+
+    #[test]
+    fn turnstile_skips_idle_domains() {
+        // a domain with no traffic must never block the others
+        let t = DomainTurnstile::new(3);
+        for _ in 0..5 {
+            let p = t.enter(2);
+            drop(p);
+            let p = t.enter(0);
+            drop(p);
+        }
+    }
+
+    #[test]
+    fn straggler_sweep_demotes_and_rehomes_the_slow_worker() {
+        // worker 2's compute stage pays a 60x injected delay per slice:
+        // its published EWMA blows past 3x the median and the sweep must
+        // retire it, re-homing its shards onto the healthy workers.
+        let plane = ExpertPlane::spawn(
+            &[
+                ExpertWorkerSpec::new(0),
+                ExpertWorkerSpec::new(1),
+                ExpertWorkerSpec::new(2),
+            ],
+            cfg(1),
+            StragglerProfile::with_slow_group(3, 150_000, 2, 60.0),
+        )
+        .unwrap();
+        let client = plane.handle().client(0, 0);
+        let mut stats = ExchangeStats::default();
+        // 6 rows over 6 shards → every worker sees slices every iteration
+        for _ in 0..4 {
+            client.run_iteration(&rows(6), &mut stats);
+        }
+        let demoted = plane.straggler_sweep();
+        // scheduling noise can occasionally inflate a healthy worker's
+        // EWMA too; the invariants are: the victim IS demoted, the pool
+        // keeps at least one live worker, and no shard stays on the victim
+        assert!(demoted.contains(&2), "victim worker hard-demoted: {demoted:?}");
+        assert!((1..=2).contains(&plane.alive_workers()));
+        let slot_of_victim = 2usize;
+        assert!(
+            plane.shard_owners().iter().all(|&w| w != slot_of_victim),
+            "victim's shards re-homed: {:?}",
+            plane.shard_owners()
+        );
+        // demoted worker stays visibly unhealthy on the expert board
+        let views = plane.views();
+        assert!(!views[slot_of_victim].status.healthy);
+        drop(client);
+        plane.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rebalance_moves_a_hot_shard_to_the_cold_worker() {
+        let plane = ExpertPlane::spawn(
+            &[ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)],
+            cfg(1),
+            StragglerProfile::none(2),
+        )
+        .unwrap();
+        // fabricate skew: all load on worker 0's shards
+        plane.shared.shard_rows[0].store(1_000, Ordering::Relaxed);
+        plane.shared.shard_rows[2].store(400, Ordering::Relaxed);
+        assert_eq!(plane.rebalance(), 1, "skewed load must trigger a move");
+        let owners = plane.shard_owners();
+        assert_eq!(owners[0], 1, "hottest shard moved to the cold worker");
+        plane.shutdown().unwrap();
+    }
+}

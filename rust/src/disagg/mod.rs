@@ -1,21 +1,36 @@
 //! Transformerless: fully disaggregated LLM serving (paper §5).
 //!
 //! The evolution (Fig 16): PD-colocated → disaggregated Prefill-Decode
-//! ([`pd`]) → disaggregated MoE-Attention ([`moe_attn`]) → asynchronous
-//! dataflow serving ([`dataflow`], the §5.3 vision, prototyped here).
+//! ([`pd`]) → disaggregated MoE-Attention ([`moe_attn`], [`expert_plane`])
+//! → asynchronous dataflow serving ([`dataflow`], the §5.3 vision,
+//! prototyped here).
 //!
-//! Two PD implementations share the placement logic
-//! ([`pd::choose_prefill_te`]): the static [`PdPipeline`] simulates the
-//! 8-step workflow with real KV bytes over the fabric model, while the
-//! threaded [`PrefillPlane`] runs live prefill workers that inject into
-//! the decentralized decode runtime — the path
-//! `coordinator::ServingEngine` uses for
-//! `DeploymentMode::PdDisaggregated`.
+//! Both disaggregated deployments exist twice, as a closed-form model and
+//! as a live threaded subsystem:
+//!
+//! * **PD** — the static [`PdPipeline`] simulates the 8-step workflow
+//!   with real KV bytes over the fabric model, while the threaded
+//!   [`PrefillPlane`] runs live prefill workers that encode the KV
+//!   through the §4.7 codec and inject it into the decentralized decode
+//!   runtime (`DeploymentMode::PdDisaggregated`). Both share the
+//!   placement logic ([`pd::choose_prefill_te`]).
+//! * **MoE-Attention** — [`moe_attn::DisaggDeployment`] prices the §5.2
+//!   768-die deployment arithmetically, while [`expert_plane`] runs it:
+//!   a pool of expert-shard worker threads (three persistent-kernel
+//!   pipeline stages each) that decode groups call into once per layer
+//!   per microbatch over a memory-semantic activation channel, with the
+//!   §5.2 microbatch overlap and one-domain-at-a-time turn-taking
+//!   (`DeploymentMode::MoeAttn`).
 
 pub mod pd;
 pub mod moe_attn;
+pub mod expert_plane;
 pub mod dataflow;
 
+pub use expert_plane::{
+    ExchangeClient, ExchangeHandle, ExchangeStats, ExpertPlane, ExpertWorkerSpec,
+    MoeAttnRuntime,
+};
 pub use moe_attn::{DisaggDeployment, IterationBreakdown};
 pub use pd::{PdPipeline, PrefillJob, PrefillPlane, PrefillWorkerSpec};
 

@@ -281,8 +281,12 @@ struct PrefillHandle {
 /// The §5.1 prefill side, live on the decentralized runtime: one OS thread
 /// per prefill TE, each owning its own model backend, running prompt
 /// prefill and handing the KV off cross-thread through the decode groups'
-/// inboxes ([`Injector`], step 8). Prefill completion is stamped into
-/// `timing.prefill_done_ns` before the handoff, so
+/// inboxes ([`Injector`], step 8). The handoff takes the §4.7 codec byte
+/// path: the KV is serialized to its wire form (latent INT8-quantized,
+/// RoPE raw — `kvcache::quant`) and re-materialized from the blob, with
+/// the encoded size and its simulated DMA/URMA fabric cost recorded in
+/// `timing.kv_wire_bytes` / `timing.kv_wire_ns`. Prefill completion is
+/// stamped into `timing.prefill_done_ns` before the handoff, so
 /// `first_token_ns − prefill_done_ns` measures the cross-thread handoff
 /// latency (including any step-6 deferral on the decode side).
 pub struct PrefillPlane {
@@ -357,6 +361,9 @@ impl PrefillPlane {
                         }
                     };
                     let mut orphans = Vec::new();
+                    // one fabric cost model per worker thread prices the
+                    // codec wire bytes (§5.1 step 7, DMA/URMA path)
+                    let fabric = FabricParams::default();
                     while let Ok(job) = rx.recv() {
                         run_prefill_job(
                             job,
@@ -365,6 +372,7 @@ impl PrefillPlane {
                             slot,
                             &load_w,
                             &inflight_w,
+                            &fabric,
                             &mut orphans,
                         );
                     }
@@ -491,10 +499,15 @@ fn deliver_with_fallback<T>(
     Err(payload)
 }
 
-/// One prefill job end-to-end on a worker thread: run prefill, stamp
-/// completion, move the KV into the decode group's inbox (or report the
-/// failure there so the stream still terminates). A request only becomes
-/// an orphan when *every* decode worker has exited.
+/// One prefill job end-to-end on a worker thread: run prefill, push the
+/// KV through the §4.7 transfer codec (latent INT8, raw RoPE — the
+/// handoff moves *wire bytes*, re-materialized on the way in, not the
+/// in-process struct), record the encoded size and its simulated fabric
+/// cost on the request, stamp completion, and move the KV into the decode
+/// group's inbox (or report the failure there so the stream still
+/// terminates). A request only becomes an orphan when *every* decode
+/// worker has exited.
+#[allow(clippy::too_many_arguments)]
 fn run_prefill_job(
     job: PrefillJob,
     model: Option<&dyn crate::model::DecodeModel>,
@@ -502,6 +515,7 @@ fn run_prefill_job(
     my_slot: usize,
     load: &[AtomicU64],
     inflight: &[AtomicUsize],
+    fabric: &FabricParams,
     orphans: &mut Vec<ServeRequest>,
 ) {
     let PrefillJob { mut req, decode_group } = job;
@@ -516,17 +530,24 @@ fn run_prefill_job(
                 .first()
                 .copied()
                 .ok_or_else(|| anyhow!("empty prefill logits"))? as i32;
-            Ok((pf, first))
+            // KV-codec byte path: what crosses the thread boundary is the
+            // decoded form of the encoded wire blob (a malformed roundtrip
+            // fails only this request, like any prefill error)
+            let blob = crate::kvcache::quant::encode_kv_auto(&pf.kv);
+            let kv = crate::kvcache::quant::decode_kv_like(&blob, &pf.kv)?;
+            Ok((pf, first, kv, blob.len() as u64))
         }),
     };
     let outcome = match prefilled {
-        Ok((pf, first)) => {
+        Ok((pf, first, kv, wire_bytes)) => {
             req.state = RequestState::AwaitingTransfer;
+            req.timing.kv_wire_bytes = wire_bytes;
+            req.timing.kv_wire_ns = fabric.dma_transfer_ns(wire_bytes as usize);
             req.timing.prefill_done_ns = injector.now_ns();
             deliver_with_fallback(
                 injector,
                 decode_group,
-                PrefilledSeq { req, kv: pf.kv, first_token: first, hidden: pf.hidden },
+                PrefilledSeq { req, kv, first_token: first, hidden: pf.hidden },
                 |i, g, s| i.inject_prefilled(g, s),
             )
             .map_err(|seq| seq.req)
@@ -686,6 +707,10 @@ mod tests {
                 assert_eq!(r.generated.len(), 4, "first token + 3 decoded");
                 assert!(r.timing.prefill_done_ns > 0, "prefill stamped by the plane");
                 assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+                // §4.7 codec byte path: every handoff records its wire
+                // size and the simulated fabric cost of moving it
+                assert!(r.timing.kv_wire_bytes > 0, "codec bytes recorded");
+                assert!(r.timing.kv_wire_ns > 0, "fabric cost recorded");
             }
         }
     }

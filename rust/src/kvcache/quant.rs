@@ -70,6 +70,18 @@ pub fn decode_kv(bytes: &[u8], l: usize, s: usize, c: usize, r: usize) -> Result
     Ok(kv)
 }
 
+/// [`encode_kv`] using the geometry the cache itself carries — the form
+/// the threaded PD handoff uses (no out-of-band shape plumbing).
+pub fn encode_kv_auto(kv: &SeqKv) -> Vec<u8> {
+    encode_kv(kv, kv.l, kv.s, kv.c, kv.r)
+}
+
+/// Decode a blob produced by [`encode_kv_auto`] into the same geometry as
+/// `like` (typically the cache the blob was encoded from).
+pub fn decode_kv_like(bytes: &[u8], like: &SeqKv) -> Result<SeqKv> {
+    decode_kv(bytes, like.l, like.s, like.c, like.r)
+}
+
 /// Wire size savings vs shipping the raw live prefix.
 pub fn compression_ratio(len: usize, l: usize, c: usize, r: usize) -> f64 {
     let raw = (l * len * (c + r) * 4) as f64;
@@ -141,6 +153,18 @@ mod tests {
         // c >> r: compression approaches 4x
         let ratio = compression_ratio(128, 4, 512, 16);
         assert!(ratio > 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn auto_codec_uses_carried_geometry() {
+        let (l, s, c, r, len) = (2, 32, 8, 4, 11);
+        let kv = random_kv(l, s, c, r, len, 9);
+        let blob = encode_kv_auto(&kv);
+        assert_eq!(blob, encode_kv(&kv, l, s, c, r), "auto == explicit dims");
+        let back = decode_kv_like(&blob, &kv).unwrap();
+        assert_eq!(back.len, len);
+        assert_eq!((back.l, back.s, back.c, back.r), (l, s, c, r));
+        assert_eq!(back.rope, kv.rope, "rope bit-exact through the auto path");
     }
 
     #[test]

@@ -22,8 +22,11 @@
 //! [`config::DeploymentMode`] — **Colocated** (workers prefill locally),
 //! **PdDisaggregated** (§5.1: a `disagg::pd::PrefillPlane` of prefill
 //! worker threads runs prompt prefill and injects the KV cross-thread
-//! into the routed decode group's inbox), and **MoeAttn** (§5.2:
-//! domain-aware routing over attention DP domains). The TE-shell
+//! into the routed decode group's inbox), and **MoeAttn** (§5.2, live: a
+//! `disagg::expert_plane::ExpertPlane` of expert-shard worker threads
+//! that decode groups exchange real activation bytes with once per layer
+//! per microbatch — A2E dispatch / E2A combine — under domain-aware
+//! routing and one-domain-at-a-time turn-taking). The TE-shell
 //! underneath is pure routing policy over a
 //! [`coordinator::dispatch::Dispatcher`] delivery backend, and enforces
 //! `serving.dp_queue_limit` admission: when aggregate pending load
@@ -36,10 +39,27 @@
 //! the decode worker owns it exclusively — deferred in
 //! `DpGroup::prefilled` while the group is full (step 6; retried every
 //! tick), admitted into the running batch when capacity frees, and
-//! released on completion or failure. Prefill completion is stamped in
-//! `timing.prefill_done_ns` before the handoff and first decode-side
-//! emission in `timing.first_token_ns` at admission, so their difference
-//! is the cross-thread handoff latency (including deferral).
+//! released on completion or failure. What crosses the thread boundary is
+//! the §4.7 **codec byte path**: the KV is serialized to wire form
+//! (latent INT8, RoPE raw — `kvcache::quant`) and re-materialized from
+//! the blob, with the encoded size and its simulated fabric cost recorded
+//! in `timing.kv_wire_bytes` / `timing.kv_wire_ns`. Prefill completion is
+//! stamped in `timing.prefill_done_ns` before the handoff and first
+//! decode-side emission in `timing.first_token_ns` at admission, so their
+//! difference is the cross-thread handoff latency (including deferral).
+//!
+//! **MoeAttn exchange contract (§5.2).** Activation slices move by value
+//! through `mpsc` channels (dispatch = A2E, combine = E2A); each expert
+//! worker runs three pipeline-stage threads mirroring the persistent
+//! kernels (recv / compute / send); only one DP domain's groups occupy
+//! the expert pool at a time while the others compute attention, and
+//! within a domain microbatch A's round trip hides behind microbatch B's
+//! attention compute. Expert workers publish compute-latency EWMAs into
+//! their own seqlock board; stragglers are hard-demoted and their shards
+//! re-homed (§4.5 placement), and a dead worker's lost slices are
+//! re-dispatched by the observing decode client — streams never hang on
+//! an expert failure. The expert plane joins after the decode workers
+//! and before the output plane.
 //!
 //! # Decentralized serving runtime (§4.2–4.4)
 //!

@@ -22,7 +22,7 @@ use anyhow::Result;
 use xdeepserve::config::{Config, DeploymentConfig, DeploymentMode};
 use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
-use xdeepserve::disagg::{DisaggDeployment, PrefillWorkerSpec};
+use xdeepserve::disagg::{DisaggDeployment, ExpertWorkerSpec, MoeAttnRuntime, PrefillWorkerSpec};
 use xdeepserve::model::Tokenizer;
 use xdeepserve::metrics::ServingMetrics;
 use xdeepserve::runtime::Engine;
@@ -87,14 +87,30 @@ fn serve(args: &Args) -> Result<()> {
             s
         })
         .collect();
+    // MoeAttn mode takes its domain partition from the typed [moe_attn]
+    // config (which defaults to deployment.dp_domains); domains can't
+    // outnumber the CLI-selected group count
+    let domains = if mode == DeploymentMode::MoeAttn {
+        cfg.moe_attn.domains
+    } else {
+        cfg.deployment.dp_domains
+    }
+    .min(n_groups.max(1));
     let mut builder = ServingEngine::builder(mode, factory)
         .serving(cfg.serving.clone())
         .groups(specs)
-        .dp_domains(cfg.deployment.dp_domains)
+        .dp_domains(domains)
         .frontend(tokenizer.clone(), sink_tx);
     if mode == DeploymentMode::PdDisaggregated {
         builder = builder
             .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect());
+    }
+    if mode == DeploymentMode::MoeAttn {
+        // §5.2 live expert plane from the typed [moe_attn] config
+        builder = builder.expert_plane(
+            (0..cfg.moe_attn.expert_workers).map(ExpertWorkerSpec::new).collect(),
+            MoeAttnRuntime::from_config(&cfg.moe_attn),
+        );
     }
     let mut serving = builder.spawn()?;
 

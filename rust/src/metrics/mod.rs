@@ -16,6 +16,11 @@ pub struct RequestTiming {
     pub first_token_ns: u64,
     pub done_ns: u64,
     pub tokens_out: u64,
+    /// §4.7 KV-codec wire bytes at the PD handoff (latent INT8 + raw
+    /// RoPE); 0 = the request never took the codec byte path.
+    pub kv_wire_bytes: u64,
+    /// Simulated fabric cost of moving those bytes (DMA/URMA model, ns).
+    pub kv_wire_ns: u64,
 }
 
 impl RequestTiming {
@@ -172,6 +177,7 @@ mod tests {
             first_token_ns: first,
             done_ns: done,
             tokens_out: toks,
+            ..Default::default()
         }
     }
 

@@ -19,11 +19,26 @@ pub struct SeqKv {
     pub rope: Vec<u8>,
     /// Tokens currently materialized in the cache (= next write position).
     pub len: usize,
+    /// Cache geometry (layers / max-seq / latent dim / rope dim) — carried
+    /// on the cache itself so transfer codecs (`kvcache::quant`) can
+    /// (de)serialize without out-of-band shape plumbing.
+    pub l: usize,
+    pub s: usize,
+    pub c: usize,
+    pub r: usize,
 }
 
 impl SeqKv {
     pub fn empty(l: usize, s: usize, c: usize, r: usize) -> Self {
-        Self { lat: vec![0u8; l * s * c * 4], rope: vec![0u8; l * s * r * 4], len: 0 }
+        Self {
+            lat: vec![0u8; l * s * c * 4],
+            rope: vec![0u8; l * s * r * 4],
+            len: 0,
+            l,
+            s,
+            c,
+            r,
+        }
     }
 
     pub fn nbytes(&self) -> usize {
@@ -97,6 +112,10 @@ impl<'e> ServedModel<'e> {
             lat: out[2].data.clone(),
             rope: out[3].data.clone(),
             len: prompt.len(),
+            l: self.l,
+            s: self.s,
+            c: self.c,
+            r: self.r,
         };
         Ok(PrefillOut { logits: out[0].clone(), hidden, kv })
     }

@@ -82,6 +82,18 @@ pub struct A2eReport {
     pub meta_fanout: usize,
 }
 
+/// Outcome of a real-bytes trampoline dispatch ([`A2eEngine::a2e_real`]).
+#[derive(Clone, Debug)]
+pub struct A2eRealOutcome {
+    /// Per expert NPU: `(token_idx, payload)` pairs delivered there.
+    pub received: Vec<Vec<(usize, Vec<u8>)>>,
+    /// Token copies that took the stage-2 trampoline-forward hop (targets
+    /// beyond the attention-paired prefix — the asymmetric remainder).
+    pub forwarded: usize,
+    /// Calibrated latency for the collective (same geometry as the bytes).
+    pub report: A2eReport,
+}
+
 pub struct A2eEngine {
     pub params: FabricParams,
     pub cfg: A2eConfig,
@@ -189,6 +201,45 @@ impl A2eEngine {
         }
     }
 
+    /// Real-bytes trampoline dispatch, as seen from one attention NPU:
+    /// every routed token is `(target_expert_npu, payload)`; stage 1
+    /// delivers all of them to the 1:1-paired trampolines, and stage 2
+    /// forwards the slices whose target has no attention-side pair (the
+    /// asymmetric-allocation remainder). Returns what each expert NPU
+    /// received plus the calibrated [`A2eReport`] — the byte movement and
+    /// the latency model share one geometry, so payload-integrity tests
+    /// exercise exactly the path the timing prices.
+    pub fn a2e_real(&self, tokens: &[(usize, Vec<u8>)]) -> A2eRealOutcome {
+        let e_npus = self.cfg.expert_npus.max(1);
+        let a_npus = self.cfg.attention_npus.max(1);
+        let mut received: Vec<Vec<(usize, Vec<u8>)>> = vec![Vec::new(); e_npus];
+        let mut forwarded = 0usize;
+        for (idx, (target, payload)) in tokens.iter().enumerate() {
+            let dst = target % e_npus;
+            if dst >= a_npus {
+                // no paired attention NPU: this copy takes the stage-2
+                // trampoline-forward hop
+                forwarded += 1;
+            }
+            received[dst].push((idx, payload.clone()));
+        }
+        A2eRealOutcome { received, forwarded, report: self.a2e() }
+    }
+
+    /// Real-bytes E2A gather: expert outputs route back through the same
+    /// trampoline geometry and re-assemble in token order on the
+    /// attention side. Returns `(token_idx, payload)` sorted by index
+    /// plus the calibrated E2A report.
+    pub fn e2a_real(
+        &self,
+        received: &[Vec<(usize, Vec<u8>)>],
+    ) -> (Vec<(usize, Vec<u8>)>, A2eReport) {
+        let mut all: Vec<(usize, Vec<u8>)> =
+            received.iter().flat_map(|v| v.iter().cloned()).collect();
+        all.sort_by_key(|(t, _)| *t);
+        (all, self.e2a())
+    }
+
     /// Ablation: naive single-stage pull (no trampoline) — every attention
     /// NPU handles metadata for every expert NPU, serialized on the AIV
     /// scalar pipeline ("high fan-out and limited scalar throughput").
@@ -275,6 +326,62 @@ mod tests {
         cfg.engine = EngineKind::Dma;
         let urma = A2eEngine::new(FabricParams::default(), cfg).a2e().total_ns;
         assert!(urma < mte, "urma {urma} vs mte {mte}");
+    }
+
+    /// Asymmetric allocation (288 experts vs 160 attention NPUs) with real
+    /// bytes: every payload arrives exactly once and bit-intact at its
+    /// target, a nonzero share takes the stage-2 trampoline-forward hop,
+    /// and the reported two-hop latency dominates the direct (stage-1-only
+    /// pairing) portion.
+    #[test]
+    fn real_bytes_trampoline_forward_preserves_payloads_asymmetric() {
+        let e = paper_engine(); // 160 attention / 288 expert NPUs
+        let tokens: Vec<(usize, Vec<u8>)> = (0..96)
+            .map(|t| (t * 3 % 288, vec![(t % 251) as u8; 48 + t % 7]))
+            .collect();
+        let out = e.a2e_real(&tokens);
+        let mut seen = vec![false; tokens.len()];
+        for (dst, list) in out.received.iter().enumerate() {
+            for (idx, payload) in list {
+                assert!(!seen[*idx], "token {idx} delivered twice");
+                seen[*idx] = true;
+                assert_eq!(payload, &tokens[*idx].1, "payload corrupted in flight");
+                assert_eq!(dst, tokens[*idx].0 % 288, "token landed on the wrong NPU");
+            }
+        }
+        assert!(seen.iter().all(|s| *s), "every token must arrive");
+        assert!(out.forwarded > 0, "asymmetric allocation needs stage-2 forwards");
+        assert!(out.forwarded < tokens.len(), "paired prefix stays single-hop");
+        assert!(out.report.stage2_ns > 0);
+        assert!(
+            out.report.total_ns > out.report.stage1_ns,
+            "two-hop latency must dominate the direct stage-1 path"
+        );
+
+        // E2A gathers everything back bit-intact, in token order
+        let (back, rep) = e.e2a_real(&out.received);
+        assert_eq!(back.len(), tokens.len());
+        for (i, (idx, payload)) in back.iter().enumerate() {
+            assert_eq!(*idx, i, "combine must re-assemble in token order");
+            assert_eq!(payload, &tokens[i].1);
+        }
+        assert!(rep.total_ns > 0);
+    }
+
+    /// Symmetric allocation: every target has a 1:1 pair — no forwards,
+    /// no stage-2 latency, but payloads still arrive intact.
+    #[test]
+    fn real_bytes_symmetric_allocation_stays_single_hop() {
+        let mut cfg = A2eConfig::paper_deployment();
+        cfg.expert_npus = 160;
+        let e = A2eEngine::new(FabricParams::default(), cfg);
+        let tokens: Vec<(usize, Vec<u8>)> =
+            (0..40).map(|t| (t * 4 % 160, vec![t as u8; 32])).collect();
+        let out = e.a2e_real(&tokens);
+        assert_eq!(out.forwarded, 0);
+        assert_eq!(out.report.stage2_ns, 0);
+        let delivered: usize = out.received.iter().map(|v| v.len()).sum();
+        assert_eq!(delivered, tokens.len());
     }
 
     #[test]
