@@ -44,10 +44,11 @@ fn live_expert_plane() -> anyhow::Result<()> {
     let factory: ModelFactory =
         Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
 
-    let run = |microbatches: usize| -> anyhow::Result<(f64, f64, u64)> {
+    let run = |microbatches: usize, carry: bool| -> anyhow::Result<(f64, f64, u64)> {
         let mut rt_cfg = MoeAttnRuntime {
             layers: LAYERS,
             microbatches,
+            cross_layer_carry: carry,
             time_scale: 1, // real calibrated µs-scale stage costs
             ..Default::default()
         };
@@ -87,8 +88,9 @@ fn live_expert_plane() -> anyhow::Result<()> {
         ))
     };
 
-    let (exp1, hid1, it1) = run(1)?;
-    let (exp2, hid2, it2) = run(2)?;
+    let (exp1, hid1, it1) = run(1, false)?;
+    let (exp2, hid2, it2) = run(2, false)?;
+    let (exp2c, hid2c, it2c) = run(2, true)?;
     println!(
         "  1 microbatch : exposed {exp1:.3} ms/iter, hidden {hid1:.3} ms/iter ({it1} iterations)"
     );
@@ -96,8 +98,13 @@ fn live_expert_plane() -> anyhow::Result<()> {
         "  2 microbatches: exposed {exp2:.3} ms/iter, hidden {hid2:.3} ms/iter ({it2} iterations)"
     );
     println!(
-        "  overlap saves {:.0}% of exposed communication",
-        (1.0 - exp2 / exp1.max(1e-9)) * 100.0
+        "  2 mb + carry : exposed {exp2c:.3} ms/iter, hidden {hid2c:.3} ms/iter ({it2c} iterations)"
+    );
+    println!(
+        "  overlap saves {:.0}% of exposed communication; cross-layer carry \
+         saves {:.0}% more",
+        (1.0 - exp2 / exp1.max(1e-9)) * 100.0,
+        (1.0 - exp2c / exp2.max(1e-9)) * 100.0
     );
 
     // closed-form prediction for the same shape, side by side

@@ -8,8 +8,11 @@
 //! prefill-handoff latency (and the §4.7 KV-codec wire bytes) alongside
 //! p99 TPOT, and a **live MoeAttn** scenario (attention groups × expert
 //! workers) reporting exposed-vs-hidden A2E/E2A communication per
-//! iteration with 1 vs. 2 microbatches — the §5.2 overlap claim, measured
-//! on the threaded expert plane.
+//! iteration with 1 vs. 2 microbatches plus the §5.2 **cross-layer
+//! carry** (a layer's final combine hidden behind the next layer's
+//! attention — gated strictly below the 2-microbatch barrier baseline),
+//! per-shard §4.5 replica counts in the JSON, and a live EPLB
+//! replica-growth check.
 //!
 //! Every scale run streams through the §4.2 per-group output plane (one
 //! detokenizing handler thread per DP group, no shared fan-in consumer);
@@ -286,15 +289,23 @@ struct MoeAttnResult {
     domains: usize,
     expert_workers: usize,
     microbatches: usize,
+    /// §5.2 cross-layer carry on/off for this run.
+    carry: bool,
     /// Mean exposed (blocked-waiting) communication per decode iteration.
     exposed_ms_per_iter: f64,
     /// Mean round-trip time hidden behind attention per iteration.
     hidden_ms_per_iter: f64,
+    /// Mean carried-seam window per iteration (combine time hidden behind
+    /// the *next* layer's attention — 0 with carry off).
+    carried_ms_per_iter: f64,
     p99_tpot_ms: f64,
     dispatches: u64,
     iterations: u64,
+    carries: u64,
     integrity_failures: u64,
     domain_violations: usize,
+    /// Live replica count per shard at end of run (§4.5 budget in use).
+    shard_replicas: Vec<usize>,
 }
 
 impl MoeAttnResult {
@@ -304,13 +315,25 @@ impl MoeAttnResult {
             ("domains", Json::Num(self.domains as f64)),
             ("expert_workers", Json::Num(self.expert_workers as f64)),
             ("microbatches", Json::Num(self.microbatches as f64)),
+            ("cross_layer_carry", Json::Bool(self.carry)),
             ("exposed_ms_per_iter", Json::Num(self.exposed_ms_per_iter)),
             ("hidden_ms_per_iter", Json::Num(self.hidden_ms_per_iter)),
+            ("carried_ms_per_iter", Json::Num(self.carried_ms_per_iter)),
             ("p99_tpot_ms", Json::Num(self.p99_tpot_ms)),
             ("dispatches", Json::Num(self.dispatches as f64)),
             ("iterations", Json::Num(self.iterations as f64)),
+            ("carries", Json::Num(self.carries as f64)),
             ("integrity_failures", Json::Num(self.integrity_failures as f64)),
             ("domain_violations", Json::Num(self.domain_violations as f64)),
+            (
+                "shard_replicas",
+                Json::Arr(
+                    self.shard_replicas
+                        .iter()
+                        .map(|&k| Json::Num(k as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -325,6 +348,7 @@ fn moe_attn_run(
     domains: usize,
     expert_workers: usize,
     microbatches: usize,
+    carry: bool,
 ) -> MoeAttnResult {
     const MA_MAX_NEW: usize = 10;
     // fill the whole batch (specs() gives batch_limit 8): with 8 resident
@@ -332,8 +356,13 @@ fn moe_attn_run(
     // so the overlap comparison measures the §5.2 effect, not slice-count
     // rounding
     const MA_REQS_PER_GROUP: usize = 8;
-    let mut rt_cfg =
-        MoeAttnRuntime { layers: 4, microbatches, time_scale: 1, ..Default::default() };
+    let mut rt_cfg = MoeAttnRuntime {
+        layers: 4,
+        microbatches,
+        cross_layer_carry: carry,
+        time_scale: 1,
+        ..Default::default()
+    };
     // make the per-row share dominate fixed startup so round-trip time
     // scales with microbatch size (the regime §5.2 overlap targets)
     rt_cfg.a2e.per_token_ns = 2_000;
@@ -355,23 +384,26 @@ fn moe_attn_run(
         engine.drain();
     }
     engine.settle(Duration::from_secs(120)).unwrap();
-    let domain_violations = engine
-        .expert_plane()
-        .expect("MoeAttn engine owns an expert plane")
-        .domain_violations();
+    let plane = engine.expert_plane().expect("MoeAttn engine owns an expert plane");
+    let domain_violations = plane.domain_violations();
+    let shard_replicas = plane.shard_replicas();
     let groups = engine.shutdown().unwrap();
     let mut tpot = Histogram::new();
     let mut exposed_ns = 0u64;
     let mut hidden_ns = 0u64;
+    let mut carried_ns = 0u64;
     let mut dispatches = 0u64;
     let mut iterations = 0u64;
+    let mut carries = 0u64;
     let mut integrity_failures = 0u64;
     let mut tokens = 0usize;
     for g in &groups {
         exposed_ns += g.exchange.exposed_ns;
         hidden_ns += g.exchange.hidden_ns();
+        carried_ns += g.exchange.carried_ns;
         dispatches += g.exchange.dispatches;
         iterations += g.exchange.iterations;
+        carries += g.exchange.carries;
         integrity_failures += g.exchange.integrity_failures;
         for r in &g.finished {
             tokens += r.generated.len();
@@ -388,13 +420,17 @@ fn moe_attn_run(
         domains,
         expert_workers,
         microbatches,
+        carry,
         exposed_ms_per_iter: exposed_ns as f64 / 1e6 / iterations.max(1) as f64,
         hidden_ms_per_iter: hidden_ns as f64 / 1e6 / iterations.max(1) as f64,
+        carried_ms_per_iter: carried_ns as f64 / 1e6 / iterations.max(1) as f64,
         p99_tpot_ms: tpot.percentile(99.0),
         dispatches,
         iterations,
+        carries,
         integrity_failures,
         domain_violations,
+        shard_replicas,
     }
 }
 
@@ -568,7 +604,8 @@ fn main() {
         ]));
     }
 
-    // ---- live MoeAttn (§5.2): exposed vs hidden comm, 1 vs 2 microbatches ----
+    // ---- live MoeAttn (§5.2): exposed vs hidden comm — 1 vs 2 microbatches
+    // (the PR-4 barrier schedule), then 2 microbatches + cross-layer carry ----
     let ma_scenarios: &[(usize, usize, usize)] = if quick {
         &[(4, 2, 2)] // (attention groups, domains, expert workers)
     } else {
@@ -576,29 +613,36 @@ fn main() {
     };
     let mut ma_results: Vec<MoeAttnResult> = Vec::new();
     for &(n, domains, ew) in ma_scenarios {
-        let one = moe_attn_run(n, domains, ew, 1);
-        let two = moe_attn_run(n, domains, ew, 2);
-        for r in [&one, &two] {
+        let one = moe_attn_run(n, domains, ew, 1, false);
+        let two = moe_attn_run(n, domains, ew, 2, false);
+        let carry = moe_attn_run(n, domains, ew, 2, true);
+        for r in [&one, &two, &carry] {
             bench.row(&[
                 format!(
-                    "MoeAttn: {n} attn groups × {ew} expert workers, {} domain(s), {} mb",
-                    r.domains, r.microbatches
+                    "MoeAttn: {n} attn groups × {ew} expert workers, {} domain(s), {} mb{}",
+                    r.domains,
+                    r.microbatches,
+                    if r.carry { " + carry" } else { "" }
                 ),
                 format!("exposed {:.3} ms/iter", r.exposed_ms_per_iter),
                 format!(
-                    "hidden {:.3} ms/iter, p99 TPOT {:.2} ms, {} dispatches",
-                    r.hidden_ms_per_iter, r.p99_tpot_ms, r.dispatches
+                    "hidden {:.3} ms/iter, carried {:.3} ms/iter, p99 TPOT {:.2} ms, {} dispatches",
+                    r.hidden_ms_per_iter, r.carried_ms_per_iter, r.p99_tpot_ms, r.dispatches
                 ),
                 "A2E/E2A real bytes per layer".into(),
             ]);
         }
         bench.check(
             &format!("MoeAttn {n}x{ew}: activation payloads bit-intact through the plane"),
-            one.integrity_failures == 0 && two.integrity_failures == 0,
+            one.integrity_failures == 0
+                && two.integrity_failures == 0
+                && carry.integrity_failures == 0,
         );
         bench.check(
             &format!("MoeAttn {n}x{ew}: one DP domain in the expert pool at a time"),
-            one.domain_violations == 0 && two.domain_violations == 0,
+            one.domain_violations == 0
+                && two.domain_violations == 0
+                && carry.domain_violations == 0,
         );
         // The §5.2 claim, measured: with 2 microbatches the round trip
         // hides behind the other microbatch's attention, so exposed
@@ -617,8 +661,60 @@ fn main() {
             &format!("MoeAttn {n}x{ew}: overlap actually hides communication at 2 mb"),
             two.hidden_ms_per_iter > 0.0,
         );
+        // The cross-layer carry claim: hiding each layer's final combine
+        // behind the next layer's attention must push exposed comm
+        // strictly below the PR-4 2-microbatch baseline (gated in --quick
+        // too — the carried seam window is pure wall-clock win).
+        bench.check(
+            &format!(
+                "MoeAttn {n}x{ew}: cross-layer carry exposed comm strictly below the \
+                 2-microbatch barrier baseline ({:.3} vs {:.3} ms/iter)",
+                carry.exposed_ms_per_iter, two.exposed_ms_per_iter
+            ),
+            carry.exposed_ms_per_iter < two.exposed_ms_per_iter,
+        );
+        bench.check(
+            &format!("MoeAttn {n}x{ew}: carried seam windows measured (> 0 at carry)"),
+            carry.carries > 0 && carry.carried_ms_per_iter > 0.0,
+        );
         ma_results.push(one);
         ma_results.push(two);
+        ma_results.push(carry);
+    }
+
+    // ---- §4.5 EPLB replica growth, live on the plane ----
+    // Seed a skewed per-shard load signal and tick the rebalance: the hot
+    // shard must split across ≥ 2 workers while every worker stays inside
+    // its redundancy-slot budget and every shard keeps ≥ 1 replica.
+    {
+        use xdeepserve::disagg::ExpertPlane;
+        let plane = ExpertPlane::spawn(
+            &(0..4).map(ExpertWorkerSpec::new).collect::<Vec<_>>(),
+            MoeAttnRuntime::default(),
+            StragglerProfile::none(4),
+        )
+        .unwrap();
+        plane.inject_shard_load(0, 50_000);
+        for s in 1..plane.n_shards() {
+            plane.inject_shard_load(s, 1_000);
+        }
+        let changes = plane.rebalance();
+        let replicas = plane.shard_replicas();
+        bench.row(&[
+            "EPLB replica tick (seeded hot shard)".into(),
+            format!("{changes} placement change(s)"),
+            format!("replicas/shard {replicas:?}"),
+            "hot shard splits within the redundancy budget".into(),
+        ]);
+        bench.check(
+            "EPLB tick grows the hot shard to >= 2 replicas",
+            replicas[0] >= 2,
+        );
+        bench.check(
+            "EPLB tick keeps >= 1 live replica on every shard",
+            replicas.iter().all(|&k| k >= 1),
+        );
+        plane.shutdown().unwrap();
     }
 
     // ---- machine-readable trajectory record ----

@@ -264,11 +264,35 @@ pub struct MoeAttnConfig {
     pub layers: usize,
     /// Wall-clock divisor on the calibrated stage costs (1 = real time).
     pub time_scale: u64,
+    /// §4.5 redundancy slots: extra replica slots per expert worker, and
+    /// the per-shard replica bound (`1 + redundancy_slots` owners). When
+    /// the `[moe_attn]` section leaves it unset it follows
+    /// `deployment.redundancy_slots` so the closed-form EPLB model and
+    /// the live plane agree on the replica budget. Capped at
+    /// `disagg::expert_plane::MAX_SHARD_REPLICAS − 1` (owner sets pack
+    /// into one atomic word).
+    pub redundancy_slots: usize,
+    /// §5.2 cross-layer microbatch carry: a layer's final microbatch's
+    /// E2A combine overlaps microbatch 0's next-layer attention, with the
+    /// domain permit held across the layer seam (release deferred until
+    /// the carried combine lands). Engages only when an iteration
+    /// actually splits into ≥ 2 microbatches — the overlap needs two
+    /// distinct microbatches to respect the data dependency. `false`
+    /// restores the per-layer barrier.
+    pub cross_layer_carry: bool,
 }
 
 impl Default for MoeAttnConfig {
     fn default() -> Self {
-        Self { expert_workers: 2, microbatches: 2, domains: 1, layers: 4, time_scale: 16 }
+        Self {
+            expert_workers: 2,
+            microbatches: 2,
+            domains: 1,
+            layers: 4,
+            time_scale: 16,
+            redundancy_slots: 1,
+            cross_layer_carry: true,
+        }
     }
 }
 
@@ -343,6 +367,9 @@ impl Config {
         }
         if let Some(v) = toml.try_u64("deployment.ep_size")? {
             cfg.deployment.ep_size = v as usize;
+        }
+        if let Some(v) = toml.try_u64("deployment.redundancy_slots")? {
+            cfg.deployment.redundancy_slots = v as usize;
         }
         if let Some(v) = toml.try_str("deployment.mode")? {
             cfg.deployment.mode = match v {
@@ -429,6 +456,29 @@ impl Config {
         if let Some(v) = toml.try_u64("moe_attn.time_scale")? {
             anyhow::ensure!(v >= 1, "moe_attn.time_scale must be >= 1, got {v}");
             cfg.moe_attn.time_scale = v;
+        }
+        // the packing bound comes from the plane itself, so raising
+        // MAX_SHARD_REPLICAS can never desync the parser from the runtime
+        let max_redundancy = crate::disagg::expert_plane::MAX_SHARD_REPLICAS - 1;
+        match toml.try_u64("moe_attn.redundancy_slots")? {
+            Some(v) => {
+                anyhow::ensure!(
+                    v as usize <= max_redundancy,
+                    "moe_attn.redundancy_slots must be <= {max_redundancy} (a shard's \
+                     owner set packs into one atomic word: {} replicas max), got {v}",
+                    max_redundancy + 1
+                );
+                cfg.moe_attn.redundancy_slots = v as usize;
+            }
+            // not set explicitly: follow the deployment's §4.5 redundancy
+            // budget so the closed-form model and the live plane agree
+            None => {
+                cfg.moe_attn.redundancy_slots =
+                    cfg.deployment.redundancy_slots.min(max_redundancy)
+            }
+        }
+        if let Some(v) = toml.try_bool("moe_attn.cross_layer_carry")? {
+            cfg.moe_attn.cross_layer_carry = v;
         }
         // Cross-field validation (previously these only surfaced at
         // routing time): a domain partition must be non-empty and no
@@ -633,6 +683,43 @@ mod tests {
         );
         let e = Config::from_file(&p).unwrap_err().to_string();
         assert!(e.contains("moe_attn.domains"), "{e}");
+    }
+
+    #[test]
+    fn replica_and_carry_knobs_parse_and_validate() {
+        // explicit values win
+        let p = write_cfg(
+            "moe_rep.toml",
+            "[moe_attn]\nredundancy_slots = 2\ncross_layer_carry = false\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.moe_attn.redundancy_slots, 2);
+        assert!(!cfg.moe_attn.cross_layer_carry);
+
+        // unset: follows the deployment's §4.5 redundancy budget (capped
+        // at the owner-set packing bound) so model and plane agree
+        let p = write_cfg(
+            "moe_rep_dep.toml",
+            "[deployment]\nredundancy_slots = 9\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.deployment.redundancy_slots, 9);
+        assert_eq!(
+            cfg.moe_attn.redundancy_slots,
+            crate::disagg::expert_plane::MAX_SHARD_REPLICAS - 1,
+            "capped to the packing bound"
+        );
+
+        // defaults: one redundancy slot, carry on
+        let p = write_cfg("moe_rep_def.toml", "preset = \"disagg_768\"\n");
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.moe_attn.redundancy_slots, 1);
+        assert!(cfg.moe_attn.cross_layer_carry);
+
+        // an over-packed explicit value fails at parse time, naming the key
+        let p = write_cfg("moe_rep_bad.toml", "[moe_attn]\nredundancy_slots = 99\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("moe_attn.redundancy_slots"), "{e}");
     }
 
     #[test]

@@ -76,7 +76,9 @@ pub struct DpGroup {
     pub mtp_accepted: u64,
     pub iterations: u64,
     /// Live MoeAttn A2E/E2A exchange accounting (§5.2); all-zero outside
-    /// `DeploymentMode::MoeAttn`.
+    /// `DeploymentMode::MoeAttn`. Includes the cross-layer-carry counters
+    /// (`carries`/`carried_ns` — combine round trips hidden behind the
+    /// next layer's attention) and the replica-recovery counters.
     pub exchange: crate::disagg::expert_plane::ExchangeStats,
 }
 

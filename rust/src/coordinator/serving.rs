@@ -15,10 +15,16 @@
 //!   spawns an [`ExpertPlane`] of expert-shard worker threads (three
 //!   persistent-kernel pipeline stages each), and every decode tick runs
 //!   one A2E/E2A activation exchange per layer per microbatch against it,
-//!   with the §5.2 microbatch overlap and one-domain-at-a-time
-//!   turn-taking. Routing balances across DP domains first (§5.2), then
-//!   §4.3 picks within; expert workers publish straggler EWMAs into their
-//!   own seqlock board, swept alongside the decode heartbeats.
+//!   with the §5.2 microbatch overlap, cross-layer carry (a layer's
+//!   final combine hides behind the next layer's attention, the domain
+//!   permit held across the seam), and one-domain-at-a-time turn-taking.
+//!   Expert shards are replica-owned (§4.5): clients rotate slices over
+//!   each shard's live replicas, [`ServingEngine::tick_eplb`] grows and
+//!   shrinks replica counts from observed load, and a crashed worker
+//!   degrades its shards to their surviving replicas. Routing balances
+//!   across DP domains first (§5.2), then §4.3 picks within; expert
+//!   workers publish straggler EWMAs into their own seqlock board, swept
+//!   alongside the decode heartbeats.
 //!
 //! Behind every mode sits the same decentralized runtime
 //! ([`DecentralizedRuntime`]), the same routing shell ([`TeShell`] over a
@@ -463,8 +469,10 @@ impl ServingEngine {
     }
 
     /// EPLB trigger (§4.2 responsibility 2). When due in MoeAttn mode the
-    /// expert plane also rebalances its shard placement off the collected
-    /// per-shard loads (§4.5).
+    /// expert plane also runs its §4.5 replica tick off the collected
+    /// per-shard loads: coverage repair, replica grow/shrink within the
+    /// redundancy budget, and the residual hot→cold shard move
+    /// (`ExpertPlane::rebalance`).
     pub fn tick_eplb(&mut self) -> bool {
         let due = self.shell.tick_eplb();
         if due {
@@ -473,6 +481,12 @@ impl ServingEngine {
             }
         }
         due
+    }
+
+    /// Override the EPLB trigger cadence (submissions between rebalances;
+    /// default 512). Chaos tests and operators drive faster ticks with it.
+    pub fn set_eplb_interval(&mut self, every: u64) {
+        self.shell.eplb_interval = every.max(1);
     }
 
     /// Requests parked under backpressure, awaiting [`Self::drain`].

@@ -603,8 +603,11 @@ fn run_group(
         if group.healthy && !group.running.is_empty() {
             // §5.2 live MoeAttn data path: one A2E/E2A exchange per layer
             // per microbatch against the expert plane, overlapped per the
-            // microbatch schedule, before the token-producing forward. The
-            // activation bytes are the running batch's live hidden rows.
+            // microbatch schedule (including the cross-layer carry, which
+            // holds the domain permit across layer seams inside this one
+            // call), before the token-producing forward. The activation
+            // bytes are the running batch's live hidden rows; replica
+            // rotation across shard owners happens inside the client.
             if let Some(x) = exchange.as_ref() {
                 let rows: Vec<Vec<u8>> = group
                     .running

@@ -29,6 +29,12 @@ pub struct ColocatedDeployment {
     pub a2a: A2aConfig,
     pub gc: GcMitigation,
     pub eplb: EplbMode,
+    /// §4.5 redundancy slots per expert NPU: bounds an expert's replica
+    /// count at `1 + redundancy_slots`, the same budget the live
+    /// `disagg::expert_plane` enforces per shard (previously a hardcoded
+    /// unbounded `r / 1.3` split, which let the closed-form model assume
+    /// replicas the plane could never place).
+    pub redundancy_slots: usize,
     pub mtp_accept: f64,
     /// Per-DP MLA jitter (lognormal sigma) + rare straggler mixture.
     pub mla_sigma: f64,
@@ -49,6 +55,8 @@ impl ColocatedDeployment {
             a2a: A2aConfig::deepseek(288),
             gc: GcMitigation::all_on(),
             eplb: EplbMode::Balanced,
+            redundancy_slots: crate::config::DeploymentConfig::colocated_dp288()
+                .redundancy_slots,
             mtp_accept: 0.90,
             mla_sigma: 0.08,
             straggler_p: 1.5e-5,
@@ -63,6 +71,8 @@ impl ColocatedDeployment {
             ep_size: 128,
             batch_per_die: 48,
             a2a: A2aConfig::deepseek(128),
+            redundancy_slots: crate::config::DeploymentConfig::production_decode_te()
+                .redundancy_slots,
             ..Self::paper()
         }
     }
@@ -87,12 +97,15 @@ impl ColocatedDeployment {
             EplbMode::Balanced => {
                 // EPLB replicates hot experts and rotates tokens across
                 // replicas (§4.5): the residual imbalance is the skew after
-                // replica splitting, bounded by the redundancy budget.
+                // replica splitting, bounded by the redundancy budget —
+                // at most `1 + redundancy_slots` replicas per expert, the
+                // same per-shard bound the live expert plane enforces.
+                let max_replicas = (1 + self.redundancy_slots) as f64;
                 counts
                     .iter()
                     .map(|&c| {
                         let r = c as f64 / mean;
-                        let replicas = (r / 1.3).ceil().max(1.0);
+                        let replicas = (r / 1.3).ceil().clamp(1.0, max_replicas);
                         (r / replicas).clamp(0.85, 1.35)
                     })
                     .collect()
@@ -245,6 +258,39 @@ mod tests {
         assert!(
             r.combine_us.mean() > r.dispatch_us.mean() * 0.95,
             "combine should be >= dispatch on average"
+        );
+    }
+
+    #[test]
+    fn eplb_replica_budget_follows_the_config_knob() {
+        // Same seed, different redundancy budgets: with zero redundancy
+        // slots no expert can split (residual imbalance = raw skew,
+        // clamped), while a roomy budget splits hot experts down to the
+        // trigger ratio. The knob must actually bound the model.
+        let mut tight = ColocatedDeployment::paper();
+        tight.redundancy_slots = 0;
+        let mut roomy = ColocatedDeployment::paper();
+        roomy.redundancy_slots = 8;
+        let t = tight.imbalance_ratios(&mut Rng::new(5));
+        let r = roomy.imbalance_ratios(&mut Rng::new(5));
+        // a bigger budget can only lower each expert's residual (more
+        // replicas to split across), and must lower the aggregate: the
+        // mid-hot experts (above the 1.3 trigger, within the budget)
+        // split under `roomy` but cannot under `tight`
+        for (a, b) in r.iter().zip(&t) {
+            assert!(a <= b, "budget growth raised a residual: {a} > {b}");
+        }
+        let sum_t: f64 = t.iter().sum();
+        let sum_r: f64 = r.iter().sum();
+        assert!(
+            sum_r < sum_t,
+            "a larger replica budget must cut the residual imbalance: \
+             {sum_r:.1} !< {sum_t:.1}"
+        );
+        // default paper budget matches the deployment preset's knob
+        assert_eq!(
+            ColocatedDeployment::paper().redundancy_slots,
+            crate::config::DeploymentConfig::colocated_dp288().redundancy_slots
         );
     }
 

@@ -19,8 +19,11 @@
 //!   a pool of expert-shard worker threads (three persistent-kernel
 //!   pipeline stages each) that decode groups call into once per layer
 //!   per microbatch over a memory-semantic activation channel, with the
-//!   §5.2 microbatch overlap and one-domain-at-a-time turn-taking
-//!   (`DeploymentMode::MoeAttn`).
+//!   §5.2 microbatch overlap, cross-layer carry (a layer's final combine
+//!   hidden behind the next layer's attention under a permit held across
+//!   the seam), §4.5 replica-owned shards (rotation across live
+//!   replicas, EPLB-driven grow/shrink, degrade-on-crash), and
+//!   one-domain-at-a-time turn-taking (`DeploymentMode::MoeAttn`).
 
 pub mod pd;
 pub mod moe_attn;

@@ -111,6 +111,103 @@ pub fn moe_step_cost(per_npu_tokens: &[u64], ns_per_token: f64, fixed_ns: f64) -
     fixed_ns + max * ns_per_token
 }
 
+/// Load ratio above which a shard's per-replica load earns another replica
+/// (shared by [`place_replicated`] and the live plane's EPLB tick so the
+/// closed-form model and the threaded plane grow replicas from the same
+/// rule).
+pub const REPLICA_GROW_RATIO: f64 = 2.0;
+
+/// Per-replica load ratio below which a multi-replica shard releases a
+/// replica back to the redundancy budget.
+pub const REPLICA_SHRINK_RATIO: f64 = 0.5;
+
+/// Multi-owner variant of [`place`] for the live expert plane (§4.5): a
+/// `ReplicaMap`-style placement where every shard keeps **at least one**
+/// owner and hot shards earn up to `max_replicas` owners out of the
+/// per-worker redundancy budget.
+///
+/// Rules, in order:
+/// 1. *Primaries* — shards sorted by load (hottest first), each assigned
+///    to the least-loaded live worker with free slots. Availability beats
+///    the budget: the effective per-worker budget is raised to
+///    `ceil(shards / live_workers)` when `slots_per_worker` could not fit
+///    a primary for every shard.
+/// 2. *Replicas* — while redundancy slots remain, the shard with the
+///    highest per-replica load (≥ [`REPLICA_GROW_RATIO`] × the mean shard
+///    load) gains a replica on the least-loaded live worker that does not
+///    already own it — two replicas of one shard are never co-located.
+///
+/// Returns the owner set per shard (empty only when no worker is alive).
+pub fn place_replicated(
+    shard_loads: &[u64],
+    alive: &[bool],
+    slots_per_worker: usize,
+    max_replicas: usize,
+) -> Vec<Vec<usize>> {
+    let n_shards = shard_loads.len();
+    let n_workers = alive.len();
+    let live: Vec<usize> = (0..n_workers).filter(|&w| alive[w]).collect();
+    let mut owners: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    if live.is_empty() || n_shards == 0 {
+        return owners;
+    }
+    let budget = slots_per_worker.max(n_shards.div_ceil(live.len()));
+    let max_replicas = max_replicas.max(1);
+    let mut load = vec![0f64; n_workers];
+    let mut used = vec![0usize; n_workers];
+    let coldest = |load: &[f64], used: &[usize], skip: &[usize]| -> Option<usize> {
+        live.iter()
+            .copied()
+            .filter(|&w| used[w] < budget && !skip.contains(&w))
+            .min_by(|&a, &b| {
+                load[a]
+                    .partial_cmp(&load[b])
+                    .unwrap()
+                    .then(used[a].cmp(&used[b]))
+                    .then(a.cmp(&b))
+            })
+    };
+    let mut order: Vec<usize> = (0..n_shards).collect();
+    order.sort_by_key(|&s| std::cmp::Reverse(shard_loads[s]));
+    for &s in &order {
+        let Some(w) = coldest(&load, &used, &[]) else { break };
+        owners[s].push(w);
+        used[w] += 1;
+        load[w] += shard_loads[s] as f64;
+    }
+    let mean = (shard_loads.iter().sum::<u64>() as f64 / n_shards as f64).max(1.0);
+    loop {
+        let Some(s) = order
+            .iter()
+            .copied()
+            .filter(|&s| {
+                !owners[s].is_empty()
+                    && owners[s].len() < max_replicas
+                    && shard_loads[s] as f64 / owners[s].len() as f64
+                        >= REPLICA_GROW_RATIO * mean
+            })
+            .max_by(|&a, &b| {
+                let pa = shard_loads[a] as f64 / owners[a].len() as f64;
+                let pb = shard_loads[b] as f64 / owners[b].len() as f64;
+                pa.partial_cmp(&pb).unwrap().then(b.cmp(&a))
+            })
+        else {
+            break;
+        };
+        let Some(w) = coldest(&load, &used, &owners[s]) else { break };
+        // the new replica takes an even share off the existing owners
+        let k = owners[s].len() as f64;
+        let delta = shard_loads[s] as f64 / (k * (k + 1.0));
+        for &o in &owners[s] {
+            load[o] -= delta;
+        }
+        load[w] += shard_loads[s] as f64 / (k + 1.0);
+        owners[s].push(w);
+        used[w] += 1;
+    }
+    owners
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +275,103 @@ mod tests {
     #[test]
     fn moe_step_cost_tracks_straggler() {
         assert!(moe_step_cost(&[10, 10, 100], 1.0, 0.0) > moe_step_cost(&[40, 40, 40], 1.0, 0.0));
+    }
+
+    #[test]
+    fn replicated_placement_splits_the_hot_shard() {
+        // one 100x-hot shard, three live workers: the primary pass spreads
+        // shards, the redundancy pass must split the hot one across 2.
+        let loads = [10_000u64, 100, 100, 100];
+        let alive = [true, true, true];
+        let owners = place_replicated(&loads, &alive, 2, 2);
+        assert_eq!(owners[0].len(), 2, "hot shard earns a replica: {owners:?}");
+        assert_ne!(owners[0][0], owners[0][1], "replicas on distinct workers");
+        for own in &owners {
+            assert!(!own.is_empty(), "every shard keeps an owner: {owners:?}");
+        }
+    }
+
+    #[test]
+    fn replicated_placement_skips_dead_workers() {
+        let loads = [500u64, 500, 500, 500];
+        let alive = [true, false, true, false];
+        let owners = place_replicated(&loads, &alive, 2, 3);
+        for own in &owners {
+            assert!(!own.is_empty());
+            assert!(own.iter().all(|&w| alive[w]), "replica on a dead worker: {owners:?}");
+        }
+    }
+
+    #[test]
+    fn replicated_placement_with_no_live_worker_is_empty() {
+        let owners = place_replicated(&[10, 20], &[false, false], 2, 2);
+        assert!(owners.iter().all(|o| o.is_empty()));
+    }
+
+    /// The §4.5 replica-placement invariants, property-tested over random
+    /// (shards, workers, redundancy slots, load) inputs: every shard keeps
+    /// ≥ 1 replica, no worker exceeds the (effective) slot budget, owners
+    /// are always alive, and two replicas of one shard never co-locate on
+    /// one worker — so a ≥ 2-replica shard always spans ≥ 2 workers when
+    /// ≥ 2 workers are alive.
+    #[test]
+    fn prop_replicated_placement_invariants() {
+        use crate::prop_assert;
+        use crate::util::prop::{check, PropConfig};
+
+        check("place-replicated", PropConfig::default(), |rng, size| {
+            let n_workers = 1 + rng.index(6 + size);
+            let n_shards = 1 + rng.index(4 * n_workers + size + 1);
+            let alive: Vec<bool> = (0..n_workers).map(|_| rng.chance(0.75)).collect();
+            let redundancy = rng.index(4); // the config redundancy-slots knob
+            let slots = 1 + rng.index(6);
+            let max_replicas = 1 + redundancy;
+            let loads: Vec<u64> = (0..n_shards).map(|_| rng.range(0, 10_000)).collect();
+            let owners = place_replicated(&loads, &alive, slots, max_replicas);
+            prop_assert!(owners.len() == n_shards, "one owner set per shard");
+            let n_live = alive.iter().filter(|a| **a).count();
+            if n_live == 0 {
+                prop_assert!(
+                    owners.iter().all(|o| o.is_empty()),
+                    "no owners without live workers"
+                );
+                return Ok(());
+            }
+            let budget = slots.max(n_shards.div_ceil(n_live));
+            let mut used = vec![0usize; n_workers];
+            for (s, own) in owners.iter().enumerate() {
+                prop_assert!(!own.is_empty(), "shard {s} kept no replica");
+                prop_assert!(
+                    own.len() <= max_replicas,
+                    "shard {s} exceeded the replica bound: {} > {max_replicas}",
+                    own.len()
+                );
+                let mut d = own.clone();
+                d.sort_unstable();
+                d.dedup();
+                prop_assert!(
+                    d.len() == own.len(),
+                    "shard {s} co-located replicas on one worker: {own:?}"
+                );
+                for &w in own {
+                    prop_assert!(w < n_workers && alive[w], "shard {s} owned by dead {w}");
+                    used[w] += 1;
+                }
+                if n_live >= 2 && own.len() >= 2 {
+                    prop_assert!(
+                        d.len() >= 2,
+                        "shard {s}: all replicas on one worker with {n_live} alive"
+                    );
+                }
+            }
+            for (w, &u) in used.iter().enumerate() {
+                prop_assert!(
+                    u <= budget,
+                    "worker {w} over its slot budget: {u} > {budget} \
+                     (slots={slots}, shards={n_shards}, live={n_live})"
+                );
+            }
+            Ok(())
+        });
     }
 }

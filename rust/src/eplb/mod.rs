@@ -17,7 +17,10 @@ pub mod algorithm;
 pub mod mapping;
 pub mod reconfig;
 
-pub use algorithm::{place, select_redundant, Placement};
+pub use algorithm::{
+    place, place_replicated, select_redundant, Placement, REPLICA_GROW_RATIO,
+    REPLICA_SHRINK_RATIO,
+};
 pub use collect::LoadCollector;
 pub use mapping::ReplicaMap;
 pub use reconfig::{ReconfigPhase, Reconfigurator};

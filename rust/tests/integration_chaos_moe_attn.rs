@@ -1,0 +1,274 @@
+//! Seeded chaos layer for the live MoeAttn expert plane (§4.5 + §5.2):
+//! N decode DP-group threads × M expert-shard workers under **concurrent**
+//! worker crashes, straggler sweeps, and EPLB replica rebalances, all
+//! driven from one seeded schedule so any failure replays bit-for-bit.
+//!
+//! Invariants locked down here:
+//! * every accepted stream terminates (Done or Failed) — a crash mid-run,
+//!   including mid-carried-combine, never hangs a decode group;
+//! * every E2A combine stays bit-exact through crashes and re-homes
+//!   (`integrity_failures == 0`);
+//! * at every maintenance point, while any expert worker is alive, no
+//!   shard is left without a live replica (coverage repair degrades dead
+//!   owners and re-places orphans);
+//! * the one-domain-at-a-time contract survives the chaos
+//!   (`domain_violations == 0`), cross-layer carry included.
+//!
+//! CI runs this file across a small seed matrix via `XDS_CHAOS_SEED`.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use xdeepserve::config::DeploymentMode;
+use xdeepserve::coordinator::worker::ModelFactory;
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
+use xdeepserve::disagg::expert_plane::ExchangeStats;
+use xdeepserve::disagg::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::util::rng::Rng;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("XDS_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC4A0_5EED)
+}
+
+/// While any worker lives, every shard must keep ≥ 1 live replica. The
+/// instantaneous map can reference a freshly-crashed worker until an
+/// observer repairs it, so the invariant is checked the way production
+/// consumes it: run the coverage repair (what sweeps, EPLB ticks, and
+/// failed sends all do) and require it to restore serviceability. A crash
+/// can land *between* a repair and the read — crashes are finitely many
+/// and repair is idempotent, so the check retries until the map settles;
+/// only a repair that repeatedly fails to restore coverage is a bug.
+fn assert_coverage(plane: &ExpertPlane, seed: u64, at: &str) {
+    for _ in 0..8 {
+        plane.repair_coverage();
+        if plane.alive_workers() == 0 {
+            return; // local-fallback regime: nothing to cover
+        }
+        if plane.shard_replicas().iter().all(|&k| k >= 1) {
+            return;
+        }
+    }
+    panic!(
+        "seed {seed:#x} at {at}: repair left a shard without a live replica \
+         while {} worker(s) alive: {:?} / owners {:?}",
+        plane.alive_workers(),
+        plane.shard_replicas(),
+        plane.shard_owners()
+    );
+}
+
+/// Engine-level chaos: live decode traffic (4 groups over 2 domains, carry
+/// on) against a 4-worker expert plane where two workers crash at seeded
+/// points and one straggles, while the driver fires straggler sweeps and
+/// EPLB ticks from the same seeded schedule.
+#[test]
+fn chaos_crashes_sweeps_and_rebalances_never_hang_or_corrupt() {
+    let seed = chaos_seed();
+    let mut rng = Rng::new(seed);
+    const GROUPS: usize = 4;
+    const WORKERS: usize = 4;
+    let fail_a = 2 + rng.index(8);
+    let fail_b = 6 + rng.index(12);
+    let specs: Vec<ExpertWorkerSpec> = (0..WORKERS)
+        .map(|w| match w {
+            1 => ExpertWorkerSpec::failing(1, fail_a),
+            3 => ExpertWorkerSpec::failing(3, fail_b),
+            _ => ExpertWorkerSpec::new(w),
+        })
+        .collect();
+    let rt = MoeAttnRuntime {
+        layers: 3,
+        microbatches: 2,
+        time_scale: 64,
+        ..Default::default()
+    };
+    let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+        .groups_uniform(GROUPS, 4, 256)
+        .dp_domains(2)
+        .expert_plane(specs, rt)
+        .expert_straggler(
+            StragglerProfile::with_slow_group(WORKERS, 100_000, 0, 6.0)
+                .with_jitter(0.3, seed),
+        )
+        .spawn()
+        .unwrap();
+    engine.set_eplb_interval(4); // EPLB ticks actually fire mid-run
+
+    let mut submitted = 0u64;
+    for step in 0..14 {
+        for _ in 0..1 + rng.index(3) {
+            engine
+                .submit(ServeRequest::new(
+                    submitted,
+                    vec![256, (submitted % 26) as i32 + 97],
+                    4 + rng.index(4),
+                    0,
+                ))
+                .unwrap();
+            submitted += 1;
+        }
+        engine.drain();
+        // seeded chaos op: sweep, direct rebalance, engine EPLB tick, or
+        // nothing — all concurrent with the decode/exchange threads
+        match rng.index(4) {
+            0 => {
+                engine.expert_sweep();
+            }
+            1 => {
+                engine.expert_plane().unwrap().rebalance();
+            }
+            2 => {
+                engine.tick_eplb();
+            }
+            _ => {}
+        }
+        assert_coverage(engine.expert_plane().unwrap(), seed, &format!("step {step}"));
+        thread::sleep(Duration::from_micros(rng.range(50, 2_000)));
+    }
+
+    // no stream may hang: a bounded settle must drain everything
+    engine
+        .settle(Duration::from_secs(60))
+        .unwrap_or_else(|e| panic!("seed {seed:#x}: chaos run failed to settle: {e}"));
+    let plane = engine.expert_plane().unwrap();
+    assert_eq!(
+        plane.domain_violations(),
+        0,
+        "seed {seed:#x}: two domains overlapped in the expert pool"
+    );
+    assert_coverage(plane, seed, "end of run");
+
+    let groups = engine.shutdown().unwrap();
+    let mut total = ExchangeStats::default();
+    let mut finished = 0usize;
+    for g in &groups {
+        total.integrity_failures += g.exchange.integrity_failures;
+        total.redispatches += g.exchange.redispatches;
+        total.fallback_slices += g.exchange.fallback_slices;
+        total.dispatches += g.exchange.dispatches;
+        for r in &g.finished {
+            assert!(
+                r.state == RequestState::Done || r.state == RequestState::Failed,
+                "seed {seed:#x}: stream {} left non-terminal: {:?}",
+                r.id,
+                r.state
+            );
+            finished += 1;
+        }
+    }
+    assert_eq!(
+        finished, submitted as usize,
+        "seed {seed:#x}: every accepted stream must terminate"
+    );
+    assert_eq!(
+        total.integrity_failures, 0,
+        "seed {seed:#x}: combines must stay bit-exact through the chaos"
+    );
+    assert!(total.dispatches > 0, "seed {seed:#x}: the exchange actually ran");
+}
+
+/// Plane-level chaos without the serving engine in the way: client threads
+/// in two domains hammer the exchange (cross-layer carry on) while a
+/// seeded chaos thread interleaves sweeps, rebalances, load injection,
+/// and an operator demotion, and one expert worker crashes on its own.
+#[test]
+fn chaos_plane_level_concurrent_clients_survive_crash_and_rebalance() {
+    let seed = chaos_seed() ^ 0x9E37_79B9_7F4A_7C15;
+    let mut rng = Rng::new(seed);
+    const WORKERS: usize = 3;
+    let specs = [
+        ExpertWorkerSpec::new(0),
+        ExpertWorkerSpec::failing(1, 4 + rng.index(10)),
+        ExpertWorkerSpec::new(2),
+    ];
+    let cfg = MoeAttnRuntime {
+        layers: 3,
+        microbatches: 2,
+        domains: 2,
+        shards_per_worker: 2,
+        time_scale: 256,
+        ..Default::default()
+    };
+    let plane = Arc::new(
+        ExpertPlane::spawn(&specs, cfg, StragglerProfile::none(WORKERS)).unwrap(),
+    );
+    let handle = plane.handle();
+
+    let mut clients = Vec::new();
+    for g in 0..4usize {
+        let h = handle.clone();
+        let client_seed = seed ^ (g as u64).wrapping_mul(0xD1B5_4A32);
+        clients.push(thread::spawn(move || {
+            let client = h.client(g, g % 2);
+            let mut crng = Rng::new(client_seed);
+            let mut stats = ExchangeStats::default();
+            for _ in 0..8 {
+                let rows: Vec<Vec<u8>> = (0..1 + crng.index(6))
+                    .map(|i| vec![crng.index(255) as u8; 8 + i])
+                    .collect();
+                client.run_iteration(&rows, &mut stats);
+            }
+            stats
+        }));
+    }
+
+    let chaos_plane = Arc::clone(&plane);
+    let chaos = thread::spawn(move || {
+        let mut crng = Rng::new(seed ^ 0xC4A0);
+        for _ in 0..12 {
+            match crng.index(5) {
+                0 => {
+                    chaos_plane.straggler_sweep();
+                }
+                1 => {
+                    chaos_plane.rebalance();
+                }
+                2 => {
+                    // operator demotion of a random worker — but never the
+                    // whole pool (availability drill, not a blackout)
+                    if chaos_plane.alive_workers() >= 2 {
+                        chaos_plane.demote(crng.index(WORKERS));
+                    }
+                }
+                3 => {
+                    chaos_plane.inject_shard_load(
+                        crng.index(chaos_plane.n_shards()),
+                        crng.range(100, 2_000),
+                    );
+                }
+                _ => {
+                    chaos_plane.repair_coverage();
+                }
+            }
+            thread::sleep(Duration::from_micros(crng.range(20, 800)));
+        }
+    });
+
+    let stats: Vec<ExchangeStats> = clients
+        .into_iter()
+        .map(|j| j.join().expect("client thread must not panic (no hang, no crash)"))
+        .collect();
+    chaos.join().unwrap();
+
+    for (g, s) in stats.iter().enumerate() {
+        assert_eq!(s.iterations, 8, "seed {seed:#x}: client {g} completed all iterations");
+        assert_eq!(
+            s.integrity_failures, 0,
+            "seed {seed:#x}: client {g} saw a corrupted combine"
+        );
+    }
+    assert_eq!(plane.domain_violations(), 0, "seed {seed:#x}");
+    assert_coverage(&plane, seed, "after plane-level chaos");
+    drop(handle);
+    Arc::try_unwrap(plane).ok().unwrap().shutdown().unwrap();
+}

@@ -2,8 +2,12 @@
 //! DP-group threads × M expert-shard workers exchanging real activation
 //! bytes once per layer per microbatch through `disagg::expert_plane`,
 //! under the `ServingEngine` MoeAttn front-end — including the
-//! expert-worker failure path (demote + re-home, streams still
-//! terminate) and the expert-side straggler sweep.
+//! expert-worker failure path (degrade to surviving replicas, re-home
+//! orphans, streams still terminate), the expert-side straggler sweep,
+//! and the §5.2 cross-layer microbatch carry.
+//!
+//! CI runs this file across a small seed matrix: `XDS_CHAOS_SEED` feeds
+//! the injected-jitter schedules (see `matrix_seed`).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,6 +25,15 @@ fn sim_factory() -> ModelFactory {
 
 fn req(id: u64, max_new: usize) -> ServeRequest {
     ServeRequest::new(id, vec![256, (id % 26) as i32 + 97], max_new, 0)
+}
+
+/// Seed-matrix knob: CI re-runs these tests under a few fixed seeds by
+/// exporting `XDS_CHAOS_SEED`; locally the default keeps runs stable.
+fn matrix_seed() -> u64 {
+    std::env::var("XDS_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_42)
 }
 
 /// Fast-test runtime: few layers, heavily scaled-down stage costs.
@@ -104,9 +117,14 @@ fn expert_worker_failure_demotes_rehomes_and_streams_terminate() {
     let plane = engine.expert_plane().unwrap();
     assert_eq!(plane.alive_workers(), 1, "crashed worker retired from placement");
     assert!(
-        plane.shard_owners().iter().all(|&w| w == 1),
-        "every shard re-homed to the surviving worker: {:?}",
+        plane.shard_owners().iter().all(|o| *o == [1]),
+        "every shard degraded/re-homed to the surviving worker: {:?}",
         plane.shard_owners()
+    );
+    assert!(
+        plane.shard_replicas().iter().all(|&k| k >= 1),
+        "no shard unservable while a worker lives: {:?}",
+        plane.shard_replicas()
     );
     // the crashed worker's board slot reads unhealthy
     let views = plane.views();
@@ -138,7 +156,10 @@ fn expert_straggler_sweep_demotes_and_rehomes_via_the_engine() {
             (0..3).map(ExpertWorkerSpec::new).collect(),
             fast_runtime(1),
         )
-        .expert_straggler(StragglerProfile::with_slow_group(3, 200_000, 1, 40.0))
+        .expert_straggler(
+            StragglerProfile::with_slow_group(3, 200_000, 1, 40.0)
+                .with_jitter(0.2, matrix_seed()),
+        )
         .spawn()
         .unwrap();
     for i in 0..10u64 {
@@ -155,8 +176,8 @@ fn expert_straggler_sweep_demotes_and_rehomes_via_the_engine() {
     let plane = engine.expert_plane().unwrap();
     assert!((1..=2).contains(&plane.alive_workers()));
     assert!(
-        plane.shard_owners().iter().all(|&w| w != 1),
-        "straggler's shards re-homed: {:?}",
+        plane.shard_owners().iter().all(|o| !o.contains(&1)),
+        "straggler's shards degraded/re-homed: {:?}",
         plane.shard_owners()
     );
 
@@ -173,4 +194,59 @@ fn expert_straggler_sweep_demotes_and_rehomes_via_the_engine() {
         .iter()
         .flat_map(|g| g.finished.iter())
         .all(|r| r.state == RequestState::Done));
+}
+
+#[test]
+fn cross_layer_carry_runs_end_to_end_and_is_measured() {
+    // Carry on (the default): every decode tick carries each non-final
+    // layer's combine across the seam; the counters must show it and the
+    // one-domain contract must hold with two domains in play.
+    let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+        .groups_uniform(4, 4, 256)
+        .dp_domains(2)
+        .expert_plane((0..2).map(ExpertWorkerSpec::new).collect(), fast_runtime(2))
+        .spawn()
+        .unwrap();
+    for i in 0..12u64 {
+        engine.submit(req(i, 5)).unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(30)).unwrap();
+    assert_eq!(engine.expert_plane().unwrap().domain_violations(), 0);
+    let groups = engine.shutdown().unwrap();
+    let mut carries = 0u64;
+    let mut carried_ns = 0u64;
+    for g in &groups {
+        assert_eq!(g.exchange.integrity_failures, 0);
+        carries += g.exchange.carries;
+        carried_ns += g.exchange.carried_ns;
+        // at most one carry per layer seam; iterations whose running batch
+        // held a single row fall back to the barrier (the carry needs two
+        // microbatches to respect the data dependency)
+        assert!(g.exchange.carries <= g.exchange.iterations * 2);
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(r.generated.len(), 5);
+        }
+    }
+    let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+    assert_eq!(finished, 12);
+    assert!(carries > 0, "layer seams were carried");
+    assert!(carried_ns > 0, "the carried seam window is measured");
+
+    // Knob off: the PR-4 per-layer barrier — nothing carried.
+    let rt = MoeAttnRuntime { cross_layer_carry: false, ..fast_runtime(2) };
+    let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+        .groups_uniform(2, 4, 256)
+        .expert_plane((0..2).map(ExpertWorkerSpec::new).collect(), rt)
+        .spawn()
+        .unwrap();
+    for i in 0..4u64 {
+        engine.submit(req(i, 4)).unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(30)).unwrap();
+    let groups = engine.shutdown().unwrap();
+    assert!(groups.iter().all(|g| g.exchange.carries == 0));
+    assert!(groups.iter().all(|g| g.exchange.carried_ns == 0));
 }
