@@ -20,7 +20,7 @@
 //! Run: `cargo run --release --example moe_attn_disagg`
 //! (parts 2–3 activate after `make artifacts`)
 
-use std::sync::Arc;
+use xdeepserve::sync::Arc;
 use std::time::Duration;
 
 use xdeepserve::config::DeploymentMode;

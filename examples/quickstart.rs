@@ -11,7 +11,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use std::sync::mpsc;
+use xdeepserve::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::DeploymentMode;

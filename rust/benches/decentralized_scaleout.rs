@@ -30,7 +30,7 @@
 //! Run: `cargo bench --bench decentralized_scaleout` (add `-- --quick`
 //! for the CI-sized variant).
 
-use std::sync::{mpsc, Arc};
+use xdeepserve::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,855 @@
+//! `xds-lint` — the crate's concurrency-correctness static pass
+//! (CONCURRENCY.md). Pure `std` + the crate's own `util`/`config`
+//! helpers; no external dependencies, so it runs in the offline CI image:
+//!
+//! ```text
+//! cargo run --bin xds-lint            # from rust/; exits 1 on findings
+//! cargo run --bin xds-lint -- --config xds-lint.toml --root .
+//! ```
+//!
+//! Four rules over comment/string-stripped source text:
+//!
+//! | rule | finding |
+//! |---|---|
+//! | `raw-sync` | `std::sync::` used outside `src/sync/` (and vendor/): all code imports through the `crate::sync` shim, or model-check/lockdep instrumentation silently misses it |
+//! | `seqcst` | `Ordering::SeqCst` in non-test code outside the allowlist: every ordering is either justified in place or downgraded (see the memory-ordering contract in CONCURRENCY.md) |
+//! | `unwrap` | `.unwrap()`/`.expect(` in non-test code under `src/coordinator`, `src/disagg`, `src/eplb`: panics in the serving planes either become typed errors or document the invariant that rules them out |
+//! | `hot-lock` | `.lock(` in any function reachable from an `// xds:hot`-marked dispatch hot-path function |
+//!
+//! Escapes, all requiring a reason after the colon:
+//! `// xds:allow(<rule>): <why>` on the same line or in the comment block
+//! directly above; rule `unwrap` additionally accepts the established
+//! `// invariant: <why>` form.
+//!
+//! The `hot-lock` reachability graph is deliberately conservative and
+//! name-based: an edge `f -> g` exists only when `g` is a function name
+//! defined **exactly once** across the scanned sources and `f`'s body
+//! contains a call `g(...)`. Ambiguous names (trait methods such as
+//! `publish` or `read` with several impls) contribute no edges — those
+//! paths are covered by marking each concrete hot implementation instead.
+//! Names in `[hot] stop` end traversal (documented hot-path exits).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xdeepserve::config::toml_lite;
+use xdeepserve::util::args::Args;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Lint configuration: the defaults below are the crate's policy;
+/// `xds-lint.toml` (comma-separated string lists — the TOML-lite parser
+/// has no arrays) can extend them without a rebuild.
+#[derive(Clone, Debug)]
+struct LintCfg {
+    /// Path prefixes exempt from every rule (the shim itself, vendored
+    /// code, and this binary — its fixtures spell the patterns).
+    exempt: Vec<String>,
+    /// Files (path prefixes) where bare `SeqCst` is allowed wholesale.
+    seqcst_allow_files: Vec<String>,
+    /// Directories rule `unwrap` applies to.
+    unwrap_dirs: Vec<String>,
+    /// Function names the `hot-lock` traversal does not descend into.
+    hot_stop: Vec<String>,
+}
+
+impl Default for LintCfg {
+    fn default() -> Self {
+        Self {
+            exempt: vec![
+                "src/sync".into(),
+                "vendor".into(),
+                "src/bin/xds_lint.rs".into(),
+            ],
+            seqcst_allow_files: Vec::new(),
+            unwrap_dirs: vec![
+                "src/coordinator".into(),
+                "src/disagg".into(),
+                "src/eplb".into(),
+            ],
+            hot_stop: Vec::new(),
+        }
+    }
+}
+
+impl LintCfg {
+    fn from_toml(doc: &toml_lite::TomlDoc) -> Self {
+        let mut cfg = Self::default();
+        let mut extend = |list: &mut Vec<String>, key: &str| {
+            if let Some(s) = doc.get_str(key) {
+                list.extend(
+                    s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()),
+                );
+            }
+        };
+        extend(&mut cfg.exempt, "lint.exempt");
+        extend(&mut cfg.seqcst_allow_files, "seqcst.allow_files");
+        extend(&mut cfg.hot_stop, "hot.stop");
+        // unwrap dirs replace rather than extend: the policy names the
+        // exact serving planes it covers
+        if let Some(s) = doc.get_str("unwrap.dirs") {
+            cfg.unwrap_dirs =
+                s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect();
+        }
+        cfg
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source model
+// ---------------------------------------------------------------------------
+
+/// One scanned file: raw lines (for escape comments), code lines with
+/// comments and string/char literals blanked (for rule matching), and a
+/// per-line test-region mask.
+struct SourceFile {
+    rel: String,
+    raw: Vec<String>,
+    code: Vec<String>,
+    in_test: Vec<bool>,
+}
+
+impl SourceFile {
+    fn new(rel: String, text: &str) -> Self {
+        let raw: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+        let code = strip_comments_and_strings(&raw);
+        let in_test = test_regions(&code);
+        SourceFile { rel, raw, code, in_test }
+    }
+}
+
+/// Blank out `//` comments, `/* */` comments (nested, multi-line),
+/// string/raw-string literals (multi-line) and char literals, preserving
+/// line structure so reported line numbers match the source.
+fn strip_comments_and_strings(raw: &[String]) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        Block(u32),
+        Str,
+        RawStr(u8),
+    }
+    let mut st = St::Code;
+    let mut out = Vec::with_capacity(raw.len());
+    for line in raw {
+        let b: Vec<char> = line.chars().collect();
+        let mut kept = String::with_capacity(line.len());
+        let mut i = 0usize;
+        while i < b.len() {
+            match st {
+                St::Block(depth) => {
+                    if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        st = St::Block(depth + 1);
+                        i += 2;
+                    } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if b[i] == '\\' {
+                        i += 2; // escape: skip the escaped char
+                    } else if b[i] == '"' {
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if b[i] == '"'
+                        && b[i + 1..].iter().take(hashes as usize).filter(|&&c| c == '#').count()
+                            == hashes as usize
+                    {
+                        st = St::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Code => {
+                    let c = b[i];
+                    if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                        break; // line comment: drop the rest of the line
+                    } else if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        st = St::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        st = St::Str;
+                        i += 1;
+                    } else if c == 'r'
+                        && i + 1 < b.len()
+                        && (b[i + 1] == '"' || b[i + 1] == '#')
+                        && !prev_is_ident(&b, i)
+                    {
+                        // raw string r"..." / r#"..."# (count the hashes)
+                        let mut j = i + 1;
+                        let mut hashes = 0u8;
+                        while j < b.len() && b[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < b.len() && b[j] == '"' {
+                            st = St::RawStr(hashes);
+                            i = j + 1;
+                        } else {
+                            kept.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' && !prev_is_ident(&b, i) {
+                        // char literal vs lifetime: a literal closes with
+                        // a quote within a few chars ('x', '\n', '\u{..}')
+                        if let Some(close) = char_literal_end(&b, i) {
+                            i = close + 1;
+                        } else {
+                            kept.push(c); // lifetime: keep, harmless
+                            i += 1;
+                        }
+                    } else {
+                        kept.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(kept);
+    }
+    out
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// If `b[start] == '\''` opens a char literal, the index of its closing
+/// quote; `None` for lifetimes. Handles `'x'`, `'\\''`, `'\u{1F600}'`.
+fn char_literal_end(b: &[char], start: usize) -> Option<usize> {
+    let mut i = start + 1;
+    if i >= b.len() {
+        return None;
+    }
+    if b[i] == '\\' {
+        i += 1;
+        if i < b.len() && b[i] == 'u' {
+            while i < b.len() && b[i] != '}' {
+                i += 1;
+            }
+        }
+        i += 1;
+    } else {
+        i += 1;
+    }
+    (i < b.len() && b[i] == '\'').then_some(i)
+}
+
+/// Per-line mask: `true` inside a `#[cfg(test)]`/`#[cfg(all(test…))]`
+/// item or a `#[test]` function (brace-balanced from the attribute).
+fn test_regions(code: &[String]) -> Vec<bool> {
+    let n = code.len();
+    let mut mask = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let t = code[i].trim_start();
+        let is_test_attr = t.starts_with("#[cfg(test)]")
+            || t.starts_with("#[cfg(all(test")
+            || t == "#[test]"
+            || t.starts_with("#[test]");
+        if !is_test_attr {
+            i += 1;
+            continue;
+        }
+        // mark from the attribute through the item's balanced braces
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = i;
+        while j < n {
+            for c in code[j].chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            mask[j] = true;
+            if started && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------------------
+// Escape comments
+// ---------------------------------------------------------------------------
+
+/// `// xds:allow(<rule>): reason` on the line or in the contiguous
+/// comment block directly above (a reason is mandatory: a bare allow
+/// does not suppress).
+fn allowed(f: &SourceFile, line: usize, rule: &str) -> bool {
+    let marker = format!("xds:allow({rule}):");
+    let has = |s: &str| {
+        s.find(&marker)
+            .map(|p| !s[p + marker.len()..].trim().is_empty())
+            .unwrap_or(false)
+    };
+    if has(&f.raw[line]) {
+        return true;
+    }
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let t = f.raw[i].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if has(t) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The `unwrap` rule's blessed escape: an `invariant:` comment in place
+/// or directly above.
+fn has_invariant_comment(f: &SourceFile, line: usize) -> bool {
+    let in_comment = |raw: &str, code: &str| {
+        // only count `invariant:` in the comment part of the line
+        raw.contains("invariant:") && !code.contains("invariant:")
+    };
+    if in_comment(&f.raw[line], &f.code[line]) {
+        return true;
+    }
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let t = f.raw[i].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if t.contains("invariant:") {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Per-line rules: raw-sync, seqcst, unwrap
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+fn is_exempt(cfg: &LintCfg, rel: &str) -> bool {
+    cfg.exempt.iter().any(|p| rel.starts_with(p.as_str()))
+}
+
+fn lint_lines(f: &SourceFile, cfg: &LintCfg, out: &mut Vec<Violation>) {
+    if is_exempt(cfg, &f.rel) {
+        return;
+    }
+    let unwrap_scope = cfg.unwrap_dirs.iter().any(|d| f.rel.starts_with(d.as_str()));
+    let seqcst_file_ok =
+        cfg.seqcst_allow_files.iter().any(|p| f.rel.starts_with(p.as_str()));
+    for i in 0..f.code.len() {
+        let code = &f.code[i];
+        if code.contains("std::sync::") && !allowed(f, i, "raw-sync") {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: i + 1,
+                rule: "raw-sync",
+                msg: "raw `std::sync` use — import through `crate::sync` so \
+                      model-check and lockdep instrumentation cover it \
+                      (CONCURRENCY.md)"
+                    .into(),
+            });
+        }
+        if !f.in_test[i] && !seqcst_file_ok && code.contains("SeqCst") && !allowed(f, i, "seqcst")
+        {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: i + 1,
+                rule: "seqcst",
+                msg: "`SeqCst` outside the allowlist — downgrade to the \
+                      ordering the protocol needs, or justify with \
+                      `// xds:allow(seqcst): <why>` (CONCURRENCY.md)"
+                    .into(),
+            });
+        }
+        if unwrap_scope
+            && !f.in_test[i]
+            && (code.contains(".unwrap(") || code.contains(".expect("))
+            && !has_invariant_comment(f, i)
+            && !allowed(f, i, "unwrap")
+        {
+            out.push(Violation {
+                file: f.rel.clone(),
+                line: i + 1,
+                rule: "unwrap",
+                msg: "`unwrap`/`expect` in serving-plane code — return a \
+                      typed error or state the `// invariant:` that rules \
+                      the panic out"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hot-lock: name-based reachability from `// xds:hot` roots
+// ---------------------------------------------------------------------------
+
+struct FnDef {
+    name: String,
+    file: usize,
+    /// 0-based line span of the whole item, signature through close brace.
+    start: usize,
+    end: usize,
+    hot_root: bool,
+}
+
+/// Extract every `fn name` with a brace-balanced body from the stripped
+/// code (trait declarations without bodies are skipped).
+fn find_fns(files: &[SourceFile]) -> Vec<FnDef> {
+    let mut defs = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        let mut li = 0usize;
+        while li < f.code.len() {
+            let line = &f.code[li];
+            let mut search_from = 0usize;
+            while let Some(pos) = line[search_from..].find("fn ") {
+                let at = search_from + pos;
+                search_from = at + 3;
+                let before_ok = at == 0 || {
+                    let c = line[..at].chars().next_back().unwrap_or(' ');
+                    !(c.is_alphanumeric() || c == '_')
+                };
+                if !before_ok {
+                    continue;
+                }
+                let name: String = line[at + 3..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if name.is_empty() {
+                    continue;
+                }
+                // walk forward to the body's '{' (a ';' first = no body)
+                let (mut depth, mut started, mut end) = (0i64, false, None);
+                'scan: for j in li..f.code.len() {
+                    let s = if j == li { &f.code[j][at..] } else { f.code[j].as_str() };
+                    for c in s.chars() {
+                        match c {
+                            ';' if !started => break 'scan,
+                            '{' => {
+                                depth += 1;
+                                started = true;
+                            }
+                            '}' => {
+                                depth -= 1;
+                                if started && depth == 0 {
+                                    end = Some(j);
+                                    break 'scan;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                if let Some(end) = end {
+                    defs.push(FnDef {
+                        name,
+                        file: fi,
+                        start: li,
+                        end,
+                        hot_root: marked_hot(f, li),
+                    });
+                }
+            }
+            li += 1;
+        }
+    }
+    defs
+}
+
+/// `// xds:hot` in the comment/attribute block directly above the `fn`.
+fn marked_hot(f: &SourceFile, fn_line: usize) -> bool {
+    let mut i = fn_line;
+    while i > 0 {
+        i -= 1;
+        let t = f.raw[i].trim_start();
+        if t.starts_with("//") || t.starts_with("#[") || t.is_empty() {
+            if t.contains("xds:hot") {
+                return true;
+            }
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Identifiers immediately followed by `(` within `def`'s body — the
+/// candidate callees (`name!(` macros are naturally excluded: the `!`
+/// breaks adjacency).
+fn body_calls(files: &[SourceFile], def: &FnDef) -> BTreeSet<String> {
+    let f = &files[def.file];
+    let mut calls = BTreeSet::new();
+    for line in &f.code[def.start..=def.end] {
+        let b: Vec<char> = line.chars().collect();
+        let mut i = 0usize;
+        while i < b.len() {
+            if b[i].is_alphabetic() || b[i] == '_' {
+                let s = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let mut j = i;
+                while j < b.len() && b[j] == ' ' {
+                    j += 1;
+                }
+                if j < b.len() && b[j] == '(' {
+                    calls.insert(b[s..i].iter().collect());
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+    calls
+}
+
+fn lint_hot_paths(files: &[SourceFile], cfg: &LintCfg, out: &mut Vec<Violation>) {
+    let mut defs = find_fns(files);
+    // exempt files take no part in the hot analysis: their defs are
+    // neither roots nor callees (this file's own docs spell `xds:hot`)
+    defs.retain(|d| !is_exempt(cfg, &files[d.file].rel));
+    // names defined exactly once get call-graph edges; ambiguous names
+    // (trait methods with several impls) contribute none — see module docs
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, d) in defs.iter().enumerate() {
+        by_name.entry(d.name.as_str()).or_default().push(i);
+    }
+    let unique: BTreeMap<&str, usize> = by_name
+        .iter()
+        .filter(|(_, v)| v.len() == 1)
+        .map(|(k, v)| (*k, v[0]))
+        .collect();
+
+    // BFS from the hot roots, remembering one caller per function so the
+    // report can show the chain back to its root
+    let mut via: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for (i, d) in defs.iter().enumerate() {
+        if d.hot_root {
+            via.insert(i, None);
+            queue.push_back(i);
+        }
+    }
+    while let Some(i) = queue.pop_front() {
+        for callee in body_calls(files, &defs[i]) {
+            if cfg.hot_stop.iter().any(|s| s == &callee) {
+                continue;
+            }
+            if let Some(&j) = unique.get(callee.as_str()) {
+                if j != i && !via.contains_key(&j) {
+                    via.insert(j, Some(i));
+                    queue.push_back(j);
+                }
+            }
+        }
+    }
+
+    for (&i, _) in &via {
+        let d = &defs[i];
+        let f = &files[d.file];
+        for li in d.start..=d.end {
+            if f.code[li].contains(".lock(") && !allowed(f, li, "hot-lock") {
+                let mut chain = vec![d.name.clone()];
+                let mut cur = i;
+                while let Some(Some(p)) = via.get(&cur) {
+                    chain.push(defs[*p].name.clone());
+                    cur = *p;
+                }
+                chain.reverse();
+                out.push(Violation {
+                    file: f.rel.clone(),
+                    line: li + 1,
+                    rule: "hot-lock",
+                    msg: format!(
+                        "`lock()` reachable from the dispatch hot path \
+                         (xds:hot {})",
+                        chain.join(" -> ")
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(root, &p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((rel, p));
+        }
+    }
+    Ok(())
+}
+
+fn run(root: &Path, cfg: &LintCfg) -> Result<Vec<Violation>> {
+    let mut paths = Vec::new();
+    for d in ["src", "tests", "benches", "../examples"] {
+        let dir = root.join(d);
+        if dir.is_dir() {
+            collect_rs_files(root, &dir, &mut paths)?;
+        }
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for (rel, p) in paths {
+        let text =
+            std::fs::read_to_string(&p).with_context(|| format!("reading {}", p.display()))?;
+        files.push(SourceFile::new(rel, &text));
+    }
+    let mut out = Vec::new();
+    for f in &files {
+        lint_lines(f, cfg, &mut out);
+    }
+    lint_hot_paths(&files, cfg, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let root = args
+        .get("root")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("CARGO_MANIFEST_DIR").ok())
+        .unwrap_or_else(|| ".".into());
+    let root = PathBuf::from(root);
+    let cfg_path = args
+        .get("config")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join("xds-lint.toml"));
+    let cfg = match std::fs::read_to_string(&cfg_path) {
+        Ok(text) => match toml_lite::parse(&text) {
+            Ok(doc) => LintCfg::from_toml(&doc),
+            Err(e) => {
+                eprintln!("xds-lint: bad config {}: {e}", cfg_path.display());
+                std::process::exit(2);
+            }
+        },
+        // no config file: the built-in policy applies unchanged
+        Err(_) => LintCfg::default(),
+    };
+    match run(&root, &cfg) {
+        Ok(violations) if violations.is_empty() => {
+            println!("xds-lint: clean");
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("xds-lint: {} finding(s)", violations.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("xds-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: every rule fires on a minimal fixture and every escape
+// suppresses it (these run in the normal `cargo test` tier).
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(rel: &str, text: &str) -> Vec<Violation> {
+        let cfg = LintCfg::default();
+        let f = SourceFile::new(rel.to_string(), text);
+        let mut out = Vec::new();
+        lint_lines(&f, &cfg, &mut out);
+        out
+    }
+
+    fn hot(rel: &str, text: &str, stop: &[&str]) -> Vec<Violation> {
+        let cfg = LintCfg {
+            hot_stop: stop.iter().map(|s| s.to_string()).collect(),
+            ..LintCfg::default()
+        };
+        let files = vec![SourceFile::new(rel.to_string(), text)];
+        let mut out = Vec::new();
+        lint_hot_paths(&files, &cfg, &mut out);
+        out
+    }
+
+    #[test]
+    fn raw_sync_flagged_outside_shim_only() {
+        let src = "use std::sync::atomic::AtomicU64;\n";
+        assert_eq!(lint_one("src/coordinator/x.rs", src).len(), 1);
+        assert!(lint_one("src/sync/model.rs", src).is_empty(), "shim exempt");
+        assert!(lint_one("vendor/anyhow/src/lib.rs", src).is_empty());
+        // mentions in comments and strings are not uses
+        assert!(lint_one("src/a.rs", "// std::sync::Mutex\n").is_empty());
+        assert!(lint_one("src/a.rs", "let s = \"std::sync::Mutex\";\n").is_empty());
+    }
+
+    #[test]
+    fn seqcst_needs_reasoned_allow() {
+        let bare = "a.store(1, Ordering::SeqCst);\n";
+        assert_eq!(lint_one("src/disagg/x.rs", bare).len(), 1);
+        let ok = "// xds:allow(seqcst): cross-check counter, ordering irrelevant\n\
+                  a.store(1, Ordering::SeqCst);\n";
+        assert!(lint_one("src/disagg/x.rs", ok).is_empty());
+        let no_reason = "a.store(1, Ordering::SeqCst); // xds:allow(seqcst):\n";
+        assert_eq!(lint_one("src/disagg/x.rs", no_reason).len(), 1, "reason mandatory");
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn f() { a.store(1, Ordering::SeqCst); }\n}\n";
+        assert!(lint_one("src/disagg/x.rs", in_test).is_empty(), "test code exempt");
+    }
+
+    #[test]
+    fn unwrap_scoped_to_serving_planes_with_invariant_escape() {
+        let bare = "fn f() { x.lock().unwrap(); }\n";
+        assert_eq!(lint_one("src/coordinator/x.rs", bare).len(), 1);
+        assert!(lint_one("src/metrics/x.rs", bare).is_empty(), "out of scope");
+        let inv = "fn f() {\n    // invariant: no panics under this lock\n    x.lock().unwrap();\n}\n";
+        assert!(lint_one("src/eplb/x.rs", inv).is_empty());
+        let inline = "fn f() { x.lock().unwrap(); // invariant: never poisoned\n}\n";
+        assert!(lint_one("src/disagg/x.rs", inline).is_empty());
+        let expect = "fn f() { y.expect(\"set at init\"); }\n";
+        assert_eq!(lint_one("src/disagg/x.rs", expect).len(), 1);
+    }
+
+    #[test]
+    fn hot_lock_traces_reachability_and_stop_list() {
+        let src = "\
+// xds:hot
+fn hot_entry() {
+    helper();
+}
+fn helper() {
+    cold();
+    self.state.lock().unwrap();
+}
+fn cold() {
+    other.lock().unwrap();
+}
+fn unreachable_locker() {
+    x.lock().unwrap();
+}
+";
+        // helper and cold are reachable from the root: two findings, with
+        // the chain in the message; unreachable_locker is not flagged
+        let v = hot("src/coordinator/x.rs", src, &[]);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "hot-lock"));
+        assert!(v[0].msg.contains("hot_entry"), "{}", v[0].msg);
+        // stop-listing the helper severs both paths
+        let v = hot("src/coordinator/x.rs", src, &["helper"]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn hot_lock_skips_ambiguous_names_and_allows() {
+        // `publish` is defined twice: no edge, so the lock inside is not
+        // attributed to the hot path (covered by marking concrete impls)
+        let src = "\
+// xds:hot
+fn hot_entry() {
+    publish();
+}
+fn publish() {
+    a.lock().unwrap();
+}
+";
+        let dup = "fn publish() {}\n";
+        let files = vec![
+            SourceFile::new("src/a.rs".into(), src),
+            SourceFile::new("src/b.rs".into(), dup),
+        ];
+        let mut out = Vec::new();
+        lint_hot_paths(&files, &LintCfg::default(), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        let allowed_src = "\
+// xds:hot
+fn hot_entry() {
+    // xds:allow(hot-lock): slow-path fallback behind a staleness check
+    self.state.lock().unwrap();
+}
+";
+        let v = hot("src/coordinator/x.rs", allowed_src, &[]);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn stripper_handles_nested_comments_and_raw_strings() {
+        let raw: Vec<String> = [
+            "let a = 1; /* SeqCst /* nested */ still comment */ let b = 2;",
+            "let s = r#\"std::sync::Mutex \"quote\" \"#; let c = '\\'';",
+            "let l: &'static str = \"x\"; // trailing SeqCst",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let code = strip_comments_and_strings(&raw);
+        assert!(!code[0].contains("SeqCst"));
+        assert!(code[0].contains("let b"));
+        assert!(!code[1].contains("std::sync"));
+        assert!(code[1].contains("let c"));
+        assert!(code[2].contains("'static"), "lifetime survives: {}", code[2]);
+        assert!(!code[2].contains("SeqCst"));
+    }
+
+    #[test]
+    fn test_region_mask_covers_cfg_test_mods() {
+        let f = SourceFile::new(
+            "src/x.rs".into(),
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n",
+        );
+        assert_eq!(f.in_test, vec![false, true, true, true, true, false]);
+    }
+}

@@ -7,7 +7,7 @@
 //! deployments (§7.1 colocated, §7.1 disaggregated MoE-Attention, §7.2
 //! production).
 
-mod toml_lite;
+pub mod toml_lite;
 
 pub use toml_lite::TomlValue;
 

@@ -78,8 +78,7 @@ pub fn choose_group(
             .into_iter()
             .min_by(|a, b| {
                 a.kv_usage
-                    .partial_cmp(&b.kv_usage)
-                    .unwrap()
+                    .total_cmp(&b.kv_usage)
                     .then(a.running.cmp(&b.running))
             })
             .map(|g| g.group),
@@ -152,8 +151,7 @@ pub fn rank_least_kv(
     penalty: f64,
 ) -> std::cmp::Ordering {
     straggler_score(a, median_ns, penalty)
-        .partial_cmp(&straggler_score(b, median_ns, penalty))
-        .unwrap()
+        .total_cmp(&straggler_score(b, median_ns, penalty))
         .then(a.status.running.cmp(&b.status.running))
         .then(a.status.group.cmp(&b.status.group))
 }

@@ -156,7 +156,7 @@ impl<'a> SyncGroups<'a> {
 
 impl Dispatcher for SyncGroups<'_> {
     fn load_views(&mut self) -> Vec<GroupLoadView> {
-        use std::sync::atomic::{AtomicU64, Ordering};
+        use crate::sync::atomic::{AtomicU64, Ordering};
         static SYNC_EPOCH: AtomicU64 = AtomicU64::new(0);
         let epoch = SYNC_EPOCH.fetch_add(1, Ordering::Relaxed) + 1;
         self.groups

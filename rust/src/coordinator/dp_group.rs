@@ -2,7 +2,7 @@
 //! decode → output shortcut, with its own KV pool and no cross-DP calls.
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use crate::sync::mpsc;
 
 use anyhow::Result;
 
@@ -181,6 +181,7 @@ impl DpGroup {
                 // again would hang the stream forever — fail it terminally
                 // (pre-deferral inject_prefilled rejected it immediately).
                 if self.running.is_empty() {
+                    // invariant: `front()` above proved the queue non-empty
                     let seq = self.prefilled.pop_front().unwrap();
                     self.fail_request(seq.req, now_ns);
                     progressed += 1;
@@ -188,6 +189,7 @@ impl DpGroup {
                 }
                 break; // deferral: retry next tick once running work frees capacity
             }
+            // invariant: `front()` above proved the queue non-empty
             let seq = self.prefilled.pop_front().unwrap();
             // can_admit passed, so an admit error here is terminal for the
             // request (e.g. duplicate id) — inject_prefilled already failed
@@ -230,6 +232,7 @@ impl DpGroup {
             if !self.pool.can_admit(req.prompt_tokens.len(), req.max_new_tokens) {
                 break; // backpressure
             }
+            // invariant: `front()` above proved the queue non-empty
             let mut req = self.queue.pop_front().unwrap();
             req.state = RequestState::Prefilling;
             let pf = match model.prefill(&req.prompt_tokens) {
@@ -320,7 +323,7 @@ impl DpGroup {
                         .logits_row
                         .iter()
                         .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i as i32)
                         .unwrap_or(0);
                     s.req.generated.push(t);

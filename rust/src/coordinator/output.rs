@@ -11,7 +11,7 @@
 //! past a few dozen groups).
 
 use std::collections::HashMap;
-use std::sync::mpsc;
+use crate::sync::mpsc;
 use std::thread;
 
 use crate::model::Tokenizer;

@@ -46,7 +46,7 @@ pub fn assign_collaborative(
     max_per_dp: usize,
 ) -> Vec<(u64, usize)> {
     let mut out = Vec::new();
-    pending.sort_by(|a, b| b.cost().partial_cmp(&a.cost()).unwrap());
+    pending.sort_by(|a, b| b.cost().total_cmp(&a.cost()));
     let mut assigned_count = vec![0usize; dps.len()];
     let mut rest = Vec::new();
     for item in pending.drain(..) {
@@ -54,7 +54,7 @@ pub fn assign_collaborative(
             .iter_mut()
             .filter(|d| d.healthy)
             .filter(|d| assigned_count[d.dp] < max_per_dp)
-            .min_by(|a, b| a.busy_until_cost.partial_cmp(&b.busy_until_cost).unwrap());
+            .min_by(|a, b| a.busy_until_cost.total_cmp(&b.busy_until_cost));
         match slot {
             Some(d) => {
                 d.busy_until_cost += item.cost();

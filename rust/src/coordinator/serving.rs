@@ -38,7 +38,7 @@
 //! queued by then, so the frontend sink drains completely before it
 //! disconnects).
 
-use std::sync::mpsc;
+use crate::sync::mpsc;
 
 use anyhow::{bail, Result};
 
@@ -396,6 +396,8 @@ impl ServingEngine {
             DeploymentMode::PdDisaggregated => {
                 let mut d = PdDispatch {
                     runtime: &self.runtime,
+                    // invariant: PD construction always builds the prefill
+                    // plane before the engine is handed out
                     plane: self.prefill.as_ref().expect("PD engine always has a plane"),
                     long_seq_threshold: self.long_seq_threshold,
                 };
@@ -577,6 +579,8 @@ impl ServingEngine {
             let mut req = Some(req);
             for j in 0..ids.len() {
                 let gid = ids[(k + j) % ids.len()];
+                // invariant: `req` is Some on entry and refilled on every
+                // Err arm, so each retry has the request back in hand
                 match self.runtime.try_submit(gid, req.take().unwrap()) {
                     Ok(()) => break,
                     Err(r) => req = Some(r),
@@ -632,7 +636,7 @@ mod tests {
     use crate::config::DecodeLbPolicy;
     use crate::coordinator::request::RequestState;
     use crate::model::{DecodeModel, SimModel};
-    use std::sync::Arc;
+    use crate::sync::Arc;
     use std::time::Duration;
 
     fn sim_factory() -> ModelFactory {

@@ -1,5 +1,10 @@
 //! Shared DP-group status board (§4.2–4.3) — seqlock edition.
 //!
+//! The fence pairing below is part of the crate-wide memory-ordering
+//! contract documented in CONCURRENCY.md (repo root), which also covers
+//! how to model-check this protocol (`cargo test --features model-check`)
+//! and the `xds-lint` rules that keep the hot path lock-free.
+//!
 //! Each DP-group worker thread *publishes* its [`DpGroupStatus`] snapshot
 //! (plus its decode-tick latency EWMA) after every tick; the TE-shell
 //! *reads* the board when dispatching. The board is the only state shared
@@ -46,7 +51,7 @@
 //! but not yet admitted still claims pool headroom, so it must count
 //! against routing.
 
-use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use crate::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
 
 use crate::coordinator::dp_group::DpGroupStatus;
 
@@ -176,6 +181,7 @@ impl StatusBoard {
     /// Publish a fresh snapshot for `slot` and advance its epoch. Called
     /// only by that slot's worker thread — the single-writer contract is
     /// what makes this wait-free (plain stores, no CAS, no lock).
+    // xds:hot
     pub fn publish(&self, slot: usize, status: DpGroupStatus, tick_ewma_ns: u64, now_ns: u64) {
         let s = &self.slots[slot];
         debug_assert_eq!(status.id, s.id, "publish must come from the slot's own group");
@@ -198,6 +204,7 @@ impl StatusBoard {
     /// (odd seq) or raced past the loads (seq moved), so the returned
     /// entry is always one internally-consistent publish. O(1) — this is
     /// the primitive the O(d) sampled router is built on.
+    // xds:hot
     pub fn read(&self, slot: usize) -> BoardEntry {
         let s = &self.slots[slot];
         // A publish is a handful of stores, so contention windows are tens
@@ -325,7 +332,7 @@ mod tests {
 
     #[test]
     fn concurrent_publish_and_snapshot() {
-        use std::sync::Arc;
+        use crate::sync::Arc;
         let b = Arc::new(board(4));
         let writers: Vec<_> = (0..4)
             .map(|slot| {
@@ -362,8 +369,8 @@ mod tests {
     /// window — fails the assertions.
     #[test]
     fn seqlock_survives_spinning_readers_and_router_demotion() {
-        use std::sync::atomic::{AtomicBool, Ordering};
-        use std::sync::Arc;
+        use crate::sync::atomic::{AtomicBool, Ordering};
+        use crate::sync::Arc;
 
         const SLOTS: usize = 3;
         const PUBLISHES: u64 = 4_000;
@@ -435,5 +442,147 @@ mod tests {
         // that is the documented transient overlay, not a torn read
         b.publish(0, status(0, 0), 0, 0);
         assert!(b.read(0).status.healthy);
+    }
+}
+
+/// Deterministic model-check suite (`cargo test --features model-check`,
+/// see CONCURRENCY.md). Unlike the stress tests above, these explore
+/// seeded schedules *and* PSO store-buffer reorderings through
+/// `crate::sync::model`, so the fence pair in `publish`/`read` is
+/// exercised against weak-memory interleavings the host CPU may never
+/// produce.
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use super::*;
+    use crate::sync::model;
+    use crate::sync::Arc;
+
+    fn status(id: usize, queued: usize) -> DpGroupStatus {
+        DpGroupStatus {
+            id,
+            queued,
+            running: 0,
+            batch_limit: 8,
+            kv_total_blocks: 64,
+            kv_usage: 0.0,
+            healthy: true,
+        }
+    }
+
+    /// The live seqlock: a reader racing the slot's writer (and a router
+    /// demotion) must only ever observe complete publishes — every field
+    /// correlated with the epoch, under every explored schedule and
+    /// store-buffer drain order.
+    #[test]
+    fn model_seqlock_reader_never_sees_torn_publish() {
+        model::check("model_seqlock_reader_never_sees_torn_publish", || {
+            let b = Arc::new(StatusBoard::new(vec![BoardEntry::initial(status(0, 0))]));
+            let w = {
+                let b = Arc::clone(&b);
+                model::spawn(move || {
+                    for i in 1..=2u64 {
+                        let st = DpGroupStatus {
+                            id: 0,
+                            queued: i as usize,
+                            running: (i % 7) as usize,
+                            batch_limit: 8,
+                            kv_total_blocks: 64,
+                            kv_usage: i as f64,
+                            healthy: true,
+                        };
+                        b.publish(0, st, i, i * 3);
+                    }
+                })
+            };
+            let d = {
+                let b = Arc::clone(&b);
+                model::spawn(move || b.mark_unhealthy(0))
+            };
+            for _ in 0..2 {
+                let e = b.read(0);
+                let i = e.epoch;
+                assert_eq!(e.status.queued as u64, i, "counts word torn");
+                if i > 0 {
+                    assert_eq!(e.status.running as u64, i % 7, "counts word torn");
+                }
+                assert_eq!(e.tick_ewma_ns, i, "ewma word torn");
+                assert_eq!(e.published_ns, i * 3, "timestamp word torn");
+                if i > 0 {
+                    assert_eq!(e.status.kv_usage.to_bits(), (i as f64).to_bits(), "kv torn");
+                }
+            }
+            w.join().unwrap();
+            d.join().unwrap();
+            let last = b.read(0);
+            assert_eq!(last.epoch, 2);
+            assert_eq!(last.status.queued, 2);
+        });
+    }
+
+    /// Meta-test (ISSUE 6): the same protocol with the `Release` fence
+    /// removed from the publish side. The odd seq marker can then drain
+    /// *after* a field store, so a reader accepts a torn snapshot — the
+    /// checker must find a schedule that proves it. This is the
+    /// regression cover for the model's store-buffer semantics: if this
+    /// test fails, the checker has lost the ability to catch exactly the
+    /// bug class the seqlock fence pair exists to prevent.
+    #[test]
+    fn model_catches_missing_release_fence() {
+        struct BrokenSeqlock {
+            seq: AtomicU64,
+            a: AtomicU64,
+            b: AtomicU64,
+        }
+
+        impl BrokenSeqlock {
+            fn new() -> Self {
+                Self {
+                    seq: AtomicU64::new(0),
+                    a: AtomicU64::new(0),
+                    b: AtomicU64::new(0),
+                }
+            }
+
+            /// `publish` with the line `fence(Ordering::Release)` deleted
+            /// — otherwise identical to `StatusBoard::publish`.
+            fn publish_broken(&self, v: u64) {
+                let seq = self.seq.load(Ordering::Relaxed);
+                self.seq.store(seq + 1, Ordering::Relaxed);
+                // BUG under test: no fence(Ordering::Release) here
+                self.a.store(v, Ordering::Relaxed);
+                self.b.store(v, Ordering::Relaxed);
+                self.seq.store(seq + 2, Ordering::Release);
+            }
+
+            /// The unmodified read protocol.
+            fn read(&self) -> (u64, u64) {
+                loop {
+                    let s1 = self.seq.load(Ordering::Acquire);
+                    if s1 & 1 == 1 {
+                        continue;
+                    }
+                    let a = self.a.load(Ordering::Relaxed);
+                    let b = self.b.load(Ordering::Relaxed);
+                    fence(Ordering::Acquire);
+                    if self.seq.load(Ordering::Relaxed) != s1 {
+                        continue;
+                    }
+                    return (a, b);
+                }
+            }
+        }
+
+        let found = model::finds_bug(model::Config::default(), || {
+            let s = Arc::new(BrokenSeqlock::new());
+            let s2 = Arc::clone(&s);
+            let w = model::spawn(move || s2.publish_broken(7));
+            let (a, b) = s.read();
+            assert_eq!(a, b, "torn read accepted: a={a} b={b}");
+            w.join().unwrap();
+        });
+        assert!(
+            found.is_some(),
+            "the model checker must catch the removed Release fence"
+        );
     }
 }

@@ -332,6 +332,7 @@ impl TeShell {
     /// refresh is due, or every sampled slot is unroutable (full, over
     /// its queue share, or straggler-demoted) — availability decisions
     /// stay with the authoritative whole-board path.
+    // xds:hot
     fn try_submit_sampled(&mut self, req: ServeRequest, d: &mut dyn Dispatcher) -> Sampled {
         // RoundRobin's whole point is its deterministic cycle; randomized
         // least-of-d would silently replace it, so that policy always
@@ -1022,7 +1023,7 @@ mod tests {
         };
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
-        use std::sync::Arc;
+        use crate::sync::Arc;
 
         let factory: ModelFactory =
             Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
@@ -1101,7 +1102,7 @@ mod tests {
         use crate::model::{DecodeModel, SimModel};
         use crate::workload::straggler::StragglerProfile;
         use anyhow::anyhow;
-        use std::sync::Arc;
+        use crate::sync::Arc;
         use std::time::{Duration, Instant};
 
         let factory: ModelFactory = Arc::new(|gid| {

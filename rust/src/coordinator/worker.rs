@@ -18,7 +18,7 @@
 //! mitigation policies — EWMA soft penalties, hard demotion, pulse
 //! demotion — are exercised under seeded jitter in tests and benches.
 
-use std::sync::{mpsc, Arc};
+use crate::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 

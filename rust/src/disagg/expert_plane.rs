@@ -7,6 +7,10 @@
 //! activation channel — dispatch is the A2E direction, combine is E2A —
 //! moving **real activation bytes** both ways.
 //!
+//! The packed owner-set ordering contract, the flat
+//! `expert_plane.{turnstile,shard_map,occupancy}` lock hierarchy, and the
+//! model-check suites exercising both live in CONCURRENCY.md (repo root).
+//!
 //! **Data path & ownership.** A decode group's [`ExchangeClient`] slices
 //! each microbatch's activation rows across the plane's logical expert
 //! shards and moves one [`ActivationMsg`] per touched shard into the
@@ -92,8 +96,8 @@
 //! joins the stage threads — which is why `ServingEngine` joins the
 //! expert plane *after* the decode workers and *before* the output plane.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{mpsc, named_mutex, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -398,7 +402,10 @@ impl DomainTurnstile {
     pub fn new(domains: usize) -> Self {
         let domains = domains.max(1);
         Self {
-            state: Mutex::new(TurnState { current: 0, active: 0, waiting: vec![0; domains] }),
+            state: named_mutex(
+                "expert_plane.turnstile",
+                TurnState { current: 0, active: 0, waiting: vec![0; domains] },
+            ),
             cv: Condvar::new(),
             domains,
         }
@@ -422,6 +429,8 @@ impl DomainTurnstile {
     /// no-op hook compiles away.
     fn enter_traced(&self, domain: usize, mut trace: impl FnMut(bool)) -> DomainPermit<'_> {
         let domain = domain % self.domains;
+        // invariant: nothing panics under the turnstile lock (plain
+        // counter bookkeeping), so poisoning is unreachable
         let mut s = self.state.lock().unwrap();
         s.waiting[domain] += 1;
         trace(false);
@@ -444,12 +453,14 @@ impl DomainTurnstile {
                 return DomainPermit { turnstile: self, domain };
             }
             // timed wait: a lost wakeup only costs one re-check interval
+            // (invariant: see the lock above — never poisoned)
             let (ns, _) = self.cv.wait_timeout(s, Duration::from_millis(50)).unwrap();
             s = ns;
         }
     }
 
     fn exit(&self, _domain: usize) {
+        // invariant: see enter_traced — the turnstile lock is never poisoned
         let mut s = self.state.lock().unwrap();
         s.active -= 1;
         if s.active == 0 {
@@ -529,16 +540,20 @@ impl PlaneShared {
 
     /// Record a slice entering the pool and cross-check the §5.2 contract.
     fn pool_enter(&self, domain: usize) {
+        // invariant: only counter updates run under the occupancy lock
         let mut o = self.occupancy.lock().unwrap();
         if o.1 == 0 {
             o.0 = domain;
         } else if o.0 != domain {
-            self.domain_violations.fetch_add(1, Ordering::SeqCst);
+            // Relaxed: the count is already serialized by the occupancy
+            // mutex it is recorded under; readers only ever join-then-read
+            self.domain_violations.fetch_add(1, Ordering::Relaxed);
         }
         o.1 += 1;
     }
 
     fn pool_exit(&self) {
+        // invariant: only counter updates run under the occupancy lock
         let mut o = self.occupancy.lock().unwrap();
         o.1 = o.1.saturating_sub(1);
     }
@@ -594,6 +609,7 @@ impl PlaneShared {
 
     /// Publish worker `slot`'s status (called only by its compute stage —
     /// the single-writer seqlock contract).
+    // xds:hot
     fn publish(&self, slot: usize, tick_ewma_ns: u64) {
         let total: u64 = self.shard_rows.iter().map(|c| c.load(Ordering::Relaxed)).sum();
         let mut my_rows = 0u64;
@@ -657,6 +673,7 @@ impl PlaneShared {
     /// the stale sets are kept — clients then compute the expert
     /// transform locally. Returns how many owner sets changed.
     fn repair_coverage(&self) -> usize {
+        // invariant: owner-set writers never panic holding the map lock
         let _g = self.map_lock.lock().unwrap();
         let mut changed = 0usize;
         let mut orphans = Vec::new();
@@ -690,7 +707,7 @@ impl PlaneShared {
         for s in orphans {
             let Some(w) = (0..self.n_workers())
                 .filter(|&w| self.alive[w].load(Ordering::Relaxed))
-                .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap().then(a.cmp(&b)))
+                .min_by(|&a, &b| load[a].total_cmp(&load[b]).then(a.cmp(&b)))
             else {
                 break;
             };
@@ -962,6 +979,7 @@ impl ExchangeClient {
     /// first candidate — so equal replicas split a hot shard evenly.
     /// Allocation-free: one relaxed load of the packed owner word.
     /// `None` when no live owner is recorded.
+    // xds:hot
     fn pick_owner(&self, shard: usize) -> Option<usize> {
         let packed = self.shared.shard_map[shard].load(Ordering::Relaxed);
         let mut live = [0usize; MAX_SHARD_REPLICAS];
@@ -1185,14 +1203,14 @@ impl ExpertPlane {
                 .iter()
                 .map(|owners| AtomicU64::new(pack_owners(owners)))
                 .collect(),
-            map_lock: Mutex::new(()),
+            map_lock: named_mutex("expert_plane.shard_map", ()),
             max_replicas: cfg.max_replicas(),
             slots_per_worker,
             shard_rows: (0..n_shards).map(|_| AtomicU64::new(0)).collect(),
             alive: specs.iter().map(|_| AtomicBool::new(true)).collect(),
             board: StatusBoard::new(initial),
             depth: specs.iter().map(|_| AtomicUsize::new(0)).collect(),
-            occupancy: Mutex::new((usize::MAX, 0)),
+            occupancy: named_mutex("expert_plane.occupancy", (usize::MAX, 0)),
             domain_violations: AtomicUsize::new(0),
             worker_ids: specs.iter().map(|s| s.id).collect(),
             start: Instant::now(),
@@ -1217,7 +1235,11 @@ impl ExpertPlane {
                 .spawn(move || {
                     let mut accepted = 0usize;
                     while let Ok(msg) = in_rx.recv() {
-                        sh.depth[slot].fetch_add(1, Ordering::SeqCst);
+                        // Relaxed: `depth` is a monotonic gauge read only
+                        // by this worker's own `publish` (queued count) —
+                        // no other memory is ordered against it, and
+                        // publish tolerates a ±1-stale value by design
+                        sh.depth[slot].fetch_add(1, Ordering::Relaxed);
                         sh.pool_enter(msg.domain);
                         busy_wait_ns(msg.a2e_ns);
                         accepted += 1;
@@ -1276,7 +1298,9 @@ impl ExpertPlane {
                 .spawn(move || {
                     while let Ok(msg) = s_rx.recv() {
                         busy_wait_ns(msg.e2a_ns);
-                        sh.depth[slot].fetch_sub(1, Ordering::SeqCst);
+                        // Relaxed: see the recv stage's fetch_add — the
+                        // gauge orders nothing, RMWs never lose counts
+                        sh.depth[slot].fetch_sub(1, Ordering::Relaxed);
                         // exit the pool before replying, so a client that
                         // releases its domain permit on this combine can
                         // never race a stale entrant count
@@ -1381,7 +1405,9 @@ impl ExpertPlane {
     /// §5.2 contract cross-check: slices observed in the pool from two
     /// domains at once (0 under a correct turnstile).
     pub fn domain_violations(&self) -> usize {
-        self.shared.domain_violations.load(Ordering::SeqCst)
+        // Relaxed: callers read after quiescing (shutdown/join); the
+        // recording side is serialized under the occupancy mutex
+        self.shared.domain_violations.load(Ordering::Relaxed)
     }
 
     /// Operator/test demotion of one worker by id: retire it from
@@ -1448,6 +1474,7 @@ impl ExpertPlane {
     pub fn rebalance(&self) -> usize {
         let sh = &self.shared;
         let mut changes = sh.repair_coverage();
+        // invariant: owner-set writers never panic holding the map lock
         let _g = sh.map_lock.lock().unwrap();
         let n = sh.n_workers();
         let n_shards = sh.shard_map.len();
@@ -1473,7 +1500,8 @@ impl ExpertPlane {
             if owners.len() >= 2 && (totals[s] as f64) < REPLICA_SHRINK_RATIO * mean {
                 let drop_w = *owners
                     .iter()
-                    .max_by(|&&a, &&b| load[a].partial_cmp(&load[b]).unwrap())
+                    .max_by(|&&a, &&b| load[a].total_cmp(&load[b]))
+                    // invariant: the len() >= 2 guard above proves non-empty
                     .unwrap();
                 let kept: Vec<usize> =
                     owners.into_iter().filter(|&w| w != drop_w).collect();
@@ -1494,7 +1522,7 @@ impl ExpertPlane {
         order.sort_by(|&a, &b| {
             let pa = totals[a] as f64 / sh.live_owners(a).len().max(1) as f64;
             let pb = totals[b] as f64 / sh.live_owners(b).len().max(1) as f64;
-            pb.partial_cmp(&pa).unwrap()
+            pb.total_cmp(&pa)
         });
         for s in order {
             let owners = sh.live_owners(s);
@@ -1510,7 +1538,7 @@ impl ExpertPlane {
                 .copied()
                 .filter(|&w| !owners.contains(&w) && counts[w] < sh.slots_per_worker)
                 .min_by(|&a, &b| {
-                    load[a].partial_cmp(&load[b]).unwrap().then(a.cmp(&b))
+                    load[a].total_cmp(&load[b]).then(a.cmp(&b))
                 })
             else {
                 continue;
@@ -1532,11 +1560,13 @@ impl ExpertPlane {
         if live.len() >= 2 {
             let hot = *live
                 .iter()
-                .max_by(|&&a, &&b| load[a].partial_cmp(&load[b]).unwrap())
+                .max_by(|&&a, &&b| load[a].total_cmp(&load[b]))
+                // invariant: the len() >= 2 guard above proves non-empty
                 .unwrap();
             let cold = *live
                 .iter()
-                .min_by(|&&a, &&b| load[a].partial_cmp(&load[b]).unwrap())
+                .min_by(|&&a, &&b| load[a].total_cmp(&load[b]))
+                // invariant: the len() >= 2 guard above proves non-empty
                 .unwrap();
             if load[hot] >= (load[cold] * 2.0).max(1.0) {
                 let mut owned: Vec<usize> = (0..n_shards)
@@ -1692,7 +1722,7 @@ mod tests {
 
     #[test]
     fn turnstile_admits_one_domain_at_a_time_and_alternates() {
-        use std::sync::atomic::AtomicUsize;
+        use crate::sync::atomic::AtomicUsize;
 
         let t = Arc::new(DomainTurnstile::new(2));
         let in_pool = Arc::new(AtomicUsize::new(usize::MAX));
@@ -2074,5 +2104,213 @@ mod tests {
                 }
             }
         }
+    }
+}
+
+/// Deterministic model-check suite (`cargo test --features model-check`,
+/// see CONCURRENCY.md): the packed owner-set degrade/re-home path and the
+/// [`DomainTurnstile`] protocol, explored under seeded schedules with
+/// PSO store-buffer semantics via `crate::sync::model`.
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use super::*;
+    use crate::sync::model;
+
+    /// Environment-derived exploration config with the iteration count
+    /// capped: the plane tests take hundreds of schedule points per run,
+    /// so they explore fewer seeds than the micro-protocol suites (an
+    /// explicit `XDS_MC_SEED` replay still forces iters = 1 exactly).
+    fn cfg(cap: u64) -> model::Config {
+        let mut c = model::Config::from_env();
+        c.iters = c.iters.min(cap);
+        c
+    }
+
+    /// A minimal live [`PlaneShared`] over `n` workers with the given
+    /// per-shard owner sets — just the placement/health state, no stage
+    /// threads (the model schedules its own).
+    fn mk_shared(n: usize, owner_sets: &[&[usize]]) -> PlaneShared {
+        let initial: Vec<BoardEntry> = (0..n)
+            .map(|id| {
+                BoardEntry::initial(DpGroupStatus {
+                    id,
+                    queued: 0,
+                    running: 0,
+                    batch_limit: owner_sets.len(),
+                    kv_total_blocks: 0,
+                    kv_usage: 0.0,
+                    healthy: true,
+                })
+            })
+            .collect();
+        PlaneShared {
+            shard_map: owner_sets
+                .iter()
+                .map(|o| AtomicU64::new(pack_owners(o)))
+                .collect(),
+            map_lock: named_mutex("expert_plane.shard_map", ()),
+            max_replicas: MAX_SHARD_REPLICAS,
+            slots_per_worker: owner_sets.len(),
+            shard_rows: (0..owner_sets.len()).map(|_| AtomicU64::new(0)).collect(),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            board: StatusBoard::new(initial),
+            depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            occupancy: named_mutex("expert_plane.occupancy", (usize::MAX, 0)),
+            domain_violations: AtomicUsize::new(0),
+            worker_ids: (0..n).collect(),
+            start: Instant::now(),
+        }
+    }
+
+    /// Two workers retired concurrently: each retire's relaxed `alive`
+    /// store may sit in its thread's store buffer, but both are flushed
+    /// by the time the *last* `repair_coverage` holds `map_lock`, so the
+    /// repairs converge — every shard ends owned by exactly the surviving
+    /// worker, and a racing reader never observes an empty owner set
+    /// (owner sets are one-word atomics: stale is possible, torn is not).
+    #[test]
+    fn model_concurrent_retires_converge_without_empty_owner_sets() {
+        model::check_with(
+            "model_concurrent_retires_converge_without_empty_owner_sets",
+            cfg(100),
+            || {
+                let sh =
+                    Arc::new(mk_shared(3, &[&[0, 1], &[1, 2], &[0, 2], &[2]]));
+                let r0 = {
+                    let sh = Arc::clone(&sh);
+                    model::spawn(move || {
+                        sh.retire_and_rehome(0);
+                    })
+                };
+                let r2 = {
+                    let sh = Arc::clone(&sh);
+                    model::spawn(move || {
+                        sh.retire_and_rehome(2);
+                    })
+                };
+                // racing dispatcher's view: mid-repair owner sets may be
+                // stale (still naming a dead worker) but never empty
+                for s in 0..sh.shard_map.len() {
+                    assert!(
+                        !sh.owners(s).is_empty(),
+                        "shard {s}: empty owner set observed mid-repair"
+                    );
+                }
+                r0.join().unwrap();
+                r2.join().unwrap();
+                for s in 0..sh.shard_map.len() {
+                    assert_eq!(
+                        sh.owners(s),
+                        vec![1],
+                        "shard {s}: dead owner survived both repairs"
+                    );
+                }
+            },
+        );
+    }
+
+    /// Turnstile mutual exclusion: two domains contending for the pool,
+    /// each thread bumping a per-domain entrant counter while it holds a
+    /// permit — under no explored schedule is the rival domain's counter
+    /// nonzero inside a turn. Termination within the step budget is the
+    /// no-lost-wakeup half: a dropped `notify_all` only costs one timed
+    /// re-check (the model force-fires timeouts when nothing is runnable),
+    /// which is exactly the liveness contract `enter_traced` documents.
+    #[test]
+    fn model_turnstile_admits_one_domain_at_a_time() {
+        model::check_with(
+            "model_turnstile_admits_one_domain_at_a_time",
+            cfg(100),
+            || {
+                let ts = Arc::new(DomainTurnstile::new(2));
+                let inside =
+                    Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+                let mut joins = Vec::new();
+                for d in 0..2usize {
+                    let ts = Arc::clone(&ts);
+                    let inside = Arc::clone(&inside);
+                    joins.push(model::spawn(move || {
+                        for _ in 0..2 {
+                            let p = ts.enter(d);
+                            inside[d].fetch_add(1, Ordering::Relaxed);
+                            assert_eq!(
+                                inside[1 - d].load(Ordering::Relaxed),
+                                0,
+                                "domain {} active during domain {d}'s turn",
+                                1 - d
+                            );
+                            inside[d].fetch_sub(1, Ordering::Relaxed);
+                            drop(p);
+                        }
+                    }));
+                }
+                for j in joins {
+                    j.join().unwrap();
+                }
+            },
+        );
+    }
+
+    /// The held-across-seam case: a domain-0 slice carries its permit
+    /// across the layer seam exactly while that domain's worker crashes
+    /// and a rival domain contends for the pool. The §5.2 cross-check
+    /// must record zero violations under every schedule, and the crash
+    /// repair must still converge — the carry permit may outlive the
+    /// worker it was entered for, but never the one-domain invariant.
+    #[test]
+    fn model_carry_permit_across_seam_races_crash() {
+        model::check_with(
+            "model_carry_permit_across_seam_races_crash",
+            cfg(100),
+            || {
+                let sh = Arc::new(mk_shared(2, &[&[0], &[1], &[0, 1]]));
+                let ts = Arc::new(DomainTurnstile::new(2));
+                let carrier = {
+                    let sh = Arc::clone(&sh);
+                    let ts = Arc::clone(&ts);
+                    model::spawn(move || {
+                        let p = ts.enter(0);
+                        sh.pool_enter(0);
+                        sh.pool_exit();
+                        // seam: the permit stays held between layers
+                        // while the retire below races it
+                        sh.pool_enter(0);
+                        sh.pool_exit();
+                        drop(p);
+                    })
+                };
+                let crash = {
+                    let sh = Arc::clone(&sh);
+                    model::spawn(move || {
+                        sh.retire_and_rehome(0);
+                    })
+                };
+                let rival = {
+                    let sh = Arc::clone(&sh);
+                    let ts = Arc::clone(&ts);
+                    model::spawn(move || {
+                        let p = ts.enter(1);
+                        sh.pool_enter(1);
+                        sh.pool_exit();
+                        drop(p);
+                    })
+                };
+                carrier.join().unwrap();
+                crash.join().unwrap();
+                rival.join().unwrap();
+                assert_eq!(
+                    sh.domain_violations.load(Ordering::Relaxed),
+                    0,
+                    "pool admitted two domains during the crash window"
+                );
+                for s in 0..sh.shard_map.len() {
+                    assert_eq!(
+                        sh.live_owners(s),
+                        vec![1],
+                        "shard {s}: coverage not restored after the crash"
+                    );
+                }
+            },
+        );
     }
 }

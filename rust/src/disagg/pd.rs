@@ -17,8 +17,8 @@
 //! Step 8: both sides poll completions; prefill frees blocks, decode
 //!         enqueues the request for computation.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::{mpsc, Arc};
 use std::thread;
 
 use anyhow::{anyhow, bail, Result};
@@ -105,6 +105,7 @@ impl PdPipeline {
         self.prefill_tes
             .iter_mut()
             .find(|t| t.id == prefill_te)
+            // invariant: choose_prefill_te returned an id from this list
             .unwrap()
             .load_tokens += input_tokens as u64;
 
@@ -116,6 +117,7 @@ impl PdPipeline {
             .map(|t| t.id)
             .ok_or_else(|| anyhow::anyhow!("no decode TE"))?;
         // step 5: DP group via §4.3 policy
+        // invariant: decode_te was just chosen from this same list
         let te = self.decode_tes.iter().find(|t| t.id == decode_te).unwrap();
         let group = choose_group(&te.groups, self.policy, &mut self.rr)
             .ok_or_else(|| anyhow::anyhow!("decode backpressure: all DP groups full"))?;
@@ -139,12 +141,14 @@ impl PdPipeline {
             .prefill_tes
             .iter()
             .find(|t| t.id == placement.prefill_te)
+            // invariant: placements come from `place`, which uses these lists
             .unwrap()
             .clone();
         let dt_die = self
             .decode_tes
             .iter()
             .find(|t| t.id == placement.decode_te)
+            // invariant: placements come from `place`, which uses these lists
             .unwrap()
             .die;
         let df = &mut self.distflow[placement.prefill_te][placement.decode_te];
@@ -171,12 +175,14 @@ impl PdPipeline {
         // step 7: the pull
         let (data, comp) = df.execute_transfer(req_id, dt_die, mem, params)?;
         // step 8: completion polled
+        // invariant: execute_transfer queued exactly one completion above
         let polled = df.poll_completion().expect("completion must be queued");
         debug_assert_eq!(polled.req_id, req_id);
         // prefill load retires
         self.prefill_tes
             .iter_mut()
             .find(|t| t.id == placement.prefill_te)
+            // invariant: the same lookup succeeded at the top of this fn
             .unwrap()
             .load_tokens = pt.load_tokens.saturating_sub(nbytes as u64 / 64);
         Ok(Some((data, comp.latency_ns)))
@@ -193,6 +199,7 @@ impl PdPipeline {
             .decode_tes
             .iter()
             .find(|t| t.id == placement.decode_te)
+            // invariant: placements come from `place`, which uses these lists
             .unwrap()
             .die;
         let df = &mut self.distflow[placement.prefill_te][placement.decode_te];
@@ -235,6 +242,7 @@ pub fn choose_prefill_te(
                 .iter()
                 .min_by_key(|t| t.load_tokens)
                 .map(|t| t.id)
+                // invariant: the ensure! above proved `eligible` non-empty
                 .unwrap()
         }))
 }

@@ -161,8 +161,7 @@ pub fn place_replicated(
             .filter(|&w| used[w] < budget && !skip.contains(&w))
             .min_by(|&a, &b| {
                 load[a]
-                    .partial_cmp(&load[b])
-                    .unwrap()
+                    .total_cmp(&load[b])
                     .then(used[a].cmp(&used[b]))
                     .then(a.cmp(&b))
             })
@@ -189,7 +188,7 @@ pub fn place_replicated(
             .max_by(|&a, &b| {
                 let pa = shard_loads[a] as f64 / owners[a].len() as f64;
                 let pb = shard_loads[b] as f64 / owners[b].len() as f64;
-                pa.partial_cmp(&pb).unwrap().then(b.cmp(&a))
+                pa.total_cmp(&pb).then(b.cmp(&a))
             })
         else {
             break;

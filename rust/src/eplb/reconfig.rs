@@ -78,6 +78,7 @@ impl Reconfigurator {
                 for sp in &self.plan {
                     let slots = &mut map.slots[sp.expert];
                     while slots.len() > 1 {
+                        // invariant: the loop guard proved len > 1
                         let slot = slots.pop().unwrap();
                         self.disabled.push((sp.expert, slot));
                     }

@@ -89,6 +89,7 @@
 //! router-level and transient: the worker's next publish re-promotes it.
 
 pub mod util;
+pub mod sync;
 pub mod config;
 pub mod fabric;
 pub mod xccl;

@@ -14,7 +14,7 @@
 //!   xdeepserve simulate --preset disagg_768 --seq 3000
 //!   xdeepserve inspect --artifacts artifacts
 
-use std::sync::mpsc;
+use xdeepserve::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;

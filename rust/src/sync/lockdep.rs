@@ -1,0 +1,288 @@
+//! Runtime lock-order checker (lockdep), in the spirit of the Linux
+//! kernel's validator: every [`crate::sync::Mutex`] acquisition records a
+//! *lock-class* edge `held → acquiring` into a global acquisition graph,
+//! and the first acquisition that would close a cycle panics with both
+//! chains — so an inverted lock pair is caught the first time the two
+//! orders are *observed*, not only on the schedule where they actually
+//! deadlock.
+//!
+//! Active whenever this module is compiled (`debug_assertions`, or the
+//! `lockdep` / `model-check` features); release builds without those
+//! features re-export `std::sync` untouched and carry no checker at all.
+//!
+//! **Lock classes.** `Mutex::new` gives every instance its own anonymous
+//! class, which still catches real inversions between two specific locks.
+//! The locks in the documented hierarchy (CONCURRENCY.md) are *named* via
+//! [`crate::sync::named_mutex`] — all instances of a named class share one
+//! node, so an inversion between e.g. any plane's shard-map lock and any
+//! turnstile's state lock is caught across instances. The documented
+//! hierarchy is the allowlist: [`edges_with_prefix`] lets a test assert
+//! that the edges observed among production classes stay inside it.
+//!
+//! **What it does not check.** Condvar wait re-acquisition is recorded
+//! like any other acquisition; `mpsc` channels and atomics are out of
+//! scope (the model checker covers those).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Mutex as StdMutex, OnceLock};
+
+/// Interned lock-class identifier.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ClassId(u32);
+
+struct Registry {
+    /// Class id → name (`#<n>` for anonymous classes).
+    names: Vec<String>,
+    by_name: HashMap<String, u32>,
+    /// Acquisition-order edges `from → to`, deduped, first-seen order.
+    edges: HashMap<u32, Vec<u32>>,
+}
+
+fn registry() -> &'static StdMutex<Registry> {
+    static REG: OnceLock<StdMutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| {
+        StdMutex::new(Registry {
+            names: Vec::new(),
+            by_name: HashMap::new(),
+            edges: HashMap::new(),
+        })
+    })
+}
+
+/// Intern a named lock class (all same-named locks share the class).
+pub fn class(name: &str) -> ClassId {
+    let mut r = registry().lock().unwrap();
+    if let Some(&id) = r.by_name.get(name) {
+        return ClassId(id);
+    }
+    let id = r.names.len() as u32;
+    r.names.push(name.to_string());
+    r.by_name.insert(name.to_string(), id);
+    ClassId(id)
+}
+
+/// A fresh anonymous class (one per `Mutex::new` instance).
+pub fn anon_class() -> ClassId {
+    let mut r = registry().lock().unwrap();
+    let id = r.names.len() as u32;
+    r.names.push(format!("#{id}"));
+    ClassId(id)
+}
+
+thread_local! {
+    /// Lock classes this thread currently holds, in acquisition order.
+    static HELD: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Is there a path `from ⇝ to` in the edge graph? Iterative DFS.
+fn reachable(edges: &HashMap<u32, Vec<u32>>, from: u32, to: u32) -> Option<Vec<u32>> {
+    let mut stack = vec![vec![from]];
+    let mut seen = vec![from];
+    while let Some(path) = stack.pop() {
+        let node = *path.last().unwrap();
+        if node == to {
+            return Some(path);
+        }
+        for &next in edges.get(&node).map(Vec::as_slice).unwrap_or(&[]) {
+            if !seen.contains(&next) {
+                seen.push(next);
+                let mut p = path.clone();
+                p.push(next);
+                stack.push(p);
+            }
+        }
+    }
+    None
+}
+
+/// Record the acquisition *attempt* of `c` given the thread's held set,
+/// panicking if the new `held → c` edge closes a cycle (an inversion of
+/// an order the graph has already seen) or if a class is re-entered.
+/// Called before blocking on the lock, so a latent inversion is reported
+/// even on schedules where it does not deadlock.
+pub fn about_to_acquire(c: ClassId) {
+    let held = HELD.with(|h| h.borrow().clone());
+    if held.is_empty() {
+        return;
+    }
+    // compute any violation under the registry lock, panic after dropping
+    // it (a poisoned registry would cascade into unrelated tests)
+    let mut violation: Option<String> = None;
+    {
+        let mut r = registry().lock().unwrap();
+        for &h in &held {
+            if h == c.0 {
+                violation = Some(format!(
+                    "lockdep: recursive acquisition of lock class `{}`",
+                    r.names[h as usize]
+                ));
+                break;
+            }
+            let already = r.edges.get(&h).is_some_and(|v| v.contains(&c.0));
+            if already {
+                continue;
+            }
+            // adding h → c: a pre-existing path c ⇝ h means the opposite
+            // order was already observed — cycle
+            if let Some(path) = reachable(&r.edges, c.0, h) {
+                let chain: Vec<&str> =
+                    path.iter().map(|&n| r.names[n as usize].as_str()).collect();
+                violation = Some(format!(
+                    "lockdep: lock order inversion: acquiring `{}` while holding `{}`, \
+                     but the opposite order `{}` was already observed",
+                    r.names[c.0 as usize],
+                    r.names[h as usize],
+                    chain.join("` -> `"),
+                ));
+                break;
+            }
+            r.edges.entry(h).or_default().push(c.0);
+        }
+    }
+    if let Some(msg) = violation {
+        panic!("{msg}");
+    }
+}
+
+/// Record that `c` is now held by this thread.
+pub fn acquired(c: ClassId) {
+    HELD.with(|h| h.borrow_mut().push(c.0));
+}
+
+/// Record that `c` was released (most-recent holding of that class).
+pub fn released(c: ClassId) {
+    HELD.with(|h| {
+        let mut v = h.borrow_mut();
+        if let Some(pos) = v.iter().rposition(|&x| x == c.0) {
+            v.remove(pos);
+        }
+    });
+}
+
+/// Observed acquisition-order edges whose *both* endpoints' class names
+/// start with `prefix` — how the hierarchy test pins the production lock
+/// graph to the CONCURRENCY.md allowlist without seeing unrelated tests'
+/// anonymous or meta-test classes.
+pub fn edges_with_prefix(prefix: &str) -> Vec<(String, String)> {
+    let r = registry().lock().unwrap();
+    let mut out = Vec::new();
+    for (&from, tos) in &r.edges {
+        for &to in tos {
+            let (f, t) = (&r.names[from as usize], &r.names[to as usize]);
+            if f.starts_with(prefix) && t.starts_with(prefix) {
+                out.push((f.clone(), t.clone()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn acquire(c: ClassId) {
+        about_to_acquire(c);
+        acquired(c);
+    }
+
+    #[test]
+    fn consistent_order_is_silent() {
+        let a = class("lockdep-test-consistent-a");
+        let b = class("lockdep-test-consistent-b");
+        for _ in 0..3 {
+            acquire(a);
+            acquire(b);
+            released(b);
+            released(a);
+        }
+        assert_eq!(
+            edges_with_prefix("lockdep-test-consistent"),
+            vec![(
+                "lockdep-test-consistent-a".to_string(),
+                "lockdep-test-consistent-b".to_string()
+            )]
+        );
+    }
+
+    /// Meta-test (ISSUE 6): a deliberately inverted lock pair must be
+    /// caught — the regression cover for the checker itself.
+    #[test]
+    fn inverted_pair_is_caught() {
+        let a = class("lockdep-meta-inverted-a");
+        let b = class("lockdep-meta-inverted-b");
+        acquire(a);
+        acquire(b);
+        released(b);
+        released(a);
+        // opposite order: must panic on the b → a edge
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            acquire(b);
+            acquire(a);
+        }))
+        .expect_err("lockdep must catch the inverted lock order");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("lock order inversion"), "unexpected panic: {msg}");
+        // the failed attempt left `b` held (the acquire panicked before
+        // pushing `a`); unwind cleanup in real guards does this via Drop
+        released(b);
+    }
+
+    #[test]
+    fn recursive_same_class_is_caught() {
+        let a = class("lockdep-meta-recursive");
+        acquire(a);
+        let err = catch_unwind(AssertUnwindSafe(|| about_to_acquire(a)))
+            .expect_err("recursive class acquisition must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("recursive"), "unexpected panic: {msg}");
+        released(a);
+    }
+
+    #[test]
+    fn three_lock_cycle_is_caught() {
+        let a = class("lockdep-meta-tri-a");
+        let b = class("lockdep-meta-tri-b");
+        let c = class("lockdep-meta-tri-c");
+        acquire(a);
+        acquire(b);
+        released(b);
+        released(a);
+        acquire(b);
+        acquire(c);
+        released(c);
+        released(b);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            acquire(c);
+            acquire(a);
+        }))
+        .expect_err("transitive cycle must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("lock order inversion"), "unexpected panic: {msg}");
+        released(c);
+    }
+
+    #[test]
+    fn anonymous_classes_are_distinct() {
+        let a = anon_class();
+        let b = anon_class();
+        assert_ne!(a, b);
+        // same physical order twice — no cycle, no panic
+        acquire(a);
+        acquire(b);
+        released(b);
+        released(a);
+    }
+}

@@ -1,0 +1,90 @@
+//! Synchronization shim — the single import point for every sync
+//! primitive in the crate (enforced by `xds-lint`; see CONCURRENCY.md).
+//!
+//! Three compilation modes, selected by features:
+//!
+//! | build | atomics | `Mutex`/`Condvar` |
+//! |---|---|---|
+//! | release, no features | `std::sync::atomic` re-export | `std::sync` re-export |
+//! | debug or `--features lockdep` | `std::sync::atomic` re-export | [`wrapped`]: std + [`lockdep`] order checking |
+//! | `--features model-check` | [`model`]: scheduler-instrumented | [`model`]: scheduler-instrumented + lockdep |
+//!
+//! The first row is the contract the lock-free hot path depends on: a
+//! normal optimized build compiles `crate::sync::atomic::AtomicU64` to
+//! *exactly* `std::sync::atomic::AtomicU64` — a `pub use`, no wrapper
+//! types, no indirection, zero overhead (`runtime_hotpath` bench guards
+//! this stays true in practice).
+//!
+//! Under `model-check`, [`model::check`] runs a closure under many seeded
+//! deterministic schedules with PSO-style store-buffer semantics; outside
+//! a check run the instrumented types transparently fall back to `std`,
+//! so the entire normal test suite still passes under the feature.
+//!
+//! [`named_mutex`] places a mutex into a *named* lockdep class (shared
+//! across instances); the documented lock hierarchy in CONCURRENCY.md is
+//! expressed in these names.
+
+#[cfg(any(debug_assertions, feature = "lockdep", feature = "model-check"))]
+pub mod lockdep;
+
+#[cfg(feature = "model-check")]
+pub mod model;
+
+#[cfg(all(
+    not(feature = "model-check"),
+    any(debug_assertions, feature = "lockdep")
+))]
+mod wrapped;
+
+// --- always plain std: channels and Arc are not schedule points we model ---
+pub use std::sync::{mpsc, Arc};
+
+// --- atomics ---
+
+/// `std::sync::atomic` in any non-model build (pure re-export).
+#[cfg(not(feature = "model-check"))]
+pub mod atomic {
+    pub use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Scheduler-instrumented atomics under `model-check`.
+#[cfg(feature = "model-check")]
+pub use self::model::atomic;
+
+// --- Mutex / Condvar ---
+
+#[cfg(all(
+    not(feature = "model-check"),
+    not(any(debug_assertions, feature = "lockdep"))
+))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(all(
+    not(feature = "model-check"),
+    any(debug_assertions, feature = "lockdep")
+))]
+pub use self::wrapped::{Condvar, Mutex, MutexGuard};
+#[cfg(all(
+    not(feature = "model-check"),
+    any(debug_assertions, feature = "lockdep")
+))]
+pub use std::sync::WaitTimeoutResult;
+
+#[cfg(feature = "model-check")]
+pub use self::model::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// A mutex in the named lock class `name`. In instrumented builds all
+/// mutexes created with the same name share one lockdep node, so an
+/// inversion between e.g. any plane's shard-map lock and any turnstile's
+/// state lock is caught across instances; plain release builds ignore the
+/// name entirely.
+#[cfg(any(debug_assertions, feature = "lockdep", feature = "model-check"))]
+pub fn named_mutex<T>(name: &str, t: T) -> Mutex<T> {
+    Mutex::named(name, t)
+}
+
+/// Release-mode `named_mutex`: the name is documentation only.
+#[cfg(not(any(debug_assertions, feature = "lockdep", feature = "model-check")))]
+pub fn named_mutex<T>(_name: &str, t: T) -> Mutex<T> {
+    Mutex::new(t)
+}

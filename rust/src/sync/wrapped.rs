@@ -1,0 +1,153 @@
+//! Lockdep-instrumented passthrough `Mutex`/`Condvar` for debug builds
+//! (and the `lockdep` feature): real `std::sync` primitives underneath,
+//! plus [`super::lockdep`] acquisition-graph bookkeeping around every
+//! lock/unlock and condvar re-acquisition. Not compiled in plain release
+//! builds, which re-export `std::sync` untouched.
+
+use std::sync::{
+    Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard,
+    PoisonError, TryLockError, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+use super::lockdep;
+
+/// `std::sync::Mutex` plus a lockdep class per instance (anonymous from
+/// [`Mutex::new`], shared/named from [`Mutex::named`]).
+pub struct Mutex<T: ?Sized> {
+    class: lockdep::ClassId,
+    inner: StdMutex<T>,
+}
+
+/// Guard that records the release in the lockdep held-set on drop.
+pub struct MutexGuard<'a, T: ?Sized> {
+    class: lockdep::ClassId,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Self {
+        Self { class: lockdep::anon_class(), inner: StdMutex::new(t) }
+    }
+
+    /// A mutex in the named lock class `name` (all same-named locks share
+    /// one lockdep node; the CONCURRENCY.md hierarchy uses these).
+    pub fn named(name: &str, t: T) -> Self {
+        Self { class: lockdep::class(name), inner: StdMutex::new(t) }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        lockdep::about_to_acquire(self.class);
+        let r = self.inner.lock();
+        lockdep::acquired(self.class);
+        match r {
+            Ok(g) => Ok(MutexGuard { class: self.class, inner: Some(g) }),
+            Err(p) => Err(PoisonError::new(MutexGuard {
+                class: self.class,
+                inner: Some(p.into_inner()),
+            })),
+        }
+    }
+
+    pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, TryLockError<MutexGuard<'_, T>>> {
+        // no about_to_acquire: a try_lock cannot deadlock, so it does not
+        // constrain the order graph
+        match self.inner.try_lock() {
+            Ok(g) => {
+                lockdep::acquired(self.class);
+                Ok(MutexGuard { class: self.class, inner: Some(g) })
+            }
+            Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            Err(TryLockError::Poisoned(p)) => {
+                lockdep::acquired(self.class);
+                Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                    class: self.class,
+                    inner: Some(p.into_inner()),
+                })))
+            }
+        }
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        lockdep::released(self.class);
+        drop(self.inner.take());
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// `std::sync::Condvar` passthrough that keeps the lockdep held-set
+/// accurate across the wait (mutex released while parked, re-acquired on
+/// wakeup).
+#[derive(Default)]
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self { inner: StdCondvar::new() }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let class = guard.class;
+        lockdep::released(class);
+        let inner = guard.inner.take().expect("guard taken");
+        std::mem::forget(guard); // Drop would double-release the class
+        let r = self.inner.wait(inner);
+        lockdep::acquired(class);
+        match r {
+            Ok(g) => Ok(MutexGuard { class, inner: Some(g) }),
+            Err(p) => Err(PoisonError::new(MutexGuard { class, inner: Some(p.into_inner()) })),
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let class = guard.class;
+        lockdep::released(class);
+        let inner = guard.inner.take().expect("guard taken");
+        std::mem::forget(guard);
+        let r = self.inner.wait_timeout(inner, dur);
+        lockdep::acquired(class);
+        match r {
+            Ok((g, t)) => Ok((MutexGuard { class, inner: Some(g) }, t)),
+            Err(p) => {
+                let (g, t) = p.into_inner();
+                Err(PoisonError::new((MutexGuard { class, inner: Some(g) }, t)))
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}

@@ -16,7 +16,7 @@
 //!
 //! CI runs this file across a small seed matrix via `XDS_CHAOS_SEED`.
 
-use std::sync::Arc;
+use xdeepserve::sync::Arc;
 use std::thread;
 use std::time::Duration;
 

@@ -12,7 +12,7 @@
 //! (d) a stalled group's publish-epoch heartbeat demotes it from routing.
 
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc};
+use xdeepserve::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 

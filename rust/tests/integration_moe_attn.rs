@@ -9,7 +9,7 @@
 //! CI runs this file across a small seed matrix: `XDS_CHAOS_SEED` feeds
 //! the injected-jitter schedules (see `matrix_seed`).
 
-use std::sync::Arc;
+use xdeepserve::sync::Arc;
 use std::time::Duration;
 
 use xdeepserve::config::DeploymentMode;

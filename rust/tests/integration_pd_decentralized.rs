@@ -15,7 +15,7 @@
 //!     terminated.
 
 use std::collections::HashMap;
-use std::sync::{mpsc, Arc};
+use xdeepserve::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 

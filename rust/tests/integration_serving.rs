@@ -4,7 +4,7 @@
 //! Requires `make artifacts`; every test no-ops (passes) without them so
 //! `cargo test` stays green on a fresh checkout.
 
-use std::sync::mpsc;
+use xdeepserve::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use xdeepserve::config::DeploymentMode;
