@@ -11,8 +11,13 @@
 //! iteration with 1 vs. 2 microbatches plus the §5.2 **cross-layer
 //! carry** (a layer's final combine hidden behind the next layer's
 //! attention — gated strictly below the 2-microbatch barrier baseline),
-//! per-shard §4.5 replica counts in the JSON, and a live EPLB
-//! replica-growth check.
+//! per-shard §4.5 replica counts in the JSON, a live EPLB
+//! replica-growth check, and a **Transformerless** scenario (§7.1: 16
+//! decode groups × 4 prefill workers × 4 expert workers all live at once)
+//! recording tokens/s, p99 TPOT, prefill-handoff p99, and exposed-vs-
+//! hidden communication on both the decode and prefill sides of the
+//! expert plane — with the per-group request spread recorded so the
+//! both-planes-aware router's balance is tracked across PRs.
 //!
 //! Every scale run streams through the §4.2 per-group output plane (one
 //! detokenizing handler thread per DP group, no shared fan-in consumer);
@@ -434,6 +439,170 @@ fn moe_attn_run(
     }
 }
 
+struct TransformerlessResult {
+    decode_groups: usize,
+    prefill_workers: usize,
+    expert_workers: usize,
+    tokens_per_s: f64,
+    p99_tpot_ms: f64,
+    /// Cross-plane prefill→decode handoff (first token − prefill stamp).
+    handoff_p99_ms: f64,
+    /// Mean §4.7 KV-codec wire bytes per handoff.
+    wire_bytes_mean: f64,
+    all_wired: bool,
+    /// Decode-side exposed (blocked-waiting) comm per iteration.
+    exposed_ms_per_iter: f64,
+    /// Decode-side round-trip time hidden behind attention per iteration.
+    hidden_ms_per_iter: f64,
+    /// Long prompts exchanged on the prefill turnstile domain.
+    prefill_iterations: u64,
+    prefill_dispatches: u64,
+    prefill_integrity_failures: u64,
+    decode_integrity_failures: u64,
+    domain_violations: usize,
+    /// Per-group request spread under the both-planes load fold.
+    group_reqs_min: usize,
+    group_reqs_max: usize,
+}
+
+impl TransformerlessResult {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("decode_groups", Json::Num(self.decode_groups as f64)),
+            ("prefill_workers", Json::Num(self.prefill_workers as f64)),
+            ("expert_workers", Json::Num(self.expert_workers as f64)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s)),
+            ("p99_tpot_ms", Json::Num(self.p99_tpot_ms)),
+            ("handoff_p99_ms", Json::Num(self.handoff_p99_ms)),
+            ("kv_wire_bytes_mean", Json::Num(self.wire_bytes_mean)),
+            ("exposed_ms_per_iter", Json::Num(self.exposed_ms_per_iter)),
+            ("hidden_ms_per_iter", Json::Num(self.hidden_ms_per_iter)),
+            (
+                "prefill_exchange_iterations",
+                Json::Num(self.prefill_iterations as f64),
+            ),
+            (
+                "prefill_exchange_dispatches",
+                Json::Num(self.prefill_dispatches as f64),
+            ),
+            (
+                "integrity_failures",
+                Json::Num(
+                    (self.prefill_integrity_failures + self.decode_integrity_failures) as f64,
+                ),
+            ),
+            ("domain_violations", Json::Num(self.domain_violations as f64)),
+            ("group_reqs_min", Json::Num(self.group_reqs_min as f64)),
+            ("group_reqs_max", Json::Num(self.group_reqs_max as f64)),
+        ])
+    }
+}
+
+/// Fully-disaggregated Transformerless (§7.1): `n` decode DP-group
+/// threads, a `prefill_workers`-wide prefill plane, and an
+/// `expert_workers`-wide expert plane all live on one engine. Every
+/// prompt is long enough (≥ microbatches rows) that prefill runs real
+/// A2E/E2A exchanges on its own turnstile domain before the KV-codec
+/// handoff, and every decode tick exchanges per layer — so the routing
+/// view folds prefill in-flight *and* expert pipeline depth at once.
+fn transformerless_run(
+    n: usize,
+    prefill_workers: usize,
+    expert_workers: usize,
+) -> TransformerlessResult {
+    const TL_MAX_NEW: usize = 8;
+    const TL_REQS_PER_GROUP: usize = 3;
+    const TL_DOMAINS: usize = 2; // decode domains; turnstile adds one for prefill
+    let rt_cfg = MoeAttnRuntime {
+        layers: 2,
+        microbatches: 2,
+        time_scale: 8,
+        ..Default::default()
+    };
+    let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+        .groups(specs(n))
+        .dp_domains(TL_DOMAINS)
+        .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect())
+        .expert_plane(
+            (0..expert_workers).map(ExpertWorkerSpec::new).collect(),
+            rt_cfg,
+        )
+        .straggler(StragglerProfile::uniform(n, TICK_NS / 4))
+        .spawn()
+        .unwrap();
+    let t0 = Instant::now();
+    let total = (n * TL_REQS_PER_GROUP) as u64;
+    for i in 0..total {
+        // 4-token prompt ≥ 2 microbatches: the prefill-side exchange fires
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], TL_MAX_NEW, 0))
+            .unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(120)).unwrap();
+    let plane = engine
+        .expert_plane()
+        .expect("Transformerless engine owns an expert plane");
+    let domain_violations = plane.domain_violations();
+    let pstats = engine
+        .prefill_plane()
+        .expect("Transformerless engine owns a prefill plane")
+        .exchange_stats()
+        .expect("Transformerless prefill plane tracks exchange stats");
+    let groups = engine.shutdown().unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut tpot = Histogram::new();
+    let mut handoff = Histogram::new();
+    let mut exposed_ns = 0u64;
+    let mut hidden_ns = 0u64;
+    let mut iterations = 0u64;
+    let mut decode_integrity = 0u64;
+    let mut wire_bytes = 0u64;
+    let mut all_wired = true;
+    let mut tokens = 0usize;
+    let mut group_reqs: Vec<usize> = Vec::new();
+    for g in &groups {
+        exposed_ns += g.exchange.exposed_ns;
+        hidden_ns += g.exchange.hidden_ns();
+        iterations += g.exchange.iterations;
+        decode_integrity += g.exchange.integrity_failures;
+        group_reqs.push(g.finished.len());
+        for r in &g.finished {
+            tokens += r.generated.len();
+            tpot.record(r.timing.tpot_ms());
+            handoff.record(
+                r.timing.first_token_ns.saturating_sub(r.timing.prefill_done_ns) as f64 / 1e6,
+            );
+            wire_bytes += r.timing.kv_wire_bytes;
+            all_wired &= r.timing.kv_wire_bytes > 0;
+        }
+    }
+    assert_eq!(
+        tokens,
+        n * TL_REQS_PER_GROUP * TL_MAX_NEW,
+        "transformerless workload must fully complete"
+    );
+    TransformerlessResult {
+        decode_groups: n,
+        prefill_workers,
+        expert_workers,
+        tokens_per_s: tokens as f64 / wall_s,
+        p99_tpot_ms: tpot.percentile(99.0),
+        handoff_p99_ms: handoff.percentile(99.0),
+        wire_bytes_mean: wire_bytes as f64 / total.max(1) as f64,
+        all_wired,
+        exposed_ms_per_iter: exposed_ns as f64 / 1e6 / iterations.max(1) as f64,
+        hidden_ms_per_iter: hidden_ns as f64 / 1e6 / iterations.max(1) as f64,
+        prefill_iterations: pstats.iterations,
+        prefill_dispatches: pstats.dispatches,
+        prefill_integrity_failures: pstats.integrity_failures,
+        decode_integrity_failures: decode_integrity,
+        domain_violations,
+        group_reqs_min: group_reqs.iter().copied().min().unwrap_or(0),
+        group_reqs_max: group_reqs.iter().copied().max().unwrap_or(0),
+    }
+}
+
 fn main() {
     let args = Args::from_env();
     let quick = args.has_flag("quick");
@@ -717,6 +886,53 @@ fn main() {
         plane.shutdown().unwrap();
     }
 
+    // ---- fully-disaggregated Transformerless (§7.1): both planes live ----
+    // Sized to run under --quick too: 16 decode groups is enough threads
+    // for the both-planes load fold to matter while staying CI-cheap.
+    let tl = transformerless_run(16, 4, 4);
+    bench.row(&[
+        format!(
+            "Transformerless: {} decode × {} prefill × {} expert workers",
+            tl.decode_groups, tl.prefill_workers, tl.expert_workers
+        ),
+        format!("{:.0} tok/s", tl.tokens_per_s),
+        format!(
+            "p99 TPOT {:.2} ms, handoff p99 {:.2} ms, exposed {:.3} / hidden {:.3} ms/iter, \
+             {} prefill exchanges, codec {:.0} B/handoff",
+            tl.p99_tpot_ms,
+            tl.handoff_p99_ms,
+            tl.exposed_ms_per_iter,
+            tl.hidden_ms_per_iter,
+            tl.prefill_iterations,
+            tl.wire_bytes_mean
+        ),
+        "three planes on one engine".into(),
+    ]);
+    bench.check(
+        "Transformerless: every handoff moved codec wire bytes",
+        tl.all_wired,
+    );
+    bench.check(
+        "Transformerless: every long prompt exchanged on the prefill domain",
+        tl.prefill_iterations == 16 * 3 && tl.prefill_dispatches > 0,
+    );
+    bench.check(
+        "Transformerless: decode ticks exchanged per layer (hidden comm measured)",
+        tl.hidden_ms_per_iter > 0.0,
+    );
+    bench.check(
+        "Transformerless: activation payloads bit-intact on both planes",
+        tl.prefill_integrity_failures == 0 && tl.decode_integrity_failures == 0,
+    );
+    bench.check(
+        "Transformerless: one turnstile domain at a time with prefill rotating",
+        tl.domain_violations == 0,
+    );
+    bench.check(
+        "Transformerless: both-planes load fold keeps any group below half the traffic",
+        tl.group_reqs_max <= 16 * 3 / 2,
+    );
+
     // ---- machine-readable trajectory record ----
     let json = obj(vec![
         ("schema", Json::Str("scaleout-v1".into())),
@@ -754,6 +970,7 @@ fn main() {
             "moe_attn",
             Json::Arr(ma_results.iter().map(|r| r.to_json()).collect()),
         ),
+        ("transformerless", tl.to_json()),
     ]);
     let path = "BENCH_scaleout.json";
     std::fs::write(path, format!("{json}\n")).expect("write BENCH_scaleout.json");

@@ -37,6 +37,11 @@ pub enum DeploymentMode {
     /// Disaggregated MoE-Attention (§5.2): attention DP groups are
     /// partitioned into DP domains; routing balances across domains first.
     MoeAttn,
+    /// Fully-disaggregated Transformerless (§7.1): both axes at once —
+    /// dedicated prefill workers (which run their own A2E/E2A exchanges
+    /// for long prompts) hand KV to decode DP groups that exchange
+    /// activations with the expert plane per layer.
+    Transformerless,
 }
 
 /// Decode DP load-balancing policy (§4.3).
@@ -103,6 +108,9 @@ pub struct DeploymentConfig {
     pub disaggregated_moe_attention: bool,
     /// Dies running attention when disaggregated.
     pub attention_dies: usize,
+    /// Dedicated prefill workers (§5.1 PD, §7.1 Transformerless); 0 =
+    /// prefill colocated on the decode groups.
+    pub prefill_workers: usize,
 }
 
 impl DeploymentConfig {
@@ -127,6 +135,7 @@ impl DeploymentConfig {
             tp_attention: 1,
             disaggregated_moe_attention: false,
             attention_dies: 288,
+            prefill_workers: 0,
         }
     }
 
@@ -148,6 +157,33 @@ impl DeploymentConfig {
             tp_attention: 1,
             disaggregated_moe_attention: true,
             attention_dies: 480,
+            prefill_workers: 0,
+        }
+    }
+
+    /// §7.1 fully-disaggregated Transformerless: the full 768-die SuperPod
+    /// with *both* axes of disaggregation live — 288 EP dies + 432
+    /// attention dies in 3 DP domains (144 DP groups each) + 48 dedicated
+    /// prefill dies that run their own per-layer exchanges on the expert
+    /// plane (the prefill side forms a fourth turnstile domain rotating
+    /// against the three decode domains).
+    pub fn transformerless_768() -> Self {
+        Self {
+            mode: DeploymentMode::Transformerless,
+            n_servers: 48,
+            chips_per_server: 8,
+            ep_size: 288,
+            n_routed_experts: 256,
+            n_shared_experts: 32,
+            redundancy_slots: 1,
+            dp_groups: 432,
+            dp_domains: 3,
+            batch_per_die: 96,
+            microbatches: 2,
+            tp_attention: 4,
+            disaggregated_moe_attention: true,
+            attention_dies: 432,
+            prefill_workers: 48,
         }
     }
 
@@ -169,6 +205,7 @@ impl DeploymentConfig {
             tp_attention: 1,
             disaggregated_moe_attention: false,
             attention_dies: 128,
+            prefill_workers: 4,
         }
     }
 
@@ -188,6 +225,7 @@ impl DeploymentConfig {
             tp_attention: 4,
             disaggregated_moe_attention: false,
             attention_dies: 32,
+            prefill_workers: 8,
         }
     }
 }
@@ -346,8 +384,16 @@ impl Config {
                 deployment: DeploymentConfig::production_decode_te(),
                 ..Default::default()
             },
+            "transformerless_768" => Config {
+                deployment: DeploymentConfig::transformerless_768(),
+                // §7.1 composition: 3 decode domains + 1 prefill domain
+                // share the expert-pool turnstile
+                moe_attn: MoeAttnConfig { domains: 4, ..Default::default() },
+                ..Default::default()
+            },
             other => anyhow::bail!(
-                "unknown preset {other:?} (expected colocated_dp288, disagg_768, or production)"
+                "unknown preset {other:?} (expected colocated_dp288, disagg_768, \
+                 transformerless_768, or production)"
             ),
         };
         if let Some(v) = toml.try_u64("seed")? {
@@ -371,13 +417,18 @@ impl Config {
         if let Some(v) = toml.try_u64("deployment.redundancy_slots")? {
             cfg.deployment.redundancy_slots = v as usize;
         }
+        if let Some(v) = toml.try_u64("deployment.prefill_workers")? {
+            cfg.deployment.prefill_workers = v as usize;
+        }
         if let Some(v) = toml.try_str("deployment.mode")? {
             cfg.deployment.mode = match v {
                 "colocated" => DeploymentMode::Colocated,
                 "pd_disaggregated" => DeploymentMode::PdDisaggregated,
                 "moe_attn" => DeploymentMode::MoeAttn,
+                "transformerless" => DeploymentMode::Transformerless,
                 other => anyhow::bail!(
-                    "unknown deployment.mode {other:?} (expected colocated, pd_disaggregated, or moe_attn)"
+                    "unknown deployment.mode {other:?} (expected colocated, pd_disaggregated, \
+                     moe_attn, or transformerless)"
                 ),
             };
         }
@@ -446,8 +497,15 @@ impl Config {
                 cfg.moe_attn.domains = v as usize;
             }
             // not set explicitly: follow the deployment's domain partition
-            // so the two knobs cannot silently disagree
-            None => cfg.moe_attn.domains = cfg.deployment.dp_domains,
+            // so the two knobs cannot silently disagree. Transformerless
+            // adds one turnstile domain on top for the prefill plane (the
+            // prefill side rotates against the decode domains).
+            None => {
+                cfg.moe_attn.domains = match cfg.deployment.mode {
+                    DeploymentMode::Transformerless => cfg.deployment.dp_domains + 1,
+                    _ => cfg.deployment.dp_domains,
+                }
+            }
         }
         if let Some(v) = toml.try_u64("moe_attn.layers")? {
             anyhow::ensure!(v >= 1, "moe_attn.layers must be >= 1, got {v}");
@@ -502,6 +560,28 @@ impl Config {
             cfg.moe_attn.domains,
             cfg.deployment.dp_groups
         );
+        // Joint cross-plane validation for the fully-disaggregated mode:
+        // both planes must actually exist, and the turnstile's domain
+        // partition must cover the prefill side on top of the decode
+        // domains (prefill clients enter the expert pool as their own
+        // rotating domain — without the extra slot they would alias a
+        // decode domain and the §5.2 rotation contract breaks).
+        if cfg.deployment.mode == DeploymentMode::Transformerless {
+            anyhow::ensure!(
+                cfg.deployment.prefill_workers >= 1,
+                "deployment.prefill_workers must be >= 1 in transformerless mode \
+                 (the prefill plane needs at least one worker), got {}",
+                cfg.deployment.prefill_workers
+            );
+            anyhow::ensure!(
+                cfg.moe_attn.domains > cfg.deployment.dp_domains,
+                "moe_attn.domains ({}) must cover the prefill domain on top of \
+                 deployment.dp_domains ({}): transformerless mode needs \
+                 moe_attn.domains >= deployment.dp_domains + 1",
+                cfg.moe_attn.domains,
+                cfg.deployment.dp_domains
+            );
+        }
         Ok(cfg)
     }
 
@@ -537,6 +617,13 @@ mod tests {
         let p = DeploymentConfig::production_decode_te();
         assert_eq!(p.dp_groups, 128);
         assert_eq!(p.ep_size, 128);
+
+        // §7.1 composition: EP + attention + prefill fill the SuperPod
+        let t = DeploymentConfig::transformerless_768();
+        assert_eq!(t.total_dies(), 768);
+        assert_eq!(t.attention_dies + t.ep_size + t.prefill_workers, 768);
+        assert_eq!(t.dp_groups / t.dp_domains, 144);
+        assert_eq!(t.mode, DeploymentMode::Transformerless);
     }
 
     #[test]
@@ -616,10 +703,54 @@ mod tests {
         let cfg = Config::from_file(&p).unwrap();
         assert_eq!(cfg.deployment.mode, DeploymentMode::PdDisaggregated);
 
-        // unknown mode is an error naming the value
+        // unknown mode is an error naming the value AND listing every
+        // valid mode string
         let p = write_cfg("bad_mode.toml", "[deployment]\nmode = \"quantum\"\n");
         let e = Config::from_file(&p).unwrap_err().to_string();
         assert!(e.contains("quantum"), "{e}");
+        for valid in ["colocated", "pd_disaggregated", "moe_attn", "transformerless"] {
+            assert!(e.contains(valid), "mode error must list {valid:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn transformerless_preset_and_joint_validation() {
+        // the preset parses and carries both planes' knobs in one config
+        let p = write_cfg("tfl.toml", "preset = \"transformerless_768\"\n");
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.deployment.mode, DeploymentMode::Transformerless);
+        assert_eq!(cfg.deployment.prefill_workers, 48);
+        assert_eq!(cfg.deployment.dp_domains, 3);
+        // 3 decode domains + 1 prefill domain on the turnstile
+        assert_eq!(cfg.moe_attn.domains, 4);
+
+        // the mode string parses onto any base
+        let p = write_cfg(
+            "tfl_mode.toml",
+            "[deployment]\nmode = \"transformerless\"\nprefill_workers = 2\ndp_domains = 2\ndp_groups = 8\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.deployment.mode, DeploymentMode::Transformerless);
+        // unset moe_attn.domains follows dp_domains + 1 in this mode
+        assert_eq!(cfg.moe_attn.domains, 3);
+
+        // joint validation: a prefill-less transformerless config fails at
+        // parse time naming the offending key
+        let p = write_cfg(
+            "tfl_nopf.toml",
+            "[deployment]\nmode = \"transformerless\"\nprefill_workers = 0\n",
+        );
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("deployment.prefill_workers"), "{e}");
+
+        // joint validation: a domain partition that does not cover the
+        // prefill side fails naming moe_attn.domains
+        let p = write_cfg(
+            "tfl_dom.toml",
+            "[deployment]\nmode = \"transformerless\"\nprefill_workers = 2\ndp_domains = 3\n\n[moe_attn]\ndomains = 3\n",
+        );
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("moe_attn.domains"), "{e}");
     }
 
     #[test]

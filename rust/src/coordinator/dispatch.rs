@@ -4,11 +4,15 @@
 //! The TE-shell (§4.2) owns *routing policy* — stale credits, straggler
 //! penalties, queue-limit admission — but deliberately knows nothing about
 //! *delivery*: whether the chosen group is a struct the caller ticks on one
-//! thread, a worker thread's inbox, or (PD-disaggregated, §5.1) a prefill
-//! worker that will hand the KV off cross-thread later. Each deployment
-//! mode supplies a `Dispatcher`; `TeShell::submit` is the single routing
-//! path over all of them — this is what replaced the old forked
-//! `dispatch`/`dispatch_decentralized` API.
+//! thread, a worker thread's inbox, or (with a prefill attachment, §5.1)
+//! a prefill worker that will hand the KV off cross-thread later. The
+//! engine supplies one `Dispatcher` per spawn —
+//! [`crate::coordinator::plane::PlaneDispatch`] over whatever plane
+//! attachments the mode's capability set composed, [`SyncGroups`] for
+//! caller-ticked router tests — and `TeShell::submit` is the single
+//! routing path over all of them; this is what replaced the old forked
+//! `dispatch`/`dispatch_decentralized` API and the per-mode dispatcher
+//! structs that followed it.
 
 use std::fmt;
 

@@ -8,10 +8,15 @@
 //!
 //! The public front-end is [`serving::ServingEngine`]: one
 //! `submit`/`drain`/`health_sweep` surface over every
-//! [`config::DeploymentMode`](crate::config::DeploymentMode) —
-//! colocated, PD-disaggregated (prefill workers injecting KV cross-thread
-//! via [`worker::InboxMsg::InjectPrefilled`]), and MoE-Attention
-//! (domain-aware routing). Underneath, the [`TeShell`] is pure routing
+//! [`config::DeploymentMode`](crate::config::DeploymentMode). A mode is
+//! not a fork inside the engine: it maps once to a set of composable
+//! **plane attachments** ([`plane::AttachmentCaps`] →
+//! [`plane::PlaneSet`]) — no attachments (colocated), a prefill plane
+//! (PD-disaggregated, prefill workers injecting KV cross-thread via
+//! [`worker::InboxMsg::InjectPrefilled`]), an expert plane (MoE-Attention,
+//! domain-aware routing), or both coupled together (Transformerless,
+//! §7.1: prefill workers also exchange on the expert plane and routing
+//! folds both planes' load). Underneath, the [`TeShell`] is pure routing
 //! policy over a [`dispatch::Dispatcher`] delivery backend:
 //!
 //! * [`dispatch::SyncGroups`] — the caller owns the groups and ticks them
@@ -26,25 +31,30 @@
 //!   ([`decode_sched::choose_group_straggler_aware`]), publish-epoch
 //!   heartbeats (`reliability::heartbeat::GroupPulseMonitor`), and one
 //!   output handler thread per group ([`output::OutputPlane`], §4.2).
-//! * the PD dispatcher (inside [`serving`]) — routes the decode group,
-//!   then delivers to a `disagg::pd::PrefillPlane` worker that injects
-//!   the prefilled KV into that group's inbox (§5.1 step 8) through the
-//!   §4.7 codec byte path.
+//! * [`plane::PlaneDispatch`] — the engine's backend over every
+//!   attachment combination: folds the attached planes' in-flight load
+//!   into the routing views, and with a prefill attachment delivers to a
+//!   `disagg::pd::PrefillPlane` worker that injects the prefilled KV into
+//!   the routed group's inbox (§5.1 step 8) through the §4.7 codec byte
+//!   path.
 //!
-//! In `DeploymentMode::MoeAttn` the engine additionally spawns a
+//! With an expert attachment the engine additionally spawns a
 //! `disagg::expert_plane::ExpertPlane`, and every decode worker's tick
 //! runs one A2E/E2A activation exchange per layer per microbatch against
 //! it (§5.2): activations are owned by the decode group until dispatched,
 //! by the expert worker through its recv/compute/send pipeline, and
-//! return with the combine; only one DP domain occupies the expert pool
-//! at a time; shutdown joins the expert plane after the decode workers
-//! and before the output plane.
+//! return with the combine; only one turnstile domain (a decode DP
+//! domain, or in Transformerless the prefill plane's extra domain)
+//! occupies the expert pool at a time. Shutdown ordering is owned by
+//! [`plane::PlaneSet`]: prefill plane, then decode workers, then the
+//! expert plane, then the output plane.
 
 pub mod request;
 pub mod dp_group;
 pub mod status_board;
 pub mod dispatch;
 pub mod te_shell;
+pub mod plane;
 pub mod serving;
 pub mod prefill_sched;
 pub mod decode_sched;
@@ -56,6 +66,7 @@ pub mod worker;
 pub use dispatch::{AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch, SyncGroups};
 pub use dp_group::{DpGroup, DpGroupStatus, PrefilledSeq};
 pub use output::{OutputPlane, OutputShortcut};
+pub use plane::{AttachmentCaps, PlaneDispatch, PlaneSet};
 pub use request::{RequestState, ServeRequest};
 pub use serving::{ServingEngine, ServingEngineBuilder};
 pub use status_board::{BoardEntry, StatusBoard};

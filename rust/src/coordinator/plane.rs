@@ -1,0 +1,527 @@
+//! Composable plane attachments: the [`ServingEngine`] assembles a
+//! deployment from a [`PlaneSet`] instead of forking on its mode.
+//!
+//! Historically every deployment mode was a hard `match` inside the
+//! engine: PD got a bespoke dispatcher, MoeAttn got a bespoke spawn arm,
+//! and running both at once (the paper's §7.1 Transformerless shape) was
+//! structurally impossible. This module replaces that with *attachments*:
+//!
+//! * [`AttachmentCaps`] — the per-mode capability set, the **single**
+//!   place a [`DeploymentMode`] maps to plane structure. It is pure data
+//!   (which attachments exist, whether prefill workers join the expert
+//!   exchange, whether routing folds cross-plane load); everything
+//!   downstream keys on capabilities, never on the mode.
+//! * [`PlaneSet`] — the attachments an engine actually spawned (prefill
+//!   plane and/or expert plane), owning their **shutdown-ordering
+//!   contract**: prefill joins *before* the decode workers (outstanding
+//!   KV still injects into live inboxes), the expert plane joins *after*
+//!   them (decode workers hold its channel senders through their exchange
+//!   clients), and the output plane joins last — hence the split into
+//!   [`PlaneSet::shutdown_pre_decode`] / [`PlaneSet::shutdown_post_decode`]
+//!   that the engine calls around the runtime join.
+//! * [`PlaneDispatch`] — the one delivery backend over every attachment
+//!   combination. With a prefill attachment, delivery routes through
+//!   `choose_prefill_te` with worker-retiring failover; without it,
+//!   delivery is the runtime inbox send. Routing views always fold the
+//!   prefill plane's synchronous in-flight counters, and — when the mode's
+//!   caps say so — the expert plane's per-domain pipeline depth, so the
+//!   power-of-two-choices sample sees *both* planes' load
+//!   ([`fold_plane_load`], lock-free all the way down; it is an
+//!   `// xds:hot` root).
+//!
+//! **Turnstile geometry.** In Transformerless mode the prefill workers
+//! run their own A2E/E2A exchanges for long prompts, entering the same
+//! [`DomainTurnstile`](crate::disagg::expert_plane::DomainTurnstile) as
+//! the decode domains: the turnstile is sized `decode_domains + 1` and the
+//! prefill side occupies the extra domain index, so prefill exchanges
+//! rotate against decode exchanges under the unchanged one-domain-at-a-
+//! time contract (model-checked below: a prefill permit and the decode
+//! permits are mutually exclusive, and the three-plane shutdown ordering
+//! terminates under seeded schedules).
+//!
+//! A future plane (e.g. an MTP verifier) attaches by growing
+//! [`AttachmentCaps`] and [`PlaneSet`] — not by adding another mode fork
+//! to the engine.
+
+use anyhow::{bail, Result};
+
+use crate::config::DeploymentMode;
+use crate::coordinator::decode_sched::GroupLoadView;
+use crate::coordinator::dispatch::Dispatcher;
+use crate::coordinator::request::ServeRequest;
+use crate::coordinator::worker::DecentralizedRuntime;
+use crate::disagg::expert_plane::ExpertPlane;
+use crate::disagg::pd::{choose_prefill_te, PrefillJob, PrefillPlane};
+
+/// Which attachments a deployment mode composes, and how they couple.
+/// Pure data — the one remaining mode→structure mapping; the builder and
+/// the dispatcher consume capabilities, never the mode itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AttachmentCaps {
+    /// A [`PrefillPlane`] attachment: dedicated prefill workers hand KV
+    /// into decode groups over the §4.7 codec wire path.
+    pub prefill: bool,
+    /// An [`ExpertPlane`] attachment: decode ticks run per-layer A2E/E2A
+    /// exchanges against a pool of expert-shard workers (§5.2).
+    pub expert: bool,
+    /// Prefill workers build their own `ExchangeClient` and run per-layer
+    /// exchanges for long prompts, occupying one extra turnstile domain
+    /// that rotates against the decode domains (§7.1 composition).
+    /// Implies both `prefill` and `expert`.
+    pub prefill_exchange: bool,
+    /// Routing folds the expert plane's per-domain pipeline depth into
+    /// the power-of-two-choices view on top of the prefill in-flight
+    /// counters — the cross-plane load signal. Only meaningful with both
+    /// planes attached.
+    pub fold_cross_plane_load: bool,
+}
+
+impl AttachmentCaps {
+    /// The attachment set a deployment mode stands for (§5, Fig 16; §7.1
+    /// for the fully-disaggregated composition).
+    pub fn for_mode(mode: DeploymentMode) -> Self {
+        match mode {
+            DeploymentMode::Colocated => Self::default(),
+            DeploymentMode::PdDisaggregated => Self { prefill: true, ..Self::default() },
+            DeploymentMode::MoeAttn => Self { expert: true, ..Self::default() },
+            DeploymentMode::Transformerless => Self {
+                prefill: true,
+                expert: true,
+                prefill_exchange: true,
+                fold_cross_plane_load: true,
+            },
+        }
+    }
+
+    /// Builder-side validation: reject plane inputs the capability set
+    /// cannot attach. This replaces the old per-mode bail list — a new
+    /// mode (or a new plane) changes `for_mode`, not the engine.
+    pub fn validate(&self, wants_prefill: bool, wants_expert: bool) -> Result<()> {
+        if wants_prefill && !self.prefill {
+            bail!(
+                "this deployment mode has no prefill attachment: prefill workers \
+                 need a prefill-capable mode (pd_disaggregated or transformerless)"
+            );
+        }
+        if wants_expert && !self.expert {
+            bail!(
+                "this deployment mode has no expert attachment: an expert plane \
+                 (and its straggler profile) needs an expert-capable mode \
+                 (moe_attn or transformerless)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Turnstile domain count for an expert plane serving `decode_domains`
+    /// decode DP domains: one extra rotation slot when the prefill plane
+    /// joins the exchange.
+    pub fn turnstile_domains(&self, decode_domains: usize) -> usize {
+        let decode = decode_domains.max(1);
+        if self.prefill_exchange {
+            decode + 1
+        } else {
+            decode
+        }
+    }
+
+    /// The turnstile domain index the prefill plane's exchange clients
+    /// occupy (the slot past the decode domains), when they exchange.
+    pub fn prefill_domain(&self, decode_domains: usize) -> Option<usize> {
+        self.prefill_exchange.then(|| decode_domains.max(1))
+    }
+}
+
+/// The plane attachments one engine actually spawned, owning the contract
+/// every attachment must honor: its health-sweep hook, its EPLB hook, its
+/// idle predicate, and its slot in the shutdown ordering (see the module
+/// docs). The engine holds exactly one of these regardless of mode; an
+/// unattached plane is simply absent.
+pub struct PlaneSet {
+    prefill: Option<PrefillPlane>,
+    expert: Option<ExpertPlane>,
+    /// Decode DP domains (`group_id % decode_domains` is a group's
+    /// domain) — what maps a routing slot to its expert-plane depth gauge.
+    decode_domains: usize,
+    /// Routing folds expert per-domain depth (see [`AttachmentCaps`]).
+    fold_cross_plane_load: bool,
+}
+
+impl PlaneSet {
+    pub fn new(
+        prefill: Option<PrefillPlane>,
+        expert: Option<ExpertPlane>,
+        decode_domains: usize,
+        fold_cross_plane_load: bool,
+    ) -> Self {
+        Self {
+            prefill,
+            expert,
+            decode_domains: decode_domains.max(1),
+            fold_cross_plane_load,
+        }
+    }
+
+    pub fn prefill_plane(&self) -> Option<&PrefillPlane> {
+        self.prefill.as_ref()
+    }
+
+    pub fn expert_plane(&self) -> Option<&ExpertPlane> {
+        self.expert.as_ref()
+    }
+
+    pub fn decode_domains(&self) -> usize {
+        self.decode_domains
+    }
+
+    /// True when no attachment still holds in-flight work (the prefill
+    /// plane's synchronous counters; the expert plane's pipelines drain
+    /// into decode combines, so decode idleness already covers them).
+    pub fn all_idle(&self) -> bool {
+        self.prefill.as_ref().map_or(true, |p| p.inflight_total() == 0)
+    }
+
+    /// Health-sweep hook: the expert-side straggler sweep (§5.2). Returns
+    /// demoted expert worker ids; empty without an expert attachment.
+    pub fn sweep(&self) -> Vec<usize> {
+        self.expert.as_ref().map_or_else(Vec::new, |p| p.straggler_sweep())
+    }
+
+    /// EPLB hook: the expert plane's §4.5 replica tick, when attached.
+    pub fn rebalance(&self) {
+        if let Some(p) = &self.expert {
+            p.rebalance();
+        }
+    }
+
+    /// Shutdown phase 1, *before* the decode-runtime join: the prefill
+    /// plane goes first — its outstanding prefills still inject KV into
+    /// decode inboxes that must outlive it. Returns the orphaned requests
+    /// (prefilled but with no live decode group), `None` without a
+    /// prefill attachment.
+    pub fn shutdown_pre_decode(&mut self) -> Result<Option<Vec<ServeRequest>>> {
+        match self.prefill.take() {
+            Some(plane) => plane.shutdown().map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Shutdown phase 2, *after* the decode-runtime join: the expert
+    /// plane's inboxes disconnect only once the decode workers (and the
+    /// prefill workers, already joined in phase 1) have dropped their
+    /// exchange clients. The output plane is still alive at this point —
+    /// it joins last, after this returns.
+    pub fn shutdown_post_decode(&mut self) -> Result<()> {
+        match self.expert.take() {
+            Some(plane) => plane.shutdown(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Fold the attached planes' in-flight load into one routing slot's view:
+/// the prefill plane's synchronous per-group in-flight count (KV still
+/// being prefetched lands on that group), plus — under
+/// `fold_cross_plane_load` — the group's share of its domain's expert
+/// pipeline depth (a domain whose exchanges run deep is a worse place to
+/// land a request than its board snapshot alone suggests). Ceiling
+/// division keeps a small depth visible instead of rounding the signal
+/// away; both reads are single relaxed atomic loads.
+// xds:hot
+fn fold_plane_load(planes: &PlaneSet, slot: usize, view: &mut GroupLoadView, n_slots: usize) {
+    if let Some(p) = &planes.prefill {
+        view.status.running += p.inflight_for_slot(slot);
+    }
+    if planes.fold_cross_plane_load {
+        if let Some(e) = &planes.expert {
+            let domain = view.status.id % planes.decode_domains;
+            let depth = e.domain_depth(domain);
+            let groups_per_domain = n_slots.div_ceil(planes.decode_domains).max(1);
+            view.status.running += depth.div_ceil(groups_per_domain);
+        }
+    }
+}
+
+/// The one delivery backend over every attachment combination (see the
+/// module docs): routing views fold the attached planes' load; delivery
+/// goes through the prefill plane when one is attached (length-aware
+/// placement with worker-retiring failover) and straight into the decode
+/// inbox otherwise.
+pub struct PlaneDispatch<'a> {
+    pub runtime: &'a DecentralizedRuntime,
+    pub planes: &'a PlaneSet,
+    pub long_seq_threshold: usize,
+}
+
+impl Dispatcher for PlaneDispatch<'_> {
+    fn load_views(&mut self) -> Vec<GroupLoadView> {
+        let mut views = self.runtime.load_views();
+        let n = views.len();
+        for (slot, v) in views.iter_mut().enumerate() {
+            fold_plane_load(self.planes, slot, v, n);
+        }
+        views
+    }
+
+    fn deliver(
+        &mut self,
+        group_id: usize,
+        mut req: ServeRequest,
+    ) -> std::result::Result<(), ServeRequest> {
+        let Some(plane) = &self.planes.prefill else {
+            return self.runtime.try_submit(group_id, req);
+        };
+        // Failover loop: a submit failure retires that prefill worker from
+        // `tes()`, so each retry re-places over the remaining live workers
+        // and the loop terminates (worst case: no live worker → Err).
+        loop {
+            let tes = plane.tes();
+            let Ok(te) = choose_prefill_te(
+                &tes,
+                req.prompt_tokens.len(),
+                None,
+                self.long_seq_threshold,
+            ) else {
+                return Err(req);
+            };
+            match plane.submit(te, PrefillJob { req, decode_group: group_id }) {
+                Ok(()) => return Ok(()),
+                Err(job) => req = job.req,
+            }
+        }
+    }
+
+    fn demote(&mut self, group_id: usize) {
+        // With a prefill attachment, deliver() fails only when the
+        // *prefill* side is exhausted; the routed decode group is healthy,
+        // so demoting it on the board would be wrong (the plane already
+        // retired its dead workers).
+        if self.planes.prefill.is_none() {
+            self.runtime.demote(group_id);
+        }
+    }
+
+    fn tracks_inflight(&self) -> bool {
+        // the prefill plane's in-flight counters count a delivery
+        // synchronously, so the shell must not also credit it
+        self.planes.prefill.is_some()
+    }
+
+    fn n_slots(&self) -> usize {
+        self.runtime.n_groups()
+    }
+
+    fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
+        let mut v = self.runtime.view_slot(slot)?;
+        fold_plane_load(self.planes, slot, &mut v, self.runtime.n_groups());
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caps_express_all_four_modes() {
+        let c = AttachmentCaps::for_mode(DeploymentMode::Colocated);
+        assert_eq!(c, AttachmentCaps::default());
+
+        let pd = AttachmentCaps::for_mode(DeploymentMode::PdDisaggregated);
+        assert!(pd.prefill && !pd.expert && !pd.prefill_exchange);
+
+        let ma = AttachmentCaps::for_mode(DeploymentMode::MoeAttn);
+        assert!(!ma.prefill && ma.expert && !ma.fold_cross_plane_load);
+
+        let t = AttachmentCaps::for_mode(DeploymentMode::Transformerless);
+        assert!(t.prefill && t.expert && t.prefill_exchange && t.fold_cross_plane_load);
+    }
+
+    #[test]
+    fn caps_validate_rejects_unattachable_planes() {
+        let colo = AttachmentCaps::for_mode(DeploymentMode::Colocated);
+        assert!(colo.validate(true, false).is_err());
+        assert!(colo.validate(false, true).is_err());
+        assert!(colo.validate(false, false).is_ok());
+
+        let pd = AttachmentCaps::for_mode(DeploymentMode::PdDisaggregated);
+        assert!(pd.validate(true, false).is_ok());
+        assert!(pd.validate(false, true).is_err());
+
+        let t = AttachmentCaps::for_mode(DeploymentMode::Transformerless);
+        assert!(t.validate(true, true).is_ok());
+    }
+
+    #[test]
+    fn turnstile_geometry_adds_one_prefill_domain() {
+        let ma = AttachmentCaps::for_mode(DeploymentMode::MoeAttn);
+        assert_eq!(ma.turnstile_domains(3), 3);
+        assert_eq!(ma.prefill_domain(3), None);
+
+        let t = AttachmentCaps::for_mode(DeploymentMode::Transformerless);
+        assert_eq!(t.turnstile_domains(3), 4);
+        assert_eq!(t.prefill_domain(3), Some(3), "prefill takes the slot past decode");
+        assert_eq!(t.turnstile_domains(0), 2, "degenerate partition still rotates");
+    }
+}
+
+// The cross-plane seam under the deterministic model checker: prefill and
+// decode permits racing on one turnstile, and the three-plane shutdown
+// ordering (prefill → decode → expert → output) terminating under seeded
+// schedules. See CONCURRENCY.md for the suite catalogue.
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use crate::sync::{model, named_mutex, Arc, Condvar};
+
+    use crate::disagg::expert_plane::DomainTurnstile;
+
+    fn cfg(cap: u64) -> model::Config {
+        let mut c = model::Config::from_env();
+        c.iters = c.iters.min(cap);
+        c
+    }
+
+    /// Transformerless turnstile geometry: 2 decode domains + 1 prefill
+    /// domain (index 2) race on one turnstile. Inside any domain's
+    /// permit, no rival domain may hold one — the §5.2 contract must
+    /// survive the prefill side joining the rotation.
+    #[test]
+    fn model_prefill_and_decode_domains_race_the_turnstile() {
+        model::check_with(
+            "model_prefill_and_decode_domains_race_the_turnstile",
+            cfg(100),
+            || {
+                // domains 0/1 = decode, 2 = prefill (decode_domains + 1)
+                let ts = Arc::new(DomainTurnstile::new(3));
+                let inside: Arc<Vec<AtomicUsize>> =
+                    Arc::new((0..3).map(|_| AtomicUsize::new(0)).collect());
+                let mut joins = Vec::new();
+                for d in 0..3usize {
+                    let ts = Arc::clone(&ts);
+                    let inside = Arc::clone(&inside);
+                    joins.push(model::spawn(move || {
+                        let p = ts.enter(d);
+                        inside[d].fetch_add(1, Ordering::Relaxed);
+                        for rival in 0..3 {
+                            if rival != d {
+                                assert_eq!(
+                                    inside[rival].load(Ordering::Relaxed),
+                                    0,
+                                    "domain {rival} active during domain {d}'s turn"
+                                );
+                            }
+                        }
+                        inside[d].fetch_sub(1, Ordering::Relaxed);
+                        drop(p);
+                    }));
+                }
+                for j in joins {
+                    j.join().unwrap();
+                }
+            },
+        );
+    }
+
+    /// The attachment shutdown ordering as a liveness check: a prefill
+    /// thread (exchanging on the turnstile's extra domain), a decode
+    /// thread (exchanging on a decode domain, consuming the prefill
+    /// handoff, then dropping its exchange client), an expert thread
+    /// (exits only once every client is dropped — the real plane's inbox
+    /// disconnect), and an output thread (exits only after the expert
+    /// side is done). The driver joins them prefill → decode → expert →
+    /// output. A lost wakeup or a leaked permit anywhere in the chain
+    /// deadlocks the schedule, which the model's termination check flags.
+    #[test]
+    fn model_three_plane_shutdown_ordering_terminates() {
+        model::check_with(
+            "model_three_plane_shutdown_ordering_terminates",
+            cfg(100),
+            || {
+                let ts = Arc::new(DomainTurnstile::new(2));
+                // prefill → decode handoff flag (the KV inject stand-in)
+                let kv_handed = Arc::new(AtomicBool::new(false));
+                // live exchange clients (decode holds one until it exits)
+                let clients = Arc::new(named_mutex("plane.mc_clients", 1usize));
+                let clients_cv = Arc::new(Condvar::new());
+                let expert_done = Arc::new(named_mutex("plane.mc_done", false));
+                let done_cv = Arc::new(Condvar::new());
+
+                let prefill = {
+                    let ts = Arc::clone(&ts);
+                    let kv = Arc::clone(&kv_handed);
+                    model::spawn(move || {
+                        // long-prompt exchange on the prefill domain (1)
+                        let p = ts.enter(1);
+                        drop(p);
+                        kv.store(true, Ordering::Release);
+                    })
+                };
+                let decode = {
+                    let ts = Arc::clone(&ts);
+                    let kv = Arc::clone(&kv_handed);
+                    let clients = Arc::clone(&clients);
+                    let cv = Arc::clone(&clients_cv);
+                    model::spawn(move || {
+                        // per-layer exchange on the decode domain (0),
+                        // racing the prefill domain's permit
+                        let p = ts.enter(0);
+                        drop(p);
+                        // consume the handoff whenever it lands (decode
+                        // inboxes outlive the prefill plane, so observing
+                        // false here is fine — the flag is the stand-in
+                        // for an inject that phase-1 shutdown guarantees
+                        // was sent before the plane joined)
+                        let _ = kv.load(Ordering::Acquire);
+                        // exit: drop the exchange client
+                        // invariant: mc_clients guards a plain counter;
+                        // nothing panics under it
+                        let mut n = clients.lock().unwrap();
+                        *n -= 1;
+                        cv.notify_all();
+                    })
+                };
+                let expert = {
+                    let clients = Arc::clone(&clients);
+                    let cv = Arc::clone(&clients_cv);
+                    let done = Arc::clone(&expert_done);
+                    let done_cv = Arc::clone(&done_cv);
+                    model::spawn(move || {
+                        // the plane's stage threads exit once every
+                        // exchange client is dropped (inbox disconnect)
+                        // invariant: see above — never poisoned
+                        let mut n = clients.lock().unwrap();
+                        while *n > 0 {
+                            n = cv.wait(n).unwrap();
+                        }
+                        // flat hierarchy: release mc_clients before
+                        // taking mc_done
+                        drop(n);
+                        // invariant: mc_done guards a plain flag; nothing
+                        // panics under it
+                        let mut d = done.lock().unwrap();
+                        *d = true;
+                        done_cv.notify_all();
+                    })
+                };
+                let output = {
+                    let done = Arc::clone(&expert_done);
+                    let done_cv = Arc::clone(&done_cv);
+                    model::spawn(move || {
+                        // output joins last: wait for the expert side
+                        // invariant: see above — never poisoned
+                        let mut d = done.lock().unwrap();
+                        while !*d {
+                            d = done_cv.wait(d).unwrap();
+                        }
+                    })
+                };
+                // the engine's shutdown ordering, verbatim
+                prefill.join().unwrap();
+                decode.join().unwrap();
+                expert.join().unwrap();
+                output.join().unwrap();
+            },
+        );
+    }
+}

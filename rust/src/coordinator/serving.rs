@@ -1,42 +1,47 @@
-//! [`ServingEngine`]: the unified deployment-mode front-end.
+//! [`ServingEngine`]: the unified deployment-mode front-end, assembled
+//! from composable plane attachments.
 //!
 //! One `submit(req)` / `drain()` / `health_sweep()` surface serves every
-//! Transformerless deployment (§5, Fig 16), selected by
-//! [`DeploymentMode`]:
+//! deployment (§5, Fig 16). A [`DeploymentMode`] is **not** a fork inside
+//! the engine anymore: it maps once — via
+//! [`AttachmentCaps::for_mode`](crate::coordinator::plane::AttachmentCaps)
+//! — to an attachment set, and everything downstream (builder validation,
+//! spawn order, dispatch, health sweeps, shutdown ordering) keys on those
+//! capabilities:
 //!
-//! * **Colocated** — requests go straight to decode DP-group worker
-//!   threads, which run their own prompt prefill (§4.2).
-//! * **PdDisaggregated** — requests go to a [`PrefillPlane`] worker
-//!   (length-aware, load-balanced §5.1 step 1); the prefilled KV is handed
-//!   off cross-thread into the routed decode group's inbox
+//! * **Colocated** — no attachments: requests go straight to decode
+//!   DP-group worker threads, which run their own prompt prefill (§4.2).
+//! * **PdDisaggregated** — a [`PrefillPlane`] attachment (length-aware,
+//!   load-balanced §5.1 step 1); the prefilled KV is handed off
+//!   cross-thread into the routed decode group's inbox
 //!   (`InboxMsg::InjectPrefilled`, step 8), deferring inside the group
 //!   when it is full (step 6).
-//! * **MoeAttn** — disaggregated MoE-Attention, live (§5.2): the engine
-//!   spawns an [`ExpertPlane`] of expert-shard worker threads (three
-//!   persistent-kernel pipeline stages each), and every decode tick runs
-//!   one A2E/E2A activation exchange per layer per microbatch against it,
-//!   with the §5.2 microbatch overlap, cross-layer carry (a layer's
-//!   final combine hides behind the next layer's attention, the domain
-//!   permit held across the seam), and one-domain-at-a-time turn-taking.
-//!   Expert shards are replica-owned (§4.5): clients rotate slices over
-//!   each shard's live replicas, [`ServingEngine::tick_eplb`] grows and
-//!   shrinks replica counts from observed load, and a crashed worker
-//!   degrades its shards to their surviving replicas. Routing balances
-//!   across DP domains first (§5.2), then §4.3 picks within; expert
-//!   workers publish straggler EWMAs into their own seqlock board, swept
-//!   alongside the decode heartbeats.
+//! * **MoeAttn** — an [`ExpertPlane`] attachment, live (§5.2): every
+//!   decode tick runs one A2E/E2A activation exchange per layer per
+//!   microbatch against a pool of expert-shard worker threads, with
+//!   microbatch overlap, cross-layer carry, and one-domain-at-a-time
+//!   turn-taking; shards are replica-owned (§4.5), rebalanced by
+//!   [`ServingEngine::tick_eplb`], swept alongside the decode heartbeats.
+//! * **Transformerless** — both attachments at once (§7.1, the paper's
+//!   production shape), coupled: prefill workers build their own exchange
+//!   clients and run per-layer A2E/E2A exchanges for long prompts on an
+//!   extra turnstile domain that rotates against the decode domains; the
+//!   prefilled KV takes the same codec wire path into MoeAttn decode
+//!   groups; and routing folds *both* planes' in-flight load (prefill
+//!   in-flight + per-domain expert pipeline depth) into the
+//!   power-of-two-choices view.
 //!
-//! Behind every mode sits the same decentralized runtime
-//! ([`DecentralizedRuntime`]), the same routing shell ([`TeShell`] over a
-//! [`Dispatcher`]), the same `serving.dp_queue_limit` admission, and the
-//! same publish-epoch health plane.
+//! Behind every attachment set sits the same decentralized runtime
+//! ([`DecentralizedRuntime`]), the same routing shell ([`TeShell`] over
+//! the one [`PlaneDispatch`] backend), the same `serving.dp_queue_limit`
+//! admission, and the same publish-epoch health plane.
 //!
-//! **Shutdown ordering** (who joins whom): prefill plane first
-//! (outstanding KV still injects), then the decode workers, then the
-//! expert plane (decode workers hold its channel senders through their
-//! exchange clients), and the output plane last (every emitted event is
-//! queued by then, so the frontend sink drains completely before it
-//! disconnects).
+//! **Shutdown ordering** (owned by [`PlaneSet`], who joins whom): prefill
+//! plane first (outstanding KV still injects), then the decode workers,
+//! then the expert plane (decode workers hold its channel senders through
+//! their exchange clients), and the output plane last (every emitted
+//! event is queued by then, so the frontend sink drains completely before
+//! it disconnects).
 
 use crate::sync::mpsc;
 
@@ -44,16 +49,15 @@ use anyhow::{bail, Result};
 
 use crate::config::{DeploymentMode, ServingConfig};
 use crate::coordinator::decode_sched::GroupLoadView;
-use crate::coordinator::dispatch::{
-    AdmissionError, DispatchOutcome, Dispatcher, RuntimeDispatch,
-};
+use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::dp_group::DpGroup;
 use crate::coordinator::output::{FrontendMsg, OutputEvent, OutputPlane};
+use crate::coordinator::plane::{AttachmentCaps, PlaneDispatch, PlaneSet};
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::te_shell::TeShell;
 use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring};
 use crate::disagg::expert_plane::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime};
-use crate::disagg::pd::{choose_prefill_te, PrefillJob, PrefillPlane, PrefillWorkerSpec};
+use crate::disagg::pd::{PrefillPlane, PrefillWorkerSpec};
 use crate::model::Tokenizer;
 use crate::reliability::heartbeat::GroupPulseMonitor;
 use crate::workload::straggler::StragglerProfile;
@@ -66,73 +70,6 @@ pub const DEFAULT_LONG_SEQ_THRESHOLD: usize = 32_000;
 /// 50 ms × 3 misses is far outside normal jitter.
 pub const DEFAULT_PULSE_INTERVAL_NS: u64 = 50_000_000;
 pub const DEFAULT_PULSE_MISSES: u32 = 3;
-
-/// PD-disaggregated delivery: the shell routes the *decode* group as
-/// usual; delivery hands the request to a prefill worker that will inject
-/// into that group later. Views are corrected by the plane's in-flight
-/// counters so KV still being prefetched counts against its target group.
-struct PdDispatch<'a> {
-    runtime: &'a DecentralizedRuntime,
-    plane: &'a PrefillPlane,
-    long_seq_threshold: usize,
-}
-
-impl Dispatcher for PdDispatch<'_> {
-    fn load_views(&mut self) -> Vec<GroupLoadView> {
-        let mut views = self.runtime.load_views();
-        for (slot, v) in views.iter_mut().enumerate() {
-            v.status.running += self.plane.inflight_for_slot(slot);
-        }
-        views
-    }
-
-    fn deliver(
-        &mut self,
-        group_id: usize,
-        mut req: ServeRequest,
-    ) -> std::result::Result<(), ServeRequest> {
-        // Failover loop: a submit failure retires that prefill worker from
-        // `tes()`, so each retry re-places over the remaining live workers
-        // and the loop terminates (worst case: no live worker → Err).
-        loop {
-            let tes = self.plane.tes();
-            let Ok(te) = choose_prefill_te(
-                &tes,
-                req.prompt_tokens.len(),
-                None,
-                self.long_seq_threshold,
-            ) else {
-                return Err(req);
-            };
-            match self.plane.submit(te, PrefillJob { req, decode_group: group_id }) {
-                Ok(()) => return Ok(()),
-                Err(job) => req = job.req,
-            }
-        }
-    }
-
-    fn demote(&mut self, _group_id: usize) {
-        // deliver() fails only when the *prefill* side is exhausted; the
-        // routed decode group is healthy, so demoting it on the board
-        // would be wrong (the plane already retired its dead workers).
-    }
-
-    fn tracks_inflight(&self) -> bool {
-        // the plane's in-flight counters count a delivery synchronously,
-        // so the shell must not also credit it (double count)
-        true
-    }
-
-    fn n_slots(&self) -> usize {
-        self.runtime.n_groups()
-    }
-
-    fn view_slot(&mut self, slot: usize) -> Option<GroupLoadView> {
-        let mut v = self.runtime.view_slot(slot)?;
-        v.status.running += self.plane.inflight_for_slot(slot);
-        Some(v)
-    }
-}
 
 /// Builder for [`ServingEngine`]; start from [`ServingEngine::builder`].
 pub struct ServingEngineBuilder {
@@ -201,7 +138,8 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// Prefill worker specs (PdDisaggregated only; defaults to one).
+    /// Prefill worker specs (prefill-capable modes: PdDisaggregated or
+    /// Transformerless; defaults to one).
     pub fn prefill_workers(mut self, specs: Vec<PrefillWorkerSpec>) -> Self {
         self.prefill_workers = specs;
         self
@@ -220,11 +158,13 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// §5.2 expert plane (MoeAttn only): the expert-shard worker specs and
-    /// the typed runtime knobs (layers, microbatches, calibrated timing).
-    /// MoeAttn mode without this gets a small default plane; the runtime's
-    /// `domains` is always overridden by [`Self::dp_domains`] so the
-    /// turnstile and the routing filter can never disagree.
+    /// §5.2 expert plane (expert-capable modes: MoeAttn or
+    /// Transformerless): the expert-shard worker specs and the typed
+    /// runtime knobs (layers, microbatches, calibrated timing). An
+    /// expert-capable mode without this gets a small default plane; the
+    /// runtime's `domains` is always overridden from [`Self::dp_domains`]
+    /// (plus the extra prefill domain in Transformerless) so the turnstile
+    /// and the routing filter can never disagree.
     pub fn expert_plane(mut self, workers: Vec<ExpertWorkerSpec>, runtime: MoeAttnRuntime) -> Self {
         self.expert_workers = workers;
         self.moe_attn_runtime = Some(runtime);
@@ -238,7 +178,8 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// DP domains for MoeAttn routing (§5.2); ignored by other modes.
+    /// Decode DP domains for expert-plane routing (§5.2); ignored by
+    /// modes without an expert attachment.
     pub fn dp_domains(mut self, domains: usize) -> Self {
         self.dp_domains = domains.max(1);
         self
@@ -251,27 +192,28 @@ impl ServingEngineBuilder {
         self
     }
 
-    /// Spawn the worker threads (and, per mode, the prefill or expert
-    /// plane) and assemble the engine.
+    /// Spawn the worker threads and the mode's plane attachments, and
+    /// assemble the engine. Validation is capability-driven
+    /// ([`AttachmentCaps::validate`]): plane inputs the mode cannot attach
+    /// are rejected by what the attachment set supports, not by a
+    /// per-mode bail list.
     pub fn spawn(self) -> Result<ServingEngine> {
         if self.groups.is_empty() {
             bail!("serving engine needs at least one decode DP group");
         }
-        if self.mode != DeploymentMode::PdDisaggregated && !self.prefill_workers.is_empty() {
-            bail!("prefill workers are only valid in DeploymentMode::PdDisaggregated");
-        }
-        if self.mode != DeploymentMode::MoeAttn
-            && (!self.expert_workers.is_empty()
+        let caps = AttachmentCaps::for_mode(self.mode);
+        caps.validate(
+            !self.prefill_workers.is_empty(),
+            !self.expert_workers.is_empty()
                 || self.moe_attn_runtime.is_some()
-                || self.expert_straggler.is_some())
-        {
-            bail!("an expert plane (and its straggler profile) is only valid in DeploymentMode::MoeAttn");
-        }
+                || self.expert_straggler.is_some(),
+        )?;
         if self.out_tx.is_some() && self.frontend.is_some() {
             bail!("choose one output wiring: raw shared sink OR per-group frontend plane");
         }
         let mut groups = self.groups;
         let n = groups.len();
+        let decode_domains = self.dp_domains.max(1);
         let straggler = self.straggler.unwrap_or_else(|| StragglerProfile::none(n));
         // §4.2 child-handler model: one output thread per decode group,
         // spawned before the workers so every group gets its sender.
@@ -284,28 +226,28 @@ impl ServingEngineBuilder {
             (None, Some(tx)) => OutputWiring::Shared(tx),
             (None, None) => OutputWiring::None,
         };
-        // §5.2 expert plane (MoeAttn): spawned before the decode workers,
-        // which are born holding exchange clients into it. Domains follow
-        // the routing convention (group_id % dp_domains), and the plane's
-        // turnstile is sized to the same dp_domains.
-        let expert = match self.mode {
-            DeploymentMode::MoeAttn => {
-                let mut rt_cfg = self.moe_attn_runtime.unwrap_or_default();
-                rt_cfg.domains = self.dp_domains.max(1);
-                for g in groups.iter_mut() {
-                    g.domain = g.id % rt_cfg.domains;
-                }
-                let specs = if self.expert_workers.is_empty() {
-                    vec![ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)]
-                } else {
-                    self.expert_workers
-                };
-                let strag = self
-                    .expert_straggler
-                    .unwrap_or_else(|| StragglerProfile::none(specs.len()));
-                Some(ExpertPlane::spawn(&specs, rt_cfg, strag)?)
+        // §5.2 expert attachment: spawned before the decode workers, which
+        // are born holding exchange clients into it. Decode groups keep
+        // the routing convention (group_id % decode_domains); the plane's
+        // turnstile is sized by the caps — decode_domains, plus one extra
+        // rotation slot when the prefill plane joins the exchange (§7.1).
+        let expert = if caps.expert {
+            let mut rt_cfg = self.moe_attn_runtime.unwrap_or_default();
+            rt_cfg.domains = caps.turnstile_domains(decode_domains);
+            for g in groups.iter_mut() {
+                g.domain = g.id % decode_domains;
             }
-            _ => None,
+            let specs = if self.expert_workers.is_empty() {
+                vec![ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)]
+            } else {
+                self.expert_workers
+            };
+            let strag = self
+                .expert_straggler
+                .unwrap_or_else(|| StragglerProfile::none(specs.len()));
+            Some(ExpertPlane::spawn(&specs, rt_cfg, strag)?)
+        } else {
+            None
         };
         let runtime = DecentralizedRuntime::spawn_ext(
             &groups,
@@ -314,28 +256,31 @@ impl ServingEngineBuilder {
             self.factory.clone(),
             expert.as_ref().map(|p| p.handle()),
         )?;
-        let prefill = match self.mode {
-            DeploymentMode::PdDisaggregated => {
-                let specs = if self.prefill_workers.is_empty() {
-                    vec![PrefillWorkerSpec::new(0)]
-                } else {
-                    self.prefill_workers
-                };
-                let factory = self.prefill_factory.unwrap_or(self.factory);
-                Some(PrefillPlane::spawn(&specs, factory, runtime.injector())?)
-            }
-            _ => None,
+        // Prefill attachment: in Transformerless the workers also get the
+        // expert plane's exchange handle plus the turnstile domain past
+        // the decode domains, so long-prompt exchanges rotate against the
+        // decode side.
+        let prefill = if caps.prefill {
+            let specs = if self.prefill_workers.is_empty() {
+                vec![PrefillWorkerSpec::new(0)]
+            } else {
+                self.prefill_workers
+            };
+            let factory = self.prefill_factory.unwrap_or(self.factory);
+            let exchange = caps
+                .prefill_domain(decode_domains)
+                .and_then(|dom| expert.as_ref().map(|p| (p.handle(), dom)));
+            Some(PrefillPlane::spawn_ext(&specs, factory, runtime.injector(), exchange)?)
+        } else {
+            None
         };
-        let shell = TeShell::from_serving(&self.serving).with_domains(match self.mode {
-            DeploymentMode::MoeAttn => self.dp_domains,
-            _ => 1,
-        });
+        let shell = TeShell::from_serving(&self.serving)
+            .with_domains(if caps.expert { decode_domains } else { 1 });
         Ok(ServingEngine {
             mode: self.mode,
             shell,
             runtime,
-            prefill,
-            expert,
+            planes: PlaneSet::new(prefill, expert, decode_domains, caps.fold_cross_plane_load),
             output_plane: plane,
             long_seq_threshold: self.long_seq_threshold,
             monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
@@ -345,16 +290,14 @@ impl ServingEngineBuilder {
 
 /// The unified serving front-end: one entry point over every deployment
 /// mode, wired onto the decentralized runtime. See the module docs for the
-/// mode semantics and `disagg::pd` for the PD handoff contract.
+/// attachment semantics and `disagg::pd` for the PD handoff contract.
 pub struct ServingEngine {
     mode: DeploymentMode,
     shell: TeShell,
     runtime: DecentralizedRuntime,
-    prefill: Option<PrefillPlane>,
-    /// §5.2 expert plane (MoeAttn mode); joined in `shutdown` after the
-    /// decode workers (which hold its channel senders) and before the
-    /// output plane.
-    expert: Option<ExpertPlane>,
+    /// The mode's plane attachments (prefill and/or expert), owning their
+    /// health-sweep, idle, and shutdown-ordering contracts.
+    planes: PlaneSet,
     /// Per-group output handlers (`builder.frontend(..)`); joined at the
     /// end of `shutdown`, after the decode workers.
     output_plane: Option<OutputPlane>,
@@ -388,23 +331,16 @@ impl ServingEngine {
         self.mode
     }
 
-    /// Run `f` with the shell and this mode's delivery backend — the one
-    /// place that decides which [`Dispatcher`] a deployment mode uses, so
+    /// Run `f` with the shell and the one [`PlaneDispatch`] delivery
+    /// backend — every attachment combination routes through it, so
     /// `submit` and `drain` can never diverge.
     fn with_dispatcher<R>(&mut self, f: impl FnOnce(&mut TeShell, &mut dyn Dispatcher) -> R) -> R {
-        match self.mode {
-            DeploymentMode::PdDisaggregated => {
-                let mut d = PdDispatch {
-                    runtime: &self.runtime,
-                    // invariant: PD construction always builds the prefill
-                    // plane before the engine is handed out
-                    plane: self.prefill.as_ref().expect("PD engine always has a plane"),
-                    long_seq_threshold: self.long_seq_threshold,
-                };
-                f(&mut self.shell, &mut d)
-            }
-            _ => f(&mut self.shell, &mut RuntimeDispatch(&self.runtime)),
-        }
+        let mut d = PlaneDispatch {
+            runtime: &self.runtime,
+            planes: &self.planes,
+            long_seq_threshold: self.long_seq_threshold,
+        };
+        f(&mut self.shell, &mut d)
     }
 
     /// Stamp an unset arrival time with the runtime clock (shared by
@@ -452,35 +388,32 @@ impl ServingEngine {
 
     /// §6.1 health sweep over the publish-epoch heartbeats: demotes groups
     /// whose pulse stalled past the configured bound and returns their
-    /// ids. Demotion is router-level and transient. In MoeAttn mode this
-    /// also runs the expert-side straggler sweep ([`Self::expert_sweep`]);
-    /// only the *decode* demotions are returned here.
+    /// ids. Demotion is router-level and transient. With an expert
+    /// attachment this also runs the expert-side straggler sweep
+    /// ([`Self::expert_sweep`]); only the *decode* demotions are returned
+    /// here.
     pub fn health_sweep(&mut self) -> Vec<usize> {
-        if self.expert.is_some() {
-            self.expert_sweep();
-        }
+        self.planes.sweep();
         self.runtime.demote_stalled(&mut self.monitor)
     }
 
     /// Expert-side straggler sweep (§5.2 straggler visibility): hard-demote
     /// expert workers whose published compute EWMA exceeds 3× the alive
     /// median and re-home their shards. Returns the demoted worker ids
-    /// (always empty outside MoeAttn mode).
+    /// (always empty without an expert attachment).
     pub fn expert_sweep(&mut self) -> Vec<usize> {
-        self.expert.as_ref().map_or_else(Vec::new, |p| p.straggler_sweep())
+        self.planes.sweep()
     }
 
-    /// EPLB trigger (§4.2 responsibility 2). When due in MoeAttn mode the
-    /// expert plane also runs its §4.5 replica tick off the collected
-    /// per-shard loads: coverage repair, replica grow/shrink within the
-    /// redundancy budget, and the residual hot→cold shard move
+    /// EPLB trigger (§4.2 responsibility 2). When due, an attached expert
+    /// plane also runs its §4.5 replica tick off the collected per-shard
+    /// loads: coverage repair, replica grow/shrink within the redundancy
+    /// budget, and the residual hot→cold shard move
     /// (`ExpertPlane::rebalance`).
     pub fn tick_eplb(&mut self) -> bool {
         let due = self.shell.tick_eplb();
         if due {
-            if let Some(p) = &self.expert {
-                p.rebalance();
-            }
+            self.planes.rebalance();
         }
         due
     }
@@ -502,16 +435,15 @@ impl ServingEngine {
     }
 
     /// Stale-tolerant: true when every group's last published snapshot
-    /// shows no pending work, nothing is parked, and (PD mode) no request
-    /// is still inside a prefill worker. The residual blind spot is a
-    /// message sitting in a decode inbox between its send and that
-    /// group's next publish — the same sub-tick staleness window every
-    /// colocated submission has — so pair with a settle delay or
-    /// re-check; [`Self::shutdown`] always drains that window.
+    /// shows no pending work, nothing is parked, and no attachment holds
+    /// in-flight work (e.g. a request still inside a prefill worker). The
+    /// residual blind spot is a message sitting in a decode inbox between
+    /// its send and that group's next publish — the same sub-tick
+    /// staleness window every colocated submission has — so pair with a
+    /// settle delay or re-check; [`Self::shutdown`] always drains that
+    /// window.
     pub fn all_idle(&self) -> bool {
-        self.runtime.all_idle()
-            && self.waiting() == 0
-            && self.prefill.as_ref().map_or(true, |p| p.inflight_total() == 0)
+        self.runtime.all_idle() && self.waiting() == 0 && self.planes.all_idle()
     }
 
     /// Routing views as the shell would see them (without credit folding).
@@ -525,10 +457,17 @@ impl ServingEngine {
         &self.runtime
     }
 
-    /// The §5.2 expert plane (MoeAttn mode only), for expert-board reads,
-    /// shard-placement inspection, and operator demotions.
+    /// The §5.2 expert plane (expert-capable modes only), for expert-board
+    /// reads, shard-placement inspection, and operator demotions.
     pub fn expert_plane(&self) -> Option<&ExpertPlane> {
-        self.expert.as_ref()
+        self.planes.expert_plane()
+    }
+
+    /// The §5.1 prefill plane (prefill-capable modes only), for placement
+    /// views, in-flight counters, and (Transformerless) the prefill-side
+    /// exchange stats.
+    pub fn prefill_plane(&self) -> Option<&PrefillPlane> {
+        self.planes.prefill_plane()
     }
 
     /// Nanoseconds on the runtime clock.
@@ -592,22 +531,16 @@ impl ServingEngine {
                 eprintln!("serving-engine: parked request {} lost all workers", r.id);
             }
         }
-        let Self { runtime, prefill, expert, output_plane, .. } = self;
+        let Self { runtime, mut planes, output_plane, .. } = self;
         // join the prefill plane first, but never skip the decode join on
         // a prefill error — served work must not be discarded
-        let prefill_result = match prefill {
-            Some(plane) => plane.shutdown().map(Some),
-            None => Ok(None),
-        };
+        let prefill_result = planes.shutdown_pre_decode();
         let groups = runtime.shutdown();
         // decode workers have exited (dropping their exchange clients), so
         // the expert plane's inboxes disconnect: join it now, after the
         // decode workers and before the output plane — but never skip the
         // output drain on an expert-side panic
-        let expert_result = match expert {
-            Some(plane) => plane.shutdown(),
-            None => Ok(()),
-        };
+        let expert_result = planes.shutdown_post_decode();
         // decode workers have exited, so every output event is queued:
         // dropping the plane now joins each per-group handler after it
         // drains, then the frontend sink disconnects
@@ -837,6 +770,91 @@ mod tests {
             .expert_plane(vec![ExpertWorkerSpec::new(0)], MoeAttnRuntime::default())
             .spawn();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn attachment_capabilities_gate_plane_inputs() {
+        // capability-driven rejection across modes: PD has no expert
+        // attachment, MoeAttn has no prefill attachment, Transformerless
+        // has both.
+        let err = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .expert_plane(vec![ExpertWorkerSpec::new(0)], MoeAttnRuntime::default())
+            .spawn();
+        assert!(err.is_err(), "PD mode cannot attach an expert plane");
+        let err = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .prefill_workers(vec![PrefillWorkerSpec::new(0)])
+            .spawn();
+        assert!(err.is_err(), "MoeAttn mode cannot attach a prefill plane");
+        let engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+            .groups_uniform(1, 4, 64)
+            .prefill_workers(vec![PrefillWorkerSpec::new(0)])
+            .expert_plane(
+                vec![ExpertWorkerSpec::new(0)],
+                MoeAttnRuntime { time_scale: 256, ..Default::default() },
+            )
+            .spawn()
+            .unwrap();
+        assert!(engine.prefill_plane().is_some());
+        assert!(engine.expert_plane().is_some());
+        engine.shutdown().unwrap();
+    }
+
+    #[test]
+    fn transformerless_mode_runs_both_planes_end_to_end() {
+        // §7.1 composition: prefill workers hand KV into MoeAttn decode
+        // groups AND run their own long-prompt exchanges on the expert
+        // plane (prompt len 2 ≥ microbatches 2), while decode ticks keep
+        // their per-layer exchanges — all on one turnstile sized
+        // decode_domains + 1.
+        let rt_cfg = MoeAttnRuntime {
+            layers: 2,
+            time_scale: 256, // sub-µs injected costs
+            ..Default::default()
+        };
+        let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+            .groups_uniform(2, 4, 256)
+            .dp_domains(2)
+            .prefill_workers(vec![PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)])
+            .expert_plane(
+                vec![ExpertWorkerSpec::new(0), ExpertWorkerSpec::new(1)],
+                rt_cfg,
+            )
+            .spawn()
+            .unwrap();
+        for i in 0..6u64 {
+            engine.submit(req(i, 4)).unwrap();
+            engine.drain();
+        }
+        engine.settle(Duration::from_secs(20)).unwrap();
+        let plane = engine.expert_plane().expect("engine owns an expert plane");
+        assert_eq!(plane.domain_violations(), 0, "one domain at a time across planes");
+        let pstats = engine
+            .prefill_plane()
+            .expect("engine owns a prefill plane")
+            .exchange_stats()
+            .expect("Transformerless prefill plane tracks exchange stats");
+        assert!(pstats.iterations >= 6, "every long prompt exchanged on the plane");
+        assert!(pstats.dispatches > 0);
+        let groups = engine.shutdown().unwrap();
+        let mut exchanged = 0u64;
+        for g in &groups {
+            assert_eq!(g.exchange.integrity_failures, 0);
+            exchanged += g.exchange.dispatches;
+        }
+        assert!(exchanged > 0, "decode ticks must also have exchanged");
+        let finished: Vec<&ServeRequest> =
+            groups.iter().flat_map(|g| g.finished.iter()).collect();
+        assert_eq!(finished.len(), 6);
+        for r in finished {
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(r.generated.len(), 4);
+            // the PD handoff fingerprint survives the composition
+            assert!(r.timing.prefill_done_ns > 0);
+            assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+            assert!(r.timing.kv_wire_bytes > 0, "KV crossed the codec wire path");
+        }
     }
 
     #[test]

@@ -8,11 +8,14 @@
 //!
 //! The shell is pure *routing policy*: one [`TeShell::submit`] path routes
 //! over any [`Dispatcher`] backend — synchronous colocated groups, the
-//! decentralized worker runtime, or the PD prefill plane — folding its
-//! stale-tolerant sent-since-epoch credits over whatever views the backend
-//! provides, enforcing `serving.dp_queue_limit` and KV-size-aware
-//! admission, and applying straggler-aware (§4.4) and domain-aware (§5.2)
-//! selection.
+//! decentralized worker runtime, or the engine's
+//! [`crate::coordinator::plane::PlaneDispatch`] over its plane
+//! attachments (whose views fold prefill in-flight and, in
+//! Transformerless, expert pipeline depth into the per-group load) —
+//! folding its stale-tolerant sent-since-epoch credits over whatever views
+//! the backend provides, enforcing `serving.dp_queue_limit` and
+//! KV-size-aware admission, and applying straggler-aware (§4.4) and
+//! domain-aware (§5.2) selection.
 //!
 //! **Routing cost is O(d), not O(N).** When the backend supports O(1)
 //! slot reads (`Dispatcher::view_slot` — seqlock board reads for the

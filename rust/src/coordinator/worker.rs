@@ -8,8 +8,9 @@
 //! board snapshots (`TeShell::submit` over a `dispatch::Dispatcher`), and
 //! the only signal back is the board publish itself, whose epoch doubles
 //! as the group's heartbeat pulse
-//! (`reliability::heartbeat::GroupPulseMonitor`). In PD-disaggregated
-//! mode, prefill workers reach the same inboxes through an [`Injector`]
+//! (`reliability::heartbeat::GroupPulseMonitor`). With a prefill
+//! attachment (PD-disaggregated or Transformerless), prefill workers
+//! reach the same inboxes through an [`Injector`]
 //! (`InboxMsg::InjectPrefilled` — the §5.1 step-8 cross-thread KV
 //! handoff).
 //!

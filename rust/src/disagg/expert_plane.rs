@@ -52,7 +52,13 @@
 //! into DP domains; a [`DomainTurnstile`] admits only one domain's groups
 //! into the expert pool at a time (per-layer granularity), while the
 //! *other* domains compute attention outside the permit — the §5.2
-//! inter-DP overlap. Within the active domain, the client hides microbatch
+//! inter-DP overlap. Clients are not decode-only: in Transformerless
+//! (§7.1) the prefill plane builds its own [`ExchangeClient`]s on an
+//! extra turnstile domain, so long-prompt prefill exchanges rotate
+//! against the decode domains under the same contract, and the routing
+//! layer reads the per-domain pipeline depth gauge
+//! ([`ExpertPlane::domain_depth`]) to fold expert-plane pressure into
+//! decode-group selection. Within the active domain, the client hides microbatch
 //! A's dispatch→expert→combine round trip behind microbatch B's attention
 //! compute (intra-DP overlap); [`ExchangeStats`] records the exposed
 //! (blocked-waiting) versus hidden share of the round-trip wall time.
@@ -515,6 +521,13 @@ struct PlaneShared {
     board: StatusBoard,
     /// Slices inside each worker's recv→compute→send pipeline.
     depth: Vec<AtomicUsize>,
+    /// Slices inside the plane's pipelines per turnstile domain — the
+    /// cross-plane load signal the Transformerless router folds into its
+    /// power-of-two-choices view (a decode domain whose expert exchanges
+    /// are deep is a worse place to land a request than its board-level
+    /// status alone suggests). Lock-free on purpose: the routing fast
+    /// path reads it, so it cannot share the occupancy mutex.
+    domain_depth: Vec<AtomicUsize>,
     /// One-domain-at-a-time cross-check: `(domain, entrants)` of the pool
     /// occupancy. A mutex, not atomics: the check must observe domain and
     /// count together, or two same-domain slices racing the first entry
@@ -774,6 +787,24 @@ impl ExchangeStats {
             self.exposed_ns / self.iterations
         }
     }
+
+    /// Fold another accounting into this one — how the prefill plane
+    /// aggregates its per-job exchange stats into one plane-wide view.
+    pub fn merge(&mut self, other: &ExchangeStats) {
+        self.iterations += other.iterations;
+        self.layers_run += other.layers_run;
+        self.dispatches += other.dispatches;
+        self.exposed_ns += other.exposed_ns;
+        self.roundtrip_ns += other.roundtrip_ns;
+        self.model_a2e_ns += other.model_a2e_ns;
+        self.model_moe_ns += other.model_moe_ns;
+        self.model_e2a_ns += other.model_e2a_ns;
+        self.integrity_failures += other.integrity_failures;
+        self.redispatches += other.redispatches;
+        self.fallback_slices += other.fallback_slices;
+        self.carries += other.carries;
+        self.carried_ns += other.carried_ns;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -838,6 +869,13 @@ pub struct ExchangeClient {
 }
 
 impl ExchangeClient {
+    /// Microbatches per iteration this client splits its rows into — the
+    /// prefill plane uses it as the "long prompt" threshold (a prompt
+    /// shorter than one microbatch per split has nothing to overlap).
+    pub fn microbatches(&self) -> usize {
+        self.cfg.microbatches.max(1)
+    }
+
     /// One decode iteration's worth of per-layer A2E/E2A exchanges over
     /// the running batch's activation rows, with microbatch overlap:
     /// microbatch A's round trip hides behind microbatch B's attention
@@ -1210,6 +1248,7 @@ impl ExpertPlane {
             alive: specs.iter().map(|_| AtomicBool::new(true)).collect(),
             board: StatusBoard::new(initial),
             depth: specs.iter().map(|_| AtomicUsize::new(0)).collect(),
+            domain_depth: (0..cfg.domains.max(1)).map(|_| AtomicUsize::new(0)).collect(),
             occupancy: named_mutex("expert_plane.occupancy", (usize::MAX, 0)),
             domain_violations: AtomicUsize::new(0),
             worker_ids: specs.iter().map(|s| s.id).collect(),
@@ -1240,6 +1279,13 @@ impl ExpertPlane {
                         // no other memory is ordered against it, and
                         // publish tolerates a ±1-stale value by design
                         sh.depth[slot].fetch_add(1, Ordering::Relaxed);
+                        // Relaxed: same gauge contract as `depth` — the
+                        // router folds it as a load *hint* where staleness
+                        // is priced in. Balanced by the send stage; a slice
+                        // dropped by a mid-pipeline crash leaks at most the
+                        // pipeline depth at death, biasing a hint only.
+                        sh.domain_depth[msg.domain % sh.domain_depth.len()]
+                            .fetch_add(1, Ordering::Relaxed);
                         sh.pool_enter(msg.domain);
                         busy_wait_ns(msg.a2e_ns);
                         accepted += 1;
@@ -1301,6 +1347,8 @@ impl ExpertPlane {
                         // Relaxed: see the recv stage's fetch_add — the
                         // gauge orders nothing, RMWs never lose counts
                         sh.depth[slot].fetch_sub(1, Ordering::Relaxed);
+                        sh.domain_depth[msg.domain % sh.domain_depth.len()]
+                            .fetch_sub(1, Ordering::Relaxed);
                         // exit the pool before replying, so a client that
                         // releases its domain permit on this combine can
                         // never race a stale entrant count
@@ -1400,6 +1448,23 @@ impl ExpertPlane {
     /// many owner sets changed.
     pub fn repair_coverage(&self) -> usize {
         self.shared.repair_coverage()
+    }
+
+    /// Slices currently inside the plane's pipelines for one turnstile
+    /// domain — the cross-plane load signal the Transformerless dispatch
+    /// path folds into routing scores. Lock-free (one relaxed load): this
+    /// is read from the routing fast path.
+    // xds:hot
+    pub fn domain_depth(&self, domain: usize) -> usize {
+        // Relaxed: load-balancing hint; staleness is priced in (same
+        // contract as the per-worker `depth` gauge)
+        self.shared.domain_depth[domain % self.shared.domain_depth.len()]
+            .load(Ordering::Relaxed)
+    }
+
+    /// Number of turnstile domains the plane was spawned with.
+    pub fn n_domains(&self) -> usize {
+        self.turnstile.n_domains()
     }
 
     /// §5.2 contract cross-check: slices observed in the pool from two
@@ -2155,6 +2220,7 @@ mod model_tests {
             alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
             board: StatusBoard::new(initial),
             depth: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            domain_depth: (0..2).map(|_| AtomicUsize::new(0)).collect(),
             occupancy: named_mutex("expert_plane.occupancy", (usize::MAX, 0)),
             domain_violations: AtomicUsize::new(0),
             worker_ids: (0..n).collect(),

@@ -24,6 +24,12 @@
 //!   the seam), §4.5 replica-owned shards (rotation across live
 //!   replicas, EPLB-driven grow/shrink, degrade-on-crash), and
 //!   one-domain-at-a-time turn-taking (`DeploymentMode::MoeAttn`).
+//!
+//! `DeploymentMode::Transformerless` (§7.1) composes both live planes on
+//! one engine: prefill workers build their own [`ExchangeClient`] and run
+//! per-layer A2E/E2A exchanges for long prompts on an extra turnstile
+//! domain (rotating against the decode DP domains), then hand the KV into
+//! the MoeAttn-mode decode groups through the §4.7 codec wire path.
 
 pub mod pd;
 pub mod moe_attn;

@@ -16,9 +16,19 @@
 //!         prefill, §5.1 heterogeneous deployment).
 //! Step 8: both sides poll completions; prefill frees blocks, decode
 //!         enqueues the request for computation.
+//!
+//! Under `DeploymentMode::Transformerless` (§7.1) the prefill side is
+//! additionally *attached to the expert plane*: each worker builds its own
+//! [`ExchangeClient`] on the dedicated prefill turnstile domain (decode
+//! domains `0..D`, prefill at `D`), and any prompt at least one microbatch
+//! long runs real per-layer A2E/E2A exchanges against the shared expert
+//! pool before its KV crosses the codec wire path into a decode group.
+//! Per-job stats merge into one plane-wide [`ExchangeStats`] under the
+//! `pd.exchange_stats` lock class (flat hierarchy: never held together
+//! with any other lock).
 
 use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use crate::sync::{mpsc, Arc};
+use crate::sync::{mpsc, named_mutex, Arc, Mutex};
 use std::thread;
 
 use anyhow::{anyhow, bail, Result};
@@ -28,6 +38,7 @@ use crate::coordinator::decode_sched::{choose_group, GroupStatus};
 use crate::coordinator::dp_group::PrefilledSeq;
 use crate::coordinator::request::{RequestState, ServeRequest};
 use crate::coordinator::worker::{Injector, ModelFactory};
+use crate::disagg::expert_plane::{row_bytes, ExchangeClient, ExchangeHandle, ExchangeStats};
 use crate::distflow::{DistFlow, TransferTask};
 use crate::fabric::memory::GlobalMemory;
 use crate::fabric::topology::{DieId, Topology};
@@ -317,6 +328,11 @@ pub struct PrefillPlane {
     /// Kept for slot mapping symmetry with the workers (and it keeps the
     /// decode inboxes alive for the plane's whole lifetime).
     injector: Injector,
+    /// Plane-wide prefill-side A2E/E2A exchange stats (Transformerless
+    /// only; `None` when spawned without an expert attachment). Lock class
+    /// `pd.exchange_stats` — taken per finished job with no other lock
+    /// held, so the lockdep hierarchy stays flat.
+    exchange_stats: Option<Arc<Mutex<ExchangeStats>>>,
 }
 
 impl PrefillPlane {
@@ -327,6 +343,23 @@ impl PrefillPlane {
         specs: &[PrefillWorkerSpec],
         factory: ModelFactory,
         injector: Injector,
+    ) -> Result<Self> {
+        Self::spawn_ext(specs, factory, injector, None)
+    }
+
+    /// [`Self::spawn`] with an optional expert-plane attachment
+    /// (Transformerless, §7.1): `exchange` carries the plane's
+    /// [`ExchangeHandle`] plus the turnstile domain reserved for prefill
+    /// (always `decode_domains`, one past the decode groups' domains, so
+    /// prefill exchanges rotate *against* decode exchanges instead of
+    /// piggybacking on one decode domain's turn). Each worker thread
+    /// builds its own [`ExchangeClient`] from the handle, same as the
+    /// decode workers do.
+    pub fn spawn_ext(
+        specs: &[PrefillWorkerSpec],
+        factory: ModelFactory,
+        injector: Injector,
+        exchange: Option<(ExchangeHandle, usize)>,
     ) -> Result<Self> {
         if specs.is_empty() {
             bail!("prefill plane needs at least one worker");
@@ -342,6 +375,9 @@ impl PrefillPlane {
             Arc::new((0..injector.n_groups()).map(|_| AtomicUsize::new(0)).collect());
         let alive: Arc<Vec<AtomicBool>> =
             Arc::new(specs.iter().map(|_| AtomicBool::new(true)).collect());
+        let exchange_stats = exchange
+            .as_ref()
+            .map(|_| Arc::new(named_mutex("pd.exchange_stats", ExchangeStats::default())));
         let mut handles = Vec::with_capacity(specs.len());
         for (slot, spec) in specs.iter().enumerate() {
             let (tx, rx) = mpsc::channel::<PrefillJob>();
@@ -350,6 +386,13 @@ impl PrefillPlane {
             let load_w = Arc::clone(&load_tokens);
             let inflight_w = Arc::clone(&inflight);
             let alive_w = Arc::clone(&alive);
+            // Per-worker exchange client on the prefill domain; worker ids
+            // double as client group ids (only used for replica-rotation
+            // stagger and plane bookkeeping, so overlap with decode group
+            // ids is harmless).
+            let client: Option<ExchangeClient> =
+                exchange.as_ref().map(|(h, dom)| h.client(spec.id, *dom));
+            let stats_w = exchange_stats.as_ref().map(Arc::clone);
             let id = spec.id;
             let join = thread::Builder::new()
                 .name(format!("pd-prefill-{id}"))
@@ -381,6 +424,7 @@ impl PrefillPlane {
                             &load_w,
                             &inflight_w,
                             &fabric,
+                            client.as_ref().zip(stats_w.as_deref()),
                             &mut orphans,
                         );
                     }
@@ -389,7 +433,15 @@ impl PrefillPlane {
                 .map_err(|e| anyhow!("spawning pd-prefill-{id} thread: {e}"))?;
             handles.push(PrefillHandle { id, tx, join });
         }
-        Ok(Self { handles, specs: specs.to_vec(), load_tokens, inflight, alive, injector })
+        Ok(Self {
+            handles,
+            specs: specs.to_vec(),
+            load_tokens,
+            inflight,
+            alive,
+            injector,
+            exchange_stats,
+        })
     }
 
     pub fn n_workers(&self) -> usize {
@@ -426,6 +478,16 @@ impl PrefillPlane {
     /// the plane's contribution to engine-level idleness checks.
     pub fn inflight_total(&self) -> usize {
         self.inflight.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Snapshot of the plane-wide prefill-side A2E/E2A exchange stats;
+    /// `None` when the plane was spawned without an expert attachment
+    /// (every mode but Transformerless).
+    pub fn exchange_stats(&self) -> Option<ExchangeStats> {
+        // invariant: pd.exchange_stats is only ever taken briefly to merge
+        // or snapshot; a poisoned lock means a worker panicked mid-merge,
+        // which shutdown() surfaces as its own error
+        self.exchange_stats.as_ref().map(|m| *m.lock().unwrap())
     }
 
     /// Hand a job to prefill worker `te_id`. On failure (worker exited)
@@ -515,6 +577,12 @@ fn deliver_with_fallback<T>(
 /// group's inbox (or report the failure there so the stream still
 /// terminates). A request only becomes an orphan when *every* decode
 /// worker has exited.
+///
+/// With an `exchange` attachment (Transformerless), a successfully
+/// prefilled prompt at least one microbatch long additionally runs one
+/// iteration of per-layer A2E/E2A exchanges on the expert plane — on the
+/// prefill turnstile domain, rotating against the decode domains — before
+/// the KV handoff, and merges its stats into the plane-wide accumulator.
 #[allow(clippy::too_many_arguments)]
 fn run_prefill_job(
     job: PrefillJob,
@@ -524,6 +592,7 @@ fn run_prefill_job(
     load: &[AtomicU64],
     inflight: &[AtomicUsize],
     fabric: &FabricParams,
+    exchange: Option<(&ExchangeClient, &Mutex<ExchangeStats>)>,
     orphans: &mut Vec<ServeRequest>,
 ) {
     let PrefillJob { mut req, decode_group } = job;
@@ -548,6 +617,26 @@ fn run_prefill_job(
     };
     let outcome = match prefilled {
         Ok((pf, first, kv, wire_bytes)) => {
+            // §7.1 long-prompt exchange: one activation row per prompt
+            // token (capped to bound per-job cost on huge prompts), only
+            // when the prompt fills at least one microbatch — shorter
+            // prompts have nothing to overlap and skip the turnstile.
+            if let Some((client, shared_stats)) = exchange {
+                if req.prompt_tokens.len() >= client.microbatches() {
+                    let rows: Vec<Vec<u8>> = req
+                        .prompt_tokens
+                        .iter()
+                        .take(64)
+                        .map(|t| row_bytes(&[*t as f32]))
+                        .collect();
+                    let mut local = ExchangeStats::default();
+                    client.run_iteration(&rows, &mut local);
+                    // invariant: pd.exchange_stats is leaf-level (flat
+                    // hierarchy, no other lock held); poisoning implies a
+                    // panicked sibling worker, surfaced by shutdown()
+                    shared_stats.lock().unwrap().merge(&local);
+                }
+            }
             req.state = RequestState::AwaitingTransfer;
             req.timing.kv_wire_bytes = wire_bytes;
             req.timing.kv_wire_ns = fabric.dma_transfer_ns(wire_bytes as usize);

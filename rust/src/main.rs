@@ -9,10 +9,14 @@
 //!
 //! Examples:
 //!   xdeepserve serve --requests 8 --max-new 24 --mtp 1
-//!   xdeepserve serve --pd --prefill-workers 2      (PD-disaggregated)
-//!   xdeepserve serve --config deploy.toml          (deployment.mode from file)
+//!   xdeepserve serve --mode pd --prefill-workers 2   (PD-disaggregated)
+//!   xdeepserve serve --mode transformerless          (both planes, §7.1)
+//!   xdeepserve serve --config deploy.toml            (deployment.mode from file)
 //!   xdeepserve simulate --preset disagg_768 --seq 3000
 //!   xdeepserve inspect --artifacts artifacts
+//!
+//! `--mode {colocated,pd,moe_attn,transformerless}` overrides the config
+//! file's `deployment.mode`; `--pd` is a deprecated alias for `--mode pd`.
 
 use xdeepserve::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -21,7 +25,9 @@ use anyhow::Result;
 
 use xdeepserve::config::{Config, DeploymentConfig, DeploymentMode};
 use xdeepserve::coordinator::output::FrontendMsg;
-use xdeepserve::coordinator::{engine_model_factory, GroupSpec, ServeRequest, ServingEngine};
+use xdeepserve::coordinator::{
+    engine_model_factory, AttachmentCaps, GroupSpec, ServeRequest, ServingEngine,
+};
 use xdeepserve::disagg::{DisaggDeployment, ExpertWorkerSpec, MoeAttnRuntime, PrefillWorkerSpec};
 use xdeepserve::model::Tokenizer;
 use xdeepserve::metrics::ServingMetrics;
@@ -52,19 +58,26 @@ fn serve(args: &Args) -> Result<()> {
     let n_groups = args.get_usize("dp-groups", 2);
     let mtp = args.get_usize("mtp", 1) > 0;
     let int8 = args.has_flag("int8");
-    let prefill_workers = args.get_usize("prefill-workers", 2);
 
-    // deployment mode: config file first (`deployment.mode`), `--pd`
-    // overrides for quick experiments
+    // deployment mode: config file first (`deployment.mode`), `--mode`
+    // overrides for quick experiments (`--pd` is the deprecated spelling
+    // of `--mode pd`)
     let cfg = match args.get("config") {
         Some(path) => Config::from_file(path)?,
         None => Config::default(),
     };
-    let mode = if args.has_flag("pd") {
-        DeploymentMode::PdDisaggregated
-    } else {
-        cfg.deployment.mode
+    let mode = match args.get("mode") {
+        Some(m) => parse_mode_flag(m)?,
+        None if args.has_flag("pd") => {
+            eprintln!("warning: --pd is deprecated, use --mode pd");
+            DeploymentMode::PdDisaggregated
+        }
+        None => cfg.deployment.mode,
     };
+    let prefill_workers = args.get_usize(
+        "prefill-workers",
+        if cfg.deployment.prefill_workers > 0 { cfg.deployment.prefill_workers } else { 2 },
+    );
 
     println!("loading artifacts from {artifacts}/ ...");
     let engine = Engine::load(&artifacts)?;
@@ -87,25 +100,30 @@ fn serve(args: &Args) -> Result<()> {
             s
         })
         .collect();
-    // MoeAttn mode takes its domain partition from the typed [moe_attn]
-    // config (which defaults to deployment.dp_domains); domains can't
-    // outnumber the CLI-selected group count
-    let domains = if mode == DeploymentMode::MoeAttn {
-        cfg.moe_attn.domains
-    } else {
-        cfg.deployment.dp_domains
+    // Decode DP domains: MoeAttn takes its partition from the typed
+    // [moe_attn] config (which defaults to deployment.dp_domains);
+    // Transformerless uses deployment.dp_domains directly, since
+    // moe_attn.domains there is the *turnstile* size (decode + prefill)
+    // and the builder derives it from the attachment caps. Domains can't
+    // outnumber the CLI-selected group count.
+    let domains = match mode {
+        DeploymentMode::MoeAttn => cfg.moe_attn.domains,
+        _ => cfg.deployment.dp_domains,
     }
     .min(n_groups.max(1));
+    // plane attachments follow the mode's capability set — the same
+    // mapping the engine builder validates against
+    let caps = AttachmentCaps::for_mode(mode);
     let mut builder = ServingEngine::builder(mode, factory)
         .serving(cfg.serving.clone())
         .groups(specs)
         .dp_domains(domains)
         .frontend(tokenizer.clone(), sink_tx);
-    if mode == DeploymentMode::PdDisaggregated {
+    if caps.prefill {
         builder = builder
-            .prefill_workers((0..prefill_workers).map(PrefillWorkerSpec::new).collect());
+            .prefill_workers((0..prefill_workers.max(1)).map(PrefillWorkerSpec::new).collect());
     }
-    if mode == DeploymentMode::MoeAttn {
+    if caps.expert {
         // §5.2 live expert plane from the typed [moe_attn] config
         builder = builder.expert_plane(
             (0..cfg.moe_attn.expert_workers).map(ExpertWorkerSpec::new).collect(),
@@ -158,6 +176,19 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse the `--mode` override; the error enumerates every valid string.
+fn parse_mode_flag(s: &str) -> Result<DeploymentMode> {
+    Ok(match s {
+        "colocated" => DeploymentMode::Colocated,
+        "pd" => DeploymentMode::PdDisaggregated,
+        "moe_attn" => DeploymentMode::MoeAttn,
+        "transformerless" => DeploymentMode::Transformerless,
+        other => anyhow::bail!(
+            "unknown --mode {other:?} (valid modes: colocated, pd, moe_attn, transformerless)"
+        ),
+    })
 }
 
 fn simulate(args: &Args) -> Result<()> {

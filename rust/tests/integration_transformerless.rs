@@ -1,0 +1,290 @@
+//! End-to-end and seeded-chaos coverage for the fully-disaggregated
+//! Transformerless deployment (§7.1): a threaded prefill plane, MoeAttn
+//! decode DP groups, and an expert plane all live at once, composed as
+//! plane attachments on one `ServingEngine`.
+//!
+//! Invariants locked down here:
+//! * N prefill × M decode × K expert serves end-to-end **bit-exact**: the
+//!   generated token streams match a colocated reference run of the same
+//!   requests, every KV handoff crosses the codec wire path
+//!   (`kv_wire_bytes > 0`, prefill stamped before the first token), every
+//!   long prompt runs real A2E/E2A exchanges on the prefill turnstile
+//!   domain, and every decode-side combine stays bit-exact
+//!   (`integrity_failures == 0`);
+//! * the one-domain-at-a-time contract survives the prefill plane joining
+//!   the rotation (`domain_violations == 0`);
+//! * dual-plane chaos — one prefill worker crash AND one expert worker
+//!   crash in the same seeded run — never hangs or corrupts: every
+//!   accepted stream terminates Done/Failed, coverage repair restores
+//!   shard serviceability, and the turnstile contract holds throughout.
+//!
+//! CI runs this file across the same seed matrix as the MoeAttn chaos
+//! layer via `XDS_CHAOS_SEED`.
+
+use xdeepserve::sync::Arc;
+use std::collections::HashMap;
+use std::thread;
+use std::time::Duration;
+
+use xdeepserve::config::DeploymentMode;
+use xdeepserve::coordinator::worker::ModelFactory;
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
+use xdeepserve::disagg::expert_plane::ExchangeStats;
+use xdeepserve::disagg::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime, PrefillWorkerSpec};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::util::rng::Rng;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("XDS_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC4A0_5EED)
+}
+
+/// Deterministic request set shared by the Transformerless run and its
+/// colocated reference: prompt lengths ≥ 2 so every prompt fills at least
+/// one microbatch (microbatches = 2) and exchanges on the prefill domain.
+fn requests(n: u64) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| {
+            let len = 2 + (i % 3) as usize;
+            let prompt: Vec<i32> =
+                std::iter::once(256).chain((0..len - 1).map(|k| 97 + ((i as usize + k) % 26) as i32)).collect();
+            ServeRequest::new(i, prompt, 4 + (i % 3) as usize, 0)
+        })
+        .collect()
+}
+
+/// Same retry-the-repair coverage check as the MoeAttn chaos layer: while
+/// any expert worker lives, repair must restore ≥ 1 live replica per shard.
+fn assert_coverage(plane: &ExpertPlane, seed: u64, at: &str) {
+    for _ in 0..8 {
+        plane.repair_coverage();
+        if plane.alive_workers() == 0 {
+            return;
+        }
+        if plane.shard_replicas().iter().all(|&k| k >= 1) {
+            return;
+        }
+    }
+    panic!(
+        "seed {seed:#x} at {at}: repair left a shard without a live replica \
+         while {} worker(s) alive: {:?} / owners {:?}",
+        plane.alive_workers(),
+        plane.shard_replicas(),
+        plane.shard_owners()
+    );
+}
+
+/// 2 prefill × 4 decode (2 domains) × 3 expert workers, end to end, with
+/// the generated streams compared bit-for-bit against a colocated
+/// reference run of the exact same requests.
+#[test]
+fn transformerless_serves_bit_exact_across_three_planes() {
+    const N: u64 = 12;
+    // colocated reference: same deterministic SimModel, same requests
+    let mut reference = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups_uniform(2, 4, 256)
+        .spawn()
+        .unwrap();
+    for r in requests(N) {
+        reference.submit(r).unwrap();
+        reference.drain();
+    }
+    reference.settle(Duration::from_secs(30)).unwrap();
+    let expected: HashMap<u64, Vec<i32>> = reference
+        .shutdown()
+        .unwrap()
+        .iter()
+        .flat_map(|g| g.finished.iter())
+        .map(|r| (r.id, r.generated.clone()))
+        .collect();
+    assert_eq!(expected.len(), N as usize);
+
+    let rt = MoeAttnRuntime {
+        layers: 2,
+        microbatches: 2,
+        time_scale: 256,
+        ..Default::default()
+    };
+    let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+        .groups_uniform(4, 4, 256)
+        .dp_domains(2)
+        .prefill_workers(vec![PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)])
+        .expert_plane(
+            vec![
+                ExpertWorkerSpec::new(0),
+                ExpertWorkerSpec::new(1),
+                ExpertWorkerSpec::new(2),
+            ],
+            rt,
+        )
+        .spawn()
+        .unwrap();
+    for r in requests(N) {
+        engine.submit(r).unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(60)).unwrap();
+
+    let plane = engine.expert_plane().expect("expert attachment present");
+    assert_eq!(plane.domain_violations(), 0, "prefill domain broke the turnstile");
+    let pstats = engine
+        .prefill_plane()
+        .expect("prefill attachment present")
+        .exchange_stats()
+        .expect("Transformerless prefill plane tracks exchange stats");
+    assert_eq!(pstats.iterations, N, "every long prompt exchanged on the expert plane");
+    assert!(pstats.dispatches > 0);
+    assert_eq!(pstats.integrity_failures, 0, "prefill-side combines bit-exact");
+
+    let groups = engine.shutdown().unwrap();
+    let mut decode_exchanges = 0u64;
+    let mut seen = 0usize;
+    for g in &groups {
+        assert_eq!(g.exchange.integrity_failures, 0, "decode-side combines bit-exact");
+        decode_exchanges += g.exchange.dispatches;
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(
+                &r.generated,
+                expected.get(&r.id).expect("request served by the reference run"),
+                "request {} diverged from the colocated reference",
+                r.id
+            );
+            assert!(r.timing.prefill_done_ns > 0, "prefill stamped on the plane");
+            assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
+            assert!(r.timing.kv_wire_bytes > 0, "KV crossed the codec wire path");
+            assert!(r.timing.kv_wire_ns > 0);
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, N as usize);
+    assert!(decode_exchanges > 0, "decode ticks exchanged per layer");
+}
+
+/// Dual-plane seeded chaos: one prefill worker's backend dies at init
+/// (retired from placement; jobs routed there fail cleanly) AND one
+/// expert worker crashes mid-run, while the driver fires sweeps and EPLB
+/// ticks from the same seeded schedule. Nothing may hang, no combine may
+/// corrupt, no domain may overlap, and repair must keep shard coverage.
+#[test]
+fn chaos_dual_plane_crashes_never_hang_or_corrupt() {
+    let seed = chaos_seed() ^ 0x7F4A_7C15;
+    let mut rng = Rng::new(seed);
+    const WORKERS: usize = 3;
+    let fail_at = 3 + rng.index(10);
+    let expert_specs: Vec<ExpertWorkerSpec> = (0..WORKERS)
+        .map(|w| {
+            if w == 1 {
+                ExpertWorkerSpec::failing(1, fail_at)
+            } else {
+                ExpertWorkerSpec::new(w)
+            }
+        })
+        .collect();
+    // prefill worker 0's backend errs at init: the thread survives to
+    // drain its inbox (jobs fail with their Finished events) but is
+    // retired from placement — the prefill-plane crash mode that keeps
+    // shutdown clean enough to assert on every stream.
+    let prefill_factory: ModelFactory = Arc::new(|id| {
+        if id == 0 {
+            anyhow::bail!("chaos: prefill backend down");
+        }
+        Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>)
+    });
+    let rt = MoeAttnRuntime {
+        layers: 3,
+        microbatches: 2,
+        time_scale: 64,
+        ..Default::default()
+    };
+    let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+        .groups_uniform(4, 4, 256)
+        .dp_domains(2)
+        .prefill_workers(vec![PrefillWorkerSpec::new(0), PrefillWorkerSpec::new(1)])
+        .prefill_factory(prefill_factory)
+        .expert_plane(expert_specs, rt)
+        .expert_straggler(
+            StragglerProfile::with_slow_group(WORKERS, 100_000, 0, 6.0).with_jitter(0.3, seed),
+        )
+        .spawn()
+        .unwrap();
+    engine.set_eplb_interval(4);
+
+    let mut submitted = 0u64;
+    for step in 0..12 {
+        for _ in 0..1 + rng.index(3) {
+            let len = 2 + rng.index(3);
+            let prompt: Vec<i32> = std::iter::once(256)
+                .chain((0..len - 1).map(|k| 97 + ((submitted as usize + k) % 26) as i32))
+                .collect();
+            engine
+                .submit(ServeRequest::new(submitted, prompt, 3 + rng.index(4), 0))
+                .unwrap();
+            submitted += 1;
+        }
+        engine.drain();
+        match rng.index(4) {
+            0 => {
+                engine.expert_sweep();
+            }
+            1 => {
+                engine.expert_plane().unwrap().rebalance();
+            }
+            2 => {
+                engine.tick_eplb();
+            }
+            _ => {}
+        }
+        assert_coverage(engine.expert_plane().unwrap(), seed, &format!("step {step}"));
+        thread::sleep(Duration::from_micros(rng.range(50, 2_000)));
+    }
+
+    engine
+        .settle(Duration::from_secs(60))
+        .unwrap_or_else(|e| panic!("seed {seed:#x}: dual-plane chaos failed to settle: {e}"));
+    let plane = engine.expert_plane().unwrap();
+    assert_eq!(
+        plane.domain_violations(),
+        0,
+        "seed {seed:#x}: domains overlapped in the expert pool"
+    );
+    assert_coverage(plane, seed, "end of run");
+    let pstats = engine.prefill_plane().unwrap().exchange_stats().unwrap();
+    assert_eq!(
+        pstats.integrity_failures, 0,
+        "seed {seed:#x}: prefill-side combine corrupted"
+    );
+
+    let groups = engine.shutdown().unwrap();
+    let mut total = ExchangeStats::default();
+    let mut finished = 0usize;
+    for g in &groups {
+        total.integrity_failures += g.exchange.integrity_failures;
+        total.dispatches += g.exchange.dispatches;
+        for r in &g.finished {
+            assert!(
+                r.state == RequestState::Done || r.state == RequestState::Failed,
+                "seed {seed:#x}: stream {} left non-terminal: {:?}",
+                r.id,
+                r.state
+            );
+            finished += 1;
+        }
+    }
+    assert_eq!(
+        finished, submitted as usize,
+        "seed {seed:#x}: every accepted stream must terminate"
+    );
+    assert_eq!(
+        total.integrity_failures, 0,
+        "seed {seed:#x}: decode combines must stay bit-exact through the chaos"
+    );
+    assert!(total.dispatches > 0, "seed {seed:#x}: the decode exchange actually ran");
+}
