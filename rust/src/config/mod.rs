@@ -334,6 +334,44 @@ impl Default for MoeAttnConfig {
     }
 }
 
+/// §6.2 live-recovery knobs, consumed by
+/// `reliability::RecoveryManager::from_config` and the runtime
+/// `reliability::injector::RecoverySupervisor`. Every knob is validated at
+/// parse time (all durations/counts must be ≥ 1) so a zero deadline or
+/// backoff — which would make the migration retry loop spin or fail
+/// instantly — fails the config load naming the offending key.
+#[derive(Clone, Debug)]
+pub struct ReliabilityConfig {
+    /// Which §6.2 recovery stage the engine runs
+    /// (`restart_the_world` / `pd_separate_failover` / `fine_grained`).
+    pub stage: crate::reliability::RecoveryStage,
+    /// Modeled engine cold-restart cost (stage-1 downtime prior).
+    pub engine_restart_ms: u64,
+    /// Modeled decode iteration (token-recomputation unit, §7.1).
+    pub iteration_ms: u64,
+    /// Per-migration deadline: a KV-migrating stream that cannot be
+    /// re-injected into any surviving group within this window fails
+    /// terminally.
+    pub migration_deadline_ms: u64,
+    /// Base backoff between migration retry attempts (doubles per retry).
+    pub retry_backoff_ms: u64,
+    /// Retry budget per migrating sequence before terminal failure.
+    pub max_migration_retries: u32,
+}
+
+impl Default for ReliabilityConfig {
+    fn default() -> Self {
+        Self {
+            stage: crate::reliability::RecoveryStage::FineGrained,
+            engine_restart_ms: 120_000, // ~2 min cold restart
+            iteration_ms: 93,           // §7.1 iteration
+            migration_deadline_ms: 2_000,
+            retry_backoff_ms: 50,
+            max_migration_retries: 5,
+        }
+    }
+}
+
 /// Top-level config.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -341,6 +379,7 @@ pub struct Config {
     pub serving: ServingConfig,
     pub moe_attn: MoeAttnConfig,
     pub sla: SlaConfig,
+    pub reliability: ReliabilityConfig,
     pub seed: u64,
     /// Directory holding manifest.json/weights.bin/*.hlo.txt.
     pub artifacts_dir: String,
@@ -353,6 +392,7 @@ impl Default for Config {
             serving: ServingConfig::default(),
             moe_attn: MoeAttnConfig::default(),
             sla: SlaConfig::default(),
+            reliability: ReliabilityConfig::default(),
             seed: 0x2025_0710,
             artifacts_dir: "artifacts".into(),
         }
@@ -382,6 +422,12 @@ impl Config {
             },
             "production" => Config {
                 deployment: DeploymentConfig::production_decode_te(),
+                // §7.2 production SLA: a migrating stream must land
+                // within 1 s or fail fast (tighter than the default)
+                reliability: ReliabilityConfig {
+                    migration_deadline_ms: 1_000,
+                    ..Default::default()
+                },
                 ..Default::default()
             },
             "transformerless_768" => Config {
@@ -537,6 +583,49 @@ impl Config {
         }
         if let Some(v) = toml.try_bool("moe_attn.cross_layer_carry")? {
             cfg.moe_attn.cross_layer_carry = v;
+        }
+        // [reliability] §6.2 live-recovery knobs: the stage string must be
+        // one of the three paper stages, and every duration/count must be
+        // >= 1 (a zero deadline/backoff would make the migration retry
+        // loop fail instantly or spin — fail the parse instead).
+        if let Some(v) = toml.try_str("reliability.stage")? {
+            cfg.reliability.stage = match v {
+                "restart_the_world" => crate::reliability::RecoveryStage::RestartTheWorld,
+                "pd_separate_failover" => {
+                    crate::reliability::RecoveryStage::PdSeparateFailover
+                }
+                "fine_grained" => crate::reliability::RecoveryStage::FineGrained,
+                other => anyhow::bail!(
+                    "unknown reliability.stage {other:?} (expected restart_the_world, \
+                     pd_separate_failover, or fine_grained)"
+                ),
+            };
+        }
+        if let Some(v) = toml.try_u64("reliability.engine_restart_ms")? {
+            anyhow::ensure!(v >= 1, "reliability.engine_restart_ms must be >= 1, got {v}");
+            cfg.reliability.engine_restart_ms = v;
+        }
+        if let Some(v) = toml.try_u64("reliability.iteration_ms")? {
+            anyhow::ensure!(v >= 1, "reliability.iteration_ms must be >= 1, got {v}");
+            cfg.reliability.iteration_ms = v;
+        }
+        if let Some(v) = toml.try_u64("reliability.migration_deadline_ms")? {
+            anyhow::ensure!(
+                v >= 1,
+                "reliability.migration_deadline_ms must be >= 1, got {v}"
+            );
+            cfg.reliability.migration_deadline_ms = v;
+        }
+        if let Some(v) = toml.try_u64("reliability.retry_backoff_ms")? {
+            anyhow::ensure!(v >= 1, "reliability.retry_backoff_ms must be >= 1, got {v}");
+            cfg.reliability.retry_backoff_ms = v;
+        }
+        if let Some(v) = toml.try_u64("reliability.max_migration_retries")? {
+            anyhow::ensure!(
+                v >= 1,
+                "reliability.max_migration_retries must be >= 1, got {v}"
+            );
+            cfg.reliability.max_migration_retries = v as u32;
         }
         // Cross-field validation (previously these only surfaced at
         // routing time): a domain partition must be non-empty and no
@@ -874,6 +963,92 @@ mod tests {
             "[deployment]\ndp_groups = 8\ndp_domains = 2\n",
         );
         assert_eq!(Config::from_file(&p).unwrap().deployment.dp_domains, 2);
+    }
+
+    #[test]
+    fn reliability_knobs_parse_and_validate() {
+        // defaults: fine-grained stage, paper-modeled costs
+        let cfg = Config::default();
+        assert_eq!(cfg.reliability.stage, crate::reliability::RecoveryStage::FineGrained);
+        assert_eq!(cfg.reliability.engine_restart_ms, 120_000);
+        assert_eq!(cfg.reliability.iteration_ms, 93);
+        assert_eq!(cfg.reliability.migration_deadline_ms, 2_000);
+        assert_eq!(cfg.reliability.retry_backoff_ms, 50);
+        assert_eq!(cfg.reliability.max_migration_retries, 5);
+
+        // explicit values win, and feed RecoveryManager::from_config
+        let p = write_cfg(
+            "rel.toml",
+            "[reliability]\nstage = \"restart_the_world\"\nengine_restart_ms = 60000\n\
+             iteration_ms = 50\nmigration_deadline_ms = 500\nretry_backoff_ms = 10\n\
+             max_migration_retries = 3\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(
+            cfg.reliability.stage,
+            crate::reliability::RecoveryStage::RestartTheWorld
+        );
+        assert_eq!(cfg.reliability.engine_restart_ms, 60_000);
+        assert_eq!(cfg.reliability.iteration_ms, 50);
+        assert_eq!(cfg.reliability.migration_deadline_ms, 500);
+        assert_eq!(cfg.reliability.retry_backoff_ms, 10);
+        assert_eq!(cfg.reliability.max_migration_retries, 3);
+        let mgr = crate::reliability::RecoveryManager::from_config(&cfg.reliability);
+        assert_eq!(mgr.engine_restart_ns, 60_000_000_000);
+        assert_eq!(mgr.iteration_ns, 50_000_000);
+
+        // every stage string parses
+        for (s, want) in [
+            ("restart_the_world", crate::reliability::RecoveryStage::RestartTheWorld),
+            ("pd_separate_failover", crate::reliability::RecoveryStage::PdSeparateFailover),
+            ("fine_grained", crate::reliability::RecoveryStage::FineGrained),
+        ] {
+            let p = write_cfg("rel_stage.toml", &format!("[reliability]\nstage = \"{s}\"\n"));
+            assert_eq!(Config::from_file(&p).unwrap().reliability.stage, want);
+        }
+
+        // unknown stage is an error naming the value and listing the
+        // valid names
+        let p = write_cfg("rel_bad_stage.toml", "[reliability]\nstage = \"magic\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+        for valid in ["restart_the_world", "pd_separate_failover", "fine_grained"] {
+            assert!(e.contains(valid), "stage error must list {valid:?}: {e}");
+        }
+
+        // zero values fail at parse time with the key in the error
+        for (name, body, key) in [
+            (
+                "rel0a.toml",
+                "[reliability]\nengine_restart_ms = 0\n",
+                "reliability.engine_restart_ms",
+            ),
+            ("rel0b.toml", "[reliability]\niteration_ms = 0\n", "reliability.iteration_ms"),
+            (
+                "rel0c.toml",
+                "[reliability]\nmigration_deadline_ms = 0\n",
+                "reliability.migration_deadline_ms",
+            ),
+            (
+                "rel0d.toml",
+                "[reliability]\nretry_backoff_ms = 0\n",
+                "reliability.retry_backoff_ms",
+            ),
+            (
+                "rel0e.toml",
+                "[reliability]\nmax_migration_retries = 0\n",
+                "reliability.max_migration_retries",
+            ),
+        ] {
+            let p = write_cfg(name, body);
+            let e = Config::from_file(&p).unwrap_err().to_string();
+            assert!(e.contains(key), "{body}: {e}");
+        }
+
+        // the production preset tightens the migration deadline
+        let p = write_cfg("rel_prod.toml", "preset = \"production\"\n");
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.reliability.migration_deadline_ms, 1_000);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::Result;
 use crate::coordinator::decode_sched::GroupStatus;
 use crate::coordinator::output::OutputEvent;
 use crate::coordinator::request::{RequestState, ServeRequest};
-use crate::kvcache::BlockPool;
+use crate::kvcache::{BlockPool, InvalidationReport};
 use crate::model::{DecodeModel, SeqKv};
 use crate::mtp;
 
@@ -26,18 +26,25 @@ pub struct SeqState {
 /// sampled token, and the hidden state, packaged for cross-thread handoff
 /// into a decode DP group.
 ///
-/// **KV ownership contract:** the prefill side owns the [`SeqKv`] until it
-/// moves this struct into the decode group's inbox
+/// **KV ownership contract:** the producing side — a prefill worker, or
+/// the §6.2 recovery supervisor re-injecting a migrated stream — owns the
+/// [`SeqKv`] until it moves this struct into the decode group's inbox
 /// (`worker::InboxMsg::InjectPrefilled`); from then on the decode worker
 /// owns it exclusively — parked in [`DpGroup::prefilled`] while the group
 /// is full (deferral, §5.1 step 6), moved into the running batch on
 /// admission, and dropped (with its pool admission released) on completion
 /// or failure. The KV is never shared between threads; the transfer is a
 /// move through the channel.
+///
+/// **Mid-stream resume:** when `req.generated` is non-empty this is a
+/// migrating decode stream, not a fresh prefill — `first_token` then
+/// carries the *last* token the dead group sampled (the next feed), and
+/// injection must not re-emit tokens or restamp first-token timing.
 pub struct PrefilledSeq {
     pub req: ServeRequest,
     pub kv: SeqKv,
-    /// First token sampled from the prefill logits.
+    /// First token sampled from the prefill logits (fresh handoff), or the
+    /// last token sampled before the crash (mid-stream resume).
     pub first_token: i32,
     pub hidden: Vec<f32>,
 }
@@ -149,11 +156,22 @@ impl DpGroup {
     /// once the sequence leaves the running set.
     pub fn inject_prefilled(&mut self, seq: PrefilledSeq, now_ns: u64) -> Result<()> {
         let PrefilledSeq { mut req, kv, first_token, hidden } = seq;
-        if let Err(e) = self.pool.admit(req.id, kv.len, req.max_new_tokens) {
+        // A migrating stream (§6.2 failover) arrives with generated tokens
+        // already attached: admit for the *remaining* output budget only.
+        let resumed = !req.generated.is_empty();
+        let budget = req.max_new_tokens.saturating_sub(req.generated.len());
+        if let Err(e) = self.pool.admit(req.id, kv.len, budget) {
             self.fail_request(req, now_ns);
             return Err(e);
         }
         req.state = RequestState::Decoding;
+        if resumed {
+            // Resume mid-stream: the consumer already saw every generated
+            // token (timing + tokens_out survived the migration), so emit
+            // nothing — decode continues from the carried feed token.
+            self.running.push(SeqState { req, kv, feed: first_token, hidden });
+            return Ok(());
+        }
         req.generated.push(first_token);
         req.timing.first_token_ns = now_ns;
         // The prefill worker stamps completion time before the handoff;
@@ -175,7 +193,10 @@ impl DpGroup {
         let mut progressed = 0;
         while self.running.len() < self.batch_limit {
             let Some(front) = self.prefilled.front() else { break };
-            if !self.pool.can_admit(front.kv.len, front.req.max_new_tokens) {
+            // a resumed stream only needs its remaining output budget
+            let budget =
+                front.req.max_new_tokens.saturating_sub(front.req.generated.len());
+            if !self.pool.can_admit(front.kv.len, budget) {
                 // With nothing running there is no admission left to free:
                 // this KV can never fit the group's pool, so deferring
                 // again would hang the stream forever — fail it terminally
@@ -363,6 +384,27 @@ impl DpGroup {
         Ok(produced)
     }
 
+    /// §6.2 stage-3 on-chip memory fault: invalidate up to `blocks` KV
+    /// blocks from this group's pool and terminally fail *only* the
+    /// requests that owned them — the rest of the batch stays online. The
+    /// pool released the victims' allocations already, so failing here
+    /// must not release again. Returns the measured damage for the
+    /// supervisor's `MemoryRemap` record.
+    pub fn memory_fault(&mut self, blocks: usize, now_ns: u64) -> InvalidationReport {
+        let report = self.pool.invalidate_blocks(blocks);
+        if !report.victim_seqs.is_empty() {
+            let drained: Vec<SeqState> = self.running.drain(..).collect();
+            for s in drained {
+                if report.victim_seqs.contains(&s.req.id) {
+                    self.fail_request(s.req, now_ns);
+                } else {
+                    self.running.push(s);
+                }
+            }
+        }
+        report
+    }
+
     pub fn mtp_acceptance(&self) -> f64 {
         if self.mtp_drafts == 0 {
             0.0
@@ -502,6 +544,52 @@ mod tests {
         g.enqueue_prefilled(prefilled(4, 20, 4)); // needs 3 blocks, 2 free
         assert_eq!(g.admit_prefilled(9), 0, "deferred while seq 3 runs");
         assert_eq!(g.prefilled.len(), 1);
+    }
+
+    #[test]
+    fn resumed_injection_continues_mid_stream_without_reemitting() {
+        let (tx, rx) = mpsc::channel();
+        let mut g = DpGroup::new(0, 8, 64);
+        g.out_tx = Some(tx);
+        let mut seq = prefilled(5, 10, 4);
+        // the dead group already streamed two tokens before the crash
+        seq.req.generated = vec![42, 17];
+        seq.req.timing.tokens_out = 2;
+        seq.req.timing.first_token_ns = 111;
+        seq.req.timing.prefill_done_ns = 100;
+        seq.first_token = 17; // last sampled token = next feed
+        g.inject_prefilled(seq, 999).unwrap();
+        assert_eq!(g.running.len(), 1);
+        assert!(rx.try_recv().is_err(), "no token re-emitted on resume");
+        let s = &g.running[0];
+        assert_eq!(s.feed, 17);
+        assert_eq!(s.req.generated, vec![42, 17], "carried state intact");
+        assert_eq!(s.req.timing.first_token_ns, 111, "original stamp kept");
+        assert_eq!(s.req.timing.tokens_out, 2);
+        assert_eq!(s.req.state, RequestState::Decoding);
+    }
+
+    #[test]
+    fn memory_fault_fails_only_owning_requests() {
+        let (tx, rx) = mpsc::channel();
+        let mut g = DpGroup::new(0, 8, 64);
+        g.out_tx = Some(tx);
+        g.inject_prefilled(prefilled(1, 20, 4), 5).unwrap(); // 2 blocks
+        g.inject_prefilled(prefilled(2, 20, 4), 5).unwrap();
+        g.inject_prefilled(prefilled(3, 20, 4), 5).unwrap();
+        while rx.try_recv().is_ok() {} // drain the injection Token events
+        let r = g.memory_fault(2, 77);
+        assert_eq!(r.victim_seqs, vec![1]);
+        assert_eq!(r.blocks_lost, 2, "measured from the pool");
+        assert_eq!(g.running.len(), 2, "unaffected requests stay online");
+        assert_eq!(g.finished.len(), 1);
+        assert_eq!(g.finished[0].id, 1);
+        assert_eq!(g.finished[0].state, RequestState::Failed);
+        assert_eq!(g.finished[0].timing.done_ns, 77);
+        assert_eq!(rx.try_recv().unwrap(), OutputEvent::Finished { req_id: 1 });
+        // zero-blocks fault is a no-op
+        assert_eq!(g.memory_fault(0, 78), InvalidationReport::default());
+        assert_eq!(g.running.len(), 2);
     }
 
     #[test]

@@ -47,7 +47,7 @@ use crate::sync::mpsc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{DeploymentMode, ServingConfig};
+use crate::config::{DeploymentMode, ReliabilityConfig, ServingConfig};
 use crate::coordinator::decode_sched::GroupLoadView;
 use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::dp_group::DpGroup;
@@ -55,11 +55,15 @@ use crate::coordinator::output::{FrontendMsg, OutputEvent, OutputPlane};
 use crate::coordinator::plane::{AttachmentCaps, PlaneDispatch, PlaneSet};
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::te_shell::TeShell;
-use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring};
+use crate::coordinator::worker::{
+    DecentralizedRuntime, GroupSpec, ModelFactory, OutputWiring, RecoveryWiring,
+};
 use crate::disagg::expert_plane::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime};
 use crate::disagg::pd::{PrefillPlane, PrefillWorkerSpec};
+use crate::fabric::fault::Fault;
 use crate::model::Tokenizer;
 use crate::reliability::heartbeat::GroupPulseMonitor;
+use crate::reliability::injector::{RecoveryStats, RecoverySupervisor};
 use crate::workload::straggler::StragglerProfile;
 
 /// Default long-sequence threshold for prefill placement (§7.2).
@@ -89,6 +93,8 @@ pub struct ServingEngineBuilder {
     dp_domains: usize,
     pulse_interval_ns: u64,
     pulse_misses: u32,
+    reliability: Option<ReliabilityConfig>,
+    fault_schedule: Vec<Fault>,
 }
 
 impl ServingEngineBuilder {
@@ -192,6 +198,28 @@ impl ServingEngineBuilder {
         self
     }
 
+    /// Typed `[reliability]` knobs for the §6.2 recovery supervisor
+    /// (stage, migration deadline/backoff/retries). Only takes effect
+    /// together with [`Self::fault_schedule`]; defaults to
+    /// [`ReliabilityConfig::default`] (FineGrained) when a schedule is set
+    /// without it.
+    pub fn reliability(mut self, cfg: ReliabilityConfig) -> Self {
+        self.reliability = Some(cfg);
+        self
+    }
+
+    /// §6.2 fault injection: attach a seeded fault schedule and spawn the
+    /// engine with recovery wiring (migration outbox + recompute epochs).
+    /// The engine then owns a [`RecoverySupervisor`] that fires each fault
+    /// when its `at_ns` comes due on the runtime clock and supervises the
+    /// recoveries to a measured end state; tick it by calling
+    /// [`ServingEngine::health_sweep`] in the driver loop until
+    /// [`ServingEngine::recovery_quiesced`].
+    pub fn fault_schedule(mut self, faults: Vec<Fault>) -> Self {
+        self.fault_schedule = faults;
+        self
+    }
+
     /// Spawn the worker threads and the mode's plane attachments, and
     /// assemble the engine. Validation is capability-driven
     /// ([`AttachmentCaps::validate`]): plane inputs the mode cannot attach
@@ -249,23 +277,33 @@ impl ServingEngineBuilder {
         } else {
             None
         };
-        let runtime = DecentralizedRuntime::spawn_ext(
+        // §6.2 recovery wiring: only materialized when a fault schedule is
+        // attached — the zero-fault engine carries zero recovery overhead.
+        let recovery_wiring = if self.fault_schedule.is_empty() {
+            None
+        } else {
+            Some(RecoveryWiring::new(decode_domains, groups.len()))
+        };
+        let runtime = DecentralizedRuntime::spawn_recovery(
             &groups,
             straggler,
             wiring,
             self.factory.clone(),
             expert.as_ref().map(|p| p.handle()),
+            recovery_wiring.clone(),
         )?;
         // Prefill attachment: in Transformerless the workers also get the
         // expert plane's exchange handle plus the turnstile domain past
         // the decode domains, so long-prompt exchanges rotate against the
         // decode side.
+        let mut n_prefill = 0;
         let prefill = if caps.prefill {
             let specs = if self.prefill_workers.is_empty() {
                 vec![PrefillWorkerSpec::new(0)]
             } else {
                 self.prefill_workers
             };
+            n_prefill = specs.len();
             let factory = self.prefill_factory.unwrap_or(self.factory);
             let exchange = caps
                 .prefill_domain(decode_domains)
@@ -274,6 +312,11 @@ impl ServingEngineBuilder {
         } else {
             None
         };
+        let supervisor = recovery_wiring.map(|rw| {
+            let rel = self.reliability.unwrap_or_default();
+            let group_domains: Vec<usize> = groups.iter().map(|g| g.domain).collect();
+            RecoverySupervisor::new(&rel, rw, self.fault_schedule, group_domains, n_prefill)
+        });
         let shell = TeShell::from_serving(&self.serving)
             .with_domains(if caps.expert { decode_domains } else { 1 });
         Ok(ServingEngine {
@@ -284,6 +327,7 @@ impl ServingEngineBuilder {
             output_plane: plane,
             long_seq_threshold: self.long_seq_threshold,
             monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
+            supervisor,
         })
     }
 }
@@ -303,6 +347,10 @@ pub struct ServingEngine {
     output_plane: Option<OutputPlane>,
     long_seq_threshold: usize,
     monitor: GroupPulseMonitor,
+    /// §6.2 fault-injection supervisor (`builder.fault_schedule(..)`);
+    /// ticked by [`Self::health_sweep`], inspected through
+    /// [`Self::recovery_stats`] / [`Self::recovery_quiesced`].
+    supervisor: Option<RecoverySupervisor>,
 }
 
 impl ServingEngine {
@@ -324,6 +372,8 @@ impl ServingEngine {
             dp_domains: 1,
             pulse_interval_ns: DEFAULT_PULSE_INTERVAL_NS,
             pulse_misses: DEFAULT_PULSE_MISSES,
+            reliability: None,
+            fault_schedule: Vec::new(),
         }
     }
 
@@ -394,7 +444,36 @@ impl ServingEngine {
     /// here.
     pub fn health_sweep(&mut self) -> Vec<usize> {
         self.planes.sweep();
-        self.runtime.demote_stalled(&mut self.monitor)
+        let demoted = self.runtime.demote_stalled(&mut self.monitor);
+        if let Some(sup) = self.supervisor.as_mut() {
+            // per-sweep injection handle: a clone held across shutdown
+            // would keep the decode inbox senders alive and hang the
+            // worker joins, so it lives exactly one tick
+            let injector = self.runtime.injector();
+            sup.tick(
+                self.runtime.now_ns(),
+                &self.runtime,
+                &injector,
+                self.planes.expert_plane(),
+                self.planes.prefill_plane(),
+            );
+        }
+        demoted
+    }
+
+    /// What the §6.2 recovery supervisor has observed so far (`None`
+    /// without a fault schedule): actions with measured-vs-modeled
+    /// downtime, streams resumed/failed, and per-migration latencies.
+    pub fn recovery_stats(&self) -> Option<&RecoveryStats> {
+        self.supervisor.as_ref().map(|s| s.stats())
+    }
+
+    /// True once every scheduled fault has fired and every recovery it
+    /// triggered has terminated. Pending KV migrations live in the
+    /// supervisor — invisible to [`Self::all_idle`] — so chaos drivers
+    /// loop [`Self::health_sweep`] until this holds before settling.
+    pub fn recovery_quiesced(&self) -> bool {
+        self.supervisor.as_ref().map(|s| s.quiesced()).unwrap_or(true)
     }
 
     /// Expert-side straggler sweep (§5.2 straggler visibility): hard-demote

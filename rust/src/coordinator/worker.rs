@@ -19,7 +19,8 @@
 //! mitigation policies — EWMA soft penalties, hard demotion, pulse
 //! demotion — are exercised under seeded jitter in tests and benches.
 
-use crate::sync::{mpsc, Arc};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{mpsc, named_mutex, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -29,6 +30,7 @@ use crate::coordinator::dp_group::{DpGroup, DpGroupStatus, PrefilledSeq, SeqStat
 use crate::coordinator::output::OutputEvent;
 use crate::coordinator::request::ServeRequest;
 use crate::coordinator::status_board::{BoardEntry, StatusBoard};
+use crate::kvcache::InvalidationReport;
 use crate::metrics::Ewma;
 use crate::model::DecodeModel;
 use crate::reliability::heartbeat::GroupPulseMonitor;
@@ -65,6 +67,19 @@ pub enum InboxMsg {
     /// decode group records it Failed so stream consumers get `Finished`.
     FailPrefilled(ServeRequest),
     SetHealthy(bool),
+    /// §6.2 injected DieCrash/ProcessHang: the worker stops serving *now*.
+    /// With `evacuate` set (and [`RecoveryWiring`] present) it first
+    /// encodes every in-flight stream's KV over the §4.7 codec wire path
+    /// and deposits it in the migration outbox, so the recovery supervisor
+    /// can resume those streams mid-decode in a surviving group; queued
+    /// work (no sunk decode state) fails terminally either way. The thread
+    /// then runs the dead-group drain loop until shutdown.
+    Die { evacuate: bool },
+    /// §6.2 stage-3 on-chip memory fault: invalidate `blocks` in-use KV
+    /// blocks from this group's pool, failing exactly the streams whose
+    /// blocks were hit. The reply carries the *measured* damage
+    /// ([`InvalidationReport`]) so recovery actions report pool truth.
+    MemoryFault { blocks: usize, reply: mpsc::Sender<InvalidationReport> },
 }
 
 /// Per-group spawn parameters.
@@ -80,6 +95,13 @@ pub struct GroupSpec {
     /// DP domain this group belongs to (§5.2 MoeAttn turn-taking over the
     /// expert pool); ignored when no exchange wiring is supplied.
     pub domain: usize,
+    /// §6.2 fault-injection knob (the `ExpertWorkerSpec::failing` pattern
+    /// on the decode plane): after this many decode ticks the worker
+    /// die-crashes in place — evacuating its in-flight streams to the
+    /// migration outbox when [`RecoveryWiring`] is attached, exactly like
+    /// an [`InboxMsg::Die`] with `evacuate: true`. `None` = healthy
+    /// forever.
+    pub fail_after: Option<u64>,
 }
 
 impl GroupSpec {
@@ -92,7 +114,14 @@ impl GroupSpec {
             use_mtp: false,
             tick_ewma_alpha: TICK_EWMA_ALPHA,
             domain: 0,
+            fail_after: None,
         }
+    }
+
+    /// A group whose worker die-crashes after `after` decode ticks (§6.2
+    /// fault injection).
+    pub fn failing(id: usize, batch_limit: usize, kv_blocks: usize, after: u64) -> Self {
+        Self { fail_after: Some(after), ..Self::new(id, batch_limit, kv_blocks) }
     }
 
     /// Apply the §4 serving-config knobs (INT8, MTP depth, EWMA alpha).
@@ -152,6 +181,69 @@ pub fn engine_model_factory(dir: impl Into<String>) -> ModelFactory {
     Arc::new(move |_| {
         Ok(Box::new(crate::model::OwnedEngineModel::load(&dir)?) as Box<dyn DecodeModel>)
     })
+}
+
+/// One decode stream evacuated from a dying group (§6.2 DieCrash
+/// failover): everything the recovery supervisor needs to resume it
+/// mid-stream in a surviving group. The KV travels in its §4.7 codec wire
+/// form (`kvcache::quant::encode_kv_auto`) — the dying worker encodes, the
+/// supervisor owns the bytes, and the destination group re-materializes on
+/// admission — with the cache geometry carried alongside so
+/// `decode_kv_like` needs no out-of-band shape plumbing.
+pub struct EvacuatedSeq {
+    /// The request with its partial `generated` output intact — nothing is
+    /// re-emitted on resume; decode continues from where it stopped.
+    pub req: ServeRequest,
+    /// §4.7 wire-encoded KV prefix (latent INT8, raw RoPE).
+    pub kv_wire: Vec<u8>,
+    /// Cache geometry (layers / max-seq / latent dim / rope dim).
+    pub l: usize,
+    pub s: usize,
+    pub c: usize,
+    pub r: usize,
+    /// Next feed token = the last sampled token (what the resumed decode
+    /// step consumes first).
+    pub feed: i32,
+    /// Last hidden row (the §5.2 exchange payload for this stream).
+    pub hidden: Vec<f32>,
+    /// Group the stream was evacuated from — the supervisor never migrates
+    /// a stream back onto its own dead group.
+    pub from_group: usize,
+}
+
+/// Where dying workers deposit evacuated streams for the recovery
+/// supervisor. Lock class `reliability.migration_outbox` — leaf-level in
+/// the flat hierarchy: a worker takes it only at death (after releasing
+/// its pool state, holding no other lock) and the supervisor only to
+/// drain, so it can never participate in a cycle.
+pub type MigrationOutbox = Arc<Mutex<Vec<EvacuatedSeq>>>;
+
+/// The §6.2 recovery-path wiring shared between the decode workers and the
+/// recovery supervisor. Cheap to clone (all shared handles).
+#[derive(Clone)]
+pub struct RecoveryWiring {
+    /// Dying groups push evacuated streams here; the supervisor drains.
+    pub outbox: MigrationOutbox,
+    /// Per-exchange-domain recompute epoch, bumped (Release) by the
+    /// supervisor when a LinkFlap hits that domain. Workers observe
+    /// (Acquire) before each tick and re-run one exchange iteration per
+    /// missed epoch — §6.2 stage-3 token recomputation instead of worker
+    /// demotion.
+    pub recompute_epochs: Arc<Vec<AtomicU64>>,
+    /// Per-board-slot ack of the last recompute epoch each worker honored;
+    /// the supervisor's measured recomputation downtime is the span until
+    /// every live slot in the domain has acked.
+    pub recompute_acks: Arc<Vec<AtomicU64>>,
+}
+
+impl RecoveryWiring {
+    pub fn new(n_domains: usize, n_groups: usize) -> Self {
+        Self {
+            outbox: Arc::new(named_mutex("reliability.migration_outbox", Vec::new())),
+            recompute_epochs: Arc::new((0..n_domains.max(1)).map(|_| AtomicU64::new(0)).collect()),
+            recompute_acks: Arc::new((0..n_groups).map(|_| AtomicU64::new(0)).collect()),
+        }
+    }
 }
 
 struct GroupHandle {
@@ -256,6 +348,32 @@ impl DecentralizedRuntime {
         factory: ModelFactory,
         exchange: Option<crate::disagg::expert_plane::ExchangeHandle>,
     ) -> Result<Self> {
+        Self::spawn_recovery(specs, straggler, out, factory, exchange, None)
+    }
+
+    /// [`Self::spawn_ext`] plus the §6.2 recovery wiring: with `recovery`
+    /// set, workers honor [`InboxMsg::Die`] evacuation (depositing
+    /// in-flight streams in the migration outbox instead of failing them)
+    /// and the per-domain recompute-epoch protocol for LinkFlap token
+    /// recomputation. Without it, a `Die` still kills the worker but its
+    /// streams fail terminally — recovery degrades, never hangs.
+    pub fn spawn_recovery(
+        specs: &[GroupSpec],
+        straggler: StragglerProfile,
+        out: OutputWiring,
+        factory: ModelFactory,
+        exchange: Option<crate::disagg::expert_plane::ExchangeHandle>,
+        recovery: Option<RecoveryWiring>,
+    ) -> Result<Self> {
+        if let Some(rw) = recovery.as_ref() {
+            if rw.recompute_acks.len() != specs.len() {
+                bail!(
+                    "recovery wiring sized for {} groups, spawning {}",
+                    rw.recompute_acks.len(),
+                    specs.len()
+                );
+            }
+        }
         if specs.is_empty() {
             bail!("decentralized runtime needs at least one DP group");
         }
@@ -289,6 +407,7 @@ impl DecentralizedRuntime {
             let factory_w = Arc::clone(&factory);
             let out_w = out.sender_for(spec.id);
             let exchange_w = exchange.clone();
+            let recovery_w = recovery.clone();
             let spec_w = spec.clone();
             let join = thread::Builder::new()
                 .name(format!("dp-group-{}", spec.id))
@@ -312,6 +431,9 @@ impl DecentralizedRuntime {
                             spec_w.tick_ewma_alpha,
                             start,
                             exchange_client,
+                            recovery_w,
+                            spec_w.domain,
+                            spec_w.fail_after,
                         ),
                         // Backend never came up: the group still owns its
                         // inbox, so fail (with Finished events) everything
@@ -393,6 +515,30 @@ impl DecentralizedRuntime {
     /// Flip a group's health flag (operator/recovery action).
     pub fn set_healthy(&self, group_id: usize, healthy: bool) -> Result<()> {
         self.send(group_id, InboxMsg::SetHealthy(healthy))
+    }
+
+    /// §6.2 injected DieCrash: kill `group_id`'s worker. With `evacuate`
+    /// (and recovery wiring attached at spawn) its in-flight streams land
+    /// in the migration outbox for mid-stream resume; without it they fail
+    /// terminally. The thread survives in the dead-group drain loop, so
+    /// anything routed at it during the board's stale-healthy window still
+    /// terminates.
+    pub fn kill_group(&self, group_id: usize, evacuate: bool) -> Result<()> {
+        self.send(group_id, InboxMsg::Die { evacuate })
+    }
+
+    /// §6.2 injected stage-3 memory fault: invalidate `blocks` in-use KV
+    /// blocks on `group_id`. Returns the reply channel carrying the
+    /// *measured* damage once the worker has processed the fault (poll it
+    /// — the worker may be mid-tick).
+    pub fn memory_fault(
+        &self,
+        group_id: usize,
+        blocks: usize,
+    ) -> Result<mpsc::Receiver<InvalidationReport>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(group_id, InboxMsg::MemoryFault { blocks, reply: tx })?;
+        Ok(rx)
     }
 
     fn send(&self, group_id: usize, cmd: InboxMsg) -> Result<()> {
@@ -516,10 +662,25 @@ fn run_dead_group(
             }
             // the backend is gone; health cannot be restored in-place
             Ok(InboxMsg::SetHealthy(_)) => {}
+            // already dead — a second crash changes nothing
+            Ok(InboxMsg::Die { .. }) => {}
+            // the pool is empty (everything failed or evacuated at death),
+            // but reply anyway so the supervisor's poll resolves
+            Ok(InboxMsg::MemoryFault { blocks, reply }) => {
+                let now = now_ns(&start);
+                let _ = reply.send(group.memory_fault(blocks, now));
+            }
             Err(_) => break,
         }
     }
     group
+}
+
+/// Control signals a tick loop extracts from its inbox besides group
+/// mutations: currently only the §6.2 death sentence (`Some(evacuate)`).
+#[derive(Default)]
+struct WorkerCtl {
+    die: Option<bool>,
 }
 
 /// Non-blocking inbox drain; flips `draining` when the runtime has
@@ -529,10 +690,11 @@ fn drain_inbox(
     group: &mut DpGroup,
     draining: &mut bool,
     start: &Instant,
+    ctl: &mut WorkerCtl,
 ) {
     loop {
         match rx.try_recv() {
-            Ok(msg) => handle_msg(msg, group, start),
+            Ok(msg) => handle_msg(msg, group, start, ctl),
             Err(mpsc::TryRecvError::Empty) => break,
             Err(mpsc::TryRecvError::Disconnected) => {
                 *draining = true;
@@ -544,7 +706,7 @@ fn drain_inbox(
 
 /// One inbox message, outside the drain loop so the idle `recv_timeout`
 /// path handles exactly the same set.
-fn handle_msg(msg: InboxMsg, group: &mut DpGroup, start: &Instant) {
+fn handle_msg(msg: InboxMsg, group: &mut DpGroup, start: &Instant, ctl: &mut WorkerCtl) {
     match msg {
         InboxMsg::Submit(req) => group.enqueue(req),
         InboxMsg::InjectPrefilled(seq) => group.enqueue_prefilled(seq),
@@ -553,6 +715,15 @@ fn handle_msg(msg: InboxMsg, group: &mut DpGroup, start: &Instant) {
             group.fail_request(req, now);
         }
         InboxMsg::SetHealthy(h) => group.healthy = h,
+        // evacuation is sticky: once any Die asked for it, a racing
+        // non-evacuating Die must not downgrade it to stream loss
+        InboxMsg::Die { evacuate } => {
+            ctl.die = Some(ctl.die.unwrap_or(false) || evacuate);
+        }
+        InboxMsg::MemoryFault { blocks, reply } => {
+            let now = now_ns(start);
+            let _ = reply.send(group.memory_fault(blocks, now));
+        }
     }
 }
 
@@ -569,15 +740,62 @@ fn run_group(
     tick_ewma_alpha: f64,
     start: Instant,
     exchange: Option<crate::disagg::expert_plane::ExchangeClient>,
+    recovery: Option<RecoveryWiring>,
+    domain: usize,
+    fail_after: Option<u64>,
 ) -> DpGroup {
     let mut ewma = Ewma::new(tick_ewma_alpha);
     let mut tick: u64 = 0;
     let mut draining = false;
     let mut idle_park = IDLE_PARK_MIN;
+    let mut ctl = WorkerCtl::default();
     board.publish(slot, group.status(), 0, now_ns(&start));
     loop {
         // 1. Drain the command inbox without blocking.
-        drain_inbox(&rx, &mut group, &mut draining, &start);
+        drain_inbox(&rx, &mut group, &mut draining, &start, &mut ctl);
+
+        // §6.2 death check: an injected Die (or this spec's fail_after
+        // budget running out) ends serving *between* ticks, never inside
+        // one — a real die crash loses whole iterations, not half-written
+        // KV, and that is also what makes evacuated streams resumable.
+        if fail_after.is_some_and(|n| tick >= n) {
+            ctl.die = Some(ctl.die.unwrap_or(true));
+        }
+        if let Some(evacuate) = ctl.die {
+            return die_group(group, rx, board, slot, start, recovery.as_ref(), evacuate);
+        }
+
+        // §6.2 stage-3 token recomputation: the supervisor bumped this
+        // domain's recompute epoch after a LinkFlap. Re-run one exchange
+        // iteration per missed epoch with the *current* rows (same-iteration
+        // retransmit: SimModel tokens depend only on (feed, kv.len), so the
+        // re-run reproduces the glitched iteration's traffic), then ack so
+        // the supervisor's measured downtime ends. An idle group acks
+        // without re-running — it had nothing in flight over the link.
+        if let Some(rw) = recovery.as_ref() {
+            if let Some(ep) = rw.recompute_epochs.get(domain) {
+                let want = ep.load(Ordering::Acquire);
+                let have = rw.recompute_acks[slot].load(Ordering::Relaxed);
+                if want > have {
+                    if let Some(x) = exchange.as_ref() {
+                        if group.healthy && !group.running.is_empty() {
+                            let rows: Vec<Vec<u8>> = group
+                                .running
+                                .iter()
+                                .map(|s| crate::disagg::expert_plane::row_bytes(&s.hidden))
+                                .collect();
+                            let t0 = Instant::now();
+                            for _ in have..want {
+                                x.run_iteration(&rows, &mut group.exchange);
+                                group.exchange.recomputes += 1;
+                            }
+                            group.exchange.recompute_ns += t0.elapsed().as_nanos() as u64;
+                        }
+                    }
+                    rw.recompute_acks[slot].store(want, Ordering::Release);
+                }
+            }
+        }
 
         // 2. One serving tick: admission + continuous-batched decode.
         // Deferred cross-thread injections retry first (§5.1 step 6): their
@@ -643,7 +861,7 @@ fn run_group(
         // injected delay) are reflected in the published queue depth —
         // otherwise the shell would see a fresh epoch whose counts predate
         // its own sends and mistakenly clear its stale credits.
-        drain_inbox(&rx, &mut group, &mut draining, &start);
+        drain_inbox(&rx, &mut group, &mut draining, &start, &mut ctl);
         board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
 
         // 5. Exit / park.
@@ -665,7 +883,7 @@ fn run_group(
         }
         if !worked {
             match rx.recv_timeout(idle_park) {
-                Ok(msg) => handle_msg(msg, &mut group, &start),
+                Ok(msg) => handle_msg(msg, &mut group, &start, &mut ctl),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     idle_park = (idle_park * 2).min(IDLE_PARK_MAX);
                     ewma.decay(IDLE_EWMA_DECAY);
@@ -675,6 +893,65 @@ fn run_group(
         }
     }
     group
+}
+
+/// §6.2 DieCrash landing: evacuate in-flight streams (when wired and
+/// asked), fail everything else, publish the emptied status so engine
+/// idleness checks see through the corpse, and fall into the dead-group
+/// drain loop until shutdown.
+fn die_group(
+    mut group: DpGroup,
+    rx: mpsc::Receiver<InboxMsg>,
+    board: Arc<StatusBoard>,
+    slot: usize,
+    start: Instant,
+    recovery: Option<&RecoveryWiring>,
+    evacuate: bool,
+) -> DpGroup {
+    let now = now_ns(&start);
+    group.healthy = false;
+    if evacuate {
+        if let Some(rw) = recovery {
+            evacuate_group(&mut group, &rw.outbox, now);
+        }
+    }
+    // whatever was not evacuated — queued prompts, deferred injections,
+    // and (with no wiring) the running streams — fails terminally with
+    // its Finished events
+    fail_pending(&mut group, now);
+    board.publish(slot, group.status(), 0, now);
+    run_dead_group(group, rx, board, slot, start)
+}
+
+/// Move every running stream into the migration outbox in §4.7 wire form.
+/// Pool blocks are released *before* the encode: the dying die's HBM is
+/// gone either way, and ownership of the stream transfers with the bytes —
+/// from here on only the supervisor (and then the destination group's
+/// admission) may touch it.
+fn evacuate_group(group: &mut DpGroup, outbox: &MigrationOutbox, _now: u64) -> usize {
+    let running: Vec<SeqState> = group.running.drain(..).collect();
+    let mut evacuated = Vec::with_capacity(running.len());
+    for s in running {
+        let _ = group.pool.release(s.req.id);
+        let kv_wire = crate::kvcache::quant::encode_kv_auto(&s.kv);
+        evacuated.push(EvacuatedSeq {
+            kv_wire,
+            l: s.kv.l,
+            s: s.kv.s,
+            c: s.kv.c,
+            r: s.kv.r,
+            feed: s.feed,
+            hidden: s.hidden,
+            from_group: group.id,
+            req: s.req,
+        });
+    }
+    let n = evacuated.len();
+    // invariant: reliability.migration_outbox is leaf-level (no other lock
+    // held here or in the supervisor's drain); poisoning would mean a
+    // panicked peer, which shutdown surfaces on its own
+    outbox.lock().unwrap().append(&mut evacuated);
+    n
 }
 
 /// Mark everything still queued/running as Failed and release its KV (the
@@ -814,6 +1091,73 @@ mod tests {
             assert_eq!(r.timing.prefill_done_ns, 1, "prefill stamp preserved");
             assert!(r.timing.first_token_ns >= r.timing.prefill_done_ns);
         }
+    }
+
+    #[test]
+    fn dying_group_evacuates_running_streams_to_the_outbox() {
+        use crate::model::SeqKv;
+
+        let wiring = RecoveryWiring::new(1, 2);
+        // group 0 die-crashes after 5 decode ticks, mid-stream on both
+        // requests (they want 512 tokens); group 1 stays healthy
+        let specs = vec![GroupSpec::failing(0, 4, 256, 5), GroupSpec::new(1, 4, 256)];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            sim_factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        rt.submit_to(0, req(1, 512)).unwrap();
+        rt.submit_to(0, req(2, 512)).unwrap();
+
+        // both streams must surface in the outbox once the crash lands
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            // invariant: test-side drain, no other lock held
+            if wiring.outbox.lock().unwrap().len() == 2 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "crash never evacuated the streams");
+            thread::sleep(Duration::from_millis(1));
+        }
+        // invariant: same leaf-level test-side access
+        let evacuated = std::mem::take(&mut *wiring.outbox.lock().unwrap());
+        for ev in &evacuated {
+            assert_eq!(ev.from_group, 0);
+            assert!(!ev.req.generated.is_empty(), "progress travels with the stream");
+            assert_eq!(
+                ev.feed,
+                *ev.req.generated.last().unwrap(),
+                "feed = last sampled token, the §5.1 resume contract"
+            );
+            // the wire blob re-materializes to exactly the decode position:
+            // prompt + generated − 1 (the feed token is not yet appended)
+            let like = SeqKv::empty(ev.l, ev.s, ev.c, ev.r);
+            let kv = crate::kvcache::quant::decode_kv_like(&ev.kv_wire, &like).unwrap();
+            assert_eq!(
+                kv.len,
+                ev.req.prompt_tokens.len() + ev.req.generated.len() - 1,
+                "codec preserves the resume position"
+            );
+        }
+
+        // measured-damage plumbing: an idle group's pool reports zero loss
+        let fault_rx = rt.memory_fault(1, 4).unwrap();
+        let report = fault_rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(report, crate::kvcache::InvalidationReport::default());
+        // a non-evacuating kill on the healthy (idle) group just retires it
+        rt.kill_group(1, false).unwrap();
+
+        let groups = rt.shutdown().unwrap();
+        // the evacuated streams are neither finished nor failed on the dead
+        // group: the supervisor owns them now
+        assert!(
+            groups[0].finished.iter().all(|r| r.id != 1 && r.id != 2),
+            "evacuated streams must not terminate on the dying group"
+        );
     }
 
     #[test]

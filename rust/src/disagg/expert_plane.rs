@@ -771,6 +771,12 @@ pub struct ExchangeStats {
     /// combine's [`CombineMsg::landed_ns`], capped by the attention
     /// window. Communication the carry un-exposed, not assumed overlap.
     pub carried_ns: u64,
+    /// §6.2 stage-3 token recomputation: extra exchange iterations this
+    /// group re-ran after a LinkFlap on its domain (coordinated one-
+    /// iteration rollback instead of a worker demotion).
+    pub recomputes: u64,
+    /// Wall ns spent inside those recomputed iterations.
+    pub recompute_ns: u64,
 }
 
 impl ExchangeStats {
@@ -804,6 +810,8 @@ impl ExchangeStats {
         self.fallback_slices += other.fallback_slices;
         self.carries += other.carries;
         self.carried_ns += other.carried_ns;
+        self.recomputes += other.recomputes;
+        self.recompute_ns += other.recompute_ns;
     }
 }
 

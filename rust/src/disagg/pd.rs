@@ -269,15 +269,30 @@ pub struct PrefillWorkerSpec {
     /// Long-sequence specialist (§7.2): with any specialist present, long
     /// prompts go only to specialists and short prompts avoid them.
     pub long_seq_specialist: bool,
+    /// §6.2 fault-injection knob (the [`ExpertWorkerSpec::failing`] pattern
+    /// brought to the prefill plane): after successfully processing this
+    /// many jobs the worker "die-crashes" — it retires itself from
+    /// placement and drops its backend, so anything still routed at it
+    /// drains through the backend-unavailable failure path instead of
+    /// hanging. `None` = healthy forever.
+    ///
+    /// [`ExpertWorkerSpec::failing`]: crate::disagg::expert_plane::ExpertWorkerSpec::failing
+    pub fail_after: Option<usize>,
 }
 
 impl PrefillWorkerSpec {
     pub fn new(id: usize) -> Self {
-        Self { id, long_seq_specialist: false }
+        Self { id, long_seq_specialist: false, fail_after: None }
     }
 
     pub fn specialist(id: usize) -> Self {
-        Self { id, long_seq_specialist: true }
+        Self { id, long_seq_specialist: true, fail_after: None }
+    }
+
+    /// A worker that die-crashes after `after` successful jobs (§6.2
+    /// fault injection).
+    pub fn failing(id: usize, after: usize) -> Self {
+        Self { id, long_seq_specialist: false, fail_after: Some(after) }
     }
 }
 
@@ -394,10 +409,11 @@ impl PrefillPlane {
                 exchange.as_ref().map(|(h, dom)| h.client(spec.id, *dom));
             let stats_w = exchange_stats.as_ref().map(Arc::clone);
             let id = spec.id;
+            let fail_after = spec.fail_after;
             let join = thread::Builder::new()
                 .name(format!("pd-prefill-{id}"))
                 .spawn(move || -> Vec<ServeRequest> {
-                    let model = match factory_w(id) {
+                    let mut model = match factory_w(id) {
                         Ok(m) => Some(m),
                         Err(e) => {
                             eprintln!("pd-prefill-{id} backend init failed: {e}");
@@ -415,6 +431,7 @@ impl PrefillPlane {
                     // one fabric cost model per worker thread prices the
                     // codec wire bytes (§5.1 step 7, DMA/URMA path)
                     let fabric = FabricParams::default();
+                    let mut jobs_done = 0usize;
                     while let Ok(job) = rx.recv() {
                         run_prefill_job(
                             job,
@@ -427,6 +444,17 @@ impl PrefillPlane {
                             client.as_ref().zip(stats_w.as_deref()),
                             &mut orphans,
                         );
+                        jobs_done += 1;
+                        if model.is_some() && fail_after.is_some_and(|n| jobs_done >= n) {
+                            // §6.2 injected DieCrash: the backend is gone
+                            // from here on. Retiring from placement first
+                            // means no *new* routing; jobs already in the
+                            // inbox (or racing the retirement) drain via
+                            // the backend-unavailable path above, so every
+                            // stream still terminates.
+                            alive_w[slot].store(false, Ordering::Relaxed);
+                            model = None;
+                        }
                     }
                     orphans
                 })
@@ -514,6 +542,22 @@ impl PrefillPlane {
             }
             e.0
         })
+    }
+
+    /// Retire prefill worker `te_id` from placement (§6.2 recovery: the
+    /// supervisor's response to a DieCrash landing on the prefill plane).
+    /// The worker's thread keeps draining anything already in its inbox —
+    /// those streams fail cleanly through the decode side — but
+    /// [`Self::tes`] stops offering it, so no new prompt routes there.
+    /// Returns false if `te_id` names no worker.
+    pub fn retire(&self, te_id: usize) -> bool {
+        match self.handles.iter().position(|h| h.id == te_id) {
+            Some(slot) => {
+                self.alive[slot].store(false, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Drop every job inbox so workers finish their outstanding prefills
@@ -861,6 +905,60 @@ mod tests {
         assert_eq!(groups[0].finished.len(), 1);
         assert_eq!(groups[0].finished[0].id, 5);
         assert_eq!(groups[0].finished[0].state, RequestState::Failed);
+    }
+
+    #[test]
+    fn failing_prefill_worker_dies_after_n_jobs_and_later_jobs_drain() {
+        use crate::coordinator::worker::{DecentralizedRuntime, GroupSpec, OutputWiring};
+        use crate::model::{DecodeModel, SimModel};
+        use crate::workload::straggler::StragglerProfile;
+        use std::time::{Duration, Instant};
+
+        let factory: ModelFactory =
+            Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>));
+        let rt = DecentralizedRuntime::spawn(
+            &[GroupSpec::new(0, 8, 256)],
+            StragglerProfile::none(1),
+            OutputWiring::None,
+            Arc::clone(&factory),
+        )
+        .unwrap();
+        // worker 0 die-crashes after its 2nd job; worker 1 is healthy
+        let plane = PrefillPlane::spawn(
+            &[PrefillWorkerSpec::failing(0, 2), PrefillWorkerSpec::new(1)],
+            factory,
+            rt.injector(),
+        )
+        .unwrap();
+        for i in 0..2u64 {
+            let req = ServeRequest::new(i, vec![256, 1], 3, 0);
+            plane.submit(0, PrefillJob { req, decode_group: 0 }).unwrap();
+        }
+        // the crash lands after the 2nd job finishes; placement retires it
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while plane.tes().len() != 1 {
+            assert!(Instant::now() < deadline, "failing worker never retired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(plane.tes()[0].id, 1);
+        // a straggler job routed at the dead worker still terminates: its
+        // thread drains the inbox through the backend-unavailable path
+        plane
+            .submit(0, PrefillJob { req: ServeRequest::new(9, vec![256, 1], 2, 0), decode_group: 0 })
+            .unwrap();
+        // explicit supervisor-side retirement is idempotent + checked
+        assert!(plane.retire(0));
+        assert!(!plane.retire(77), "unknown worker id");
+        let orphans = plane.shutdown().unwrap();
+        assert!(orphans.is_empty());
+        let groups = rt.shutdown().unwrap();
+        let done: Vec<_> =
+            groups[0].finished.iter().filter(|r| r.state == RequestState::Done).collect();
+        assert_eq!(done.len(), 2, "jobs before the crash complete normally");
+        let failed: Vec<_> =
+            groups[0].finished.iter().filter(|r| r.state == RequestState::Failed).collect();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].id, 9, "post-crash job fails cleanly, never hangs");
     }
 
     #[test]

@@ -9,4 +9,4 @@
 pub mod pool;
 pub mod quant;
 
-pub use pool::{BlockPool, KvUsage, SeqAlloc};
+pub use pool::{BlockPool, InvalidationReport, KvUsage, SeqAlloc};

@@ -26,6 +26,15 @@ impl KvUsage {
     }
 }
 
+/// Measured damage from a memory-fault invalidation
+/// ([`BlockPool::invalidate_blocks`]): how many in-use blocks were
+/// actually lost and which sequences owned them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct InvalidationReport {
+    pub blocks_lost: usize,
+    pub victim_seqs: Vec<u64>,
+}
+
 /// Per-sequence allocation handle.
 #[derive(Clone, Debug)]
 pub struct SeqAlloc {
@@ -130,6 +139,36 @@ impl BlockPool {
         self.seqs.len()
     }
 
+    /// Invalidate up to `blocks` in-use KV blocks (§6.2 stage-3 on-chip
+    /// memory fault): whole victim sequences are released — a sequence
+    /// with any poisoned block loses all its KV — until at least `blocks`
+    /// in-use blocks are gone or no sequences remain. Returns the
+    /// *measured* damage (actual blocks freed and the owning seq ids), so
+    /// `RecoveryAction::MemoryRemap` reports pool truth, never a modeled
+    /// constant. Victims are taken in ascending seq-id order for seeded
+    /// determinism.
+    pub fn invalidate_blocks(&mut self, blocks: usize) -> InvalidationReport {
+        let mut report = InvalidationReport { blocks_lost: 0, victim_seqs: Vec::new() };
+        if blocks == 0 {
+            return report;
+        }
+        let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            if report.blocks_lost >= blocks {
+                break;
+            }
+            // invariant: `id` came from `self.seqs.keys()` above and nothing
+            // removed it since — release cannot miss.
+            let alloc = self.seqs.get(&id).unwrap();
+            report.blocks_lost += alloc.blocks.len();
+            report.victim_seqs.push(id);
+            // invariant: same — the id is a live key of `self.seqs`.
+            self.release(id).unwrap();
+        }
+        report
+    }
+
     /// Free capacity check used by admission control before a KV RECV.
     pub fn can_admit(&self, prompt_tokens: usize, expected_output: usize) -> bool {
         let need =
@@ -177,6 +216,27 @@ mod tests {
         let mut p = BlockPool::new(8);
         p.admit(5, 4, 0).unwrap();
         assert!(p.admit(5, 4, 0).is_err());
+    }
+
+    #[test]
+    fn invalidate_blocks_reports_measured_damage() {
+        let mut p = BlockPool::new(32);
+        p.admit(1, 32, 0).unwrap(); // 2 blocks
+        p.admit(2, 48, 16).unwrap(); // 3 blocks + 1 reserved
+        p.admit(3, 16, 0).unwrap(); // 1 block
+        // asking for 3 blocks: seq 1 (2 blocks) is not enough, seq 2 joins
+        let r = p.invalidate_blocks(3);
+        assert_eq!(r.victim_seqs, vec![1, 2], "ascending seq-id order");
+        assert_eq!(r.blocks_lost, 5, "whole sequences go, counts measured");
+        // victims fully released: their blocks and reservations are back
+        let u = p.usage();
+        assert_eq!(u.used_blocks, 1, "only seq 3 remains");
+        assert_eq!(u.reserved_blocks, 0);
+        assert_eq!(p.active_seqs(), 1);
+        // an empty pool reports zero damage instead of erroring
+        let r = p.invalidate_blocks(100);
+        assert_eq!(r.victim_seqs, vec![3]);
+        assert_eq!(p.invalidate_blocks(4), InvalidationReport::default());
     }
 
     #[test]

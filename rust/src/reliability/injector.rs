@@ -1,0 +1,1055 @@
+//! Live §6.2 fault injection + recovery supervision.
+//!
+//! [`RecoveryManager`] *decides*; this module *acts on the live engine*.
+//! The [`RecoverySupervisor`] owns a seeded [`Fault`] schedule and, on
+//! every health sweep, fires the faults that have come due against real
+//! runtime knobs:
+//!
+//! * **DieCrash / ProcessHang** on a decode group — the group is demoted
+//!   from routing (closing the stale-healthy window) and killed via
+//!   [`InboxMsg::Die`](crate::coordinator::InboxMsg). Under
+//!   [`RecoveryStage::FineGrained`] / `PdSeparateFailover` the kill
+//!   evacuates: the dying worker encodes every in-flight stream over the
+//!   §4.7 codec wire path into the migration outbox, and the supervisor
+//!   re-injects each one into a surviving group via
+//!   [`Injector::inject_prefilled`] with generated-token state carried, so
+//!   decode resumes *mid-stream* (bounded retry with exponential backoff
+//!   and a per-migration deadline; terminal `Failed` only when no live
+//!   group can ever fit it).
+//! * **DieCrash** on a prefill TE — [`PrefillPlane::retire`] (decode
+//!   preserved, §6.2 stage 2).
+//! * **DieCrash** on an expert worker — [`ExpertPlane::demote`] +
+//!   `repair_coverage`, with the vertical-scaling decision recorded
+//!   against the *actual* replica map ([`replica_map_from_plane`]).
+//! * **LinkFlap** — coordinated one-iteration token recomputation: the
+//!   supervisor bumps the flapped domain's recompute epoch (Release); each
+//!   worker observes it (Acquire) before its next tick, re-runs one
+//!   activation-exchange iteration per missed epoch with its current
+//!   rows, and acks (Release). No demotion, no stream loss.
+//! * **MemoryFault** — invalidates real KV blocks from the target group's
+//!   pool; only the owning requests fail, and the damage the action
+//!   records is what [`BlockPool::invalidate_blocks`] *measured*, never a
+//!   model constant.
+//!
+//! Every action lands in [`RecoveryStats`] with a `downtime_ns` that is
+//! **measured** wherever the runtime exposes the end event (migration
+//! landed, recompute acked, remap reply received) and modeled via
+//! [`RecoveryManager::downtime_ns`] only where it does not (engine
+//! restart). The bench `recovery` scenario diffs these numbers across
+//! stages on the same fault schedule.
+//!
+//! Concurrency contract: the outbox (`reliability.migration_outbox`) is a
+//! leaf-level lock — workers only ever append under it with no other lock
+//! held, and the supervisor drains it with `std::mem::take`. KV bytes are
+//! owned by exactly one side at a time: dying worker → outbox →
+//! supervisor → destination pool. The model-check suite at the bottom of
+//! this file explores the migration seam (a migrating stream racing the
+//! destination's own crash) and the epoch/ack publication protocol.
+//!
+//! [`BlockPool::invalidate_blocks`]: crate::kvcache::BlockPool::invalidate_blocks
+
+use crate::config::ReliabilityConfig;
+use crate::coordinator::dp_group::PrefilledSeq;
+use crate::coordinator::worker::{
+    DecentralizedRuntime, EvacuatedSeq, Injector, RecoveryWiring,
+};
+use crate::disagg::expert_plane::ExpertPlane;
+use crate::disagg::pd::PrefillPlane;
+use crate::eplb::ReplicaMap;
+use crate::fabric::fault::{Fault, FaultKind};
+use crate::kvcache::pool::BlockPool;
+use crate::kvcache::quant::decode_kv_like;
+use crate::kvcache::InvalidationReport;
+use crate::model::SeqKv;
+use crate::sync::atomic::Ordering;
+use crate::sync::mpsc;
+
+use super::recovery::{FaultContext, RecoveryAction, RecoveryManager, RecoveryStage};
+
+/// One recovery decision the supervisor took against the live engine.
+#[derive(Clone, Debug)]
+pub struct ActionRecord {
+    pub fault: FaultKind,
+    /// Die index from the fault schedule (see the target mapping on
+    /// [`RecoverySupervisor`]).
+    pub die: usize,
+    pub action: RecoveryAction,
+    /// Runtime-clock nanoseconds of unavailability attributed to this
+    /// action. Measured from fault to observed end event where the
+    /// runtime exposes one; the modeled [`RecoveryManager::downtime_ns`]
+    /// otherwise.
+    pub downtime_ns: u64,
+    /// True iff `downtime_ns` was measured, not modeled.
+    pub measured: bool,
+}
+
+/// What the supervisor observed across a whole fault schedule.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStats {
+    pub actions: Vec<ActionRecord>,
+    /// Streams that resumed decoding mid-stream on a surviving group.
+    pub streams_resumed: usize,
+    /// Streams that terminally failed (deadline / retries exhausted).
+    pub streams_failed: usize,
+    /// Request ids of the resumed streams (for bit-exactness checks).
+    pub resumed_ids: Vec<u64>,
+    /// Per-resumed-stream fault→landed latency (migration p99 source).
+    pub migration_ns: Vec<u64>,
+    /// Terminal failures that could not even be failed back into a live
+    /// group's finished log (every inbox rejected the message).
+    pub orphaned: usize,
+}
+
+impl RecoveryStats {
+    /// Largest measured downtime among actions of `kind`, 0 if none.
+    pub fn max_downtime_ns(&self, kind: FaultKind) -> u64 {
+        self.actions
+            .iter()
+            .filter(|a| a.fault == kind)
+            .map(|a| a.downtime_ns)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// A stream waiting to land on a surviving group.
+struct PendingMigration {
+    seq: EvacuatedSeq,
+    retries: u32,
+    next_attempt_ns: u64,
+    deadline_ns: u64,
+    /// When the originating fault fired (runtime clock); drain time when
+    /// the outbox entry came from a self-detected crash the supervisor
+    /// never scheduled.
+    fault_at_ns: u64,
+    /// Index into `stats.actions` whose downtime this migration updates.
+    action_idx: Option<usize>,
+}
+
+/// A LinkFlap recompute waiting for every live worker in the domain to ack.
+struct PendingRecompute {
+    epoch: u64,
+    issued_ns: u64,
+    /// Board slots tracked for acks (the flapped domain's live groups).
+    slots: Vec<usize>,
+    action_idx: usize,
+}
+
+/// A MemoryFault whose measured damage report has not arrived yet.
+struct PendingMemFault {
+    rx: mpsc::Receiver<InvalidationReport>,
+    die: usize,
+    issued_ns: u64,
+}
+
+/// Build the *actual* expert replica map from a live [`ExpertPlane`]'s
+/// shard owners, so vertical-scaling decisions see real replica placement
+/// instead of an idealized identity layout.
+pub fn replica_map_from_plane(plane: &ExpertPlane) -> ReplicaMap {
+    let owners = plane.shard_owners();
+    let mut map = ReplicaMap {
+        n_logical: owners.len(),
+        slots: vec![Vec::new(); owners.len()],
+        slot_npu: Vec::new(),
+    };
+    for (shard, workers) in owners.iter().enumerate() {
+        for &w in workers {
+            map.slots[shard].push(map.slot_npu.len());
+            map.slot_npu.push(w);
+        }
+    }
+    map
+}
+
+/// Drives a seeded fault schedule against the live engine and supervises
+/// the resulting recoveries to completion. Owned by the
+/// [`ServingEngine`](crate::coordinator::ServingEngine) and ticked from
+/// `health_sweep`.
+///
+/// Target mapping for a fault's `die` index, with `G` decode groups and
+/// `P` prefill TEs: `die < G` hits decode group `group_ids()[die]`;
+/// `G <= die < G+P` hits prefill TE `die - G`; anything above hits expert
+/// worker `die - G - P`. `LinkFlap` ignores the mapping and flaps network
+/// domain `die % n_domains`; `MemoryFault` always lands on a decode
+/// group's pool (`die % G`).
+pub struct RecoverySupervisor {
+    mgr: RecoveryManager,
+    wiring: RecoveryWiring,
+    /// Sorted by `at_ns`; `cursor` is the first not-yet-fired entry.
+    schedule: Vec<Fault>,
+    cursor: usize,
+    backoff_ns: u64,
+    deadline_ns: u64,
+    max_retries: u32,
+    /// KV blocks a MemoryFault invalidates (fault magnitude knob; the
+    /// *damage* recorded is still whatever the pool measures).
+    pub mem_fault_blocks: usize,
+    pending_migrations: Vec<PendingMigration>,
+    pending_recomputes: Vec<PendingRecompute>,
+    pending_memfaults: Vec<PendingMemFault>,
+    /// Killed decode groups: `(group_id, fault_at_ns, action_idx)`.
+    killed: Vec<(usize, u64, usize)>,
+    /// Domain of each board slot (mirrors `GroupSpec::domain`).
+    group_domains: Vec<usize>,
+    n_prefill: usize,
+    stats: RecoveryStats,
+}
+
+impl RecoverySupervisor {
+    /// `group_domains[slot]` must mirror the spawned `GroupSpec::domain`
+    /// values in board-slot order; `n_prefill` sizes the prefill band of
+    /// the die→target mapping.
+    pub fn new(
+        cfg: &ReliabilityConfig,
+        wiring: RecoveryWiring,
+        mut schedule: Vec<Fault>,
+        group_domains: Vec<usize>,
+        n_prefill: usize,
+    ) -> Self {
+        schedule.sort_by_key(|f| f.at_ns);
+        Self {
+            mgr: RecoveryManager::from_config(cfg),
+            wiring,
+            schedule,
+            cursor: 0,
+            backoff_ns: cfg.retry_backoff_ms.saturating_mul(1_000_000),
+            deadline_ns: cfg.migration_deadline_ms.saturating_mul(1_000_000),
+            max_retries: cfg.max_migration_retries,
+            mem_fault_blocks: 4,
+            pending_migrations: Vec::new(),
+            pending_recomputes: Vec::new(),
+            pending_memfaults: Vec::new(),
+            killed: Vec::new(),
+            group_domains,
+            n_prefill,
+            stats: RecoveryStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &RecoveryStats {
+        &self.stats
+    }
+
+    pub fn stage(&self) -> RecoveryStage {
+        self.mgr.stage
+    }
+
+    /// True once every scheduled fault has fired *and* every recovery it
+    /// triggered has terminated (landed, acked, replied, or failed).
+    /// Drivers loop `health_sweep` until this holds before judging a run.
+    pub fn quiesced(&self) -> bool {
+        self.cursor >= self.schedule.len()
+            && self.pending_migrations.is_empty()
+            && self.pending_recomputes.is_empty()
+            && self.pending_memfaults.is_empty()
+            && self
+                .wiring
+                .outbox
+                .lock()
+                .map(|o| o.is_empty())
+                .unwrap_or(true)
+    }
+
+    /// One supervision pass: fire due faults, drain the migration outbox,
+    /// drive pending migrations/recomputes/remaps toward termination.
+    /// `injector` is created per sweep and dropped right after (a live
+    /// clone across shutdown would hang the worker joins).
+    pub fn tick(
+        &mut self,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        injector: &Injector,
+        expert: Option<&ExpertPlane>,
+        prefill: Option<&PrefillPlane>,
+    ) {
+        let group_ids = runtime.group_ids();
+        self.fire_due(now_ns, runtime, &group_ids, expert, prefill);
+        self.drain_outbox(now_ns);
+        self.drive_migrations(now_ns, runtime, injector, &group_ids);
+        self.poll_recomputes(now_ns, &group_ids);
+        self.poll_memfaults(now_ns, runtime, expert, &group_ids);
+    }
+
+    /// In-flight request count + deployment shape for `decide`.
+    fn decide_inputs(
+        &self,
+        runtime: &DecentralizedRuntime,
+        expert: Option<&ExpertPlane>,
+    ) -> (usize, usize, usize, ReplicaMap) {
+        let in_flight: usize = runtime
+            .load_views()
+            .iter()
+            .map(|v| v.status.running)
+            .sum();
+        let dp_groups = runtime.n_groups();
+        let ep_ranks = expert.map(|p| p.alive_workers()).unwrap_or(0);
+        let map = expert
+            .map(replica_map_from_plane)
+            .unwrap_or_else(|| ReplicaMap::identity(1, 1));
+        (in_flight, dp_groups, ep_ranks, map)
+    }
+
+    fn record(&mut self, fault: FaultKind, die: usize, action: RecoveryAction) -> usize {
+        let downtime_ns = self.mgr.downtime_ns(&action);
+        self.stats.actions.push(ActionRecord {
+            fault,
+            die,
+            action,
+            downtime_ns,
+            measured: false,
+        });
+        self.stats.actions.len() - 1
+    }
+
+    fn fire_due(
+        &mut self,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        group_ids: &[usize],
+        expert: Option<&ExpertPlane>,
+        prefill: Option<&PrefillPlane>,
+    ) {
+        while self.cursor < self.schedule.len() && self.schedule[self.cursor].at_ns <= now_ns {
+            let fault = self.schedule[self.cursor].clone();
+            self.cursor += 1;
+            match fault.kind {
+                FaultKind::DieCrash | FaultKind::ProcessHang => {
+                    self.fire_crash(&fault, now_ns, runtime, group_ids, expert, prefill);
+                }
+                FaultKind::LinkFlap => {
+                    self.fire_link_flap(&fault, now_ns, runtime, group_ids, expert);
+                }
+                FaultKind::MemoryFault => {
+                    if !group_ids.is_empty() {
+                        let gid = group_ids[fault.die % group_ids.len()];
+                        if let Ok(rx) = runtime.memory_fault(gid, self.mem_fault_blocks) {
+                            self.pending_memfaults.push(PendingMemFault {
+                                rx,
+                                die: fault.die,
+                                issued_ns: now_ns,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn fire_crash(
+        &mut self,
+        fault: &Fault,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        group_ids: &[usize],
+        expert: Option<&ExpertPlane>,
+        prefill: Option<&PrefillPlane>,
+    ) {
+        let (in_flight, dp_groups, ep_ranks, map) = self.decide_inputs(runtime, expert);
+        let ctx = FaultContext::on_rank(fault.die);
+        let action = self
+            .mgr
+            .decide(fault.kind, in_flight, dp_groups, ep_ranks, &ctx, &map);
+        let n_groups = group_ids.len();
+        if fault.die < n_groups {
+            let gid = group_ids[fault.die];
+            // close the stale-healthy routing window before the corpse
+            // publishes its own unhealthy status
+            runtime.demote(gid);
+            let evacuate = self.mgr.stage != RecoveryStage::RestartTheWorld;
+            if runtime.kill_group(gid, evacuate).is_ok() {
+                let idx = self.record(fault.kind, fault.die, action);
+                if evacuate {
+                    self.killed.push((gid, now_ns, idx));
+                }
+            }
+        } else if fault.die < n_groups + self.n_prefill {
+            let te = fault.die - n_groups;
+            if let Some(p) = prefill {
+                p.retire(te);
+            }
+            self.record(fault.kind, fault.die, action);
+        } else {
+            let worker = fault.die - n_groups - self.n_prefill;
+            if let Some(p) = expert {
+                p.demote(worker);
+                p.repair_coverage();
+            }
+            self.record(fault.kind, fault.die, action);
+        }
+    }
+
+    fn fire_link_flap(
+        &mut self,
+        fault: &Fault,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        group_ids: &[usize],
+        expert: Option<&ExpertPlane>,
+    ) {
+        let (in_flight, dp_groups, ep_ranks, map) = self.decide_inputs(runtime, expert);
+        let ctx = FaultContext::on_rank(fault.die);
+        let action = self
+            .mgr
+            .decide(fault.kind, in_flight, dp_groups, ep_ranks, &ctx, &map);
+        let idx = self.record(fault.kind, fault.die, action);
+        if self.mgr.stage != RecoveryStage::FineGrained {
+            return; // earlier stages restart / demote; modeled record only
+        }
+        let n_domains = self.wiring.recompute_epochs.len().max(1);
+        let domain = fault.die % n_domains;
+        let Some(ep) = self.wiring.recompute_epochs.get(domain) else {
+            return;
+        };
+        let epoch = ep.fetch_add(1, Ordering::Release) + 1;
+        let slots: Vec<usize> = self
+            .group_domains
+            .iter()
+            .enumerate()
+            .filter(|&(slot, &dom)| {
+                dom == domain
+                    && group_ids
+                        .get(slot)
+                        .is_some_and(|gid| !self.killed.iter().any(|&(k, _, _)| k == *gid))
+            })
+            .map(|(slot, _)| slot)
+            .collect();
+        self.pending_recomputes.push(PendingRecompute {
+            epoch,
+            issued_ns: now_ns,
+            slots,
+            action_idx: idx,
+        });
+    }
+
+    /// Pull freshly-evacuated streams out of the shared outbox. After the
+    /// take, the KV bytes are owned by the supervisor until a destination
+    /// pool admits them.
+    fn drain_outbox(&mut self, now_ns: u64) {
+        let evacuated: Vec<EvacuatedSeq> = match self.wiring.outbox.lock() {
+            Ok(mut o) => std::mem::take(&mut *o),
+            Err(_) => return,
+        };
+        for seq in evacuated {
+            let (fault_at_ns, action_idx) = self
+                .killed
+                .iter()
+                .find(|&&(gid, _, _)| gid == seq.from_group)
+                .map(|&(_, at, idx)| (at, Some(idx)))
+                .unwrap_or((now_ns, None));
+            self.pending_migrations.push(PendingMigration {
+                seq,
+                retries: 0,
+                next_attempt_ns: now_ns,
+                deadline_ns: now_ns.saturating_add(self.deadline_ns),
+                fault_at_ns,
+                action_idx,
+            });
+        }
+    }
+
+    /// Pick the surviving group with the most KV headroom that can hold
+    /// the stream (resumed KV + remaining output budget).
+    fn pick_target(
+        &self,
+        seq: &EvacuatedSeq,
+        runtime: &DecentralizedRuntime,
+    ) -> Option<usize> {
+        let kv_tokens =
+            seq.req.prompt_tokens.len() + seq.req.generated.len().saturating_sub(1);
+        let remaining = seq
+            .req
+            .max_new_tokens
+            .saturating_sub(seq.req.generated.len());
+        let need = BlockPool::blocks_for_tokens(kv_tokens + remaining.max(1));
+        runtime
+            .load_views()
+            .iter()
+            .filter(|v| {
+                v.status.healthy
+                    && v.status.group != seq.from_group
+                    && !self.killed.iter().any(|&(k, _, _)| k == v.status.group)
+                    && v.status.kv_headroom(need)
+            })
+            .min_by(|a, b| {
+                a.status
+                    .kv_usage
+                    .partial_cmp(&b.status.kv_usage)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|v| v.status.group)
+    }
+
+    fn drive_migrations(
+        &mut self,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        injector: &Injector,
+        group_ids: &[usize],
+    ) {
+        let mut still_pending = Vec::new();
+        for mut pm in std::mem::take(&mut self.pending_migrations) {
+            if pm.next_attempt_ns > now_ns {
+                still_pending.push(pm);
+                continue;
+            }
+            let target = self.pick_target(&pm.seq, runtime);
+            let landed = match target {
+                Some(gid) => {
+                    match decode_kv_like(
+                        &pm.seq.kv_wire,
+                        &SeqKv::empty(pm.seq.l, pm.seq.s, pm.seq.c, pm.seq.r),
+                    ) {
+                        Ok(kv) => {
+                            let EvacuatedSeq {
+                                req,
+                                kv_wire,
+                                l,
+                                s,
+                                c,
+                                r,
+                                feed,
+                                hidden,
+                                from_group,
+                            } = pm.seq;
+                            let rid = req.id;
+                            match injector.inject_prefilled(
+                                gid,
+                                PrefilledSeq { req, kv, first_token: feed, hidden },
+                            ) {
+                                Ok(()) => {
+                                    self.stats.resumed_ids.push(rid);
+                                    true
+                                }
+                                Err(back) => {
+                                    // inbox rejected: KV ownership returns
+                                    // to the supervisor for the retry
+                                    pm.seq = EvacuatedSeq {
+                                        req: back.req,
+                                        kv_wire,
+                                        l,
+                                        s,
+                                        c,
+                                        r,
+                                        feed: back.first_token,
+                                        hidden: back.hidden,
+                                        from_group,
+                                    };
+                                    false
+                                }
+                            }
+                        }
+                        // invariant: encode/decode round-trip over the
+                        // same dims cannot fail; treat as terminal anyway
+                        Err(_) => {
+                            pm.retries = self.max_retries;
+                            pm.deadline_ns = 0;
+                            false
+                        }
+                    }
+                }
+                None => false,
+            };
+            if landed {
+                let latency = now_ns.saturating_sub(pm.fault_at_ns);
+                self.stats.streams_resumed += 1;
+                self.stats.migration_ns.push(latency);
+                if let Some(idx) = pm.action_idx {
+                    let a = &mut self.stats.actions[idx];
+                    // a group's downtime ends when its *last* stream lands
+                    a.downtime_ns = if a.measured {
+                        a.downtime_ns.max(latency)
+                    } else {
+                        latency
+                    };
+                    a.measured = true;
+                }
+                continue;
+            }
+            pm.retries += 1;
+            if pm.retries > self.max_retries || now_ns >= pm.deadline_ns {
+                self.fail_migration(pm, injector, group_ids);
+                continue;
+            }
+            // exponential backoff, capped so the shift cannot overflow
+            let shift = pm.retries.min(16);
+            pm.next_attempt_ns =
+                now_ns.saturating_add(self.backoff_ns.saturating_mul(1u64 << shift));
+            still_pending.push(pm);
+        }
+        self.pending_migrations = still_pending;
+    }
+
+    /// Terminal migration failure: route the request into any live
+    /// group's fail path so it still emits a `Finished(Failed)` event
+    /// (falling back to the dead origin's drain loop), instead of
+    /// vanishing.
+    fn fail_migration(
+        &mut self,
+        pm: PendingMigration,
+        injector: &Injector,
+        group_ids: &[usize],
+    ) {
+        self.stats.streams_failed += 1;
+        let mut req = pm.seq.req;
+        let origin = pm.seq.from_group;
+        for &gid in group_ids.iter().filter(|&&g| g != origin).chain([&origin]) {
+            match injector.fail_prefilled(gid, req) {
+                Ok(()) => return,
+                Err(back) => req = back,
+            }
+        }
+        self.stats.orphaned += 1;
+    }
+
+    fn poll_recomputes(&mut self, now_ns: u64, group_ids: &[usize]) {
+        let killed = &self.killed;
+        let acks = &self.wiring.recompute_acks;
+        let actions = &mut self.stats.actions;
+        self.pending_recomputes.retain(|pr| {
+            let done = pr.slots.iter().all(|&slot| {
+                // a group killed after the flap never acks; skip it
+                let dead = group_ids
+                    .get(slot)
+                    .is_some_and(|gid| killed.iter().any(|&(k, _, _)| k == *gid));
+                dead || acks
+                    .get(slot)
+                    .is_some_and(|a| a.load(Ordering::Acquire) >= pr.epoch)
+            });
+            if done {
+                let a = &mut actions[pr.action_idx];
+                a.downtime_ns = now_ns.saturating_sub(pr.issued_ns);
+                a.measured = true;
+            }
+            !done
+        });
+    }
+
+    fn poll_memfaults(
+        &mut self,
+        now_ns: u64,
+        runtime: &DecentralizedRuntime,
+        expert: Option<&ExpertPlane>,
+        _group_ids: &[usize],
+    ) {
+        let mut still_pending = Vec::new();
+        for pmf in std::mem::take(&mut self.pending_memfaults) {
+            match pmf.rx.try_recv() {
+                Ok(report) => {
+                    let (in_flight, dp_groups, ep_ranks, map) =
+                        self.decide_inputs(runtime, expert);
+                    let ctx = FaultContext {
+                        faulted_rank: pmf.die,
+                        kv_blocks_lost: report.blocks_lost,
+                        requests_failed: report.victim_seqs.len(),
+                    };
+                    let action = self.mgr.decide(
+                        FaultKind::MemoryFault,
+                        in_flight,
+                        dp_groups,
+                        ep_ranks,
+                        &ctx,
+                        &map,
+                    );
+                    let idx = self.record(FaultKind::MemoryFault, pmf.die, action);
+                    let a = &mut self.stats.actions[idx];
+                    a.downtime_ns = now_ns.saturating_sub(pmf.issued_ns);
+                    a.measured = true;
+                }
+                Err(mpsc::TryRecvError::Empty) => still_pending.push(pmf),
+                // worker exited without replying (crashed first): the
+                // fault dissolved with the group; nothing to remap
+                Err(mpsc::TryRecvError::Disconnected) => {}
+            }
+        }
+        self.pending_memfaults = still_pending;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ServeRequest;
+    use crate::coordinator::worker::{GroupSpec, OutputWiring};
+    use crate::coordinator::RequestState;
+    use crate::model::SimModel;
+    use crate::sync::Arc;
+    use crate::workload::straggler::StragglerProfile;
+    use std::time::{Duration, Instant};
+
+    fn factory() -> crate::coordinator::worker::ModelFactory {
+        Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn crate::model::DecodeModel>))
+    }
+
+    fn cfg_with_stage(stage: RecoveryStage) -> ReliabilityConfig {
+        ReliabilityConfig { stage, ..ReliabilityConfig::default() }
+    }
+
+    fn req(id: u64, max_new: usize) -> ServeRequest {
+        ServeRequest::new(id, vec![1, 2, 3, 4], max_new, 0)
+    }
+
+    fn tick_until(
+        sup: &mut RecoverySupervisor,
+        rt: &DecentralizedRuntime,
+        mut done: impl FnMut(&RecoverySupervisor) -> bool,
+    ) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            {
+                let inj = rt.injector();
+                sup.tick(rt.now_ns(), rt, &inj, None, None);
+            }
+            if done(sup) {
+                return;
+            }
+            assert!(Instant::now() < deadline, "supervisor did not converge");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stage 1 answers every crash with a modeled full restart: the group
+    /// dies without evacuation and no migration ever starts.
+    #[test]
+    fn restart_the_world_records_modeled_full_restart() {
+        let wiring = RecoveryWiring::new(1, 2);
+        let specs = vec![GroupSpec::new(0, 4, 256), GroupSpec::new(1, 4, 256)];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        let schedule = vec![Fault {
+            kind: FaultKind::DieCrash,
+            die: 0,
+            at_ns: 0,
+            duration_ns: 0,
+        }];
+        let mut sup = RecoverySupervisor::new(
+            &cfg_with_stage(RecoveryStage::RestartTheWorld),
+            wiring,
+            schedule,
+            vec![0, 0],
+            0,
+        );
+        tick_until(&mut sup, &rt, |s| s.quiesced() && !s.stats().actions.is_empty());
+        let stats = sup.stats();
+        assert_eq!(stats.actions.len(), 1);
+        assert!(matches!(
+            stats.actions[0].action,
+            RecoveryAction::FullEngineRestart { .. }
+        ));
+        assert!(!stats.actions[0].measured, "engine restart is modeled");
+        assert_eq!(stats.streams_resumed, 0);
+        rt.shutdown().unwrap();
+    }
+
+    /// The migration engine end-to-end on a self-detected crash: a
+    /// failing group evacuates its two running streams, the supervisor
+    /// re-injects them into the survivor, and both resume to `Done` with
+    /// their pre-crash tokens intact.
+    #[test]
+    fn supervisor_migrates_evacuated_streams_to_survivor() {
+        let wiring = RecoveryWiring::new(1, 2);
+        let specs = vec![
+            GroupSpec::failing(0, 4, 256, 5),
+            GroupSpec::new(1, 4, 256),
+        ];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        rt.submit_to(0, req(1, 64)).unwrap();
+        rt.submit_to(0, req(2, 64)).unwrap();
+        let mut sup = RecoverySupervisor::new(
+            &cfg_with_stage(RecoveryStage::FineGrained),
+            wiring,
+            Vec::new(),
+            vec![0, 0],
+            0,
+        );
+        tick_until(&mut sup, &rt, |s| s.stats().streams_resumed == 2);
+        let stats = sup.stats().clone();
+        assert_eq!(stats.streams_failed, 0);
+        assert_eq!(stats.orphaned, 0);
+        assert_eq!(stats.migration_ns.len(), 2);
+        let mut ids = stats.resumed_ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+        let groups = rt.shutdown().unwrap();
+        let survivor = groups.iter().find(|g| g.id == 1).unwrap();
+        for id in [1u64, 2] {
+            let r = survivor
+                .finished
+                .iter()
+                .find(|r| r.id == id)
+                .expect("resumed stream finished on the survivor");
+            assert_eq!(r.state, RequestState::Done);
+            assert_eq!(r.generated.len(), 64, "full budget across the crash");
+        }
+    }
+
+    /// FineGrained LinkFlap: no demotion — the domain's live workers run
+    /// one recomputation iteration and ack, and the action's downtime is
+    /// the measured flap→all-acked latency.
+    #[test]
+    fn link_flap_recompute_is_acked_and_measured() {
+        let wiring = RecoveryWiring::new(2, 2);
+        let specs = vec![
+            GroupSpec::new(0, 4, 256).with_domain(0),
+            GroupSpec::new(1, 4, 256).with_domain(1),
+        ];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        let schedule = vec![Fault {
+            kind: FaultKind::LinkFlap,
+            die: 1,
+            at_ns: 0,
+            duration_ns: 1_000,
+        }];
+        let mut sup = RecoverySupervisor::new(
+            &cfg_with_stage(RecoveryStage::FineGrained),
+            wiring,
+            schedule,
+            vec![0, 1],
+            0,
+        );
+        tick_until(&mut sup, &rt, |s| s.quiesced());
+        let stats = sup.stats();
+        assert_eq!(stats.actions.len(), 1);
+        assert!(matches!(
+            stats.actions[0].action,
+            RecoveryAction::TokenRecomputation { .. }
+        ));
+        assert!(stats.actions[0].measured, "recompute downtime is measured");
+        let views = rt.load_views();
+        assert!(views.iter().all(|v| v.status.healthy), "no demotion on flap");
+        rt.shutdown().unwrap();
+    }
+
+    /// MemoryFault on an idle group: the remap action records the *pool's*
+    /// measured damage (zero blocks, zero victims on an idle pool).
+    #[test]
+    fn memory_fault_records_measured_pool_damage() {
+        let wiring = RecoveryWiring::new(1, 1);
+        let specs = vec![GroupSpec::new(0, 4, 256)];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        let schedule = vec![Fault {
+            kind: FaultKind::MemoryFault,
+            die: 0,
+            at_ns: 0,
+            duration_ns: 0,
+        }];
+        let mut sup = RecoverySupervisor::new(
+            &cfg_with_stage(RecoveryStage::FineGrained),
+            wiring,
+            schedule,
+            vec![0],
+            0,
+        );
+        tick_until(&mut sup, &rt, |s| s.quiesced());
+        let stats = sup.stats();
+        assert_eq!(stats.actions.len(), 1);
+        assert_eq!(
+            stats.actions[0].action,
+            RecoveryAction::MemoryRemap { kv_blocks_lost: 0, requests_failed: 0 }
+        );
+        assert!(stats.actions[0].measured);
+        rt.shutdown().unwrap();
+    }
+
+    /// A migration with no live destination exhausts its retries and
+    /// terminally fails through a group's fail path — never silently lost.
+    #[test]
+    fn migration_without_survivor_fails_terminally() {
+        let wiring = RecoveryWiring::new(1, 1);
+        let specs = vec![GroupSpec::failing(0, 4, 256, 5)];
+        let rt = DecentralizedRuntime::spawn_recovery(
+            &specs,
+            StragglerProfile::none(2),
+            OutputWiring::None,
+            factory(),
+            None,
+            Some(wiring.clone()),
+        )
+        .unwrap();
+        rt.submit_to(0, req(9, 64)).unwrap();
+        let mut cfg = cfg_with_stage(RecoveryStage::FineGrained);
+        cfg.retry_backoff_ms = 0;
+        cfg.max_migration_retries = 2;
+        let mut sup = RecoverySupervisor::new(&cfg, wiring, Vec::new(), vec![0], 0);
+        tick_until(&mut sup, &rt, |s| s.stats().streams_failed == 1);
+        assert_eq!(sup.stats().streams_resumed, 0);
+        assert_eq!(sup.stats().orphaned, 0, "dead group's drain loop fails it");
+        let groups = rt.shutdown().unwrap();
+        let r = groups[0].finished.iter().find(|r| r.id == 9).unwrap();
+        assert_eq!(r.state, RequestState::Failed);
+    }
+}
+
+/// Deterministic exploration of the migration seam (see CONCURRENCY.md).
+/// These model the *protocol*, not the full engine: the shared state is
+/// the real lock classes (`reliability.migration_outbox` leaf + a
+/// destination inbox), driven by model threads under seeded schedules.
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use crate::sync::model::{self, Config};
+    use crate::sync::{named_mutex, Arc};
+
+    /// A migrating stream racing the destination's own crash converges:
+    /// it lands exactly once or fails terminally — never duplicated,
+    /// never lost. Mirrors the production seam where the sweep deposits
+    /// into a destination inbox that may itself die and re-evacuate; the
+    /// two locks are never held together (outbox stays leaf-level).
+    #[test]
+    fn model_migration_lands_exactly_once_despite_destination_crash() {
+        model::check_with(
+            "model_migration_lands_exactly_once_despite_destination_crash",
+            Config { iters: 60, ..Config::default() },
+            || {
+                let outbox = Arc::new(named_mutex(
+                    "reliability.migration_outbox",
+                    vec![7u64],
+                ));
+                let inbox = Arc::new(named_mutex("reliability.mc_inbox", Vec::<u64>::new()));
+                let dest_alive = Arc::new(AtomicBool::new(true));
+                let landed = Arc::new(AtomicU64::new(0));
+
+                let d_inbox = Arc::clone(&inbox);
+                let d_outbox = Arc::clone(&outbox);
+                let d_alive = Arc::clone(&dest_alive);
+                let d_landed = Arc::clone(&landed);
+                let dest = model::spawn(move || {
+                    // the destination polls its inbox a bounded number of
+                    // times; if the stream arrives in that window it is
+                    // admitted, otherwise the worker crashes — evacuating
+                    // anything that raced into the inbox back to the
+                    // outbox, exactly like run_dead_group's drain
+                    for _ in 0..2 {
+                        let taken = d_inbox.lock().unwrap().pop();
+                        if let Some(_s) = taken {
+                            d_landed.fetch_add(1, Ordering::Release);
+                            return;
+                        }
+                    }
+                    d_alive.store(false, Ordering::Release);
+                    let mut stranded = {
+                        let mut ib = d_inbox.lock().unwrap();
+                        std::mem::take(&mut *ib)
+                    };
+                    // locks taken one at a time: outbox stays a leaf
+                    d_outbox.lock().unwrap().append(&mut stranded);
+                });
+
+                let mut attempts = 0u32;
+                let mut failed = 0u64;
+                loop {
+                    if landed.load(Ordering::Acquire) == 1 || failed == 1 {
+                        break;
+                    }
+                    // a dead destination may have stranded the stream in
+                    // its inbox before we observed the crash: reclaim it
+                    if !dest_alive.load(Ordering::Acquire) {
+                        let mut stranded = {
+                            let mut ib = inbox.lock().unwrap();
+                            std::mem::take(&mut *ib)
+                        };
+                        outbox.lock().unwrap().append(&mut stranded);
+                    }
+                    let popped = outbox.lock().unwrap().pop();
+                    let Some(s) = popped else { continue };
+                    if !dest_alive.load(Ordering::Acquire) || attempts >= 4 {
+                        // no surviving destination: terminal failure
+                        failed = 1;
+                        continue;
+                    }
+                    attempts += 1;
+                    inbox.lock().unwrap().push(s);
+                }
+                dest.join().unwrap();
+                // once the destination has terminated, re-reconcile: a
+                // crash racing our last check may have re-deposited the
+                // stream after we decided nothing was in flight
+                let leftover = outbox.lock().unwrap().len() + inbox.lock().unwrap().len();
+                let landed_n = landed.load(Ordering::Acquire);
+                if failed == 0 {
+                    assert_eq!(landed_n, 1, "stream lost: never landed, never failed");
+                    assert_eq!(leftover, 0, "stream duplicated after landing");
+                } else {
+                    assert_eq!(landed_n, 0, "stream both landed and failed");
+                }
+            },
+        );
+    }
+
+    /// The LinkFlap epoch/ack protocol publishes correctly: when the
+    /// supervisor observes a worker's ack (Acquire), the worker's
+    /// recomputation work — written Relaxed before the Release ack — is
+    /// visible. A missing release on the ack would fail under PSO.
+    #[test]
+    fn model_recompute_ack_publishes_recomputed_work() {
+        model::check_with(
+            "model_recompute_ack_publishes_recomputed_work",
+            Config { iters: 60, ..Config::default() },
+            || {
+                let epoch = Arc::new(AtomicU64::new(0));
+                let ack = Arc::new(AtomicU64::new(0));
+                let work = Arc::new(AtomicU64::new(0));
+
+                let w_epoch = Arc::clone(&epoch);
+                let w_ack = Arc::clone(&ack);
+                let w_work = Arc::clone(&work);
+                let worker = model::spawn(move || {
+                    let mut have = 0u64;
+                    loop {
+                        let want = w_epoch.load(Ordering::Acquire);
+                        if want > have {
+                            w_work.store(w_work.load(Ordering::Relaxed) + (want - have), Ordering::Relaxed);
+                            have = want;
+                            w_ack.store(want, Ordering::Release);
+                        }
+                        if have >= 1 {
+                            return;
+                        }
+                    }
+                });
+
+                epoch.fetch_add(1, Ordering::Release);
+                loop {
+                    if ack.load(Ordering::Acquire) >= 1 {
+                        assert!(
+                            work.load(Ordering::Relaxed) >= 1,
+                            "ack visible before the recomputed work"
+                        );
+                        break;
+                    }
+                }
+                worker.join().unwrap();
+            },
+        );
+    }
+}

@@ -1,19 +1,34 @@
-//! Reliability plane (paper §6, DESIGN.md S14).
+//! Reliability plane (paper §6, DESIGN.md S14) — detection, decision, and
+//! **live** recovery execution.
 //!
 //! * [`heartbeat`] — multi-tier heartbeats: control plane → TE-shell → DP
 //!   masters, with decoupled intervals; catches crashes *and* stuck event
 //!   loops (§6.1).
 //! * [`probe`]     — link probing for the asynchronous KV-transfer path:
 //!   dummy payloads distinguish decode-side saturation from link faults.
-//! * [`recovery`]  — the three-stage evolution (§6.2): restart-the-world →
+//! * [`recovery`]  — the three-stage *policy* (§6.2): restart-the-world →
 //!   P/D separate failover (kill-P-to-preserve-D, vertical decode scaling
 //!   with EP-LB) → fine-grained handling (token recomputation on network
-//!   glitches, memory remap on on-chip faults).
+//!   glitches, memory remap on on-chip faults). Pure decisions, no I/O.
+//! * [`injector`]  — the *runtime* half of §6.2: a seeded fault schedule
+//!   fired against live decode groups, prefill TEs, and expert workers,
+//!   with the [`RecoverySupervisor`] driving every recovery to a measured
+//!   end state — KV-migrating mid-stream resume over the §4.7 codec wire
+//!   path, per-domain token-recomputation epochs, and real KV-block
+//!   invalidation. Stream-preserving failover is the headline: a
+//!   DieCrash's in-flight decodes land in the migration outbox and resume
+//!   bit-exact on a surviving group.
+//!
+//! The split keeps the policy testable in isolation (`recovery` never
+//! touches a thread) while `injector` owns all the live-engine coupling
+//! and its measured [`RecoveryStats`].
 
 pub mod heartbeat;
+pub mod injector;
 pub mod probe;
 pub mod recovery;
 
 pub use heartbeat::{HeartbeatMonitor, HeartbeatTier};
+pub use injector::{replica_map_from_plane, ActionRecord, RecoveryStats, RecoverySupervisor};
 pub use probe::{LinkDiagnosis, LinkProber};
-pub use recovery::{RecoveryAction, RecoveryManager, RecoveryStage};
+pub use recovery::{FaultContext, RecoveryAction, RecoveryManager, RecoveryStage};

@@ -1,4 +1,4 @@
-//! Failure recovery: the three-stage evolution (§6.2).
+//! Failure recovery: the three-stage evolution (§6.2), live.
 //!
 //! * **Stage 1 — Restart-the-World**: taint the node, restart the whole
 //!   engine (decode first). Simple; loses all in-flight work and takes the
@@ -12,6 +12,32 @@
 //!   **token recomputation** (all DPs roll back one iteration and re-run);
 //!   on-chip memory faults → CANN remap, masked region, partial KV loss,
 //!   affected requests fail individually, system stays online.
+//!
+//! ## Live contract (sweep → decide → act)
+//!
+//! Since the runtime wiring (`reliability::injector::RecoverySupervisor`,
+//! driven from `ServingEngine::health_sweep`), this module is no longer a
+//! simulator-only decision table. The ordering is strict:
+//!
+//! 1. **sweep** observes a due fault (seeded `fabric::fault` schedule) and
+//!    gathers the live [`FaultContext`] — which rank faulted and, for
+//!    memory faults, the *actual* KV blocks/requests the owning group's
+//!    pool reports lost (never a modeled constant).
+//! 2. **decide** ([`RecoveryManager::decide`]) maps (stage, fault kind,
+//!    context) to a [`RecoveryAction`]. It is pure: no locks, no I/O.
+//! 3. **act** is the supervisor's job: kill/drain the group, migrate KV,
+//!    bump the recompute epoch, or remap memory — and overwrite the
+//!    *modeled* `downtime_ns` with the measured wall-clock gap once the
+//!    action completes.
+//!
+//! KV ownership during a migration: the dying group's worker thread
+//! encodes each in-flight sequence over the §4.7 codec
+//! (`kvcache::quant::encode_kv_auto`) and deposits it into the migration
+//! outbox; from that point the *supervisor* owns the bytes until a
+//! surviving group's `inject_prefilled` accepts them (pool admission
+//! succeeds), after which the destination group owns the KV. A sequence is
+//! therefore never owned by two pools at once, and a failed injection
+//! leaves ownership with the supervisor for the bounded retry loop.
 
 use crate::eplb::mapping::ReplicaMap;
 use crate::fabric::fault::FaultKind;
@@ -49,6 +75,30 @@ pub enum RecoveryAction {
     },
 }
 
+/// Live details of one fault, gathered by the sweep *before* consulting
+/// [`RecoveryManager::decide`]. The decision model stays pure; everything
+/// measured comes in through this struct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultContext {
+    /// The EP rank / worker index the fault actually hit. Vertical
+    /// scaling sacrifices *this* rank (not blindly the last one).
+    pub faulted_rank: usize,
+    /// KV blocks genuinely invalidated from the owning group's pool
+    /// (MemoryFault): counted by `BlockPool::invalidate_blocks`, never a
+    /// hardcoded model constant.
+    pub kv_blocks_lost: usize,
+    /// Requests that owned those blocks and must fail individually.
+    pub requests_failed: usize,
+}
+
+impl FaultContext {
+    /// Context for a fault on `faulted_rank` with no pool damage measured
+    /// (DieCrash / ProcessHang / LinkFlap).
+    pub fn on_rank(faulted_rank: usize) -> Self {
+        Self { faulted_rank, kv_blocks_lost: 0, requests_failed: 0 }
+    }
+}
+
 pub struct RecoveryManager {
     pub stage: RecoveryStage,
     /// Engine cold-start cost (restart-the-world).
@@ -66,13 +116,25 @@ impl RecoveryManager {
         }
     }
 
-    /// Decide the action for a fault, given current deployment state.
+    /// Build from the typed `[reliability]` config section, so the modeled
+    /// restart/iteration costs are deployment knobs instead of constants.
+    pub fn from_config(cfg: &crate::config::ReliabilityConfig) -> Self {
+        Self {
+            stage: cfg.stage,
+            engine_restart_ns: cfg.engine_restart_ms * 1_000_000,
+            iteration_ns: cfg.iteration_ms * 1_000_000,
+        }
+    }
+
+    /// Decide the action for a fault, given current deployment state and
+    /// the live [`FaultContext`] the sweep gathered.
     pub fn decide(
         &self,
         fault: FaultKind,
         in_flight_requests: usize,
         dp_groups: usize,
         ep_ranks: usize,
+        ctx: &FaultContext,
         map: &ReplicaMap,
     ) -> RecoveryAction {
         match self.stage {
@@ -84,7 +146,7 @@ impl RecoveryManager {
                 FaultKind::DieCrash | FaultKind::ProcessHang => {
                     // decode fragility: shrink decode rather than restart.
                     let (groups_after, ranks_after, dropped) =
-                        vertical_scale_plan(dp_groups, ep_ranks, map);
+                        vertical_scale_plan(dp_groups, ep_ranks, ctx.faulted_rank, map);
                     if dropped > 0 || ranks_after < ep_ranks {
                         RecoveryAction::VerticalDecodeScaling {
                             dp_groups_after: groups_after,
@@ -112,12 +174,12 @@ impl RecoveryManager {
                     recompute_ns: self.iteration_ns,
                 },
                 FaultKind::MemoryFault => RecoveryAction::MemoryRemap {
-                    kv_blocks_lost: 4,
-                    requests_failed: 1,
+                    kv_blocks_lost: ctx.kv_blocks_lost,
+                    requests_failed: ctx.requests_failed,
                 },
                 FaultKind::DieCrash | FaultKind::ProcessHang => {
                     let (groups_after, ranks_after, dropped) =
-                        vertical_scale_plan(dp_groups, ep_ranks, map);
+                        vertical_scale_plan(dp_groups, ep_ranks, ctx.faulted_rank, map);
                     RecoveryAction::VerticalDecodeScaling {
                         dp_groups_after: groups_after,
                         ep_ranks_after: ranks_after,
@@ -129,7 +191,9 @@ impl RecoveryManager {
     }
 
     /// Unavailability cost (ns of lost serving) for an action — the metric
-    /// the three-stage evolution improves.
+    /// the three-stage evolution improves. This is the *modeled* prior;
+    /// the live supervisor overwrites it with the measured wall-clock gap
+    /// once the action completes.
     pub fn downtime_ns(&self, action: &RecoveryAction) -> u64 {
         match action {
             RecoveryAction::FullEngineRestart { downtime_ns, .. } => *downtime_ns,
@@ -141,18 +205,21 @@ impl RecoveryManager {
     }
 }
 
-/// Vertical decode scaling plan (§6.2 stage 2): drop one DP group and one EP
-/// rank, removing that rank's *excess* expert replicas — every logical
-/// expert must keep at least one replica or scaling is impossible.
+/// Vertical decode scaling plan (§6.2 stage 2): drop one DP group and the
+/// *faulted* EP rank, removing that rank's expert replicas — every logical
+/// expert must keep at least one replica elsewhere or scaling is
+/// impossible. (A faulted rank out of range — e.g. a decode-plane die with
+/// no EP rank — clamps to the last rank, the pre-fix behavior.)
 pub fn vertical_scale_plan(
     dp_groups: usize,
     ep_ranks: usize,
+    faulted_rank: usize,
     map: &ReplicaMap,
 ) -> (usize, usize, usize) {
     if ep_ranks <= 1 || dp_groups <= 1 {
         return (dp_groups, ep_ranks, 0);
     }
-    let victim_npu = ep_ranks - 1;
+    let victim_npu = faulted_rank.min(ep_ranks - 1);
     // replicas hosted on the victim
     let mut dropped = 0usize;
     let mut feasible = true;
@@ -181,6 +248,8 @@ pub fn vertical_scale_plan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{check, PropConfig};
 
     fn map_with_replicas(n_experts: usize, n_npus: usize) -> ReplicaMap {
         let mut m = ReplicaMap::identity(n_experts, n_npus);
@@ -195,7 +264,7 @@ mod tests {
     fn stage1_loses_everything() {
         let m = ReplicaMap::identity(4, 4);
         let mgr = RecoveryManager::new(RecoveryStage::RestartTheWorld);
-        let a = mgr.decide(FaultKind::DieCrash, 37, 8, 4, &m);
+        let a = mgr.decide(FaultKind::DieCrash, 37, 8, 4, &FaultContext::on_rank(0), &m);
         match a {
             RecoveryAction::FullEngineRestart { requests_lost, .. } => {
                 assert_eq!(requests_lost, 37)
@@ -208,7 +277,7 @@ mod tests {
     fn stage3_transient_glitch_recomputes_tokens() {
         let m = ReplicaMap::identity(4, 4);
         let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
-        let a = mgr.decide(FaultKind::LinkFlap, 10, 8, 4, &m);
+        let a = mgr.decide(FaultKind::LinkFlap, 10, 8, 4, &FaultContext::on_rank(2), &m);
         assert_eq!(
             a,
             RecoveryAction::TokenRecomputation {
@@ -219,22 +288,22 @@ mod tests {
     }
 
     #[test]
-    fn stage3_memory_fault_stays_online() {
+    fn stage3_memory_fault_reports_measured_pool_damage() {
         let m = ReplicaMap::identity(4, 4);
         let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
-        let a = mgr.decide(FaultKind::MemoryFault, 10, 8, 4, &m);
-        match a {
-            RecoveryAction::MemoryRemap { requests_failed, .. } => {
-                assert!(requests_failed < 10, "most requests survive")
-            }
-            other => panic!("unexpected {other:?}"),
-        }
+        // counts come from the pool via the context — not a constant
+        let ctx = FaultContext { faulted_rank: 1, kv_blocks_lost: 7, requests_failed: 2 };
+        let a = mgr.decide(FaultKind::MemoryFault, 10, 8, 4, &ctx, &m);
+        assert_eq!(
+            a,
+            RecoveryAction::MemoryRemap { kv_blocks_lost: 7, requests_failed: 2 }
+        );
     }
 
     #[test]
     fn vertical_scaling_keeps_every_expert() {
         let m = map_with_replicas(8, 4);
-        let (g, r, dropped) = vertical_scale_plan(16, 4, &m);
+        let (g, r, dropped) = vertical_scale_plan(16, 4, 3, &m);
         assert_eq!((g, r), (15, 3));
         assert!(dropped > 0);
     }
@@ -243,22 +312,98 @@ mod tests {
     fn vertical_scaling_refuses_to_lose_sole_replica() {
         // identity map: expert 3's only replica is on NPU 3 (the victim)
         let m = ReplicaMap::identity(4, 4);
-        let (g, r, dropped) = vertical_scale_plan(16, 4, &m);
+        let (g, r, dropped) = vertical_scale_plan(16, 4, 3, &m);
         assert_eq!((g, r, dropped), (16, 4, 0), "must refuse");
+    }
+
+    #[test]
+    fn vertical_scaling_sacrifices_the_faulted_rank_not_the_last() {
+        // identity map: every expert's sole replica lives on its own NPU,
+        // except expert 1 which also has a replica on NPU 2. The old
+        // victim_npu = ep_ranks - 1 policy would try to drop NPU 3 (sole
+        // home of expert 3) and refuse; the fix drops the rank that
+        // actually faulted — NPU 1, whose expert is covered elsewhere.
+        let mut m = ReplicaMap::identity(4, 4);
+        m.add_replica(1, 2);
+        let (g, r, dropped) = vertical_scale_plan(16, 4, 1, &m);
+        assert_eq!((g, r, dropped), (15, 3, 1), "faulted rank is the victim");
+        // the same map still refuses when the faulted rank hosts a sole
+        // replica (rank 3 = expert 3's only home)
+        let (g, r, dropped) = vertical_scale_plan(16, 4, 3, &m);
+        assert_eq!((g, r, dropped), (16, 4, 0));
     }
 
     #[test]
     fn downtime_strictly_improves_across_stages() {
         let m = map_with_replicas(8, 4);
         let fault = FaultKind::DieCrash;
+        let ctx = FaultContext::on_rank(2);
         let d1 = {
             let mgr = RecoveryManager::new(RecoveryStage::RestartTheWorld);
-            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &m))
+            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &ctx, &m))
         };
         let d3 = {
             let mgr = RecoveryManager::new(RecoveryStage::FineGrained);
-            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &m))
+            mgr.downtime_ns(&mgr.decide(fault, 5, 8, 4, &ctx, &m))
         };
         assert!(d3 < d1 / 100, "stage 3 ({d3}) ≪ stage 1 ({d1})");
+    }
+
+    #[test]
+    fn prop_decide_never_orphans_a_sole_replica() {
+        // For any replica layout, faulted rank, and scaling stage: if
+        // `decide` commits to dropping an EP rank, every logical expert
+        // must still have ≥ 1 replica on a surviving rank.
+        check(
+            "decide-never-orphans-sole-replica",
+            PropConfig { cases: 64, ..Default::default() },
+            |rng, size| {
+                let n_npus = 2 + rng.index(6);
+                let n_experts = 1 + rng.index(4 + size);
+                let mut map = ReplicaMap::identity(n_experts, n_npus);
+                for _ in 0..rng.index(2 * n_experts + 1) {
+                    let e = rng.index(n_experts);
+                    let npu = rng.index(n_npus);
+                    map.add_replica(e, npu);
+                }
+                let faulted = rng.index(n_npus);
+                let stage = if rng.chance(0.5) {
+                    RecoveryStage::PdSeparateFailover
+                } else {
+                    RecoveryStage::FineGrained
+                };
+                let mgr = RecoveryManager::new(stage);
+                let dp_groups = 2 + rng.index(16);
+                let a = mgr.decide(
+                    FaultKind::DieCrash,
+                    rng.index(32),
+                    dp_groups,
+                    n_npus,
+                    &FaultContext::on_rank(faulted),
+                    &map,
+                );
+                if let RecoveryAction::VerticalDecodeScaling {
+                    ep_ranks_after, ..
+                } = a
+                {
+                    if ep_ranks_after < n_npus {
+                        // the plan committed: simulate the drop and check
+                        // every expert survives off the victim
+                        for e in 0..map.n_logical {
+                            let off_victim = map.slots[e]
+                                .iter()
+                                .filter(|&&s| map.slot_npu[s] != faulted)
+                                .count();
+                            prop_assert!(
+                                off_victim >= 1,
+                                "expert {e} orphaned by dropping rank {faulted} \
+                                 ({n_experts} experts, {n_npus} npus)"
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,351 @@
+//! Live §6.2 failure recovery under a seeded fault schedule.
+//!
+//! Two engine-level runs share one seeded workload:
+//!
+//! * a **reference** run with no faults records every stream's generated
+//!   tokens — the ground truth an interrupted stream must reproduce;
+//! * a **chaos** run fires the seeded schedule (memory fault, a hard
+//!   DieCrash on the loaded victim group, a link flap) through the
+//!   [`RecoverySupervisor`] while the same streams decode.
+//!
+//! Invariants locked down here:
+//! * every accepted stream terminates (`Done` or `Failed`) — an injected
+//!   crash never hangs the engine;
+//! * every stream the supervisor resumed via KV migration finishes
+//!   `Done` **bit-exact** against the uninterrupted reference (SimModel
+//!   tokens depend only on the fed token and the KV length, so a single
+//!   lost or duplicated token shows up as a mismatch);
+//! * at least one stream actually takes the migration path (the schedule
+//!   guarantees a DieCrash against a loaded group);
+//! * no stream is orphaned between outbox and destination;
+//! * with a live expert plane attached, the one-domain-at-a-time
+//!   contract survives the recovery (`domain_violations == 0`).
+//!
+//! CI runs this file across a small seed matrix via `XDS_CHAOS_SEED`.
+
+use std::collections::HashMap;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use xdeepserve::config::{DeploymentMode, ReliabilityConfig};
+use xdeepserve::coordinator::worker::ModelFactory;
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
+use xdeepserve::disagg::{ExpertWorkerSpec, MoeAttnRuntime};
+use xdeepserve::fabric::fault::{Fault, FaultKind};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::reliability::RecoveryStage;
+use xdeepserve::sync::Arc;
+use xdeepserve::util::rng::Rng;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("XDS_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC4A0_5EED)
+}
+
+const GROUPS: usize = 4;
+const VICTIM: usize = 0;
+
+/// One seeded workload item: `(target group, request)`. Placement is
+/// pinned via `submit_to` so the DieCrash provably lands on loaded
+/// streams, and so the reference run serves the identical request set.
+fn workload(seed: u64) -> Vec<(usize, ServeRequest)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    // Victim streams: long enough (>= 96 ticks at ~1 ms/tick) that the
+    // ~10 ms DieCrash always lands mid-decode.
+    for _ in 0..2 + rng.index(2) {
+        let prompt: Vec<i32> = (0..2 + rng.index(3))
+            .map(|k| 97 + ((id as usize + k) % 26) as i32)
+            .collect();
+        out.push((VICTIM, ServeRequest::new(id, prompt, 96 + rng.index(48), 0)));
+        id += 1;
+    }
+    // Background streams on the survivors the migration must fit around.
+    for g in 1..GROUPS {
+        for _ in 0..1 + rng.index(2) {
+            let prompt: Vec<i32> = (0..2 + rng.index(3))
+                .map(|k| 65 + ((id as usize + k) % 26) as i32)
+                .collect();
+            out.push((g, ServeRequest::new(id, prompt, 48 + rng.index(48), 0)));
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Seeded §6.2 schedule: the memory fault strictly precedes the crash so
+/// the two recoveries never race on the same stream, and the link flap
+/// lands after the crash to exercise the dead-group recompute filter.
+fn fault_schedule(seed: u64) -> Vec<Fault> {
+    let mut rng = Rng::new(seed ^ 0xFA17);
+    let mem_at = 3_000_000 + rng.range(0, 2_000_000);
+    let crash_at = 8_000_000 + rng.range(0, 4_000_000);
+    let flap_at = crash_at + 4_000_000 + rng.range(0, 4_000_000);
+    vec![
+        Fault { kind: FaultKind::MemoryFault, die: 1, at_ns: mem_at, duration_ns: 0 },
+        Fault { kind: FaultKind::DieCrash, die: VICTIM, at_ns: crash_at, duration_ns: 0 },
+        Fault { kind: FaultKind::LinkFlap, die: 0, at_ns: flap_at, duration_ns: 0 },
+    ]
+}
+
+/// Drive the supervisor (faults fire from `health_sweep`) until every
+/// recovery reaches its end state and the engine drains.
+fn drive(engine: &mut ServingEngine, seed: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        engine.health_sweep();
+        if engine.recovery_quiesced() && engine.all_idle() {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "seed {seed:#x}: recovery run failed to quiesce"
+        );
+        thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Fault-free reference: per-stream generated tokens, the bit-exact
+/// ground truth for any migrated resume.
+fn reference_tokens(seed: u64) -> HashMap<u64, Vec<i32>> {
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups_uniform(GROUPS, 8, 512)
+        .straggler(StragglerProfile::uniform(GROUPS, 1_000_000))
+        .spawn()
+        .unwrap();
+    for (g, req) in workload(seed) {
+        engine.runtime().submit_to(g, req).unwrap();
+    }
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let groups = engine.shutdown().unwrap();
+    let mut tokens = HashMap::new();
+    for g in &groups {
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done, "reference stream {} must finish", r.id);
+            tokens.insert(r.id, r.generated.clone());
+        }
+    }
+    tokens
+}
+
+/// Colocated engine under the seeded schedule: every stream terminates,
+/// ≥ 1 stream resumes mid-decode on a survivor, and every resumed stream
+/// is bit-exact against the uninterrupted reference.
+#[test]
+fn seeded_diecrash_resumes_streams_bit_exact_vs_reference() {
+    let seed = chaos_seed();
+    let reference = reference_tokens(seed);
+    let work = workload(seed);
+    let total = work.len();
+
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups_uniform(GROUPS, 8, 512)
+        .straggler(StragglerProfile::uniform(GROUPS, 1_000_000))
+        .reliability(ReliabilityConfig::default())
+        .fault_schedule(fault_schedule(seed))
+        .spawn()
+        .unwrap();
+    for (g, req) in work {
+        engine.runtime().submit_to(g, req).unwrap();
+    }
+    drive(&mut engine, seed);
+    let stats = engine.recovery_stats().expect("schedule attaches a supervisor").clone();
+    let groups = engine.shutdown().unwrap();
+
+    let mut by_id: HashMap<u64, (RequestState, Vec<i32>)> = HashMap::new();
+    for g in &groups {
+        for r in &g.finished {
+            assert!(
+                r.state == RequestState::Done || r.state == RequestState::Failed,
+                "seed {seed:#x}: stream {} left non-terminal: {:?}",
+                r.id,
+                r.state
+            );
+            let prev = by_id.insert(r.id, (r.state, r.generated.clone()));
+            assert!(prev.is_none(), "seed {seed:#x}: stream {} finished twice", r.id);
+        }
+    }
+    assert_eq!(
+        by_id.len(),
+        total,
+        "seed {seed:#x}: every accepted stream must terminate under injected faults"
+    );
+
+    // The schedule crashes a loaded group under FineGrained: the
+    // migration path must actually run.
+    assert!(
+        stats.streams_resumed >= 1,
+        "seed {seed:#x}: DieCrash on a loaded group must resume >= 1 stream \
+         via KV migration (stats: {stats:?})"
+    );
+    assert!(
+        stats.actions.iter().any(|a| a.fault == FaultKind::DieCrash),
+        "seed {seed:#x}: the DieCrash must record a recovery action"
+    );
+    assert_eq!(stats.orphaned, 0, "seed {seed:#x}: no stream may strand in the outbox");
+    assert_eq!(
+        stats.streams_failed, 0,
+        "seed {seed:#x}: survivors have headroom — no migration may fail terminally"
+    );
+
+    // Bit-exact mid-stream resume: the resumed stream's full token
+    // sequence equals the uninterrupted reference run's.
+    for id in &stats.resumed_ids {
+        let (state, generated) = by_id
+            .get(id)
+            .unwrap_or_else(|| panic!("seed {seed:#x}: resumed stream {id} never finished"));
+        assert_eq!(
+            *state,
+            RequestState::Done,
+            "seed {seed:#x}: resumed stream {id} must finish Done"
+        );
+        assert_eq!(
+            generated,
+            &reference[id],
+            "seed {seed:#x}: resumed stream {id} diverged from the uninterrupted reference"
+        );
+    }
+}
+
+/// Recovery also runs under FineGrained's two cheaper stages without the
+/// migration path: RestartTheWorld on the same schedule must still
+/// terminate every stream (the victim's streams fail instead of
+/// resuming) and record the modeled full-restart action.
+#[test]
+fn seeded_restart_the_world_terminates_every_stream_without_resume() {
+    let seed = chaos_seed();
+    let work = workload(seed);
+    let total = work.len();
+    let mut rel = ReliabilityConfig::default();
+    rel.stage = RecoveryStage::RestartTheWorld;
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups_uniform(GROUPS, 8, 512)
+        .straggler(StragglerProfile::uniform(GROUPS, 1_000_000))
+        .reliability(rel)
+        .fault_schedule(fault_schedule(seed))
+        .spawn()
+        .unwrap();
+    for (g, req) in work {
+        engine.runtime().submit_to(g, req).unwrap();
+    }
+    drive(&mut engine, seed);
+    let stats = engine.recovery_stats().unwrap().clone();
+    let groups = engine.shutdown().unwrap();
+    let finished: usize = groups.iter().map(|g| g.finished.len()).sum();
+    assert_eq!(
+        finished, total,
+        "seed {seed:#x}: stage 1 must still terminate every stream"
+    );
+    assert_eq!(
+        stats.streams_resumed, 0,
+        "seed {seed:#x}: RestartTheWorld never migrates"
+    );
+    assert!(
+        groups.iter().any(|g| {
+            g.finished.iter().any(|r| r.state == RequestState::Failed)
+        }),
+        "seed {seed:#x}: the killed group's streams fail terminally under stage 1"
+    );
+}
+
+/// The same recovery machinery under a live MoeAttn expert plane: a
+/// DieCrash against a decode group (with a migrated resume landing in
+/// another domain) and a link-flap recompute epoch must leave the
+/// one-domain-at-a-time contract intact and every combine bit-exact.
+#[test]
+fn recovery_under_live_expert_plane_keeps_domain_contract() {
+    let seed = chaos_seed() ^ 0x6E2_0DD;
+    let mut rng = Rng::new(seed);
+    const MA_GROUPS: usize = 4;
+    let rt = MoeAttnRuntime {
+        layers: 2,
+        microbatches: 2,
+        time_scale: 64,
+        ..Default::default()
+    };
+    let mut engine = ServingEngine::builder(DeploymentMode::MoeAttn, sim_factory())
+        .groups_uniform(MA_GROUPS, 4, 256)
+        .dp_domains(2)
+        .expert_plane((0..2).map(ExpertWorkerSpec::new).collect(), rt)
+        .straggler(StragglerProfile::uniform(MA_GROUPS, 500_000))
+        .reliability(ReliabilityConfig::default())
+        .fault_schedule(vec![
+            Fault {
+                kind: FaultKind::DieCrash,
+                die: 0,
+                at_ns: 8_000_000 + rng.range(0, 4_000_000),
+                duration_ns: 0,
+            },
+            Fault {
+                kind: FaultKind::LinkFlap,
+                die: 1,
+                at_ns: 20_000_000,
+                duration_ns: 0,
+            },
+        ])
+        .spawn()
+        .unwrap();
+    let mut id = 0u64;
+    // 200 ticks at ~0.5 ms/tick: the crash lands mid-decode on group 0.
+    for _ in 0..3 {
+        engine
+            .runtime()
+            .submit_to(0, ServeRequest::new(id, vec![256, 1, 2, 3], 200, 0))
+            .unwrap();
+        id += 1;
+    }
+    for g in 1..MA_GROUPS {
+        engine
+            .runtime()
+            .submit_to(g, ServeRequest::new(id, vec![256, 1, 2, 3], 60, 0))
+            .unwrap();
+        id += 1;
+    }
+    drive(&mut engine, seed);
+    let stats = engine.recovery_stats().unwrap().clone();
+    let violations = engine
+        .expert_plane()
+        .expect("MoeAttn engine owns an expert plane")
+        .domain_violations();
+    let groups = engine.shutdown().unwrap();
+    assert_eq!(
+        violations, 0,
+        "seed {seed:#x}: recovery must not overlap domains in the expert pool"
+    );
+    assert!(
+        stats.streams_resumed >= 1,
+        "seed {seed:#x}: the crashed group's streams must resume cross-domain \
+         (stats: {stats:?})"
+    );
+    let mut finished = 0usize;
+    let mut integrity = 0u64;
+    for g in &groups {
+        integrity += g.exchange.integrity_failures;
+        for r in &g.finished {
+            assert!(
+                r.state == RequestState::Done || r.state == RequestState::Failed,
+                "seed {seed:#x}: stream {} left non-terminal: {:?}",
+                r.id,
+                r.state
+            );
+            finished += 1;
+        }
+    }
+    assert_eq!(
+        finished,
+        id as usize,
+        "seed {seed:#x}: every stream terminates under the expert-plane recovery"
+    );
+    assert_eq!(
+        integrity, 0,
+        "seed {seed:#x}: combines stay bit-exact through the recovery"
+    );
+}
