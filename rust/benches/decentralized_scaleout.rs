@@ -45,13 +45,16 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use xdeepserve::bench_support::PaperBench;
-use xdeepserve::config::{DecodeLbPolicy, DeploymentMode, ReliabilityConfig, ServingConfig};
+use xdeepserve::config::{
+    DecodeLbPolicy, DeploymentMode, ObservabilityConfig, ReliabilityConfig, ServingConfig,
+};
 use xdeepserve::coordinator::output::FrontendMsg;
 use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
 use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
 use xdeepserve::disagg::{ExpertWorkerSpec, MoeAttnRuntime, PrefillWorkerSpec};
 use xdeepserve::fabric::fault::{Fault, FaultKind};
 use xdeepserve::model::{DecodeModel, SimModel, Tokenizer};
+use xdeepserve::obs::{Ctr, Gge, Hst, MetricsSnapshot};
 use xdeepserve::reliability::{RecoveryAction, RecoveryStage, RecoveryStats};
 use xdeepserve::util::args::Args;
 use xdeepserve::util::json::{obj, Json};
@@ -790,6 +793,93 @@ fn recovery_run(stage: RecoveryStage, label: &'static str) -> RecoveryResult {
     RecoveryResult { stage: label, stats, done, failed }
 }
 
+struct TelemetryResult {
+    snap: MetricsSnapshot,
+    trace: String,
+    resumed: usize,
+}
+
+/// Flight-recorder scenario: the Transformerless engine re-run with
+/// telemetry on and a seeded mid-stream DieCrash (§6.2 FineGrained), so
+/// the trace captures a live KV migration alongside routed admission,
+/// prefill, exchange, and decode spans. `--trace-out`/`--metrics-out`
+/// paths flow into the engine's [observability] config and are written
+/// at shutdown (the CI scaleout step uploads both as artifacts).
+fn telemetry_run(
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+) -> TelemetryResult {
+    const N: usize = 4;
+    const VICTIM_STREAMS: usize = 3;
+    // long runway so the 8 ms DieCrash lands mid-decode (ticks ~250 us)
+    const VICTIM_MAX_NEW: usize = 96;
+    let rt_cfg = MoeAttnRuntime {
+        layers: 2,
+        microbatches: 2,
+        time_scale: 8,
+        ..Default::default()
+    };
+    let mut rel = ReliabilityConfig::default();
+    rel.stage = RecoveryStage::FineGrained;
+    let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+        .groups(specs(N))
+        .dp_domains(2)
+        .prefill_workers((0..2).map(PrefillWorkerSpec::new).collect())
+        .expert_plane((0..2).map(ExpertWorkerSpec::new).collect(), rt_cfg)
+        .straggler(StragglerProfile::uniform(N, TICK_NS / 4))
+        .reliability(rel)
+        .fault_schedule(vec![Fault {
+            kind: FaultKind::DieCrash,
+            die: 0,
+            at_ns: 8_000_000,
+            duration_ns: 0,
+        }])
+        .observability(ObservabilityConfig {
+            enabled: true,
+            trace_out,
+            metrics_out,
+            ..Default::default()
+        })
+        .spawn()
+        .unwrap();
+    // Victims pinned to group 0 (the crash target) so the migration is
+    // guaranteed mid-stream; background load goes through the routed
+    // submit path so shell/prefill/exchange recorders all fire.
+    let mut id = 0u64;
+    for _ in 0..VICTIM_STREAMS {
+        engine
+            .runtime()
+            .submit_to(0, ServeRequest::new(id, vec![256, 1, 2, 3], VICTIM_MAX_NEW, 0))
+            .unwrap();
+        id += 1;
+    }
+    for _ in 0..N * 2 {
+        engine
+            .submit(ServeRequest::new(id, vec![256, 1, 2, 3], 8, 0))
+            .unwrap();
+        engine.drain();
+        id += 1;
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        engine.health_sweep();
+        if engine.recovery_quiesced() && engine.all_idle() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "telemetry run stalled");
+        thread::sleep(Duration::from_millis(1));
+    }
+    let resumed = engine
+        .recovery_stats()
+        .map(|s| s.streams_resumed)
+        .unwrap_or(0);
+    // the hub outlives the engine: shutdown consumes it (and writes the
+    // --trace-out/--metrics-out files), the clone scrapes afterwards
+    let obs = Arc::clone(engine.obs());
+    engine.shutdown().unwrap();
+    TelemetryResult { snap: obs.snapshot(), trace: obs.trace_json(), resumed }
+}
+
 fn main() {
     let args = Args::from_env();
     let quick = args.has_flag("quick");
@@ -1179,6 +1269,63 @@ fn main() {
         fg.kv_blocks_lost() > 0,
     );
 
+    // ---- flight recorder + live telemetry (ISSUE 9 acceptance run) ----
+    // Transformerless with a seeded mid-stream DieCrash, telemetry on:
+    // every plane's recorder must be non-zero and the Perfetto trace must
+    // parse with balanced complete events.
+    let tel = telemetry_run(
+        args.get("trace-out").map(String::from),
+        args.get("metrics-out").map(String::from),
+    );
+    let tel_trace = Json::parse(&tel.trace);
+    let tel_events = tel_trace
+        .as_ref()
+        .ok()
+        .and_then(|j| j.get("traceEvents").and_then(|e| e.as_arr()).map(<[Json]>::len))
+        .unwrap_or(0);
+    bench.row(&[
+        "telemetry: traced Transformerless + mid-stream migration".into(),
+        format!("{tel_events} trace events"),
+        format!(
+            "{} ticks, {} exchange rounds, route p99 {:.1} us, {} migration(s) landed, \
+             {} stream(s) resumed, KV high-water {} blocks",
+            tel.snap.counter(Ctr::Ticks),
+            tel.snap.counter(Ctr::ExchangeRounds),
+            tel.snap.hist(Hst::RouteNs).percentile_ns(99.0) as f64 / 1e3,
+            tel.snap.counter(Ctr::MigrationsLanded),
+            tel.resumed,
+            tel.snap.gauge(Gge::KvPoolHighWaterBlocks),
+        ),
+        "every plane recorded; trace parses".into(),
+    ]);
+    bench.check("telemetry: Perfetto trace parses", tel_trace.is_ok() && tel_events > 0);
+    bench.check(
+        "telemetry: tick-phase histograms non-zero",
+        tel.snap.hist(Hst::TickModelNs).count > 0
+            && tel.snap.hist(Hst::TickPublishNs).count > 0,
+    );
+    bench.check(
+        "telemetry: routing metrics non-zero",
+        tel.snap.counter(Ctr::RouteSampled) + tel.snap.counter(Ctr::RouteFullScan) > 0
+            && tel.snap.hist(Hst::RouteNs).count > 0,
+    );
+    bench.check(
+        "telemetry: exchange metrics non-zero",
+        tel.snap.counter(Ctr::ExchangeRounds) > 0
+            && tel.snap.hist(Hst::MoeComputeNs).count > 0,
+    );
+    bench.check(
+        "telemetry: KV metrics non-zero (codec bytes + pool high-water)",
+        tel.snap.counter(Ctr::KvEncodeBytes) > 0
+            && tel.snap.gauge(Gge::KvPoolHighWaterBlocks) > 0,
+    );
+    bench.check(
+        "telemetry: recovery metrics non-zero (migration landed + downtime measured)",
+        tel.snap.counter(Ctr::MigrationsLanded) >= 1
+            && tel.snap.hist(Hst::RecoveryDowntimeNs).count > 0
+            && tel.resumed >= 1,
+    );
+
     // ---- machine-readable trajectory record ----
     let json = obj(vec![
         ("schema", Json::Str("scaleout-v1".into())),
@@ -1220,6 +1367,52 @@ fn main() {
         (
             "recovery",
             Json::Arr(vec![rtw.to_json(), fg.to_json()]),
+        ),
+        (
+            "telemetry",
+            obj(vec![
+                ("trace_events", Json::Num(tel_events as f64)),
+                ("ticks", Json::Num(tel.snap.counter(Ctr::Ticks) as f64)),
+                (
+                    "tokens_out",
+                    Json::Num(tel.snap.counter(Ctr::TokensOut) as f64),
+                ),
+                (
+                    "route_ns_p99",
+                    Json::Num(tel.snap.hist(Hst::RouteNs).percentile_ns(99.0) as f64),
+                ),
+                (
+                    "tick_model_ns_p50",
+                    Json::Num(tel.snap.hist(Hst::TickModelNs).percentile_ns(50.0) as f64),
+                ),
+                (
+                    "exchange_rounds",
+                    Json::Num(tel.snap.counter(Ctr::ExchangeRounds) as f64),
+                ),
+                (
+                    "kv_encode_bytes",
+                    Json::Num(tel.snap.counter(Ctr::KvEncodeBytes) as f64),
+                ),
+                (
+                    "kv_pool_high_water_blocks",
+                    Json::Num(tel.snap.gauge(Gge::KvPoolHighWaterBlocks) as f64),
+                ),
+                (
+                    "migrations_landed",
+                    Json::Num(tel.snap.counter(Ctr::MigrationsLanded) as f64),
+                ),
+                (
+                    "recovery_downtime_ms_max",
+                    Json::Num(
+                        tel.snap.hist(Hst::RecoveryDowntimeNs).percentile_ns(100.0) as f64
+                            / 1e6,
+                    ),
+                ),
+                (
+                    "spans_dropped",
+                    Json::Num(tel.snap.counter(Ctr::SpansDropped) as f64),
+                ),
+            ]),
         ),
     ]);
     let path = "BENCH_scaleout.json";

@@ -793,6 +793,28 @@ fn unreachable_locker() {
     }
 
     #[test]
+    fn hot_lock_covers_flight_recorder_roots() {
+        // The recorder contract (src/obs): a metrics/span record from a
+        // worker hot loop must never take a lock. This fixture mirrors
+        // the real shape — `rec_ns` is a marked root whose span path
+        // funnels into a ring push — and proves the walk flags a lock
+        // anywhere down that funnel.
+        let src = "\
+// xds:hot
+fn rec_ns() {
+    push_span();
+}
+fn push_span() {
+    self.ring.lock().unwrap();
+}
+";
+        let v = hot("src/obs/registry.rs", src, &[]);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "hot-lock");
+        assert!(v[0].msg.contains("rec_ns -> push_span"), "{}", v[0].msg);
+    }
+
+    #[test]
     fn hot_lock_skips_ambiguous_names_and_allows() {
         // `publish` is defined twice: no edge, so the lock inside is not
         // attributed to the hot path (covered by marking concrete impls)

@@ -372,6 +372,40 @@ impl Default for ReliabilityConfig {
     }
 }
 
+/// Live-telemetry knobs (`[observability]`), consumed by
+/// `obs::ObsHub::new` and threaded through `ServingEngineBuilder`.
+/// Disabled by default: every recorder call collapses to one branch, and
+/// the `runtime_hotpath` gate holds the enabled cost to ≤ 5% on top of
+/// that. Validated at parse time (ring capacity and sampling stride must
+/// be ≥ 1) so a zero — which would make the span ring unusable or the
+/// sampling modulus panic — fails the config load naming the key.
+#[derive(Clone, Debug)]
+pub struct ObservabilityConfig {
+    /// Master switch: off hands every plane a no-op shard handle.
+    pub enabled: bool,
+    /// Span-ring capacity per shard (oldest overwritten past this).
+    pub trace_ring_spans: usize,
+    /// Trace 1-in-N requests (by request id); 1 = trace everything.
+    /// Metrics are never sampled — only the flight recorder is.
+    pub trace_sample_every: u64,
+    /// Write the text metrics exposition here at engine shutdown.
+    pub metrics_out: Option<String>,
+    /// Write the Chrome-trace-event JSON here at engine shutdown.
+    pub trace_out: Option<String>,
+}
+
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            trace_ring_spans: 4096,
+            trace_sample_every: 1,
+            metrics_out: None,
+            trace_out: None,
+        }
+    }
+}
+
 /// Top-level config.
 #[derive(Clone, Debug)]
 pub struct Config {
@@ -380,6 +414,7 @@ pub struct Config {
     pub moe_attn: MoeAttnConfig,
     pub sla: SlaConfig,
     pub reliability: ReliabilityConfig,
+    pub observability: ObservabilityConfig,
     pub seed: u64,
     /// Directory holding manifest.json/weights.bin/*.hlo.txt.
     pub artifacts_dir: String,
@@ -393,6 +428,7 @@ impl Default for Config {
             moe_attn: MoeAttnConfig::default(),
             sla: SlaConfig::default(),
             reliability: ReliabilityConfig::default(),
+            observability: ObservabilityConfig::default(),
             seed: 0x2025_0710,
             artifacts_dir: "artifacts".into(),
         }
@@ -626,6 +662,31 @@ impl Config {
                 "reliability.max_migration_retries must be >= 1, got {v}"
             );
             cfg.reliability.max_migration_retries = v as u32;
+        }
+        // [observability] live-telemetry knobs: ring capacity and the
+        // sampling stride must be >= 1 (a zero ring holds no spans and a
+        // zero stride is a divide-by-zero in the 1-in-N sampler — fail
+        // the parse naming the key instead).
+        if let Some(v) = toml.try_bool("observability.enabled")? {
+            cfg.observability.enabled = v;
+        }
+        if let Some(v) = toml.try_u64("observability.trace_ring_spans")? {
+            anyhow::ensure!(v >= 1, "observability.trace_ring_spans must be >= 1, got {v}");
+            cfg.observability.trace_ring_spans = v as usize;
+        }
+        if let Some(v) = toml.try_u64("observability.trace_sample_every")? {
+            anyhow::ensure!(
+                v >= 1,
+                "observability.trace_sample_every must be >= 1 (1 traces every \
+                 request), got {v}"
+            );
+            cfg.observability.trace_sample_every = v;
+        }
+        if let Some(v) = toml.try_str("observability.metrics_out")? {
+            cfg.observability.metrics_out = Some(v.to_string());
+        }
+        if let Some(v) = toml.try_str("observability.trace_out")? {
+            cfg.observability.trace_out = Some(v.to_string());
         }
         // Cross-field validation (previously these only surfaced at
         // routing time): a domain partition must be non-empty and no
@@ -1049,6 +1110,53 @@ mod tests {
         let p = write_cfg("rel_prod.toml", "preset = \"production\"\n");
         let cfg = Config::from_file(&p).unwrap();
         assert_eq!(cfg.reliability.migration_deadline_ms, 1_000);
+    }
+
+    #[test]
+    fn observability_knobs_parse_and_validate() {
+        // defaults: telemetry off, full tracing when enabled
+        let cfg = Config::default();
+        assert!(!cfg.observability.enabled);
+        assert_eq!(cfg.observability.trace_ring_spans, 4096);
+        assert_eq!(cfg.observability.trace_sample_every, 1);
+        assert_eq!(cfg.observability.metrics_out, None);
+        assert_eq!(cfg.observability.trace_out, None);
+
+        // explicit values win
+        let p = write_cfg(
+            "obs.toml",
+            "[observability]\nenabled = true\ntrace_ring_spans = 128\n\
+             trace_sample_every = 16\nmetrics_out = \"m.txt\"\ntrace_out = \"t.json\"\n",
+        );
+        let cfg = Config::from_file(&p).unwrap();
+        assert!(cfg.observability.enabled);
+        assert_eq!(cfg.observability.trace_ring_spans, 128);
+        assert_eq!(cfg.observability.trace_sample_every, 16);
+        assert_eq!(cfg.observability.metrics_out.as_deref(), Some("m.txt"));
+        assert_eq!(cfg.observability.trace_out.as_deref(), Some("t.json"));
+
+        // zero values fail at parse time with the key in the error
+        for (name, body, key) in [
+            (
+                "obs0a.toml",
+                "[observability]\ntrace_ring_spans = 0\n",
+                "observability.trace_ring_spans",
+            ),
+            (
+                "obs0b.toml",
+                "[observability]\ntrace_sample_every = 0\n",
+                "observability.trace_sample_every",
+            ),
+        ] {
+            let p = write_cfg(name, body);
+            let e = Config::from_file(&p).unwrap_err().to_string();
+            assert!(e.contains(key), "{body}: {e}");
+        }
+
+        // wrong-typed value is an error naming the key
+        let p = write_cfg("obs_type.toml", "[observability]\nenabled = \"yes\"\n");
+        let e = Config::from_file(&p).unwrap_err().to_string();
+        assert!(e.contains("observability.enabled"), "{e}");
     }
 
     #[test]

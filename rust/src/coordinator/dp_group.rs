@@ -12,6 +12,7 @@ use crate::coordinator::request::{RequestState, ServeRequest};
 use crate::kvcache::{BlockPool, InvalidationReport};
 use crate::model::{DecodeModel, SeqKv};
 use crate::mtp;
+use crate::obs::{Ctr, ObsShard, SpanKind};
 
 /// A sequence resident in the decode batch.
 pub struct SeqState {
@@ -87,6 +88,12 @@ pub struct DpGroup {
     /// (`carries`/`carried_ns` — combine round trips hidden behind the
     /// next layer's attention) and the replica-recovery counters.
     pub exchange: crate::disagg::expert_plane::ExchangeStats,
+    /// Telemetry handle — a clone of the owning worker thread's shard
+    /// (same thread, so the single-writer contract holds). Off by
+    /// default; lifecycle spans are stamped with the *same* `now_ns`
+    /// values written into `RequestTiming`, so span-derived and
+    /// timing-derived latencies agree exactly.
+    pub obs: ObsShard,
 }
 
 impl DpGroup {
@@ -107,6 +114,7 @@ impl DpGroup {
             mtp_accepted: 0,
             iterations: 0,
             exchange: Default::default(),
+            obs: ObsShard::off(),
         }
     }
 
@@ -180,6 +188,11 @@ impl DpGroup {
             req.timing.prefill_done_ns = now_ns;
         }
         req.timing.tokens_out = 1;
+        self.obs.count(Ctr::TokensOut, 1);
+        if self.obs.sampled(req.id) {
+            // same u64 the timing field holds — span/timing agree exactly
+            self.obs.span(SpanKind::FirstToken, req.id, now_ns, now_ns);
+        }
         self.emit(OutputEvent::Token { req_id: req.id, token: first_token });
         self.running.push(SeqState { req, kv, feed: first_token, hidden });
         Ok(())
@@ -208,6 +221,7 @@ impl DpGroup {
                     progressed += 1;
                     continue;
                 }
+                self.obs.count(Ctr::HandoffDeferred, 1);
                 break; // deferral: retry next tick once running work frees capacity
             }
             // invariant: `front()` above proved the queue non-empty
@@ -235,6 +249,10 @@ impl DpGroup {
     pub fn fail_request(&mut self, mut req: ServeRequest, now_ns: u64) {
         req.state = RequestState::Failed;
         req.timing.done_ns = now_ns;
+        self.obs.count(Ctr::RequestsDone, 1);
+        if self.obs.sampled(req.id) {
+            self.obs.span(SpanKind::Finish, req.id, now_ns, now_ns);
+        }
         self.emit(OutputEvent::Finished { req_id: req.id });
         self.finished.push(req);
     }
@@ -285,6 +303,10 @@ impl DpGroup {
             req.timing.prefill_done_ns = now_ns;
             req.timing.first_token_ns = now_ns;
             req.timing.tokens_out = 1;
+            self.obs.count(Ctr::TokensOut, 1);
+            if self.obs.sampled(req.id) {
+                self.obs.span(SpanKind::FirstToken, req.id, now_ns, now_ns);
+            }
             self.emit(OutputEvent::Token { req_id: req.id, token: first });
             self.running.push(SeqState { req, kv: pf.kv, feed: first, hidden: pf.hidden });
             admitted += 1;
@@ -373,6 +395,10 @@ impl DpGroup {
             if out_done || kv_full {
                 s.req.state = RequestState::Done;
                 s.req.timing.done_ns = now_ns;
+                self.obs.count(Ctr::RequestsDone, 1);
+                if self.obs.sampled(s.req.id) {
+                    self.obs.span(SpanKind::Finish, s.req.id, now_ns, now_ns);
+                }
                 self.pool.release(s.req.id)?;
                 self.emit(OutputEvent::Finished { req_id: s.req.id });
                 self.finished.push(s.req);
@@ -381,6 +407,7 @@ impl DpGroup {
             }
         }
         self.running = still_running;
+        self.obs.count(Ctr::TokensOut, produced as u64);
         Ok(produced)
     }
 

@@ -11,10 +11,11 @@
 //! past a few dozen groups).
 
 use std::collections::HashMap;
-use crate::sync::mpsc;
+use crate::sync::{mpsc, Arc};
 use std::thread;
 
 use crate::model::Tokenizer;
+use crate::obs::{Ctr, ObsHub, ObsShard};
 
 /// One streamed output event from a DP group.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,6 +44,17 @@ pub struct OutputShortcut {
 impl OutputShortcut {
     /// `sink` receives frontend messages (in order, per request).
     pub fn spawn(tokenizer: Tokenizer, sink: mpsc::Sender<FrontendMsg>) -> Self {
+        Self::spawn_shard(tokenizer, sink, ObsShard::off())
+    }
+
+    /// [`Self::spawn`] with a telemetry shard — registered by the spawner,
+    /// written only by the handler thread it moves into (single-writer
+    /// contract): tokens streamed and streams finished.
+    pub fn spawn_shard(
+        tokenizer: Tokenizer,
+        sink: mpsc::Sender<FrontendMsg>,
+        obs: ObsShard,
+    ) -> Self {
         let (tx, rx) = mpsc::channel::<OutputEvent>();
         let handle = thread::spawn(move || {
             use std::collections::HashMap;
@@ -52,6 +64,7 @@ impl OutputShortcut {
                     OutputEvent::Shutdown => break,
                     OutputEvent::Token { req_id, token } => {
                         bufs.entry(req_id).or_default().push(token);
+                        obs.count(Ctr::TokensStreamed, 1);
                         let text = tokenizer.decode(&[token]);
                         if !text.is_empty() {
                             let _ = sink.send(FrontendMsg::Chunk { req_id, text });
@@ -59,6 +72,7 @@ impl OutputShortcut {
                     }
                     OutputEvent::Finished { req_id } => {
                         let toks = bufs.remove(&req_id).unwrap_or_default();
+                        obs.count(Ctr::StreamsFinished, 1);
                         let _ = sink.send(FrontendMsg::Done {
                             req_id,
                             full_text: tokenizer.decode(&toks),
@@ -106,9 +120,23 @@ impl OutputPlane {
     /// One handler thread per id in `group_ids`; every handler forwards
     /// into a clone of `sink`.
     pub fn spawn(tokenizer: Tokenizer, sink: mpsc::Sender<FrontendMsg>, group_ids: &[usize]) -> Self {
+        Self::spawn_obs(tokenizer, sink, group_ids, ObsHub::disabled())
+    }
+
+    /// [`Self::spawn`] with a telemetry hub: each handler registers an
+    /// `output-{gid}` shard (spec order, deterministic track layout).
+    pub fn spawn_obs(
+        tokenizer: Tokenizer,
+        sink: mpsc::Sender<FrontendMsg>,
+        group_ids: &[usize],
+        obs: Arc<ObsHub>,
+    ) -> Self {
         let handlers = group_ids
             .iter()
-            .map(|&gid| (gid, OutputShortcut::spawn(tokenizer.clone(), sink.clone())))
+            .map(|&gid| {
+                let shard = obs.register(&format!("output-{gid}"));
+                (gid, OutputShortcut::spawn_shard(tokenizer.clone(), sink.clone(), shard))
+            })
             .collect();
         Self { handlers }
     }

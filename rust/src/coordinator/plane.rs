@@ -284,7 +284,7 @@ impl Dispatcher for PlaneDispatch<'_> {
             ) else {
                 return Err(req);
             };
-            match plane.submit(te, PrefillJob { req, decode_group: group_id }) {
+            match plane.submit(te, PrefillJob { req, decode_group: group_id, submitted_ns: 0 }) {
                 Ok(()) => return Ok(()),
                 Err(job) => req = job.req,
             }

@@ -43,11 +43,11 @@
 //! event is queued by then, so the frontend sink drains completely before
 //! it disconnects).
 
-use crate::sync::mpsc;
+use crate::sync::{mpsc, Arc};
 
 use anyhow::{bail, Result};
 
-use crate::config::{DeploymentMode, ReliabilityConfig, ServingConfig};
+use crate::config::{DeploymentMode, ObservabilityConfig, ReliabilityConfig, ServingConfig};
 use crate::coordinator::decode_sched::GroupLoadView;
 use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::dp_group::DpGroup;
@@ -62,6 +62,7 @@ use crate::disagg::expert_plane::{ExpertPlane, ExpertWorkerSpec, MoeAttnRuntime}
 use crate::disagg::pd::{PrefillPlane, PrefillWorkerSpec};
 use crate::fabric::fault::Fault;
 use crate::model::Tokenizer;
+use crate::obs::{Hst, MetricsSnapshot, ObsHub, SpanKind};
 use crate::reliability::heartbeat::GroupPulseMonitor;
 use crate::reliability::injector::{RecoveryStats, RecoverySupervisor};
 use crate::workload::straggler::StragglerProfile;
@@ -95,6 +96,7 @@ pub struct ServingEngineBuilder {
     pulse_misses: u32,
     reliability: Option<ReliabilityConfig>,
     fault_schedule: Vec<Fault>,
+    observability: ObservabilityConfig,
 }
 
 impl ServingEngineBuilder {
@@ -208,6 +210,18 @@ impl ServingEngineBuilder {
         self
     }
 
+    /// Typed `[observability]` knobs: when enabled, the engine creates an
+    /// [`ObsHub`] and every plane it spawns registers per-thread shards
+    /// into it — lock-free counters/histograms plus a flight-recorder span
+    /// ring per thread. Scrape live via [`ServingEngine::telemetry`];
+    /// `trace_out`/`metrics_out` paths are written at shutdown (Perfetto-
+    /// loadable Chrome trace JSON + text exposition). Default: disabled —
+    /// every recorder call collapses to one `Option` branch.
+    pub fn observability(mut self, cfg: ObservabilityConfig) -> Self {
+        self.observability = cfg;
+        self
+    }
+
     /// §6.2 fault injection: attach a seeded fault schedule and spawn the
     /// engine with recovery wiring (migration outbox + recompute epochs).
     /// The engine then owns a [`RecoverySupervisor`] that fires each fault
@@ -243,12 +257,17 @@ impl ServingEngineBuilder {
         let n = groups.len();
         let decode_domains = self.dp_domains.max(1);
         let straggler = self.straggler.unwrap_or_else(|| StragglerProfile::none(n));
+        // Telemetry hub: created before any plane spawns so every worker
+        // thread registers its shard in deterministic spec order (stable
+        // Perfetto track layout across runs). Disabled config → every
+        // recorder call downstream is a single `Option` branch.
+        let obs = ObsHub::new(&self.observability);
         // §4.2 child-handler model: one output thread per decode group,
         // spawned before the workers so every group gets its sender.
         let ids: Vec<usize> = groups.iter().map(|g| g.id).collect();
         let plane = self
             .frontend
-            .map(|(tokenizer, sink)| OutputPlane::spawn(tokenizer, sink, &ids));
+            .map(|(tokenizer, sink)| OutputPlane::spawn_obs(tokenizer, sink, &ids, Arc::clone(&obs)));
         let wiring = match (&plane, self.out_tx) {
             (Some(p), _) => OutputWiring::PerGroup(p.wiring()),
             (None, Some(tx)) => OutputWiring::Shared(tx),
@@ -273,7 +292,7 @@ impl ServingEngineBuilder {
             let strag = self
                 .expert_straggler
                 .unwrap_or_else(|| StragglerProfile::none(specs.len()));
-            Some(ExpertPlane::spawn(&specs, rt_cfg, strag)?)
+            Some(ExpertPlane::spawn_obs(&specs, rt_cfg, strag, Arc::clone(&obs))?)
         } else {
             None
         };
@@ -284,13 +303,14 @@ impl ServingEngineBuilder {
         } else {
             Some(RecoveryWiring::new(decode_domains, groups.len()))
         };
-        let runtime = DecentralizedRuntime::spawn_recovery(
+        let runtime = DecentralizedRuntime::spawn_obs(
             &groups,
             straggler,
             wiring,
             self.factory.clone(),
             expert.as_ref().map(|p| p.handle()),
             recovery_wiring.clone(),
+            Arc::clone(&obs),
         )?;
         // Prefill attachment: in Transformerless the workers also get the
         // expert plane's exchange handle plus the turnstile domain past
@@ -308,7 +328,13 @@ impl ServingEngineBuilder {
             let exchange = caps
                 .prefill_domain(decode_domains)
                 .and_then(|dom| expert.as_ref().map(|p| (p.handle(), dom)));
-            Some(PrefillPlane::spawn_ext(&specs, factory, runtime.injector(), exchange)?)
+            Some(PrefillPlane::spawn_obs(
+                &specs,
+                factory,
+                runtime.injector(),
+                exchange,
+                Arc::clone(&obs),
+            )?)
         } else {
             None
         };
@@ -316,9 +342,13 @@ impl ServingEngineBuilder {
             let rel = self.reliability.unwrap_or_default();
             let group_domains: Vec<usize> = groups.iter().map(|g| g.domain).collect();
             RecoverySupervisor::new(&rel, rw, self.fault_schedule, group_domains, n_prefill)
+                .with_obs(obs.register("recovery"))
         });
-        let shell = TeShell::from_serving(&self.serving)
+        let mut shell = TeShell::from_serving(&self.serving)
             .with_domains(if caps.expert { decode_domains } else { 1 });
+        // The shell runs on whichever thread calls `submit` — that thread
+        // owns this shard (single-writer contract).
+        shell.obs = obs.register("te-shell");
         Ok(ServingEngine {
             mode: self.mode,
             shell,
@@ -328,6 +358,8 @@ impl ServingEngineBuilder {
             long_seq_threshold: self.long_seq_threshold,
             monitor: GroupPulseMonitor::new(self.pulse_interval_ns, self.pulse_misses),
             supervisor,
+            obs,
+            obs_cfg: self.observability,
         })
     }
 }
@@ -351,6 +383,11 @@ pub struct ServingEngine {
     /// ticked by [`Self::health_sweep`], inspected through
     /// [`Self::recovery_stats`] / [`Self::recovery_quiesced`].
     supervisor: Option<RecoverySupervisor>,
+    /// Telemetry hub every plane's shards registered into; scraped live by
+    /// [`Self::telemetry`], drained to files at [`Self::shutdown`].
+    obs: Arc<ObsHub>,
+    /// Kept for the shutdown-time `trace_out` / `metrics_out` paths.
+    obs_cfg: ObservabilityConfig,
 }
 
 impl ServingEngine {
@@ -374,6 +411,7 @@ impl ServingEngine {
             pulse_misses: DEFAULT_PULSE_MISSES,
             reliability: None,
             fault_schedule: Vec::new(),
+            observability: ObservabilityConfig::default(),
         }
     }
 
@@ -414,7 +452,20 @@ impl ServingEngine {
         mut req: ServeRequest,
     ) -> std::result::Result<DispatchOutcome, AdmissionError> {
         self.stamp_arrival(&mut req);
-        self.with_dispatcher(|shell, d| shell.submit(req, d))
+        let (id, arrival_ns) = (req.id, req.timing.arrival_ns);
+        let r0 = if self.shell.obs.enabled() { self.runtime.now_ns() } else { 0 };
+        let out = self.with_dispatcher(|shell, d| shell.submit(req, d));
+        if self.shell.obs.enabled() {
+            let r1 = self.runtime.now_ns();
+            self.shell.obs.rec_ns(Hst::RouteNs, r1.saturating_sub(r0));
+            if self.shell.obs.sampled(id) {
+                // Admission is stamped at the same u64 `RequestTiming`
+                // holds, so trace and timing agree exactly.
+                self.shell.obs.span(SpanKind::Admission, id, arrival_ns, arrival_ns);
+                self.shell.obs.span(SpanKind::Route, id, r0, r1);
+            }
+        }
+        out
     }
 
     /// Submit a burst of requests with one amortized view acquisition
@@ -428,7 +479,15 @@ impl ServingEngine {
         for req in reqs.iter_mut() {
             self.stamp_arrival(req);
         }
-        self.with_dispatcher(|shell, d| shell.submit_many(reqs, d))
+        let r0 = if self.shell.obs.enabled() { self.runtime.now_ns() } else { 0 };
+        let out = self.with_dispatcher(|shell, d| shell.submit_many(reqs, d));
+        if self.shell.obs.enabled() {
+            // one amortized view acquisition → one RouteNs sample for the
+            // whole burst (per-request spans would misattribute the cost)
+            let r1 = self.runtime.now_ns();
+            self.shell.obs.rec_ns(Hst::RouteNs, r1.saturating_sub(r0));
+        }
+        out
     }
 
     /// Retry parked requests; returns how many left the waiting list.
@@ -554,6 +613,22 @@ impl ServingEngine {
         self.runtime.now_ns()
     }
 
+    /// Live telemetry scrape: aggregates every registered shard's counters,
+    /// log2 histograms, and high-water gauges into one [`MetricsSnapshot`].
+    /// Safe to call any time — scraping takes only the leaf `obs.registry`
+    /// lock (shard list), never anything a worker hot path holds. Readings
+    /// are per-cell-consistent but may trail the writers by a store; they
+    /// are exact once the writers have quiesced (e.g. after `settle`).
+    pub fn telemetry(&self) -> MetricsSnapshot {
+        self.obs.snapshot()
+    }
+
+    /// The telemetry hub itself — clone the `Arc` before [`Self::shutdown`]
+    /// (which consumes the engine) to drain traces afterwards.
+    pub fn obs(&self) -> &Arc<ObsHub> {
+        &self.obs
+    }
+
     /// Drain parked requests and wait until the engine settles (bounded):
     /// the one retry loop every driver needs instead of hand-rolled
     /// `waiting()`/`all_idle()` polling. Errs if the deadline passes with
@@ -610,7 +685,7 @@ impl ServingEngine {
                 eprintln!("serving-engine: parked request {} lost all workers", r.id);
             }
         }
-        let Self { runtime, mut planes, output_plane, .. } = self;
+        let Self { runtime, mut planes, output_plane, obs, obs_cfg, .. } = self;
         // join the prefill plane first, but never skip the decode join on
         // a prefill error — served work must not be discarded
         let prefill_result = planes.shutdown_pre_decode();
@@ -624,6 +699,19 @@ impl ServingEngine {
         // dropping the plane now joins each per-group handler after it
         // drains, then the frontend sink disconnects
         drop(output_plane);
+        // Flight-recorder drain: written before the join results are
+        // checked so a worker panic still leaves the trace on disk — the
+        // recording of a crash is worth the most.
+        if let Some(path) = obs_cfg.trace_out.as_deref() {
+            if let Err(e) = std::fs::write(path, obs.trace_json()) {
+                eprintln!("serving-engine: trace_out {path}: {e}");
+            }
+        }
+        if let Some(path) = obs_cfg.metrics_out.as_deref() {
+            if let Err(e) = std::fs::write(path, obs.metrics_text()) {
+                eprintln!("serving-engine: metrics_out {path}: {e}");
+            }
+        }
         let groups = groups?;
         expert_result?;
         match prefill_result {

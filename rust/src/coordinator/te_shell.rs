@@ -39,6 +39,7 @@ use crate::coordinator::decode_sched::{
 use crate::coordinator::dispatch::{AdmissionError, DispatchOutcome, Dispatcher};
 use crate::coordinator::request::ServeRequest;
 use crate::kvcache::BlockPool;
+use crate::obs::{Ctr, ObsShard};
 use crate::util::rng::Rng;
 
 /// Default number of slots the O(d) fast path samples per request
@@ -122,6 +123,10 @@ pub struct TeShell {
     pending_estimate: usize,
     /// Healthy-group count cached at the last full scan.
     healthy_at_scan: usize,
+    /// Telemetry handle, written by the submitting thread (the engine's
+    /// caller thread owns the shell, so the single-writer contract
+    /// holds). Off by default; `ServingEngineBuilder` wires it.
+    pub obs: ObsShard,
 }
 
 impl TeShell {
@@ -146,6 +151,7 @@ impl TeShell {
             sampled_since_scan: MEDIAN_REFRESH_INTERVAL,
             pending_estimate: 0,
             healthy_at_scan: 0,
+            obs: ObsShard::off(),
         }
     }
 
@@ -234,6 +240,21 @@ impl TeShell {
             + BlockPool::blocks_for_tokens(req.max_new_tokens)
     }
 
+    /// Count one shed by `AdmissionError` kind, plus the backoff hint it
+    /// carried (hint *sum*: divide by the shed count for the mean).
+    fn obs_shed(&self, e: &AdmissionError) {
+        match e {
+            AdmissionError::QueueFull { retry_after_ms, .. } => {
+                self.obs.count(Ctr::ShedQueueFull, 1);
+                self.obs.count(Ctr::RetryAfterMsSum, *retry_after_ms);
+            }
+            AdmissionError::KvExhausted { retry_after_ms, .. } => {
+                self.obs.count(Ctr::ShedKvExhausted, 1);
+                self.obs.count(Ctr::RetryAfterMsSum, *retry_after_ms);
+            }
+        }
+    }
+
     /// Client backoff hint derived from the cached tick-EWMA median (see
     /// [`RETRY_AFTER_TICKS`]).
     fn retry_after_ms(&self) -> u64 {
@@ -318,10 +339,20 @@ impl TeShell {
         d: &mut dyn Dispatcher,
     ) -> std::result::Result<DispatchOutcome, AdmissionError> {
         match self.try_submit_sampled(req, d) {
-            Sampled::Routed(result) => result,
+            Sampled::Routed(result) => {
+                self.obs.count(Ctr::RouteSampled, 1);
+                if let Err(e) = &result {
+                    self.obs_shed(e);
+                }
+                result
+            }
             Sampled::FullScan(req) => {
+                self.obs.count(Ctr::RouteFullScan, 1);
                 let mut views = self.folded_views(d);
-                self.admission_check(&views, &req)?;
+                if let Err(e) = self.admission_check(&views, &req) {
+                    self.obs_shed(&e);
+                    return Err(e);
+                }
                 Ok(self.route_over_snapshot(req, &mut views, d))
             }
         }
@@ -476,6 +507,7 @@ impl TeShell {
             // of losing it.
             Err(req) => {
                 d.demote(gid);
+                self.obs.count(Ctr::RouteParked, 1);
                 self.waiting.push(req);
                 DispatchOutcome::Parked
             }
@@ -525,6 +557,7 @@ impl TeShell {
                 outcome
             }
             None => {
+                self.obs.count(Ctr::RouteParked, 1);
                 self.waiting.push(req);
                 DispatchOutcome::Parked
             }
@@ -547,7 +580,9 @@ impl TeShell {
         let mut views = self.folded_views(d);
         let mut out = Vec::with_capacity(reqs.len());
         for req in reqs {
+            self.obs.count(Ctr::RouteFullScan, 1);
             if let Err(e) = self.admission_check(&views, &req) {
+                self.obs_shed(&e);
                 out.push(Err(e));
                 continue;
             }

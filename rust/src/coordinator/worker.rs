@@ -33,6 +33,7 @@ use crate::coordinator::status_board::{BoardEntry, StatusBoard};
 use crate::kvcache::InvalidationReport;
 use crate::metrics::Ewma;
 use crate::model::DecodeModel;
+use crate::obs::{Ctr, Gge, Hst, ObsHub, ObsShard, SpanKind};
 use crate::reliability::heartbeat::GroupPulseMonitor;
 use crate::workload::straggler::StragglerProfile;
 
@@ -365,6 +366,24 @@ impl DecentralizedRuntime {
         exchange: Option<crate::disagg::expert_plane::ExchangeHandle>,
         recovery: Option<RecoveryWiring>,
     ) -> Result<Self> {
+        Self::spawn_obs(specs, straggler, out, factory, exchange, recovery, ObsHub::disabled())
+    }
+
+    /// [`Self::spawn_recovery`] plus the telemetry hub: each worker
+    /// registers a `dp-group-{id}` shard (in spec order), clones the
+    /// handle into its [`DpGroup`] (same thread — single-writer holds),
+    /// and records per-tick phase latencies, KV high-water, and
+    /// request-lifecycle spans. A disabled hub costs one `Option` branch
+    /// per record call.
+    pub fn spawn_obs(
+        specs: &[GroupSpec],
+        straggler: StragglerProfile,
+        out: OutputWiring,
+        factory: ModelFactory,
+        exchange: Option<crate::disagg::expert_plane::ExchangeHandle>,
+        recovery: Option<RecoveryWiring>,
+        obs: Arc<ObsHub>,
+    ) -> Result<Self> {
         if let Some(rw) = recovery.as_ref() {
             if rw.recompute_acks.len() != specs.len() {
                 bail!(
@@ -409,6 +428,9 @@ impl DecentralizedRuntime {
             let exchange_w = exchange.clone();
             let recovery_w = recovery.clone();
             let spec_w = spec.clone();
+            // registered here (spec order, deterministic track layout) but
+            // written only by the worker thread the handle moves into
+            let obs_w = obs.register(&format!("dp-group-{}", spec.id));
             let join = thread::Builder::new()
                 .name(format!("dp-group-{}", spec.id))
                 .spawn(move || -> DpGroup {
@@ -416,10 +438,11 @@ impl DecentralizedRuntime {
                     group.int8 = spec_w.int8;
                     group.use_mtp = spec_w.use_mtp;
                     group.out_tx = out_w;
+                    group.obs = obs_w.clone();
                     // the §5.2 exchange client is built in-thread, like the
                     // model backend: it owns this group's reply channels
-                    let exchange_client =
-                        exchange_w.map(|h| h.client(spec_w.id, spec_w.domain));
+                    let exchange_client = exchange_w
+                        .map(|h| h.client(spec_w.id, spec_w.domain).with_obs(obs_w.clone()));
                     match factory_w(spec_w.id) {
                         Ok(model) => run_group(
                             group,
@@ -434,6 +457,7 @@ impl DecentralizedRuntime {
                             recovery_w,
                             spec_w.domain,
                             spec_w.fail_after,
+                            obs_w,
                         ),
                         // Backend never came up: the group still owns its
                         // inbox, so fail (with Finished events) everything
@@ -743,6 +767,7 @@ fn run_group(
     recovery: Option<RecoveryWiring>,
     domain: usize,
     fail_after: Option<u64>,
+    obs: ObsShard,
 ) -> DpGroup {
     let mut ewma = Ewma::new(tick_ewma_alpha);
     let mut tick: u64 = 0;
@@ -752,7 +777,9 @@ fn run_group(
     board.publish(slot, group.status(), 0, now_ns(&start));
     loop {
         // 1. Drain the command inbox without blocking.
+        let t_inbox = Instant::now();
         drain_inbox(&rx, &mut group, &mut draining, &start, &mut ctl);
+        let inbox_ns = t_inbox.elapsed().as_nanos() as u64;
 
         // §6.2 death check: an injected Die (or this spec's fail_after
         // budget running out) ends serving *between* ticks, never inside
@@ -819,6 +846,8 @@ fn run_group(
                 }
             }
         }
+        let admit_ns = t0.elapsed().as_nanos() as u64;
+        let t_model = Instant::now();
         if group.healthy && !group.running.is_empty() {
             // §5.2 live MoeAttn data path: one A2E/E2A exchange per layer
             // per microbatch against the expert plane, overlapped per the
@@ -833,9 +862,20 @@ fn run_group(
                     .iter()
                     .map(|s| crate::disagg::expert_plane::row_bytes(&s.hidden))
                     .collect();
+                let xch_begin = now_ns(&start);
                 x.run_iteration(&rows, &mut group.exchange);
+                obs.count(Ctr::ExchangeRounds, 1);
+                if obs.enabled() {
+                    let xch_end = now_ns(&start);
+                    for s in &group.running {
+                        if obs.sampled(s.req.id) {
+                            obs.span(SpanKind::Exchange, s.req.id, xch_begin, xch_end);
+                        }
+                    }
+                }
             }
-            match group.decode_iteration(model, now_ns(&start)) {
+            let decode_begin = now_ns(&start);
+            match group.decode_iteration(model, decode_begin) {
                 Ok(n) => worked |= n > 0,
                 Err(e) => {
                     eprintln!("dp-group-{} decode error: {e}", group.id);
@@ -843,7 +883,16 @@ fn run_group(
                     fail_pending(&mut group, now_ns(&start));
                 }
             }
+            if obs.enabled() {
+                let decode_end = now_ns(&start);
+                for s in &group.running {
+                    if obs.sampled(s.req.id) {
+                        obs.span(SpanKind::Decode, s.req.id, decode_begin, decode_end);
+                    }
+                }
+            }
         }
+        let model_ns = t_model.elapsed().as_nanos() as u64;
 
         // 3. Deterministic straggler injection + tick-latency EWMA.
         if worked {
@@ -854,6 +903,18 @@ fn run_group(
             tick = tick.wrapping_add(1);
             ewma.observe(t0.elapsed().as_nanos() as f64);
             idle_park = IDLE_PARK_MIN;
+            obs.count(Ctr::Ticks, 1);
+            obs.rec_ns(Hst::TickInboxNs, inbox_ns);
+            obs.rec_ns(Hst::TickAdmitNs, admit_ns);
+            obs.rec_ns(Hst::TickModelNs, model_ns);
+            obs.gauge_max(
+                Gge::KvPoolHighWaterBlocks,
+                group.pool.usage().used_blocks as u64,
+            );
+            obs.gauge_max(
+                Gge::GroupLoadHighWater,
+                (group.running.len() + group.queue.len() + group.prefilled.len()) as u64,
+            );
         }
 
         // 4. Publish the post-tick snapshot (liveness pulse included).
@@ -862,7 +923,11 @@ fn run_group(
         // otherwise the shell would see a fresh epoch whose counts predate
         // its own sends and mistakenly clear its stale credits.
         drain_inbox(&rx, &mut group, &mut draining, &start, &mut ctl);
+        let t_pub = Instant::now();
         board.publish(slot, group.status(), ewma.value() as u64, now_ns(&start));
+        if worked {
+            obs.rec_ns(Hst::TickPublishNs, t_pub.elapsed().as_nanos() as u64);
+        }
 
         // 5. Exit / park.
         if draining {

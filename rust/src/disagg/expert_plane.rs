@@ -116,6 +116,7 @@ use crate::eplb::algorithm::{place_replicated, REPLICA_GROW_RATIO, REPLICA_SHRIN
 use crate::fabric::engines::ComputeModel;
 use crate::fabric::FabricParams;
 use crate::metrics::Ewma;
+use crate::obs::{Ctr, Hst, ObsHub, ObsShard};
 use crate::workload::straggler::StragglerProfile;
 use crate::xccl::a2e::{A2eConfig, A2eEngine};
 
@@ -536,6 +537,12 @@ struct PlaneShared {
     domain_violations: AtomicUsize,
     worker_ids: Vec<usize>,
     start: Instant,
+    /// Structural-event telemetry (replica grow/shrink/degrade). NOT the
+    /// per-thread single-writer pattern: every write site runs under
+    /// [`Self::map_lock`], which serializes the load+store pairs and
+    /// orders them — so the counters stay exact despite multiple
+    /// (serialized) writer threads.
+    obs: ObsShard,
 }
 
 impl PlaneShared {
@@ -704,6 +711,7 @@ impl PlaneShared {
                 orphans.push(s);
             } else {
                 self.set_owners(s, &live);
+                self.obs.count(Ctr::ReplicaDegrade, 1);
                 changed += 1;
             }
         }
@@ -725,6 +733,7 @@ impl PlaneShared {
                 break;
             };
             self.set_owners(s, &[w]);
+            self.obs.count(Ctr::ReplicaDegrade, 1);
             load[w] += self.shard_rows[s].load(Ordering::Relaxed) as f64;
             changed += 1;
         }
@@ -840,6 +849,7 @@ impl ExchangeHandle {
             cfg: self.cfg.clone(),
             // stagger clients so same-shard rotations interleave replicas
             rot: std::cell::Cell::new(group as u64),
+            obs: ObsShard::off(),
         }
     }
 }
@@ -874,9 +884,21 @@ pub struct ExchangeClient {
     /// Replica-rotation cursor (§4.5 step 4): advances once per dispatched
     /// slice so a replicated shard's slices alternate across its owners.
     rot: std::cell::Cell<u64>,
+    /// Telemetry shard of the owning decode thread (off by default —
+    /// clients built through [`ExchangeHandle::client`] opt in with
+    /// [`Self::with_obs`]). Single-writer: only the thread that runs
+    /// `run_iteration` writes it.
+    obs: ObsShard,
 }
 
 impl ExchangeClient {
+    /// Attach the decode worker's telemetry shard (turnstile-wait
+    /// histogram + carry engage/land counters).
+    pub fn with_obs(mut self, obs: ObsShard) -> Self {
+        self.obs = obs;
+        self
+    }
+
     /// Microbatches per iteration this client splits its rows into — the
     /// prefill plane uses it as the "long prompt" threshold (a prompt
     /// shorter than one microbatch per split has nothing to overlap).
@@ -929,10 +951,18 @@ impl ExchangeClient {
                 // deferred release: the carried combine has landed — give
                 // waiting domains their rotation window before this
                 // layer's dispatches re-enter the pool
+                self.obs.count(Ctr::CarryLanded, 1);
                 drop(permit.take());
             }
             if permit.is_none() {
-                permit = Some(self.turnstile.enter(self.domain));
+                if self.obs.enabled() {
+                    let t = Instant::now();
+                    permit = Some(self.turnstile.enter(self.domain));
+                    self.obs
+                        .rec_ns(Hst::TurnstileWaitNs, t.elapsed().as_nanos() as u64);
+                } else {
+                    permit = Some(self.turnstile.enter(self.domain));
+                }
             }
             let mut pending = Some(self.dispatch_mb(layer, 0, mbs[0], stats));
             for (i, mb) in mbs.iter().enumerate().skip(1) {
@@ -948,6 +978,7 @@ impl ExchangeClient {
                 // carry the layer's final combine across the seam; the
                 // permit stays held so no other domain can enter mid-carry
                 stats.carries += 1;
+                self.obs.count(Ctr::CarryEngaged, 1);
                 carried = pending
                     .take()
                     .map(|p| (p, self.shared.start.elapsed().as_nanos() as u64));
@@ -1212,6 +1243,20 @@ impl ExpertPlane {
         cfg: MoeAttnRuntime,
         straggler: StragglerProfile,
     ) -> Result<Self> {
+        Self::spawn_obs(specs, cfg, straggler, ObsHub::disabled())
+    }
+
+    /// [`Self::spawn`] with a telemetry hub: registers one structural
+    /// `expert-plane` shard (grow/shrink/degrade, written under the map
+    /// lock) plus per-stage shards `expert-{id}-recv` / `-compute` /
+    /// `-send` in spec order, each moved into the single stage thread
+    /// that writes it.
+    pub fn spawn_obs(
+        specs: &[ExpertWorkerSpec],
+        cfg: MoeAttnRuntime,
+        straggler: StragglerProfile,
+        obs: Arc<ObsHub>,
+    ) -> Result<Self> {
         if specs.is_empty() {
             bail!("expert plane needs at least one worker");
         }
@@ -1261,6 +1306,7 @@ impl ExpertPlane {
             domain_violations: AtomicUsize::new(0),
             worker_ids: specs.iter().map(|s| s.id).collect(),
             start: Instant::now(),
+            obs: obs.register("expert-plane"),
         });
         let turnstile = Arc::new(DomainTurnstile::new(cfg.domains));
         let straggler = Arc::new(straggler);
@@ -1273,6 +1319,13 @@ impl ExpertPlane {
             txs.push(in_tx);
             let id = spec.id;
             let fail_after = spec.fail_after;
+
+            // Per-stage telemetry shards, registered here (spawner
+            // thread, spec order — deterministic track layout) and moved
+            // into the one stage thread that writes each.
+            let obs_r = obs.register(&format!("expert-{id}-recv"));
+            let obs_c = obs.register(&format!("expert-{id}-compute"));
+            let obs_s = obs.register(&format!("expert-{id}-send"));
 
             // Stage 1: A2E-recv — accepts slices off the activation
             // channel, pays the dispatch wire cost, feeds compute.
@@ -1295,7 +1348,9 @@ impl ExpertPlane {
                         sh.domain_depth[msg.domain % sh.domain_depth.len()]
                             .fetch_add(1, Ordering::Relaxed);
                         sh.pool_enter(msg.domain);
+                        let t0 = Instant::now();
                         busy_wait_ns(msg.a2e_ns);
+                        obs_r.rec_ns(Hst::A2eRecvNs, t0.elapsed().as_nanos() as u64);
                         accepted += 1;
                         let dying = fail_after.map_or(false, |k| accepted >= k);
                         if c_tx.send(msg).is_err() {
@@ -1335,7 +1390,9 @@ impl ExpertPlane {
                         expert_transform(msg.shard, &mut msg.payload);
                         sh.shard_rows[msg.shard]
                             .fetch_add(msg.rows as u64, Ordering::Relaxed);
-                        ewma.observe(t0.elapsed().as_nanos() as f64);
+                        let el = t0.elapsed().as_nanos() as u64;
+                        ewma.observe(el as f64);
+                        obs_c.rec_ns(Hst::MoeComputeNs, el);
                         sh.publish(slot, ewma.value() as u64);
                         if s_tx.send(msg).is_err() {
                             break;
@@ -1351,7 +1408,9 @@ impl ExpertPlane {
                 .name(format!("expert-{id}-send"))
                 .spawn(move || {
                     while let Ok(msg) = s_rx.recv() {
+                        let t0 = Instant::now();
                         busy_wait_ns(msg.e2a_ns);
+                        obs_s.rec_ns(Hst::E2aSendNs, t0.elapsed().as_nanos() as u64);
                         // Relaxed: see the recv stage's fetch_add — the
                         // gauge orders nothing, RMWs never lose counts
                         sh.depth[slot].fetch_sub(1, Ordering::Relaxed);
@@ -1586,6 +1645,7 @@ impl ExpertPlane {
                 load[drop_w] -= old_share;
                 counts[drop_w] = counts[drop_w].saturating_sub(1);
                 sh.set_owners(s, &kept);
+                sh.obs.count(Ctr::ReplicaShrink, 1);
                 changes += 1;
             }
         }
@@ -1626,6 +1686,7 @@ impl ExpertPlane {
             let mut grown = owners;
             grown.push(w);
             sh.set_owners(s, &grown);
+            sh.obs.count(Ctr::ReplicaGrow, 1);
             changes += 1;
         }
 
@@ -2233,6 +2294,7 @@ mod model_tests {
             domain_violations: AtomicUsize::new(0),
             worker_ids: (0..n).collect(),
             start: Instant::now(),
+            obs: ObsShard::off(),
         }
     }
 

@@ -40,6 +40,7 @@ use crate::coordinator::request::{RequestState, ServeRequest};
 use crate::coordinator::worker::{Injector, ModelFactory};
 use crate::disagg::expert_plane::{row_bytes, ExchangeClient, ExchangeHandle, ExchangeStats};
 use crate::distflow::{DistFlow, TransferTask};
+use crate::obs::{Ctr, Hst, ObsHub, ObsShard, SpanKind};
 use crate::fabric::memory::GlobalMemory;
 use crate::fabric::topology::{DieId, Topology};
 use crate::fabric::{EngineKind, FabricParams};
@@ -302,6 +303,9 @@ impl PrefillWorkerSpec {
 pub struct PrefillJob {
     pub req: ServeRequest,
     pub decode_group: usize,
+    /// Plane-clock stamp set by [`PrefillPlane::submit`] (0 = unstamped):
+    /// the worker derives its queue-wait histogram sample from it.
+    pub submitted_ns: u64,
 }
 
 struct PrefillHandle {
@@ -376,6 +380,21 @@ impl PrefillPlane {
         injector: Injector,
         exchange: Option<(ExchangeHandle, usize)>,
     ) -> Result<Self> {
+        Self::spawn_obs(specs, factory, injector, exchange, ObsHub::disabled())
+    }
+
+    /// [`Self::spawn_ext`] with a telemetry hub: each worker registers a
+    /// `pd-prefill-{id}` shard (spec order, deterministic track layout),
+    /// written only by its own thread — queue wait, prefill compute,
+    /// KV-codec encode ns/bytes, plus Prefill/KvWire spans stamped at the
+    /// exact `prefill_done_ns` the request's timing carries.
+    pub fn spawn_obs(
+        specs: &[PrefillWorkerSpec],
+        factory: ModelFactory,
+        injector: Injector,
+        exchange: Option<(ExchangeHandle, usize)>,
+        obs: Arc<ObsHub>,
+    ) -> Result<Self> {
         if specs.is_empty() {
             bail!("prefill plane needs at least one worker");
         }
@@ -405,8 +424,12 @@ impl PrefillPlane {
             // double as client group ids (only used for replica-rotation
             // stagger and plane bookkeeping, so overlap with decode group
             // ids is harmless).
-            let client: Option<ExchangeClient> =
-                exchange.as_ref().map(|(h, dom)| h.client(spec.id, *dom));
+            // registered here (spec order, deterministic track layout) but
+            // written only by the worker thread the handle moves into
+            let obs_w = obs.register(&format!("pd-prefill-{}", spec.id));
+            let client: Option<ExchangeClient> = exchange
+                .as_ref()
+                .map(|(h, dom)| h.client(spec.id, *dom).with_obs(obs_w.clone()));
             let stats_w = exchange_stats.as_ref().map(Arc::clone);
             let id = spec.id;
             let fail_after = spec.fail_after;
@@ -442,6 +465,7 @@ impl PrefillPlane {
                             &inflight_w,
                             &fabric,
                             client.as_ref().zip(stats_w.as_deref()),
+                            &obs_w,
                             &mut orphans,
                         );
                         jobs_done += 1;
@@ -522,10 +546,11 @@ impl PrefillPlane {
     /// the job comes back so the caller can retry another worker — and the
     /// dead worker is retired from [`Self::tes`] so placement never
     /// selects it again.
-    pub fn submit(&self, te_id: usize, job: PrefillJob) -> std::result::Result<(), PrefillJob> {
+    pub fn submit(&self, te_id: usize, mut job: PrefillJob) -> std::result::Result<(), PrefillJob> {
         let Some(slot) = self.handles.iter().position(|h| h.id == te_id) else {
             return Err(job);
         };
+        job.submitted_ns = self.injector.now_ns();
         let tokens = job.req.prompt_tokens.len() as u64;
         let dslot = self.injector.slot_of(job.decode_group);
         self.load_tokens[slot].fetch_add(tokens, Ordering::Relaxed);
@@ -637,11 +662,16 @@ fn run_prefill_job(
     inflight: &[AtomicUsize],
     fabric: &FabricParams,
     exchange: Option<(&ExchangeClient, &Mutex<ExchangeStats>)>,
+    obs: &ObsShard,
     orphans: &mut Vec<ServeRequest>,
 ) {
-    let PrefillJob { mut req, decode_group } = job;
+    let PrefillJob { mut req, decode_group, submitted_ns } = job;
     let tokens = req.prompt_tokens.len() as u64;
     req.state = RequestState::Prefilling;
+    let start_ns = if obs.enabled() { injector.now_ns() } else { 0 };
+    if submitted_ns > 0 {
+        obs.rec_ns(Hst::PrefillQueueWaitNs, start_ns.saturating_sub(submitted_ns));
+    }
     let prefilled = match model {
         None => Err(anyhow!("backend unavailable")),
         Some(m) => m.prefill(&req.prompt_tokens).and_then(|pf| {
@@ -651,11 +681,19 @@ fn run_prefill_job(
                 .first()
                 .copied()
                 .ok_or_else(|| anyhow!("empty prefill logits"))? as i32;
+            if obs.enabled() {
+                obs.rec_ns(Hst::PrefillComputeNs, injector.now_ns().saturating_sub(start_ns));
+            }
             // KV-codec byte path: what crosses the thread boundary is the
             // decoded form of the encoded wire blob (a malformed roundtrip
             // fails only this request, like any prefill error)
+            let t_enc = if obs.enabled() { injector.now_ns() } else { 0 };
             let blob = crate::kvcache::quant::encode_kv_auto(&pf.kv);
             let kv = crate::kvcache::quant::decode_kv_like(&blob, &pf.kv)?;
+            if obs.enabled() {
+                obs.rec_ns(Hst::KvEncodeNs, injector.now_ns().saturating_sub(t_enc));
+                obs.count(Ctr::KvEncodeBytes, blob.len() as u64);
+            }
             Ok((pf, first, kv, blob.len() as u64))
         }),
     };
@@ -685,6 +723,19 @@ fn run_prefill_job(
             req.timing.kv_wire_bytes = wire_bytes;
             req.timing.kv_wire_ns = fabric.dma_transfer_ns(wire_bytes as usize);
             req.timing.prefill_done_ns = injector.now_ns();
+            obs.count(Ctr::PrefillJobs, 1);
+            if obs.sampled(req.id) {
+                // Prefill ends at the exact u64 `prefill_done_ns` holds,
+                // so span and timing agree exactly; KvWire extends it by
+                // the modeled fabric cost of moving the wire bytes.
+                obs.span(SpanKind::Prefill, req.id, start_ns, req.timing.prefill_done_ns);
+                obs.span(
+                    SpanKind::KvWire,
+                    req.id,
+                    req.timing.prefill_done_ns,
+                    req.timing.prefill_done_ns + req.timing.kv_wire_ns,
+                );
+            }
             deliver_with_fallback(
                 injector,
                 decode_group,
@@ -830,11 +881,11 @@ mod tests {
         for i in 0..6u64 {
             let req = ServeRequest::new(i, vec![256, 1, 2], 4, 0);
             plane
-                .submit((i % 2) as usize, PrefillJob { req, decode_group: (i % 2) as usize })
+                .submit((i % 2) as usize, PrefillJob { req, decode_group: (i % 2) as usize, submitted_ns: 0 })
                 .unwrap();
         }
         // unknown worker hands the job back
-        let bad = PrefillJob { req: ServeRequest::new(99, vec![256], 2, 0), decode_group: 0 };
+        let bad = PrefillJob { req: ServeRequest::new(99, vec![256], 2, 0), decode_group: 0, submitted_ns: 0 };
         assert!(plane.submit(7, bad).is_err());
 
         let orphans = plane.shutdown().unwrap();
@@ -897,7 +948,7 @@ mod tests {
         // a job explicitly pushed at the retired worker still fails
         // cleanly through the decode side (its thread drains the inbox)
         plane
-            .submit(0, PrefillJob { req: ServeRequest::new(5, vec![256, 1], 2, 0), decode_group: 0 })
+            .submit(0, PrefillJob { req: ServeRequest::new(5, vec![256, 1], 2, 0), decode_group: 0, submitted_ns: 0 })
             .unwrap();
         let orphans = plane.shutdown().unwrap();
         assert!(orphans.is_empty());
@@ -932,7 +983,7 @@ mod tests {
         .unwrap();
         for i in 0..2u64 {
             let req = ServeRequest::new(i, vec![256, 1], 3, 0);
-            plane.submit(0, PrefillJob { req, decode_group: 0 }).unwrap();
+            plane.submit(0, PrefillJob { req, decode_group: 0, submitted_ns: 0 }).unwrap();
         }
         // the crash lands after the 2nd job finishes; placement retires it
         let deadline = Instant::now() + Duration::from_secs(10);
@@ -944,7 +995,7 @@ mod tests {
         // a straggler job routed at the dead worker still terminates: its
         // thread drains the inbox through the backend-unavailable path
         plane
-            .submit(0, PrefillJob { req: ServeRequest::new(9, vec![256, 1], 2, 0), decode_group: 0 })
+            .submit(0, PrefillJob { req: ServeRequest::new(9, vec![256, 1], 2, 0), decode_group: 0, submitted_ns: 0 })
             .unwrap();
         // explicit supervisor-side retirement is idempotent + checked
         assert!(plane.retire(0));
@@ -1012,7 +1063,7 @@ mod tests {
         assert_eq!(live[0].id, 1);
         // the healthy worker still serves
         plane
-            .submit(1, PrefillJob { req: ServeRequest::new(1, vec![256, 1], 3, 0), decode_group: 0 })
+            .submit(1, PrefillJob { req: ServeRequest::new(1, vec![256, 1], 3, 0), decode_group: 0, submitted_ns: 0 })
             .unwrap();
         assert!(plane.shutdown().is_err(), "panicked worker is surfaced");
         let groups = rt.shutdown().unwrap();

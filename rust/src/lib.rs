@@ -98,6 +98,7 @@ pub mod model;
 pub mod kvcache;
 pub mod workload;
 pub mod metrics;
+pub mod obs;
 pub mod coordinator;
 pub mod eplb;
 pub mod mtp;

@@ -12,6 +12,8 @@
 //!   xdeepserve serve --mode pd --prefill-workers 2   (PD-disaggregated)
 //!   xdeepserve serve --mode transformerless          (both planes, §7.1)
 //!   xdeepserve serve --config deploy.toml            (deployment.mode from file)
+//!   xdeepserve serve --trace-out trace.json --metrics-out metrics.txt
+//!                                                    (flight recorder on)
 //!   xdeepserve simulate --preset disagg_768 --seq 3000
 //!   xdeepserve inspect --artifacts artifacts
 //!
@@ -130,6 +132,21 @@ fn serve(args: &Args) -> Result<()> {
             MoeAttnRuntime::from_config(&cfg.moe_attn),
         );
     }
+    // [observability] from the config file; `--trace-out FILE` /
+    // `--metrics-out FILE` override the sinks and switch the flight
+    // recorder on for this run
+    let mut obs_cfg = cfg.observability.clone();
+    if let Some(p) = args.get("trace-out") {
+        obs_cfg.trace_out = Some(p.to_string());
+        obs_cfg.enabled = true;
+    }
+    if let Some(p) = args.get("metrics-out") {
+        obs_cfg.metrics_out = Some(p.to_string());
+        obs_cfg.enabled = true;
+    }
+    let trace_out = obs_cfg.trace_out.clone();
+    let metrics_out = obs_cfg.metrics_out.clone();
+    builder = builder.observability(obs_cfg);
     let mut serving = builder.spawn()?;
 
     let mut gen = WorkloadGen::new(7);
@@ -174,6 +191,12 @@ fn serve(args: &Args) -> Result<()> {
         if g.mtp_drafts > 0 {
             println!("DP{} MTP acceptance: {:.1}%", g.id, g.mtp_acceptance() * 100.0);
         }
+    }
+    if let Some(p) = trace_out {
+        println!("trace written to {p} (open in Perfetto / chrome://tracing)");
+    }
+    if let Some(p) = metrics_out {
+        println!("metrics exposition written to {p}");
     }
     Ok(())
 }

@@ -83,24 +83,16 @@ impl ServingMetrics {
         self.tokens_out as f64 / (self.span_ns as f64 / 1e9)
     }
 
-    /// SLA attainment fractions.
+    /// SLA attainment fractions: the exact share of recorded samples at or
+    /// under each limit. (Earlier versions estimated this by probing 100
+    /// percentiles of a cloned histogram — biased whenever the sample
+    /// count is small or doesn't divide 100, and a clone+sort per call.)
     pub fn sla_attainment(&mut self, ttft_ms: f64, tpot_ms: f64) -> (f64, f64) {
         let frac = |h: &Histogram, lim: f64| {
             if h.is_empty() {
                 return 1.0;
             }
-            // count via copy (Histogram keeps raw samples)
-            let mut ok = 0usize;
-            let mut n = 0usize;
-            let mut probe = h.clone();
-            for p in 1..=100 {
-                let v = probe.percentile(p as f64);
-                n += 1;
-                if v <= lim {
-                    ok += 1;
-                }
-            }
-            ok as f64 / n as f64
+            h.count_le(lim) as f64 / h.len() as f64
         };
         (frac(&self.ttft_ms, ttft_ms), frac(&self.tpot_ms, tpot_ms))
     }
@@ -205,6 +197,24 @@ mod tests {
         m.record_request(&timing(0, 3_000_000_000, 3_100_000_000, 10)); // 3000ms
         let (ttft_ok, _) = m.sla_attainment(2000.0, 35.0);
         assert!(ttft_ok > 0.4 && ttft_ok < 0.6, "half within SLA: {ttft_ok}");
+    }
+
+    #[test]
+    fn sla_attainment_is_exact_for_small_sample_sets() {
+        // 3 samples, 2 within the TTFT limit. The old percentile-probe
+        // estimate (count of p in 1..=100 with percentile(p) <= limit,
+        // nearest-rank) yields 66/100 = 0.66 here; the exact sample count
+        // is 2/3. Guard the exact value so the probe bias cannot return.
+        let mut m = ServingMetrics::new();
+        m.record_request(&timing(0, 100_000_000, 200_000_000, 10)); // ttft 100ms
+        m.record_request(&timing(0, 300_000_000, 400_000_000, 10)); // ttft 300ms
+        m.record_request(&timing(0, 9_000_000_000, 9_100_000_000, 10)); // 9000ms
+        let (ttft_ok, tpot_ok) = m.sla_attainment(2000.0, 35.0);
+        assert_eq!(ttft_ok, 2.0 / 3.0, "exact count, not a percentile probe");
+        assert_eq!(tpot_ok, 1.0, "all TPOTs well under 35ms");
+        // empty histograms still report full attainment
+        let (e1, e2) = ServingMetrics::new().sla_attainment(1.0, 1.0);
+        assert_eq!((e1, e2), (1.0, 1.0));
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Exporters: Chrome-trace-event JSON (Perfetto-loadable) and a text
+//! metrics exposition.
+//!
+//! The trace uses the JSON Object Format (`{"traceEvents": [...]}`) with
+//! one track per shard: a `"M"` (metadata) event names the track after
+//! the shard, then every retained span becomes a `"X"` (complete) event
+//! — `ts`/`dur` in microseconds (plane-clock ns / 1000), `pid` fixed at
+//! 1, `tid` = 1-based shard index, the request id under `args.req`.
+//! Complete events carry begin AND duration in one record, so a trace
+//! assembled from [`crate::obs::recorder::SpanRing`]s is balanced by
+//! construction. Events are emitted sorted by begin time within each
+//! track.
+
+use crate::obs::recorder::SpanRecord;
+use crate::obs::registry::{Ctr, Gge, Hst, MetricsSnapshot, Shard};
+use crate::sync::Arc;
+use crate::util::json::{obj, Json};
+
+fn meta_event(tid: usize, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str("thread_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+fn span_event(tid: usize, s: &SpanRecord) -> Json {
+    obj(vec![
+        ("name", Json::Str(s.kind.name().into())),
+        ("cat", Json::Str("xds".into())),
+        ("ph", Json::Str("X".into())),
+        ("ts", Json::Num(s.begin_ns as f64 / 1000.0)),
+        ("dur", Json::Num(s.end_ns.saturating_sub(s.begin_ns) as f64 / 1000.0)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("req", Json::Num(s.req_id as f64))])),
+    ])
+}
+
+/// Assemble the Perfetto trace for a set of shards. Emitted through
+/// [`crate::util::json::Json`]'s serializer, so the output always parses.
+pub fn trace_json(shards: &[Arc<Shard>]) -> String {
+    let mut events = Vec::new();
+    for (i, shard) in shards.iter().enumerate() {
+        let tid = i + 1;
+        events.push(meta_event(tid, &shard.name));
+        let mut spans = shard.ring.spans();
+        spans.sort_by_key(|s| (s.begin_ns, s.end_ns));
+        events.extend(spans.iter().map(|s| span_event(tid, s)));
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+/// Text exposition of a snapshot: merged totals first, then the
+/// per-shard breakdown. Zero-valued cells are skipped so the dump stays
+/// readable at 256-group scale.
+pub fn metrics_text(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str("# xdeepserve telemetry (latencies in ns on the plane clock)\n");
+    out.push_str(&format!("# shards: {}\n", snap.shards.len()));
+
+    out.push_str("\n[totals]\n");
+    for &c in Ctr::ALL {
+        let v = snap.counter(c);
+        if v > 0 {
+            out.push_str(&format!("counter {} {}\n", c.label(), v));
+        }
+    }
+    for &g in Gge::ALL {
+        let v = snap.gauge(g);
+        if v > 0 {
+            out.push_str(&format!("gauge {} {}\n", g.label(), v));
+        }
+    }
+    for &h in Hst::ALL {
+        let hs = snap.hist(h);
+        if hs.count > 0 {
+            out.push_str(&format!(
+                "hist {} count={} mean={:.0} p50<={} p99<={}\n",
+                h.label(),
+                hs.count,
+                hs.mean_ns(),
+                hs.percentile_ns(50.0),
+                hs.percentile_ns(99.0),
+            ));
+        }
+    }
+
+    for shard in &snap.shards {
+        out.push_str(&format!("\n[shard {}]\n", shard.name));
+        for &c in Ctr::ALL {
+            let v = shard.counters[c as usize];
+            if v > 0 {
+                out.push_str(&format!("counter {} {}\n", c.label(), v));
+            }
+        }
+        for &g in Gge::ALL {
+            let v = shard.gauges[g as usize];
+            if v > 0 {
+                out.push_str(&format!("gauge {} {}\n", g.label(), v));
+            }
+        }
+        for &h in Hst::ALL {
+            let hs = &shard.hists[h as usize];
+            if hs.count > 0 {
+                out.push_str(&format!(
+                    "hist {} count={} mean={:.0} p50<={} p99<={}\n",
+                    h.label(),
+                    hs.count,
+                    hs.mean_ns(),
+                    hs.percentile_ns(50.0),
+                    hs.percentile_ns(99.0),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::SpanKind;
+    use crate::obs::registry::ObsShard;
+
+    fn traced_shard(name: &str) -> (Arc<Shard>, ObsShard) {
+        let shard = Arc::new(Shard::new(name, 16));
+        let handle = ObsShard::on(Arc::clone(&shard), 1);
+        (shard, handle)
+    }
+
+    #[test]
+    fn trace_json_parses_and_has_one_track_per_shard() {
+        let (sa, ha) = traced_shard("dp-group-0");
+        let (sb, hb) = traced_shard("pd-prefill-0");
+        ha.span(SpanKind::Decode, 7, 3_000, 5_000);
+        ha.span(SpanKind::Finish, 7, 5_000, 5_000);
+        hb.span(SpanKind::Prefill, 7, 1_000, 2_500);
+        let text = trace_json(&[sa, sb]);
+        let json = Json::parse(&text).expect("trace must parse");
+        assert_eq!(json.get("displayTimeUnit").and_then(|j| j.as_str()), Some("ms"));
+        let events = json.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        // 2 metadata + 3 spans
+        assert_eq!(events.len(), 5);
+        let metas: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .map(|e| e.path(&["args", "name"]).and_then(|n| n.as_str()).unwrap())
+            .collect();
+        assert_eq!(metas, vec!["dp-group-0", "pd-prefill-0"]);
+        let decode = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("decode"))
+            .unwrap();
+        assert_eq!(decode.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(decode.get("ts").and_then(|t| t.as_f64()), Some(3.0), "µs = ns/1000");
+        assert_eq!(decode.get("dur").and_then(|d| d.as_f64()), Some(2.0));
+        assert_eq!(decode.path(&["args", "req"]).and_then(|r| r.as_u64()), Some(7));
+    }
+
+    #[test]
+    fn trace_events_are_ordered_within_a_track() {
+        let (s, h) = traced_shard("w");
+        h.span(SpanKind::Decode, 1, 900, 950);
+        h.span(SpanKind::Decode, 1, 100, 150);
+        h.span(SpanKind::Decode, 1, 500, 550);
+        let json = Json::parse(&trace_json(&[s])).unwrap();
+        let ts: Vec<f64> = json
+            .get("traceEvents")
+            .and_then(|j| j.as_arr())
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .map(|e| e.get("ts").and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert_eq!(ts, vec![0.1, 0.5, 0.9], "sorted by begin time");
+    }
+
+    #[test]
+    fn metrics_text_skips_zero_cells() {
+        let (shard, h) = traced_shard("dp-group-3");
+        h.count(Ctr::TokensOut, 42);
+        h.rec_ns(Hst::TickModelNs, 2_000);
+        h.gauge_max(Gge::KvPoolHighWaterBlocks, 17);
+        let snap = MetricsSnapshot { shards: vec![shard.snapshot()] };
+        let text = metrics_text(&snap);
+        assert!(text.contains("[shard dp-group-3]"));
+        assert!(text.contains("counter tokens_out 42"));
+        assert!(text.contains("gauge kv_pool_high_water_blocks 17"));
+        assert!(text.contains("hist tick_model_ns count=1"));
+        assert!(!text.contains("migrations_attempted"), "zero cells are skipped");
+    }
+}

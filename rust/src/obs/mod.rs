@@ -1,0 +1,235 @@
+//! Live telemetry plane: lock-free sharded metrics + per-thread flight
+//! recorder (Perfetto export).
+//!
+//! The engine's planes (DP-group workers, prefill workers, expert-plane
+//! stage threads, output shortcuts, the TE-shell, the recovery
+//! supervisor) each register one [`ObsShard`] with the engine's
+//! [`ObsHub`] and write it **single-writer, lock-free**:
+//!
+//! * **Metrics** ([`registry`]): counters, fixed-bucket log2 histograms,
+//!   and high-water gauges — all `Relaxed` atomic stores on the hot path
+//!   (zero locks, zero allocation; the recorder entry points are
+//!   `// xds:hot` roots so `xds-lint` enforces this). Aggregation happens
+//!   only at scrape time ([`ObsHub::snapshot`] →
+//!   [`registry::MetricsSnapshot`], readable via
+//!   `ServingEngine::telemetry()`).
+//! * **Flight recorder** ([`recorder`]): a fixed-capacity per-shard span
+//!   ring (oldest overwritten, bounded memory) recording request
+//!   lifecycles — admission → route → prefill → KV wire → per-tick
+//!   decode → exchange rounds → migration → finish — as *complete* spans
+//!   stamped on the plane clock the calling thread already uses
+//!   (`DecentralizedRuntime::now_ns` / `Injector::now_ns`, one shared
+//!   epoch). Drained at scrape/shutdown into Chrome-trace-event JSON
+//!   ([`export::trace_json`], loadable in Perfetto, one track per shard,
+//!   request-id correlated) plus a text exposition dump
+//!   ([`export::metrics_text`]).
+//!
+//! # Concurrency contract (see CONCURRENCY.md)
+//!
+//! Every shard has exactly one writer thread; writes are `Relaxed`
+//! load+store (saturating — no RMW needed under single-writer). The
+//! scraper walks the registry under the `obs.registry` mutex (a leaf
+//! class, taken only at register/scrape time — never on the hot path)
+//! and reads shard cells `Relaxed`: counters are monotonic, so a
+//! concurrent scrape can be *stale but never torn per cell*; after the
+//! writer thread has quiesced (joined), a scrape is exact. Span slots may
+//! be torn mid-run across their four cells; the post-shutdown drain — the
+//! one the trace file is written from — is exact.
+//!
+//! Disabled mode ([`ObsHub::disabled`]) hands out empty handles: every
+//! hot-path call is a single branch on an `Option`, which is what the
+//! `runtime_hotpath` enabled-vs-disabled gate (≤ 5%) measures.
+
+pub mod export;
+pub mod recorder;
+pub mod registry;
+
+use crate::config::ObservabilityConfig;
+use crate::sync::{named_mutex, Arc, Mutex};
+
+pub use recorder::{SpanKind, SpanRecord};
+pub use registry::{Ctr, Gge, Hst, HistSnapshot, MetricsSnapshot, ObsShard, ShardSnapshot};
+
+/// The engine-owned telemetry hub: shard registry + trace settings.
+/// Cheap to share (`Arc`); all hot-path state lives in the per-thread
+/// shards, never here.
+pub struct ObsHub {
+    enabled: bool,
+    trace_ring_spans: usize,
+    trace_sample_every: u64,
+    /// Registered shards, in registration order. Locked only at
+    /// register/scrape time (`obs.registry` lockdep class, a leaf).
+    shards: Mutex<Vec<Arc<registry::Shard>>>,
+}
+
+impl ObsHub {
+    /// Hub for the given config; `enabled = false` yields the same no-op
+    /// behaviour as [`ObsHub::disabled`].
+    pub fn new(cfg: &ObservabilityConfig) -> Arc<Self> {
+        Arc::new(Self {
+            enabled: cfg.enabled,
+            trace_ring_spans: cfg.trace_ring_spans,
+            trace_sample_every: cfg.trace_sample_every.max(1),
+            shards: named_mutex("obs.registry", Vec::new()),
+        })
+    }
+
+    /// Telemetry off: `register` hands out empty handles whose hot-path
+    /// calls are a single `Option` branch.
+    pub fn disabled() -> Arc<Self> {
+        Self::new(&ObservabilityConfig::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Register a named shard for the calling thread. The hub keeps the
+    /// shard alive after the thread's handle drops (teardown loses no
+    /// data — the final scrape still sees it). On a disabled hub this is
+    /// free and returns the no-op handle.
+    pub fn register(&self, name: &str) -> ObsShard {
+        if !self.enabled {
+            return ObsShard::off();
+        }
+        let shard = Arc::new(registry::Shard::new(name, self.trace_ring_spans));
+        // invariant: obs.registry is a leaf lock, never poisoned by design
+        // (no panics under it) — and this module is outside the unwrap
+        // lint scope anyway; keep the expect message actionable.
+        self.shards.lock().expect("obs.registry poisoned").push(Arc::clone(&shard));
+        ObsShard::on(shard, self.trace_sample_every)
+    }
+
+    /// Trace-sampling decision for a request id (1-in-N). Mirrors
+    /// [`ObsShard::sampled`] for callers that only hold the hub.
+    pub fn sampled(&self, req_id: u64) -> bool {
+        self.enabled && req_id % self.trace_sample_every == 0
+    }
+
+    /// Aggregate every registered shard into a snapshot. Relaxed reads of
+    /// monotonic cells: stale-but-not-torn mid-run, exact once writers
+    /// have quiesced.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let shards = self.shards.lock().expect("obs.registry poisoned");
+        MetricsSnapshot { shards: shards.iter().map(|s| s.snapshot()).collect() }
+    }
+
+    /// Drain every shard's span ring into Chrome-trace-event JSON
+    /// (Perfetto-loadable). Non-destructive: rings keep their contents.
+    pub fn trace_json(&self) -> String {
+        let shards = self.shards.lock().expect("obs.registry poisoned");
+        export::trace_json(&shards)
+    }
+
+    /// Text exposition of the current snapshot.
+    pub fn metrics_text(&self) -> String {
+        export::metrics_text(&self.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on_cfg() -> ObservabilityConfig {
+        ObservabilityConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_hub_hands_out_noop_shards() {
+        let hub = ObsHub::disabled();
+        let s = hub.register("w0");
+        assert!(!s.enabled());
+        s.count(Ctr::Ticks, 3);
+        s.rec_ns(Hst::TickModelNs, 1000);
+        s.span(SpanKind::Decode, 1, 0, 10);
+        assert_eq!(hub.snapshot().shards.len(), 0);
+        assert!(!hub.sampled(0));
+    }
+
+    #[test]
+    fn shard_survives_handle_teardown() {
+        let hub = ObsHub::new(&on_cfg());
+        {
+            let s = hub.register("ephemeral");
+            s.count(Ctr::Ticks, 7);
+        } // handle dropped — simulated thread exit
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter(Ctr::Ticks), 7, "data outlives the handle");
+        assert_eq!(snap.shards[0].name, "ephemeral");
+    }
+
+    #[test]
+    fn sampling_is_one_in_n() {
+        let cfg = ObservabilityConfig {
+            enabled: true,
+            trace_sample_every: 4,
+            ..Default::default()
+        };
+        let hub = ObsHub::new(&cfg);
+        let hits = (0..16u64).filter(|&i| hub.sampled(i)).count();
+        assert_eq!(hits, 4);
+        let s = hub.register("w");
+        assert!(s.sampled(8) && !s.sampled(9));
+    }
+
+    #[test]
+    fn snapshot_merges_across_shards() {
+        let hub = ObsHub::new(&on_cfg());
+        let a = hub.register("a");
+        let b = hub.register("b");
+        a.count(Ctr::TokensOut, 5);
+        b.count(Ctr::TokensOut, 11);
+        a.gauge_max(Gge::KvPoolHighWaterBlocks, 40);
+        b.gauge_max(Gge::KvPoolHighWaterBlocks, 90);
+        a.rec_ns(Hst::RouteNs, 100);
+        b.rec_ns(Hst::RouteNs, 100_000);
+        let snap = hub.snapshot();
+        assert_eq!(snap.counter(Ctr::TokensOut), 16);
+        assert_eq!(snap.gauge(Gge::KvPoolHighWaterBlocks), 90);
+        let h = snap.hist(Hst::RouteNs);
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum_ns, 100_100);
+    }
+}
+
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use super::*;
+    use crate::sync::model;
+
+    /// Concurrent single-writer shards vs a scraping reader: the scrape
+    /// must never observe a counter above what was written (monotonic,
+    /// never torn per cell), and the post-join scrape is exact.
+    #[test]
+    fn model_obs_writers_vs_scraper_monotonic_and_exact() {
+        model::check("obs_writers_vs_scraper", || {
+            let hub = ObsHub::new(&ObservabilityConfig {
+                enabled: true,
+                ..Default::default()
+            });
+            let a = hub.register("wa");
+            let b = hub.register("wb");
+            let hub2 = Arc::clone(&hub);
+            let ta = model::spawn(move || {
+                for _ in 0..3 {
+                    a.count(Ctr::Ticks, 1);
+                    a.rec_ns(Hst::TickModelNs, 1 << 10);
+                }
+            });
+            let tb = model::spawn(move || {
+                for _ in 0..3 {
+                    b.count(Ctr::Ticks, 1);
+                }
+            });
+            // mid-run scrape races both writers
+            let mid = hub2.snapshot().counter(Ctr::Ticks);
+            assert!(mid <= 6, "scrape past the written total: {mid}");
+            ta.join().unwrap();
+            tb.join().unwrap();
+            let fin = hub2.snapshot();
+            assert_eq!(fin.counter(Ctr::Ticks), 6, "post-join scrape exact");
+            assert_eq!(fin.hist(Hst::TickModelNs).count, 3);
+        });
+    }
+}

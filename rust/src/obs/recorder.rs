@@ -1,0 +1,213 @@
+//! Flight recorder: per-shard fixed-capacity span rings.
+//!
+//! Spans are recorded as **complete** records — the writer stamps both
+//! `begin_ns` and `end_ns` (on the plane clock it already holds) in one
+//! [`SpanRing::push_span`] call at span end. That choice makes "orphan
+//! begin/end" impossible by construction and keeps the hot path to four
+//! `Relaxed` stores into a preallocated slot: no locks, no allocation,
+//! bounded memory. When the ring wraps, the oldest span is overwritten
+//! (the caller counts the overwrite in `Ctr::SpansDropped`).
+//!
+//! Single-writer like the rest of the shard: only the owning thread
+//! pushes. A concurrent drain may see one slot torn across its four
+//! cells mid-run; the drains that matter (scrape after writers quiesce,
+//! shutdown) are exact.
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+
+/// Request-lifecycle span kinds, in pipeline order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u64)]
+pub enum SpanKind {
+    /// Shell admission check (queue/KV headroom).
+    Admission,
+    /// Shell routing + delivery to a DP group or prefill worker.
+    Route,
+    /// Prefill compute on the prefill plane.
+    Prefill,
+    /// KV-codec encode + simulated wire transfer at the PD handoff.
+    KvWire,
+    /// One decode tick in which this request produced a token.
+    Decode,
+    /// Client-side A2E/E2A exchange round.
+    Exchange,
+    /// §6.2 stream migration (deposit → resume on a survivor).
+    Migration,
+    /// Instant: first token emitted (`begin == end == first_token_ns`).
+    FirstToken,
+    /// Instant: request reached a terminal state (`done_ns`).
+    Finish,
+}
+
+impl SpanKind {
+    pub const ALL: &'static [SpanKind] = &[
+        SpanKind::Admission,
+        SpanKind::Route,
+        SpanKind::Prefill,
+        SpanKind::KvWire,
+        SpanKind::Decode,
+        SpanKind::Exchange,
+        SpanKind::Migration,
+        SpanKind::FirstToken,
+        SpanKind::Finish,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admission => "admission",
+            SpanKind::Route => "route",
+            SpanKind::Prefill => "prefill",
+            SpanKind::KvWire => "kv_wire",
+            SpanKind::Decode => "decode",
+            SpanKind::Exchange => "exchange",
+            SpanKind::Migration => "migration",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::Finish => "finish",
+        }
+    }
+
+    fn from_tag(tag: u64) -> Option<SpanKind> {
+        // tag is `kind as u64 + 1`; 0 marks a never-written slot.
+        Self::ALL.get(tag.wrapping_sub(1) as usize).copied()
+    }
+}
+
+/// One drained span (plane-clock ns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    pub req_id: u64,
+    pub begin_ns: u64,
+    pub end_ns: u64,
+}
+
+struct Slot {
+    /// `kind as u64 + 1`; 0 = empty.
+    tag: AtomicU64,
+    req: AtomicU64,
+    begin: AtomicU64,
+    end: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            tag: AtomicU64::new(0),
+            req: AtomicU64::new(0),
+            begin: AtomicU64::new(0),
+            end: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity span ring, oldest-overwritten. All state preallocated
+/// at construction; `push_span` touches exactly one slot.
+pub struct SpanRing {
+    slots: Vec<Slot>,
+    /// Total spans ever pushed; `widx % cap` is the next slot.
+    widx: AtomicU64,
+}
+
+impl SpanRing {
+    pub(crate) fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { slots: (0..cap).map(|_| Slot::new()).collect(), widx: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one complete span. Returns `true` when an older span was
+    /// overwritten. Single-writer: the `widx` load+store pair is exact
+    /// for the owning thread.
+    // xds:hot
+    #[inline]
+    pub fn push_span(&self, kind: SpanKind, req_id: u64, begin_ns: u64, end_ns: u64) -> bool {
+        let idx = self.widx.load(Ordering::Relaxed);
+        let slot = &self.slots[(idx % self.slots.len() as u64) as usize];
+        slot.tag.store(kind as u64 + 1, Ordering::Relaxed);
+        slot.req.store(req_id, Ordering::Relaxed);
+        slot.begin.store(begin_ns, Ordering::Relaxed);
+        slot.end.store(end_ns, Ordering::Relaxed);
+        self.widx.store(idx + 1, Ordering::Relaxed);
+        idx >= self.slots.len() as u64
+    }
+
+    /// Spans overwritten before they could be drained.
+    pub fn dropped(&self) -> u64 {
+        self.widx.load(Ordering::Relaxed).saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Collect the retained spans in write order (oldest first).
+    /// Non-destructive — the ring keeps its contents so scrape-time and
+    /// shutdown drains compose.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let widx = self.widx.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let first = widx.saturating_sub(cap);
+        (first..widx)
+            .filter_map(|i| {
+                let slot = &self.slots[(i % cap) as usize];
+                let kind = SpanKind::from_tag(slot.tag.load(Ordering::Relaxed))?;
+                Some(SpanRecord {
+                    kind,
+                    req_id: slot.req.load(Ordering::Relaxed),
+                    begin_ns: slot.begin.load(Ordering::Relaxed),
+                    end_ns: slot.end.load(Ordering::Relaxed),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_drain_in_write_order() {
+        let r = SpanRing::new(8);
+        assert!(!r.push_span(SpanKind::Admission, 1, 10, 20));
+        assert!(!r.push_span(SpanKind::Route, 1, 20, 30));
+        assert!(!r.push_span(SpanKind::Decode, 1, 30, 40));
+        let spans = r.spans();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].kind, SpanKind::Admission);
+        assert_eq!(spans[2], SpanRecord { kind: SpanKind::Decode, req_id: 1, begin_ns: 30, end_ns: 40 });
+        assert_eq!(r.dropped(), 0);
+        // non-destructive drain
+        assert_eq!(r.spans().len(), 3);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let r = SpanRing::new(4);
+        for i in 0..10u64 {
+            let overwrote = r.push_span(SpanKind::Decode, i, i * 10, i * 10 + 5);
+            assert_eq!(overwrote, i >= 4, "push {i}");
+        }
+        let spans = r.spans();
+        assert_eq!(spans.len(), 4, "bounded by capacity");
+        let reqs: Vec<u64> = spans.iter().map(|s| s.req_id).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "oldest overwritten, order kept");
+        assert_eq!(r.dropped(), 6);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let r = SpanRing::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.push_span(SpanKind::Finish, 9, 100, 100);
+        assert_eq!(r.spans()[0].req_id, 9);
+    }
+
+    #[test]
+    fn kind_tags_round_trip() {
+        for &k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_tag(k as u64 + 1), Some(k), "{}", k.name());
+        }
+        assert_eq!(SpanKind::from_tag(0), None, "empty slot");
+        assert_eq!(SpanKind::from_tag(SpanKind::ALL.len() as u64 + 1), None);
+    }
+}

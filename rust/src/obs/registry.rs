@@ -1,0 +1,469 @@
+//! Sharded lock-free metrics registry.
+//!
+//! One [`Shard`] per worker thread, **single-writer**: the owning thread
+//! records with `Relaxed` load+store pairs (saturating, no RMW — the
+//! single-writer contract makes load+store exact for the writer while
+//! readers see stale-but-never-torn cells). Aggregation happens only at
+//! scrape time into a [`MetricsSnapshot`]; nothing on the record path
+//! takes a lock or allocates. The recording entry points
+//! ([`ObsShard::count`] / [`ObsShard::rec_ns`] / [`ObsShard::gauge_max`]
+//! / [`ObsShard::span`]) are `// xds:hot` roots — `xds-lint` walks their
+//! call graphs and rejects any reachable `.lock(`.
+//!
+//! Metric identity is a closed enum per cell class ([`Ctr`] counters,
+//! [`Hst`] log2-bucket histograms, [`Gge`] high-water gauges) so a shard
+//! is a fixed block of atomics — no names or maps anywhere near the hot
+//! path. Units: every histogram records **nanoseconds on the plane
+//! clock** (`DecentralizedRuntime`/`Injector` share one `Instant` epoch)
+//! except where the variant name says otherwise.
+
+use crate::obs::recorder::{SpanKind, SpanRecord, SpanRing};
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Arc;
+
+/// Log2 histogram bucket count: bucket `i` holds values in
+/// `[2^i, 2^(i+1))` ns (bucket 0 additionally holds 0), bucket 31 is the
+/// overflow tail (≥ ~2.1 s).
+pub const HIST_BUCKETS: usize = 32;
+
+macro_rules! metric_enum {
+    ($(#[$doc:meta])* $name:ident { $($(#[$vdoc:meta])* $var:ident => $label:literal,)+ }) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum $name {
+            $($(#[$vdoc])* $var,)+
+        }
+
+        impl $name {
+            pub const ALL: &'static [$name] = &[$($name::$var,)+];
+            pub const COUNT: usize = Self::ALL.len();
+
+            pub fn label(self) -> &'static str {
+                match self {
+                    $($name::$var => $label,)+
+                }
+            }
+        }
+    };
+}
+
+metric_enum! {
+    /// Monotonic counters (events, bytes, tokens).
+    Ctr {
+        // -- shell routing --
+        /// Submits routed via the O(d) sampled fast path.
+        RouteSampled => "route_sampled",
+        /// Submits that fell back to the O(N) full scan.
+        RouteFullScan => "route_full_scan",
+        /// Requests shed with `AdmissionError::QueueFull`.
+        ShedQueueFull => "shed_queue_full",
+        /// Requests shed with `AdmissionError::KvExhausted`.
+        ShedKvExhausted => "shed_kv_exhausted",
+        /// Sum of `retry_after_ms` hints handed to shed requests.
+        RetryAfterMsSum => "retry_after_ms_sum",
+        /// Requests parked in the shell's waiting list at submit.
+        RouteParked => "route_parked",
+        // -- decode workers --
+        /// Decode tick-loop iterations.
+        Ticks => "ticks",
+        /// Output tokens emitted by decode.
+        TokensOut => "tokens_out",
+        /// Requests reaching a terminal state (Done or Failed).
+        RequestsDone => "requests_done",
+        /// Prefilled-KV injections deferred because the group was full.
+        HandoffDeferred => "handoff_deferred",
+        // -- prefill plane --
+        /// Prefill jobs completed.
+        PrefillJobs => "prefill_jobs",
+        /// §4.7 KV-codec wire bytes encoded at handoff.
+        KvEncodeBytes => "kv_encode_bytes",
+        // -- expert plane / exchange --
+        /// Client-side A2E/E2A exchange iterations.
+        ExchangeRounds => "exchange_rounds",
+        /// §5.2 cross-layer carries engaged (seam opened).
+        CarryEngaged => "carry_engaged",
+        /// Cross-layer carries landed (seam closed).
+        CarryLanded => "carry_landed",
+        /// EPLB replica grow placements.
+        ReplicaGrow => "replica_grow",
+        /// EPLB replica shrink placements.
+        ReplicaShrink => "replica_shrink",
+        /// Replicas degraded to survivors after a worker death.
+        ReplicaDegrade => "replica_degrade",
+        // -- recovery --
+        /// §6.2 stream migrations attempted (outbox deposits drained).
+        MigrationsAttempted => "migrations_attempted",
+        /// Migrations landed on a survivor (stream resumed).
+        MigrationsLanded => "migrations_landed",
+        /// Migrations that failed the stream.
+        MigrationsFailed => "migrations_failed",
+        // -- output plane --
+        /// Tokens streamed through output shortcut threads.
+        TokensStreamed => "tokens_streamed",
+        /// Streams terminated through the output plane.
+        StreamsFinished => "streams_finished",
+        // -- recorder self-observation --
+        /// Spans overwritten in the ring before they could be drained.
+        SpansDropped => "spans_dropped",
+    }
+}
+
+metric_enum! {
+    /// Log2-bucket latency histograms (ns on the plane clock).
+    Hst {
+        /// Worker tick phase: inbox drain.
+        TickInboxNs => "tick_inbox_ns",
+        /// Worker tick phase: prefill/queue admission.
+        TickAdmitNs => "tick_admit_ns",
+        /// Worker tick phase: model step (decode + exchange).
+        TickModelNs => "tick_model_ns",
+        /// Worker tick phase: status-board publish.
+        TickPublishNs => "tick_publish_ns",
+        /// Shell submit: admission + routing + delivery.
+        RouteNs => "route_ns",
+        /// Prefill job: submit-to-start queue wait.
+        PrefillQueueWaitNs => "prefill_queue_wait_ns",
+        /// Prefill job: prompt prefill compute.
+        PrefillComputeNs => "prefill_compute_ns",
+        /// Prefill job: KV-codec encode.
+        KvEncodeNs => "kv_encode_ns",
+        /// Expert stage: A2E recv wait.
+        A2eRecvNs => "a2e_recv_ns",
+        /// Expert stage: MoE compute.
+        MoeComputeNs => "moe_compute_ns",
+        /// Expert stage: E2A send.
+        E2aSendNs => "e2a_send_ns",
+        /// Client-side turnstile wait before entering the expert pool.
+        TurnstileWaitNs => "turnstile_wait_ns",
+        /// §6.2 measured per-action downtime.
+        RecoveryDowntimeNs => "recovery_downtime_ns",
+    }
+}
+
+metric_enum! {
+    /// High-water gauges (monotonic max).
+    Gge {
+        /// Peak KV pool occupancy (blocks in use).
+        KvPoolHighWaterBlocks => "kv_pool_high_water_blocks",
+        /// Peak running+queued requests observed by a worker.
+        GroupLoadHighWater => "group_load_high_water",
+    }
+}
+
+/// One histogram cell block: log2 buckets + exact count/sum.
+pub(crate) struct HistCell {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistCell {
+    fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_idx(v: u64) -> usize {
+        // 0 and 1 land in bucket 0; overflow clamps into the tail bucket.
+        (63 - (v | 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One thread's metric block + span ring. Created through
+/// [`crate::obs::ObsHub::register`]; written only by the owning thread.
+pub struct Shard {
+    pub(crate) name: String,
+    counters: [AtomicU64; Ctr::COUNT],
+    hists: Vec<HistCell>,
+    gauges: [AtomicU64; Gge::COUNT],
+    pub(crate) ring: SpanRing,
+}
+
+impl Shard {
+    pub(crate) fn new(name: &str, ring_cap: usize) -> Self {
+        Self {
+            name: name.to_string(),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: (0..Hst::COUNT).map(|_| HistCell::new()).collect(),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            ring: SpanRing::new(ring_cap),
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            name: self.name.clone(),
+            counters: self.counters.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            hists: self.hists.iter().map(|h| h.snapshot()).collect(),
+            gauges: self.gauges.iter().map(|g| g.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// The per-thread recording handle: an `Option<Arc<Shard>>` plus the
+/// trace-sampling stride. Disabled handles ([`ObsShard::off`]) make every
+/// record call a single branch. Clone freely within the owning thread
+/// (e.g. worker loop + its `DpGroup`) — the single-writer contract is
+/// per *thread*, not per handle.
+#[derive(Clone)]
+pub struct ObsShard {
+    shard: Option<Arc<Shard>>,
+    sample_every: u64,
+}
+
+impl Default for ObsShard {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl ObsShard {
+    /// No-op handle (telemetry disabled).
+    pub fn off() -> Self {
+        Self { shard: None, sample_every: u64::MAX }
+    }
+
+    pub(crate) fn on(shard: Arc<Shard>, sample_every: u64) -> Self {
+        Self { shard: Some(shard), sample_every: sample_every.max(1) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.shard.is_some()
+    }
+
+    /// Trace-sampling decision (1-in-N by request id). False when off.
+    #[inline]
+    pub fn sampled(&self, req_id: u64) -> bool {
+        self.shard.is_some() && req_id % self.sample_every == 0
+    }
+
+    /// Bump a counter by `n` (saturating). Single-writer: a Relaxed
+    /// load+store pair is exact for the owning thread and monotonic for
+    /// scrapers.
+    // xds:hot
+    #[inline]
+    pub fn count(&self, c: Ctr, n: u64) {
+        if let Some(s) = &self.shard {
+            let cell = &s.counters[c as usize];
+            cell.store(cell.load(Ordering::Relaxed).saturating_add(n), Ordering::Relaxed);
+        }
+    }
+
+    /// Record a latency sample into a log2 histogram.
+    // xds:hot
+    #[inline]
+    pub fn rec_ns(&self, h: Hst, ns: u64) {
+        if let Some(s) = &self.shard {
+            let cell = &s.hists[h as usize];
+            let b = &cell.buckets[HistCell::bucket_idx(ns)];
+            b.store(b.load(Ordering::Relaxed).saturating_add(1), Ordering::Relaxed);
+            cell.count
+                .store(cell.count.load(Ordering::Relaxed).saturating_add(1), Ordering::Relaxed);
+            cell.sum
+                .store(cell.sum.load(Ordering::Relaxed).saturating_add(ns), Ordering::Relaxed);
+        }
+    }
+
+    /// Raise a high-water gauge to at least `v` (single-writer max — no
+    /// RMW needed).
+    // xds:hot
+    #[inline]
+    pub fn gauge_max(&self, g: Gge, v: u64) {
+        if let Some(s) = &self.shard {
+            let cell = &s.gauges[g as usize];
+            if v > cell.load(Ordering::Relaxed) {
+                cell.store(v, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record a complete span (begin/end already stamped on the plane
+    /// clock by the caller). Overwrites the oldest span when the ring is
+    /// full; the overwrite is counted in [`Ctr::SpansDropped`].
+    // xds:hot
+    #[inline]
+    pub fn span(&self, kind: SpanKind, req_id: u64, begin_ns: u64, end_ns: u64) {
+        if let Some(s) = &self.shard {
+            if s.ring.push_span(kind, req_id, begin_ns, end_ns) {
+                self.count(Ctr::SpansDropped, 1);
+            }
+        }
+    }
+}
+
+/// Scrape-time aggregate of one shard.
+pub struct ShardSnapshot {
+    pub name: String,
+    /// Indexed by `Ctr as usize`.
+    pub counters: Vec<u64>,
+    /// Indexed by `Hst as usize`.
+    pub hists: Vec<HistSnapshot>,
+    /// Indexed by `Gge as usize`.
+    pub gauges: Vec<u64>,
+}
+
+/// Scrape-time aggregate of one histogram.
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from the log2 buckets: the upper edge of
+    /// the bucket holding the requested rank (within 2× of the true
+    /// value by construction).
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        1u64 << 63
+    }
+
+    fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; other.buckets.len()];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+}
+
+/// Whole-engine scrape: every shard's cells, plus cross-shard merges.
+pub struct MetricsSnapshot {
+    pub shards: Vec<ShardSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Sum of a counter across all shards.
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.shards.iter().map(|s| s.counters[c as usize]).sum()
+    }
+
+    /// Merged histogram across all shards.
+    pub fn hist(&self, h: Hst) -> HistSnapshot {
+        let mut out = HistSnapshot { buckets: vec![0; HIST_BUCKETS], ..Default::default() };
+        for s in &self.shards {
+            out.merge(&s.hists[h as usize]);
+        }
+        out
+    }
+
+    /// Max of a high-water gauge across all shards.
+    pub fn gauge(&self, g: Gge) -> u64 {
+        self.shards.iter().map(|s| s.gauges[g as usize]).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard() -> ObsShard {
+        ObsShard::on(Arc::new(Shard::new("t", 8)), 1)
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let s = shard();
+        s.count(Ctr::Ticks, u64::MAX - 1);
+        s.count(Ctr::Ticks, 5);
+        let snap = s.shard.as_ref().unwrap().snapshot();
+        assert_eq!(snap.counters[Ctr::Ticks as usize], u64::MAX, "saturates at u64::MAX");
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(HistCell::bucket_idx(0), 0);
+        assert_eq!(HistCell::bucket_idx(1), 0);
+        assert_eq!(HistCell::bucket_idx(2), 1, "2^1 opens bucket 1");
+        assert_eq!(HistCell::bucket_idx(3), 1);
+        assert_eq!(HistCell::bucket_idx(4), 2, "2^2 opens bucket 2");
+        assert_eq!(HistCell::bucket_idx((1 << 31) - 1), 30);
+        assert_eq!(HistCell::bucket_idx(1 << 31), 31);
+        assert_eq!(HistCell::bucket_idx(u64::MAX), 31, "overflow clamps to tail");
+
+        let s = shard();
+        s.rec_ns(Hst::RouteNs, 1);
+        s.rec_ns(Hst::RouteNs, 1023);
+        s.rec_ns(Hst::RouteNs, 1024);
+        let snap = s.shard.as_ref().unwrap().snapshot();
+        let h = &snap.hists[Hst::RouteNs as usize];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum_ns, 1 + 1023 + 1024);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[9], 1, "1023 in [512, 1024)");
+        assert_eq!(h.buckets[10], 1, "1024 in [1024, 2048)");
+    }
+
+    #[test]
+    fn gauge_is_monotonic_max() {
+        let s = shard();
+        s.gauge_max(Gge::KvPoolHighWaterBlocks, 10);
+        s.gauge_max(Gge::KvPoolHighWaterBlocks, 4);
+        s.gauge_max(Gge::KvPoolHighWaterBlocks, 12);
+        let snap = s.shard.as_ref().unwrap().snapshot();
+        assert_eq!(snap.gauges[Gge::KvPoolHighWaterBlocks as usize], 12);
+    }
+
+    #[test]
+    fn hist_snapshot_percentile_is_bucket_upper_edge() {
+        let s = shard();
+        for _ in 0..99 {
+            s.rec_ns(Hst::RouteNs, 100); // bucket [64,128)
+        }
+        s.rec_ns(Hst::RouteNs, 1 << 20);
+        let snap = MetricsSnapshot { shards: vec![s.shard.as_ref().unwrap().snapshot()] };
+        let h = snap.hist(Hst::RouteNs);
+        assert_eq!(h.percentile_ns(50.0), 128);
+        assert_eq!(h.percentile_ns(100.0), 1 << 21);
+        assert!((h.mean_ns() - (99.0 * 100.0 + (1 << 20) as f64) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metric_labels_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in Ctr::ALL {
+            assert!(seen.insert(c.label()), "dup label {}", c.label());
+        }
+        for h in Hst::ALL {
+            assert!(seen.insert(h.label()), "dup label {}", h.label());
+        }
+        for g in Gge::ALL {
+            assert!(seen.insert(g.label()), "dup label {}", g.label());
+        }
+    }
+}

@@ -61,6 +61,7 @@ use crate::kvcache::pool::BlockPool;
 use crate::kvcache::quant::decode_kv_like;
 use crate::kvcache::InvalidationReport;
 use crate::model::SeqKv;
+use crate::obs::{Ctr, Hst, ObsShard, SpanKind};
 use crate::sync::atomic::Ordering;
 use crate::sync::mpsc;
 
@@ -193,6 +194,9 @@ pub struct RecoverySupervisor {
     group_domains: Vec<usize>,
     n_prefill: usize,
     stats: RecoveryStats,
+    /// Telemetry shard (off by default; [`Self::with_obs`]). Written only
+    /// from `tick`, which is `&mut self` — one writer at a time.
+    obs: ObsShard,
 }
 
 impl RecoverySupervisor {
@@ -223,7 +227,16 @@ impl RecoverySupervisor {
             group_domains,
             n_prefill,
             stats: RecoveryStats::default(),
+            obs: ObsShard::off(),
         }
+    }
+
+    /// Attach a telemetry shard: migration attempt/land/fail counters,
+    /// measured-downtime histogram, and per-stream `Migration` spans
+    /// (request-id correlated, fault→landed on the runtime clock).
+    pub fn with_obs(mut self, obs: ObsShard) -> Self {
+        self.obs = obs;
+        self
     }
 
     pub fn stats(&self) -> &RecoveryStats {
@@ -492,6 +505,8 @@ impl RecoverySupervisor {
                 still_pending.push(pm);
                 continue;
             }
+            let req_id = pm.seq.req.id;
+            self.obs.count(Ctr::MigrationsAttempted, 1);
             let target = self.pick_target(&pm.seq, runtime);
             let landed = match target {
                 Some(gid) => {
@@ -553,6 +568,11 @@ impl RecoverySupervisor {
                 let latency = now_ns.saturating_sub(pm.fault_at_ns);
                 self.stats.streams_resumed += 1;
                 self.stats.migration_ns.push(latency);
+                self.obs.count(Ctr::MigrationsLanded, 1);
+                self.obs.rec_ns(Hst::RecoveryDowntimeNs, latency);
+                if self.obs.sampled(req_id) {
+                    self.obs.span(SpanKind::Migration, req_id, pm.fault_at_ns, now_ns);
+                }
                 if let Some(idx) = pm.action_idx {
                     let a = &mut self.stats.actions[idx];
                     // a group's downtime ends when its *last* stream lands
@@ -590,6 +610,7 @@ impl RecoverySupervisor {
         group_ids: &[usize],
     ) {
         self.stats.streams_failed += 1;
+        self.obs.count(Ctr::MigrationsFailed, 1);
         let mut req = pm.seq.req;
         let origin = pm.seq.from_group;
         for &gid in group_ids.iter().filter(|&&g| g != origin).chain([&origin]) {
@@ -605,6 +626,7 @@ impl RecoverySupervisor {
         let killed = &self.killed;
         let acks = &self.wiring.recompute_acks;
         let actions = &mut self.stats.actions;
+        let obs = &self.obs;
         self.pending_recomputes.retain(|pr| {
             let done = pr.slots.iter().all(|&slot| {
                 // a group killed after the flap never acks; skip it
@@ -619,6 +641,7 @@ impl RecoverySupervisor {
                 let a = &mut actions[pr.action_idx];
                 a.downtime_ns = now_ns.saturating_sub(pr.issued_ns);
                 a.measured = true;
+                obs.rec_ns(Hst::RecoveryDowntimeNs, a.downtime_ns);
             }
             !done
         });
@@ -654,6 +677,7 @@ impl RecoverySupervisor {
                     let a = &mut self.stats.actions[idx];
                     a.downtime_ns = now_ns.saturating_sub(pmf.issued_ns);
                     a.measured = true;
+                    self.obs.rec_ns(Hst::RecoveryDowntimeNs, a.downtime_ns);
                 }
                 Err(mpsc::TryRecvError::Empty) => still_pending.push(pmf),
                 // worker exited without replying (crashed first): the

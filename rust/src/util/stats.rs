@@ -62,6 +62,13 @@ impl Histogram {
         self.samples[rank.clamp(1, n) - 1]
     }
 
+    /// Number of recorded samples `<= limit` (exact count over the raw
+    /// samples — no sort, no percentile probing). SLA attainment is this
+    /// divided by `len()`.
+    pub fn count_le(&self, limit: f64) -> usize {
+        self.samples.iter().filter(|&&v| v <= limit).count()
+    }
+
     pub fn stddev(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {

@@ -1,0 +1,321 @@
+//! Flight-recorder integration (ISSUE 9): traced end-to-end runs on the
+//! SimModel backend (artifact-free, runs everywhere).
+//!
+//! Pinned properties:
+//! (a) a traced PD run's span-derived timings agree EXACTLY with the
+//!     `RequestTiming` the engine records — `Admission` at `arrival_ns`,
+//!     `Prefill` ending at `prefill_done_ns`, `FirstToken` at
+//!     `first_token_ns`, `Finish` at `done_ns` — because both sides stamp
+//!     the same u64s off the same plane clock;
+//! (b) a Transformerless run with a seeded mid-stream DieCrash still
+//!     yields a complete span tree for every submitted request (no orphan
+//!     begins/ends — complete "X" events by construction, and every
+//!     lifecycle stage present), with `Migration` spans for the resumed
+//!     streams;
+//! (c) the trace JSON parses, events are balanced (dur ≥ 0) and ordered
+//!     per track;
+//! (d) `ServingEngine::telemetry()` exposes the non-zero per-plane
+//!     counters the run implies, and a default (disabled) engine records
+//!     nothing at zero configuration cost.
+//!
+//! The registry's own unit suite (shard registration/teardown, saturating
+//! counters, histogram bucket edges, and the loom-style concurrent
+//! writer-vs-scraper interleavings under `--features model-check`) lives
+//! in `src/obs/{registry,mod}.rs` next to the implementation.
+
+use std::collections::{HashMap, HashSet};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use xdeepserve::config::{DeploymentMode, ObservabilityConfig, ReliabilityConfig};
+use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
+use xdeepserve::disagg::{ExpertWorkerSpec, MoeAttnRuntime, PrefillWorkerSpec};
+use xdeepserve::fabric::fault::{Fault, FaultKind};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::obs::{Ctr, Hst};
+use xdeepserve::reliability::RecoveryStage;
+use xdeepserve::sync::Arc;
+use xdeepserve::util::json::Json;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_gid| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn traced() -> ObservabilityConfig {
+    ObservabilityConfig { enabled: true, ..Default::default() }
+}
+
+/// One parsed span: plane-clock ns recovered from the trace's µs floats.
+/// `ts`/`dur` are ns/1000.0 — exact for any u64 below 2^53, so rounding
+/// the product back recovers the original stamps bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    begin_ns: u64,
+    end_ns: u64,
+    tid: u64,
+}
+
+/// Parse the Chrome-trace JSON into (req_id, span_kind) → spans, checking
+/// structural validity on the way: every event is a metadata "M" or a
+/// complete "X", durations are non-negative, and each track's events are
+/// ordered by begin time.
+fn spans_by_request(trace: &str) -> HashMap<(u64, String), Vec<Span>> {
+    let json = Json::parse(trace).expect("trace JSON must parse");
+    let events = json
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    let mut last_begin: HashMap<u64, f64> = HashMap::new();
+    let mut out: HashMap<(u64, String), Vec<Span>> = HashMap::new();
+    for ev in events {
+        match ev.get("ph").and_then(|p| p.as_str()) {
+            Some("M") => continue,
+            Some("X") => {}
+            ph => panic!("unexpected event phase {ph:?}"),
+        }
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("ts");
+        let dur = ev.get("dur").and_then(|d| d.as_f64()).expect("dur");
+        assert!(dur >= 0.0, "complete event with negative duration");
+        let tid = ev.get("tid").and_then(|t| t.as_u64()).expect("tid");
+        // per-track ordering: the exporter sorts each ring by begin time
+        let prev = last_begin.entry(tid).or_insert(f64::NEG_INFINITY);
+        assert!(ts >= *prev, "track {tid} events out of order");
+        *prev = ts;
+        let req = ev.path(&["args", "req"]).and_then(|r| r.as_u64()).expect("args.req");
+        let kind = ev.get("name").and_then(|n| n.as_str()).expect("name").to_string();
+        out.entry((req, kind)).or_default().push(Span {
+            begin_ns: (ts * 1000.0).round() as u64,
+            end_ns: ((ts + dur) * 1000.0).round() as u64,
+            tid,
+        });
+    }
+    out
+}
+
+fn one_span(spans: &HashMap<(u64, String), Vec<Span>>, req: u64, kind: &str) -> Span {
+    let v = spans
+        .get(&(req, kind.to_string()))
+        .unwrap_or_else(|| panic!("req {req}: missing {kind} span"));
+    assert_eq!(v.len(), 1, "req {req}: expected exactly one {kind} span, got {}", v.len());
+    v[0]
+}
+
+#[test]
+fn traced_pd_run_spans_agree_exactly_with_request_timing() {
+    const REQS: u64 = 8;
+    const MAX_NEW: usize = 6;
+    let mut engine = ServingEngine::builder(DeploymentMode::PdDisaggregated, sim_factory())
+        .groups((0..2).map(|i| GroupSpec::new(i, 8, 512)).collect())
+        .prefill_workers((0..2).map(PrefillWorkerSpec::new).collect())
+        .observability(traced())
+        .spawn()
+        .unwrap();
+    for i in 0..REQS {
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0))
+            .unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(20)).unwrap();
+
+    // live scrape before shutdown: routing + prefill + tick metrics are
+    // already non-zero while the planes are still up
+    let snap = engine.telemetry();
+    assert!(snap.counter(Ctr::RequestsDone) >= REQS);
+    assert!(snap.counter(Ctr::PrefillJobs) >= REQS);
+    assert!(snap.hist(Hst::RouteNs).count >= REQS);
+    assert!(snap.hist(Hst::PrefillComputeNs).count >= REQS);
+    assert!(snap.hist(Hst::TickModelNs).count > 0);
+    assert!(snap.counter(Ctr::KvEncodeBytes) > 0, "KV codec bytes recorded");
+
+    let obs = Arc::clone(engine.obs());
+    let groups = engine.shutdown().unwrap();
+    let spans = spans_by_request(&obs.trace_json());
+
+    let mut checked = 0u64;
+    for g in &groups {
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done);
+            let t = &r.timing;
+            // the exact-agreement contract: same u64s on both sides
+            let adm = one_span(&spans, r.id, "admission");
+            assert_eq!(adm.begin_ns, t.arrival_ns, "req {} admission", r.id);
+            let pf = one_span(&spans, r.id, "prefill");
+            assert_eq!(pf.end_ns, t.prefill_done_ns, "req {} prefill end", r.id);
+            let ft = one_span(&spans, r.id, "first_token");
+            assert_eq!(ft.begin_ns, t.first_token_ns, "req {} first token", r.id);
+            let fin = one_span(&spans, r.id, "finish");
+            assert_eq!(fin.begin_ns, t.done_ns, "req {} finish", r.id);
+            // lifecycle order, as spans alone would reconstruct it
+            let route = one_span(&spans, r.id, "route");
+            assert!(adm.begin_ns <= route.begin_ns);
+            assert!(route.end_ns >= route.begin_ns);
+            assert!(pf.end_ns <= ft.begin_ns, "req {} prefill before first token", r.id);
+            assert!(ft.begin_ns <= fin.begin_ns);
+            // disaggregation is visible in the track layout: prefill runs
+            // on a pd-prefill track, decode milestones on a dp-group track
+            assert_ne!(pf.tid, ft.tid, "req {} prefill track != decode track", r.id);
+            assert_eq!(ft.tid, fin.tid, "req {} decode milestones share a track", r.id);
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, REQS, "every submitted request finished and was checked");
+}
+
+#[test]
+fn traced_transformerless_diecrash_keeps_span_trees_complete() {
+    const N: usize = 4;
+    const ROUTED: u64 = 9;
+    const VICTIMS: u64 = 3;
+    const MAX_NEW: usize = 64;
+    let rt_cfg = MoeAttnRuntime {
+        layers: 2,
+        microbatches: 2,
+        time_scale: 8,
+        ..Default::default()
+    };
+    let rel = ReliabilityConfig { stage: RecoveryStage::FineGrained, ..Default::default() };
+    let mut engine = ServingEngine::builder(DeploymentMode::Transformerless, sim_factory())
+        .groups((0..N).map(|i| GroupSpec::new(i, 8, 512)).collect())
+        .dp_domains(2)
+        .prefill_workers((0..2).map(PrefillWorkerSpec::new).collect())
+        .expert_plane((0..2).map(ExpertWorkerSpec::new).collect(), rt_cfg)
+        .straggler(StragglerProfile::uniform(N, 250_000))
+        .reliability(rel)
+        .fault_schedule(vec![Fault {
+            kind: FaultKind::DieCrash,
+            die: 0,
+            at_ns: 8_000_000,
+            duration_ns: 0,
+        }])
+        .observability(traced())
+        .spawn()
+        .unwrap();
+    // victims are pinned to the crash group (direct `submit_to`, like an
+    // operator replay) so the 8 ms DieCrash provably lands on loaded
+    // streams; the rest go through the routed submit path and get the
+    // full Admission + Route front of their span tree
+    for v in 0..VICTIMS {
+        engine
+            .runtime()
+            .submit_to(0, ServeRequest::new(100 + v, vec![256, 1, 2, 3], 96, 0))
+            .unwrap();
+    }
+    for i in 0..ROUTED {
+        engine
+            .submit(ServeRequest::new(i, vec![256, 1, 2, 3], MAX_NEW, 0))
+            .unwrap();
+        engine.drain();
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        engine.health_sweep();
+        if engine.recovery_quiesced() && engine.all_idle() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "traced recovery run stalled");
+        thread::sleep(Duration::from_millis(1));
+    }
+    let resumed: Vec<u64> = engine
+        .recovery_stats()
+        .expect("fault schedule attaches a supervisor")
+        .resumed_ids
+        .clone();
+    assert!(!resumed.is_empty(), "the seeded crash must migrate >= 1 stream");
+
+    let obs = Arc::clone(engine.obs());
+    let snap = obs.snapshot();
+    assert!(snap.counter(Ctr::MigrationsLanded) >= resumed.len() as u64);
+    assert!(snap.hist(Hst::RecoveryDowntimeNs).count > 0, "downtime measured");
+    assert!(snap.counter(Ctr::ExchangeRounds) > 0, "decode exchanged per layer");
+    assert!(snap.hist(Hst::TurnstileWaitNs).count > 0, "turnstile waits recorded");
+
+    let groups = engine.shutdown().unwrap();
+    let spans = spans_by_request(&obs.trace_json());
+
+    let mut finished: HashSet<u64> = HashSet::new();
+    for g in &groups {
+        for r in &g.finished {
+            // a complete tree for every stream, crash or not: first token
+            // and finish always, plus the admission/route front for the
+            // routed ones — all exactly consistent with the timing record
+            // (resumed streams keep their original first-token stamp; the
+            // hub keeps the dead group's shard alive, so the span survives)
+            let t = &r.timing;
+            if r.id < ROUTED {
+                let adm = one_span(&spans, r.id, "admission");
+                assert_eq!(adm.begin_ns, t.arrival_ns, "req {} admission", r.id);
+                one_span(&spans, r.id, "route");
+            }
+            let ft = one_span(&spans, r.id, "first_token");
+            assert_eq!(ft.begin_ns, t.first_token_ns, "req {} first token", r.id);
+            let fin = one_span(&spans, r.id, "finish");
+            assert_eq!(fin.begin_ns, t.done_ns, "req {} finish", r.id);
+            assert!(finished.insert(r.id), "req {} finished twice", r.id);
+        }
+    }
+    assert_eq!(finished.len() as u64, ROUTED + VICTIMS, "every submitted request terminated");
+    // the migrated streams additionally carry a Migration span whose
+    // window sits inside their lifetime
+    for id in resumed {
+        let mig = one_span(&spans, id, "migration");
+        let fin = one_span(&spans, id, "finish");
+        assert!(mig.end_ns >= mig.begin_ns);
+        assert!(mig.end_ns <= fin.begin_ns, "req {id} migrated before finishing");
+    }
+}
+
+#[test]
+fn disabled_engine_keeps_recorder_silent() {
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups((0..2).map(|i| GroupSpec::new(i, 8, 512)).collect())
+        .spawn()
+        .unwrap();
+    for i in 0..4u64 {
+        engine.submit(ServeRequest::new(i, vec![256, 1, 2], 4, 0)).unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(20)).unwrap();
+    let snap = engine.telemetry();
+    // disabled hub: shards are no-op handles, nothing registers, nothing
+    // records — the scrape is empty rather than zero-filled
+    assert!(snap.shards.is_empty(), "disabled hub must not register shards");
+    let obs = Arc::clone(engine.obs());
+    engine.shutdown().unwrap();
+    let json = Json::parse(&obs.trace_json()).expect("empty trace still parses");
+    let events = json.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert!(events.is_empty(), "disabled recorder must emit no events");
+}
+
+#[test]
+fn sampling_traces_one_in_n_requests_but_counts_all() {
+    const REQS: u64 = 16;
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups((0..2).map(|i| GroupSpec::new(i, 8, 512)).collect())
+        .observability(ObservabilityConfig {
+            enabled: true,
+            trace_sample_every: 4,
+            ..Default::default()
+        })
+        .spawn()
+        .unwrap();
+    for i in 0..REQS {
+        engine.submit(ServeRequest::new(i, vec![256, 1, 2], 4, 0)).unwrap();
+        engine.drain();
+    }
+    engine.settle(Duration::from_secs(20)).unwrap();
+    let snap = engine.telemetry();
+    // metrics are never sampled
+    assert_eq!(snap.counter(Ctr::RequestsDone), REQS);
+    let obs = Arc::clone(engine.obs());
+    engine.shutdown().unwrap();
+    let spans = spans_by_request(&obs.trace_json());
+    let traced_ids: HashSet<u64> = spans.keys().map(|(id, _)| *id).collect();
+    assert_eq!(
+        traced_ids,
+        (0..REQS).filter(|id| id % 4 == 0).collect::<HashSet<u64>>(),
+        "exactly the 1-in-4 sampled requests appear in the trace"
+    );
+}
