@@ -126,7 +126,7 @@ fn main() -> anyhow::Result<()> {
             .logits_row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0 as i32;
         colo.push(feed);

@@ -90,6 +90,7 @@ fn main() {
                         healthy: true,
                     },
                     tick_ewma_ns: ewma_ns[g],
+                    tokens_per_iter_milli: 1000,
                     epoch: 0,
                 })
                 .collect();

@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     let specs: Vec<GroupSpec> = (0..2)
         .map(|i| {
             let mut s = GroupSpec::new(i, 4, 4096);
-            s.use_mtp = true;
+            s.mtp_layers = 1;
             s
         })
         .collect();

@@ -223,6 +223,108 @@ fn straggler_run(policy: DecodeLbPolicy, penalty: f64) -> (f64, f64, usize) {
     (tpot.percentile(99.0), tpot.mean(), victim_share)
 }
 
+struct MtpResult {
+    mtp_layers: usize,
+    /// Tokens that survived verification and landed in finished streams,
+    /// per second of wall clock — speculative *goodput*. For the
+    /// `mtp_layers = 0` arm this is the plain decode rate.
+    accepted_tokens_per_s: f64,
+    p99_tpot_ms: f64,
+    drafts: u64,
+    accepted: u64,
+    /// Obs-plane copies of the two counters (must match the per-group
+    /// shutdown totals above).
+    snap_drafts: u64,
+    snap_accepted: u64,
+    /// Max `tokens_per_iter_milli` any group's status board slot carried
+    /// after the run settled (1000 = one token per tick).
+    board_tok_iter_milli: u32,
+}
+
+impl MtpResult {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("mtp_layers", Json::Num(self.mtp_layers as f64)),
+            ("accepted_tokens_per_s", Json::Num(self.accepted_tokens_per_s)),
+            ("p99_tpot_ms", Json::Num(self.p99_tpot_ms)),
+            ("drafts", Json::Num(self.drafts as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            (
+                "board_tokens_per_iter_milli",
+                Json::Num(self.board_tok_iter_milli as f64),
+            ),
+        ])
+    }
+}
+
+/// §4.6 live at scale: the same placement-pinned workload on `n` group
+/// threads, speculative (`mtp_layers` > 0) or plain. `submit_to` keeps
+/// both arms identically placed so the comparison measures the decode
+/// loop, not routing reactions to the board's tokens-per-iteration.
+fn mtp_run(n: usize, mtp_layers: usize) -> MtpResult {
+    // Decode budget 63 = 31 full-accept 2-token chains + one clamped
+    // 1-token tail — long enough that the 1 ms injected tick cost
+    // dominates wall clock on both arms.
+    const MTP_MAX_NEW: usize = 64;
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(
+            (0..n)
+                .map(|i| {
+                    let mut s = GroupSpec::new(i, 8, 512);
+                    s.mtp_layers = mtp_layers;
+                    s
+                })
+                .collect(),
+        )
+        .straggler(StragglerProfile::uniform(n, TICK_NS))
+        .observability(ObservabilityConfig { enabled: true, ..Default::default() })
+        .spawn()
+        .unwrap();
+    let total = n * REQS_PER_GROUP;
+    let t0 = Instant::now();
+    for i in 0..total as u64 {
+        engine
+            .runtime()
+            .submit_to(
+                i as usize % n,
+                ServeRequest::new(i, vec![97, 98, 99], MTP_MAX_NEW, 0),
+            )
+            .unwrap();
+    }
+    engine.settle(Duration::from_secs(120)).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let board_tok_iter_milli = engine
+        .load_views()
+        .iter()
+        .map(|v| v.tokens_per_iter_milli)
+        .max()
+        .unwrap_or(0);
+    let snap = engine.telemetry();
+    let groups = engine.shutdown().unwrap();
+    let mut tpot = Histogram::new();
+    let (mut tokens, mut drafts, mut accepted) = (0usize, 0u64, 0u64);
+    for g in &groups {
+        drafts += g.mtp_drafts;
+        accepted += g.mtp_accepted;
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done, "MTP bench stream must finish Done");
+            tokens += r.generated.len();
+            tpot.record(r.timing.tpot_ms());
+        }
+    }
+    assert_eq!(tokens, total * MTP_MAX_NEW, "MTP bench workload must fully complete");
+    MtpResult {
+        mtp_layers,
+        accepted_tokens_per_s: tokens as f64 / wall_s,
+        p99_tpot_ms: tpot.percentile(99.0),
+        drafts,
+        accepted,
+        snap_drafts: snap.counter(Ctr::MtpDrafts),
+        snap_accepted: snap.counter(Ctr::MtpAccepted),
+        board_tok_iter_milli,
+    }
+}
+
 struct PdResult {
     handoff_p99_ms: f64,
     tpot_p99_ms: f64,
@@ -1015,6 +1117,55 @@ fn main() {
         share_mit < share_rr,
     );
 
+    // ---- §4.6 MTP speculative decoding, live in the decode tick ----
+    // Same 8-group placement-pinned workload, 1 ms injected tick cost.
+    // The SimModel draft head is exact, so the chained loop retires ~2
+    // tokens per tick: accepted-tokens/s (goodput) must beat plain decode
+    // at equal-or-better p99 TPOT. Spin-precise tick costs and a ~2x
+    // margin make this stable enough to gate even in --quick.
+    const MTP_GROUPS: usize = 8;
+    let mtp_base = mtp_run(MTP_GROUPS, 0);
+    let mtp_spec = mtp_run(MTP_GROUPS, 1);
+    for r in [&mtp_base, &mtp_spec] {
+        bench.row(&[
+            format!("MTP: {MTP_GROUPS} groups, mtp_layers={}", r.mtp_layers),
+            format!("{:.0} accepted tok/s", r.accepted_tokens_per_s),
+            format!(
+                "p99 TPOT {:.2} ms, {} drafts / {} accepted, board {} milli-tok/iter",
+                r.p99_tpot_ms, r.drafts, r.accepted, r.board_tok_iter_milli
+            ),
+            "§4.6 live speculative decode".into(),
+        ]);
+    }
+    bench.check(
+        "MTP: plain arm never drafts; spec arm drafts with acceptance 1.0 (exact head)",
+        mtp_base.drafts == 0 && mtp_spec.drafts > 0 && mtp_spec.accepted == mtp_spec.drafts,
+    );
+    bench.check(
+        "MTP: obs-plane mtp_drafts/mtp_accepted match the per-group shutdown totals",
+        mtp_spec.snap_drafts == mtp_spec.drafts
+            && mtp_spec.snap_accepted == mtp_spec.accepted,
+    );
+    bench.check(
+        "MTP: status board publishes a multi-token tokens-per-iteration EWMA (spec > 1000 \
+         milli-tokens, plain exactly 1000)",
+        mtp_spec.board_tok_iter_milli > 1000 && mtp_base.board_tok_iter_milli == 1000,
+    );
+    bench.check(
+        &format!(
+            "MTP: accepted-tokens/s strictly above the non-spec baseline ({:.0} vs {:.0})",
+            mtp_spec.accepted_tokens_per_s, mtp_base.accepted_tokens_per_s
+        ),
+        mtp_spec.accepted_tokens_per_s > mtp_base.accepted_tokens_per_s,
+    );
+    bench.check(
+        &format!(
+            "MTP: p99 TPOT equal-or-better than the non-spec baseline ({:.2} vs {:.2} ms)",
+            mtp_spec.p99_tpot_ms, mtp_base.p99_tpot_ms
+        ),
+        mtp_spec.p99_tpot_ms <= mtp_base.p99_tpot_ms,
+    );
+
     // ---- PD-disaggregated mode, submit_many bursts ----
     let mut pd_results = Vec::new();
     for (n, pw) in [(16usize, 2usize), (64, 4)] {
@@ -1356,6 +1507,14 @@ fn main() {
                 ("p99_tpot_ms_mitigated", Json::Num(p99_mit)),
                 ("victim_share_roundrobin", Json::Num(share_rr as f64)),
                 ("victim_share_mitigated", Json::Num(share_mit as f64)),
+            ]),
+        ),
+        (
+            "mtp",
+            obj(vec![
+                ("groups", Json::Num(MTP_GROUPS as f64)),
+                ("baseline", mtp_base.to_json()),
+                ("spec", mtp_spec.to_json()),
             ]),
         ),
         ("pd", Json::Arr(pd_results)),

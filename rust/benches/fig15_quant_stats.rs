@@ -17,7 +17,7 @@ fn series_stats(v: &[Json]) -> (f64, f64) {
     let vals: Vec<f64> = v.iter().filter_map(Json::as_f64).collect();
     let max = vals.iter().cloned().fold(0.0, f64::max);
     let mut s = vals.clone();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let med = s[s.len() / 2];
     (max, med)
 }

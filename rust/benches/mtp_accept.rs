@@ -66,6 +66,53 @@ fn main() {
         tps[3] > tps[2],
     );
 
+    // ---- live cross-check: decode-loop counters vs the §4.6 model -----
+    // A DpGroup on the deterministic SimModel (exact draft head →
+    // acceptance 1.0): the counters the group publishes to telemetry must
+    // reproduce expected_tokens_per_step at the measured acceptance.
+    {
+        use xdeepserve::coordinator::{DpGroup, RequestState, ServeRequest};
+        use xdeepserve::model::SimModel;
+
+        let sim = SimModel::small();
+        let mut g = DpGroup::new(0, 4, 256);
+        g.mtp_layers = 1;
+        // max_new 25: prefill emits token 1, decode's remaining budget of
+        // 24 is an exact multiple of the 2-tokens/iteration full-accept
+        // chain — every sequence-iteration drafts, none is budget-clamped.
+        for id in 0..3u64 {
+            g.enqueue(ServeRequest::new(id, vec![97 + id as i32, 98, 99], 25, 0));
+        }
+        assert_eq!(g.admit_from_queue(&sim, 1).expect("admission"), 3);
+        let mut iters = 0u64;
+        while g.finished.len() < 3 {
+            g.decode_iteration(&sim, 1_000 + iters).expect("sim decode");
+            iters += 1;
+            assert!(iters < 256, "live MTP loop failed to drain");
+        }
+        assert!(g.finished.iter().all(|r| r.state == RequestState::Done));
+        let acc = g.mtp_acceptance();
+        // Decode-produced tokens only (generated[0] comes from prefill);
+        // per *sequence*-iteration, which mtp_drafts counts exactly when
+        // every iteration drafts once (draft_k=1, no clamped tail).
+        let produced: usize = g.finished.iter().map(|r| r.generated.len() - 1).sum();
+        let live_tps = produced as f64 / g.mtp_drafts as f64;
+        let model_tps = expected_tokens_per_step(&[acc]);
+        println!(
+            "\n  live cross-check (SimModel DpGroup): acceptance {:.0}%, {live_tps:.2} \
+             tokens/seq-iteration vs model {model_tps:.2}",
+            acc * 100.0
+        );
+        bench.check(
+            "live decode counters reproduce expected_tokens_per_step at measured acceptance",
+            (live_tps - model_tps).abs() < 1e-9,
+        );
+        bench.check(
+            "exact draft head verifies every draft (acceptance 1.0)",
+            (acc - 1.0).abs() < 1e-9 && g.mtp_drafts == g.mtp_accepted && g.mtp_drafts > 0,
+        );
+    }
+
     // ---- real-execution acceptance on MiniDeepSeek --------------------
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(dir).join("manifest.json").exists() {
@@ -82,22 +129,26 @@ fn main() {
             let pf = model.prefill(&prompt).expect("prefill");
             let first = pf.logits.argmax_rows().unwrap()[0] as i32;
             let mut kv = pf.kv;
-            let mut seqs = vec![xdeepserve::mtp::SpecSeq {
-                kv: &mut kv,
-                feed: first,
-                hidden: pf.hidden.clone(),
-            }];
+            let mut feed = first;
+            let mut hidden = pf.hidden.clone();
             for _ in 0..10 {
+                let mut seqs = vec![xdeepserve::mtp::SpecSeq {
+                    kv: &mut kv,
+                    feed,
+                    hidden: &hidden,
+                    draft_k: 1,
+                    max_tokens: usize::MAX,
+                }];
                 let out = xdeepserve::mtp::spec_iteration(&model, &mut seqs, false)
                     .expect("spec iteration");
-                drafts += 1;
+                let o = out.into_iter().next().expect("one sequence");
+                assert!(!o.failed, "mini-model logits must stay NaN-free");
+                drafts += o.drafts as u64;
+                accepted += o.accepted as u64;
                 iters += 1;
-                produced += out[0].tokens.len() as u64;
-                if out[0].draft_accepted {
-                    accepted += 1;
-                }
-                seqs[0].feed = out[0].next_feed;
-                seqs[0].hidden = out[0].hidden.clone();
+                produced += o.tokens.len() as u64;
+                feed = o.next_feed;
+                hidden = o.hidden;
             }
         }
         let acc = accepted as f64 / drafts as f64;

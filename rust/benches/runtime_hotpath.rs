@@ -37,6 +37,7 @@ fn published_board(n: usize) -> StatusBoard {
         kv_total_blocks: 4096,
         kv_usage: (id % 97) as f64 / 97.0,
         healthy: true,
+        tokens_per_iter_milli: 1000,
     };
     let board = StatusBoard::new(
         (0..n).map(|i| BoardEntry::initial(status(i))).collect(),
@@ -244,6 +245,57 @@ fn main() {
         "tick-phase recording <= 2.5 us (5% of a 50 us floor tick)",
         h_tick.mean() <= 2_500.0,
     );
+
+    // ---- MTP decode tick: speculative per-token cost vs plain ----
+    // Same 8-seq workload drained to completion with and without the §4.6
+    // chain. On the SimModel floor the model forward is nearly free, so
+    // this isolates the chain's own bookkeeping (draft rows, acceptance
+    // scan, SpecCtl, multi-token emission). A 2-token iteration runs two
+    // forwards plus a draft, so per *token* the speculative tick is
+    // allowed up to 3x the plain floor — but no more: the O(n^2)
+    // accepted-index scan this bound was added against sat well above it.
+    {
+        use xdeepserve::coordinator::DpGroup;
+        use xdeepserve::model::SimModel;
+        let sim = SimModel::small();
+        let per_tok = |mtp_layers: usize| {
+            let mut produced = 0usize;
+            let h = time_ns(10, 200, || {
+                let mut g = DpGroup::new(0, 8, 4096);
+                g.mtp_layers = mtp_layers;
+                for id in 0..8u64 {
+                    g.enqueue(ServeRequest::new(id, vec![97 + id as i32, 98], 65, 0));
+                }
+                g.admit_from_queue(&sim, 1).unwrap();
+                let mut now = 1u64;
+                while !g.is_idle() {
+                    now += 1;
+                    g.decode_iteration(&sim, now).unwrap();
+                }
+                produced = g.finished.iter().map(|r| r.generated.len()).sum();
+            });
+            assert_eq!(produced, 8 * 65, "hotpath MTP workload must fully complete");
+            h.mean() / produced as f64
+        };
+        let plain_tok_ns = per_tok(0);
+        let spec_tok_ns = per_tok(1);
+        bench.row(&[
+            "decode tick per token, plain (batch 8)".into(),
+            format!("{plain_tok_ns:.0} ns"),
+            format!("{:.0}", 1e9 / plain_tok_ns),
+            "SimModel floor".into(),
+        ]);
+        bench.row(&[
+            "decode tick per token, MTP chain (k=1)".into(),
+            format!("{spec_tok_ns:.0} ns"),
+            format!("{:.0}", 1e9 / spec_tok_ns),
+            "<= 3x plain floor".into(),
+        ]);
+        bench.check(
+            "MTP chain bookkeeping keeps per-token tick cost within 3x the plain floor",
+            spec_tok_ns <= plain_tok_ns.max(200.0) * 3.0,
+        );
+    }
 
     // ---- seqlock board read with telemetry on + live scraper ----
     // The board read must stay O(1)/lock-free while a scraper thread

@@ -13,7 +13,7 @@
 //! |---|---|
 //! | `raw-sync` | `std::sync::` used outside `src/sync/` (and vendor/): all code imports through the `crate::sync` shim, or model-check/lockdep instrumentation silently misses it |
 //! | `seqcst` | `Ordering::SeqCst` in non-test code outside the allowlist: every ordering is either justified in place or downgraded (see the memory-ordering contract in CONCURRENCY.md) |
-//! | `unwrap` | `.unwrap()`/`.expect(` in non-test code under `src/coordinator`, `src/disagg`, `src/eplb`: panics in the serving planes either become typed errors or document the invariant that rules them out |
+//! | `unwrap` | `.unwrap()`/`.expect(` in non-test code under `src/coordinator`, `src/disagg`, `src/eplb`, `src/mtp`: panics in the serving planes either become typed errors or document the invariant that rules them out |
 //! | `hot-lock` | `.lock(` in any function reachable from an `// xds:hot`-marked dispatch hot-path function |
 //!
 //! Escapes, all requiring a reason after the colon:
@@ -69,6 +69,7 @@ impl Default for LintCfg {
                 "src/coordinator".into(),
                 "src/disagg".into(),
                 "src/eplb".into(),
+                "src/mtp".into(),
             ],
             hot_stop: Vec::new(),
         }
@@ -761,6 +762,25 @@ mod tests {
         assert!(lint_one("src/disagg/x.rs", inline).is_empty());
         let expect = "fn f() { y.expect(\"set at init\"); }\n";
         assert_eq!(lint_one("src/disagg/x.rs", expect).len(), 1);
+    }
+
+    #[test]
+    fn unwrap_covers_the_mtp_plane() {
+        // src/mtp holds the speculative-decode hot path: a bare unwrap
+        // there (e.g. argmax over NaN-capable logits) is exactly the bug
+        // class this rule exists for.
+        let bare = "fn f() { row.iter().max_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+        assert_eq!(lint_one("src/mtp/mod.rs", bare).len(), 1);
+        let inv = "fn f() {\n    // invariant: total_cmp ranks NaN, never panics\n    x.unwrap();\n}\n";
+        assert!(lint_one("src/mtp/mod.rs", inv).is_empty());
+        // the policy file replaces rather than extends: parsing the real
+        // repo toml string must still cover src/mtp
+        let doc = toml_lite::parse(
+            "[unwrap]\ndirs = \"src/coordinator, src/disagg, src/eplb, src/mtp\"\n",
+        )
+        .unwrap();
+        let cfg = LintCfg::from_toml(&doc);
+        assert!(cfg.unwrap_dirs.iter().any(|d| d == "src/mtp"));
     }
 
     #[test]

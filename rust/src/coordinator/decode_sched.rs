@@ -93,8 +93,24 @@ pub struct GroupLoadView {
     pub status: GroupStatus,
     /// Tick-latency EWMA published by the group's worker thread (ns).
     pub tick_ewma_ns: u64,
+    /// Tokens emitted per decode iteration, EWMA, in milli-tokens (1000 =
+    /// one token/tick; an MTP group at full acceptance publishes ~2000+).
+    pub tokens_per_iter_milli: u32,
     /// Status-board publish epoch this view was read at.
     pub epoch: u64,
+}
+
+impl GroupLoadView {
+    /// Tick EWMA normalized to *per emitted token* — the quantity straggler
+    /// scoring actually cares about. A speculative-decode group emitting 2
+    /// tokens/iteration at 2× the tick latency is serving tokens exactly as
+    /// fast as a plain group, and must not be penalized as a straggler.
+    /// The divisor clamps at 1 token/iteration so a group draining
+    /// retirements (rate < 1) is never *inflated* — the raw tick EWMA is
+    /// the upper bound.
+    pub fn per_token_ewma_ns(&self) -> u64 {
+        self.tick_ewma_ns.saturating_mul(1000) / (self.tokens_per_iter_milli.max(1000) as u64)
+    }
 }
 
 /// Hard-demotion ratio: a group whose tick EWMA exceeds this multiple of
@@ -105,7 +121,7 @@ pub const STRAGGLER_DEMOTE_RATIO: f64 = 3.0;
 fn median_ewma_ns(views: &[&GroupLoadView]) -> u64 {
     let mut v: Vec<u64> = views
         .iter()
-        .map(|g| g.tick_ewma_ns)
+        .map(|g| g.per_token_ewma_ns())
         .filter(|&x| x > 0)
         .collect();
     if v.is_empty() {
@@ -115,26 +131,28 @@ fn median_ewma_ns(views: &[&GroupLoadView]) -> u64 {
     v[v.len() / 2]
 }
 
-/// Median tick EWMA over the *routable* (slot-free healthy) views — the
-/// same eligible set [`choose_group_straggler_aware`] computes its median
-/// over, so the shell's cached demotion threshold can never diverge from
-/// the full scan's (e.g. an unhealthy straggler's stale 40 ms EWMA must
-/// not drag the median up and mask a live straggler). 0 when no eligible
-/// group has a sample yet. The shell caches this from its periodic full
-/// scans so the O(d) sampled path can hard-demote without touching every
-/// slot.
+/// Median *per-token* tick EWMA ([`GroupLoadView::per_token_ewma_ns`])
+/// over the *routable* (slot-free healthy) views — the same eligible set
+/// [`choose_group_straggler_aware`] computes its median over, so the
+/// shell's cached demotion threshold can never diverge from the full
+/// scan's (e.g. an unhealthy straggler's stale 40 ms EWMA must not drag
+/// the median up and mask a live straggler). 0 when no eligible group has
+/// a sample yet. The shell caches this from its periodic full scans so
+/// the O(d) sampled path can hard-demote without touching every slot.
 pub fn median_tick_ewma_ns(views: &[GroupLoadView]) -> u64 {
     let refs: Vec<&GroupLoadView> = views.iter().filter(|v| v.status.has_slot()).collect();
     median_ewma_ns(&refs)
 }
 
 /// §4.4 routing score: KV usage plus the soft straggler penalty relative
-/// to the (possibly cached) median tick EWMA. Shared by the full scan and
-/// the O(d) sampled path so the two can never rank groups differently.
+/// to the (possibly cached) median *per-token* tick EWMA — both sides of
+/// the ratio are token-normalized, so an MTP group is judged on token
+/// throughput, not raw tick width. Shared by the full scan and the O(d)
+/// sampled path so the two can never rank groups differently.
 pub fn straggler_score(v: &GroupLoadView, median_ns: u64, penalty: f64) -> f64 {
     let mut s = v.status.kv_usage;
     if median_ns > 0 && penalty > 0.0 {
-        let ratio = v.tick_ewma_ns as f64 / median_ns as f64;
+        let ratio = v.per_token_ewma_ns() as f64 / median_ns as f64;
         s += penalty * (ratio - 1.0).max(0.0);
     }
     s
@@ -178,7 +196,7 @@ pub fn choose_group_straggler_aware(
         let fast: Vec<&GroupLoadView> = eligible
             .iter()
             .copied()
-            .filter(|v| (v.tick_ewma_ns as f64) <= STRAGGLER_DEMOTE_RATIO * med as f64)
+            .filter(|v| (v.per_token_ewma_ns() as f64) <= STRAGGLER_DEMOTE_RATIO * med as f64)
             .collect();
         if fast.is_empty() {
             eligible
@@ -358,7 +376,12 @@ mod tests {
     }
 
     fn view(group: usize, kv: f64, ewma_ns: u64) -> GroupLoadView {
-        GroupLoadView { status: g(group, 2, 8, kv), tick_ewma_ns: ewma_ns, epoch: 0 }
+        GroupLoadView {
+            status: g(group, 2, 8, kv),
+            tick_ewma_ns: ewma_ns,
+            tokens_per_iter_milli: 1000,
+            epoch: 0,
+        }
     }
 
     #[test]
@@ -377,6 +400,28 @@ mod tests {
             Some(1),
             "penalty on shifts off the straggler"
         );
+    }
+
+    #[test]
+    fn mtp_group_at_double_tick_is_not_a_straggler() {
+        // An MTP group emitting 2 tokens/iteration at 2x the tick latency
+        // serves tokens exactly as fast as a plain group: per-token
+        // normalization must make the scorer treat them identically.
+        let mut spec = view(0, 0.10, 2_000_000);
+        spec.tokens_per_iter_milli = 2000;
+        let plain = view(1, 0.20, 1_000_000);
+        assert_eq!(spec.per_token_ewma_ns(), plain.per_token_ewma_ns());
+        let views = vec![spec, plain, view(2, 0.30, 1_000_000)];
+        let mut rr = 0;
+        assert_eq!(
+            choose_group_straggler_aware(&views, DecodeLbPolicy::LeastKv, &mut rr, 0.5),
+            Some(0),
+            "token-normalized: lowest KV wins, no straggler penalty"
+        );
+        // a sub-1 rate never inflates the estimate past the raw tick EWMA
+        let mut draining = view(3, 0.0, 1_000_000);
+        draining.tokens_per_iter_milli = 250;
+        assert_eq!(draining.per_token_ewma_ns(), 1_000_000);
     }
 
     #[test]
@@ -414,6 +459,7 @@ mod tests {
                 .map(|(i, &r)| GroupLoadView {
                     status: g(i, r, 8, 0.0),
                     tick_ewma_ns: 0,
+                    tokens_per_iter_milli: 1000,
                     epoch: 0,
                 })
                 .collect()

@@ -168,6 +168,7 @@ impl Dispatcher for SyncGroups<'_> {
             .map(|g| GroupLoadView {
                 status: g.as_group_status(),
                 tick_ewma_ns: 0,
+                tokens_per_iter_milli: (g.tok_iter_ewma * 1000.0).round() as u32,
                 epoch,
             })
             .collect()

@@ -1,5 +1,20 @@
 //! A self-contained DP group (§4.2): queue → prefill → continuous-batched
 //! decode → output shortcut, with its own KV pool and no cross-DP calls.
+//!
+//! **Multi-token budget/KV contract (MTP, §4.6).** With `mtp_layers > 0`
+//! one decode iteration may produce up to `draft_k + 1` tokens per
+//! sequence (chained speculative decode, [`crate::mtp::spec_iteration`]).
+//! Every token is still accounted one at a time: emission and
+//! `BlockPool::append_token` are clamped to the remaining
+//! `max_new_tokens` budget (the admission-time reservation) and to
+//! `model.max_seq()` headroom, the pool append happens *before* the token
+//! is emitted (a refusal truncates the stream instead of leaking an
+//! unaccounted token — the error is surfaced, the request failed), and
+//! the done/`kv_full` retirement checks see the full multi-token
+//! increment. Per-stream draft length adapts from an acceptance EWMA
+//! ([`crate::mtp::SpecCtl`]); tokens-per-iteration is published on the
+//! status board so routing scores a 2-tokens/tick group as cheaper per
+//! token, not as twice the load.
 
 use std::collections::VecDeque;
 use crate::sync::mpsc;
@@ -12,7 +27,7 @@ use crate::coordinator::request::{RequestState, ServeRequest};
 use crate::kvcache::{BlockPool, InvalidationReport};
 use crate::model::{DecodeModel, SeqKv};
 use crate::mtp;
-use crate::obs::{Ctr, ObsShard, SpanKind};
+use crate::obs::{Ctr, Hst, ObsShard, SpanKind};
 
 /// A sequence resident in the decode batch.
 pub struct SeqState {
@@ -21,6 +36,11 @@ pub struct SeqState {
     /// Next token to feed (last sampled).
     pub feed: i32,
     pub hidden: Vec<f32>,
+    /// Adaptive speculative-decode state (acceptance EWMA → draft length).
+    /// Reset on §6.2 migration: the resumed group re-learns from its own
+    /// observations, while `feed`/`hidden` carry so the stream stays
+    /// bit-exact.
+    pub spec: mtp::SpecCtl,
 }
 
 /// A sequence whose prefill ran elsewhere (§5.1): the prompt KV, the first
@@ -63,6 +83,11 @@ pub struct DpGroupStatus {
     pub kv_total_blocks: usize,
     pub kv_usage: f64,
     pub healthy: bool,
+    /// EWMA tokens produced per decode iteration, in thousandths
+    /// (1000 = one token/tick, the non-speculative rate). Lets the
+    /// TE-shell normalize a group's tick EWMA to per-*token* cost instead
+    /// of misreading a 2-tokens/tick MTP group as twice the load.
+    pub tokens_per_iter_milli: u32,
 }
 
 pub struct DpGroup {
@@ -77,12 +102,18 @@ pub struct DpGroup {
     pub finished: Vec<ServeRequest>,
     pub out_tx: Option<mpsc::Sender<OutputEvent>>,
     pub int8: bool,
-    pub use_mtp: bool,
+    /// Speculative decode chain ceiling (`serving.mtp_layers`); 0 disables
+    /// MTP. Per-stream adaptive draft length never exceeds this.
+    pub mtp_layers: usize,
     pub healthy: bool,
-    /// MTP acceptance bookkeeping.
+    /// MTP acceptance bookkeeping (drafts issued / drafts verified).
     pub mtp_drafts: u64,
     pub mtp_accepted: u64,
     pub iterations: u64,
+    /// EWMA of tokens produced per decode iteration (≥ 1.0 while work
+    /// completes; > 1.0 when speculation lands). Published on the status
+    /// board as [`DpGroupStatus::tokens_per_iter_milli`].
+    pub tok_iter_ewma: f64,
     /// Live MoeAttn A2E/E2A exchange accounting (§5.2); all-zero outside
     /// `DeploymentMode::MoeAttn`. Includes the cross-layer-carry counters
     /// (`carries`/`carried_ns` — combine round trips hidden behind the
@@ -108,11 +139,12 @@ impl DpGroup {
             finished: Vec::new(),
             out_tx: None,
             int8: false,
-            use_mtp: false,
+            mtp_layers: 0,
             healthy: true,
             mtp_drafts: 0,
             mtp_accepted: 0,
             iterations: 0,
+            tok_iter_ewma: 1.0,
             exchange: Default::default(),
             obs: ObsShard::off(),
         }
@@ -129,6 +161,7 @@ impl DpGroup {
             kv_total_blocks: self.pool.usage().total_blocks,
             kv_usage: self.pool.usage().fraction(),
             healthy: self.healthy,
+            tokens_per_iter_milli: (self.tok_iter_ewma * 1000.0).round() as u32,
         }
     }
 
@@ -176,8 +209,12 @@ impl DpGroup {
         if resumed {
             // Resume mid-stream: the consumer already saw every generated
             // token (timing + tokens_out survived the migration), so emit
-            // nothing — decode continues from the carried feed token.
-            self.running.push(SeqState { req, kv, feed: first_token, hidden });
+            // nothing — decode continues from the carried feed token. The
+            // carried feed/hidden pair is exactly the speculative state the
+            // chain needs, so the resumed stream stays bit-exact; only the
+            // adaptive controller restarts fresh.
+            let spec = mtp::SpecCtl::new(self.mtp_layers.max(1));
+            self.running.push(SeqState { req, kv, feed: first_token, hidden, spec });
             return Ok(());
         }
         req.generated.push(first_token);
@@ -194,7 +231,8 @@ impl DpGroup {
             self.obs.span(SpanKind::FirstToken, req.id, now_ns, now_ns);
         }
         self.emit(OutputEvent::Token { req_id: req.id, token: first_token });
-        self.running.push(SeqState { req, kv, feed: first_token, hidden });
+        let spec = mtp::SpecCtl::new(self.mtp_layers.max(1));
+        self.running.push(SeqState { req, kv, feed: first_token, hidden, spec });
         Ok(())
     }
 
@@ -308,7 +346,13 @@ impl DpGroup {
                 self.obs.span(SpanKind::FirstToken, req.id, now_ns, now_ns);
             }
             self.emit(OutputEvent::Token { req_id: req.id, token: first });
-            self.running.push(SeqState { req, kv: pf.kv, feed: first, hidden: pf.hidden });
+            self.running.push(SeqState {
+                req,
+                kv: pf.kv,
+                feed: first,
+                hidden: pf.hidden,
+                spec: mtp::SpecCtl::new(self.mtp_layers.max(1)),
+            });
             admitted += 1;
         }
         Ok(admitted)
@@ -317,6 +361,17 @@ impl DpGroup {
     /// One decode iteration over the whole running set (continuous
     /// batching; chunks of the largest compiled bucket). Returns tokens
     /// generated. `now_ns` stamps finish times.
+    ///
+    /// With `mtp_layers > 0` each sequence runs a chained draft-k
+    /// speculative iteration (§4.6) and may gain up to `draft_k + 1`
+    /// tokens, but the accounting stays per-token: emission and pool
+    /// appends are clamped to the remaining `max_new_tokens` budget and
+    /// `model.max_seq()` headroom inside [`mtp::spec_iteration`], the
+    /// `BlockPool` append runs *before* each token is emitted (a refusal
+    /// truncates the stream, surfaces the error, and fails the request —
+    /// never a silently unaccounted token), and the done/`kv_full` checks
+    /// below see the full multi-token increment. NaN logits fail the one
+    /// offending request; the batch and the group stay live.
     pub fn decode_iteration<M: DecodeModel + ?Sized>(
         &mut self,
         model: &M,
@@ -326,28 +381,53 @@ impl DpGroup {
             return Ok(0);
         }
         self.iterations += 1;
+        let batch = self.running.len();
         let max_bucket = model.max_decode_bucket().max(1);
+        let k_max = self.mtp_layers;
         let mut produced = 0usize;
+        // Requests whose logits came back NaN/empty this iteration — failed
+        // individually in the drain loop (the forward itself succeeded, so
+        // the group is healthy).
+        let mut nan_failed: Vec<u64> = Vec::new();
 
         let mut chunk_start = 0usize;
         while chunk_start < self.running.len() {
             let chunk_end = (chunk_start + max_bucket).min(self.running.len());
             let chunk = &mut self.running[chunk_start..chunk_end];
-            if self.use_mtp {
-                let mut specs: Vec<mtp::SpecSeq> = chunk
-                    .iter_mut()
-                    .map(|s| mtp::SpecSeq {
-                        feed: s.feed,
-                        hidden: s.hidden.clone(),
+            if k_max > 0 {
+                // Budget-exhausted sequences (possible when admission's
+                // first token already filled `max_new_tokens`) skip the
+                // forward and retire in the drain loop.
+                let mut idx: Vec<usize> = Vec::with_capacity(chunk.len());
+                let mut specs: Vec<mtp::SpecSeq> = Vec::with_capacity(chunk.len());
+                for (j, s) in chunk.iter_mut().enumerate() {
+                    let budget =
+                        s.req.max_new_tokens.saturating_sub(s.req.generated.len());
+                    if budget == 0 {
+                        continue;
+                    }
+                    idx.push(j);
+                    specs.push(mtp::SpecSeq {
                         kv: &mut s.kv,
-                    })
-                    .collect();
+                        feed: s.feed,
+                        hidden: s.hidden.as_slice(),
+                        draft_k: s.spec.draft_k.min(k_max).max(1),
+                        max_tokens: budget,
+                    });
+                }
                 let outs = mtp::spec_iteration(model, &mut specs, self.int8)?;
                 drop(specs);
-                for (s, o) in chunk.iter_mut().zip(outs) {
-                    self.mtp_drafts += 1;
-                    if o.draft_accepted {
-                        self.mtp_accepted += 1;
+                for (o, &j) in outs.into_iter().zip(&idx) {
+                    let s = &mut chunk[j];
+                    s.spec.observe(o.drafts, o.accepted, k_max);
+                    self.mtp_drafts += o.drafts as u64;
+                    self.mtp_accepted += o.accepted as u64;
+                    self.obs.count(Ctr::MtpDrafts, o.drafts as u64);
+                    self.obs.count(Ctr::MtpAccepted, o.accepted as u64);
+                    // chain depth is a count, not ns (log2 buckets still apply)
+                    self.obs.rec_ns(Hst::MtpDraftDepth, o.drafts as u64);
+                    if o.failed {
+                        nan_failed.push(s.req.id);
                     }
                     for t in &o.tokens {
                         s.req.generated.push(*t);
@@ -357,18 +437,28 @@ impl DpGroup {
                     s.hidden = o.hidden;
                 }
             } else {
-                let mut entries: Vec<(i32, &mut SeqKv)> =
-                    chunk.iter_mut().map(|s| (s.feed, &mut s.kv)).collect();
-                let outs = model.decode_batch(&mut entries, self.int8)?;
+                let mut idx: Vec<usize> = Vec::with_capacity(chunk.len());
+                let mut entries: Vec<(i32, &mut SeqKv)> = Vec::with_capacity(chunk.len());
+                for (j, s) in chunk.iter_mut().enumerate() {
+                    if s.req.generated.len() >= s.req.max_new_tokens {
+                        continue; // budget already exhausted: retire below
+                    }
+                    idx.push(j);
+                    entries.push((s.feed, &mut s.kv));
+                }
+                let outs = if entries.is_empty() {
+                    Vec::new()
+                } else {
+                    model.decode_batch(&mut entries, self.int8)?
+                };
                 drop(entries);
-                for (s, o) in chunk.iter_mut().zip(outs) {
-                    let t = o
-                        .logits_row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i as i32)
-                        .unwrap_or(0);
+                for (o, &j) in outs.into_iter().zip(&idx) {
+                    let s = &mut chunk[j];
+                    let Some(t) = mtp::argmax_checked(&o.logits_row) else {
+                        nan_failed.push(s.req.id);
+                        continue;
+                    };
+                    let t = t as i32;
                     s.req.generated.push(t);
                     s.feed = t;
                     s.hidden = o.hidden_row;
@@ -378,16 +468,47 @@ impl DpGroup {
             chunk_start = chunk_end;
         }
 
-        // token accounting + emission + retirement
+        // Token accounting + emission + retirement. The pool append runs
+        // *before* the emit: a refused append (past the admitted
+        // reservation) truncates the stream to what the pool actually
+        // holds and fails the request with the error surfaced.
         let drained: Vec<SeqState> = self.running.drain(..).collect();
         let mut still_running = Vec::with_capacity(drained.len());
         for mut s in drained {
-            let new_tokens = s.req.generated.len().saturating_sub(
-                s.req.timing.tokens_out as usize,
-            );
-            for t in s.req.generated[s.req.generated.len() - new_tokens..].to_vec() {
+            let start = s.req.timing.tokens_out as usize;
+            if nan_failed.contains(&s.req.id) {
+                // Drop any tokens the chain produced before the NaN round:
+                // the consumer sees a clean Failed stream, not a torn one.
+                produced -= s.req.generated.len().saturating_sub(start);
+                s.req.generated.truncate(start);
+                let _ = self.pool.release(s.req.id);
+                self.fail_request(s.req, now_ns);
+                continue;
+            }
+            let new_tokens = s.req.generated.len().saturating_sub(start);
+            let mut landed = 0usize;
+            let mut pool_err = None;
+            for k in 0..new_tokens {
+                if let Err(e) = self.pool.append_token(s.req.id) {
+                    pool_err = Some(e);
+                    break;
+                }
+                let t = s.req.generated[start + k];
                 self.emit(OutputEvent::Token { req_id: s.req.id, token: t });
-                let _ = self.pool.append_token(s.req.id);
+                landed += 1;
+            }
+            if let Some(e) = pool_err {
+                eprintln!(
+                    "[dp-group {}] req {}: KV append past admitted reservation \
+                     ({landed}/{new_tokens} landed): {e}",
+                    self.id, s.req.id
+                );
+                produced -= new_tokens - landed;
+                s.req.generated.truncate(start + landed);
+                s.req.timing.tokens_out = s.req.generated.len() as u64;
+                let _ = self.pool.release(s.req.id);
+                self.fail_request(s.req, now_ns);
+                continue;
             }
             s.req.timing.tokens_out = s.req.generated.len() as u64;
             let out_done = s.req.generated.len() >= s.req.max_new_tokens;
@@ -408,6 +529,8 @@ impl DpGroup {
         }
         self.running = still_running;
         self.obs.count(Ctr::TokensOut, produced as u64);
+        let rate = produced as f64 / batch as f64;
+        self.tok_iter_ewma = 0.25 * rate + 0.75 * self.tok_iter_ewma;
         Ok(produced)
     }
 
@@ -629,5 +752,180 @@ mod tests {
         assert_eq!(g.running.len(), 2);
         assert_eq!(g.finished.len(), 1);
         assert_eq!(g.finished[0].state, RequestState::Failed);
+    }
+
+    use crate::model::SimModel;
+
+    /// Run a group to completion; panics if it stalls.
+    fn run_to_done(g: &mut DpGroup, m: &impl DecodeModel) {
+        let mut iters = 0;
+        while !g.running.is_empty() {
+            g.decode_iteration(m, 1000 + iters).unwrap();
+            iters += 1;
+            assert!(iters < 64, "group stalled");
+        }
+    }
+
+    #[test]
+    fn mtp_never_overshoots_even_max_new_tokens() {
+        // max_new = 4: prefill contributes token 1, so the pre-fix MTP
+        // branch (always 2 tokens/iteration, unclamped) overshot to 5.
+        let m = SimModel::small();
+        let mut g = DpGroup::new(0, 8, 64);
+        g.mtp_layers = 1;
+        g.enqueue(ServeRequest::new(1, vec![256, 1, 2], 4, 0));
+        assert_eq!(g.admit_from_queue(&m, 5).unwrap(), 1);
+        run_to_done(&mut g, &m);
+        let r = &g.finished[0];
+        assert_eq!(r.state, RequestState::Done);
+        assert_eq!(r.generated.len(), 4, "clamped to the admitted budget");
+        assert_eq!(r.timing.tokens_out, 4);
+        assert!(g.mtp_accepted > 0, "speculation actually ran");
+        assert_eq!(g.pool.usage().used_blocks, 0, "admission fully released");
+    }
+
+    #[test]
+    fn mtp_budget_of_one_retires_cleanly_without_pool_error() {
+        // max_new = 1: the admission token is the whole stream. Pre-fix the
+        // MTP branch still forwarded and appended 2 tokens past a 1-token
+        // reservation, swallowing the pool error with `let _ =`.
+        let m = SimModel::small();
+        let mut g = DpGroup::new(0, 8, 64);
+        g.mtp_layers = 2;
+        g.enqueue(ServeRequest::new(1, vec![256, 1, 2], 1, 0));
+        assert_eq!(g.admit_from_queue(&m, 5).unwrap(), 1);
+        run_to_done(&mut g, &m);
+        let r = &g.finished[0];
+        assert_eq!(r.state, RequestState::Done, "not failed by a pool refusal");
+        assert_eq!(r.generated.len(), 1);
+        assert_eq!(g.mtp_drafts, 0, "no draft issued without budget");
+        assert_eq!(g.pool.usage().used_blocks, 0);
+    }
+
+    #[test]
+    fn mtp_stream_is_bit_exact_vs_plain_and_counts_tokens_per_iter() {
+        let m = SimModel::small();
+        let req = || ServeRequest::new(1, vec![256, 4, 5], 9, 0);
+
+        let mut plain = DpGroup::new(0, 8, 64);
+        plain.enqueue(req());
+        plain.admit_from_queue(&m, 5).unwrap();
+        run_to_done(&mut plain, &m);
+        assert_eq!(plain.status().tokens_per_iter_milli, 1000, "plain rate is 1");
+
+        let mut spec = DpGroup::new(1, 8, 64);
+        spec.mtp_layers = 2;
+        spec.enqueue(req());
+        spec.admit_from_queue(&m, 5).unwrap();
+        run_to_done(&mut spec, &m);
+
+        assert_eq!(
+            spec.finished[0].generated, plain.finished[0].generated,
+            "speculation must never change the stream"
+        );
+        assert!(
+            spec.iterations < plain.iterations,
+            "k=2 perfect drafts finish in fewer iterations ({} vs {})",
+            spec.iterations, plain.iterations
+        );
+        assert!((spec.mtp_acceptance() - 1.0).abs() < 1e-9);
+        assert!(
+            spec.status().tokens_per_iter_milli > 1000,
+            "board shows the multi-token rate: {}",
+            spec.status().tokens_per_iter_milli
+        );
+    }
+
+    #[test]
+    fn rejected_drafts_shrink_draft_k_and_stream_stays_exact() {
+        let exact = SimModel::small();
+        let lossy = exact.clone().with_draft_miss(1); // every draft misses
+        let req = || ServeRequest::new(1, vec![256, 9, 9], 8, 0);
+
+        let mut plain = DpGroup::new(0, 8, 64);
+        plain.enqueue(req());
+        plain.admit_from_queue(&exact, 5).unwrap();
+        run_to_done(&mut plain, &exact);
+
+        let mut spec = DpGroup::new(1, 8, 64);
+        spec.mtp_layers = 3;
+        spec.enqueue(req());
+        spec.admit_from_queue(&lossy, 5).unwrap();
+        // two all-reject iterations shrink the per-stream chain
+        spec.decode_iteration(&lossy, 10).unwrap();
+        spec.decode_iteration(&lossy, 11).unwrap();
+        assert_eq!(spec.running[0].spec.draft_k, 2, "shrunk after 2 reject streaks");
+        assert!(spec.running[0].spec.accept_ewma < 1.0);
+        run_to_done(&mut spec, &lossy);
+
+        assert_eq!(spec.mtp_accepted, 0);
+        assert!(spec.mtp_drafts > 0);
+        assert_eq!(
+            spec.finished[0].generated, plain.finished[0].generated,
+            "rejections cost a wasted draft, never a wrong token"
+        );
+    }
+
+    /// SimModel whose verify logits are NaN-poisoned from `at_pos` on.
+    struct NanAfter {
+        inner: SimModel,
+        at_pos: usize,
+    }
+
+    impl DecodeModel for NanAfter {
+        fn prefill(&self, prompt: &[i32]) -> Result<crate::model::PrefillOut> {
+            self.inner.prefill(prompt)
+        }
+        fn decode_batch(
+            &self,
+            entries: &mut [(i32, &mut SeqKv)],
+            int8: bool,
+        ) -> Result<Vec<crate::model::DecodeOut>> {
+            let poison: Vec<bool> =
+                entries.iter().map(|(_, kv)| kv.len >= self.at_pos).collect();
+            let mut out = self.inner.decode_batch(entries, int8)?;
+            for (o, p) in out.iter_mut().zip(poison) {
+                if p {
+                    o.logits_row[0] = f32::NAN;
+                }
+            }
+            Ok(out)
+        }
+        fn mtp_draft(&self, h: &[&[f32]], t: &[i32]) -> Result<Vec<Vec<f32>>> {
+            self.inner.mtp_draft(h, t)
+        }
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq
+        }
+        fn max_decode_bucket(&self) -> usize {
+            self.inner.max_bucket
+        }
+    }
+
+    #[test]
+    fn nan_logits_fail_one_request_without_poisoning_the_group() {
+        for mtp_layers in [0usize, 2] {
+            // id 1's stream hits NaN logits mid-decode (its KV grows past
+            // the poison position first); id 2 is short enough to finish
+            // clean — pre-fix the argmax unwrap panicked the whole worker.
+            let m = NanAfter { inner: SimModel::small(), at_pos: 6 };
+            let mut g = DpGroup::new(0, 8, 64);
+            g.mtp_layers = mtp_layers;
+            g.enqueue(ServeRequest::new(1, vec![256, 1, 2, 3], 12, 0));
+            g.enqueue(ServeRequest::new(2, vec![256, 5], 2, 0));
+            assert_eq!(g.admit_from_queue(&m, 5).unwrap(), 2);
+            run_to_done(&mut g, &m);
+            assert!(g.healthy, "NaN fails the request, never the group");
+            let by_id = |id: u64| g.finished.iter().find(|r| r.id == id).unwrap();
+            assert_eq!(by_id(1).state, RequestState::Failed, "k={mtp_layers}");
+            assert_eq!(by_id(2).state, RequestState::Done, "k={mtp_layers}");
+            assert_eq!(by_id(2).generated.len(), 2);
+            assert_eq!(
+                by_id(1).generated.len() as u64,
+                by_id(1).timing.tokens_out,
+                "no torn tail behind the NaN"
+            );
+            assert_eq!(g.pool.usage().used_blocks, 0, "both admissions released");
+        }
     }
 }

@@ -91,6 +91,7 @@ impl BoardEntry {
                 healthy: self.status.healthy,
             },
             tick_ewma_ns: self.tick_ewma_ns,
+            tokens_per_iter_milli: self.status.tokens_per_iter_milli,
             epoch: self.epoch,
         }
     }
@@ -112,6 +113,10 @@ struct Slot {
     limits: AtomicU64,
     /// `f64::to_bits` of the KV usage fraction.
     kv_bits: AtomicU64,
+    /// `tokens_per_iter_milli << 48 | tick_ewma_ns` — the §4.6 multi-token
+    /// rate rides the ewma word so a publish stays the same number of
+    /// stores. 48 bits of ns (≈ 78 h) and 16 bits of milli-tokens (≈ 65
+    /// tokens/iteration) saturate, never wrap.
     ewma_ns: AtomicU64,
     published_ns: AtomicU64,
     healthy: AtomicBool,
@@ -138,6 +143,19 @@ fn unpack(w: u64) -> (usize, usize) {
     ((w >> 32) as usize, (w & 0xffff_ffff) as usize)
 }
 
+const EWMA_MASK: u64 = (1 << 48) - 1;
+
+#[inline]
+fn pack_ewma(tokens_per_iter_milli: u32, tick_ewma_ns: u64) -> u64 {
+    ((tokens_per_iter_milli.min(u16::MAX as u32) as u64) << 48)
+        | tick_ewma_ns.min(EWMA_MASK)
+}
+
+#[inline]
+fn unpack_ewma(w: u64) -> (u32, u64) {
+    ((w >> 48) as u32, w & EWMA_MASK)
+}
+
 impl Slot {
     fn new(e: &BoardEntry) -> Self {
         Self {
@@ -145,7 +163,10 @@ impl Slot {
             counts: AtomicU64::new(pack(e.status.queued, e.status.running)),
             limits: AtomicU64::new(pack(e.status.batch_limit, e.status.kv_total_blocks)),
             kv_bits: AtomicU64::new(e.status.kv_usage.to_bits()),
-            ewma_ns: AtomicU64::new(e.tick_ewma_ns),
+            ewma_ns: AtomicU64::new(pack_ewma(
+                e.status.tokens_per_iter_milli,
+                e.tick_ewma_ns,
+            )),
             published_ns: AtomicU64::new(e.published_ns),
             healthy: AtomicBool::new(e.status.healthy),
             demoted: AtomicBool::new(false),
@@ -192,7 +213,10 @@ impl StatusBoard {
         s.counts.store(pack(status.queued, status.running), Ordering::Relaxed);
         s.limits.store(pack(status.batch_limit, status.kv_total_blocks), Ordering::Relaxed);
         s.kv_bits.store(status.kv_usage.to_bits(), Ordering::Relaxed);
-        s.ewma_ns.store(tick_ewma_ns, Ordering::Relaxed);
+        s.ewma_ns.store(
+            pack_ewma(status.tokens_per_iter_milli, tick_ewma_ns),
+            Ordering::Relaxed,
+        );
         s.published_ns.store(now_ns, Ordering::Relaxed);
         s.healthy.store(status.healthy, Ordering::Relaxed);
         // a publish proves liveness: clear any router-side demotion
@@ -240,6 +264,7 @@ impl StatusBoard {
             }
             let (queued, running) = unpack(counts);
             let (batch_limit, kv_total_blocks) = unpack(limits);
+            let (tokens_per_iter_milli, tick_ewma_ns) = unpack_ewma(ewma_ns);
             return BoardEntry {
                 status: DpGroupStatus {
                     id: s.id,
@@ -249,8 +274,9 @@ impl StatusBoard {
                     kv_total_blocks,
                     kv_usage: f64::from_bits(kv_bits),
                     healthy: healthy && !s.demoted.load(Ordering::Relaxed),
+                    tokens_per_iter_milli,
                 },
-                tick_ewma_ns: ewma_ns,
+                tick_ewma_ns,
                 published_ns,
                 epoch: s1 >> 1,
             };
@@ -292,6 +318,7 @@ mod tests {
             kv_total_blocks: 64,
             kv_usage: 0.0,
             healthy: true,
+            tokens_per_iter_milli: 1000,
         }
     }
 
@@ -390,6 +417,11 @@ mod tests {
                             assert_eq!(e.status.queued as u64, i, "counts word torn");
                             assert_eq!(e.status.running as u64, i % 7, "counts word torn");
                             assert_eq!(e.tick_ewma_ns, i, "ewma word torn");
+                            assert_eq!(
+                                e.status.tokens_per_iter_milli as u64,
+                                1000 + i % 9,
+                                "tokens half of ewma word torn"
+                            );
                             assert_eq!(e.published_ns, i * 3, "timestamp word torn");
                             assert_eq!(e.status.kv_usage.to_bits(), (i as f64).to_bits(), "kv word torn");
                         }
@@ -423,6 +455,7 @@ mod tests {
                             kv_total_blocks: 64,
                             kv_usage: i as f64,
                             healthy: true,
+                            tokens_per_iter_milli: (1000 + i % 9) as u32,
                         };
                         b.publish(slot, st, i, i * 3);
                     }
@@ -466,6 +499,7 @@ mod model_tests {
             kv_total_blocks: 64,
             kv_usage: 0.0,
             healthy: true,
+            tokens_per_iter_milli: 1000,
         }
     }
 
@@ -489,6 +523,7 @@ mod model_tests {
                             kv_total_blocks: 64,
                             kv_usage: i as f64,
                             healthy: true,
+                            tokens_per_iter_milli: 1000 + i as u32,
                         };
                         b.publish(0, st, i, i * 3);
                     }
@@ -506,6 +541,13 @@ mod model_tests {
                     assert_eq!(e.status.running as u64, i % 7, "counts word torn");
                 }
                 assert_eq!(e.tick_ewma_ns, i, "ewma word torn");
+                if i > 0 {
+                    assert_eq!(
+                        e.status.tokens_per_iter_milli as u64,
+                        1000 + i,
+                        "tokens half of ewma word torn"
+                    );
+                }
                 assert_eq!(e.published_ns, i * 3, "timestamp word torn");
                 if i > 0 {
                     assert_eq!(e.status.kv_usage.to_bits(), (i as f64).to_bits(), "kv torn");

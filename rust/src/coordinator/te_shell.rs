@@ -437,7 +437,7 @@ impl TeShell {
         for v in cands[..picked].iter().flatten() {
             let demoted = self.straggler_penalty > 0.0
                 && med > 0
-                && (v.tick_ewma_ns as f64) > STRAGGLER_DEMOTE_RATIO * med as f64;
+                && (v.per_token_ewma_ns() as f64) > STRAGGLER_DEMOTE_RATIO * med as f64;
             let over_share =
                 self.dp_queue_limit > 0 && v.status.running >= self.dp_queue_limit;
             if !v.status.has_slot() || demoted || over_share {
@@ -825,6 +825,7 @@ mod tests {
                 healthy,
             },
             tick_ewma_ns: ewma_ns,
+            tokens_per_iter_milli: 1000,
             epoch: 1,
         }
     }
@@ -1007,6 +1008,7 @@ mod tests {
                         healthy: true,
                     },
                     tick_ewma_ns: 0,
+                    tokens_per_iter_milli: 1000,
                     epoch: 1, // frozen epoch: credits would never reset
                 }]
             }
@@ -1119,11 +1121,11 @@ mod tests {
         let spec = GroupSpec::new(3, 8, 64).with_serving(&cfg);
         assert_eq!(spec.tick_ewma_alpha, 0.5);
         assert!(!spec.int8);
-        assert!(!spec.use_mtp);
+        assert_eq!(spec.mtp_layers, 0);
         assert_eq!(spec.id, 3);
 
-        cfg.mtp_layers = 1;
-        assert!(GroupSpec::new(0, 8, 64).with_serving(&cfg).use_mtp);
+        cfg.mtp_layers = 2;
+        assert_eq!(GroupSpec::new(0, 8, 64).with_serving(&cfg).mtp_layers, 2);
     }
 
     #[test]

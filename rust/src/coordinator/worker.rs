@@ -90,7 +90,10 @@ pub struct GroupSpec {
     pub batch_limit: usize,
     pub kv_blocks: usize,
     pub int8: bool,
-    pub use_mtp: bool,
+    /// Speculative-decode chain ceiling (`serving.mtp_layers`); 0 disables
+    /// MTP, ≥ 1 runs chained draft-k in the decode tick (§4.6) with
+    /// per-stream adaptive depth up to this.
+    pub mtp_layers: usize,
     /// EWMA weight for this group's published tick-latency signal.
     pub tick_ewma_alpha: f64,
     /// DP domain this group belongs to (§5.2 MoeAttn turn-taking over the
@@ -112,7 +115,7 @@ impl GroupSpec {
             batch_limit,
             kv_blocks,
             int8: false,
-            use_mtp: false,
+            mtp_layers: 0,
             tick_ewma_alpha: TICK_EWMA_ALPHA,
             domain: 0,
             fail_after: None,
@@ -128,7 +131,7 @@ impl GroupSpec {
     /// Apply the §4 serving-config knobs (INT8, MTP depth, EWMA alpha).
     pub fn with_serving(mut self, cfg: &crate::config::ServingConfig) -> Self {
         self.int8 = cfg.int8;
-        self.use_mtp = cfg.mtp_layers > 0;
+        self.mtp_layers = cfg.mtp_layers;
         self.tick_ewma_alpha = cfg.tick_ewma_alpha;
         self
     }
@@ -414,6 +417,7 @@ impl DecentralizedRuntime {
                     kv_total_blocks: s.kv_blocks,
                     kv_usage: 0.0,
                     healthy: true,
+                    tokens_per_iter_milli: 1000,
                 })
             })
             .collect();
@@ -436,7 +440,7 @@ impl DecentralizedRuntime {
                 .spawn(move || -> DpGroup {
                     let mut group = DpGroup::new(spec_w.id, spec_w.batch_limit, spec_w.kv_blocks);
                     group.int8 = spec_w.int8;
-                    group.use_mtp = spec_w.use_mtp;
+                    group.mtp_layers = spec_w.mtp_layers;
                     group.out_tx = out_w;
                     group.obs = obs_w.clone();
                     // the §5.2 exchange client is built in-thread, like the

@@ -663,6 +663,9 @@ impl PlaneShared {
             // load share stands in for KV usage on the expert side
             kv_usage: if total > 0 { my_rows as f64 / total as f64 } else { 0.0 },
             healthy: self.alive[slot].load(Ordering::Relaxed),
+            // expert workers emit no tokens; 1000 keeps any reader's
+            // per-token normalization a no-op
+            tokens_per_iter_milli: 1000,
         };
         self.board.publish(slot, st, tick_ewma_ns, self.start.elapsed().as_nanos() as u64);
     }
@@ -1278,6 +1281,7 @@ impl ExpertPlane {
                     kv_total_blocks: 0,
                     kv_usage: 0.0,
                     healthy: true,
+                    tokens_per_iter_milli: 1000,
                 })
             })
             .collect();
@@ -2274,6 +2278,7 @@ mod model_tests {
                     kv_total_blocks: 0,
                     kv_usage: 0.0,
                     healthy: true,
+                    tokens_per_iter_milli: 1000,
                 })
             })
             .collect();

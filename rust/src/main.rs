@@ -97,7 +97,7 @@ fn serve(args: &Args) -> Result<()> {
     let specs: Vec<GroupSpec> = (0..n_groups)
         .map(|i| {
             let mut s = GroupSpec::new(i, 4, 4096);
-            s.use_mtp = mtp;
+            s.mtp_layers = if mtp { 1 } else { 0 };
             s.int8 = int8;
             s
         })

@@ -23,8 +23,10 @@ pub trait DecodeModel {
     fn decode_batch(&self, entries: &mut [(i32, &mut SeqKv)], int8: bool)
         -> Result<Vec<DecodeOut>>;
 
-    /// MTP draft logits for `(hidden, token)` pairs (§4.6 step 1).
-    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>>;
+    /// MTP draft logits for `(hidden, token)` pairs (§4.6 step 1). Rows are
+    /// borrowed slices so chained callers can mix resident hidden state with
+    /// rows produced earlier in the same iteration without cloning.
+    fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> Result<Vec<Vec<f32>>>;
 
     /// Maximum sequence length a KV cache can hold.
     fn max_seq(&self) -> usize;
@@ -58,7 +60,7 @@ impl<'e> DecodeModel for ServedModel<'e> {
         ServedModel::decode_batch(self, entries, int8)
     }
 
-    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         ServedModel::mtp_draft(self, hidden_rows, tokens)
     }
 
@@ -99,7 +101,7 @@ impl DecodeModel for OwnedEngineModel {
         ServedModel::new(&self.engine).decode_batch(entries, int8)
     }
 
-    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         ServedModel::new(&self.engine).mtp_draft(hidden_rows, tokens)
     }
 

@@ -223,7 +223,7 @@ impl<'e> ServedModel<'e> {
     }
 
     /// MTP draft logits for a batch of (hidden, token) pairs (§4.6 step 1).
-    pub fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    pub fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         if hidden_rows.is_empty() {
             return Ok(vec![]);
         }
@@ -232,7 +232,7 @@ impl<'e> ServedModel<'e> {
         let mut hidden = vec![0f32; bucket * self.d];
         let mut toks = vec![0i32; bucket];
         for i in 0..n {
-            hidden[i * self.d..(i + 1) * self.d].copy_from_slice(&hidden_rows[i]);
+            hidden[i * self.d..(i + 1) * self.d].copy_from_slice(hidden_rows[i]);
             toks[i] = tokens[i];
         }
         let out = self.engine.execute(
@@ -354,7 +354,7 @@ mod tests {
         let Some(e) = engine() else { return };
         let m = ServedModel::new(&e);
         let pf = m.prefill(&[256, 50, 60]).unwrap();
-        let logits = m.mtp_draft(&[pf.hidden.clone()], &[42]).unwrap();
+        let logits = m.mtp_draft(&[pf.hidden.as_slice()], &[42]).unwrap();
         assert_eq!(logits.len(), 1);
         assert_eq!(logits[0].len(), e.manifest.model.vocab);
     }

@@ -27,12 +27,31 @@ pub struct SimModel {
     pub max_seq: usize,
     pub max_bucket: usize,
     pub prefill_limit: usize,
+    /// When non-zero, `mtp_draft` deliberately mispredicts every position
+    /// divisible by this — an imperfect draft head for exercising the
+    /// rejection path and acceptance-EWMA adaptation (0 = exact drafts).
+    pub draft_miss_every: u64,
 }
 
 impl SimModel {
     /// Small default: vocab 128 (covers the letter band), short sequences.
     pub fn small() -> Self {
-        Self { vocab: 128, d_model: 8, max_seq: 256, max_bucket: 8, prefill_limit: 192 }
+        Self {
+            vocab: 128,
+            d_model: 8,
+            max_seq: 256,
+            max_bucket: 8,
+            prefill_limit: 192,
+            draft_miss_every: 0,
+        }
+    }
+
+    /// Same model, but the draft head misses at every position divisible
+    /// by `every`. The *verify* stream is untouched — rejections cost a
+    /// wasted draft, never a wrong token.
+    pub fn with_draft_miss(mut self, every: u64) -> Self {
+        self.draft_miss_every = every;
+        self
     }
 
     fn mix(a: u64, b: u64) -> u64 {
@@ -105,11 +124,17 @@ impl DecodeModel for SimModel {
         Ok(out)
     }
 
-    fn mtp_draft(&self, hidden_rows: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(hidden_rows.len());
         for (h, &t) in hidden_rows.iter().zip(tokens) {
             let pos = h.first().copied().unwrap_or(0.0).max(0.0) as usize;
-            out.push(self.one_hot(Self::token_at(t, pos)));
+            let mut tok = Self::token_at(t, pos);
+            if self.draft_miss_every > 0 && pos as u64 % self.draft_miss_every == 0 {
+                // rotate within the letter band: a guaranteed mismatch the
+                // main model will reject (and correct) on verify
+                tok = (TOK_LO + (tok as u64 - TOK_LO + 1) % TOK_SPAN) as i32;
+            }
+            out.push(self.one_hot(tok));
         }
         Ok(out)
     }
@@ -130,7 +155,7 @@ mod tests {
     fn argmax(row: &[f32]) -> i32 {
         row.iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0)
     }
@@ -189,10 +214,30 @@ mod tests {
         let m = SimModel::small();
         let pf = m.prefill(&[5, 6, 7]).unwrap();
         let feed = argmax(&pf.logits.as_f32().unwrap());
-        let draft = m.mtp_draft(&[pf.hidden.clone()], &[feed]).unwrap();
+        let draft = m.mtp_draft(&[pf.hidden.as_slice()], &[feed]).unwrap();
         let mut kv = pf.kv;
         let mut entries = vec![(feed, &mut kv)];
         let main = m.decode_batch(&mut entries, false).unwrap();
         assert_eq!(argmax(&draft[0]), argmax(&main[0].logits_row));
+    }
+
+    #[test]
+    fn draft_miss_knob_mispredicts_only_matching_positions() {
+        let exact = SimModel::small();
+        let lossy = SimModel::small().with_draft_miss(2);
+        let pf = exact.prefill(&[5, 6, 7]).unwrap(); // hidden encodes pos 3
+        let feed = argmax(&pf.logits.as_f32().unwrap());
+        let h = pf.hidden.as_slice();
+        // pos 3 % 2 != 0 → both heads agree
+        assert_eq!(
+            argmax(&exact.mtp_draft(&[h], &[feed]).unwrap()[0]),
+            argmax(&lossy.mtp_draft(&[h], &[feed]).unwrap()[0]),
+        );
+        // pos 4 % 2 == 0 → the lossy head must disagree, inside the letter band
+        let h4 = exact.hidden_at(4);
+        let a = argmax(&exact.mtp_draft(&[h4.as_slice()], &[feed]).unwrap()[0]);
+        let b = argmax(&lossy.mtp_draft(&[h4.as_slice()], &[feed]).unwrap()[0]);
+        assert_ne!(a, b);
+        assert!((97..123).contains(&b), "miss stays in the letter band: {b}");
     }
 }

@@ -2,44 +2,87 @@
 //! head, plus the analytic/Monte-Carlo acceptance model used for
 //! paper-scale throughput numbers.
 //!
-//! Execution follows the paper's five-step loop: (1) MTP forward generates
-//! draft tokens; (2) sample candidates from MTP outputs; (3) verify with the
-//! main model; (4) sample from main outputs; (5) acceptance check. With one
-//! MTP layer and greedy sampling this yields 2 tokens per iteration when the
-//! draft is accepted and 1 otherwise — effective TPOT = iteration / (1 + p)
-//! at acceptance rate p (§7.1 computes 93+2 / 1.9 ≈ 50 ms exactly this way).
+//! Execution follows the paper's five-step loop, generalized to a chained
+//! draft of up to `draft_k` tokens: each round (1) the MTP head drafts the
+//! next token from the current hidden/feed pair, (2) the candidate is the
+//! greedy sample, (3) the main model verifies with a batched forward, (4)
+//! the main sample is emitted (on rejection it *is* the correction), and
+//! (5) the chain continues into another round only while the draft
+//! accepted — token j+1 is drafted only while token j accepted, exactly
+//! the §4.6 chain model [`expected_tokens_per_step`] encodes. A fully
+//! accepted chain emits `draft_k + 1` tokens in one logical iteration
+//! (the final forward is the bonus token); a rejection at round j emits
+//! j+1 tokens. With `draft_k = 1` this is the paper's single-MTP-layer
+//! loop: 2 tokens when accepted, 1 otherwise — effective TPOT =
+//! iteration / (1 + p) at acceptance rate p (§7.1 computes
+//! 93+2 / 1.9 ≈ 50 ms exactly this way).
+//!
+//! **Multi-token budget/KV contract** (what makes the accounting honest
+//! end to end): [`spec_iteration`] never emits more than
+//! [`SpecSeq::max_tokens`] tokens per sequence (the caller passes the
+//! remaining `max_new_tokens` budget) and never issues a forward without
+//! KV headroom (`kv.len < max_seq` to append this round's feed,
+//! `kv.len + 1 < max_seq` before committing to a follow-up round) — so a
+//! sequence can gain at most `min(max_tokens, draft_k + 1)` tokens and
+//! KV positions per iteration, and the caller's `BlockPool` reservation
+//! (sized to `max_new_tokens` at admission) is never exceeded. NaN or
+//! malformed logits surface as [`SpecOut::failed`] instead of a panic or
+//! a bogus token-0 emission: the caller fails that one request and the
+//! rest of the batch (and the group) stays live.
 //!
 //! On Ascend the verify step fuses into one batched forward; on the CPU
-//! reproduction it is a second PJRT call — the *acceptance logic and token
-//! stream* are identical, and tokens/step is what we measure.
+//! reproduction it is one `decode_batch` call per chain round — the
+//! *acceptance logic and token stream* are identical, and tokens/step is
+//! what we measure.
 
 use anyhow::Result;
 
 use crate::model::{DecodeModel, SeqKv};
 use crate::util::rng::Rng;
 
-/// Per-sequence speculative decode state.
+/// Per-sequence speculative decode state for one iteration. `hidden` is
+/// borrowed from the resident sequence (no per-iteration clone); the
+/// refreshed hidden row comes back by move in [`SpecOut::hidden`].
 pub struct SpecSeq<'a> {
     pub kv: &'a mut SeqKv,
     /// Token to feed next (last sampled, not yet in the cache).
     pub feed: i32,
     /// Hidden state from the step that produced `feed`.
-    pub hidden: Vec<f32>,
+    pub hidden: &'a [f32],
+    /// Maximum chained drafts this iteration (the stream's adaptive k).
+    pub draft_k: usize,
+    /// Hard cap on tokens emitted this iteration — the remaining
+    /// `max_new_tokens` budget. 0 emits nothing (the caller retires the
+    /// sequence).
+    pub max_tokens: usize,
 }
 
 /// Result of one speculative iteration for one sequence.
 #[derive(Clone, Debug)]
 pub struct SpecOut {
-    /// Tokens produced this iteration (1 or 2 with a single MTP layer).
+    /// Tokens produced this iteration, in stream order
+    /// (≤ `min(max_tokens, draft_k + 1)`).
     pub tokens: Vec<i32>,
-    /// Hidden after the last accepted forward.
+    /// Hidden after the last forward (the input hidden, cloned, if no
+    /// forward ran).
     pub hidden: Vec<f32>,
     /// Next token to feed (sampled from the last logits).
     pub next_feed: i32,
-    pub draft_accepted: bool,
+    /// Drafts issued for this sequence this iteration.
+    pub drafts: u32,
+    /// Drafts the main model verified (`accepted ≤ drafts`).
+    pub accepted: u32,
+    /// The main forward produced NaN/empty logits: no token was emitted
+    /// for the offending round and the caller must fail this request
+    /// (alone — the batch and group stay healthy).
+    pub failed: bool,
 }
 
-/// One iteration of the five-step loop over a batch (greedy sampling).
+/// One iteration of the chained draft-verify loop over a batch (greedy
+/// sampling). Sequences chain independently: a rejected or
+/// budget-exhausted sequence drops out of later rounds while the rest
+/// keep drafting, so the whole batch costs `max(rounds)` forwards, each
+/// batched over the still-active chains.
 pub fn spec_iteration<M: DecodeModel + ?Sized>(
     model: &M,
     seqs: &mut [SpecSeq],
@@ -48,76 +91,175 @@ pub fn spec_iteration<M: DecodeModel + ?Sized>(
     if seqs.is_empty() {
         return Ok(vec![]);
     }
-    // (1)+(2): draft tokens from the MTP head.
-    let hiddens: Vec<Vec<f32>> = seqs.iter().map(|s| s.hidden.clone()).collect();
-    let feeds: Vec<i32> = seqs.iter().map(|s| s.feed).collect();
-    let draft_logits = model.mtp_draft(&hiddens, &feeds)?;
-    let drafts: Vec<i32> = draft_logits
+    let max_seq = model.max_seq();
+    let n = seqs.len();
+    let mut results: Vec<SpecOut> = seqs
         .iter()
-        .map(|row| argmax(row) as i32)
+        .map(|s| SpecOut {
+            tokens: Vec::new(),
+            hidden: Vec::new(),
+            next_feed: s.feed,
+            drafts: 0,
+            accepted: 0,
+            failed: false,
+        })
         .collect();
-
-    // (3)+(4): main forward on the feed tokens.
-    let mut entries: Vec<(i32, &mut SeqKv)> = Vec::with_capacity(seqs.len());
-    for s in seqs.iter_mut() {
-        entries.push((s.feed, &mut *s.kv));
-    }
-    let main_out = model.decode_batch(&mut entries, int8)?;
-    drop(entries);
-
-    // (5): acceptance check + bonus forward for accepted drafts.
-    let mut results = Vec::with_capacity(seqs.len());
-    let mut accepted_idx = Vec::new();
-    for (i, out) in main_out.iter().enumerate() {
-        let m = argmax(&out.logits_row) as i32;
-        if m == drafts[i] && seqs[i].kv.len + 1 < model.max_seq() {
-            accepted_idx.push(i);
+    // Hidden rows refreshed by forwards this iteration (None = still the
+    // caller's borrowed row).
+    let mut owned: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+    // Chains still running rounds this iteration (ascending order is
+    // preserved across rounds — membership checks are a merge walk, not
+    // an O(n²) `contains`).
+    let mut active: Vec<usize> = (0..n)
+        .filter(|&i| seqs[i].max_tokens > 0 && seqs[i].kv.len < max_seq)
+        .collect();
+    while !active.is_empty() {
+        // (1)+(2): draft the next token for chains that can commit to a
+        // follow-up round — budget for two more tokens (this round's and
+        // the follow-up's) and KV headroom for both forwards.
+        let drafters: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&i| {
+                (results[i].drafts as usize) < seqs[i].draft_k
+                    && results[i].tokens.len() + 2 <= seqs[i].max_tokens
+                    && seqs[i].kv.len + 1 < max_seq
+            })
+            .collect();
+        let mut draft_tok: Vec<Option<i32>> = vec![None; n];
+        if !drafters.is_empty() {
+            let hiddens: Vec<&[f32]> = drafters
+                .iter()
+                .map(|&i| owned[i].as_deref().unwrap_or(seqs[i].hidden))
+                .collect();
+            let feeds: Vec<i32> =
+                drafters.iter().map(|&i| results[i].next_feed).collect();
+            let draft_logits = model.mtp_draft(&hiddens, &feeds)?;
+            for (k, &i) in drafters.iter().enumerate() {
+                // NaN draft logits just skip speculation for this chain;
+                // only the *verify* forward can fail the request.
+                draft_tok[i] = argmax_checked(&draft_logits[k]).map(|t| t as i32);
+            }
         }
-        results.push(SpecOut {
-            tokens: vec![m],
-            hidden: out.hidden_row.clone(),
-            next_feed: m,
-            draft_accepted: false,
-        });
-    }
-    if !accepted_idx.is_empty() {
-        // Feed the accepted draft (== main token) to get a second token in
-        // the same logical iteration (fused on real hardware).
-        let mut entries: Vec<(i32, &mut SeqKv)> = Vec::new();
-        let mut feeds2 = Vec::new();
+        // (3)+(4): one batched main forward over every active chain.
+        let mut entries: Vec<(i32, &mut SeqKv)> = Vec::with_capacity(active.len());
         {
-            // split seqs to get disjoint mutable kvs for accepted entries
-            let mut remaining: Vec<&mut SpecSeq> = seqs.iter_mut().collect();
-            let mut taken: Vec<(usize, &mut SpecSeq)> = Vec::new();
-            for (pos, s) in remaining.drain(..).enumerate() {
-                if accepted_idx.contains(&pos) {
-                    taken.push((pos, s));
+            let mut want = active.iter().copied().peekable();
+            for (i, s) in seqs.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    want.next();
+                    entries.push((results[i].next_feed, &mut *s.kv));
                 }
             }
-            for (pos, s) in taken {
-                feeds2.push(pos);
-                entries.push((results[pos].next_feed, &mut *s.kv));
+        }
+        let mut outs = model.decode_batch(&mut entries, int8)?;
+        drop(entries);
+        // (5): emit + acceptance check; survivors chain into the next round.
+        let mut next_active = Vec::with_capacity(active.len());
+        for (k, &i) in active.iter().enumerate() {
+            let out = &mut outs[k];
+            let Some(m) = argmax_checked(&out.logits_row) else {
+                results[i].failed = true;
+                continue;
+            };
+            let m = m as i32;
+            results[i].tokens.push(m);
+            results[i].next_feed = m;
+            owned[i] = Some(std::mem::take(&mut out.hidden_row));
+            let mut accepted = false;
+            if let Some(d) = draft_tok[i] {
+                results[i].drafts += 1;
+                if d == m {
+                    results[i].accepted += 1;
+                    accepted = true;
+                }
+            }
+            if accepted
+                && results[i].tokens.len() < seqs[i].max_tokens
+                && seqs[i].kv.len < max_seq
+            {
+                next_active.push(i);
             }
         }
-        let bonus = model.decode_batch(&mut entries, int8)?;
-        for (k, pos) in feeds2.iter().enumerate() {
-            let t2 = argmax(&bonus[k].logits_row) as i32;
-            let r = &mut results[*pos];
-            r.tokens.push(t2);
-            r.hidden = bonus[k].hidden_row.clone();
-            r.next_feed = t2;
-            r.draft_accepted = true;
-        }
+        active = next_active;
+    }
+    for (i, r) in results.iter_mut().enumerate() {
+        r.hidden = match owned[i].take() {
+            Some(h) => h,
+            None => seqs[i].hidden.to_vec(),
+        };
     }
     Ok(results)
 }
 
-fn argmax(row: &[f32]) -> usize {
+/// Greedy argmax over a logits row. `None` on an empty row or when the
+/// maximum is NaN — `total_cmp` (PR-6 comparator policy) ranks NaN above
+/// every number, so a single NaN logit surfaces here instead of panicking
+/// (`partial_cmp().unwrap()`) or silently winning as token 0.
+pub fn argmax_checked(row: &[f32]) -> Option<usize> {
     row.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .and_then(|(i, v)| if v.is_nan() { None } else { Some(i) })
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive draft length (per-stream acceptance EWMA)
+// ---------------------------------------------------------------------------
+
+/// EWMA weight for a stream's observed acceptance rate.
+pub const ACCEPT_EWMA_ALPHA: f64 = 0.25;
+/// Grow the chain by one once the acceptance EWMA clears this.
+pub const GROW_EWMA: f64 = 0.8;
+/// Shrink the chain after this many consecutive iterations that saw a
+/// rejection.
+pub const SHRINK_STREAK: u32 = 2;
+
+/// Per-stream adaptive draft-length controller (Ouroboros-style): drives
+/// `draft_k` from observed acceptance instead of a fixed depth. Rejection
+/// streaks shrink the chain fast (mispredicted drafts burn a forward
+/// each); a sustained-high acceptance EWMA grows it back toward the
+/// configured `mtp_layers` ceiling. Iterations that issued no draft
+/// (budget or KV clamp) carry no signal and leave the controller alone.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecCtl {
+    /// EWMA of per-iteration acceptance (accepted / drafts), seeded
+    /// optimistic so fresh streams start at full depth.
+    pub accept_ewma: f64,
+    /// Current chain length for this stream (1 ..= configured k).
+    pub draft_k: usize,
+    /// Consecutive iterations with ≥ 1 rejected draft.
+    pub reject_streak: u32,
+}
+
+impl SpecCtl {
+    pub fn new(k_max: usize) -> Self {
+        Self { accept_ewma: 1.0, draft_k: k_max.max(1), reject_streak: 0 }
+    }
+
+    /// Fold one iteration's draft/accept counts in and re-pick `draft_k`.
+    pub fn observe(&mut self, drafts: u32, accepted: u32, k_max: usize) {
+        if drafts == 0 {
+            return;
+        }
+        let rate = accepted as f64 / drafts as f64;
+        self.accept_ewma =
+            ACCEPT_EWMA_ALPHA * rate + (1.0 - ACCEPT_EWMA_ALPHA) * self.accept_ewma;
+        if accepted < drafts {
+            self.reject_streak += 1;
+        } else {
+            self.reject_streak = 0;
+        }
+        if self.reject_streak >= SHRINK_STREAK && self.draft_k > 1 {
+            self.draft_k -= 1;
+            self.reject_streak = 0;
+        } else if self.reject_streak == 0
+            && self.accept_ewma >= GROW_EWMA
+            && self.draft_k < k_max
+        {
+            self.draft_k += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -163,6 +305,8 @@ pub const MTP2_TRAINED_ACCEPT: f64 = 0.50; // 1 + .9 + .9*.5 = 2.35
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::served::{DecodeOut, PrefillOut};
+    use crate::model::SimModel;
 
     #[test]
     fn expected_tokens_matches_paper_arithmetic() {
@@ -189,5 +333,220 @@ mod tests {
         assert!((tpot - 50.0).abs() < 0.5, "tpot {tpot}");
     }
 
-    // Real-execution spec decoding tests live in rust/tests/ (need artifacts).
+    #[test]
+    fn argmax_checked_handles_nan_and_empty() {
+        assert_eq!(argmax_checked(&[0.1, 0.9, 0.3]), Some(1));
+        assert_eq!(argmax_checked(&[]), None);
+        // a single NaN anywhere must surface, not panic or mask as token 0
+        assert_eq!(argmax_checked(&[0.1, f32::NAN, 0.3]), None);
+        assert_eq!(argmax_checked(&[f32::NAN]), None);
+        // -inf/inf still total-order fine
+        assert_eq!(argmax_checked(&[f32::NEG_INFINITY, 1.0, f32::INFINITY]), Some(2));
+    }
+
+    #[test]
+    fn spec_ctl_shrinks_on_rejection_streaks_and_grows_back() {
+        let mut c = SpecCtl::new(3);
+        assert_eq!(c.draft_k, 3);
+        // two consecutive iterations with rejections → shrink by one
+        c.observe(3, 1, 3);
+        assert_eq!(c.draft_k, 3);
+        c.observe(3, 1, 3);
+        assert_eq!(c.draft_k, 2);
+        c.observe(2, 0, 3);
+        c.observe(2, 0, 3);
+        assert_eq!(c.draft_k, 1);
+        // floor at 1 even under continued rejection
+        c.observe(1, 0, 3);
+        c.observe(1, 0, 3);
+        c.observe(1, 0, 3);
+        assert_eq!(c.draft_k, 1);
+        // sustained full acceptance pulls the EWMA back up and regrows
+        for _ in 0..32 {
+            c.observe(1, 1, 3);
+        }
+        assert_eq!(c.draft_k, 3, "grows back toward the configured ceiling");
+        assert!(c.accept_ewma > GROW_EWMA);
+        // clamp-only iterations (no drafts) carry no signal
+        let before = c;
+        c.observe(0, 0, 3);
+        assert_eq!(c.draft_k, before.draft_k);
+        assert_eq!(c.accept_ewma, before.accept_ewma);
+    }
+
+    fn first_token(pf: &PrefillOut) -> i32 {
+        argmax_checked(&pf.logits.as_f32().unwrap()).unwrap() as i32
+    }
+
+    /// Decode `n` tokens the plain (non-speculative) way.
+    fn plain_stream(m: &SimModel, prompt: &[i32], n: usize) -> Vec<i32> {
+        let pf = m.prefill(prompt).unwrap();
+        let mut feed = first_token(&pf);
+        let mut kv = pf.kv;
+        let mut toks = Vec::new();
+        for _ in 0..n {
+            let mut entries = vec![(feed, &mut kv)];
+            let o = m.decode_batch(&mut entries, false).unwrap();
+            feed = argmax_checked(&o[0].logits_row).unwrap() as i32;
+            toks.push(feed);
+        }
+        toks
+    }
+
+    #[test]
+    fn chained_draft_k_emits_k_plus_one_and_matches_plain_stream() {
+        let m = SimModel::small();
+        let prompt = [256, 1, 2, 3];
+        let plain = plain_stream(&m, &prompt, 9);
+
+        let pf = m.prefill(&prompt).unwrap();
+        let mut feed = first_token(&pf);
+        let mut hidden = pf.hidden.clone();
+        let mut kv = pf.kv;
+        let mut toks: Vec<i32> = Vec::new();
+        let mut iters = 0;
+        while toks.len() < 9 {
+            let budget = 9 - toks.len();
+            let mut seqs = vec![SpecSeq {
+                kv: &mut kv,
+                feed,
+                hidden: &hidden,
+                draft_k: 2,
+                max_tokens: budget,
+            }];
+            let outs = spec_iteration(&m, &mut seqs, false).unwrap();
+            let o = outs.into_iter().next().unwrap();
+            assert!(!o.failed);
+            // SimModel's draft head is exact → full chains of k+1 tokens
+            assert_eq!(o.tokens.len(), budget.min(3));
+            assert_eq!(o.drafts, o.accepted, "perfect drafts all accept");
+            toks.extend_from_slice(&o.tokens);
+            feed = o.next_feed;
+            hidden = o.hidden;
+            iters += 1;
+        }
+        assert_eq!(toks, plain, "speculation must never change the stream");
+        assert_eq!(iters, 3, "9 tokens in 3 iterations at k=2");
+    }
+
+    #[test]
+    fn budget_clamp_never_overshoots_max_tokens() {
+        let m = SimModel::small();
+        let pf = m.prefill(&[256, 7, 8]).unwrap();
+        let feed = first_token(&pf);
+        let hidden = pf.hidden.clone();
+        let mut kv = pf.kv;
+        // budget 2 with k=3: one draft, two tokens, chain stops at budget
+        let mut seqs = vec![SpecSeq {
+            kv: &mut kv,
+            feed,
+            hidden: &hidden,
+            draft_k: 3,
+            max_tokens: 2,
+        }];
+        let o = spec_iteration(&m, &mut seqs, false).unwrap().remove(0);
+        assert_eq!(o.tokens.len(), 2, "clamped to the remaining budget");
+        assert_eq!(o.drafts, 1, "no draft issued past the budget");
+
+        // budget 0 is a no-op (caller retires the sequence)
+        let mut seqs = vec![SpecSeq {
+            kv: &mut kv,
+            feed,
+            hidden: &hidden,
+            draft_k: 3,
+            max_tokens: 0,
+        }];
+        let o = spec_iteration(&m, &mut seqs, false).unwrap().remove(0);
+        assert!(o.tokens.is_empty());
+        assert_eq!(o.next_feed, feed);
+        assert_eq!(o.drafts, 0);
+        assert!(!o.failed);
+    }
+
+    #[test]
+    fn kv_headroom_clamps_the_chain() {
+        let mut m = SimModel::small();
+        m.max_seq = 6;
+        let pf = m.prefill(&[256, 1, 2, 3]).unwrap(); // kv.len = 4
+        let feed = first_token(&pf);
+        let hidden = pf.hidden.clone();
+        let mut kv = pf.kv;
+        let mut seqs = vec![SpecSeq {
+            kv: &mut kv,
+            feed,
+            hidden: &hidden,
+            draft_k: 3,
+            max_tokens: 10,
+        }];
+        let o = spec_iteration(&m, &mut seqs, false).unwrap().remove(0);
+        // two forwards fit (4→5→6 = max_seq); a third would overflow the
+        // cache, so only one draft was ever issued
+        assert_eq!(o.tokens.len(), 2);
+        assert_eq!(o.drafts, 1);
+        assert_eq!(kv.len, 6, "never appended past max_seq");
+
+        // a full sequence is a no-op instead of an error
+        let mut seqs = vec![SpecSeq {
+            kv: &mut kv,
+            feed: o.next_feed,
+            hidden: &o.hidden,
+            draft_k: 3,
+            max_tokens: 10,
+        }];
+        let o2 = spec_iteration(&m, &mut seqs, false).unwrap().remove(0);
+        assert!(o2.tokens.is_empty());
+        assert!(!o2.failed);
+    }
+
+    /// SimModel wrapper whose *verify* logits are NaN-poisoned: the §4.6
+    /// failure mode PR 6's sweep missed (pre-fix `argmax` panicked here).
+    struct NanModel(SimModel);
+
+    impl DecodeModel for NanModel {
+        fn prefill(&self, prompt: &[i32]) -> anyhow::Result<PrefillOut> {
+            self.0.prefill(prompt)
+        }
+        fn decode_batch(
+            &self,
+            entries: &mut [(i32, &mut crate::model::SeqKv)],
+            int8: bool,
+        ) -> anyhow::Result<Vec<DecodeOut>> {
+            let mut out = self.0.decode_batch(entries, int8)?;
+            for o in &mut out {
+                o.logits_row[0] = f32::NAN;
+            }
+            Ok(out)
+        }
+        fn mtp_draft(&self, hidden_rows: &[&[f32]], tokens: &[i32]) -> anyhow::Result<Vec<Vec<f32>>> {
+            self.0.mtp_draft(hidden_rows, tokens)
+        }
+        fn max_seq(&self) -> usize {
+            self.0.max_seq
+        }
+        fn max_decode_bucket(&self) -> usize {
+            self.0.max_bucket
+        }
+    }
+
+    #[test]
+    fn nan_verify_logits_fail_the_sequence_not_the_batch() {
+        let m = NanModel(SimModel::small());
+        let pf = m.0.prefill(&[256, 9]).unwrap();
+        let feed = first_token(&pf);
+        let hidden = pf.hidden.clone();
+        let mut kv = pf.kv;
+        let mut seqs = vec![SpecSeq {
+            kv: &mut kv,
+            feed,
+            hidden: &hidden,
+            draft_k: 2,
+            max_tokens: 8,
+        }];
+        // pre-fix this panicked in `argmax` via partial_cmp().unwrap()
+        let o = spec_iteration(&m, &mut seqs, false).unwrap().remove(0);
+        assert!(o.failed, "NaN logits must surface as a per-sequence failure");
+        assert!(o.tokens.is_empty(), "no token emitted from NaN logits");
+    }
+
+    // Live-engine spec decoding tests: rust/tests/integration_mtp.rs.
 }

@@ -73,6 +73,10 @@ metric_enum! {
         RequestsDone => "requests_done",
         /// Prefilled-KV injections deferred because the group was full.
         HandoffDeferred => "handoff_deferred",
+        /// §4.6 MTP draft tokens proposed by the speculative chain.
+        MtpDrafts => "mtp_drafts",
+        /// MTP draft tokens the main model verified (accepted).
+        MtpAccepted => "mtp_accepted",
         // -- prefill plane --
         /// Prefill jobs completed.
         PrefillJobs => "prefill_jobs",
@@ -138,6 +142,9 @@ metric_enum! {
         TurnstileWaitNs => "turnstile_wait_ns",
         /// §6.2 measured per-action downtime.
         RecoveryDowntimeNs => "recovery_downtime_ns",
+        /// MTP chain depth per sequence-iteration — a *count* (drafts
+        /// attempted), not nanoseconds; log2 buckets still apply.
+        MtpDraftDepth => "mtp_draft_depth",
     }
 }
 

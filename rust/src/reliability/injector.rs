@@ -483,12 +483,7 @@ impl RecoverySupervisor {
                     && !self.killed.iter().any(|&(k, _, _)| k == v.status.group)
                     && v.status.kv_headroom(need)
             })
-            .min_by(|a, b| {
-                a.status
-                    .kv_usage
-                    .partial_cmp(&b.status.kv_usage)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            })
+            .min_by(|a, b| a.status.kv_usage.total_cmp(&b.status.kv_usage))
             .map(|v| v.status.group)
     }
 

@@ -1,0 +1,255 @@
+//! Live engine-level MTP speculative decoding (§4.6).
+//!
+//! The unit tests in `src/mtp` and `src/coordinator/dp_group.rs` pin the
+//! chain semantics per iteration; this file locks the *engine* contract:
+//!
+//! * a `mtp_layers >= 2` engine produces the bit-exact token stream of a
+//!   plain engine over the same workload (speculation accelerates, never
+//!   changes outputs);
+//! * `max_new_tokens` is an exact budget — multi-token iterations clamp,
+//!   so no stream ever overshoots (or undershoots) its budget;
+//! * acceptance telemetry lands in the PR-9 obs plane
+//!   (`mtp_drafts`/`mtp_accepted` counters, `mtp_draft_depth` histogram)
+//!   and matches the per-group counters returned at shutdown;
+//! * a DieCrash mid-decode migrates speculative state (`feed`/`hidden`)
+//!   with the KV, so a resumed stream is still bit-exact against the
+//!   uninterrupted *plain* reference;
+//! * an imperfect draft head (`SimModel::with_draft_miss`) exercises the
+//!   live rejection path: acceptance lands strictly inside (0, 1), the
+//!   adaptive controller keeps mean draft depth below `mtp_layers`, and
+//!   the stream still matches plain decode.
+
+use std::collections::HashMap;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use xdeepserve::config::{DeploymentMode, ObservabilityConfig, ReliabilityConfig};
+use xdeepserve::coordinator::worker::{GroupSpec, ModelFactory};
+use xdeepserve::coordinator::{RequestState, ServeRequest, ServingEngine};
+use xdeepserve::fabric::fault::{Fault, FaultKind};
+use xdeepserve::model::{DecodeModel, SimModel};
+use xdeepserve::obs::{Ctr, Hst, MetricsSnapshot};
+use xdeepserve::sync::Arc;
+use xdeepserve::workload::straggler::StragglerProfile;
+
+const GROUPS: usize = 2;
+const TICK_NS: u64 = 200_000;
+
+fn sim_factory() -> ModelFactory {
+    Arc::new(|_| Ok(Box::new(SimModel::small()) as Box<dyn DecodeModel>))
+}
+
+fn miss_factory(every: u64) -> ModelFactory {
+    Arc::new(move |_| {
+        Ok(Box::new(SimModel::small().with_draft_miss(every)) as Box<dyn DecodeModel>)
+    })
+}
+
+fn specs(n: usize, mtp_layers: usize) -> Vec<GroupSpec> {
+    (0..n)
+        .map(|i| {
+            let mut s = GroupSpec::new(i, 4, 512);
+            s.mtp_layers = mtp_layers;
+            s
+        })
+        .collect()
+}
+
+/// Deterministic mixed workload: budgets cover 1 (the no-draft edge),
+/// even values (the historical overshoot trigger), and longer streams.
+fn workload() -> Vec<(usize, ServeRequest)> {
+    let budgets = [1usize, 2, 4, 7, 16, 33];
+    let mut out = Vec::new();
+    for (i, &n) in budgets.iter().enumerate() {
+        let id = i as u64;
+        let prompt: Vec<i32> = (0..2 + i % 3).map(|k| 97 + ((i + k) % 26) as i32).collect();
+        out.push((i % GROUPS, ServeRequest::new(id, prompt, n, 0)));
+    }
+    out
+}
+
+/// Run the workload on a fresh engine; return per-stream tokens, the
+/// summed per-group MTP counters, and the telemetry scrape.
+fn run_engine(
+    factory: ModelFactory,
+    mtp_layers: usize,
+) -> (HashMap<u64, Vec<i32>>, u64, u64, MetricsSnapshot) {
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, factory)
+        .groups(specs(GROUPS, mtp_layers))
+        .straggler(StragglerProfile::uniform(GROUPS, TICK_NS))
+        .observability(ObservabilityConfig { enabled: true, ..Default::default() })
+        .spawn()
+        .unwrap();
+    for (g, req) in workload() {
+        engine.runtime().submit_to(g, req).unwrap();
+    }
+    engine.settle(Duration::from_secs(60)).unwrap();
+    let snap = engine.telemetry();
+    let groups = engine.shutdown().unwrap();
+    let mut tokens = HashMap::new();
+    let (mut drafts, mut accepted) = (0u64, 0u64);
+    for g in &groups {
+        drafts += g.mtp_drafts;
+        accepted += g.mtp_accepted;
+        for r in &g.finished {
+            assert_eq!(r.state, RequestState::Done, "stream {} must finish Done", r.id);
+            tokens.insert(r.id, r.generated.clone());
+        }
+    }
+    (tokens, drafts, accepted, snap)
+}
+
+#[test]
+fn spec_stream_is_bit_exact_vs_plain_with_live_telemetry() {
+    let (plain, d0, a0, _) = run_engine(sim_factory(), 0);
+    let (spec, drafts, accepted, snap) = run_engine(sim_factory(), 2);
+
+    assert_eq!(d0, 0, "plain engine must never draft");
+    assert_eq!(a0, 0);
+    assert_eq!(plain.len(), workload().len());
+    assert_eq!(spec.len(), plain.len());
+    for (id, toks) in &plain {
+        assert_eq!(
+            &spec[id], toks,
+            "stream {id}: speculative decode changed the token stream"
+        );
+    }
+
+    // The SimModel draft head is exact: every draft verifies.
+    assert!(drafts > 0, "mtp_layers=2 must actually speculate");
+    assert_eq!(accepted, drafts, "exact draft head: acceptance 1.0");
+
+    // Telemetry plane carries the same counters, plus the depth histogram.
+    assert_eq!(snap.counter(Ctr::MtpDrafts), drafts);
+    assert_eq!(snap.counter(Ctr::MtpAccepted), accepted);
+    let depth = snap.hist(Hst::MtpDraftDepth);
+    assert!(depth.count > 0, "draft depth must be recorded per sequence-iteration");
+    assert!(
+        depth.mean_ns() <= 2.0 + 1e-9,
+        "chain depth is capped at mtp_layers=2, got mean {}",
+        depth.mean_ns()
+    );
+}
+
+#[test]
+fn budgets_are_exact_never_overshot_or_starved() {
+    // k=3 chains emit up to 4 tokens/iteration; every budget in the
+    // workload (1, even, odd, prime) must land exactly.
+    let (spec, drafts, _, _) = run_engine(sim_factory(), 3);
+    for (g, req) in workload() {
+        let toks = &spec[&req.id];
+        assert_eq!(
+            toks.len(),
+            req.max_new_tokens,
+            "group {g} stream {}: budget {} produced {} tokens",
+            req.id,
+            req.max_new_tokens,
+            toks.len()
+        );
+    }
+    assert!(drafts > 0);
+}
+
+#[test]
+fn imperfect_draft_head_adapts_and_stays_exact() {
+    // Draft misses at every position divisible by 3: the live rejection
+    // path runs, acceptance lands strictly inside (0, 1), and the
+    // adaptive controller keeps the mean chain depth below the k=3 cap
+    // (rejection streaks shrink draft_k toward 1).
+    let (plain, ..) = run_engine(sim_factory(), 0);
+    let (spec, drafts, accepted, snap) = run_engine(miss_factory(3), 3);
+    for (id, toks) in &plain {
+        assert_eq!(&spec[id], toks, "stream {id}: rejected drafts must not leak");
+    }
+    assert!(drafts > 0);
+    assert!(accepted > 0, "2/3 of positions draft correctly");
+    assert!(accepted < drafts, "miss-every-3 must reject some drafts");
+    let depth = snap.hist(Hst::MtpDraftDepth);
+    assert!(
+        depth.mean_ns() < 3.0,
+        "adaptation must pull mean chain depth below k_max, got {}",
+        depth.mean_ns()
+    );
+}
+
+#[test]
+fn diecrash_migration_carries_speculative_state_bit_exact() {
+    // Reference: uninterrupted *plain* decode. The chaos run decodes the
+    // same streams with mtp_layers=2 and a DieCrash mid-stream; a resumed
+    // stream matching the plain reference proves both spec-state carry
+    // (feed/hidden migrate with the KV) and stream equivalence at once.
+    const VICTIM: usize = 0;
+    let work = || {
+        vec![
+            (VICTIM, ServeRequest::new(0, vec![97, 98, 99], 96, 0)),
+            (VICTIM, ServeRequest::new(1, vec![100, 101], 96, 0)),
+            (1usize, ServeRequest::new(2, vec![102, 103, 104], 48, 0)),
+        ]
+    };
+
+    let mut reference = HashMap::new();
+    {
+        let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+            .groups(specs(GROUPS, 0))
+            .straggler(StragglerProfile::uniform(GROUPS, 1_000_000))
+            .spawn()
+            .unwrap();
+        for (g, req) in work() {
+            engine.runtime().submit_to(g, req).unwrap();
+        }
+        engine.settle(Duration::from_secs(60)).unwrap();
+        for g in &engine.shutdown().unwrap() {
+            for r in &g.finished {
+                assert_eq!(r.state, RequestState::Done);
+                reference.insert(r.id, r.generated.clone());
+            }
+        }
+    }
+
+    let mut engine = ServingEngine::builder(DeploymentMode::Colocated, sim_factory())
+        .groups(specs(GROUPS, 2))
+        .straggler(StragglerProfile::uniform(GROUPS, 1_000_000))
+        .reliability(ReliabilityConfig::default())
+        .fault_schedule(vec![Fault {
+            kind: FaultKind::DieCrash,
+            die: VICTIM,
+            at_ns: 8_000_000,
+            duration_ns: 0,
+        }])
+        .spawn()
+        .unwrap();
+    for (g, req) in work() {
+        engine.runtime().submit_to(g, req).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        engine.health_sweep();
+        if engine.recovery_quiesced() && engine.all_idle() {
+            break;
+        }
+        assert!(Instant::now() < deadline, "MTP recovery run failed to quiesce");
+        thread::sleep(Duration::from_millis(1));
+    }
+    let stats = engine.recovery_stats().expect("schedule attaches a supervisor").clone();
+    let groups = engine.shutdown().unwrap();
+    assert!(
+        stats.streams_resumed >= 1,
+        "DieCrash on the loaded group must resume >= 1 speculative stream ({stats:?})"
+    );
+    let mut by_id = HashMap::new();
+    for g in &groups {
+        for r in &g.finished {
+            by_id.insert(r.id, (r.state, r.generated.clone()));
+        }
+    }
+    for id in &stats.resumed_ids {
+        let (state, generated) =
+            by_id.get(id).unwrap_or_else(|| panic!("resumed stream {id} never finished"));
+        assert_eq!(*state, RequestState::Done, "resumed stream {id} must finish Done");
+        assert_eq!(
+            generated, &reference[id],
+            "resumed speculative stream {id} diverged from the plain reference — \
+             feed/hidden must migrate with the KV"
+        );
+    }
+}

@@ -31,7 +31,7 @@ fn decode_n(model: &ServedModel, kv: &mut xdeepserve::model::SeqKv, first: i32, 
             .logits_row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0 as i32;
         out.push(feed);
